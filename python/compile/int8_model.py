@@ -1,0 +1,118 @@
+"""L2 INT8 model: NITI-style 8-bit LeNet-5 forward graph.
+
+NITI (Wang et al., TPDS'22) represents every tensor as `int8 * 2^s`
+(8-bit mantissa tensor + per-tensor scaling exponent). A layer does an
+exact int8 x int8 -> int32 contraction (the Pallas int8 kernel), then
+requantizes the int32 accumulator back to int8:
+
+    b      = bitwidth(max |acc|)        (exact, integer compares only)
+    shift  = max(b - 7, 0)
+    out    = clamp(rshift_round(acc, shift), -127, 127)
+    s_out  = s_in + s_w + shift
+
+`rshift_round` is round-to-nearest, ties away from zero, sign-symmetric —
+the SAME rule as rust/src/int8/rounding.rs, so the XLA artifact and the
+native rust engine agree bit-for-bit (asserted in integration tests).
+Everything below is integer arithmetic only (no float assist even inside
+the artifact); NITI conv/fc layers carry no bias, as in the paper.
+
+This graph is the forward used by ElasticZO-INT8's two ZO passes; the
+ZO loss sign is computed on the rust side from the returned int8 logits
+(float CE for the paper's "INT8" column, the Eq. 7-12 integer CE sign
+for "INT8*").
+"""
+
+import jax.numpy as jnp
+
+from .kernels import conv2d as conv_k
+from .kernels import int8_matmul as imk
+
+# LeNet-5 INT8 parameter ABI (no biases, as NITI): name, shape.
+LENET_INT8_PARAMS = [
+    ("conv1_w", (6, 1, 5, 5)),
+    ("conv2_w", (16, 6, 5, 5)),
+    ("fc1_w", (784, 120)),
+    ("fc2_w", (120, 84)),
+    ("fc3_w", (84, 10)),
+]
+
+
+def bitwidth(maxabs: jnp.ndarray) -> jnp.ndarray:
+    """Minimum bitwidth to represent `maxabs` (int32 scalar, >= 0).
+
+    b = floor(log2(x)) + 1 for x > 0, computed with integer shifts only
+    (exact — no float log2), b = 0 for x = 0.
+    """
+    maxabs = maxabs.astype(jnp.int32)
+    return sum(
+        ((maxabs >> jnp.int32(i)) > 0).astype(jnp.int32) for i in range(31)
+    )
+
+
+def rshift_round(v: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Arithmetic right shift with round-to-nearest, ties away from zero.
+
+    Sign-symmetric: rshift_round(-v, k) == -rshift_round(v, k).
+    k is a traced int32 scalar >= 0; k == 0 is the identity.
+    """
+    k = k.astype(jnp.int32)
+    a = jnp.abs(v)
+    half = jnp.where(k > 0, (jnp.int32(1) << jnp.maximum(k - 1, 0)), 0)
+    r = (a + half) >> k
+    return jnp.where(v < 0, -r, r)
+
+
+def requantize(acc: jnp.ndarray, s_in: jnp.ndarray):
+    """int32 accumulator -> (int8 tensor, exponent delta applied).
+
+    Returns (out_int8, s_out) with s_out = s_in + shift.
+    """
+    maxabs = jnp.max(jnp.abs(acc)).astype(jnp.int32)
+    b = bitwidth(maxabs)
+    shift = jnp.maximum(b - 7, 0)
+    out = jnp.clip(rshift_round(acc, shift), -127, 127).astype(jnp.int8)
+    return out, s_in + shift
+
+
+def maxpool2_int8(x: jnp.ndarray) -> jnp.ndarray:
+    b, c, h, w = x.shape
+    return jnp.max(x.reshape(b, c, h // 2, 2, w // 2, 2), axis=(3, 5))
+
+
+def relu_int8(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, jnp.int8(0))
+
+
+def lenet_int8_fwd(params, exps, x, x_exp):
+    """NITI LeNet-5 forward.
+
+    params: 5 int8 weight tensors (LENET_INT8_PARAMS order)
+    exps:   5 int32 scalars, the weight exponents s_w
+    x:      (B,1,28,28) int8 input, x_exp: int32 scalar
+
+    Returns (logits_int8 (B,10), s_out int32 scalar).
+    """
+    c1w, c2w, f1w, f2w, f3w = params
+    s1, s2, s3, s4, s5 = exps
+
+    acc = conv_k.conv2d_int8(x, c1w, pad=2)
+    h, s = requantize(acc, x_exp + s1)
+    h = maxpool2_int8(relu_int8(h))
+
+    acc = conv_k.conv2d_int8(h, c2w, pad=2)
+    h, s = requantize(acc, s + s2)
+    h = maxpool2_int8(relu_int8(h))
+
+    h = h.reshape(h.shape[0], -1)  # (B, 784)
+
+    acc = imk.int8_matmul(h, f1w)
+    h, s = requantize(acc, s + s3)
+    h = relu_int8(h)
+
+    acc = imk.int8_matmul(h, f2w)
+    h, s = requantize(acc, s + s4)
+    h = relu_int8(h)
+
+    acc = imk.int8_matmul(h, f3w)
+    logits, s = requantize(acc, s + s5)
+    return logits, s

@@ -1,0 +1,37 @@
+"""L1 kernel: stride-1 'same'/valid 2-D convolution as im2col + Pallas matmul.
+
+The paper's C++ engine lowers conv to an im2col GEMM on NEON; the TPU
+counterpart is the identical transformation with the GEMM on the MXU via
+the blocked Pallas matmul kernel (see matmul.py / DESIGN.md
+§Hardware-Adaptation). The patch-matrix layout keeps the contraction
+dimension (C*kh*kw) contiguous so the kernel streams (bk,bn) RHS tiles
+straight out of VMEM.
+"""
+
+import jax.numpy as jnp
+
+from . import matmul as mk
+from . import int8_matmul as imk
+from . import ref
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, pad: int):
+    """(B,C,H,W) f32 conv (OC,C,kh,kw) + (OC,) -> (B,OC,OH,OW), stride 1."""
+    oc, c, kh, kw = w.shape
+    cols, (bsz, oh, ow) = ref.im2col(x, kh, kw, pad)  # (B*OH*OW, C*kh*kw)
+    wmat = w.reshape(oc, c * kh * kw).T  # (C*kh*kw, OC)
+    out = mk.matmul(cols, wmat) + b  # (B*OH*OW, OC)
+    return out.reshape(bsz, oh, ow, oc).transpose(0, 3, 1, 2)
+
+
+def conv2d_int8(x: jnp.ndarray, w: jnp.ndarray, pad: int):
+    """(B,C,H,W) int8 conv (OC,C,kh,kw) int8 -> (B,OC,OH,OW) int32.
+
+    NITI conv layers carry no bias; the int32 accumulator is requantized
+    by the caller (see int8_model.py).
+    """
+    oc, c, kh, kw = w.shape
+    cols, (bsz, oh, ow) = ref.im2col(x, kh, kw, pad)
+    wmat = w.reshape(oc, c * kh * kw).T
+    out = imk.int8_matmul(cols.astype(jnp.int8), wmat.astype(jnp.int8))
+    return out.reshape(bsz, oh, ow, oc).transpose(0, 3, 1, 2)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: int8 x int8 -> int32 blocked matmul.
+
+This is the NITI hot-spot: every INT8 FC / conv layer is an int8
+contraction accumulated in int32 (the TPU analogue of ARM NEON SDOT the
+paper's C++ implementation uses). Tiles are (bm,bk)x(bk,bn) with an
+int32 accumulator tile revisited across the K grid axis — on a real TPU
+the int8 operands feed the MXU in its 8-bit mode.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BN, BK = 128, 128, 128
+
+
+def _int8_matmul_kernel(x_ref, y_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Widen to int32 before the contraction; MXU 8-bit mode does this
+    # natively, interpret mode needs the explicit astype.
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        y_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pad2(x, m0, m1):
+    p0, p1 = (-x.shape[0]) % m0, (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _tile(d: int, cap: int) -> int:
+    t = 8
+    while t * 2 <= min(d, cap):
+        t *= 2
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def int8_matmul(
+    x: jnp.ndarray, y: jnp.ndarray, *, bm: int = BM, bn: int = BN, bk: int = BK
+):
+    """(M,K) int8 @ (K,N) int8 -> (M,N) int32, exact integer arithmetic."""
+    assert x.dtype == jnp.int8 and y.dtype == jnp.int8, (x.dtype, y.dtype)
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn, bk = _tile(m, bm), _tile(n, bn), _tile(k, bk)
+    xp, yp = _pad2(x, bm, bk), _pad2(y, bk, bn)
+    mp, kp = xp.shape
+    np_ = yp.shape[1]
+    out = pl.pallas_call(
+        _int8_matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]

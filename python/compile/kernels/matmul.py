@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: blocked f32 matmul (+ fused bias / ReLU epilogue).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid is
+(M/bm, N/bn, K/bk); each step holds one (bm,bk) LHS tile, one (bk,bn)
+RHS tile and the (bm,bn) accumulator in VMEM and contracts on the MXU.
+The K axis is the innermost grid dimension so the output/accumulator
+tile stays resident while K streams through (revisited output block).
+
+On this box kernels run with interpret=True (CPU PJRT); the real-TPU
+VMEM/MXU analysis lives in DESIGN.md §9.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-native 128 lanes / 8-row sublane multiples.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm,bn) output tile; accumulates over the K grid axis in-place."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pad2(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _tile(d: int, cap: int) -> int:
+    """Largest power-of-two tile <= min(d, cap), at least 8."""
+    t = 8
+    while t * 2 <= min(d, cap):
+        t *= 2
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = BM, bn: int = BN, bk: int = BK):
+    """(M,K) @ (K,N) -> (M,N) in f32 via the blocked Pallas kernel.
+
+    Shapes need not be tile-aligned; inputs are zero-padded to the grid
+    and the result is sliced back.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn, bk = _tile(m, bm), _tile(n, bn), _tile(k, bk)
+    xp, yp = _pad2(x, bm, bk), _pad2(y, bk, bn)
+    mp, kp = xp.shape
+    np_ = yp.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def matmul_bias_act(x, w, b, act: str = "none", **tiles):
+    """FC layer forward: pallas matmul + bias + optional ReLU epilogue."""
+    out = matmul(x, w, **tiles) + b
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out

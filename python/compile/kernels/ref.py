@@ -1,0 +1,69 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: python/tests/ sweeps shapes and
+dtypes with hypothesis and asserts the Pallas kernels (interpret=True)
+match these references to tight tolerances.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """f32 matrix product, (M,K) @ (K,N) -> (M,N)."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def matmul_bias_act(x, w, b, act: str = "none"):
+    """Fused (M,K)@(K,N) + b with optional ReLU — the FC-layer oracle."""
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def int8_matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """int8 x int8 -> int32 accumulation, (M,K) @ (K,N) -> (M,N)."""
+    return jnp.matmul(
+        x.astype(jnp.int32), y.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, pad: int):
+    """(B,C,H,W) -> (B*OH*OW, C*kh*kw) patch matrix, stride 1.
+
+    Column ordering is (C, kh, kw) fastest-last, matching a weight
+    reshape of (OC, C, kh, kw) -> (OC, C*kh*kw).
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh, ow = h + 2 * pad - kh + 1, w + 2 * pad - kw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(xp[:, :, i : i + oh, j : j + ow])
+    # (kh*kw, B, C, OH, OW) -> (B, OH, OW, C, kh*kw)
+    patches = jnp.stack(cols, axis=0)
+    patches = patches.transpose(1, 3, 4, 2, 0)
+    return patches.reshape(b * oh * ow, c * kh * kw), (b, oh, ow)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, pad: int):
+    """Direct conv oracle: (B,C,H,W) * (OC,C,kh,kw) + (OC,) -> (B,OC,OH,OW)."""
+    import jax
+
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b.reshape(1, -1, 1, 1)
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy over the batch; numerically stable."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    picked = jnp.sum(logits * onehot, axis=-1)
+    return jnp.mean(lse - picked)

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: fused softmax cross-entropy (mean over batch).
+
+One grid step per batch-row block: the (bm, NCLASS) logit tile is reduced
+in VMEM (row max -> exp -> log-sum-exp -> pick label logit) without ever
+materializing the softmax, and per-row losses land in a (bm,) output that
+the wrapper means over. This is the loss evaluated twice per ZO step
+(l+ and l-), so it sits on the artifact hot path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+
+
+def _ce_kernel(logits_ref, onehot_ref, loss_ref):
+    logits = logits_ref[...]
+    onehot = onehot_ref[...]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    picked = jnp.sum(logits * onehot, axis=-1)
+    loss_ref[...] = lse - picked
+
+
+def _tile(d: int, cap: int) -> int:
+    t = 8
+    while t * 2 <= min(d, cap):
+        t *= 2
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def softmax_cross_entropy(
+    logits: jnp.ndarray, onehot: jnp.ndarray, *, bm: int = BM
+) -> jnp.ndarray:
+    """Mean softmax CE over the batch; logits/onehot are (B, NCLASS) f32.
+
+    Rows are padded to the block multiple with a benign pattern (zero
+    logits, zero onehot -> per-row loss log(NCLASS) with picked=0); the
+    wrapper masks padded rows out of the mean.
+    """
+    b, n = logits.shape
+    bm = _tile(b, bm)
+    pb = (-b) % bm
+    lp = jnp.pad(logits, ((0, pb), (0, 0)))
+    op = jnp.pad(onehot, ((0, pb), (0, 0)))
+    per_row = pl.pallas_call(
+        _ce_kernel,
+        grid=((b + pb) // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b + pb,), jnp.float32),
+        interpret=True,
+    )(lp, op)
+    return jnp.sum(per_row[:b]) / b

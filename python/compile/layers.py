@@ -1,0 +1,51 @@
+"""L2 building blocks: thin jnp layers that call the L1 Pallas kernels.
+
+Everything here is traced by jax.jit in aot.py and lowered into the HLO
+artifacts; nothing in this module runs at training time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import conv2d as conv_k
+from .kernels import matmul as matmul_k
+from .kernels import softmax_ce as ce_k
+
+
+def linear(x, w, b, act: str = "none"):
+    """FC layer over (B, IN) f32 via the Pallas matmul kernel."""
+    return matmul_k.matmul_bias_act(x, w, b, act=act)
+
+
+def linear_points(x, w, b, act: str = "none"):
+    """Shared ('point-wise') FC over (B, N, IN): PointNet's per-point MLP.
+
+    Flattened to a (B*N, IN) GEMM so the whole point cloud hits the MXU
+    as one contraction.
+    """
+    bsz, n, cin = x.shape
+    out = matmul_k.matmul_bias_act(x.reshape(bsz * n, cin), w, b, act=act)
+    return out.reshape(bsz, n, -1)
+
+
+def conv2d(x, w, b, pad: int, act: str = "none"):
+    """Conv layer via im2col + Pallas matmul."""
+    out = conv_k.conv2d(x, w, b, pad)
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def maxpool2(x):
+    """2x2 stride-2 max pooling over (B,C,H,W)."""
+    b, c, h, w = x.shape
+    return jnp.max(x.reshape(b, c, h // 2, 2, w // 2, 2), axis=(3, 5))
+
+
+def global_maxpool_points(x):
+    """PointNet symmetric aggregation: (B,N,F) -> (B,F)."""
+    return jnp.max(x, axis=1)
+
+
+def cross_entropy(logits, onehot):
+    """Mean softmax CE via the fused Pallas kernel."""
+    return ce_k.softmax_cross_entropy(logits, onehot)

@@ -1,0 +1,203 @@
+"""L2 models: LeNet-5 and PointNet forward / tail-backward / full-BP step.
+
+These are the computations AOT-lowered by aot.py into artifacts/*.hlo.txt
+and executed from the rust coordinator via PJRT. The split mirrors
+ElasticZO (paper Alg. 1):
+
+  *_fwd       — the forward+loss pass run TWICE per ZO step (l+, l-).
+                Also returns the partition activations a_C.. consumed by
+                the BP tail, so ElasticZO needs no third forward.
+  *_tail_cK   — BP for the last K FC layers only (ZO-Feat-ClsK): takes
+                the partition activation and the tail parameters, returns
+                tail gradients. Hand-written VJP built from the Pallas
+                matmul kernel (verified against jax.grad in pytest).
+  *_step      — the Full-BP baseline: one SGD step over ALL parameters
+                via jax.grad (forward uses the reference ops so XLA can
+                fuse the whole fwd+bwd; pytest asserts the reference
+                forward matches the Pallas forward).
+
+Parameter layouts (ordering is the ABI contract with rust/src/runtime):
+
+  LeNet-5 (paper variant, 107,786 params):
+    conv1 (6,1,5,5)+(6,)  pad2 relu maxpool2   28x28 -> 14x14
+    conv2 (16,6,5,5)+(16,) pad2 relu maxpool2  14x14 -> 7x7 (=784 flat)
+    fc1 (784,120)+(120,) relu
+    fc2 (120,84)+(84,)   relu
+    fc3 (84,10)+(10,)
+  PointNet (vanilla, no T-nets; ~= paper's 816,744 params):
+    feat: point-shared FC 3->64->64->64->128->1024 (relu each), max-pool
+    head: FC 1024->512 relu, 512->256 relu, 256->NCLS
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .kernels import matmul as matmul_k
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Parameter specifications (the rust ABI).
+# ---------------------------------------------------------------------------
+
+LENET_PARAMS = [
+    ("conv1_w", (6, 1, 5, 5)),
+    ("conv1_b", (6,)),
+    ("conv2_w", (16, 6, 5, 5)),
+    ("conv2_b", (16,)),
+    ("fc1_w", (784, 120)),
+    ("fc1_b", (120,)),
+    ("fc2_w", (120, 84)),
+    ("fc2_b", (84,)),
+    ("fc3_w", (84, 10)),
+    ("fc3_b", (10,)),
+]
+
+POINTNET_FEAT_DIMS = [3, 64, 64, 64, 128, 1024]
+POINTNET_HEAD_DIMS = [1024, 512, 256, 40]
+
+
+def pointnet_params(ncls: int = 40):
+    specs = []
+    dims = POINTNET_FEAT_DIMS
+    for i in range(len(dims) - 1):
+        specs.append((f"feat{i + 1}_w", (dims[i], dims[i + 1])))
+        specs.append((f"feat{i + 1}_b", (dims[i + 1],)))
+    hd = POINTNET_HEAD_DIMS[:-1] + [ncls]
+    for i in range(len(hd) - 1):
+        specs.append((f"head{i + 1}_w", (hd[i], hd[i + 1])))
+        specs.append((f"head{i + 1}_b", (hd[i + 1],)))
+    return specs
+
+
+POINTNET_PARAMS = pointnet_params()
+
+# ---------------------------------------------------------------------------
+# LeNet-5
+# ---------------------------------------------------------------------------
+
+
+def lenet_fwd(params, x, y, use_pallas: bool = True):
+    """Forward + loss. Returns (loss, logits, a_fc1, a_fc2).
+
+    a_fc1: (B,120) post-ReLU input of fc2  (partition activation for C=L-2)
+    a_fc2: (B,84)  post-ReLU input of fc3  (partition activation for C=L-1)
+    """
+    (c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b, f3w, f3b) = params
+    if use_pallas:
+        h = layers.conv2d(x, c1w, c1b, pad=2, act="relu")
+        h = layers.maxpool2(h)
+        h = layers.conv2d(h, c2w, c2b, pad=2, act="relu")
+        h = layers.maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        a1 = layers.linear(h, f1w, f1b, act="relu")
+        a2 = layers.linear(a1, f2w, f2b, act="relu")
+        logits = layers.linear(a2, f3w, f3b)
+        loss = layers.cross_entropy(logits, y)
+    else:
+        h = jnp.maximum(ref.conv2d(x, c1w, c1b, pad=2), 0.0)
+        h = layers.maxpool2(h)
+        h = jnp.maximum(ref.conv2d(h, c2w, c2b, pad=2), 0.0)
+        h = layers.maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        a1 = jnp.maximum(h @ f1w + f1b, 0.0)
+        a2 = jnp.maximum(a1 @ f2w + f2b, 0.0)
+        logits = a2 @ f3w + f3b
+        loss = ref.softmax_cross_entropy(logits, y)
+    return loss, logits, a1, a2
+
+
+def _softmax(z):
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def fc_tail1_grads(a, w, b, y):
+    """Hand-written BP for a single trailing FC + mean-CE.
+
+    e = (softmax(a@w+b) - y)/B ; gw = a^T e ; gb = sum(e).
+    All matmuls go through the Pallas kernel.
+    """
+    bsz = a.shape[0]
+    z = matmul_k.matmul(a, w) + b
+    e = (_softmax(z) - y) / bsz
+    gw = matmul_k.matmul(a.T, e)
+    gb = jnp.sum(e, axis=0)
+    return gw, gb
+
+
+def fc_tail2_grads(a1, w4, b4, w5, b5, y):
+    """Hand-written BP for the last TWO FC layers (ReLU between)."""
+    bsz = a1.shape[0]
+    z1 = matmul_k.matmul(a1, w4) + b4
+    h = jnp.maximum(z1, 0.0)
+    z2 = matmul_k.matmul(h, w5) + b5
+    e2 = (_softmax(z2) - y) / bsz
+    gw5 = matmul_k.matmul(h.T, e2)
+    gb5 = jnp.sum(e2, axis=0)
+    e1 = matmul_k.matmul(e2, w5.T) * (z1 > 0.0).astype(jnp.float32)
+    gw4 = matmul_k.matmul(a1.T, e1)
+    gb4 = jnp.sum(e1, axis=0)
+    return gw4, gb4, gw5, gb5
+
+
+def lenet_loss_ref(params, x, y):
+    """Reference forward+loss for jax.grad (full-BP step)."""
+    loss, _, _, _ = lenet_fwd(params, x, y, use_pallas=False)
+    return loss
+
+
+def lenet_step(params, x, y, lr):
+    """Full-BP SGD step: returns (new_params..., loss)."""
+    loss, grads = jax.value_and_grad(lenet_loss_ref)(list(params), x, y)
+    new = [p - lr * g for p, g in zip(params, grads)]
+    return tuple(new) + (loss,)
+
+
+# ---------------------------------------------------------------------------
+# PointNet
+# ---------------------------------------------------------------------------
+
+
+def pointnet_fwd(params, x, y, use_pallas: bool = True):
+    """Forward + loss. Returns (loss, logits, h1, h2).
+
+    h1: (B,512) post-ReLU input of head2 (partition activation for C=L-2)
+    h2: (B,256) post-ReLU input of head3 (partition activation for C=L-1)
+    """
+    nfeat = len(POINTNET_FEAT_DIMS) - 1
+    feat = params[: 2 * nfeat]
+    head = params[2 * nfeat :]
+    h = x
+    for i in range(nfeat):
+        w, b = feat[2 * i], feat[2 * i + 1]
+        if use_pallas:
+            h = layers.linear_points(h, w, b, act="relu")
+        else:
+            h = jnp.maximum(h @ w + b, 0.0)
+    g = layers.global_maxpool_points(h)  # (B, 1024)
+    w1, b1, w2, b2, w3, b3 = head
+    if use_pallas:
+        h1 = layers.linear(g, w1, b1, act="relu")
+        h2 = layers.linear(h1, w2, b2, act="relu")
+        logits = layers.linear(h2, w3, b3)
+        loss = layers.cross_entropy(logits, y)
+    else:
+        h1 = jnp.maximum(g @ w1 + b1, 0.0)
+        h2 = jnp.maximum(h1 @ w2 + b2, 0.0)
+        logits = h2 @ w3 + b3
+        loss = ref.softmax_cross_entropy(logits, y)
+    return loss, logits, h1, h2
+
+
+def pointnet_loss_ref(params, x, y):
+    loss, _, _, _ = pointnet_fwd(params, x, y, use_pallas=False)
+    return loss
+
+
+def pointnet_step(params, x, y, lr):
+    """Full-BP SGD step over all PointNet parameters."""
+    loss, grads = jax.value_and_grad(pointnet_loss_ref)(list(params), x, y)
+    new = [p - lr * g for p, g in zip(params, grads)]
+    return tuple(new) + (loss,)

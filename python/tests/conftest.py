@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Allow running `pytest python/tests/` from the repo root: the test
+# modules import `compile.*`, which lives in python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,87 @@
+"""AOT pipeline: manifest consistency and HLO-text validity.
+
+These tests exercise the same Builder used by `make artifacts` on a
+small throwaway artifact set, then (if present) validate the real
+artifacts/ directory against the model ABI."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_builder_roundtrip(tmp_path):
+    b = aot.Builder(str(tmp_path))
+    aot.build_lenet(b, batch=4)
+    b.write_manifest()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    names = {e["name"] for e in man["entries"]}
+    assert names == {"lenet_fwd_b4", "lenet_fwd_fast_b4", "lenet_tail_c1_b4",
+                     "lenet_tail_c2_b4", "lenet_step_b4"}
+    for e in man["entries"]:
+        text = (tmp_path / e["path"]).read_text()
+        assert text.startswith("HloModule"), e["name"]
+        # jax lowers with return_tuple=True: root must be a tuple
+        assert "ROOT" in text
+
+
+def test_builder_int8_entry(tmp_path):
+    b = aot.Builder(str(tmp_path))
+    aot.build_lenet_int8(b, batch=4)
+    b.write_manifest()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    (e,) = man["entries"]
+    assert e["name"] == "lenet_int8_fwd_b4"
+    # 5 weights + 5 exponents + x + x_exp
+    assert len(e["inputs"]) == 12
+    assert e["inputs"][0]["dtype"] == "i8"
+    assert e["inputs"][5]["dtype"] == "i32"
+    assert e["outputs"][0] == {"name": "logits", "shape": [4, 10], "dtype": "i8"}
+
+
+def test_fwd_entry_abi_matches_model_spec(tmp_path):
+    b = aot.Builder(str(tmp_path))
+    aot.build_lenet(b, batch=4)
+    fwd = next(e for e in b.entries if e["name"] == "lenet_fwd_b4")
+    # first 10 inputs are exactly LENET_PARAMS in order
+    for inp, (name, shape) in zip(fwd["inputs"], model.LENET_PARAMS):
+        assert inp["name"] == name
+        assert tuple(inp["shape"]) == shape
+    assert fwd["inputs"][10]["name"] == "x"
+    assert fwd["outputs"][0]["name"] == "loss"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts/ not built",
+)
+def test_real_manifest_consistent():
+    man = json.loads(open(os.path.join(ART, "manifest.json")).read())
+    assert man["version"] == 1
+    for e in man["entries"]:
+        path = os.path.join(ART, e["path"])
+        assert os.path.exists(path), e["name"]
+        head = open(path).read(64)
+        assert head.startswith("HloModule"), e["name"]
+        assert e["inputs"] and e["outputs"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts/ not built",
+)
+def test_real_manifest_covers_required_entries():
+    man = json.loads(open(os.path.join(ART, "manifest.json")).read())
+    names = {e["name"] for e in man["entries"]}
+    required = {
+        "lenet_fwd_b32", "lenet_tail_c1_b32", "lenet_tail_c2_b32",
+        "lenet_step_b32", "lenet_int8_fwd_b32",
+    }
+    assert required <= names, required - names
+    assert any(n.startswith("pointnet_fwd") for n in names)

@@ -1,0 +1,181 @@
+"""NITI INT8 graph: exact-arithmetic properties of bitwidth/rshift_round/
+requantize (hypothesis), full int8 forward sanity, and a numpy NITI
+mini-reference parity check."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import int8_model
+
+
+# ---------------------------------------------------------------------------
+# bitwidth — exact integer log2
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=100, deadline=None)
+@given(v=st.integers(0, 2**31 - 1))
+def test_bitwidth_exact(v):
+    expect = 0 if v == 0 else int(v).bit_length()
+    got = int(int8_model.bitwidth(jnp.int32(v)))
+    assert got == expect
+
+
+@pytest.mark.parametrize("v,b", [(0, 0), (1, 1), (2, 2), (3, 2), (127, 7),
+                                 (128, 8), (255, 8), (256, 9), (2**30, 31)])
+def test_bitwidth_boundaries(v, b):
+    assert int(int8_model.bitwidth(jnp.int32(v))) == b
+
+
+# ---------------------------------------------------------------------------
+# rshift_round — round-to-nearest, ties away from zero, sign-symmetric
+# ---------------------------------------------------------------------------
+
+
+def py_rshift_round(v: int, k: int) -> int:
+    if k == 0:
+        return v
+    a = abs(v)
+    r = (a + (1 << (k - 1))) >> k
+    return -r if v < 0 else r
+
+
+@settings(max_examples=200, deadline=None)
+@given(v=st.integers(-(2**24), 2**24), k=st.integers(0, 20))
+def test_rshift_round_matches_python_model(v, k):
+    got = int(int8_model.rshift_round(jnp.int32(v), jnp.int32(k)))
+    assert got == py_rshift_round(v, k)
+
+
+@settings(max_examples=100, deadline=None)
+@given(v=st.integers(0, 2**24), k=st.integers(0, 20))
+def test_rshift_round_sign_symmetric(v, k):
+    plus = int(int8_model.rshift_round(jnp.int32(v), jnp.int32(k)))
+    minus = int(int8_model.rshift_round(jnp.int32(-v), jnp.int32(k)))
+    assert plus == -minus
+
+
+@settings(max_examples=100, deadline=None)
+@given(v=st.integers(-(2**24), 2**24), k=st.integers(1, 20))
+def test_rshift_round_error_bound(v, k):
+    """|round(v / 2^k) - v/2^k| <= 1/2."""
+    got = int(int8_model.rshift_round(jnp.int32(v), jnp.int32(k)))
+    assert abs(got - v / 2**k) <= 0.5 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# requantize
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([1, 100, 10_000, 1_000_000]))
+def test_requantize_range_and_exponent(seed, scale):
+    r = np.random.default_rng(seed)
+    acc = (r.standard_normal((4, 16)) * scale).astype(np.int32)
+    out, s = int8_model.requantize(jnp.array(acc), jnp.int32(3))
+    out = np.array(out)
+    assert out.dtype == np.int8
+    assert np.abs(out.astype(np.int32)).max() <= 127
+    # exponent conservation: out * 2^(s-3) ~= acc within rounding
+    shift = int(s) - 3
+    approx = out.astype(np.int64) << shift
+    err = np.abs(approx - acc.astype(np.int64)).max()
+    assert err <= (1 << max(shift - 1, 0)) + 1
+
+
+def test_requantize_small_values_identity():
+    """|acc| <= 127 -> no shift, exponent unchanged."""
+    acc = jnp.array(np.arange(-127, 128, dtype=np.int32).reshape(5, 51))
+    out, s = int8_model.requantize(acc, jnp.int32(7))
+    np.testing.assert_array_equal(np.array(out), np.array(acc, dtype=np.int8))
+    assert int(s) == 7
+
+
+def test_requantize_zero_tensor():
+    out, s = int8_model.requantize(jnp.zeros((3, 3), jnp.int32), jnp.int32(2))
+    assert np.array(out).sum() == 0 and int(s) == 2
+
+
+# ---------------------------------------------------------------------------
+# full INT8 forward
+# ---------------------------------------------------------------------------
+
+
+def int8_params(seed=0, rmax=32):
+    r = np.random.default_rng(seed)
+    ws = [
+        jnp.array(r.integers(-rmax, rmax + 1, s, dtype=np.int8))
+        for _, s in int8_model.LENET_INT8_PARAMS
+    ]
+    exps = [jnp.int32(-7) for _ in ws]
+    return ws, exps
+
+
+def test_lenet_int8_fwd_shapes_and_range():
+    ws, exps = int8_params()
+    r = np.random.default_rng(1)
+    x = jnp.array(r.integers(-127, 128, (8, 1, 28, 28), dtype=np.int8))
+    logits, s = int8_model.lenet_int8_fwd(ws, exps, x, jnp.int32(-7))
+    assert logits.shape == (8, 10)
+    assert logits.dtype == jnp.int8
+    assert np.abs(np.array(logits, dtype=np.int32)).max() <= 127
+    assert np.isfinite(int(s))
+
+
+def test_lenet_int8_fwd_deterministic():
+    ws, exps = int8_params()
+    r = np.random.default_rng(2)
+    x = jnp.array(r.integers(-127, 128, (4, 1, 28, 28), dtype=np.int8))
+    l1, s1 = int8_model.lenet_int8_fwd(ws, exps, x, jnp.int32(-7))
+    l2, s2 = int8_model.lenet_int8_fwd(ws, exps, x, jnp.int32(-7))
+    np.testing.assert_array_equal(np.array(l1), np.array(l2))
+    assert int(s1) == int(s2)
+
+
+def test_lenet_int8_fwd_perturbation_changes_logits():
+    """An int8 weight perturbation (the ZO probe) must reach the logits."""
+    ws, exps = int8_params()
+    r = np.random.default_rng(3)
+    x = jnp.array(r.integers(-127, 128, (4, 1, 28, 28), dtype=np.int8))
+    l1, _ = int8_model.lenet_int8_fwd(ws, exps, x, jnp.int32(-7))
+    ws2 = list(ws)
+    pert = r.integers(-15, 16, ws[0].shape, dtype=np.int8)
+    ws2[0] = jnp.array(
+        np.clip(np.array(ws[0], dtype=np.int32) + pert, -127, 127).astype(np.int8)
+    )
+    l2, _ = int8_model.lenet_int8_fwd(ws2, exps, x, jnp.int32(-7))
+    assert not np.array_equal(np.array(l1), np.array(l2))
+
+
+# ---------------------------------------------------------------------------
+# numpy NITI mini-reference parity (one FC layer)
+# ---------------------------------------------------------------------------
+
+
+def numpy_niti_fc(x, w, s_in, s_w):
+    acc = x.astype(np.int32) @ w.astype(np.int32)
+    maxabs = int(np.abs(acc).max())
+    b = maxabs.bit_length()
+    shift = max(b - 7, 0)
+    out = np.array([py_rshift_round(int(v), shift) for v in acc.ravel()]).reshape(acc.shape)
+    out = np.clip(out, -127, 127).astype(np.int8)
+    return out, s_in + s_w + shift
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_int8_fc_matches_numpy_niti(seed):
+    from compile.kernels import int8_matmul as imk
+
+    r = np.random.default_rng(seed)
+    x = r.integers(-127, 128, (4, 24), dtype=np.int8)
+    w = r.integers(-127, 128, (24, 10), dtype=np.int8)
+    acc = imk.int8_matmul(jnp.array(x), jnp.array(w))
+    out, s = int8_model.requantize(acc, jnp.int32(-7) + jnp.int32(-7))
+    expect, s_ref = numpy_niti_fc(x, w, -7, -7)
+    np.testing.assert_array_equal(np.array(out), expect)
+    assert int(s) == s_ref

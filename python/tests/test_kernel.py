@@ -1,0 +1,189 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles — the CORE
+correctness signal for L1.
+
+Hypothesis sweeps shapes (deliberately non-tile-aligned) and value
+ranges; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import conv2d as conv_k
+from compile.kernels import int8_matmul as imk
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+from compile.kernels import softmax_ce as ce_k
+
+DIM = st.integers(min_value=1, max_value=200)
+SMALL = st.integers(min_value=1, max_value=48)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# f32 matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    r = rng(seed)
+    x = r.standard_normal((m, k), dtype=np.float32)
+    y = r.standard_normal((k, n), dtype=np.float32)
+    out = np.array(mk.matmul(jnp.array(x), jnp.array(y)))
+    expect = np.array(ref.matmul(jnp.array(x), jnp.array(y)))
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1), (8, 8, 8), (128, 128, 128),
+                                   (129, 257, 65), (37, 784, 120)])
+def test_matmul_shapes(shape):
+    m, k, n = shape
+    r = rng(0)
+    x = r.standard_normal((m, k), dtype=np.float32)
+    y = r.standard_normal((k, n), dtype=np.float32)
+    out = np.array(mk.matmul(jnp.array(x), jnp.array(y)))
+    np.testing.assert_allclose(out, x @ y, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 64), (128, 128, 128)])
+def test_matmul_tile_sweep(bm, bn, bk):
+    """Block-shape sweep: every tiling computes the same product."""
+    r = rng(1)
+    x = r.standard_normal((50, 70), dtype=np.float32)
+    y = r.standard_normal((70, 30), dtype=np.float32)
+    out = np.array(mk.matmul(jnp.array(x), jnp.array(y), bm=bm, bn=bn, bk=bk))
+    np.testing.assert_allclose(out, x @ y, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bias_relu():
+    r = rng(2)
+    x = r.standard_normal((33, 20), dtype=np.float32)
+    w = r.standard_normal((20, 11), dtype=np.float32)
+    b = r.standard_normal((11,), dtype=np.float32)
+    out = np.array(mk.matmul_bias_act(jnp.array(x), jnp.array(w), jnp.array(b), act="relu"))
+    expect = np.maximum(x @ w + b, 0.0)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+    assert (out >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul — exact integer arithmetic
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+def test_int8_matmul_exact(m, k, n, seed):
+    r = rng(seed)
+    x = r.integers(-128, 128, (m, k), dtype=np.int8)
+    y = r.integers(-128, 128, (k, n), dtype=np.int8)
+    out = np.array(imk.int8_matmul(jnp.array(x), jnp.array(y)))
+    expect = x.astype(np.int32) @ y.astype(np.int32)
+    np.testing.assert_array_equal(out, expect)
+    assert out.dtype == np.int32
+
+
+def test_int8_matmul_extremes():
+    """Saturated operands: |acc| up to 128*127*K must not overflow int32."""
+    k = 512
+    x = np.full((4, k), -128, dtype=np.int8)
+    y = np.full((k, 4), 127, dtype=np.int8)
+    out = np.array(imk.int8_matmul(jnp.array(x), jnp.array(y)))
+    np.testing.assert_array_equal(out, np.full((4, 4), -128 * 127 * k, dtype=np.int32))
+
+
+# ---------------------------------------------------------------------------
+# conv2d (im2col + pallas matmul)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 16),
+    hw=st.integers(5, 28),
+    ksz=st.sampled_from([3, 5]),
+    pad=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(b, cin, cout, hw, ksz, pad, seed):
+    r = rng(seed)
+    x = r.standard_normal((b, cin, hw, hw), dtype=np.float32)
+    w = r.standard_normal((cout, cin, ksz, ksz), dtype=np.float32)
+    bias = r.standard_normal((cout,), dtype=np.float32)
+    out = np.array(conv_k.conv2d(jnp.array(x), jnp.array(w), jnp.array(bias), pad))
+    expect = np.array(ref.conv2d(jnp.array(x), jnp.array(w), jnp.array(bias), pad))
+    np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+
+
+def test_conv2d_int8_exact():
+    r = rng(7)
+    x = r.integers(-128, 128, (4, 6, 14, 14), dtype=np.int8)
+    w = r.integers(-128, 128, (16, 6, 5, 5), dtype=np.int8)
+    out = np.array(conv_k.conv2d_int8(jnp.array(x), jnp.array(w), pad=2))
+    # int32 exact reference via the float path on widened ints
+    expect = np.array(
+        ref.conv2d(
+            jnp.array(x, dtype=jnp.float32),
+            jnp.array(w, dtype=jnp.float32),
+            jnp.zeros((16,), dtype=jnp.float32),
+            pad=2,
+        )
+    ).astype(np.int64)
+    np.testing.assert_array_equal(out.astype(np.int64), expect)
+
+
+def test_lenet_conv_shapes():
+    """The exact LeNet-5 shapes flowing through the conv kernel."""
+    r = rng(3)
+    x = r.standard_normal((32, 1, 28, 28), dtype=np.float32)
+    w = r.standard_normal((6, 1, 5, 5), dtype=np.float32)
+    b = np.zeros(6, dtype=np.float32)
+    out = conv_k.conv2d(jnp.array(x), jnp.array(w), jnp.array(b), pad=2)
+    assert out.shape == (32, 6, 28, 28)
+
+
+# ---------------------------------------------------------------------------
+# fused softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 300),
+    n=st.sampled_from([10, 40]),
+    scale=st.floats(0.1, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_ce_matches_ref(b, n, scale, seed):
+    r = rng(seed)
+    logits = (r.standard_normal((b, n)) * scale).astype(np.float32)
+    onehot = np.eye(n, dtype=np.float32)[r.integers(0, n, b)]
+    out = float(ce_k.softmax_cross_entropy(jnp.array(logits), jnp.array(onehot)))
+    expect = float(ref.softmax_cross_entropy(jnp.array(logits), jnp.array(onehot)))
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_ce_uniform_logits():
+    """Zero logits -> loss is exactly log(NCLASS)."""
+    logits = np.zeros((16, 10), dtype=np.float32)
+    onehot = np.eye(10, dtype=np.float32)[np.arange(16) % 10]
+    out = float(ce_k.softmax_cross_entropy(jnp.array(logits), jnp.array(onehot)))
+    np.testing.assert_allclose(out, np.log(10.0), rtol=1e-6)
+
+
+def test_softmax_ce_large_logits_stable():
+    """Numerical stability: huge logits must not produce inf/nan."""
+    logits = np.array([[1000.0, 0.0], [-1000.0, 0.0]], dtype=np.float32)
+    onehot = np.array([[1.0, 0.0], [0.0, 1.0]], dtype=np.float32)
+    out = float(ce_k.softmax_cross_entropy(jnp.array(logits), jnp.array(onehot)))
+    assert np.isfinite(out)

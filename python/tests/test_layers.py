@@ -1,0 +1,69 @@
+"""L2 layer wrappers vs plain-jnp behaviour (pooling, point-shared FC),
+plus INT8 graph/fast-graph agreement at the model level."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import layers, model
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 4), c=st.integers(1, 8), hw=st.sampled_from([4, 8, 14, 28]),
+       seed=st.integers(0, 2**31 - 1))
+def test_maxpool2_matches_numpy(b, c, hw, seed):
+    x = rng(seed).standard_normal((b, c, hw, hw)).astype(np.float32)
+    out = np.array(layers.maxpool2(jnp.array(x)))
+    expect = x.reshape(b, c, hw // 2, 2, hw // 2, 2).max(axis=(3, 5))
+    np.testing.assert_allclose(out, expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 3), n=st.integers(1, 16), cin=st.integers(1, 8),
+       cout=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_linear_points_equals_per_point_linear(b, n, cin, cout, seed):
+    r = rng(seed)
+    x = r.standard_normal((b, n, cin)).astype(np.float32)
+    w = r.standard_normal((cin, cout)).astype(np.float32)
+    bias = r.standard_normal((cout,)).astype(np.float32)
+    out = np.array(layers.linear_points(jnp.array(x), jnp.array(w), jnp.array(bias), act="relu"))
+    expect = np.maximum(x @ w + bias, 0.0)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_global_maxpool_points():
+    x = rng(1).standard_normal((2, 5, 7)).astype(np.float32)
+    out = np.array(layers.global_maxpool_points(jnp.array(x)))
+    np.testing.assert_allclose(out, x.max(axis=1))
+
+
+def test_lenet_fast_variant_is_pallas_variant():
+    """The `_fast` artifact lowers the SAME math as the Pallas one —
+    the contract behind the rust engine's default forward."""
+    r = rng(2)
+    params = [jnp.array(r.standard_normal(s).astype(np.float32) * 0.1)
+              for _, s in model.LENET_PARAMS]
+    x = jnp.array(r.standard_normal((4, 1, 28, 28)).astype(np.float32))
+    y = jnp.array(np.eye(10, dtype=np.float32)[r.integers(0, 10, 4)])
+    outs_p = model.lenet_fwd(params, x, y, use_pallas=True)
+    outs_f = model.lenet_fwd(params, x, y, use_pallas=False)
+    for a, b in zip(outs_p, outs_f):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-3, atol=1e-4)
+
+
+def test_pointnet_fast_variant_matches():
+    r = rng(3)
+    params = [jnp.array(r.standard_normal(s).astype(np.float32) * 0.05)
+              for _, s in model.pointnet_params(40)]
+    x = jnp.array(r.standard_normal((2, 16, 3)).astype(np.float32))
+    y = jnp.array(np.eye(40, dtype=np.float32)[r.integers(0, 40, 2)])
+    outs_p = model.pointnet_fwd(params, x, y, use_pallas=True)
+    outs_f = model.pointnet_fwd(params, x, y, use_pallas=False)
+    for a, b in zip(outs_p, outs_f):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-3, atol=1e-4)

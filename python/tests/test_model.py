@@ -1,0 +1,200 @@
+"""L2 model correctness: Pallas forward == reference forward, hand-written
+tail-BP == jax.grad, full-BP step decreases the loss."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def lenet_init(seed=0, scale=0.1):
+    r = rng(seed)
+    return [
+        jnp.array(r.standard_normal(s, dtype=np.float32) * scale)
+        for _, s in model.LENET_PARAMS
+    ]
+
+
+def pointnet_init(seed=0, scale=0.05, ncls=40):
+    r = rng(seed)
+    return [
+        jnp.array(r.standard_normal(s, dtype=np.float32) * scale)
+        for _, s in model.pointnet_params(ncls)
+    ]
+
+
+def batch_lenet(bsz=8, seed=1):
+    r = rng(seed)
+    x = jnp.array(r.standard_normal((bsz, 1, 28, 28), dtype=np.float32))
+    y = jnp.array(np.eye(10, dtype=np.float32)[r.integers(0, 10, bsz)])
+    return x, y
+
+
+def batch_pointnet(bsz=4, n=32, ncls=40, seed=1):
+    r = rng(seed)
+    x = jnp.array(r.standard_normal((bsz, n, 3), dtype=np.float32))
+    y = jnp.array(np.eye(ncls, dtype=np.float32)[r.integers(0, ncls, bsz)])
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# parameter-count sanity (the paper's exact LeNet variant)
+# ---------------------------------------------------------------------------
+
+
+def test_lenet_param_count_matches_paper():
+    total = sum(int(np.prod(s)) for _, s in model.LENET_PARAMS)
+    assert total == 107_786  # paper Sec. 5.1.1
+    # ZO-Feat-Cls1: all but fc3 trained by ZO -> 106,936
+    zo1 = total - (84 * 10 + 10)
+    assert zo1 == 106_936
+    # ZO-Feat-Cls2: all but fc2+fc3 -> 96,772
+    zo2 = zo1 - (120 * 84 + 84)
+    assert zo2 == 96_772
+
+
+def test_pointnet_param_count_near_paper():
+    total = sum(int(np.prod(s)) for _, s in model.pointnet_params(40))
+    # paper: 816,744 (vanilla PointNet, incl. whatever small extras); our
+    # no-T-net variant must land within 0.5%.
+    assert abs(total - 816_744) / 816_744 < 0.005
+    # the BP-tail sizes ARE exact:
+    assert 256 * 40 + 40 == 10_280  # Cls1 tail
+    assert 512 * 256 + 256 + 10_280 == 141_608  # Cls2 tail
+
+
+# ---------------------------------------------------------------------------
+# pallas forward == reference forward
+# ---------------------------------------------------------------------------
+
+
+def test_lenet_pallas_vs_ref_forward():
+    params = lenet_init()
+    x, y = batch_lenet()
+    lp, gp, a1p, a2p = model.lenet_fwd(params, x, y, use_pallas=True)
+    lr_, gr, a1r, a2r = model.lenet_fwd(params, x, y, use_pallas=False)
+    np.testing.assert_allclose(float(lp), float(lr_), rtol=1e-4)
+    np.testing.assert_allclose(np.array(gp), np.array(gr), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.array(a1p), np.array(a1r), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.array(a2p), np.array(a2r), rtol=1e-3, atol=1e-4)
+
+
+def test_pointnet_pallas_vs_ref_forward():
+    params = pointnet_init()
+    x, y = batch_pointnet()
+    lp, gp, h1p, h2p = model.pointnet_fwd(params, x, y, use_pallas=True)
+    lr_, gr, h1r, h2r = model.pointnet_fwd(params, x, y, use_pallas=False)
+    np.testing.assert_allclose(float(lp), float(lr_), rtol=1e-4)
+    np.testing.assert_allclose(np.array(gp), np.array(gr), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.array(h1p), np.array(h1r), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.array(h2p), np.array(h2r), rtol=1e-3, atol=1e-4)
+
+
+def test_lenet_fwd_shapes():
+    params = lenet_init()
+    x, y = batch_lenet(bsz=8)
+    loss, logits, a1, a2 = model.lenet_fwd(params, x, y)
+    assert loss.shape == ()
+    assert logits.shape == (8, 10)
+    assert a1.shape == (8, 120)
+    assert a2.shape == (8, 84)
+    assert (np.array(a1) >= 0).all() and (np.array(a2) >= 0).all()
+
+
+def test_pointnet_fwd_shapes():
+    params = pointnet_init()
+    x, y = batch_pointnet(bsz=4, n=32)
+    loss, logits, h1, h2 = model.pointnet_fwd(params, x, y)
+    assert logits.shape == (4, 40)
+    assert h1.shape == (4, 512)
+    assert h2.shape == (4, 256)
+
+
+def test_pointnet_permutation_invariance():
+    """Max-pool aggregation => logits invariant to point ordering."""
+    params = pointnet_init()
+    x, y = batch_pointnet(bsz=2, n=16)
+    perm = np.random.default_rng(5).permutation(16)
+    _, l1, _, _ = model.pointnet_fwd(params, x, y)
+    _, l2, _, _ = model.pointnet_fwd(params, x[:, perm, :], y)
+    np.testing.assert_allclose(np.array(l1), np.array(l2), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hand-written tail BP == jax.grad
+# ---------------------------------------------------------------------------
+
+
+def test_fc_tail1_grads_match_autodiff():
+    r = rng(4)
+    a = jnp.array(r.standard_normal((8, 84), dtype=np.float32))
+    w = jnp.array(r.standard_normal((84, 10), dtype=np.float32) * 0.1)
+    b = jnp.array(r.standard_normal((10,), dtype=np.float32) * 0.1)
+    y = jnp.array(np.eye(10, dtype=np.float32)[r.integers(0, 10, 8)])
+
+    def loss_fn(w, b):
+        from compile.kernels import ref
+        return ref.softmax_cross_entropy(a @ w + b, y)
+
+    gw_ref, gb_ref = jax.grad(loss_fn, argnums=(0, 1))(w, b)
+    gw, gb = model.fc_tail1_grads(a, w, b, y)
+    np.testing.assert_allclose(np.array(gw), np.array(gw_ref), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.array(gb), np.array(gb_ref), rtol=1e-4, atol=1e-5)
+
+
+def test_fc_tail2_grads_match_autodiff():
+    r = rng(5)
+    a1 = jnp.array(np.abs(r.standard_normal((8, 120))).astype(np.float32))
+    w4 = jnp.array(r.standard_normal((120, 84), dtype=np.float32) * 0.1)
+    b4 = jnp.array(r.standard_normal((84,), dtype=np.float32) * 0.1)
+    w5 = jnp.array(r.standard_normal((84, 10), dtype=np.float32) * 0.1)
+    b5 = jnp.array(r.standard_normal((10,), dtype=np.float32) * 0.1)
+    y = jnp.array(np.eye(10, dtype=np.float32)[r.integers(0, 10, 8)])
+
+    def loss_fn(w4, b4, w5, b5):
+        from compile.kernels import ref
+        h = jnp.maximum(a1 @ w4 + b4, 0.0)
+        return ref.softmax_cross_entropy(h @ w5 + b5, y)
+
+    refs = jax.grad(loss_fn, argnums=(0, 1, 2, 3))(w4, b4, w5, b5)
+    ours = model.fc_tail2_grads(a1, w4, b4, w5, b5, y)
+    for g, gr in zip(ours, refs):
+        np.testing.assert_allclose(np.array(g), np.array(gr), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# full-BP step
+# ---------------------------------------------------------------------------
+
+
+def test_lenet_step_decreases_loss():
+    params = lenet_init()
+    x, y = batch_lenet(bsz=16)
+    out = model.lenet_step(params, x, y, jnp.float32(0.05))
+    new_params, loss0 = list(out[:-1]), out[-1]
+    loss1, _, _, _ = model.lenet_fwd(new_params, x, y, use_pallas=False)
+    assert float(loss1) < float(loss0)
+
+
+def test_pointnet_step_decreases_loss():
+    params = pointnet_init()
+    x, y = batch_pointnet(bsz=8, n=32)
+    out = model.pointnet_step(params, x, y, jnp.float32(0.05))
+    new_params, loss0 = list(out[:-1]), out[-1]
+    loss1, _, _, _ = model.pointnet_fwd(new_params, x, y, use_pallas=False)
+    assert float(loss1) < float(loss0)
+
+
+def test_lenet_step_preserves_shapes():
+    params = lenet_init()
+    x, y = batch_lenet(bsz=8)
+    out = model.lenet_step(params, x, y, jnp.float32(0.01))
+    assert len(out) == 11
+    for p, (name, shape) in zip(out[:-1], model.LENET_PARAMS):
+        assert p.shape == shape, name

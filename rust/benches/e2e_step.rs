@@ -1,0 +1,101 @@
+//! End-to-end training-step benches — one per paper-table workload:
+//! the full ZO / ElasticZO / BP step (2 forwards + update [+ tail BP])
+//! on both engines, FP32 and INT8. These are the rows behind the
+//! Fig. 7 epoch-time claims and the §Perf L3 numbers.
+
+use elasticzo::coordinator::int8_trainer::{Int8TrainConfig, ZoGradMode};
+use elasticzo::coordinator::native_engine::NativeEngine;
+use elasticzo::coordinator::trainer::{zo_step, TrainConfig};
+use elasticzo::coordinator::xla_engine::XlaEngine;
+use elasticzo::coordinator::{Engine, Method, Model, ParamSet};
+use elasticzo::data;
+use elasticzo::int8::lenet8;
+use elasticzo::telemetry::PhaseTimer;
+use elasticzo::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let d = data::synth_mnist::generate(32, 1);
+    let mut y = vec![0.0f32; 32 * 10];
+    for (i, &l) in d.labels.iter().enumerate() {
+        y[i * 10 + l as usize] = 1.0;
+    }
+
+    let cfg_for = |method: Method| TrainConfig {
+        method,
+        epochs: 1,
+        batch: 32,
+        lr0: 1e-3,
+        eps: 1e-2,
+        g_clip: 5.0,
+        seed: 9,
+        eval_every: 1,
+        verbose: false,
+    };
+
+    // FP32 steps on both engines
+    for method in [Method::FullZo, Method::Cls1, Method::Cls2] {
+        let cfg = cfg_for(method);
+
+        let mut native = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 3);
+        let mut timer = PhaseTimer::new();
+        let mut step = 0u64;
+        b.bench(&format!("step_{}/native", cfg.method.label().replace(' ', "_")), || {
+            step += 1;
+            zo_step(&mut native, &mut params, &d.x, &y, 32, step, 1e-3, &cfg, &mut timer)
+                .unwrap()
+        });
+
+        if let Ok(mut xla) = XlaEngine::open_default(Model::LeNet, 32) {
+            let mut params = ParamSet::init(Model::LeNet, 3);
+            let mut timer = PhaseTimer::new();
+            let mut step = 0u64;
+            b.bench(&format!("step_{}/xla", cfg.method.label().replace(' ', "_")), || {
+                step += 1;
+                zo_step(&mut xla, &mut params, &d.x, &y, 32, step, 1e-3, &cfg, &mut timer)
+                    .unwrap()
+            });
+        }
+    }
+
+    // Full BP step
+    let mut native = NativeEngine::new(Model::LeNet);
+    let mut params = ParamSet::init(Model::LeNet, 4);
+    b.bench("step_Full_BP/native", || {
+        native.full_step(&mut params, &d.x, &y, 32, 0.01).unwrap()
+    });
+    if let Ok(mut xla) = XlaEngine::open_default(Model::LeNet, 32) {
+        let mut params = ParamSet::init(Model::LeNet, 4);
+        b.bench("step_Full_BP/xla", || {
+            xla.full_step(&mut params, &d.x, &y, 32, 0.01).unwrap()
+        });
+    }
+
+    // INT8 step (one minibatch of the int8 trainer loop, Cls1)
+    let mut ws = lenet8::init_params(5, 32);
+    let xq = lenet8::quantize_input(&d.x, 32);
+    let icfg = Int8TrainConfig {
+        method: Method::Cls1,
+        grad_mode: ZoGradMode::IntCE,
+        ..Default::default()
+    };
+    let mut step = 0u64;
+    b.bench("step_Cls1/int8_native", || {
+        use elasticzo::coordinator::int8_trainer::{perturb_int8, zo_update_int8};
+        use elasticzo::int8::intce;
+        step += 1;
+        perturb_int8(&mut ws, 4, icfg.seed, step, 1, icfg.r_max, 0.5);
+        let fp = lenet8::forward(&ws, &xq, 32);
+        perturb_int8(&mut ws, 4, icfg.seed, step, -2, icfg.r_max, 0.5);
+        let fm = lenet8::forward(&ws, &xq, 32);
+        let g = intce::loss_diff_sign_int(
+            &fp.logits.data, fp.logits.exp, &fm.logits.data, fm.logits.exp,
+            &d.labels, 32, 10,
+        );
+        perturb_int8(&mut ws, 4, icfg.seed, step, 1, icfg.r_max, 0.5);
+        zo_update_int8(&mut ws, 4, icfg.seed, step, g, 1, icfg.r_max, 0.5);
+        lenet8::tail_update(&mut ws, &fm, &d.labels, 1, 32, 5);
+        g
+    });
+}

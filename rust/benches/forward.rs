@@ -1,0 +1,81 @@
+//! Forward-pass latency: XLA fast artifact vs XLA Pallas-interpret
+//! artifact vs native engine, LeNet and PointNet. The XLA-fast/native
+//! comparison is the §Perf L2 result; the Pallas variant documents why
+//! interpret mode is compile-target-only on CPU.
+
+use elasticzo::coordinator::{Engine, Model, ParamSet};
+use elasticzo::coordinator::native_engine::NativeEngine;
+use elasticzo::coordinator::xla_engine::XlaEngine;
+use elasticzo::data;
+use elasticzo::util::bench::Bencher;
+
+fn batch(bsz: usize) -> (Vec<f32>, Vec<f32>) {
+    let d = data::synth_mnist::generate(bsz, 1);
+    let mut y = vec![0.0f32; bsz * 10];
+    for (i, &l) in d.labels.iter().enumerate() {
+        y[i * 10 + l as usize] = 1.0;
+    }
+    (d.x, y)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let params = ParamSet::init(Model::LeNet, 1);
+    let (x, y) = batch(32);
+
+    // native engine
+    let mut native = NativeEngine::new(Model::LeNet);
+    b.bench("lenet_fwd_b32/native", || {
+        native.forward(&params, &x, &y, 32).unwrap().loss
+    });
+
+    // XLA fast artifact
+    match XlaEngine::open_default(Model::LeNet, 32) {
+        Ok(mut xla) => {
+            b.bench("lenet_fwd_b32/xla_fast", || {
+                xla.forward(&params, &x, &y, 32).unwrap().loss
+            });
+        }
+        Err(e) => eprintln!("skipping xla fast bench: {e:#}"),
+    }
+
+    // XLA Pallas-interpret artifact (compile-target path; slow on CPU)
+    std::env::set_var("REPRO_PALLAS_FWD", "1");
+    match XlaEngine::open_default(Model::LeNet, 32) {
+        Ok(mut xla) => {
+            b.bench("lenet_fwd_b32/xla_pallas_interp", || {
+                xla.forward(&params, &x, &y, 32).unwrap().loss
+            });
+        }
+        Err(e) => eprintln!("skipping xla pallas bench: {e:#}"),
+    }
+    std::env::remove_var("REPRO_PALLAS_FWD");
+
+    // PointNet
+    let model = Model::PointNet { npoints: 128, ncls: 40 };
+    let pn_params = ParamSet::init(model, 2);
+    let d = data::synth_modelnet::generate(16, 128, 3);
+    let mut yy = vec![0.0f32; 16 * 40];
+    for (i, &l) in d.labels.iter().enumerate() {
+        yy[i * 40 + l as usize] = 1.0;
+    }
+    let mut native_pn = NativeEngine::new(model);
+    b.bench("pointnet_fwd_n128_b16/native", || {
+        native_pn.forward(&pn_params, &d.x, &yy, 16).unwrap().loss
+    });
+    if let Ok(mut xla) = XlaEngine::open_default(model, 16) {
+        b.bench("pointnet_fwd_n128_b16/xla_fast", || {
+            xla.forward(&pn_params, &d.x, &yy, 16).unwrap().loss
+        });
+    }
+
+    // derived headline: xla_fast speedup over pallas-interpret
+    let find = |name: &str| b.results.iter().find(|s| s.name.contains(name)).cloned();
+    if let (Some(fast), Some(pallas)) = (find("xla_fast"), find("pallas_interp")) {
+        b.report_metric(
+            "pallas_interp / xla_fast latency ratio",
+            pallas.mean.as_secs_f64() / fast.mean.as_secs_f64(),
+            "x",
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! NITI INT8 engine benches vs the FP32 native engine — the substrate
+//! of the paper's Fig. 7 "INT8 is 1.38–1.42× faster" claim, plus the
+//! rounding primitives.
+
+use elasticzo::coordinator::{Engine, Model, ParamSet};
+use elasticzo::coordinator::native_engine::NativeEngine;
+use elasticzo::data;
+use elasticzo::int8::{lenet8, rounding};
+use elasticzo::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    let d = data::synth_mnist::generate(32, 1);
+    let mut y = vec![0.0f32; 32 * 10];
+    for (i, &l) in d.labels.iter().enumerate() {
+        y[i * 10 + l as usize] = 1.0;
+    }
+
+    // FP32 native forward
+    let params = ParamSet::init(Model::LeNet, 1);
+    let mut native = NativeEngine::new(Model::LeNet);
+    let fp32 = b
+        .bench("forward_b32/native_fp32", || {
+            native.forward(&params, &d.x, &y, 32).unwrap().loss
+        })
+        .cloned();
+
+    // INT8 NITI forward
+    let ws = lenet8::init_params(2, 32);
+    let xq = lenet8::quantize_input(&d.x, 32);
+    let int8 = b
+        .bench("forward_b32/native_int8", || {
+            lenet8::forward(&ws, &xq, 32).logits.exp
+        })
+        .cloned();
+
+    if let (Some(f), Some(i)) = (fp32, int8) {
+        b.report_metric(
+            "fp32 / int8 forward ratio (paper: 1.38-1.42x)",
+            f.mean.as_secs_f64() / i.mean.as_secs_f64(),
+            "x",
+        );
+    }
+
+    // INT8 backward (tail + full)
+    let fwd = lenet8::forward(&ws, &xq, 32);
+    let mut ws_mut = ws.clone();
+    b.bench("tail_update_c1_b32/int8", || {
+        lenet8::tail_update(&mut ws_mut, &fwd, &d.labels, 1, 32, 5);
+    });
+    let mut ws_mut2 = ws.clone();
+    b.bench("full_update_b32/int8", || {
+        lenet8::full_update(&mut ws_mut2, &fwd, &d.labels, 32, 5);
+    });
+
+    // rounding primitives (per-element costs)
+    let vals: Vec<i32> = (0..4096).map(|i| (i * 7919) as i32 - 16_000_000).collect();
+    b.bench("rshift_round/4096", || {
+        vals.iter().map(|&v| rounding::rshift_round(v, 9)).sum::<i32>()
+    });
+    b.bench("pseudo_stochastic_round/4096", || {
+        vals.iter()
+            .map(|&v| rounding::pseudo_stochastic_round(v, 9))
+            .sum::<i32>()
+    });
+}

@@ -1,0 +1,58 @@
+//! ZO-engine micro-benches: the seed-trick perturb/update passes over
+//! LeNet (108k params) and PointNet (816k params) — the paper Fig. 7
+//! "ZO Perturb"/"ZO Update" slices — plus the int8 sparse perturbation
+//! and the integer CE sign (paper Eq. 7–12).
+
+use elasticzo::coordinator::int8_trainer::{perturb_int8, zo_update_int8};
+use elasticzo::coordinator::{zo, Model, ParamSet};
+use elasticzo::int8::{intce, lenet8};
+use elasticzo::rng::Rng64;
+use elasticzo::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // FP32 perturbation over both model sizes
+    let mut lenet = ParamSet::init(Model::LeNet, 1);
+    let nt = lenet.num_tensors();
+    b.bench("zo_perturb/lenet_107k", || {
+        zo::perturb(&mut lenet, nt, 7, 1, 1e-3);
+    });
+    let mut pn = ParamSet::init(Model::PointNet { npoints: 128, ncls: 40 }, 2);
+    let nt_pn = pn.num_tensors();
+    b.bench("zo_perturb/pointnet_816k", || {
+        zo::perturb(&mut pn, nt_pn, 7, 1, 1e-3);
+    });
+
+    if let Some(s) = b.results.last() {
+        b.report_metric(
+            "pointnet perturb throughput",
+            816_424.0 / s.mean.as_secs_f64() / 1e6,
+            "Mparams/s",
+        );
+    }
+
+    // INT8 sparse perturbation + update (Alg. 2)
+    let mut ws = lenet8::init_params(3, 32);
+    b.bench("int8_perturb/lenet_107k", || {
+        perturb_int8(&mut ws, 5, 7, 1, 1, 15, 0.5);
+    });
+    b.bench("int8_zo_update/lenet_107k", || {
+        zo_update_int8(&mut ws, 5, 7, 1, 1, 1, 15, 0.5);
+    });
+
+    // integer CE sign vs float CE sign (per ZO step, B=32)
+    let mut rng = Rng64::new(5);
+    let alpha: Vec<i8> = (0..32 * 10).map(|_| rng.uniform_i32(-127, 127) as i8).collect();
+    let beta: Vec<i8> = alpha
+        .iter()
+        .map(|&v| (v as i32 + rng.uniform_i32(-10, 10)).clamp(-127, 127) as i8)
+        .collect();
+    let labels: Vec<u8> = (0..32).map(|_| (rng.next_u64() % 10) as u8).collect();
+    b.bench("intce_sign/b32", || {
+        intce::loss_diff_sign_int(&alpha, -3, &beta, -3, &labels, 32, 10)
+    });
+    b.bench("float_ce_sign/b32", || {
+        intce::loss_diff_f32(&alpha, -3, &beta, -3, &labels, 32, 10).signum()
+    });
+}

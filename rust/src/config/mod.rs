@@ -1,0 +1,268 @@
+//! Run configuration: JSON config files + CLI overrides → one validated
+//! [`Config`] consumed by the launcher (`repro train`/`exp`).
+//!
+//! Precedence: defaults < `--config file.json` < individual CLI flags.
+
+use crate::coordinator::{EngineKind, Method, ZoGradMode};
+use crate::data::DatasetKind;
+use crate::util::cli::Args;
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+
+/// Numeric precision / gradient mode of a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    /// NITI int8, ZO sign from float CE (paper column "INT8").
+    Int8,
+    /// NITI int8, integer-only ZO sign (paper column "INT8*").
+    Int8Star,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "fp32" => Ok(Precision::Fp32),
+            "int8" => Ok(Precision::Int8),
+            "int8*" | "int8star" => Ok(Precision::Int8Star),
+            other => anyhow::bail!("unknown precision '{other}' (fp32|int8|int8*)"),
+        }
+    }
+
+    pub fn grad_mode(&self) -> ZoGradMode {
+        match self {
+            Precision::Int8Star => ZoGradMode::IntCE,
+            _ => ZoGradMode::FloatCE,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "FP32",
+            Precision::Int8 => "INT8",
+            Precision::Int8Star => "INT8*",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub model: String,
+    pub dataset: DatasetKind,
+    pub engine: EngineKind,
+    pub method: Method,
+    pub precision: Precision,
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub eps: f32,
+    pub g_clip: f32,
+    pub r_max: i8,
+    pub b_zo: u32,
+    pub seed: u64,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub npoints: usize,
+    pub ncls: usize,
+    pub artifacts_dir: Option<String>,
+    pub load_checkpoint: Option<String>,
+    pub save_checkpoint: Option<String>,
+    pub verbose: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            model: "lenet".into(),
+            dataset: DatasetKind::SynthMnist,
+            engine: EngineKind::Xla,
+            method: Method::Cls1,
+            precision: Precision::Fp32,
+            epochs: 10,
+            batch: 32,
+            lr: 1e-3,
+            eps: 1e-2,
+            g_clip: 5.0,
+            r_max: 15,
+            b_zo: 1,
+            seed: 1,
+            train_n: 2048,
+            test_n: 512,
+            npoints: 128,
+            ncls: 40,
+            artifacts_dir: None,
+            load_checkpoint: None,
+            save_checkpoint: None,
+            verbose: false,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON object value (config-file content).
+    pub fn apply_json(&mut self, v: &Value) -> Result<()> {
+        let obj = v.as_obj().context("config root must be an object")?;
+        for (k, val) in obj {
+            self.set(k, &json_scalar_to_string(val)?)?;
+        }
+        Ok(())
+    }
+
+    /// Set a single key from its string form (shared by JSON + CLI).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "model" => self.model = val.to_string(),
+            "dataset" => self.dataset = DatasetKind::parse(val)?,
+            "engine" => self.engine = EngineKind::parse(val)?,
+            "method" => self.method = Method::parse(val)?,
+            "precision" => self.precision = Precision::parse(val)?,
+            "epochs" => self.epochs = val.parse().context("epochs")?,
+            "batch" => self.batch = val.parse().context("batch")?,
+            "lr" => self.lr = val.parse().context("lr")?,
+            "eps" => self.eps = val.parse().context("eps")?,
+            "g-clip" | "g_clip" => self.g_clip = val.parse().context("g_clip")?,
+            "r-max" | "r_max" => self.r_max = val.parse().context("r_max")?,
+            "b-zo" | "b_zo" => self.b_zo = val.parse().context("b_zo")?,
+            "seed" => self.seed = val.parse().context("seed")?,
+            "train-n" | "train_n" => self.train_n = val.parse().context("train_n")?,
+            "test-n" | "test_n" => self.test_n = val.parse().context("test_n")?,
+            "npoints" => self.npoints = val.parse().context("npoints")?,
+            "ncls" => self.ncls = val.parse().context("ncls")?,
+            "artifacts" | "artifacts_dir" => self.artifacts_dir = Some(val.to_string()),
+            "load" | "load_checkpoint" => self.load_checkpoint = Some(val.to_string()),
+            "save" | "save_checkpoint" => self.save_checkpoint = Some(val.to_string()),
+            "verbose" => self.verbose = val == "true" || val == "1",
+            other => anyhow::bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Build from CLI args: `--config file.json` first, then flag overrides.
+    pub fn from_args(args: &Args) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            let v = json::parse(&text).context("parsing config json")?;
+            cfg.apply_json(&v)?;
+        }
+        for (k, v) in &args.options {
+            if k != "config" {
+                cfg.set(k, v)?;
+            }
+        }
+        if args.flag("verbose") {
+            cfg.verbose = true;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.model != "lenet" && self.model != "pointnet" {
+            anyhow::bail!("model must be lenet|pointnet, got '{}'", self.model);
+        }
+        if self.model == "pointnet" && self.precision != Precision::Fp32 {
+            anyhow::bail!("INT8 is only implemented for lenet (as in the paper)");
+        }
+        if self.precision != Precision::Fp32 && self.model != "lenet" {
+            anyhow::bail!("INT8 requires model=lenet");
+        }
+        if self.batch == 0 || self.epochs == 0 {
+            anyhow::bail!("batch and epochs must be positive");
+        }
+        if !(0.0..=1e3).contains(&self.eps) || self.eps <= 0.0 {
+            anyhow::bail!("eps must be in (0, 1e3]");
+        }
+        if self.r_max <= 0 {
+            anyhow::bail!("r_max must be positive");
+        }
+        if !(1..=7).contains(&self.b_zo) {
+            anyhow::bail!("b_zo must be in 1..=7");
+        }
+        Ok(())
+    }
+
+    pub fn model_enum(&self) -> crate::coordinator::Model {
+        match self.model.as_str() {
+            "lenet" => crate::coordinator::Model::LeNet,
+            _ => crate::coordinator::Model::PointNet { npoints: self.npoints, ncls: self.ncls },
+        }
+    }
+}
+
+fn json_scalar_to_string(v: &Value) -> Result<String> {
+    Ok(match v {
+        Value::Str(s) => s.clone(),
+        Value::Num(n) => {
+            if n.fract() == 0.0 {
+                format!("{}", *n as i64)
+            } else {
+                format!("{n}")
+            }
+        }
+        Value::Bool(b) => b.to_string(),
+        other => anyhow::bail!("config values must be scalars, got {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(a: &[&str]) -> Args {
+        Args::parse(a.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let cfg = Config::from_args(&args(&[
+            "--model", "pointnet", "--method", "full-zo", "--epochs", "3",
+            "--lr", "0.005", "--engine", "native", "--verbose",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.model, "pointnet");
+        assert_eq!(cfg.method, Method::FullZo);
+        assert_eq!(cfg.epochs, 3);
+        assert!((cfg.lr - 0.005).abs() < 1e-9);
+        assert_eq!(cfg.engine, EngineKind::Native);
+        assert!(cfg.verbose);
+    }
+
+    #[test]
+    fn json_config_applies() {
+        let mut cfg = Config::default();
+        let v = json::parse(
+            r#"{"model": "lenet", "precision": "int8*", "epochs": 7, "batch": 64}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&v).unwrap();
+        assert_eq!(cfg.precision, Precision::Int8Star);
+        assert_eq!(cfg.precision.grad_mode(), ZoGradMode::IntCE);
+        assert_eq!(cfg.epochs, 7);
+        assert_eq!(cfg.batch, 64);
+    }
+
+    #[test]
+    fn invalid_combo_rejected() {
+        let r = Config::from_args(&args(&["--model", "pointnet", "--precision", "int8"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let r = Config::from_args(&args(&["--optimzer", "adam"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn precision_labels() {
+        assert_eq!(Precision::Int8Star.label(), "INT8*");
+        assert!(Precision::parse("bf16").is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! Checkpointing: save/load parameter sets (FP32 and INT8) in a simple
+//! self-describing binary format — used by the fine-tuning experiments
+//! (pretrain on clean data → fine-tune on rotated data, paper Table 2).
+//!
+//! Format: magic "EZOC", version u32, tensor count u32, then per tensor:
+//! name (u32 len + utf8), dtype tag u8 (0=f32, 1=i8), exponent i32
+//! (int8 only, 0 otherwise), rank u32, dims u64×rank, payload.
+
+use crate::int8::qtensor::QTensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"EZOC";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I8 { data: Vec<i8>, exp: i32 },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+pub fn save(path: impl AsRef<Path>, tensors: &[CkptTensor]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        f.write_all(&(t.name.len() as u32).to_le_bytes())?;
+        f.write_all(t.name.as_bytes())?;
+        let (tag, exp): (u8, i32) = match &t.data {
+            TensorData::F32(_) => (0, 0),
+            TensorData::I8 { exp, .. } => (1, *exp),
+        };
+        f.write_all(&[tag])?;
+        f.write_all(&exp.to_le_bytes())?;
+        f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+        for &d in &t.dims {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I8 { data, .. } => {
+                let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+                f.write_all(&bytes)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<CkptTensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an ElasticZO checkpoint (bad magic)");
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name_buf = vec![0u8; name_len];
+        f.read_exact(&mut name_buf)?;
+        let name = String::from_utf8(name_buf).context("tensor name utf8")?;
+        let mut tag = [0u8; 1];
+        f.read_exact(&mut tag)?;
+        let mut exp_buf = [0u8; 4];
+        f.read_exact(&mut exp_buf)?;
+        let exp = i32::from_le_bytes(exp_buf);
+        let rank = read_u32(&mut f)? as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut d = [0u8; 8];
+            f.read_exact(&mut d)?;
+            dims.push(u64::from_le_bytes(d) as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let data = match tag[0] {
+            0 => {
+                let mut buf = vec![0u8; numel * 4];
+                f.read_exact(&mut buf)?;
+                TensorData::F32(
+                    buf.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                )
+            }
+            1 => {
+                let mut buf = vec![0u8; numel];
+                f.read_exact(&mut buf)?;
+                TensorData::I8 { data: buf.iter().map(|&b| b as i8).collect(), exp }
+            }
+            t => bail!("unknown tensor tag {t}"),
+        };
+        out.push(CkptTensor { name, dims, data });
+    }
+    Ok(out)
+}
+
+/// Save an FP32 [`ParamSet`](super::params::ParamSet).
+pub fn save_params(path: impl AsRef<Path>, params: &super::params::ParamSet) -> Result<()> {
+    let tensors: Vec<CkptTensor> = params
+        .specs
+        .iter()
+        .zip(&params.data)
+        .map(|((name, dims), data)| CkptTensor {
+            name: name.clone(),
+            dims: dims.clone(),
+            data: TensorData::F32(data.clone()),
+        })
+        .collect();
+    save(path, &tensors)
+}
+
+/// Load into an existing FP32 ParamSet (shapes must match).
+pub fn load_params(path: impl AsRef<Path>, params: &mut super::params::ParamSet) -> Result<()> {
+    let tensors = load(path)?;
+    if tensors.len() != params.num_tensors() {
+        bail!(
+            "checkpoint has {} tensors, model wants {}",
+            tensors.len(),
+            params.num_tensors()
+        );
+    }
+    for (t, ((name, dims), slot)) in tensors
+        .iter()
+        .zip(params.specs.iter().zip(params.data.iter_mut()))
+    {
+        if &t.name != name || &t.dims != dims {
+            bail!("checkpoint tensor {} {:?} != model {} {:?}", t.name, t.dims, name, dims);
+        }
+        match &t.data {
+            TensorData::F32(v) => slot.copy_from_slice(v),
+            _ => bail!("expected f32 tensor for {}", t.name),
+        }
+    }
+    Ok(())
+}
+
+/// Save INT8 NITI weights.
+pub fn save_int8(path: impl AsRef<Path>, names: &[&str], ws: &[QTensor]) -> Result<()> {
+    let tensors: Vec<CkptTensor> = names
+        .iter()
+        .zip(ws)
+        .map(|(name, w)| CkptTensor {
+            name: name.to_string(),
+            dims: w.dims.clone(),
+            data: TensorData::I8 { data: w.data.clone(), exp: w.exp },
+        })
+        .collect();
+    save(path, &tensors)
+}
+
+/// Load INT8 NITI weights.
+pub fn load_int8(path: impl AsRef<Path>) -> Result<Vec<QTensor>> {
+    load(path)?
+        .into_iter()
+        .map(|t| match t.data {
+            TensorData::I8 { data, exp } => Ok(QTensor::from_vec(&t.dims, data, exp)),
+            _ => bail!("expected int8 tensor for {}", t.name),
+        })
+        .collect()
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::params::{Model, ParamSet};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ezo_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn fp32_roundtrip() {
+        let p = ParamSet::init(Model::LeNet, 3);
+        let path = tmp("fp32");
+        save_params(&path, &p).unwrap();
+        let mut q = ParamSet::init(Model::LeNet, 99);
+        assert_ne!(p.data, q.data);
+        load_params(&path, &mut q).unwrap();
+        assert_eq!(p.data, q.data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn int8_roundtrip() {
+        let ws = crate::int8::lenet8::init_params(5, 32);
+        let names: Vec<&str> = crate::int8::lenet8::PARAM_SPECS.iter().map(|(n, _)| *n).collect();
+        let path = tmp("int8");
+        save_int8(&path, &names, &ws).unwrap();
+        let back = load_int8(&path).unwrap();
+        assert_eq!(ws.len(), back.len());
+        for (a, b) in ws.iter().zip(&back) {
+            assert_eq!(a.data, b.data);
+            assert_eq!(a.exp, b.exp);
+            assert_eq!(a.dims, b.dims);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let p = ParamSet::init(Model::LeNet, 3);
+        let path = tmp("mismatch");
+        save_params(&path, &p).unwrap();
+        let mut q = ParamSet::init(Model::PointNet { npoints: 8, ncls: 40 }, 1);
+        assert!(load_params(&path, &mut q).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let path = tmp("corrupt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

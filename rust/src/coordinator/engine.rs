@@ -1,0 +1,148 @@
+//! The `Engine` abstraction: forward / tail-BP / full-BP execution,
+//! implemented twice (XLA artifacts vs native rust) per DESIGN.md §2.
+
+use super::params::ParamSet;
+use crate::nn::{Forward, TailGrads};
+use anyhow::Result;
+
+/// FP32 execution engine.
+pub trait Engine {
+    /// Forward + loss; also returns the partition activations.
+    fn forward(&mut self, params: &ParamSet, x: &[f32], y: &[f32], bsz: usize) -> Result<Forward>;
+
+    /// Gradients of the last `k` ∈ {1,2} FC layers given partition
+    /// activations from a previous `forward`.
+    fn tail_grads(
+        &mut self,
+        params: &ParamSet,
+        fwd: &Forward,
+        y: &[f32],
+        k: usize,
+        bsz: usize,
+    ) -> Result<TailGrads>;
+
+    /// One full-BP SGD step, in place. Returns the pre-step loss.
+    fn full_step(
+        &mut self,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[f32],
+        bsz: usize,
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// Human-readable engine name (for logs/EXPERIMENTS.md).
+    fn name(&self) -> &'static str;
+}
+
+/// Which engine to instantiate (config-level).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Xla,
+    Native,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "xla" => Ok(EngineKind::Xla),
+            "native" => Ok(EngineKind::Native),
+            other => anyhow::bail!("unknown engine '{other}' (want xla|native)"),
+        }
+    }
+}
+
+/// Training method — the paper's four configurations.
+///
+/// Naming follows the paper §5.1.1: the suffix counts the *classifier*
+/// FC layers trained by **ZO** (together with the feature extractor):
+/// ZO-Feat-Cls1 trains conv+fc1 by ZO → BP on the last TWO FC layers
+/// (96,772 ZO params for LeNet); ZO-Feat-Cls2 trains conv+fc1+fc2 by
+/// ZO → BP on the last ONE (106,936 ZO params).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    FullZo,
+    /// ZO-Feat-Cls1: BP on the last two FC layers.
+    Cls1,
+    /// ZO-Feat-Cls2: BP on the last FC layer only.
+    Cls2,
+    FullBp,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        match s {
+            "full-zo" | "zo" => Ok(Method::FullZo),
+            "cls1" | "zo-feat-cls1" => Ok(Method::Cls1),
+            "cls2" | "zo-feat-cls2" => Ok(Method::Cls2),
+            "full-bp" | "bp" => Ok(Method::FullBp),
+            other => anyhow::bail!("unknown method '{other}' (full-zo|cls1|cls2|full-bp)"),
+        }
+    }
+
+    /// Number of trailing FC layers trained by BP.
+    pub fn bp_layers(&self) -> usize {
+        match self {
+            Method::FullZo => 0,
+            Method::Cls2 => 1,
+            Method::Cls1 => 2,
+            Method::FullBp => usize::MAX, // all — handled specially
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::FullZo => "Full ZO",
+            Method::Cls1 => "ZO-Feat-Cls1",
+            Method::Cls2 => "ZO-Feat-Cls2",
+            Method::FullBp => "Full BP",
+        }
+    }
+
+    pub const ALL: [Method; 4] = [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp];
+
+    /// Memory-model mapping.
+    pub fn memory_method(&self) -> crate::memory::Method {
+        match self {
+            Method::FullZo => crate::memory::Method::FullZo,
+            Method::Cls2 => crate::memory::Method::Elastic { bp_layers: 1 },
+            Method::Cls1 => crate::memory::Method::Elastic { bp_layers: 2 },
+            Method::FullBp => crate::memory::Method::FullBp,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_and_layers() {
+        assert_eq!(Method::parse("full-zo").unwrap(), Method::FullZo);
+        // paper naming: Cls1 -> BP on TWO layers, Cls2 -> BP on ONE
+        assert_eq!(Method::parse("cls1").unwrap().bp_layers(), 2);
+        assert_eq!(Method::parse("zo-feat-cls2").unwrap().bp_layers(), 1);
+        assert!(Method::parse("magic").is_err());
+    }
+
+    #[test]
+    fn zo_param_counts_match_paper_per_method() {
+        use crate::coordinator::params::{Model, ParamSet};
+        let p = ParamSet::init(Model::LeNet, 1);
+        // paper §5.1.1: Cls1 trains 96,772 params by ZO, Cls2 106,936
+        assert_eq!(p.zo_param_count(Method::Cls1.bp_layers()), 96_772);
+        assert_eq!(p.zo_param_count(Method::Cls2.bp_layers()), 106_936);
+    }
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("xla").unwrap(), EngineKind::Xla);
+        assert!(EngineKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn labels_match_paper_tables() {
+        assert_eq!(Method::FullZo.label(), "Full ZO");
+        assert_eq!(Method::Cls1.label(), "ZO-Feat-Cls1");
+    }
+}

@@ -1,0 +1,415 @@
+//! INT8 training loop — paper Alg. 2 (ElasticZO-INT8) on the native
+//! NITI engine, with both gradient modes:
+//!
+//! * [`ZoGradMode::FloatCE`] — `g = sgn(ℓ₊−ℓ₋)` from float CE of the
+//!   int8 logits (the paper's "INT8" columns);
+//! * [`ZoGradMode::IntCE`]   — the integer-only Eq. 7–12 sign (the
+//!   paper's "INT8*" columns; no FPU anywhere in the step).
+//!
+//! The sparse int8 perturbation `z = m ⊙ u`, `u ~ U(−r_max, r_max)`,
+//! `m ~ Bernoulli(1−p_zero)` is regenerated from the step seed exactly
+//! like the FP32 path; p_zero and the BP bitwidth follow the paper's
+//! staged schedules.
+
+use super::engine::Method;
+use super::metrics::{EpochStats, History};
+use super::schedules::{paper_b_bp, paper_p_zero};
+use crate::data::loader::{eval_batches, Loader};
+use crate::data::Dataset;
+use crate::int8::lenet8::{self, Fwd8};
+use crate::int8::qtensor::QTensor;
+use crate::int8::rounding::clamp_i8;
+use crate::int8::{intce, layers};
+use crate::rng::ZoStream;
+use crate::telemetry::{Phase, PhaseTimer};
+use anyhow::Result;
+
+/// How the ZO gradient sign is computed (paper Table 1 INT8 vs INT8*).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ZoGradMode {
+    FloatCE,
+    IntCE,
+}
+
+impl ZoGradMode {
+    pub fn parse(s: &str) -> Result<ZoGradMode> {
+        match s {
+            "float" | "int8" => Ok(ZoGradMode::FloatCE),
+            "int" | "int8*" | "intce" => Ok(ZoGradMode::IntCE),
+            other => anyhow::bail!("unknown zo grad mode '{other}' (float|int)"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Int8TrainConfig {
+    pub method: Method,
+    pub grad_mode: ZoGradMode,
+    pub epochs: usize,
+    pub batch: usize,
+    /// Perturbation scale r_max (paper tunes in {1,3,7,15,31,63}).
+    pub r_max: i8,
+    /// ZO update bitwidth (paper fixes b_ZO = 1).
+    pub b_zo: u32,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for Int8TrainConfig {
+    fn default() -> Self {
+        Int8TrainConfig {
+            method: Method::Cls1,
+            grad_mode: ZoGradMode::FloatCE,
+            epochs: 10,
+            batch: 32,
+            r_max: 15,
+            b_zo: 1,
+            seed: 1,
+            eval_every: 1,
+            verbose: false,
+        }
+    }
+}
+
+/// Perturb the first `n_zo` weight tensors in place:
+/// θ ← clamp(θ + k·z), z regenerated from the step stream.
+pub fn perturb_int8(
+    ws: &mut [QTensor],
+    n_zo: usize,
+    seed: u64,
+    step: u64,
+    k: i32,
+    r_max: i8,
+    p_zero: f32,
+) {
+    let mut stream = ZoStream::for_step(seed, step);
+    for w in &mut ws[..n_zo] {
+        for v in &mut w.data {
+            let z = stream.sparse_i8(r_max, p_zero) as i32;
+            *v = clamp_i8(*v as i32 + k * z);
+        }
+    }
+}
+
+/// ZO update: θ ← clamp(θ − PseudoStochasticRound(g·z, b_ZO))
+/// (paper Alg. 2 lines 18–24). `g ∈ {−1,0,+1}`.
+pub fn zo_update_int8(
+    ws: &mut [QTensor],
+    n_zo: usize,
+    seed: u64,
+    step: u64,
+    g: i32,
+    b_zo: u32,
+    r_max: i8,
+    p_zero: f32,
+) {
+    if g == 0 {
+        return;
+    }
+    let mut stream = ZoStream::for_step(seed, step);
+    for w in &mut ws[..n_zo] {
+        // accumulate g·z per tensor, then round to b_ZO bits
+        let acc: Vec<i32> = w
+            .data
+            .iter()
+            .map(|_| g * stream.sparse_i8(r_max, p_zero) as i32)
+            .collect();
+        let u = layers::round_update(&acc, b_zo);
+        for (v, &uv) in w.data.iter_mut().zip(&u) {
+            *v = clamp_i8(*v as i32 - uv as i32);
+        }
+    }
+}
+
+/// Float CE of int8 logits (eval + the INT8 FloatCE gradient).
+pub fn int8_ce(logits: &QTensor, labels: &[u8], bsz: usize) -> f32 {
+    let zeros = vec![0i8; logits.data.len()];
+    // L(logits) - L(zeros) + L(zeros); L(zeros) = B·ln(10): compute directly
+    let diff = intce::loss_diff_f32(&logits.data, logits.exp, &zeros, 0, labels, bsz, 10);
+    (diff as f32 + bsz as f32 * (10.0f32).ln()) / bsz as f32
+}
+
+/// Accuracy of int8 logits.
+pub fn int8_accuracy(fwd: &Fwd8, labels: &[u8], real: usize) -> (usize, usize) {
+    let n = lenet8::NCLASS;
+    let mut correct = 0;
+    for row in 0..real {
+        let lg = &fwd.logits.data[row * n..(row + 1) * n];
+        let pred = lg.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        if pred == labels[row] as usize {
+            correct += 1;
+        }
+    }
+    (correct, real)
+}
+
+pub fn evaluate_int8(ws: &[QTensor], data: &Dataset, batch: usize) -> (f32, f32) {
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut loss = 0.0f64;
+    let mut nb = 0usize;
+    for b in eval_batches(data, batch) {
+        let xq = lenet8::quantize_input(&b.x, batch);
+        let fwd = lenet8::forward(ws, &xq, batch);
+        let (c, t) = int8_accuracy(&fwd, &b.labels, b.bsz);
+        correct += c;
+        seen += t;
+        loss += int8_ce(&fwd.logits, &b.labels, batch) as f64;
+        nb += 1;
+    }
+    (
+        (loss / nb.max(1) as f64) as f32,
+        correct as f32 / seen.max(1) as f32,
+    )
+}
+
+pub struct Int8TrainResult {
+    pub history: History,
+    pub timer: PhaseTimer,
+}
+
+/// Train INT8 LeNet with any method (FullZO / Cls1 / Cls2 / FullBP=NITI).
+pub fn train_int8(
+    ws: &mut Vec<QTensor>,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    cfg: &Int8TrainConfig,
+) -> Result<Int8TrainResult> {
+    let label = match cfg.grad_mode {
+        ZoGradMode::FloatCE => format!("{} INT8", cfg.method.label()),
+        ZoGradMode::IntCE => format!("{} INT8*", cfg.method.label()),
+    };
+    let mut history = History::new(&label);
+    let mut timer = PhaseTimer::new();
+    let p_zero_sched = paper_p_zero(cfg.epochs);
+    let b_bp_sched = paper_b_bp(cfg.epochs);
+    let bp_layers = match cfg.method {
+        Method::FullBp => 0, // handled by full_update below
+        m => m.bp_layers(),
+    };
+    let n_zo = match cfg.method {
+        Method::FullBp => 0,
+        m => lenet8::zo_layer_count(m.bp_layers()),
+    };
+    let mut step: u64 = 0;
+
+    for epoch in 0..cfg.epochs {
+        let epoch_t0 = std::time::Instant::now();
+        let p_zero = p_zero_sched.at(epoch);
+        let b_bp = b_bp_sched.at(epoch);
+        let mut epoch_loss = 0.0f64;
+        let mut nbatches = 0usize;
+
+        for b in Loader::new(train_data, cfg.batch, cfg.seed ^ 0xDA7A, epoch as u64) {
+            let xq = timer.time(Phase::Data, || lenet8::quantize_input(&b.x, cfg.batch));
+
+            if cfg.method == Method::FullBp {
+                // NITI baseline: pure int8 BP
+                let t0 = std::time::Instant::now();
+                let fwd = lenet8::forward(ws, &xq, cfg.batch);
+                timer.add(Phase::Forward, t0.elapsed());
+                epoch_loss += int8_ce(&fwd.logits, &b.labels, cfg.batch) as f64;
+                let t0 = std::time::Instant::now();
+                lenet8::full_update(ws, &fwd, &b.labels, cfg.batch, b_bp);
+                timer.add(Phase::BpBackward, t0.elapsed());
+            } else {
+                // ZO(+tail BP) step, Alg. 2
+                let t0 = std::time::Instant::now();
+                perturb_int8(ws, n_zo, cfg.seed, step, 1, cfg.r_max, p_zero);
+                timer.add(Phase::ZoPerturb, t0.elapsed());
+
+                let t0 = std::time::Instant::now();
+                let fwd_plus = lenet8::forward(ws, &xq, cfg.batch);
+                timer.add(Phase::Forward, t0.elapsed());
+
+                let t0 = std::time::Instant::now();
+                perturb_int8(ws, n_zo, cfg.seed, step, -2, cfg.r_max, p_zero);
+                timer.add(Phase::ZoPerturb, t0.elapsed());
+
+                let t0 = std::time::Instant::now();
+                let fwd_minus = lenet8::forward(ws, &xq, cfg.batch);
+                timer.add(Phase::Forward, t0.elapsed());
+
+                let t0 = std::time::Instant::now();
+                let g = match cfg.grad_mode {
+                    ZoGradMode::IntCE => intce::loss_diff_sign_int(
+                        &fwd_plus.logits.data,
+                        fwd_plus.logits.exp,
+                        &fwd_minus.logits.data,
+                        fwd_minus.logits.exp,
+                        &b.labels,
+                        cfg.batch,
+                        lenet8::NCLASS,
+                    ),
+                    ZoGradMode::FloatCE => {
+                        let d = intce::loss_diff_f32(
+                            &fwd_plus.logits.data,
+                            fwd_plus.logits.exp,
+                            &fwd_minus.logits.data,
+                            fwd_minus.logits.exp,
+                            &b.labels,
+                            cfg.batch,
+                            lenet8::NCLASS,
+                        );
+                        d.signum() as i32
+                    }
+                };
+                timer.add(Phase::Loss, t0.elapsed());
+
+                // restore
+                let t0 = std::time::Instant::now();
+                perturb_int8(ws, n_zo, cfg.seed, step, 1, cfg.r_max, p_zero);
+                timer.add(Phase::ZoPerturb, t0.elapsed());
+
+                let t0 = std::time::Instant::now();
+                zo_update_int8(ws, n_zo, cfg.seed, step, g, cfg.b_zo, cfg.r_max, p_zero);
+                timer.add(Phase::ZoUpdate, t0.elapsed());
+
+                if bp_layers > 0 {
+                    let t0 = std::time::Instant::now();
+                    lenet8::tail_update(ws, &fwd_minus, &b.labels, bp_layers, cfg.batch, b_bp);
+                    timer.add(Phase::BpBackward, t0.elapsed());
+                }
+                epoch_loss += int8_ce(&fwd_minus.logits, &b.labels, cfg.batch) as f64;
+            }
+            nbatches += 1;
+            step += 1;
+        }
+
+        let is_last = epoch + 1 == cfg.epochs;
+        let (test_loss, test_acc) = if epoch % cfg.eval_every == 0 || is_last {
+            let t0 = std::time::Instant::now();
+            let r = evaluate_int8(ws, test_data, cfg.batch);
+            timer.add(Phase::Eval, t0.elapsed());
+            r
+        } else {
+            let prev = history.epochs.last();
+            (
+                prev.map(|e| e.test_loss).unwrap_or(f32::NAN),
+                prev.map(|e| e.test_acc).unwrap_or(0.0),
+            )
+        };
+        let stats = EpochStats {
+            epoch,
+            train_loss: (epoch_loss / nbatches.max(1) as f64) as f32,
+            test_loss,
+            train_acc: 0.0,
+            test_acc,
+            lr: 0.0,
+            seconds: epoch_t0.elapsed().as_secs_f64(),
+        };
+        if cfg.verbose {
+            println!(
+                "[{label}] epoch {:>3}  loss {:.4}  test_loss {:.4}  acc {:.2}%  p_zero {p_zero}  b_bp {b_bp}",
+                epoch,
+                stats.train_loss,
+                stats.test_loss,
+                stats.test_acc * 100.0,
+            );
+        }
+        history.push(stats);
+    }
+    Ok(Int8TrainResult { history, timer })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist;
+
+    #[test]
+    fn perturb_restore_roundtrip_without_saturation() {
+        // with small weights and r_max, clamp never engages and the
+        // +1/−2/+1 sequence restores exactly (the Alg. 2 seed trick)
+        let mut ws = lenet8::init_params(1, 8);
+        let orig: Vec<Vec<i8>> = ws.iter().map(|w| w.data.clone()).collect();
+        perturb_int8(&mut ws, 5, 3, 7, 1, 15, 0.5);
+        perturb_int8(&mut ws, 5, 3, 7, -2, 15, 0.5);
+        perturb_int8(&mut ws, 5, 3, 7, 1, 15, 0.5);
+        for (w, o) in ws.iter().zip(&orig) {
+            assert_eq!(w.data, *o);
+        }
+    }
+
+    #[test]
+    fn perturb_only_touches_zo_prefix() {
+        let mut ws = lenet8::init_params(1, 32);
+        let orig: Vec<Vec<i8>> = ws.iter().map(|w| w.data.clone()).collect();
+        perturb_int8(&mut ws, 3, 5, 1, 1, 15, 0.33);
+        assert_eq!(ws[3].data, orig[3]);
+        assert_eq!(ws[4].data, orig[4]);
+        assert_ne!(ws[0].data, orig[0]);
+    }
+
+    #[test]
+    fn zo_update_moves_weights_when_g_nonzero() {
+        let mut ws = lenet8::init_params(2, 32);
+        let orig: Vec<Vec<i8>> = ws.iter().map(|w| w.data.clone()).collect();
+        zo_update_int8(&mut ws, 5, 4, 9, 1, 1, 15, 0.33);
+        let moved = ws.iter().zip(&orig).filter(|(w, o)| w.data != **o).count();
+        assert!(moved >= 4, "{moved}/5 moved");
+        // g = 0 must be a no-op
+        let mut ws2 = lenet8::init_params(2, 32);
+        let orig2: Vec<Vec<i8>> = ws2.iter().map(|w| w.data.clone()).collect();
+        zo_update_int8(&mut ws2, 5, 4, 9, 0, 1, 15, 0.33);
+        for (w, o) in ws2.iter().zip(&orig2) {
+            assert_eq!(w.data, *o);
+        }
+    }
+
+    #[test]
+    fn int8_full_bp_learns() {
+        let train_d = synth_mnist::generate(256, 21);
+        let test_d = synth_mnist::generate(128, 22);
+        let mut ws = lenet8::init_params(23, 32);
+        let cfg = Int8TrainConfig {
+            method: Method::FullBp,
+            epochs: 3,
+            batch: 32,
+            ..Default::default()
+        };
+        let r = train_int8(&mut ws, &train_d, &test_d, &cfg).unwrap();
+        assert!(
+            r.history.best_test_acc() > 0.3,
+            "acc {}",
+            r.history.best_test_acc()
+        );
+    }
+
+    #[test]
+    fn int8_cls1_trains_and_times_phases() {
+        let train_d = synth_mnist::generate(128, 24);
+        let test_d = synth_mnist::generate(64, 25);
+        let mut ws = lenet8::init_params(26, 32);
+        let cfg = Int8TrainConfig {
+            method: Method::Cls1,
+            epochs: 2,
+            batch: 16,
+            r_max: 15,
+            ..Default::default()
+        };
+        let r = train_int8(&mut ws, &train_d, &test_d, &cfg).unwrap();
+        assert!(r.timer.total(Phase::Forward).as_nanos() > 0);
+        assert!(r.timer.total(Phase::ZoUpdate).as_nanos() > 0);
+        assert!(r.timer.total(Phase::BpBackward).as_nanos() > 0);
+        assert_eq!(r.history.epochs.len(), 2);
+    }
+
+    #[test]
+    fn intce_mode_runs() {
+        let train_d = synth_mnist::generate(64, 27);
+        let test_d = synth_mnist::generate(32, 28);
+        let mut ws = lenet8::init_params(29, 32);
+        let cfg = Int8TrainConfig {
+            method: Method::FullZo,
+            grad_mode: ZoGradMode::IntCE,
+            epochs: 1,
+            batch: 16,
+            ..Default::default()
+        };
+        let r = train_int8(&mut ws, &train_d, &test_d, &cfg).unwrap();
+        assert_eq!(r.history.epochs.len(), 1);
+        assert!(r.history.epochs[0].train_loss.is_finite());
+    }
+}

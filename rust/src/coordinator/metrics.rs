@@ -1,0 +1,121 @@
+//! Training history: per-epoch loss/accuracy series (the data behind
+//! the paper's Figs. 2–3 and Tables 1–2), JSON-dumpable.
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, Default)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub test_loss: f32,
+    pub train_acc: f32,
+    pub test_acc: f32,
+    pub lr: f32,
+    pub seconds: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub label: String,
+    pub epochs: Vec<EpochStats>,
+}
+
+impl History {
+    pub fn new(label: &str) -> History {
+        History { label: label.to_string(), epochs: Vec::new() }
+    }
+
+    pub fn push(&mut self, e: EpochStats) {
+        self.epochs.push(e);
+    }
+
+    pub fn final_test_acc(&self) -> f32 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
+    }
+
+    /// Best (max) test accuracy over the run — the number the paper's
+    /// tables report.
+    pub fn best_test_acc(&self) -> f32 {
+        self.epochs.iter().map(|e| e.test_acc).fold(0.0, f32::max)
+    }
+
+    pub fn final_train_loss(&self) -> f32 {
+        self.epochs.last().map(|e| e.train_loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("label", Value::str(self.label.clone())),
+            (
+                "epochs",
+                Value::Arr(
+                    self.epochs
+                        .iter()
+                        .map(|e| {
+                            Value::obj(vec![
+                                ("epoch", Value::num(e.epoch as f64)),
+                                ("train_loss", Value::num(e.train_loss as f64)),
+                                ("test_loss", Value::num(e.test_loss as f64)),
+                                ("train_acc", Value::num(e.train_acc as f64)),
+                                ("test_acc", Value::num(e.test_acc as f64)),
+                                ("lr", Value::num(e.lr as f64)),
+                                ("seconds", Value::num(e.seconds)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Render a compact loss-curve table (Fig. 2/3 ASCII form).
+    pub fn curve_rows(&self) -> Vec<String> {
+        self.epochs
+            .iter()
+            .map(|e| {
+                format!(
+                    "epoch {:>3}  train {:.4}  test {:.4}  acc {:.2}%",
+                    e.epoch,
+                    e.train_loss,
+                    e.test_loss,
+                    e.test_acc * 100.0
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h() -> History {
+        let mut h = History::new("Full ZO");
+        h.push(EpochStats { epoch: 0, test_acc: 0.5, train_loss: 2.0, ..Default::default() });
+        h.push(EpochStats { epoch: 1, test_acc: 0.8, train_loss: 1.0, ..Default::default() });
+        h.push(EpochStats { epoch: 2, test_acc: 0.7, train_loss: 0.9, ..Default::default() });
+        h
+    }
+
+    #[test]
+    fn accessors() {
+        let h = h();
+        assert_eq!(h.final_test_acc(), 0.7);
+        assert_eq!(h.best_test_acc(), 0.8);
+        assert_eq!(h.final_train_loss(), 0.9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let v = h().to_json();
+        let text = crate::util::json::to_string(&v);
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("label").as_str(), Some("Full ZO"));
+        assert_eq!(back.get("epochs").as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn curve_rows_one_per_epoch() {
+        assert_eq!(h().curve_rows().len(), 3);
+    }
+}

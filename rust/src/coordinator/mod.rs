@@ -1,0 +1,24 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! Owns the training loop end to end: parameter store, the seed-trick
+//! ZO engine, elastic ZO/BP partitioning, the NITI INT8 driver, the
+//! hyper-parameter schedules, metrics and checkpoints. Compute is
+//! delegated to an [`engine::Engine`] — either the XLA artifacts
+//! ([`xla_engine`]) or the native rust implementation
+//! ([`native_engine`]).
+
+pub mod checkpoint;
+pub mod engine;
+pub mod int8_trainer;
+pub mod metrics;
+pub mod native_engine;
+pub mod params;
+pub mod schedules;
+pub mod trainer;
+pub mod xla_engine;
+pub mod zo;
+
+pub use engine::{Engine, EngineKind, Method};
+pub use int8_trainer::{Int8TrainConfig, ZoGradMode};
+pub use params::{Model, ParamSet};
+pub use trainer::{TrainConfig, TrainResult};

@@ -1,0 +1,97 @@
+//! Native engine: the pure-rust nn/ implementations behind the `Engine`
+//! trait — the stand-in for the paper's C++ on-device build.
+
+use super::engine::Engine;
+use super::params::{Model, ParamSet};
+use crate::nn::{lenet, pointnet, Forward, TailGrads};
+use crate::tensor::ops;
+use anyhow::Result;
+
+pub struct NativeEngine {
+    model: Model,
+}
+
+impl NativeEngine {
+    pub fn new(model: Model) -> NativeEngine {
+        NativeEngine { model }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn forward(&mut self, params: &ParamSet, x: &[f32], y: &[f32], bsz: usize) -> Result<Forward> {
+        Ok(match self.model {
+            Model::LeNet => lenet::forward(&params.data, x, y, bsz).0,
+            Model::PointNet { npoints, ncls } => {
+                pointnet::forward(&params.data, x, y, bsz, npoints, ncls).0
+            }
+        })
+    }
+
+    fn tail_grads(
+        &mut self,
+        params: &ParamSet,
+        fwd: &Forward,
+        y: &[f32],
+        k: usize,
+        bsz: usize,
+    ) -> Result<TailGrads> {
+        Ok(match self.model {
+            Model::LeNet => lenet::tail_grads(&params.data, fwd, y, k, bsz),
+            Model::PointNet { ncls, .. } => {
+                pointnet::tail_grads(&params.data, fwd, y, k, bsz, ncls)
+            }
+        })
+    }
+
+    fn full_step(
+        &mut self,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[f32],
+        bsz: usize,
+        lr: f32,
+    ) -> Result<f32> {
+        let (loss, grads) = match self.model {
+            Model::LeNet => {
+                let (fwd, cache) = lenet::forward(&params.data, x, y, bsz);
+                (fwd.loss, lenet::full_grads(&params.data, &cache, y))
+            }
+            Model::PointNet { npoints, ncls } => {
+                let (fwd, cache) = pointnet::forward(&params.data, x, y, bsz, npoints, ncls);
+                (fwd.loss, pointnet::full_grads(&params.data, &cache, y))
+            }
+        };
+        for (p, g) in params.data.iter_mut().zip(&grads) {
+            ops::axpy(-lr, g, p);
+        }
+        Ok(loss)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist;
+
+    #[test]
+    fn forward_and_step_work() {
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 1);
+        let d = synth_mnist::generate(8, 2);
+        let mut y = vec![0.0f32; 8 * 10];
+        for (i, &l) in d.labels.iter().enumerate() {
+            y[i * 10 + l as usize] = 1.0;
+        }
+        let f = eng.forward(&params, &d.x, &y, 8).unwrap();
+        assert_eq!(f.logits.len(), 80);
+        let l0 = eng.full_step(&mut params, &d.x, &y, 8, 0.05).unwrap();
+        let f1 = eng.forward(&params, &d.x, &y, 8).unwrap();
+        assert!(f1.loss < l0);
+        let tails = eng.tail_grads(&params, &f1, &y, 2, 8).unwrap();
+        assert_eq!(tails.len(), 4);
+    }
+}

@@ -1,0 +1,147 @@
+//! Parameter store: the coordinator-owned, engine-agnostic weights.
+//!
+//! Tensors live in ABI order (the same order the AOT artifacts take
+//! them); ZO trains the prefix, BP the suffix (paper Fig. 1).
+
+use crate::rng::Rng64;
+
+/// Which paper model a parameter set belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Model {
+    LeNet,
+    PointNet { npoints: usize, ncls: usize },
+}
+
+impl Model {
+    pub fn parse(s: &str, npoints: usize, ncls: usize) -> anyhow::Result<Model> {
+        match s {
+            "lenet" => Ok(Model::LeNet),
+            "pointnet" => Ok(Model::PointNet { npoints, ncls }),
+            other => anyhow::bail!("unknown model '{other}'"),
+        }
+    }
+
+    pub fn nclass(&self) -> usize {
+        match self {
+            Model::LeNet => 10,
+            Model::PointNet { ncls, .. } => *ncls,
+        }
+    }
+
+    /// `(name, shape)` list in ABI order.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        match self {
+            Model::LeNet => crate::nn::lenet::PARAM_SPECS
+                .iter()
+                .map(|(n, s)| (n.to_string(), s.to_vec()))
+                .collect(),
+            Model::PointNet { ncls, .. } => crate::nn::pointnet::param_specs(*ncls),
+        }
+    }
+
+    /// Memory-model layer table (for Figs. 4–6).
+    pub fn memory_layers(&self) -> Vec<crate::memory::LayerInfo> {
+        match self {
+            Model::LeNet => crate::memory::models::lenet_layers(),
+            Model::PointNet { npoints, ncls } => {
+                crate::memory::models::pointnet_layers(*npoints, *ncls)
+            }
+        }
+    }
+}
+
+/// Named f32 parameter tensors in ABI order.
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub model: Model,
+    pub specs: Vec<(String, Vec<usize>)>,
+    pub data: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Kaiming-uniform initialization (fan_in aware), deterministic.
+    pub fn init(model: Model, seed: u64) -> ParamSet {
+        let specs = model.param_specs();
+        let mut rng = Rng64::new(seed ^ 0x1217);
+        let data = specs
+            .iter()
+            .map(|(_, shape)| {
+                let n: usize = shape.iter().product();
+                let fan_in = match shape.len() {
+                    4 => shape[1] * shape[2] * shape[3], // conv (OC,C,KH,KW)
+                    2 => shape[0],                       // fc (K,N)
+                    _ => n,
+                };
+                let mut v = vec![0.0f32; n];
+                rng.fill_kaiming_uniform(&mut v, fan_in);
+                v
+            })
+            .collect();
+        ParamSet { model, specs, data }
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.data.iter().map(|d| d.len()).sum()
+    }
+
+    /// Index of the first tensor trained by BP when the last `bp_layers`
+    /// FC layers (w+b pairs) are BP-trained. Tensors `0..boundary` are ZO.
+    pub fn zo_boundary(&self, bp_layers: usize) -> usize {
+        self.num_tensors() - 2 * bp_layers
+    }
+
+    /// Number of scalar parameters trained by ZO for a partition.
+    pub fn zo_param_count(&self, bp_layers: usize) -> usize {
+        self.data[..self.zo_boundary(bp_layers)]
+            .iter()
+            .map(|d| d.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_counts_match_paper() {
+        let p = ParamSet::init(Model::LeNet, 1);
+        assert_eq!(p.num_params(), 107_786);
+        assert_eq!(p.num_tensors(), 10);
+        // one BP layer leaves 106,936 ZO params (paper's ZO-Feat-Cls2)
+        assert_eq!(p.zo_param_count(1), 106_936);
+        // two BP layers leave 96,772 (paper's ZO-Feat-Cls1)
+        assert_eq!(p.zo_param_count(2), 96_772);
+    }
+
+    #[test]
+    fn pointnet_tail_counts_match_paper() {
+        let p = ParamSet::init(Model::PointNet { npoints: 128, ncls: 40 }, 1);
+        let total = p.num_params();
+        // BP tails are exact (paper): Cls2 (one layer) = 10,280;
+        // Cls1 (two layers) = 141,608
+        assert_eq!(total - p.zo_param_count(1), 10_280);
+        assert_eq!(total - p.zo_param_count(2), 141_608);
+    }
+
+    #[test]
+    fn init_deterministic_and_seed_sensitive() {
+        let a = ParamSet::init(Model::LeNet, 5);
+        let b = ParamSet::init(Model::LeNet, 5);
+        let c = ParamSet::init(Model::LeNet, 6);
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn boundary_edges() {
+        let p = ParamSet::init(Model::LeNet, 2);
+        assert_eq!(p.zo_boundary(0), 10); // Full ZO: all tensors ZO
+        assert_eq!(p.zo_boundary(1), 8);
+        assert_eq!(p.zo_boundary(2), 6);
+    }
+}

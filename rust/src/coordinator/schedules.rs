@@ -1,0 +1,100 @@
+//! Hyper-parameter schedules (paper §5.1.1).
+//!
+//! * FP32: learning rate decays ×0.8 every 10 epochs (scaled to the
+//!   configured run length so short reproductions keep the same shape).
+//! * INT8: BP gradient bitwidth 5→4→3 and update sparsity p_zero
+//!   0.33→0.5→0.9 at 20% / 50% of the run (the paper's 20/100 and
+//!   50/100 epoch marks).
+
+/// Step-decay learning rate: `lr0 · factor^(epoch / every)`.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub lr0: f32,
+    pub factor: f32,
+    pub every: usize,
+}
+
+impl LrSchedule {
+    pub fn paper_fp32(lr0: f32, total_epochs: usize) -> LrSchedule {
+        // paper: ×0.8 every 10 of 100 epochs → every 10% of the run
+        let every = (total_epochs / 10).max(1);
+        LrSchedule { lr0, factor: 0.8, every }
+    }
+
+    pub fn lr(&self, epoch: usize) -> f32 {
+        self.lr0 * self.factor.powi((epoch / self.every) as i32)
+    }
+}
+
+/// Piecewise-constant schedule over epoch fractions.
+#[derive(Debug, Clone)]
+pub struct StagedSchedule<T: Copy> {
+    /// `(start_fraction, value)`, ascending; first entry must be 0.0.
+    pub stages: Vec<(f32, T)>,
+    pub total_epochs: usize,
+}
+
+impl<T: Copy> StagedSchedule<T> {
+    pub fn new(stages: Vec<(f32, T)>, total_epochs: usize) -> StagedSchedule<T> {
+        assert!(!stages.is_empty() && stages[0].0 == 0.0);
+        StagedSchedule { stages, total_epochs }
+    }
+
+    pub fn at(&self, epoch: usize) -> T {
+        let frac = epoch as f32 / self.total_epochs.max(1) as f32;
+        let mut v = self.stages[0].1;
+        for &(start, val) in &self.stages {
+            if frac >= start {
+                v = val;
+            }
+        }
+        v
+    }
+}
+
+/// The paper's p_zero schedule: 0.33 → 0.5 (20%) → 0.9 (50%).
+pub fn paper_p_zero(total_epochs: usize) -> StagedSchedule<f32> {
+    StagedSchedule::new(vec![(0.0, 0.33), (0.2, 0.5), (0.5, 0.9)], total_epochs)
+}
+
+/// The paper's BP gradient bitwidth schedule: 5 → 4 (20%) → 3 (50%).
+pub fn paper_b_bp(total_epochs: usize) -> StagedSchedule<u32> {
+    StagedSchedule::new(vec![(0.0, 5), (0.2, 4), (0.5, 3)], total_epochs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_decays_by_08_every_tenth() {
+        let s = LrSchedule::paper_fp32(0.05, 100);
+        assert_eq!(s.lr(0), 0.05);
+        assert!((s.lr(10) - 0.04).abs() < 1e-6);
+        assert!((s.lr(25) - 0.05 * 0.8f32.powi(2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lr_scales_to_short_runs() {
+        let s = LrSchedule::paper_fp32(0.05, 10);
+        assert!((s.lr(1) - 0.04).abs() < 1e-6); // decays every epoch
+    }
+
+    #[test]
+    fn p_zero_stages() {
+        let s = paper_p_zero(100);
+        assert_eq!(s.at(0), 0.33);
+        assert_eq!(s.at(19), 0.33);
+        assert_eq!(s.at(20), 0.5);
+        assert_eq!(s.at(50), 0.9);
+        assert_eq!(s.at(99), 0.9);
+    }
+
+    #[test]
+    fn b_bp_stages_scaled() {
+        let s = paper_b_bp(10);
+        assert_eq!(s.at(0), 5);
+        assert_eq!(s.at(2), 4);
+        assert_eq!(s.at(5), 3);
+    }
+}

@@ -1,0 +1,306 @@
+//! FP32 training loop — paper Alg. 1 for all four methods (Full ZO,
+//! ZO-Feat-Cls1/2, Full BP) over either engine.
+//!
+//! Per-minibatch ElasticZO step:
+//!   1. sample the step seed (just the step counter mixed with the run
+//!      seed — the 4-byte random seed of Alg. 1 line 3)
+//!   2. perturb θ₁..θ_C by +εz, forward → ℓ₊
+//!   3. perturb by −2εz, forward → ℓ₋
+//!   4. g = clip((ℓ₊−ℓ₋)/2ε)
+//!   5. perturb by (ε − ηg)z — merged restore+update (paper §4)
+//!   6. BP the last L−C layers from the partition activation of the ℓ₋
+//!      pass and apply SGD.
+
+use super::engine::{Engine, Method};
+use super::metrics::{EpochStats, History};
+use super::params::ParamSet;
+use super::schedules::LrSchedule;
+use super::zo;
+use crate::data::loader::{eval_batches, Loader};
+use crate::data::Dataset;
+use crate::nn::loss::accuracy;
+use crate::telemetry::{Phase, PhaseTimer};
+use crate::tensor::ops;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub method: Method,
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr0: f32,
+    pub eps: f32,
+    pub g_clip: f32,
+    pub seed: u64,
+    /// Evaluate every N epochs (always evaluates the last).
+    pub eval_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            method: Method::Cls1,
+            epochs: 10,
+            batch: 32,
+            lr0: 1e-3,
+            eps: 1e-2,
+            // SPSA's projected gradient scales like √d·|∇L| (d ≈ 10⁵
+            // here), so a tight clip is essential — the paper clips g
+            // to stabilize training (§5.1.1).
+            g_clip: 5.0,
+            seed: 1,
+            eval_every: 1,
+            verbose: false,
+        }
+    }
+}
+
+/// Outcome of a training run.
+pub struct TrainResult {
+    pub history: History,
+    pub timer: PhaseTimer,
+}
+
+/// Evaluate mean loss and accuracy over a dataset.
+pub fn evaluate(
+    engine: &mut dyn Engine,
+    params: &ParamSet,
+    data: &Dataset,
+    batch: usize,
+) -> Result<(f32, f32)> {
+    let nclass = data.nclass;
+    let mut total_loss = 0.0f64;
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut batches = 0usize;
+    for b in eval_batches(data, batch) {
+        let fwd = engine.forward(params, &b.x, &b.y_onehot, batch)?;
+        let (c, t) = accuracy(&fwd.logits, &b.labels, b.bsz, nclass);
+        correct += c;
+        seen += t;
+        total_loss += fwd.loss as f64;
+        batches += 1;
+    }
+    Ok((
+        (total_loss / batches.max(1) as f64) as f32,
+        correct as f32 / seen.max(1) as f32,
+    ))
+}
+
+/// One ElasticZO/FullZO minibatch step. Returns the step's train loss.
+#[allow(clippy::too_many_arguments)]
+pub fn zo_step(
+    engine: &mut dyn Engine,
+    params: &mut ParamSet,
+    x: &[f32],
+    y: &[f32],
+    bsz: usize,
+    step: u64,
+    lr: f32,
+    cfg: &TrainConfig,
+    timer: &mut PhaseTimer,
+) -> Result<f32> {
+    let bp_layers = cfg.method.bp_layers();
+    let boundary = params.zo_boundary(bp_layers);
+    let (seed, eps) = (cfg.seed, cfg.eps);
+
+    let t0 = std::time::Instant::now();
+    zo::perturb(params, boundary, seed, step, eps);
+    timer.add(Phase::ZoPerturb, t0.elapsed());
+
+    let fwd_plus = {
+        let t = std::time::Instant::now();
+        let f = engine.forward(params, x, y, bsz)?;
+        timer.add(Phase::Forward, t.elapsed());
+        f
+    };
+
+    let t0 = std::time::Instant::now();
+    zo::perturb(params, boundary, seed, step, -2.0 * eps);
+    timer.add(Phase::ZoPerturb, t0.elapsed());
+
+    let fwd_minus = {
+        let t = std::time::Instant::now();
+        let f = engine.forward(params, x, y, bsz)?;
+        timer.add(Phase::Forward, t.elapsed());
+        f
+    };
+
+    let g = zo::projected_gradient(fwd_plus.loss, fwd_minus.loss, eps, cfg.g_clip);
+
+    // merged restore + ZO update: θ += (ε − ηg)z
+    let t0 = std::time::Instant::now();
+    zo::perturb(params, boundary, seed, step, eps - lr * g);
+    timer.add(Phase::ZoUpdate, t0.elapsed());
+
+    // BP tail from the ℓ₋ pass activations (paper keeps perturbed-pass
+    // activations to avoid a third forward)
+    if bp_layers > 0 {
+        let t0 = std::time::Instant::now();
+        let tails = engine.tail_grads(params, &fwd_minus, y, bp_layers, bsz)?;
+        for (idx, grad) in tails {
+            ops::axpy(-lr, &grad, &mut params.data[idx]);
+        }
+        timer.add(Phase::BpBackward, t0.elapsed());
+    }
+
+    Ok(0.5 * (fwd_plus.loss + fwd_minus.loss))
+}
+
+/// Train with any method; returns per-epoch history + phase breakdown.
+pub fn train(
+    engine: &mut dyn Engine,
+    params: &mut ParamSet,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    cfg: &TrainConfig,
+) -> Result<TrainResult> {
+    let mut history = History::new(cfg.method.label());
+    let mut timer = PhaseTimer::new();
+    let lr_sched = LrSchedule::paper_fp32(cfg.lr0, cfg.epochs);
+    let mut step: u64 = 0;
+
+    for epoch in 0..cfg.epochs {
+        let epoch_t0 = std::time::Instant::now();
+        let lr = lr_sched.lr(epoch);
+        let mut epoch_loss = 0.0f64;
+        let mut nbatches = 0usize;
+
+        let loader = Loader::new(train_data, cfg.batch, cfg.seed ^ 0xDA7A, epoch as u64);
+        for b in loader {
+            let loss = match cfg.method {
+                Method::FullBp => {
+                    let t0 = std::time::Instant::now();
+                    let l = engine.full_step(params, &b.x, &b.y_onehot, cfg.batch, lr)?;
+                    timer.add(Phase::Forward, t0.elapsed());
+                    l
+                }
+                _ => zo_step(
+                    engine, params, &b.x, &b.y_onehot, cfg.batch, step, lr, cfg, &mut timer,
+                )?,
+            };
+            epoch_loss += loss as f64;
+            nbatches += 1;
+            step += 1;
+        }
+
+        let is_last = epoch + 1 == cfg.epochs;
+        let (test_loss, test_acc) = if epoch % cfg.eval_every == 0 || is_last {
+            let t0 = std::time::Instant::now();
+            let r = evaluate(engine, params, test_data, cfg.batch)?;
+            timer.add(Phase::Eval, t0.elapsed());
+            r
+        } else {
+            let prev = history.epochs.last();
+            (
+                prev.map(|e| e.test_loss).unwrap_or(f32::NAN),
+                prev.map(|e| e.test_acc).unwrap_or(0.0),
+            )
+        };
+
+        let stats = EpochStats {
+            epoch,
+            train_loss: (epoch_loss / nbatches.max(1) as f64) as f32,
+            test_loss,
+            train_acc: 0.0,
+            test_acc,
+            lr,
+            seconds: epoch_t0.elapsed().as_secs_f64(),
+        };
+        if cfg.verbose {
+            println!(
+                "[{}] epoch {:>3}  loss {:.4}  test_loss {:.4}  acc {:.2}%  lr {:.5}",
+                cfg.method.label(),
+                epoch,
+                stats.train_loss,
+                stats.test_loss,
+                stats.test_acc * 100.0,
+                lr
+            );
+        }
+        history.push(stats);
+    }
+
+    Ok(TrainResult { history, timer })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::native_engine::NativeEngine;
+    use crate::coordinator::params::Model;
+    use crate::data::synth_mnist;
+
+    fn tiny_cfg(method: Method, epochs: usize) -> TrainConfig {
+        TrainConfig {
+            method,
+            epochs,
+            batch: 16,
+            lr0: if method == Method::FullBp { 0.02 } else { 1e-3 },
+            eps: 1e-2,
+            g_clip: 5.0,
+            seed: 7,
+            eval_every: 1,
+            verbose: false,
+        }
+    }
+
+    #[test]
+    fn full_bp_learns_quickly() {
+        let train_d = synth_mnist::generate(256, 1);
+        let test_d = synth_mnist::generate(128, 2);
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 3);
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::FullBp, 3))
+            .unwrap();
+        assert!(r.history.best_test_acc() > 0.5, "acc {}", r.history.best_test_acc());
+        // loss must fall
+        assert!(r.history.epochs[2].train_loss < r.history.epochs[0].train_loss);
+    }
+
+    #[test]
+    fn zo_step_reduces_loss_in_expectation() {
+        // Full ZO is noisy; check the loss trend over a few epochs.
+        let train_d = synth_mnist::generate(128, 4);
+        let test_d = synth_mnist::generate(64, 5);
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 6);
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::FullZo, 4))
+            .unwrap();
+        let first = r.history.epochs.first().unwrap().train_loss;
+        let last = r.history.epochs.last().unwrap().train_loss;
+        assert!(last < first, "ZO loss should trend down: {first} -> {last}");
+    }
+
+    #[test]
+    fn cls1_trains_tail_and_zo() {
+        let train_d = synth_mnist::generate(192, 8);
+        let test_d = synth_mnist::generate(96, 9);
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 10);
+        let before_fc3 = params.data[8].clone();
+        let before_conv1 = params.data[0].clone();
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::Cls1, 2))
+            .unwrap();
+        assert_ne!(params.data[8], before_fc3, "BP tail must move");
+        assert_ne!(params.data[0], before_conv1, "ZO layers must move");
+        assert!(r.timer.total(Phase::BpBackward).as_nanos() > 0);
+        assert!(r.timer.total(Phase::ZoPerturb).as_nanos() > 0);
+    }
+
+    #[test]
+    fn forward_dominates_zo_time() {
+        // paper Fig. 7: forward passes dominate the step time
+        let train_d = synth_mnist::generate(64, 11);
+        let test_d = synth_mnist::generate(32, 12);
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 13);
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::Cls1, 1))
+            .unwrap();
+        let fwd = r.timer.total(Phase::Forward).as_secs_f64();
+        let zo = r.timer.total(Phase::ZoPerturb).as_secs_f64()
+            + r.timer.total(Phase::ZoUpdate).as_secs_f64();
+        assert!(fwd > zo, "forward {fwd} should dominate zo {zo}");
+    }
+}

@@ -1,0 +1,172 @@
+//! XLA engine: `Engine` implemented over the AOT artifacts (JAX/Pallas
+//! → HLO text → PJRT). This is the request-path configuration: python
+//! authored the computation once at build time; every call here is pure
+//! rust → PJRT.
+
+use super::engine::Engine;
+use super::params::{Model, ParamSet};
+use crate::nn::{Forward, TailGrads};
+use crate::runtime::{ArgValue, Registry};
+use anyhow::{bail, Context, Result};
+
+pub struct XlaEngine {
+    registry: Registry,
+    model: Model,
+    /// The static batch size baked into the artifacts being used.
+    bsz: usize,
+    fwd_name: String,
+    tail1_name: String,
+    tail2_name: String,
+    step_name: String,
+}
+
+impl XlaEngine {
+    pub fn new(registry: Registry, model: Model, bsz: usize) -> Result<XlaEngine> {
+        // Forward default: the `_fast` reference-ops lowering (same math,
+        // XLA-fused; see DESIGN.md §9). REPRO_PALLAS_FWD=1 forces the
+        // Pallas-kernel lowering (interpret-mode — slow on CPU PJRT, the
+        // TPU-shaped path) for parity checks.
+        let pallas_fwd = std::env::var("REPRO_PALLAS_FWD").is_ok();
+        let (fwd_name, tail1_name, tail2_name, step_name) = match model {
+            Model::LeNet => (
+                if pallas_fwd {
+                    format!("lenet_fwd_b{bsz}")
+                } else {
+                    format!("lenet_fwd_fast_b{bsz}")
+                },
+                format!("lenet_tail_c1_b{bsz}"),
+                format!("lenet_tail_c2_b{bsz}"),
+                format!("lenet_step_b{bsz}"),
+            ),
+            Model::PointNet { npoints, .. } => (
+                if pallas_fwd {
+                    format!("pointnet_fwd_n{npoints}_b{bsz}")
+                } else {
+                    format!("pointnet_fwd_fast_n{npoints}_b{bsz}")
+                },
+                format!("pointnet_tail_c1_n{npoints}_b{bsz}"),
+                format!("pointnet_tail_c2_n{npoints}_b{bsz}"),
+                format!("pointnet_step_n{npoints}_b{bsz}"),
+            ),
+        };
+        let mut eng = XlaEngine {
+            registry,
+            model,
+            bsz,
+            fwd_name,
+            tail1_name,
+            tail2_name,
+            step_name,
+        };
+        // Fail fast (and pre-compile) if the artifact set is missing.
+        eng.registry
+            .get(&eng.fwd_name.clone())
+            .with_context(|| format!("artifact for model {model:?} batch {bsz}"))?;
+        Ok(eng)
+    }
+
+    pub fn open_default(model: Model, bsz: usize) -> Result<XlaEngine> {
+        XlaEngine::new(Registry::open_default()?, model, bsz)
+    }
+
+    fn check_bsz(&self, bsz: usize) -> Result<()> {
+        if bsz != self.bsz {
+            bail!(
+                "XLA engine compiled for batch {}, called with {bsz} \
+                 (artifacts have static shapes)",
+                self.bsz
+            );
+        }
+        Ok(())
+    }
+
+    /// Tail-grad tensor indices for this model (ABI positions).
+    fn tail_indices(&self, k: usize) -> Vec<usize> {
+        let n = self.model.param_specs().len();
+        match k {
+            1 => vec![n - 2, n - 1],
+            2 => vec![n - 4, n - 3, n - 2, n - 1],
+            _ => unreachable!(),
+        }
+    }
+}
+
+impl Engine for XlaEngine {
+    fn forward(&mut self, params: &ParamSet, x: &[f32], y: &[f32], bsz: usize) -> Result<Forward> {
+        self.check_bsz(bsz)?;
+        let name = self.fwd_name.clone();
+        let exe = self.registry.get(&name)?;
+        let mut args: Vec<ArgValue> = params.data.iter().map(|p| ArgValue::F32(p)).collect();
+        args.push(ArgValue::F32(x));
+        args.push(ArgValue::F32(y));
+        let out = exe.run(&args)?;
+        Ok(Forward {
+            loss: out[0].scalar_f32()?,
+            logits: out[1].as_f32()?.to_vec(),
+            act_c2: out[2].as_f32()?.to_vec(),
+            act_c1: out[3].as_f32()?.to_vec(),
+        })
+    }
+
+    fn tail_grads(
+        &mut self,
+        params: &ParamSet,
+        fwd: &Forward,
+        y: &[f32],
+        k: usize,
+        bsz: usize,
+    ) -> Result<TailGrads> {
+        self.check_bsz(bsz)?;
+        let idxs = self.tail_indices(k);
+        let name = match k {
+            1 => self.tail1_name.clone(),
+            2 => self.tail2_name.clone(),
+            _ => bail!("tail_grads supports k in {{1,2}}"),
+        };
+        let exe = self.registry.get(&name)?;
+        // ABI: partition activation, then the BP'd params in order
+        // (c1 -> w,b of the last layer; c2 -> w,b,w,b of the last two),
+        // then the one-hot labels.
+        let mut args: Vec<ArgValue> = Vec::new();
+        let act = if k == 1 { &fwd.act_c1 } else { &fwd.act_c2 };
+        args.push(ArgValue::F32(act));
+        for &i in &idxs {
+            args.push(ArgValue::F32(&params.data[i]));
+        }
+        args.push(ArgValue::F32(y));
+        let out = exe.run(&args)?;
+        Ok(idxs
+            .into_iter()
+            .zip(out)
+            .map(|(i, o)| Ok((i, o.as_f32()?.to_vec())))
+            .collect::<Result<Vec<_>>>()?)
+    }
+
+    fn full_step(
+        &mut self,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[f32],
+        bsz: usize,
+        lr: f32,
+    ) -> Result<f32> {
+        self.check_bsz(bsz)?;
+        let name = self.step_name.clone();
+        let exe = self.registry.get(&name)?;
+        let lr_arr = [lr];
+        let mut args: Vec<ArgValue> = params.data.iter().map(|p| ArgValue::F32(p)).collect();
+        args.push(ArgValue::F32(x));
+        args.push(ArgValue::F32(y));
+        args.push(ArgValue::F32(&lr_arr));
+        let out = exe.run(&args)?;
+        let n = params.num_tensors();
+        for (i, o) in out[..n].iter().enumerate() {
+            params.data[i].copy_from_slice(o.as_f32()?);
+        }
+        out[n].scalar_f32()
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,115 @@
+//! The ZO engine: seed-trick perturbation and update, in place, over the
+//! ZO-trained prefix of a [`ParamSet`] (paper Alg. 1 lines 12–21).
+//!
+//! Every call regenerates the SAME Gaussian stream from `(run_seed,
+//! step)`, so `z` is never stored — the MeZO memory trick. One step
+//! makes four passes over the ZO parameters:
+//!
+//!   perturb(+ε) → forward(ℓ₊) → perturb(−2ε) → forward(ℓ₋)
+//!   → perturb(ε − η·g)   [merged restore + update, as the paper notes]
+
+use super::params::ParamSet;
+use crate::rng::ZoStream;
+
+/// θ[0..boundary] += scale · z, with z regenerated from (run_seed, step).
+pub fn perturb(params: &mut ParamSet, boundary: usize, run_seed: u64, step: u64, scale: f32) {
+    let mut stream = ZoStream::for_step(run_seed, step);
+    for tensor in &mut params.data[..boundary] {
+        for v in tensor.iter_mut() {
+            *v += scale * stream.normal();
+        }
+    }
+}
+
+/// The projected-gradient scalar g = (ℓ₊ − ℓ₋)/2ε, clipped (paper §5.1.1).
+pub fn projected_gradient(loss_plus: f32, loss_minus: f32, eps: f32, g_clip: f32) -> f32 {
+    let g = (loss_plus - loss_minus) / (2.0 * eps);
+    g.clamp(-g_clip, g_clip)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::params::Model;
+
+    #[test]
+    fn perturb_restore_roundtrip_exact_stream() {
+        // +ε then −ε with the same (seed, step) must reproduce the
+        // original parameters to f32 rounding (the same z is re-added).
+        let mut p = ParamSet::init(Model::LeNet, 3);
+        let orig = p.clone();
+        let b = p.zo_boundary(1);
+        perturb(&mut p, b, 7, 42, 1e-3);
+        perturb(&mut p, b, 7, 42, -1e-3);
+        for (t, (a, o)) in p.data.iter().zip(&orig.data).enumerate() {
+            for (x, y) in a.iter().zip(o) {
+                assert!((x - y).abs() <= 2.0 * f32::EPSILON * (1.0 + y.abs()), "tensor {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn mezo_three_phase_replay() {
+        // the actual training sequence: +ε, −2ε, +ε  → back to start
+        let mut p = ParamSet::init(Model::LeNet, 4);
+        let orig = p.clone();
+        let b = p.zo_boundary(0);
+        let eps = 1e-3;
+        perturb(&mut p, b, 9, 100, eps);
+        perturb(&mut p, b, 9, 100, -2.0 * eps);
+        perturb(&mut p, b, 9, 100, eps);
+        for (a, o) in p.data.iter().flatten().zip(orig.data.iter().flatten()) {
+            assert!((a - o).abs() <= 4.0 * f32::EPSILON * (1.0 + o.abs()));
+        }
+    }
+
+    #[test]
+    fn bp_suffix_untouched() {
+        let mut p = ParamSet::init(Model::LeNet, 5);
+        let orig = p.clone();
+        let b = p.zo_boundary(2);
+        perturb(&mut p, 1, 1, 1, 0.5); // only first tensor (boundary=1)
+        let _ = b;
+        for i in 1..p.num_tensors() {
+            assert_eq!(p.data[i], orig.data[i], "tensor {i} must be untouched");
+        }
+        assert_ne!(p.data[0], orig.data[0]);
+    }
+
+    #[test]
+    fn different_steps_different_z() {
+        let mut p1 = ParamSet::init(Model::LeNet, 6);
+        let mut p2 = p1.clone();
+        perturb(&mut p1, 10, 3, 1, 1e-2);
+        perturb(&mut p2, 10, 3, 2, 1e-2);
+        assert_ne!(p1.data, p2.data);
+    }
+
+    #[test]
+    fn projected_gradient_clip() {
+        assert_eq!(projected_gradient(1.0, 0.0, 0.001, 100.0), 100.0);
+        assert_eq!(projected_gradient(0.0, 1.0, 0.001, 100.0), -100.0);
+        let g = projected_gradient(0.5, 0.3, 0.01, 100.0);
+        assert!((g - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn merged_restore_update_equals_sequential() {
+        // θ + (ε − ηg)z  ==  (θ − εz) + εz − ηg·z
+        let mut merged = ParamSet::init(Model::LeNet, 8);
+        let mut seq = merged.clone();
+        let b = merged.zo_boundary(1);
+        let (eps, lr, g) = (1e-3f32, 0.01f32, 2.5f32);
+        // state right after the second forward is θ − εz for both
+        perturb(&mut merged, b, 11, 5, -eps);
+        perturb(&mut seq, b, 11, 5, -eps);
+        // merged path
+        perturb(&mut merged, b, 11, 5, eps - lr * g);
+        // sequential path: restore then update
+        perturb(&mut seq, b, 11, 5, eps);
+        perturb(&mut seq, b, 11, 5, -lr * g);
+        for (a, o) in merged.data.iter().flatten().zip(seq.data.iter().flatten()) {
+            assert!((a - o).abs() <= 1e-6 * (1.0 + o.abs()));
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Minibatch pipeline: epoch shuffling, fixed-size batch assembly and
+//! one-hot label encoding — the L3 data path feeding both engines.
+
+use super::Dataset;
+use crate::rng::Rng64;
+
+/// One assembled minibatch (row-major, engine-ready).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Flattened inputs, `bsz * sample_len`.
+    pub x: Vec<f32>,
+    /// One-hot labels, `bsz * nclass`.
+    pub y_onehot: Vec<f32>,
+    /// Raw labels.
+    pub labels: Vec<u8>,
+    pub bsz: usize,
+}
+
+/// Shuffled epoch iterator producing fixed-size batches.
+///
+/// The tail of the dataset is wrapped with samples from the epoch start
+/// so every batch has exactly `bsz` rows (the AOT artifacts have static
+/// batch shapes).
+pub struct Loader<'a> {
+    data: &'a Dataset,
+    bsz: usize,
+    order: Vec<usize>,
+    cursor: usize,
+}
+
+impl<'a> Loader<'a> {
+    pub fn new(data: &'a Dataset, bsz: usize, seed: u64, epoch: u64) -> Loader<'a> {
+        assert!(bsz > 0 && data.len() >= 1);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        let mut rng = Rng64::new(seed ^ epoch.wrapping_mul(0x9E37_79B9));
+        rng.shuffle(&mut order);
+        Loader { data, bsz, order, cursor: 0 }
+    }
+
+    /// Number of batches in one epoch (ceil so every sample is seen).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.data.len().div_ceil(self.bsz)
+    }
+
+    fn assemble(&self, idxs: &[usize]) -> Batch {
+        let sl = self.data.sample_len;
+        let nc = self.data.nclass;
+        let mut x = Vec::with_capacity(idxs.len() * sl);
+        let mut y = vec![0.0f32; idxs.len() * nc];
+        let mut labels = Vec::with_capacity(idxs.len());
+        for (row, &i) in idxs.iter().enumerate() {
+            x.extend_from_slice(self.data.sample(i));
+            let l = self.data.labels[i];
+            y[row * nc + l as usize] = 1.0;
+            labels.push(l);
+        }
+        Batch { x, y_onehot: y, labels, bsz: idxs.len() }
+    }
+}
+
+impl<'a> Iterator for Loader<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.cursor >= self.order.len() {
+            return None;
+        }
+        let end = self.cursor + self.bsz;
+        let mut idxs: Vec<usize> = self.order
+            [self.cursor..end.min(self.order.len())]
+            .to_vec();
+        // wrap the ragged tail so batch shape stays static
+        let mut wrap = 0;
+        while idxs.len() < self.bsz {
+            idxs.push(self.order[wrap % self.order.len()]);
+            wrap += 1;
+        }
+        self.cursor = end;
+        Some(self.assemble(&idxs))
+    }
+}
+
+/// Sequential (unshuffled) evaluation batches over a dataset.
+pub fn eval_batches(data: &Dataset, bsz: usize) -> Vec<Batch> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < data.len() {
+        let end = (i + bsz).min(data.len());
+        let mut idxs: Vec<usize> = (i..end).collect();
+        while idxs.len() < bsz {
+            idxs.push(idxs[idxs.len() - 1]); // pad by repeating; extra rows ignored via real_len
+        }
+        let loader = Loader { data, bsz, order: idxs.clone(), cursor: 0 };
+        let mut b = loader.assemble(&idxs);
+        b.bsz = end - i; // record real row count for accuracy masking
+        out.push(b);
+        i = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist;
+
+    #[test]
+    fn epoch_covers_all_samples() {
+        let d = synth_mnist::generate(50, 1);
+        let loader = Loader::new(&d, 8, 42, 0);
+        assert_eq!(loader.batches_per_epoch(), 7);
+        let mut seen = vec![false; 50];
+        for b in Loader::new(&d, 8, 42, 0) {
+            assert_eq!(b.x.len(), 8 * d.sample_len);
+            assert_eq!(b.y_onehot.len(), 8 * 10);
+            for &l in &b.labels {
+                assert!((l as usize) < 10);
+            }
+            let _ = &mut seen; // coverage checked via order below
+        }
+        // direct coverage check on the shuffle order
+        let l = Loader::new(&d, 8, 42, 0);
+        let mut sorted = l.order.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn onehot_is_consistent() {
+        let d = synth_mnist::generate(20, 2);
+        for b in Loader::new(&d, 4, 1, 0) {
+            for row in 0..4 {
+                let oh = &b.y_onehot[row * 10..(row + 1) * 10];
+                assert_eq!(oh.iter().sum::<f32>(), 1.0);
+                assert_eq!(oh[b.labels[row] as usize], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn epochs_shuffle_differently() {
+        let d = synth_mnist::generate(32, 3);
+        let o0 = Loader::new(&d, 8, 7, 0).order.clone();
+        let o1 = Loader::new(&d, 8, 7, 1).order.clone();
+        assert_ne!(o0, o1);
+        // but the same epoch replays identically
+        let o0b = Loader::new(&d, 8, 7, 0).order.clone();
+        assert_eq!(o0, o0b);
+    }
+
+    #[test]
+    fn ragged_tail_is_padded() {
+        let d = synth_mnist::generate(10, 4);
+        let batches: Vec<Batch> = Loader::new(&d, 8, 1, 0).collect();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[1].x.len(), 8 * d.sample_len); // padded to full
+    }
+
+    #[test]
+    fn eval_batches_cover_exactly() {
+        let d = synth_mnist::generate(21, 5);
+        let bs = eval_batches(&d, 8);
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[0].bsz, 8);
+        assert_eq!(bs[2].bsz, 5); // real rows in the tail batch
+        assert_eq!(bs[2].x.len(), 8 * d.sample_len); // padded storage
+    }
+}

@@ -1,0 +1,141 @@
+//! Dataset substrate: procedurally generated, deterministic, seedable
+//! stand-ins for the paper's datasets (the build box has no network
+//! access — see DESIGN.md §3 for the substitution argument).
+//!
+//! * [`synth_mnist`]  — stroke-rendered digit glyphs, 10 classes, 28×28.
+//! * [`synth_fashion`] — shape/texture composites, 10 classes, 28×28.
+//! * [`synth_modelnet`] — parametric 3-D surfaces, 40 classes, (N,3)
+//!   point clouds, unit-sphere normalized (PointNet input format).
+//! * [`rotate`] — the Rotated-(F)MNIST construction used by the paper's
+//!   fine-tuning study (Table 2): bilinear rotation by 30°/45°.
+//! * [`loader`] — shuffled minibatch iteration and one-hot assembly.
+
+pub mod loader;
+pub mod rotate;
+pub mod synth_fashion;
+pub mod synth_mnist;
+pub mod synth_modelnet;
+
+/// An in-memory classification dataset.
+///
+/// `x` is row-major: images are `(n, 1, 28, 28)` flattened, point clouds
+/// `(n, npoints, 3)` flattened. Values are f32 (images in [0,1]).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub sample_len: usize,
+    pub nclass: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.x[i * self.sample_len..(i + 1) * self.sample_len]
+    }
+
+    /// Split off the first `n` samples as one dataset, rest as another.
+    pub fn split_at(&self, n: usize) -> (Dataset, Dataset) {
+        assert!(n <= self.len());
+        let a = Dataset {
+            name: self.name.clone(),
+            x: self.x[..n * self.sample_len].to_vec(),
+            labels: self.labels[..n].to_vec(),
+            sample_len: self.sample_len,
+            nclass: self.nclass,
+        };
+        let b = Dataset {
+            name: self.name.clone(),
+            x: self.x[n * self.sample_len..].to_vec(),
+            labels: self.labels[n..].to_vec(),
+            sample_len: self.sample_len,
+            nclass: self.nclass,
+        };
+        (a, b)
+    }
+
+    /// Class histogram (for balance checks).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.nclass];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Which synthetic dataset to generate (config-level enum).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    SynthMnist,
+    SynthFashion,
+    SynthModelNet,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> anyhow::Result<DatasetKind> {
+        match s {
+            "mnist" | "synth-mnist" => Ok(DatasetKind::SynthMnist),
+            "fashion" | "fashion-mnist" | "synth-fashion" => Ok(DatasetKind::SynthFashion),
+            "modelnet" | "modelnet40" | "synth-modelnet" => Ok(DatasetKind::SynthModelNet),
+            other => anyhow::bail!("unknown dataset '{other}'"),
+        }
+    }
+}
+
+/// Generate `(train, test)` splits for a dataset kind.
+pub fn generate(
+    kind: DatasetKind,
+    train_n: usize,
+    test_n: usize,
+    seed: u64,
+    npoints: usize,
+) -> (Dataset, Dataset) {
+    match kind {
+        DatasetKind::SynthMnist => (
+            synth_mnist::generate(train_n, seed),
+            synth_mnist::generate(test_n, seed ^ 0xDEAD_BEEF),
+        ),
+        DatasetKind::SynthFashion => (
+            synth_fashion::generate(train_n, seed),
+            synth_fashion::generate(test_n, seed ^ 0xDEAD_BEEF),
+        ),
+        DatasetKind::SynthModelNet => (
+            synth_modelnet::generate(train_n, npoints, seed),
+            synth_modelnet::generate(test_n, npoints, seed ^ 0xDEAD_BEEF),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_preserves_samples() {
+        let d = synth_mnist::generate(20, 1);
+        let (a, b) = d.split_at(5);
+        assert_eq!(a.len(), 5);
+        assert_eq!(b.len(), 15);
+        assert_eq!(a.sample(0), d.sample(0));
+        assert_eq!(b.sample(0), d.sample(5));
+    }
+
+    #[test]
+    fn kinds_parse() {
+        assert_eq!(DatasetKind::parse("mnist").unwrap(), DatasetKind::SynthMnist);
+        assert_eq!(
+            DatasetKind::parse("fashion-mnist").unwrap(),
+            DatasetKind::SynthFashion
+        );
+        assert!(DatasetKind::parse("imagenet").is_err());
+    }
+}

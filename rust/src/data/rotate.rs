@@ -1,0 +1,120 @@
+//! Rotated-(F)MNIST construction (paper Table 2): rotate every image of
+//! a dataset by a fixed angle with bilinear resampling about the image
+//! centre — the distribution-shift fine-tuning target.
+
+use super::Dataset;
+
+/// Bilinear sample with zero padding outside the image.
+fn bilinear(img: &[f32], side: usize, x: f32, y: f32) -> f32 {
+    if x < -1.0 || y < -1.0 || x > side as f32 || y > side as f32 {
+        return 0.0;
+    }
+    let x0 = x.floor() as isize;
+    let y0 = y.floor() as isize;
+    let fx = x - x0 as f32;
+    let fy = y - y0 as f32;
+    let get = |ix: isize, iy: isize| -> f32 {
+        if ix < 0 || iy < 0 || ix >= side as isize || iy >= side as isize {
+            0.0
+        } else {
+            img[iy as usize * side + ix as usize]
+        }
+    };
+    let a = get(x0, y0) * (1.0 - fx) + get(x0 + 1, y0) * fx;
+    let b = get(x0, y0 + 1) * (1.0 - fx) + get(x0 + 1, y0 + 1) * fx;
+    a * (1.0 - fy) + b * fy
+}
+
+/// Rotate one `side`×`side` image by `deg` degrees (counter-clockwise).
+pub fn rotate_image(img: &[f32], side: usize, deg: f32) -> Vec<f32> {
+    let rad = deg.to_radians();
+    let (s, c) = rad.sin_cos();
+    let ctr = (side as f32 - 1.0) / 2.0;
+    let mut out = vec![0.0f32; side * side];
+    for iy in 0..side {
+        for ix in 0..side {
+            // inverse mapping: destination -> source
+            let dx = ix as f32 - ctr;
+            let dy = iy as f32 - ctr;
+            let sx = c * dx + s * dy + ctr;
+            let sy = -s * dx + c * dy + ctr;
+            out[iy * side + ix] = bilinear(img, side, sx, sy);
+        }
+    }
+    out
+}
+
+/// Rotate a whole image dataset (28×28 layout assumed from sample_len).
+pub fn rotate_dataset(d: &Dataset, deg: f32) -> Dataset {
+    let side = (d.sample_len as f64).sqrt() as usize;
+    assert_eq!(side * side, d.sample_len, "not a square image dataset");
+    let mut x = Vec::with_capacity(d.x.len());
+    for i in 0..d.len() {
+        x.extend(rotate_image(d.sample(i), side, deg));
+    }
+    Dataset {
+        name: format!("{}-rot{}", d.name, deg as i32),
+        x,
+        labels: d.labels.clone(),
+        sample_len: d.sample_len,
+        nclass: d.nclass,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist;
+
+    #[test]
+    fn zero_rotation_is_near_identity() {
+        let d = synth_mnist::generate(4, 1);
+        let r = rotate_dataset(&d, 0.0);
+        for (a, b) in d.x.iter().zip(&r.x) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_mass_roughly() {
+        let d = synth_mnist::generate(8, 2);
+        let r = rotate_dataset(&d, 30.0);
+        for i in 0..8 {
+            let m0: f32 = d.sample(i).iter().sum();
+            let m1: f32 = r.sample(i).iter().sum();
+            // some ink rotates out of frame; most mass survives
+            assert!(m1 > m0 * 0.6 && m1 < m0 * 1.2, "m0 {m0} m1 {m1}");
+        }
+    }
+
+    #[test]
+    fn four_quarter_turns_roundtrip() {
+        let d = synth_mnist::generate(2, 3);
+        let mut img = d.sample(0).to_vec();
+        for _ in 0..4 {
+            img = rotate_image(&img, 28, 90.0);
+        }
+        let err: f32 = img
+            .iter()
+            .zip(d.sample(0))
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / img.len() as f32;
+        assert!(err < 0.02, "roundtrip err {err}");
+    }
+
+    #[test]
+    fn rotation_changes_distribution() {
+        let d = synth_mnist::generate(8, 4);
+        let r = rotate_dataset(&d, 45.0);
+        let dist: f32 = d.x.iter().zip(&r.x).map(|(a, b)| (a - b).abs()).sum();
+        assert!(dist / d.x.len() as f32 > 0.02);
+    }
+
+    #[test]
+    fn labels_unchanged() {
+        let d = synth_mnist::generate(16, 5);
+        let r = rotate_dataset(&d, 45.0);
+        assert_eq!(d.labels, r.labels);
+    }
+}

@@ -1,0 +1,157 @@
+//! SynthFashion: shape/texture composites standing in for Fashion-MNIST.
+//!
+//! Each class pairs a filled silhouette (drawn from rectangles,
+//! trapezoids and bar pairs arranged like garment outlines) with a
+//! texture (solid, stripes at two orientations, checker). Harder than
+//! SynthMNIST — silhouettes overlap more — mirroring the MNIST →
+//! Fashion-MNIST difficulty step in the paper's Table 1.
+
+use super::Dataset;
+use crate::rng::Rng64;
+
+pub const SIDE: usize = 28;
+pub const SAMPLE_LEN: usize = SIDE * SIDE;
+
+/// Axis-aligned box in unit coords (x0,y0,x1,y1).
+type Box4 = (f32, f32, f32, f32);
+
+/// Garment-ish silhouettes: boxes composing each class outline.
+fn silhouette(class: u8) -> Vec<Box4> {
+    match class {
+        // t-shirt: wide torso + two short sleeves
+        0 => vec![(0.3, 0.25, 0.7, 0.85), (0.1, 0.25, 0.3, 0.45), (0.7, 0.25, 0.9, 0.45)],
+        // trouser: two legs + waistband
+        1 => vec![(0.3, 0.2, 0.48, 0.9), (0.52, 0.2, 0.7, 0.9), (0.3, 0.12, 0.7, 0.24)],
+        // pullover: torso + long sleeves
+        2 => vec![(0.3, 0.2, 0.7, 0.85), (0.08, 0.2, 0.3, 0.75), (0.7, 0.2, 0.92, 0.75)],
+        // dress: narrow top, wide bottom (two stacked boxes)
+        3 => vec![(0.38, 0.15, 0.62, 0.5), (0.25, 0.5, 0.75, 0.92)],
+        // coat: wide torso + sleeves + collar gap (center slit)
+        4 => vec![(0.25, 0.18, 0.47, 0.9), (0.53, 0.18, 0.75, 0.9), (0.08, 0.2, 0.25, 0.7), (0.75, 0.2, 0.92, 0.7)],
+        // sandal: two thin horizontal straps + sole
+        5 => vec![(0.15, 0.72, 0.85, 0.85), (0.2, 0.45, 0.8, 0.53), (0.3, 0.25, 0.7, 0.33)],
+        // shirt: torso + sleeves + button strip
+        6 => vec![(0.3, 0.2, 0.7, 0.85), (0.12, 0.2, 0.3, 0.6), (0.7, 0.2, 0.88, 0.6), (0.47, 0.2, 0.53, 0.85)],
+        // sneaker: low wedge + toe box
+        7 => vec![(0.1, 0.55, 0.9, 0.8), (0.55, 0.42, 0.9, 0.55)],
+        // bag: body + handle (thin top bar)
+        8 => vec![(0.2, 0.4, 0.8, 0.88), (0.35, 0.2, 0.65, 0.28)],
+        // ankle boot: shaft + foot
+        9 => vec![(0.35, 0.15, 0.65, 0.6), (0.35, 0.6, 0.9, 0.85)],
+        _ => unreachable!("class out of range"),
+    }
+}
+
+/// Texture id per class (fixed so texture is a class-informative cue).
+fn texture(class: u8) -> u8 {
+    class % 4 // 0 solid, 1 h-stripes, 2 v-stripes, 3 checker
+}
+
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng64::new(seed ^ 0x4641_5348); // "FASH"
+    let mut x = vec![0.0f32; n * SAMPLE_LEN];
+    let mut labels = vec![0u8; n];
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    for (slot, &i) in order.iter().enumerate() {
+        let class = (i % 10) as u8;
+        labels[slot] = class;
+        let boxes = silhouette(class);
+        let tex = texture(class);
+        let jx = (rng.uniform() - 0.5) * 0.1;
+        let jy = (rng.uniform() - 0.5) * 0.1;
+        let scale = 0.85 + rng.uniform() * 0.3;
+        let phase = rng.uniform() * 4.0;
+        let stripe_w = 2.0 + rng.uniform() * 2.0;
+        let out = &mut x[slot * SAMPLE_LEN..(slot + 1) * SAMPLE_LEN];
+        for iy in 0..SIDE {
+            for ix in 0..SIDE {
+                let ux = ((ix as f32 + 0.5) / SIDE as f32 - 0.5 - jx) / scale + 0.5;
+                let uy = ((iy as f32 + 0.5) / SIDE as f32 - 0.5 - jy) / scale + 0.5;
+                let inside = boxes
+                    .iter()
+                    .any(|&(x0, y0, x1, y1)| ux >= x0 && ux < x1 && uy >= y0 && uy < y1);
+                let mut v = if inside {
+                    match tex {
+                        0 => 0.85,
+                        1 => {
+                            if ((iy as f32 / stripe_w + phase) as i32) % 2 == 0 {
+                                0.9
+                            } else {
+                                0.45
+                            }
+                        }
+                        2 => {
+                            if ((ix as f32 / stripe_w + phase) as i32) % 2 == 0 {
+                                0.9
+                            } else {
+                                0.45
+                            }
+                        }
+                        _ => {
+                            let a = ((ix as f32 / stripe_w + phase) as i32) % 2;
+                            let b = ((iy as f32 / stripe_w + phase) as i32) % 2;
+                            if a == b {
+                                0.9
+                            } else {
+                                0.4
+                            }
+                        }
+                    }
+                } else {
+                    0.05
+                };
+                v += (rng.uniform() - 0.5) * 0.1;
+                out[iy * SIDE + ix] = v.clamp(0.0, 1.0);
+            }
+        }
+    }
+    Dataset {
+        name: "synth-fashion".into(),
+        x,
+        labels,
+        sample_len: SAMPLE_LEN,
+        nclass: 10,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let a = generate(40, 9);
+        let b = generate(40, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.class_counts(), vec![4; 10]);
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        let d = generate(32, 5);
+        assert!(d.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn silhouettes_cover_all_classes() {
+        for c in 0..10u8 {
+            assert!(!silhouette(c).is_empty());
+        }
+    }
+
+    #[test]
+    fn different_classes_differ() {
+        let d = generate(20, 6);
+        // find a class-0 and class-1 sample and check they differ a lot
+        let i0 = d.labels.iter().position(|&l| l == 0).unwrap();
+        let i1 = d.labels.iter().position(|&l| l == 1).unwrap();
+        let dist: f32 = d
+            .sample(i0)
+            .iter()
+            .zip(d.sample(i1))
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(dist > 20.0, "dist {dist}");
+    }
+}

@@ -1,0 +1,208 @@
+//! SynthMNIST: procedurally rendered digit glyphs.
+//!
+//! Each class is a digit skeleton (polyline set on a 7-segment-style
+//! grid, plus diagonals for 2/4/7) rendered into 28×28 with a random
+//! affine jitter (translation, rotation, scale), stroke-thickness
+//! variation and additive noise. The task is 10-class, linearly
+//! non-separable, and learnable to high accuracy — the same loss-surface
+//! character as MNIST at identical tensor shapes (DESIGN.md §3).
+
+use super::Dataset;
+use crate::rng::Rng64;
+
+pub const SIDE: usize = 28;
+pub const SAMPLE_LEN: usize = SIDE * SIDE;
+
+type Seg = ((f32, f32), (f32, f32));
+
+/// Segment endpoints on the unit glyph box (x right, y down).
+/// 7-seg layout: A top, B top-right, C bottom-right, D bottom,
+/// E bottom-left, F top-left, G middle.
+const A: Seg = ((0.1, 0.0), (0.9, 0.0));
+const B: Seg = ((0.9, 0.0), (0.9, 0.5));
+const C: Seg = ((0.9, 0.5), (0.9, 1.0));
+const D: Seg = ((0.1, 1.0), (0.9, 1.0));
+const E: Seg = ((0.1, 0.5), (0.1, 1.0));
+const F: Seg = ((0.1, 0.0), (0.1, 0.5));
+const G: Seg = ((0.1, 0.5), (0.9, 0.5));
+/// Diagonals that break 7-segment symmetry (more MNIST-like).
+const DIAG2: Seg = ((0.9, 0.5), (0.1, 1.0)); // the '2' slash
+const DIAG7: Seg = ((0.9, 0.0), (0.3, 1.0)); // the '7' leg
+const STEM1: Seg = ((0.5, 0.0), (0.5, 1.0)); // the '1' stem
+const SERIF1: Seg = ((0.3, 0.2), (0.5, 0.0)); // the '1' serif
+
+/// Digit skeletons.
+fn glyph(digit: u8) -> Vec<Seg> {
+    match digit {
+        0 => vec![A, B, C, D, E, F],
+        1 => vec![STEM1, SERIF1],
+        2 => vec![A, B, G, DIAG2, D],
+        3 => vec![A, B, G, C, D],
+        4 => vec![F, G, B, C],
+        5 => vec![A, F, G, C, D],
+        6 => vec![A, F, G, E, D, C],
+        7 => vec![A, DIAG7],
+        8 => vec![A, B, C, D, E, F, G],
+        9 => vec![A, B, F, G, C, D],
+        _ => unreachable!("digit out of range"),
+    }
+}
+
+fn dist_to_seg(px: f32, py: f32, seg: &Seg) -> f32 {
+    let ((x1, y1), (x2, y2)) = *seg;
+    let (dx, dy) = (x2 - x1, y2 - y1);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 {
+        (((px - x1) * dx + (py - y1) * dy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (cx, cy) = (x1 + t * dx, y1 + t * dy);
+    ((px - cx).powi(2) + (py - cy).powi(2)).sqrt()
+}
+
+/// Render one digit with the given jitter parameters into `out` (28×28).
+#[allow(clippy::too_many_arguments)]
+fn render(
+    out: &mut [f32],
+    digit: u8,
+    cx_off: f32,
+    cy_off: f32,
+    angle: f32,
+    scale: f32,
+    thickness: f32,
+    rng: &mut Rng64,
+) {
+    let segs = glyph(digit);
+    let (sin, cos) = angle.sin_cos();
+    for iy in 0..SIDE {
+        for ix in 0..SIDE {
+            // Pixel centre in glyph coordinates: un-jitter, un-rotate.
+            let gx = (ix as f32 + 0.5) / SIDE as f32 - 0.5 - cx_off;
+            let gy = (iy as f32 + 0.5) / SIDE as f32 - 0.5 - cy_off;
+            let rx = (gx * cos + gy * sin) / scale + 0.5;
+            let ry = (-gx * sin + gy * cos) / scale + 0.5;
+            // Glyph box occupies the central 60% of the image.
+            let ux = (rx - 0.2) / 0.6;
+            let uy = (ry - 0.2) / 0.6;
+            let d = segs
+                .iter()
+                .map(|s| dist_to_seg(ux, uy, s))
+                .fold(f32::INFINITY, f32::min);
+            // Soft stroke edge + mild speckle noise.
+            let ink = (1.0 - (d - thickness) / 0.06).clamp(0.0, 1.0);
+            let noise = (rng.uniform() - 0.5) * 0.08;
+            out[iy * SIDE + ix] = (ink + noise).clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Generate `n` labelled samples (round-robin over classes, shuffled).
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng64::new(seed ^ 0x5947_4D4E); // "MNIS"
+    let mut x = vec![0.0f32; n * SAMPLE_LEN];
+    let mut labels = vec![0u8; n];
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    for (slot, &i) in order.iter().enumerate() {
+        let digit = (i % 10) as u8;
+        labels[slot] = digit;
+        let cx = (rng.uniform() - 0.5) * 0.12;
+        let cy = (rng.uniform() - 0.5) * 0.12;
+        let angle = (rng.uniform() - 0.5) * 0.35; // ±10°
+        let scale = 0.85 + rng.uniform() * 0.3;
+        let thickness = 0.05 + rng.uniform() * 0.06;
+        render(
+            &mut x[slot * SAMPLE_LEN..(slot + 1) * SAMPLE_LEN],
+            digit,
+            cx,
+            cy,
+            angle,
+            scale,
+            thickness,
+            &mut rng,
+        );
+    }
+    Dataset {
+        name: "synth-mnist".into(),
+        x,
+        labels,
+        sample_len: SAMPLE_LEN,
+        nclass: 10,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(32, 7);
+        let b = generate(32, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = generate(32, 7);
+        let b = generate(32, 8);
+        assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        let d = generate(64, 1);
+        assert!(d.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let d = generate(100, 2);
+        let counts = d.class_counts();
+        assert_eq!(counts, vec![10; 10]);
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean inter-class L2 distance must exceed mean intra-class
+        // distance — otherwise the task is unlearnable.
+        let d = generate(200, 3);
+        let mut intra = (0.0f64, 0usize);
+        let mut inter = (0.0f64, 0usize);
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let dist: f64 = d
+                    .sample(i)
+                    .iter()
+                    .zip(d.sample(j))
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                if d.labels[i] == d.labels[j] {
+                    intra.0 += dist;
+                    intra.1 += 1;
+                } else {
+                    inter.0 += dist;
+                    inter.1 += 1;
+                }
+            }
+        }
+        let intra_mean = intra.0 / intra.1.max(1) as f64;
+        let inter_mean = inter.0 / inter.1.max(1) as f64;
+        assert!(
+            inter_mean > intra_mean * 1.15,
+            "inter {inter_mean} vs intra {intra_mean}"
+        );
+    }
+
+    #[test]
+    fn glyphs_have_ink() {
+        let d = generate(20, 4);
+        for i in 0..20 {
+            let ink: f32 = d.sample(i).iter().sum();
+            assert!(ink > 10.0, "sample {i} nearly blank");
+        }
+    }
+}

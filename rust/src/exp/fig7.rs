@@ -1,0 +1,112 @@
+//! Fig. 7: execution-time breakdown of the native engine (the paper's
+//! C++-on-RasPi counterpart): per-phase fractions for Full ZO /
+//! ZO-Feat-Cls2 / ZO-Feat-Cls1, FP32 (left) and INT8 (right).
+//!
+//! Shape checks (paper §5.4): forward passes dominate (84–97%); BP tail
+//! is negligible (<2.5%); INT8 runs ~1.4× faster per epoch than FP32;
+//! ZO perturb+update is a visible slice in FP32 (~12%) but ~1% in INT8.
+
+use super::{dump_result, Scale};
+use crate::coordinator::engine::Method;
+use crate::coordinator::int8_trainer::{self, Int8TrainConfig, ZoGradMode};
+use crate::coordinator::native_engine::NativeEngine;
+use crate::coordinator::trainer::{self, TrainConfig};
+use crate::coordinator::{Model, ParamSet};
+use crate::data::{self, DatasetKind};
+use crate::int8::lenet8;
+use crate::telemetry::{Phase, PhaseTimer};
+use crate::util::json::Value;
+use crate::util::table::{pct, Table};
+use anyhow::Result;
+
+fn breakdown_cells(label: &str, timer: &PhaseTimer, seconds: f64) -> Vec<String> {
+    let frac = |p: Phase| pct(timer.total(p).as_secs_f64() / timer.grand_total().as_secs_f64());
+    vec![
+        label.to_string(),
+        format!("{seconds:.2}s"),
+        frac(Phase::Forward),
+        frac(Phase::ZoPerturb),
+        frac(Phase::ZoUpdate),
+        frac(Phase::BpBackward),
+        frac(Phase::Loss),
+        frac(Phase::Eval),
+    ]
+}
+
+pub fn run(scale: Scale) -> Result<()> {
+    let epochs = match scale {
+        Scale::Fast => 1,
+        _ => 2,
+    };
+    let n = scale.train_n().min(1024);
+    let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, n, 128, 7, 0);
+
+    let header = ["method", "epoch time", "Forward", "ZO Perturb", "ZO Update",
+                  "BP", "Loss", "Eval"];
+    let mut json_out: Vec<Value> = Vec::new();
+
+    // ---- FP32 (native engine) --------------------------------------
+    let mut t = Table::new("Fig 7 (left): FP32 native-engine time breakdown", &header);
+    let mut fp32_epoch_secs = 0.0;
+    for method in [Method::FullZo, Method::Cls2, Method::Cls1] {
+        let mut engine = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 1);
+        let cfg = TrainConfig { method, epochs, batch: 32, ..Default::default() };
+        let r = trainer::train(&mut engine, &mut params, &train_d, &test_d, &cfg)?;
+        let secs: f64 = r.history.epochs.iter().map(|e| e.seconds).sum::<f64>()
+            / r.history.epochs.len() as f64;
+        if method == Method::FullZo {
+            fp32_epoch_secs = secs;
+        }
+        t.row(&breakdown_cells(method.label(), &r.timer, secs));
+        json_out.push(Value::obj(vec![
+            ("precision", Value::str("fp32")),
+            ("method", Value::str(method.label())),
+            ("epoch_seconds", Value::num(secs)),
+            ("forward_frac", Value::num(
+                r.timer.total(Phase::Forward).as_secs_f64()
+                    / r.timer.grand_total().as_secs_f64(),
+            )),
+        ]));
+    }
+    t.print();
+
+    // ---- INT8 (native NITI engine) ---------------------------------
+    let mut t = Table::new("Fig 7 (right): INT8 native-engine time breakdown", &header);
+    let mut int8_epoch_secs = 0.0;
+    for method in [Method::FullZo, Method::Cls2, Method::Cls1] {
+        let mut ws = lenet8::init_params(2, 32);
+        let cfg = Int8TrainConfig {
+            method,
+            grad_mode: ZoGradMode::IntCE,
+            epochs,
+            batch: 32,
+            ..Default::default()
+        };
+        let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &cfg)?;
+        let secs: f64 = r.history.epochs.iter().map(|e| e.seconds).sum::<f64>()
+            / r.history.epochs.len() as f64;
+        if method == Method::FullZo {
+            int8_epoch_secs = secs;
+        }
+        t.row(&breakdown_cells(method.label(), &r.timer, secs));
+        json_out.push(Value::obj(vec![
+            ("precision", Value::str("int8")),
+            ("method", Value::str(method.label())),
+            ("epoch_seconds", Value::num(secs)),
+        ]));
+    }
+    t.print();
+
+    if int8_epoch_secs > 0.0 {
+        println!(
+            "   FP32/INT8 epoch-time ratio (Full ZO): {:.2}x (paper: 1.38-1.42x)",
+            fp32_epoch_secs / int8_epoch_secs
+        );
+        json_out.push(Value::obj(vec![(
+            "fp32_over_int8_epoch_time",
+            Value::num(fp32_epoch_secs / int8_epoch_secs),
+        )]));
+    }
+    dump_result("fig7", &Value::Arr(json_out))
+}

@@ -1,0 +1,85 @@
+//! Figs. 2–3: training/test loss curves of LeNet-5 over epochs for the
+//! four methods — FP32 (fig2) and INT8 (fig3). Prints per-epoch series
+//! and dumps the full curves as JSON (plot-ready).
+//!
+//! Shape check: ElasticZO (Cls1/Cls2) converges visibly faster than
+//! Full ZO and approaches Full BP; the INT8 hybrid has much lower loss
+//! than INT8 Full ZO at early epochs.
+
+use super::{dump_result, run_fp32, run_int8, Scale};
+use crate::coordinator::engine::{EngineKind, Method};
+use crate::coordinator::int8_trainer::ZoGradMode;
+use crate::coordinator::metrics::History;
+use crate::coordinator::Model;
+use crate::data::DatasetKind;
+use crate::util::json::Value;
+use anyhow::Result;
+
+fn curves_json(histories: &[History]) -> Value {
+    Value::Arr(histories.iter().map(|h| h.to_json()).collect())
+}
+
+fn print_curves(title: &str, histories: &[History]) {
+    println!("## {title}");
+    // header
+    print!("{:<7}", "epoch");
+    for h in histories {
+        print!(" | {:^21}", h.label);
+    }
+    println!();
+    let max_epochs = histories.iter().map(|h| h.epochs.len()).max().unwrap_or(0);
+    for e in 0..max_epochs {
+        print!("{e:<7}");
+        for h in histories {
+            match h.epochs.get(e) {
+                Some(s) => print!(" | tr {:>7.4} te {:>7.4}", s.train_loss, s.test_loss),
+                None => print!(" | {:^21}", "-"),
+            }
+        }
+        println!();
+    }
+}
+
+pub fn run_fig2(scale: Scale, engine: EngineKind) -> Result<()> {
+    for (name, kind) in [
+        ("SynthMNIST", DatasetKind::SynthMnist),
+        ("SynthFashion", DatasetKind::SynthFashion),
+    ] {
+        let mut histories = Vec::new();
+        for method in Method::ALL {
+            let r = run_fp32(
+                Model::LeNet, kind, method, engine,
+                scale.fp32_epochs(), 32, scale.train_n(), scale.test_n(), 42,
+            )?;
+            histories.push(r.history);
+        }
+        print_curves(&format!("Fig 2 ({name}, FP32 loss curves)"), &histories);
+        dump_result(
+            &format!("fig2_{}", name.to_lowercase()),
+            &curves_json(&histories),
+        )?;
+    }
+    Ok(())
+}
+
+pub fn run_fig3(scale: Scale) -> Result<()> {
+    for (name, kind) in [
+        ("SynthMNIST", DatasetKind::SynthMnist),
+        ("SynthFashion", DatasetKind::SynthFashion),
+    ] {
+        let mut histories = Vec::new();
+        for method in Method::ALL {
+            let r = run_int8(
+                kind, method, ZoGradMode::FloatCE,
+                scale.int8_epochs(), 32, scale.train_n(), scale.test_n(), 43,
+            )?;
+            histories.push(r.history);
+        }
+        print_curves(&format!("Fig 3 ({name}, INT8 loss curves)"), &histories);
+        dump_result(
+            &format!("fig3_{}", name.to_lowercase()),
+            &curves_json(&histories),
+        )?;
+    }
+    Ok(())
+}

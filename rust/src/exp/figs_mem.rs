@@ -1,0 +1,121 @@
+//! Figs. 4–6: memory-usage breakdowns from the analytic model (paper
+//! Eqs. 2–4 for FP32, 13–15 for INT8) — exact, no training required.
+//!
+//! Shape checks (paper §5.3): Full BP = 2× Full ZO (FP32); Cls1/Cls2
+//! overheads ≈ +0.07–2.4%; INT8 saves 1.46–1.60× (not 4×, because of
+//! int32 scratch); PointNet activations dominate (>99%).
+
+use super::dump_result;
+use crate::coordinator::engine::Method;
+use crate::memory::{self, models, Breakdown};
+use crate::util::json::Value;
+use crate::util::table::{bytes, pct, Table};
+use anyhow::Result;
+
+fn row(label: &str, b: &Breakdown, base_total: Option<usize>) -> Vec<String> {
+    let over = match base_total {
+        Some(base) if b.total() >= base => {
+            format!("+{}", pct((b.total() - base) as f64 / base as f64))
+        }
+        _ => "-".to_string(),
+    };
+    vec![
+        label.to_string(),
+        bytes(b.params),
+        bytes(b.acts),
+        bytes(b.grads),
+        bytes(b.errors),
+        bytes(b.int32_scratch),
+        bytes(b.total()),
+        over,
+    ]
+}
+
+fn breakdown_json(b: &Breakdown) -> Value {
+    Value::obj(vec![
+        ("params", Value::num(b.params as f64)),
+        ("acts", Value::num(b.acts as f64)),
+        ("grads", Value::num(b.grads as f64)),
+        ("errors", Value::num(b.errors as f64)),
+        ("int32_scratch", Value::num(b.int32_scratch as f64)),
+        ("total", Value::num(b.total() as f64)),
+    ])
+}
+
+const HEADER: [&str; 8] = ["method", "params", "acts", "grads", "errors", "int32", "total", "vs ZO"];
+
+pub fn run_fig4() -> Result<()> {
+    let layers = models::lenet_layers();
+    let mut out = Vec::new();
+    for batch in [32usize, 256] {
+        let mut t = Table::new(&format!("Fig 4: LeNet-5 FP32 memory, B={batch}"), &HEADER);
+        let zo_total = memory::fp32(&layers, batch, Method::FullZo.memory_method(), false).total();
+        for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+            let b = memory::fp32(&layers, batch, m.memory_method(), false);
+            t.row(&row(m.label(), &b, Some(zo_total)));
+            out.push(Value::obj(vec![
+                ("batch", Value::num(batch as f64)),
+                ("method", Value::str(m.label())),
+                ("breakdown", breakdown_json(&b)),
+            ]));
+        }
+        t.print();
+    }
+    dump_result("fig4", &Value::Arr(out))
+}
+
+pub fn run_fig5() -> Result<()> {
+    let layers = models::lenet_int8_layers();
+    let fp_layers = models::lenet_layers();
+    let mut out = Vec::new();
+    for batch in [32usize, 256] {
+        let mut t = Table::new(&format!("Fig 5: LeNet-5 INT8 memory, B={batch}"), &HEADER);
+        let zo_total = memory::int8(&layers, batch, Method::FullZo.memory_method()).total();
+        for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+            let b = memory::int8(&layers, batch, m.memory_method());
+            t.row(&row(m.label(), &b, Some(zo_total)));
+            let fp = memory::fp32(&fp_layers, batch, m.memory_method(), false);
+            out.push(Value::obj(vec![
+                ("batch", Value::num(batch as f64)),
+                ("method", Value::str(m.label())),
+                ("breakdown", breakdown_json(&b)),
+                ("fp32_over_int8", Value::num(fp.total() as f64 / b.total() as f64)),
+            ]));
+        }
+        t.print();
+        // the paper's headline: INT8 saves 1.46-1.60x vs FP32
+        for m in [Method::FullZo, Method::Cls2, Method::Cls1] {
+            let f = memory::fp32(&fp_layers, batch, m.memory_method(), false).total();
+            let i = memory::int8(&layers, batch, m.memory_method()).total();
+            println!(
+                "   {} B={batch}: FP32/INT8 = {:.2}x (paper: 1.46-1.60x)",
+                m.label(),
+                f as f64 / i as f64
+            );
+        }
+    }
+    dump_result("fig5", &Value::Arr(out))
+}
+
+pub fn run_fig6() -> Result<()> {
+    let layers = models::pointnet_layers(1024, 40);
+    let mut out = Vec::new();
+    let batch = 32;
+    let mut t = Table::new("Fig 6: PointNet FP32 memory, B=32, N=1024", &HEADER);
+    let zo_total = memory::fp32(&layers, batch, Method::FullZo.memory_method(), false).total();
+    for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+        let b = memory::fp32(&layers, batch, m.memory_method(), false);
+        t.row(&row(m.label(), &b, Some(zo_total)));
+        out.push(Value::obj(vec![
+            ("method", Value::str(m.label())),
+            ("breakdown", breakdown_json(&b)),
+        ]));
+    }
+    t.print();
+    let e2 = memory::fp32(&layers, batch, Method::Cls2.memory_method(), false);
+    println!(
+        "   activations+errors share (Cls2): {} (paper: 99.4%)",
+        pct((e2.acts + e2.errors) as f64 / e2.total() as f64)
+    );
+    dump_result("fig6", &Value::Arr(out))
+}

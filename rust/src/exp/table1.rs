@@ -1,0 +1,103 @@
+//! Table 1: classification accuracy of LeNet-5 (SynthMNIST /
+//! SynthFashion) across {Full ZO, ZO-Feat-Cls2, ZO-Feat-Cls1, Full BP}
+//! × {FP32, INT8, INT8*}, plus PointNet (SynthModelNet) FP32.
+//!
+//! Shape check (paper): accuracy ordering Full ZO < Cls2 < Cls1 ≲ Full
+//! BP in every column; INT8 ≈ FP32; INT8* slightly below INT8.
+
+use super::{dump_result, run_fp32, run_int8, Scale};
+use crate::coordinator::engine::{EngineKind, Method};
+use crate::coordinator::int8_trainer::ZoGradMode;
+use crate::coordinator::Model;
+use crate::data::DatasetKind;
+use crate::util::json::Value;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(scale: Scale, engine: EngineKind) -> Result<()> {
+    let mut table = Table::new(
+        "Table 1: accuracy of LeNet-5 (SynthMNIST, SynthFashion) and PointNet (SynthModelNet)",
+        &["method", "MNIST FP32", "MNIST INT8", "MNIST INT8*",
+          "F-MNIST FP32", "F-MNIST INT8", "F-MNIST INT8*", "ModelNet FP32"],
+    );
+    let mut json_rows: Vec<Value> = Vec::new();
+
+    for method in Method::ALL {
+        let mut cells = vec![method.label().to_string()];
+        let mut row_obj = vec![("method", Value::str(method.label()))];
+
+        for (di, kind) in [DatasetKind::SynthMnist, DatasetKind::SynthFashion]
+            .iter()
+            .enumerate()
+        {
+            // FP32
+            let r = run_fp32(
+                Model::LeNet, *kind, method, engine,
+                scale.fp32_epochs(), 32, scale.train_n(), scale.test_n(),
+                100 + di as u64,
+            )?;
+            let fp32_acc = r.history.best_test_acc();
+            cells.push(format!("{:.2}", fp32_acc * 100.0));
+
+            // INT8 (float-CE sign); for Full BP this is the NITI baseline
+            let int8_acc = run_int8(
+                *kind, method, ZoGradMode::FloatCE, scale.int8_epochs(),
+                32, scale.train_n(), scale.test_n(), 200 + di as u64,
+            )?
+            .history
+            .best_test_acc();
+            cells.push(format!("{:.2}", int8_acc * 100.0));
+
+            let int8s_acc = if method == Method::FullBp {
+                f32::NAN // paper: INT8* column not applicable to Full BP
+            } else {
+                run_int8(*kind, method, ZoGradMode::IntCE, scale.int8_epochs(),
+                         32, scale.train_n(), scale.test_n(), 300 + di as u64)?
+                    .history
+                    .best_test_acc()
+            };
+            cells.push(if int8s_acc.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{:.2}", int8s_acc * 100.0)
+            });
+
+            let ds = if di == 0 { "mnist" } else { "fashion" };
+            row_obj.push((
+                match di {
+                    0 => "mnist",
+                    _ => "fashion",
+                },
+                Value::obj(vec![
+                    ("fp32", Value::num(fp32_acc as f64)),
+                    ("int8", Value::num(int8_acc as f64)),
+                    (
+                        "int8_star",
+                        if int8s_acc.is_nan() { Value::Null } else { Value::num(int8s_acc as f64) },
+                    ),
+                ]),
+            ));
+            let _ = ds;
+        }
+
+        // PointNet / SynthModelNet, FP32 only (as the paper)
+        let model = Model::PointNet { npoints: 128, ncls: 40 };
+        let r = run_fp32(
+            model, DatasetKind::SynthModelNet, method, engine,
+            scale.pointnet_epochs(), 16, scale.pointnet_train_n(),
+            scale.pointnet_test_n(), 400,
+        )?;
+        let pn_acc = r.history.best_test_acc();
+        cells.push(format!("{:.2}", pn_acc * 100.0));
+        row_obj.push(("modelnet_fp32", Value::num(pn_acc as f64)));
+
+        table.row(&cells);
+        json_rows.push(Value::obj(row_obj));
+        // print incrementally so long runs show progress
+        println!("  [{}] done", method.label());
+    }
+
+    table.print();
+    dump_result("table1", &Value::obj(vec![("rows", Value::Arr(json_rows))]))?;
+    Ok(())
+}

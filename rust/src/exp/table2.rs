@@ -1,0 +1,129 @@
+//! Table 2: fine-tuning on Rotated SynthMNIST / Rotated SynthFashion
+//! (30° and 45°), FP32 and INT8.
+//!
+//! Protocol (paper §5.2): pretrain on the clean dataset with BP, then
+//! fine-tune on 1024 rotated samples with each method; the "w/o
+//! Fine-tuning" row evaluates the pretrained model on the rotated test
+//! split directly. Shape check: fine-tuning recovers most of the
+//! rotation-induced drop, ordering Full ZO < Cls2 ≈ Cls1 < Full BP.
+
+use super::{build_engine, dump_result, fp32_train_config, rotated_splits, Scale};
+use crate::coordinator::engine::{EngineKind, Method};
+use crate::coordinator::int8_trainer::{self, Int8TrainConfig, ZoGradMode};
+use crate::coordinator::{trainer, Model, ParamSet};
+use crate::data::{self, DatasetKind};
+use crate::int8::lenet8;
+use crate::util::json::Value;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(scale: Scale, engine_kind: EngineKind) -> Result<()> {
+    let mut table = Table::new(
+        "Table 2: LeNet-5 w/ and w/o fine-tuning on rotated datasets",
+        &["method",
+          "FP32 M-30", "FP32 M-45", "FP32 F-30", "FP32 F-45",
+          "INT8 M-30", "INT8 M-45", "INT8 F-30", "INT8 F-45"],
+    );
+
+    let configs: Vec<(DatasetKind, f32)> = vec![
+        (DatasetKind::SynthMnist, 30.0),
+        (DatasetKind::SynthMnist, 45.0),
+        (DatasetKind::SynthFashion, 30.0),
+        (DatasetKind::SynthFashion, 45.0),
+    ];
+
+    // ---- pretrain once per dataset (FP32 + INT8) -------------------
+    let mut fp32_pre: Vec<ParamSet> = Vec::new();
+    let mut int8_pre: Vec<Vec<crate::int8::qtensor::QTensor>> = Vec::new();
+    for (di, kind) in [DatasetKind::SynthMnist, DatasetKind::SynthFashion].iter().enumerate() {
+        let (train_d, test_d) = data::generate(*kind, scale.train_n(), scale.test_n(), 77, 0);
+        // FP32 pretrain: Full BP
+        let mut engine = build_engine(Model::LeNet, 32, engine_kind);
+        let mut params = ParamSet::init(Model::LeNet, 500 + di as u64);
+        let cfg = fp32_train_config(Method::FullBp, scale.ft_epochs().min(8), 32, 77);
+        trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &cfg)?;
+        fp32_pre.push(params);
+        // INT8 pretrain: NITI full BP
+        let mut ws = lenet8::init_params(600 + di as u64, 32);
+        let icfg = Int8TrainConfig {
+            method: Method::FullBp,
+            epochs: scale.int8_epochs().min(10),
+            batch: 32,
+            seed: 77,
+            ..Default::default()
+        };
+        int8_trainer::train_int8(&mut ws, &train_d, &test_d, &icfg)?;
+        int8_pre.push(ws);
+    }
+
+    let mut json_rows: Vec<Value> = Vec::new();
+    let methods: Vec<Option<Method>> = vec![
+        None, // w/o fine-tuning
+        Some(Method::FullZo),
+        Some(Method::Cls2),
+        Some(Method::Cls1),
+        Some(Method::FullBp),
+    ];
+
+    for m in methods {
+        let label = m.map(|m| m.label()).unwrap_or("w/o Fine-tuning");
+        let mut cells = vec![label.to_string()];
+        let mut accs_json = vec![("method", Value::str(label))];
+
+        // FP32 columns then INT8 columns
+        for precision in ["fp32", "int8"] {
+            for (ci, (kind, deg)) in configs.iter().enumerate() {
+                let di = if *kind == DatasetKind::SynthMnist { 0 } else { 1 };
+                let (ft_train, ft_test) = rotated_splits(*kind, *deg, scale.ft_n(), 88);
+                let acc = match (precision, m) {
+                    ("fp32", None) => {
+                        let mut engine = build_engine(Model::LeNet, 32, engine_kind);
+                        trainer::evaluate(engine.as_mut(), &fp32_pre[di], &ft_test, 32)?.1
+                    }
+                    ("fp32", Some(method)) => {
+                        let mut engine = build_engine(Model::LeNet, 32, engine_kind);
+                        let mut params = fp32_pre[di].clone();
+                        let cfg = fp32_train_config(method, scale.ft_epochs(), 32, 90 + ci as u64);
+                        let r = trainer::train(
+                            engine.as_mut(), &mut params, &ft_train, &ft_test, &cfg,
+                        )?;
+                        r.history.best_test_acc()
+                    }
+                    ("int8", None) => {
+                        int8_trainer::evaluate_int8(&int8_pre[di], &ft_test, 32).1
+                    }
+                    ("int8", Some(method)) => {
+                        let mut ws = int8_pre[di].clone();
+                        let icfg = Int8TrainConfig {
+                            method,
+                            grad_mode: ZoGradMode::FloatCE,
+                            epochs: scale.ft_epochs(),
+                            batch: 32,
+                            seed: 91 + ci as u64,
+                            ..Default::default()
+                        };
+                        let r = int8_trainer::train_int8(&mut ws, &ft_train, &ft_test, &icfg)?;
+                        r.history.best_test_acc()
+                    }
+                    _ => unreachable!(),
+                };
+                cells.push(format!("{:.2}", acc * 100.0));
+                let _ = &mut accs_json;
+            }
+        }
+        println!("  [{label}] done");
+        table.row(&cells);
+        json_rows.push(Value::obj(vec![
+            ("method", Value::str(label)),
+            (
+                "cells",
+                Value::Arr(cells[1..].iter().map(|c| Value::str(c.clone())).collect()),
+            ),
+        ]));
+        let _ = accs_json;
+    }
+
+    table.print();
+    dump_result("table2", &Value::obj(vec![("rows", Value::Arr(json_rows))]))?;
+    Ok(())
+}

@@ -1,0 +1,245 @@
+//! Integer cross-entropy ZO gradient sign — the paper's §4.3 novelty
+//! (Eqs. 7–12): decide `sgn(L(α) − L(β))` for two int8 logit sets using
+//! only integer add/multiply/shift/compare and leading-zero counts.
+//!
+//! Pipeline per sample `b` with label `i`:
+//!   1. rescale both logit sets to the common exponent `s = min(s_α,s_β)`
+//!   2. `x̂_j = (47274 · (x̄_j − x̄_i)) ≫ (15 − s)`   (exp→pow2, Eq. 9)
+//!   3. `p = p_max − 10`, `x̃_j = clamp(x̂_j − p, 0, 10)` (overflow guard)
+//!   4. per-sample `⌊log₂ Σ_j 2^x̃_j⌋` via bit length  (Eq. 12)
+//!   5. batch-sum each side, compare.
+//!
+//! The floor in step 4 loses information, so ~5% of decisions flip vs
+//! the exact float sign (paper reports the same); `tests` measure the
+//! agreement rate.
+
+/// log2(e) ≈ 47274 / 2^15 (the NITI constant).
+const LOG2E_Q15: i64 = 47274;
+
+/// One side's per-sample floor-log2 terms: `⌊log₂ Σ_j 2^x̃_j⌋`.
+///
+/// `logits` is `(bsz, n)` int8 row-major, `rel_shift = s_x − s` (≥ 0),
+/// `s` the common exponent, `labels[b]` the target class.
+fn side_terms(
+    logits: &[i8],
+    rel_shift: u32,
+    s: i32,
+    labels: &[u8],
+    bsz: usize,
+    n: usize,
+    other: &[i8],
+    other_rel: u32,
+) -> Vec<i64> {
+    let mut out = Vec::with_capacity(bsz);
+    for b in 0..bsz {
+        let row = &logits[b * n..(b + 1) * n];
+        let orow = &other[b * n..(b + 1) * n];
+        let li = labels[b] as usize;
+        // x̂ for both sides share a per-sample offset p computed from the
+        // joint max (Eq. 9–10); compute own hats and the joint max here.
+        let hat = |v: i8, target: i8, rel: u32| -> i64 {
+            let d = ((v as i64) << rel) - ((target as i64) << rel);
+            let prod = LOG2E_Q15 * d; // ≤ 47274*510*2^rel — fits i64
+            if s >= 15 {
+                prod << (s - 15)
+            } else {
+                prod >> (15 - s)
+            }
+        };
+        let own: Vec<i64> = row.iter().map(|&v| hat(v, row[li], rel_shift)).collect();
+        let oth: Vec<i64> = orow.iter().map(|&v| hat(v, orow[li], other_rel)).collect();
+        let pmax = own.iter().chain(oth.iter()).copied().max().unwrap();
+        let p = pmax - 10;
+        let sum: i64 = own
+            .iter()
+            .map(|&h| {
+                let t = (h - p).clamp(0, 10);
+                1i64 << t
+            })
+            .sum();
+        // ⌊log₂ sum⌋ via bit length (sum ≥ 1 always: the j == i term)
+        out.push(63 - sum.leading_zeros() as i64);
+    }
+    out
+}
+
+/// `sgn(L(α;labels) − L(β;labels))` with integer arithmetic only.
+///
+/// Returns −1, 0 or +1. `(s_a, s_b)` are the logits' scaling exponents.
+#[allow(clippy::too_many_arguments)]
+pub fn loss_diff_sign_int(
+    alpha: &[i8],
+    s_a: i32,
+    beta: &[i8],
+    s_b: i32,
+    labels: &[u8],
+    bsz: usize,
+    n: usize,
+) -> i32 {
+    assert_eq!(alpha.len(), bsz * n);
+    assert_eq!(beta.len(), bsz * n);
+    let s = s_a.min(s_b);
+    let rel_a = (s_a - s) as u32;
+    let rel_b = (s_b - s) as u32;
+    let ta = side_terms(alpha, rel_a, s, labels, bsz, n, beta, rel_b);
+    let tb = side_terms(beta, rel_b, s, labels, bsz, n, alpha, rel_a);
+    let total: i64 = ta.iter().sum::<i64>() - tb.iter().sum::<i64>();
+    total.signum() as i32
+}
+
+/// Float reference: exact CE difference from dequantized int8 logits
+/// (the paper's "INT8" column computes `g` this way; also the test
+/// oracle for the integer path).
+pub fn loss_diff_f32(
+    alpha: &[i8],
+    s_a: i32,
+    beta: &[i8],
+    s_b: i32,
+    labels: &[u8],
+    bsz: usize,
+    n: usize,
+) -> f64 {
+    let ce = |logits: &[i8], s: i32| -> f64 {
+        let scale = (s as f64).exp2();
+        let mut total = 0.0;
+        for b in 0..bsz {
+            let row = &logits[b * n..(b + 1) * n];
+            let li = labels[b] as usize;
+            let m = row.iter().map(|&v| v as f64 * scale).fold(f64::MIN, f64::max);
+            let lse: f64 = m
+                + row
+                    .iter()
+                    .map(|&v| (v as f64 * scale - m).exp())
+                    .sum::<f64>()
+                    .ln();
+            total += lse - row[li] as f64 * scale;
+        }
+        total
+    };
+    ce(alpha, s_a) - ce(beta, s_b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng64;
+
+    fn random_case(
+        rng: &mut Rng64,
+        bsz: usize,
+        n: usize,
+    ) -> (Vec<i8>, i32, Vec<i8>, i32, Vec<u8>) {
+        // realistic post-requantization exponents: logits·2^s of O(1..30)
+        let s_a = rng.uniform_i32(-4, -1);
+        let s_b = s_a + rng.uniform_i32(0, 2);
+        let alpha: Vec<i8> = (0..bsz * n).map(|_| rng.uniform_i32(-127, 127) as i8).collect();
+        // beta = alpha + small perturbation response (realistic ZO pair)
+        let beta: Vec<i8> = alpha
+            .iter()
+            .map(|&v| (v as i32 + rng.uniform_i32(-12, 12)).clamp(-127, 127) as i8)
+            .collect();
+        let labels: Vec<u8> = (0..bsz).map(|_| (rng.next_u64() % n as u64) as u8).collect();
+        (alpha, s_a, beta, s_b, labels)
+    }
+
+    #[test]
+    fn identical_logits_give_zero() {
+        let mut rng = Rng64::new(1);
+        for _ in 0..20 {
+            let (a, s_a, _, _, labels) = random_case(&mut rng, 4, 10);
+            let g = loss_diff_sign_int(&a, s_a, &a, s_a, &labels, 4, 10);
+            assert_eq!(g, 0);
+        }
+    }
+
+    #[test]
+    fn obvious_cases_correct() {
+        // alpha puts all mass on the label (low loss), beta is uniform:
+        // L(alpha) < L(beta) -> sign must be -1.
+        let n = 10;
+        let bsz = 4;
+        let mut alpha = vec![-60i8; bsz * n];
+        let labels: Vec<u8> = vec![3; bsz];
+        for b in 0..bsz {
+            alpha[b * n + 3] = 120;
+        }
+        let beta = vec![0i8; bsz * n];
+        let g = loss_diff_sign_int(&alpha, -4, &beta, -4, &labels, bsz, n);
+        assert_eq!(g, -1);
+        let g2 = loss_diff_sign_int(&beta, -4, &alpha, -4, &labels, bsz, n);
+        assert_eq!(g2, 1);
+    }
+
+    #[test]
+    fn sign_agreement_rate_above_90pct() {
+        // paper: "correct signs can be obtained at a high probability (~95%)"
+        let mut rng = Rng64::new(42);
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for _ in 0..2000 {
+            let (a, s_a, b, s_b, labels) = random_case(&mut rng, 8, 10);
+            let exact = loss_diff_f32(&a, s_a, &b, s_b, &labels, 8, 10);
+            if exact.abs() < 0.2 {
+                continue; // near-tie: either answer acceptable
+            }
+            let g = loss_diff_sign_int(&a, s_a, &b, s_b, &labels, 8, 10);
+            if g == exact.signum() as i32 {
+                agree += 1;
+            }
+            total += 1;
+        }
+        let rate = agree as f64 / total as f64;
+        assert!(rate > 0.90, "sign agreement {rate:.3} over {total} cases");
+    }
+
+    #[test]
+    fn antisymmetric() {
+        let mut rng = Rng64::new(7);
+        for _ in 0..50 {
+            let (a, s_a, b, s_b, labels) = random_case(&mut rng, 4, 10);
+            let g1 = loss_diff_sign_int(&a, s_a, &b, s_b, &labels, 4, 10);
+            let g2 = loss_diff_sign_int(&b, s_b, &a, s_a, &labels, 4, 10);
+            assert_eq!(g1, -g2);
+        }
+    }
+
+    #[test]
+    fn exponent_rescaling_consistent() {
+        // doubling the mantissas while decrementing the exponent must not
+        // change the decision (same represented values)
+        let mut rng = Rng64::new(11);
+        for _ in 0..50 {
+            let n = 10;
+            let bsz = 4;
+            let alpha: Vec<i8> = (0..bsz * n).map(|_| rng.uniform_i32(-60, 60) as i8).collect();
+            let beta: Vec<i8> = (0..bsz * n).map(|_| rng.uniform_i32(-60, 60) as i8).collect();
+            let labels: Vec<u8> = (0..bsz).map(|_| (rng.next_u64() % 10) as u8).collect();
+            let alpha2: Vec<i8> = alpha.iter().map(|&v| v * 2).collect();
+            let g1 = loss_diff_sign_int(&alpha, -4, &beta, -4, &labels, bsz, n);
+            let g2 = loss_diff_sign_int(&alpha2, -5, &beta, -4, &labels, bsz, n);
+            assert_eq!(g1, g2, "rescaling changed the sign");
+        }
+    }
+
+    #[test]
+    fn batch_sum_matches_singles_mostly() {
+        // Eq. 12: batch decision = sum of per-sample floor-log2 terms.
+        // For a batch where every sample individually says "+", the batch
+        // must say "+".
+        let n = 10;
+        let mut rng = Rng64::new(13);
+        let labels: Vec<u8> = vec![0; 4];
+        let mut alpha = vec![0i8; 4 * n];
+        let mut beta = vec![0i8; 4 * n];
+        for b in 0..4 {
+            beta[b * n] = 100; // beta very confident on the label
+            alpha[b * n] = -100; // alpha very wrong
+            for j in 1..n {
+                alpha[b * n + j] = rng.uniform_i32(-5, 5) as i8;
+                beta[b * n + j] = rng.uniform_i32(-5, 5) as i8;
+            }
+        }
+        let g = loss_diff_sign_int(&alpha, -4, &beta, -4, &labels, 4, n);
+        assert_eq!(g, 1); // L(alpha) > L(beta)
+    }
+}

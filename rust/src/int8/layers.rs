@@ -1,0 +1,320 @@
+//! NITI INT8 layer ops: int8 GEMM/conv with int32 accumulation, ReLU,
+//! max-pool, and the int8 error/gradient machinery for BP-tail layers.
+
+use super::qtensor::{requantize, QTensor};
+use super::rounding::{bitwidth, clamp_i8, pseudo_stochastic_round};
+
+/// FC forward: x (B,K) int8 @ w (K,N) int8 -> int32 accumulator.
+///
+/// Inner loop is contiguous over the weight row and the accumulator
+/// row; post-ReLU int8 activations are sparse, so zero rows are
+/// skipped (same structure as the f32 GEMM).
+pub fn fc_acc(x: &QTensor, w: &QTensor, bsz: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(x.data.len(), bsz * k);
+    assert_eq!(w.data.len(), k * n);
+    let mut acc = vec![0i32; bsz * n];
+    for row in 0..bsz {
+        let xr = &x.data[row * k..(row + 1) * k];
+        let ar = &mut acc[row * n..(row + 1) * n];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i32;
+            let wrow = &w.data[kk * n..(kk + 1) * n];
+            for (av, &wv) in ar.iter_mut().zip(wrow) {
+                *av += xv * wv as i32;
+            }
+        }
+    }
+    acc
+}
+
+/// FC layer: forward + requantize. Output exponent = x.exp + w.exp + shift.
+pub fn fc(x: &QTensor, w: &QTensor, bsz: usize, k: usize, n: usize) -> QTensor {
+    let acc = fc_acc(x, w, bsz, k, n);
+    requantize(&acc, &[bsz, n], x.exp + w.exp)
+}
+
+/// int8 im2col (same layout as the f32 engine / Pallas kernel).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_i8(
+    x: &[i8],
+    bsz: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    pad: usize,
+) -> (Vec<i8>, usize, usize) {
+    let oh = h + 2 * pad - k + 1;
+    let ow = w + 2 * pad - k + 1;
+    let ckk = c * k * k;
+    let mut cols = vec![0i8; bsz * oh * ow * ckk];
+    for b in 0..bsz {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((b * oh + oy) * ow + ox) * ckk;
+                for cc in 0..c {
+                    for i in 0..k {
+                        let iy = oy + i;
+                        if iy < pad || iy >= h + pad {
+                            continue;
+                        }
+                        for j in 0..k {
+                            let ix = ox + j;
+                            if ix < pad || ix >= w + pad {
+                                continue;
+                            }
+                            cols[row + (cc * k + i) * k + j] =
+                                x[((b * c + cc) * h + (iy - pad)) * w + (ix - pad)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (cols, oh, ow)
+}
+
+/// Conv layer (no bias, as NITI): int8 conv -> int32 -> requantize.
+/// Weights (OC,C,K,K) row-major. Output (B,OC,OH,OW).
+///
+/// Hot path: im2col + GEMM with the weight matrix pre-transposed to
+/// (CKK, OC) so the inner loop runs contiguously over one weight row
+/// and the accumulator row — the layout LLVM auto-vectorizes with
+/// widening i8→i32 multiplies (the NEON SDOT shape of the paper's C++
+/// engine). See EXPERIMENTS.md §Perf for the before/after.
+#[allow(clippy::too_many_arguments)]
+pub fn conv(
+    x: &QTensor,
+    wt: &QTensor,
+    bsz: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    cout: usize,
+    k: usize,
+    pad: usize,
+) -> QTensor {
+    let (cols, oh, ow) = im2col_i8(&x.data, bsz, cin, h, w, k, pad);
+    let ckk = cin * k * k;
+    let rows = bsz * oh * ow;
+    // widen weights to i16 once; each output cell is then one long
+    // contiguous i16·i16→i32 dot product (pmaddwd-shaped)
+    let wt16: Vec<i16> = wt.data.iter().map(|&v| v as i16).collect();
+    let cols16: Vec<i16> = cols.iter().map(|&v| v as i16).collect();
+    let mut acc_mat = vec![0i32; rows * cout];
+    for r in 0..rows {
+        let cr = &cols16[r * ckk..(r + 1) * ckk];
+        let ar = &mut acc_mat[r * cout..(r + 1) * cout];
+        for (oc, av) in ar.iter_mut().enumerate() {
+            let wrow = &wt16[oc * ckk..(oc + 1) * ckk];
+            let mut acc = 0i32;
+            for (&cv, &wv) in cr.iter().zip(wrow) {
+                acc += cv as i32 * wv as i32;
+            }
+            *av = acc;
+        }
+    }
+    // (rows, OC) -> (B, OC, OH, OW)
+    let mut acc = vec![0i32; bsz * cout * oh * ow];
+    for b in 0..bsz {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let r = ((b * oh + oy) * ow + ox) * cout;
+                for oc in 0..cout {
+                    acc[((b * cout + oc) * oh + oy) * ow + ox] = acc_mat[r + oc];
+                }
+            }
+        }
+    }
+    requantize(&acc, &[bsz, cout, oh, ow], x.exp + wt.exp)
+}
+
+/// ReLU in place on the int8 mantissa.
+pub fn relu(x: &mut QTensor) {
+    for v in &mut x.data {
+        if *v < 0 {
+            *v = 0;
+        }
+    }
+}
+
+/// 2×2 stride-2 max pool on (B,C,H,W) int8.
+pub fn maxpool2(x: &QTensor, bsz: usize, c: usize, h: usize, w: usize) -> QTensor {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0i8; bsz * c * oh * ow];
+    for b in 0..bsz {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = i8::MIN;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let v = x.data
+                                [((b * c + ch) * h + oy * 2 + dy) * w + ox * 2 + dx];
+                            best = best.max(v);
+                        }
+                    }
+                    out[((b * c + ch) * oh + oy) * ow + ox] = best;
+                }
+            }
+        }
+    }
+    QTensor::from_vec(&[bsz, c, oh, ow], out, x.exp)
+}
+
+/// Round an int32 gradient accumulator down to `bits` significant bits
+/// with pseudo-stochastic rounding — NITI's update quantization. The
+/// result is the int8 update applied directly to the weight mantissa.
+pub fn round_update(acc: &[i32], bits: u32) -> Vec<i8> {
+    let maxabs = acc.iter().fold(0i32, |m, &v| m.max(v.wrapping_abs()));
+    let b = bitwidth(maxabs);
+    let shift = b.saturating_sub(bits);
+    acc.iter()
+        .map(|&v| clamp_i8(pseudo_stochastic_round(v, shift)))
+        .collect()
+}
+
+/// Int8 FC backward for the BP tail:
+/// gw_acc (K,N) = xᵀ (K,B) @ e (B,N) in int32,
+/// e_in_acc (B,K) = e @ wᵀ in int32 (for propagating one more layer).
+pub fn fc_backward_acc(
+    x: &QTensor,
+    w: &QTensor,
+    e: &QTensor,
+    bsz: usize,
+    k: usize,
+    n: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut gw = vec![0i32; k * n];
+    for row in 0..bsz {
+        let xr = &x.data[row * k..(row + 1) * k];
+        let er = &e.data[row * n..(row + 1) * n];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i32;
+            let grow = &mut gw[kk * n..(kk + 1) * n];
+            for (gv, &ev) in grow.iter_mut().zip(er) {
+                *gv += xv * ev as i32;
+            }
+        }
+    }
+    let mut e_in = vec![0i32; bsz * k];
+    for row in 0..bsz {
+        let er = &e.data[row * n..(row + 1) * n];
+        let ei = &mut e_in[row * k..(row + 1) * k];
+        for (kk, eiv) in ei.iter_mut().enumerate() {
+            let wrow = &w.data[kk * n..(kk + 1) * n];
+            let mut acc = 0i32;
+            for (&ev, &wv) in er.iter().zip(wrow) {
+                acc += ev as i32 * wv as i32;
+            }
+            *eiv = acc;
+        }
+    }
+    (gw, e_in)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn q(dims: &[usize], vals: Vec<i8>, exp: i32) -> QTensor {
+        QTensor::from_vec(dims, vals, exp)
+    }
+
+    #[test]
+    fn fc_exact_small() {
+        let x = q(&[1, 2], vec![2, 3], -1);
+        let w = q(&[2, 2], vec![1, 0, 0, 1], 0);
+        let out = fc(&x, &w, 1, 2, 2);
+        assert_eq!(out.data, vec![2, 3]);
+        assert_eq!(out.exp, -1); // no shift needed
+    }
+
+    #[test]
+    fn fc_requantizes_large_acc() {
+        let x = q(&[1, 64], vec![127; 64], 0);
+        let w = q(&[64, 1], vec![127; 64], 0);
+        let out = fc(&x, &w, 1, 64, 1);
+        // acc = 64 * 127 * 127 = 1,032,256 (b=20) -> shift 13
+        assert_eq!(out.exp, 13);
+        assert!(out.data[0] > 0); // clamp keeps |v| <= 127 by construction
+        // value preserved within rounding: data*2^13 ≈ acc
+        let approx = (out.data[0] as i64) << 13;
+        assert!((approx - 1_032_256i64).abs() <= 1 << 12);
+    }
+
+    #[test]
+    fn conv_matches_fc_on_1x1() {
+        // 1x1 conv == per-pixel FC
+        prop::cases(10, |rng, _| {
+            let (b, c, h, w, oc) = (1usize, 3usize, 4usize, 4usize, 2usize);
+            let x = q(
+                &[b, c, h, w],
+                (0..b * c * h * w).map(|_| rng.uniform_i32(-127, 127) as i8).collect(),
+                -3,
+            );
+            let wt = q(
+                &[oc, c, 1, 1],
+                (0..oc * c).map(|_| rng.uniform_i32(-127, 127) as i8).collect(),
+                -4,
+            );
+            let out = conv(&x, &wt, b, c, h, w, oc, 1, 0);
+            assert_eq!(out.dims, vec![b, oc, h, w]);
+            assert!(out.exp >= -7);
+            // exact check on one pixel vs scalar dot product
+            let (py, px) = (1usize, 2usize);
+            let mut acc = 0i32;
+            for cc in 0..c {
+                acc += x.data[((0 * c + cc) * h + py) * w + px] as i32
+                    * wt.data[cc] as i32; // oc = 0
+            }
+            let shift = (out.exp - (x.exp + wt.exp)) as u32;
+            let expect = super::super::rounding::clamp_i8(
+                super::super::rounding::rshift_round(acc, shift),
+            );
+            assert_eq!(out.data[((0 * oc) * h + py) * w + px], expect);
+        });
+    }
+
+    #[test]
+    fn relu_and_maxpool() {
+        let mut x = q(&[1, 1, 2, 2], vec![-5, 3, 7, -1], -2);
+        relu(&mut x);
+        assert_eq!(x.data, vec![0, 3, 7, 0]);
+        let p = maxpool2(&x, 1, 1, 2, 2);
+        assert_eq!(p.data, vec![7]);
+        assert_eq!(p.exp, -2);
+    }
+
+    #[test]
+    fn round_update_bits_bound() {
+        prop::cases(20, |rng, _| {
+            let acc: Vec<i32> = (0..32).map(|_| rng.uniform_i32(-1_000_000, 1_000_000)).collect();
+            for bits in [1u32, 3, 5] {
+                let u = round_update(&acc, bits);
+                let bound = (1i32 << bits) - 1;
+                // after shifting to `bits` significant bits plus rounding,
+                // magnitudes stay within 2^bits (clamped to 127 anyway)
+                assert!(u.iter().all(|&v| (v as i32).abs() <= bound.min(127) + 1));
+            }
+        });
+    }
+
+    #[test]
+    fn fc_backward_acc_exact() {
+        // x (1,2) = [1,2], e (1,2) = [3,4], w = I
+        let x = q(&[1, 2], vec![1, 2], 0);
+        let w = q(&[2, 2], vec![1, 0, 0, 1], 0);
+        let e = q(&[1, 2], vec![3, 4], 0);
+        let (gw, e_in) = fc_backward_acc(&x, &w, &e, 1, 2, 2);
+        assert_eq!(gw, vec![3, 4, 6, 8]); // xᵀe
+        assert_eq!(e_in, vec![3, 4]); // e wᵀ = e
+    }
+}

@@ -1,0 +1,15 @@
+//! Native NITI INT8 training engine — the pure-integer counterpart of
+//! the paper's C++ implementation (Raspberry Pi Zero 2 target).
+//!
+//! Tensors are `int8 · 2^s` pairs ([`qtensor::QTensor`]); contractions
+//! accumulate in int32 and are requantized with exact bit-counting
+//! ([`rounding`]); gradient updates use NITI's pseudo-stochastic
+//! rounding; and the ZO gradient sign is computed from the **integer
+//! cross-entropy** (paper §4.3, Eqs. 7–12) in [`intce`] — no FPU on the
+//! entire INT8* path.
+
+pub mod intce;
+pub mod layers;
+pub mod lenet8;
+pub mod qtensor;
+pub mod rounding;

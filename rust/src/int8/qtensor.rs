@@ -1,0 +1,139 @@
+//! NITI quantized tensor: an int8 mantissa tensor with one shared
+//! power-of-two scaling exponent — value = `data · 2^exp`.
+
+use super::rounding::{bitwidth, clamp_i8, rshift_round};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub data: Vec<i8>,
+    pub dims: Vec<usize>,
+    /// Scaling exponent `s`: represented value is `data[i] * 2^exp`.
+    pub exp: i32,
+}
+
+impl QTensor {
+    pub fn zeros(dims: &[usize], exp: i32) -> QTensor {
+        let n: usize = dims.iter().product();
+        QTensor { data: vec![0; n], dims: dims.to_vec(), exp }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<i8>, exp: i32) -> QTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        QTensor { data, dims: dims.to_vec(), exp }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Dequantize to f32 (test/inspection only — never on the INT8* path).
+    pub fn to_f32(&self) -> Vec<f32> {
+        let scale = (self.exp as f32).exp2();
+        self.data.iter().map(|&v| v as f32 * scale).collect()
+    }
+
+    /// Quantize an f32 slice: pick the exponent so max|v| maps near 127.
+    pub fn quantize(dims: &[usize], values: &[f32]) -> QTensor {
+        assert_eq!(dims.iter().product::<usize>(), values.len());
+        let maxabs = values.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if maxabs == 0.0 {
+            return QTensor::zeros(dims, 0);
+        }
+        // exp = ceil(log2(maxabs / 127))
+        let exp = (maxabs / 127.0).log2().ceil() as i32;
+        let scale = (-exp as f32).exp2();
+        let data = values
+            .iter()
+            .map(|&v| clamp_i8((v * scale).round() as i32))
+            .collect();
+        QTensor { data, dims: dims.to_vec(), exp }
+    }
+}
+
+/// Requantize an int32 accumulator (value `acc · 2^acc_exp`) to int8:
+/// shift so the max magnitude fits 7 bits. Matches
+/// `int8_model.requantize` exactly. Returns `(tensor, shift_applied)`.
+pub fn requantize(acc: &[i32], dims: &[usize], acc_exp: i32) -> QTensor {
+    let maxabs = acc.iter().fold(0i32, |m, &v| m.max(v.wrapping_abs()));
+    let b = bitwidth(maxabs);
+    let shift = b.saturating_sub(7);
+    let data = acc
+        .iter()
+        .map(|&v| clamp_i8(rshift_round(v, shift)))
+        .collect();
+    QTensor {
+        data,
+        dims: dims.to_vec(),
+        exp: acc_exp + shift as i32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn quantize_dequantize_roundtrip_error() {
+        prop::cases(20, |rng, _| {
+            let vals: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+            let q = QTensor::quantize(&[64], &vals);
+            let deq = q.to_f32();
+            let maxabs = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            for (a, b) in vals.iter().zip(&deq) {
+                // one quantum = maxabs/127 roughly
+                assert!((a - b).abs() <= maxabs / 127.0 + 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_zero() {
+        let q = QTensor::quantize(&[4], &[0.0; 4]);
+        assert!(q.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn quantize_uses_full_range() {
+        let q = QTensor::quantize(&[2], &[1.0, -2.0]);
+        assert!(q.data.iter().any(|&v| v.abs() >= 64), "{:?}", q.data);
+    }
+
+    #[test]
+    fn requantize_small_is_identity() {
+        let acc: Vec<i32> = (-127..=127).collect();
+        let q = requantize(&acc, &[255], -7);
+        assert_eq!(q.exp, -7);
+        for (a, b) in acc.iter().zip(&q.data) {
+            assert_eq!(*a as i8, *b);
+        }
+    }
+
+    #[test]
+    fn requantize_preserves_value_within_rounding() {
+        prop::cases(30, |rng, _| {
+            let scale = 1 << (rng.next_u64() % 20);
+            let acc: Vec<i32> = (0..32)
+                .map(|_| rng.uniform_i32(-scale, scale))
+                .collect();
+            let q = requantize(&acc, &[32], 0);
+            let shift = q.exp;
+            assert!(shift >= 0);
+            for (&a, &d) in acc.iter().zip(&q.data) {
+                let approx = (d as i64) << shift;
+                let tol = if shift > 0 { 1i64 << (shift - 1) } else { 0 } + 1;
+                assert!(
+                    (approx - a as i64).abs() <= tol,
+                    "acc {a} -> {d}·2^{shift}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn requantize_range_bound() {
+        let acc = vec![i32::MAX / 2, -(i32::MAX / 2), 12345, -9];
+        let q = requantize(&acc, &[4], 0);
+        assert!(q.data.iter().all(|&v| (-127..=127).contains(&v)));
+    }
+}

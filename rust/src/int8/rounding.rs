@@ -1,0 +1,155 @@
+//! Integer rounding primitives shared by every NITI op.
+//!
+//! `bitwidth` / `rshift_round` are bit-for-bit identical to
+//! python/compile/int8_model.py (the XLA INT8 artifact), which is what
+//! makes the two INT8 engines agree exactly. `pseudo_stochastic_round`
+//! is NITI's RNG-free stochastic rounding used for gradient updates.
+
+/// Minimum bitwidth to represent `v >= 0`: `floor(log2(v)) + 1`, 0 for 0.
+#[inline]
+pub fn bitwidth(v: i32) -> u32 {
+    debug_assert!(v >= 0);
+    32 - (v as u32).leading_zeros()
+}
+
+/// Arithmetic right shift with round-to-nearest, ties away from zero.
+/// Sign-symmetric; `k == 0` is the identity. Matches
+/// `int8_model.rshift_round` exactly.
+#[inline]
+pub fn rshift_round(v: i32, k: u32) -> i32 {
+    if k == 0 {
+        return v;
+    }
+    let a = (v as i64).abs();
+    let r = ((a + (1i64 << (k - 1))) >> k) as i32;
+    if v < 0 {
+        -r
+    } else {
+        r
+    }
+}
+
+/// NITI pseudo-stochastic rounding: right-shift by `k`, rounding up with
+/// probability ≈ fraction, using the discarded bits themselves as the
+/// entropy source (deterministic, no RNG state).
+///
+/// The `k` discarded bits split into a top half `f` (the fraction) and a
+/// bottom half `u` (the pseudo-random draw); round the magnitude up iff
+/// `u < f`. For `k == 1` this degenerates to round-half-up.
+#[inline]
+pub fn pseudo_stochastic_round(v: i32, k: u32) -> i32 {
+    if k == 0 {
+        return v;
+    }
+    let neg = v < 0;
+    let a = (v as i64).abs() as u64;
+    let base = (a >> k) as i32;
+    let d = a & ((1u64 << k) - 1);
+    let up = if k == 1 {
+        d == 1
+    } else {
+        let half = k / 2;
+        let f = d >> (k - half); // top `half` bits: the fraction
+        let u = d & ((1u64 << (k - half)) - 1); // low `k-half` bits: the draw
+        // Align f to u's width, then round up iff u < f
+        // (P[up] ≈ f / 2^half ≈ the true fraction).
+        let f_scaled = if k - half >= half {
+            f << ((k - half) - half)
+        } else {
+            f >> (half - (k - half))
+        };
+        u < f_scaled
+    };
+    let r = base + if up { 1 } else { 0 };
+    if neg {
+        -r
+    } else {
+        r
+    }
+}
+
+/// Clamp an i32 to the symmetric int8 range used by NITI.
+#[inline]
+pub fn clamp_i8(v: i32) -> i8 {
+    v.clamp(-127, 127) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn bitwidth_matches_bit_length() {
+        for v in [0i32, 1, 2, 3, 127, 128, 255, 256, 1 << 30] {
+            let expect = if v == 0 { 0 } else { 64 - (v as u64).leading_zeros() };
+            assert_eq!(bitwidth(v), expect, "v={v}");
+        }
+        prop::cases(100, |rng, _| {
+            let v = (rng.next_u64() % (1 << 31)) as i32;
+            let expect = if v == 0 { 0 } else { 64 - (v as u64).leading_zeros() };
+            assert_eq!(bitwidth(v), expect);
+        });
+    }
+
+    #[test]
+    fn rshift_round_reference() {
+        // same model as python tests: (|v| + 2^(k-1)) >> k, sign restored
+        assert_eq!(rshift_round(5, 1), 3); // 2.5 -> 3
+        assert_eq!(rshift_round(-5, 1), -3);
+        assert_eq!(rshift_round(4, 2), 1);
+        assert_eq!(rshift_round(6, 2), 2); // 1.5 -> 2 (ties away)
+        assert_eq!(rshift_round(7, 0), 7);
+        assert_eq!(rshift_round(i32::MAX, 3), (i32::MAX as i64 + 4 >> 3) as i32);
+    }
+
+    #[test]
+    fn rshift_round_sign_symmetric_and_bounded() {
+        prop::cases(200, |rng, _| {
+            let v = rng.uniform_i32(-(1 << 24), 1 << 24);
+            let k = (rng.next_u64() % 20) as u32;
+            assert_eq!(rshift_round(-v, k), -rshift_round(v, k));
+            let err = (rshift_round(v, k) as f64 - v as f64 / (1u64 << k) as f64).abs();
+            assert!(err <= 0.5 + 1e-9, "v={v} k={k} err={err}");
+        });
+    }
+
+    #[test]
+    fn pseudo_stochastic_round_deterministic_and_close() {
+        prop::cases(200, |rng, _| {
+            let v = rng.uniform_i32(-(1 << 24), 1 << 24);
+            let k = (rng.next_u64() % 16) as u32;
+            let a = pseudo_stochastic_round(v, k);
+            let b = pseudo_stochastic_round(v, k);
+            assert_eq!(a, b); // deterministic
+            assert_eq!(pseudo_stochastic_round(-v, k), -a); // symmetric
+            let exact = v as f64 / (1u64 << k) as f64;
+            assert!((a as f64 - exact).abs() <= 1.0 + 1e-9, "v={v} k={k}");
+        });
+    }
+
+    #[test]
+    fn pseudo_stochastic_round_unbiased_in_aggregate() {
+        // Over many uniformly-distributed values the mean rounding error
+        // must be near zero (the property NITI relies on for SGD).
+        let k = 8u32;
+        let mut err_sum = 0.0f64;
+        let n = 100_000;
+        let mut rng = crate::rng::Rng64::new(99);
+        for _ in 0..n {
+            let v = rng.uniform_i32(0, 1 << 20);
+            let r = pseudo_stochastic_round(v, k);
+            err_sum += r as f64 - v as f64 / 256.0;
+        }
+        let bias = err_sum / n as f64;
+        assert!(bias.abs() < 0.05, "bias {bias}");
+    }
+
+    #[test]
+    fn clamp_bounds() {
+        assert_eq!(clamp_i8(300), 127);
+        assert_eq!(clamp_i8(-300), -127);
+        assert_eq!(clamp_i8(-128), -127);
+        assert_eq!(clamp_i8(50), 50);
+    }
+}

@@ -1,0 +1,35 @@
+//! # ElasticZO — memory-efficient on-device learning (paper reproduction)
+//!
+//! Rust implementation of *“ElasticZO: A Memory-Efficient On-Device
+//! Learning with Combined Zeroth- and First-Order Optimization”*
+//! (Sugiura & Matsutani, 2025), structured as the three-layer
+//! rust + JAX + Pallas stack described in `DESIGN.md`:
+//!
+//! * **L3 (this crate)** — the on-device-learning coordinator: dataset
+//!   pipeline, the seed-trick ZO engine (perturb / restore / update in
+//!   place), elastic ZO/BP partitioning, NITI INT8 training, schedules,
+//!   metrics, checkpoints, the analytic memory model (paper Eqs. 2–5 and
+//!   13–15) and per-phase telemetry (paper Fig. 7).
+//! * **L2/L1 (python, build-time only)** — JAX models calling Pallas
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`; loaded and executed
+//!   here through the PJRT C API (`runtime`), never touching python at
+//!   training time.
+//!
+//! Two interchangeable execution engines mirror the paper's two
+//! implementations (PyTorch for accuracy, C++/NEON for on-device cost):
+//! the **XLA engine** ([`coordinator::xla_engine`]) runs the AOT
+//! artifacts, and the **native engine** ([`nn`], [`int8`]) is a pure-rust
+//! reference — including the paper's integer-only INT8* path.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod int8;
+pub mod memory;
+pub mod nn;
+pub mod rng;
+pub mod runtime;
+pub mod telemetry;
+pub mod tensor;
+pub mod util;

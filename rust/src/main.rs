@@ -1,0 +1,249 @@
+//! `repro` — the ElasticZO launcher (L3 coordinator CLI).
+//!
+//! ```text
+//! repro train  [--model lenet|pointnet] [--dataset mnist|fashion|modelnet]
+//!              [--method full-zo|cls1|cls2|full-bp] [--engine xla|native]
+//!              [--precision fp32|int8|int8*] [--epochs N] [--batch N]
+//!              [--lr F] [--eps F] [--seed N] [--save ckpt] [--load ckpt]
+//!              [--config file.json] [--verbose]
+//! repro eval   --load ckpt [--dataset ...] [--rotate DEG]
+//! repro exp    table1|table2|fig2|fig3|fig4|fig5|fig6|fig7|all
+//!              [--fast|--paper] [--engine xla|native]
+//! repro memory [--model lenet|pointnet] [--batch N] [--precision fp32|int8]
+//! repro inspect            # list AOT artifacts
+//! ```
+
+use anyhow::Result;
+use elasticzo::config::{Config, Precision};
+use elasticzo::coordinator::int8_trainer::{self, Int8TrainConfig};
+use elasticzo::coordinator::{checkpoint, trainer, Method, ParamSet, TrainConfig};
+use elasticzo::data;
+use elasticzo::exp::{self, Scale};
+use elasticzo::int8::lenet8;
+use elasticzo::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let r = match cmd {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "exp" => cmd_exp(&args),
+        "memory" => cmd_memory(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — ElasticZO on-device-learning coordinator\n\
+         \n  repro train  [--model lenet|pointnet] [--method full-zo|cls1|cls2|full-bp]\n\
+         \x20              [--dataset mnist|fashion|modelnet] [--engine xla|native]\n\
+         \x20              [--precision fp32|int8|int8*] [--epochs N] [--batch N] [--lr F]\n\
+         \x20              [--save ckpt] [--load ckpt] [--config file.json] [--verbose]\n\
+         \x20 repro eval   --load ckpt [--dataset D] [--rotate DEG] [--precision P]\n\
+         \x20 repro exp    table1|table2|fig2..fig7|all [--fast|--paper] [--engine E]\n\
+         \x20 repro memory [--model M] [--batch N] [--precision fp32|int8] [--adam]\n\
+         \x20 repro inspect"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    if let Some(dir) = &cfg.artifacts_dir {
+        std::env::set_var("REPRO_ARTIFACTS", dir);
+    }
+    let (train_d, test_d) =
+        data::generate(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed, cfg.npoints);
+    println!(
+        "train: model={} dataset={} method={} precision={} engine={:?} epochs={} batch={}",
+        cfg.model,
+        train_d.name,
+        cfg.method.label(),
+        cfg.precision.label(),
+        cfg.engine,
+        cfg.epochs,
+        cfg.batch
+    );
+
+    match cfg.precision {
+        Precision::Fp32 => {
+            let model = cfg.model_enum();
+            let mut engine = exp::build_engine(model, cfg.batch, cfg.engine);
+            let mut params = ParamSet::init(model, cfg.seed ^ 0xC0FFEE);
+            if let Some(path) = &cfg.load_checkpoint {
+                checkpoint::load_params(path, &mut params)?;
+                println!("loaded checkpoint {path}");
+            }
+            let tcfg = TrainConfig {
+                method: cfg.method,
+                epochs: cfg.epochs,
+                batch: cfg.batch,
+                lr0: cfg.lr,
+                eps: cfg.eps,
+                g_clip: cfg.g_clip,
+                seed: cfg.seed,
+                eval_every: 1,
+                verbose: true,
+            };
+            let r = trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &tcfg)?;
+            println!(
+                "done: best test acc {:.2}% (engine {})",
+                r.history.best_test_acc() * 100.0,
+                engine.name()
+            );
+            println!("{}", r.timer.report("phase breakdown"));
+            if let Some(path) = &cfg.save_checkpoint {
+                checkpoint::save_params(path, &params)?;
+                println!("saved checkpoint {path}");
+            }
+        }
+        Precision::Int8 | Precision::Int8Star => {
+            let mut ws = lenet8::init_params(cfg.seed ^ 0xC0FFEE, cfg.r_max.max(16));
+            if let Some(path) = &cfg.load_checkpoint {
+                ws = checkpoint::load_int8(path)?;
+                println!("loaded checkpoint {path}");
+            }
+            let icfg = Int8TrainConfig {
+                method: cfg.method,
+                grad_mode: cfg.precision.grad_mode(),
+                epochs: cfg.epochs,
+                batch: cfg.batch,
+                r_max: cfg.r_max,
+                b_zo: cfg.b_zo,
+                seed: cfg.seed,
+                eval_every: 1,
+                verbose: true,
+            };
+            let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &icfg)?;
+            println!("done: best test acc {:.2}%", r.history.best_test_acc() * 100.0);
+            println!("{}", r.timer.report("phase breakdown"));
+            if let Some(path) = &cfg.save_checkpoint {
+                let names: Vec<&str> =
+                    lenet8::PARAM_SPECS.iter().map(|(n, _)| *n).collect();
+                checkpoint::save_int8(path, &names, &ws)?;
+                println!("saved checkpoint {path}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let path = cfg
+        .load_checkpoint
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("eval requires --load <checkpoint>"))?;
+    let (_, mut test_d) =
+        data::generate(cfg.dataset, 1, cfg.test_n, cfg.seed, cfg.npoints);
+    if let Some(deg) = args.get("rotate") {
+        let deg: f32 = deg.parse()?;
+        test_d = data::rotate::rotate_dataset(&test_d, deg);
+        println!("rotated test set by {deg}°");
+    }
+    match cfg.precision {
+        Precision::Fp32 => {
+            let model = cfg.model_enum();
+            let mut params = ParamSet::init(model, 0);
+            checkpoint::load_params(&path, &mut params)?;
+            let mut engine = exp::build_engine(model, cfg.batch, cfg.engine);
+            let (loss, acc) = trainer::evaluate(engine.as_mut(), &params, &test_d, cfg.batch)?;
+            println!("eval: loss {loss:.4}  acc {:.2}%", acc * 100.0);
+        }
+        _ => {
+            let ws = checkpoint::load_int8(&path)?;
+            let (loss, acc) = int8_trainer::evaluate_int8(&ws, &test_d, cfg.batch);
+            println!("eval: loss {loss:.4}  acc {:.2}%", acc * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("exp requires an id (table1|table2|fig2..fig7|all)"))?;
+    let scale = Scale::from_flags(args.flag("fast"), args.flag("paper"));
+    let engine = elasticzo::coordinator::EngineKind::parse(args.get_or("engine", "xla"))?;
+    if let Some(dir) = args.get("artifacts") {
+        std::env::set_var("REPRO_ARTIFACTS", dir);
+    }
+    if args.flag("verbose") {
+        std::env::set_var("REPRO_VERBOSE", "1");
+    }
+    println!("experiment {id} at scale {scale:?} (engine {engine:?})");
+    exp::run(id, scale, engine)
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    use elasticzo::memory::{self, models};
+    use elasticzo::util::table::{bytes, Table};
+    let model = args.get_or("model", "lenet");
+    let batch = args.get_usize("batch", 32)?;
+    let precision = args.get_or("precision", "fp32");
+    let adam = args.flag("adam");
+    let layers = match model {
+        "lenet" if precision == "int8" => models::lenet_int8_layers(),
+        "lenet" => models::lenet_layers(),
+        "pointnet" => models::pointnet_layers(args.get_usize("npoints", 1024)?, 40),
+        other => anyhow::bail!("unknown model '{other}'"),
+    };
+    let mut t = Table::new(
+        &format!("Memory model: {model} {precision} B={batch}{}", if adam { " (Adam)" } else { "" }),
+        &["method", "params", "acts", "grads", "errors", "int32", "opt", "total"],
+    );
+    for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+        let b = if precision == "int8" {
+            memory::int8(&layers, batch, m.memory_method())
+        } else {
+            memory::fp32(&layers, batch, m.memory_method(), adam)
+        };
+        t.row(&[
+            m.label().to_string(),
+            bytes(b.params),
+            bytes(b.acts),
+            bytes(b.grads),
+            bytes(b.errors),
+            bytes(b.int32_scratch),
+            bytes(b.opt_state),
+            bytes(b.total()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    if let Some(dir) = args.get("artifacts") {
+        std::env::set_var("REPRO_ARTIFACTS", dir);
+    }
+    let manifest = elasticzo::runtime::Manifest::load(
+        elasticzo::runtime::manifest::default_dir(),
+    )?;
+    println!("artifacts in {}:", manifest.dir.display());
+    for e in &manifest.entries {
+        let ins: Vec<String> = e.inputs.iter().map(|i| format!("{:?}{:?}", i.dtype, i.shape)).collect();
+        println!(
+            "  {:<28} {} inputs, {} outputs  [{}...]",
+            e.name,
+            e.inputs.len(),
+            e.outputs.len(),
+            ins.first().cloned().unwrap_or_default()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,250 @@
+//! Analytic memory model — paper Eqs. 2–5 (FP32) and 13–15 (INT8).
+//!
+//! Layer conventions match the paper's accounting exactly (validated
+//! against its reported numbers in `tests` and EXPERIMENTS.md):
+//! * ReLU counts as its own layer with its own activation buffer (no
+//!   in-place/lifetime optimization, as the paper assumes);
+//!   this reproduces the paper's "activations+errors are 42.9× the
+//!   parameters at B=256" for LeNet-5 exactly.
+//! * A layer `l ∈ T` (trainable: conv/FC) stores `θ_l` and, when trained
+//!   by BP, its gradient `g_l`; every layer stores its activation `a_l`
+//!   and, when error flows through it, `e_l`.
+//! * INT8: 1-byte `θ/a/g/e` plus int32 scratch: `a^int32` for every
+//!   trainable layer, `g^int32`/`e^int32` for BP-trained layers (Eq. 13).
+
+pub mod models;
+
+/// One network layer in the memory model.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: &'static str,
+    /// Parameter element count (0 for relu/pool).
+    pub params: usize,
+    /// Activation element count PER SAMPLE.
+    pub act: usize,
+}
+
+impl LayerInfo {
+    pub fn trainable(&self) -> bool {
+        self.params > 0
+    }
+}
+
+/// A memory breakdown in bytes (the stacked-bar components of Figs 4–6).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Breakdown {
+    pub params: usize,
+    pub acts: usize,
+    pub grads: usize,
+    pub errors: usize,
+    /// INT8 only: int32 scratch accumulators.
+    pub int32_scratch: usize,
+    /// Optimizer state (Eq. 5; 0 for plain SGD).
+    pub opt_state: usize,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> usize {
+        self.params + self.acts + self.grads + self.errors + self.int32_scratch + self.opt_state
+    }
+}
+
+/// Training method, parameterized by the ZO/BP partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    FullZo,
+    /// BP on the last `bp_layers` trainable (FC) layers, ZO on the rest.
+    Elastic { bp_layers: usize },
+    FullBp,
+}
+
+/// Index of the first layer trained by BP (layers `c..L` are BP).
+/// `Method::FullZo` → L (none), `FullBp` → 0 (all).
+fn bp_start(layers: &[LayerInfo], method: Method) -> usize {
+    match method {
+        Method::FullZo => layers.len(),
+        Method::FullBp => 0,
+        Method::Elastic { bp_layers } => {
+            // count back `bp_layers` trainable layers from the end
+            let mut remaining = bp_layers;
+            for i in (0..layers.len()).rev() {
+                if layers[i].trainable() {
+                    remaining -= 1;
+                    if remaining == 0 {
+                        return i;
+                    }
+                }
+            }
+            0
+        }
+    }
+}
+
+/// FP32 memory (Eqs. 2–4). `adam` adds Eq. 5's two moment buffers.
+pub fn fp32(layers: &[LayerInfo], batch: usize, method: Method, adam: bool) -> Breakdown {
+    const W: usize = 4; // f32 bytes
+    let start = bp_start(layers, method);
+    let mut b = Breakdown::default();
+    for (i, l) in layers.iter().enumerate() {
+        b.params += l.params * W;
+        b.acts += l.act * batch * W;
+        if i >= start {
+            if l.trainable() {
+                b.grads += l.params * W;
+                if adam {
+                    b.opt_state += 2 * l.params * W;
+                }
+            }
+            b.errors += l.act * batch * W;
+        }
+    }
+    b
+}
+
+/// INT8 memory (Eqs. 13–15): 1-byte tensors + int32 scratch.
+pub fn int8(layers: &[LayerInfo], batch: usize, method: Method) -> Breakdown {
+    let start = bp_start(layers, method);
+    let mut b = Breakdown::default();
+    let mut prev_act = 0usize; // a_{l-1} for the e^int32 term
+    for (i, l) in layers.iter().enumerate() {
+        b.params += l.params;
+        b.acts += l.act * batch;
+        if l.trainable() {
+            // int32 accumulator while computing a_l (Eq. 13 Σ_{l∈T} a^int32)
+            b.int32_scratch += l.act * batch * 4;
+        }
+        if i >= start {
+            if l.trainable() {
+                b.grads += l.params;
+                b.int32_scratch += l.params * 4; // g^int32
+                if i > 0 {
+                    b.int32_scratch += prev_act * batch * 4; // e_{l-1}^int32
+                }
+            }
+            b.errors += l.act * batch;
+        }
+        prev_act = l.act;
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::models::{lenet_layers, pointnet_layers};
+    use super::*;
+
+    #[test]
+    fn ordering_invariant_fullzo_le_elastic_le_fullbp() {
+        let layers = lenet_layers();
+        for batch in [1usize, 32, 256] {
+            let zo = fp32(&layers, batch, Method::FullZo, false).total();
+            let e1 = fp32(&layers, batch, Method::Elastic { bp_layers: 1 }, false).total();
+            let e2 = fp32(&layers, batch, Method::Elastic { bp_layers: 2 }, false).total();
+            let bp = fp32(&layers, batch, Method::FullBp, false).total();
+            assert!(zo <= e1 && e1 <= e2 && e2 <= bp, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn full_bp_is_twice_inference() {
+        // Eq. 2 vs Eq. 3: Full BP keeps g,e mirroring θ,a exactly.
+        let layers = lenet_layers();
+        let zo = fp32(&layers, 32, Method::FullZo, false);
+        let bp = fp32(&layers, 32, Method::FullBp, false);
+        assert_eq!(bp.total(), 2 * zo.total());
+    }
+
+    #[test]
+    fn paper_ratio_acts_to_params_b256() {
+        // paper Sec 5.3: a+e is 42.9x params at B=256 for LeNet
+        let layers = lenet_layers();
+        let bp = fp32(&layers, 256, Method::FullBp, false);
+        let ratio = (bp.acts + bp.errors) as f64 / (bp.params + bp.grads) as f64;
+        assert!((ratio - 42.9).abs() < 0.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn paper_cls2_overhead_b32() {
+        // paper Fig 4: ZO-Feat-Cls2 (BP on ONE layer) adds ~4.6 KB over
+        // Full ZO at B=32
+        let layers = lenet_layers();
+        let zo = fp32(&layers, 32, Method::FullZo, false).total();
+        let e1 = fp32(&layers, 32, Method::Elastic { bp_layers: 1 }, false).total();
+        let overhead = e1 - zo;
+        assert!(
+            (4_000..6_000).contains(&overhead),
+            "Cls2 overhead {overhead} B"
+        );
+    }
+
+    #[test]
+    fn paper_cls1_overhead_b32() {
+        // paper Fig 4: ZO-Feat-Cls1 (BP on TWO layers) adds ~65 KB over
+        // Full ZO at B=32
+        let layers = lenet_layers();
+        let zo = fp32(&layers, 32, Method::FullZo, false).total();
+        let e2 = fp32(&layers, 32, Method::Elastic { bp_layers: 2 }, false).total();
+        let overhead = e2 - zo;
+        assert!(
+            (55_000..75_000).contains(&overhead),
+            "Cls1 overhead {overhead} B"
+        );
+    }
+
+    #[test]
+    fn int8_saves_1_4_to_1_7x_vs_fp32() {
+        // paper: INT8 ZO methods need 1.46-1.60x less memory than FP32
+        let layers = lenet_layers();
+        for method in [
+            Method::FullZo,
+            Method::Elastic { bp_layers: 1 },
+            Method::Elastic { bp_layers: 2 },
+        ] {
+            for batch in [32usize, 256] {
+                let f = fp32(&layers, batch, method, false).total();
+                let i = int8(&layers, batch, method).total();
+                let ratio = f as f64 / i as f64;
+                assert!(
+                    (1.35..1.75).contains(&ratio),
+                    "{method:?} batch {batch}: ratio {ratio}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_ordering_invariant() {
+        let layers = lenet_layers();
+        let zo = int8(&layers, 32, Method::FullZo).total();
+        let e1 = int8(&layers, 32, Method::Elastic { bp_layers: 1 }).total();
+        let e2 = int8(&layers, 32, Method::Elastic { bp_layers: 2 }).total();
+        let bp = int8(&layers, 32, Method::FullBp).total();
+        assert!(zo <= e1 && e1 <= e2 && e2 <= bp);
+    }
+
+    #[test]
+    fn adam_adds_two_param_copies() {
+        let layers = lenet_layers();
+        let sgd = fp32(&layers, 32, Method::FullBp, false);
+        let adam = fp32(&layers, 32, Method::FullBp, true);
+        assert_eq!(adam.opt_state, 2 * sgd.grads);
+    }
+
+    #[test]
+    fn pointnet_activations_dominate() {
+        // paper Fig 6: activations+errors are >99% for ElasticZO PointNet
+        let layers = pointnet_layers(1024, 40);
+        let e2 = fp32(&layers, 32, Method::Elastic { bp_layers: 2 }, false);
+        let frac = (e2.acts + e2.errors) as f64 / e2.total() as f64;
+        assert!(frac > 0.985, "act fraction {frac}");
+    }
+
+    #[test]
+    fn pointnet_tail_grads_negligible() {
+        // paper: Cls2/Cls1 grads+errors are 0.0087%/0.12% of the total
+        let layers = pointnet_layers(1024, 40);
+        let e1 = fp32(&layers, 32, Method::Elastic { bp_layers: 1 }, false);
+        let frac = (e1.grads + e1.errors) as f64 / e1.total() as f64;
+        assert!(frac < 0.002, "tail fraction {frac}");
+    }
+}

@@ -1,0 +1,123 @@
+//! Layer tables for the memory model: the paper's LeNet-5 variant and
+//! vanilla PointNet, with ReLU as standalone layers (paper accounting).
+
+use super::LayerInfo;
+
+/// LeNet-5 (paper variant: 5×5 convs with pad 2): 107,786 params.
+pub fn lenet_layers() -> Vec<LayerInfo> {
+    vec![
+        LayerInfo { name: "conv1", params: 6 * 1 * 5 * 5 + 6, act: 6 * 28 * 28 },
+        LayerInfo { name: "relu1", params: 0, act: 6 * 28 * 28 },
+        LayerInfo { name: "pool1", params: 0, act: 6 * 14 * 14 },
+        LayerInfo { name: "conv2", params: 16 * 6 * 5 * 5 + 16, act: 16 * 14 * 14 },
+        LayerInfo { name: "relu2", params: 0, act: 16 * 14 * 14 },
+        LayerInfo { name: "pool2", params: 0, act: 16 * 7 * 7 },
+        LayerInfo { name: "fc1", params: 784 * 120 + 120, act: 120 },
+        LayerInfo { name: "relu3", params: 0, act: 120 },
+        LayerInfo { name: "fc2", params: 120 * 84 + 84, act: 84 },
+        LayerInfo { name: "relu4", params: 0, act: 84 },
+        LayerInfo { name: "fc3", params: 84 * 10 + 10, act: 10 },
+    ]
+}
+
+/// INT8 LeNet-5: NITI carries no biases.
+pub fn lenet_int8_layers() -> Vec<LayerInfo> {
+    vec![
+        LayerInfo { name: "conv1", params: 6 * 1 * 5 * 5, act: 6 * 28 * 28 },
+        LayerInfo { name: "relu1", params: 0, act: 6 * 28 * 28 },
+        LayerInfo { name: "pool1", params: 0, act: 6 * 14 * 14 },
+        LayerInfo { name: "conv2", params: 16 * 6 * 5 * 5, act: 16 * 14 * 14 },
+        LayerInfo { name: "relu2", params: 0, act: 16 * 14 * 14 },
+        LayerInfo { name: "pool2", params: 0, act: 16 * 7 * 7 },
+        LayerInfo { name: "fc1", params: 784 * 120, act: 120 },
+        LayerInfo { name: "relu3", params: 0, act: 120 },
+        LayerInfo { name: "fc2", params: 120 * 84, act: 84 },
+        LayerInfo { name: "relu4", params: 0, act: 84 },
+        LayerInfo { name: "fc3", params: 84 * 10, act: 10 },
+    ]
+}
+
+/// PointNet with `n` points and `ncls` classes (~816k params at ncls=40).
+pub fn pointnet_layers(n: usize, ncls: usize) -> Vec<LayerInfo> {
+    let feat = [3usize, 64, 64, 64, 128, 1024];
+    let mut out = Vec::new();
+    for i in 0..feat.len() - 1 {
+        let (k, m) = (feat[i], feat[i + 1]);
+        out.push(LayerInfo {
+            name: match i {
+                0 => "feat1",
+                1 => "feat2",
+                2 => "feat3",
+                3 => "feat4",
+                _ => "feat5",
+            },
+            params: k * m + m,
+            act: m * n,
+        });
+        out.push(LayerInfo {
+            name: match i {
+                0 => "frelu1",
+                1 => "frelu2",
+                2 => "frelu3",
+                3 => "frelu4",
+                _ => "frelu5",
+            },
+            params: 0,
+            act: m * n,
+        });
+    }
+    out.push(LayerInfo { name: "maxpool", params: 0, act: 1024 });
+    let head = [1024usize, 512, 256, ncls];
+    for i in 0..3 {
+        let (k, m) = (head[i], head[i + 1]);
+        out.push(LayerInfo {
+            name: match i {
+                0 => "head1",
+                1 => "head2",
+                _ => "head3",
+            },
+            params: k * m + m,
+            act: m,
+        });
+        if i < 2 {
+            out.push(LayerInfo {
+                name: if i == 0 { "hrelu1" } else { "hrelu2" },
+                params: 0,
+                act: m,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_param_total_matches_paper() {
+        let total: usize = lenet_layers().iter().map(|l| l.params).sum();
+        assert_eq!(total, 107_786);
+    }
+
+    #[test]
+    fn pointnet_param_total_near_paper() {
+        let total: usize = pointnet_layers(1024, 40).iter().map(|l| l.params).sum();
+        assert!((total as f64 - 816_744.0).abs() / 816_744.0 < 0.005, "{total}");
+    }
+
+    #[test]
+    fn pointnet_biggest_activation_is_feat5() {
+        // paper: the last feat FC produces (B,N,1024) — dominates memory
+        let layers = pointnet_layers(1024, 40);
+        let max = layers.iter().max_by_key(|l| l.act).unwrap();
+        assert_eq!(max.act, 1024 * 1024);
+    }
+
+    #[test]
+    fn int8_lenet_has_no_biases() {
+        let fp: usize = lenet_layers().iter().map(|l| l.params).sum();
+        let i8_: usize = lenet_int8_layers().iter().map(|l| l.params).sum();
+        assert_eq!(fp - i8_, 6 + 16 + 120 + 84 + 10);
+    }
+}

@@ -1,0 +1,324 @@
+//! 2-D convolution (stride 1, symmetric zero padding) via im2col + GEMM
+//! — the same lowering the Pallas conv kernel uses (DESIGN.md
+//! §Hardware-Adaptation), so numerics line up across engines.
+//!
+//! Patch-matrix layout matches python/compile/kernels/ref.py::im2col:
+//! rows are (b, oy, ox), columns are c*kh*kw + i*kw + j.
+
+use crate::tensor::ops;
+
+/// im2col: x (B,C,H,W) -> cols (B*OH*OW, C*KH*KW), stride 1.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    bsz: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    pad: usize,
+) -> (Vec<f32>, usize, usize) {
+    let oh = h + 2 * pad - kh + 1;
+    let ow = w + 2 * pad - kw + 1;
+    let ckk = c * kh * kw;
+    let mut cols = vec![0.0f32; bsz * oh * ow * ckk];
+    for b in 0..bsz {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((b * oh + oy) * ow + ox) * ckk;
+                for cc in 0..c {
+                    for i in 0..kh {
+                        let iy = oy + i;
+                        if iy < pad || iy >= h + pad {
+                            continue; // zero padding
+                        }
+                        let src_y = iy - pad;
+                        for j in 0..kw {
+                            let ix = ox + j;
+                            if ix < pad || ix >= w + pad {
+                                continue;
+                            }
+                            let src_x = ix - pad;
+                            cols[row + (cc * kh + i) * kw + j] =
+                                x[((b * c + cc) * h + src_y) * w + src_x];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (cols, oh, ow)
+}
+
+/// col2im: scatter-add cols (B*OH*OW, C*KH*KW) back to (B,C,H,W).
+#[allow(clippy::too_many_arguments)]
+pub fn col2im(
+    cols: &[f32],
+    bsz: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let oh = h + 2 * pad - kh + 1;
+    let ow = w + 2 * pad - kw + 1;
+    let ckk = c * kh * kw;
+    let mut x = vec![0.0f32; bsz * c * h * w];
+    for b in 0..bsz {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((b * oh + oy) * ow + ox) * ckk;
+                for cc in 0..c {
+                    for i in 0..kh {
+                        let iy = oy + i;
+                        if iy < pad || iy >= h + pad {
+                            continue;
+                        }
+                        let src_y = iy - pad;
+                        for j in 0..kw {
+                            let ix = ox + j;
+                            if ix < pad || ix >= w + pad {
+                                continue;
+                            }
+                            let src_x = ix - pad;
+                            x[((b * c + cc) * h + src_y) * w + src_x] +=
+                                cols[row + (cc * kh + i) * kw + j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    x
+}
+
+/// Conv forward. Weights `(OC, C, KH, KW)` row-major, bias `(OC,)`.
+/// Output layout `(B, OC, OH, OW)`. Returns `(out, cols)` — the patch
+/// matrix is cached for the backward pass.
+#[allow(clippy::too_many_arguments)]
+pub fn forward(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    bsz: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    cout: usize,
+    k: usize,
+    pad: usize,
+    relu: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    let (cols, oh, ow) = im2col(x, bsz, cin, h, w, k, k, pad);
+    let ckk = cin * k * k;
+    let rows = bsz * oh * ow;
+    // out_mat (rows, OC) = cols (rows, CKK) @ wT (CKK, OC)
+    let mut wt_t = vec![0.0f32; ckk * cout];
+    for oc in 0..cout {
+        for e in 0..ckk {
+            wt_t[e * cout + oc] = wt[oc * ckk + e];
+        }
+    }
+    let mut out_mat = vec![0.0f32; rows * cout];
+    ops::matmul_f32_into(&cols, &wt_t, &mut out_mat, rows, ckk, cout);
+    // (rows, OC) -> (B, OC, OH, OW) with bias and ReLU
+    let mut out = vec![0.0f32; bsz * cout * oh * ow];
+    for b in 0..bsz {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let r = ((b * oh + oy) * ow + ox) * cout;
+                for oc in 0..cout {
+                    let mut v = out_mat[r + oc] + bias[oc];
+                    if relu && v < 0.0 {
+                        v = 0.0;
+                    }
+                    out[((b * cout + oc) * oh + oy) * ow + ox] = v;
+                }
+            }
+        }
+    }
+    (out, cols)
+}
+
+/// Conv backward.
+///
+/// * `e_out` — upstream error on the (post-ReLU) output `(B,OC,OH,OW)`
+/// * `out` — the forward output (ReLU mask source)
+/// * `cols` — cached patch matrix from forward
+///
+/// Returns `(gw (OC,C,KH,KW), gb (OC,), e_in (B,C,H,W))`.
+#[allow(clippy::too_many_arguments)]
+pub fn backward(
+    e_out: &[f32],
+    out: &[f32],
+    cols: &[f32],
+    wt: &[f32],
+    bsz: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    cout: usize,
+    k: usize,
+    pad: usize,
+    relu: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let oh = h + 2 * pad - k + 1;
+    let ow = w + 2 * pad - k + 1;
+    let rows = bsz * oh * ow;
+    let ckk = cin * k * k;
+    // e as (rows, OC) with ReLU mask applied
+    let mut e_mat = vec![0.0f32; rows * cout];
+    for b in 0..bsz {
+        for oc in 0..cout {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let src = ((b * cout + oc) * oh + oy) * ow + ox;
+                    let mut ev = e_out[src];
+                    if relu && out[src] <= 0.0 {
+                        ev = 0.0;
+                    }
+                    e_mat[((b * oh + oy) * ow + ox) * cout + oc] = ev;
+                }
+            }
+        }
+    }
+    // gw (OC, CKK) = e_matᵀ (OC, rows) @ cols (rows, CKK)
+    let mut gw = vec![0.0f32; cout * ckk];
+    for r in 0..rows {
+        let er = &e_mat[r * cout..(r + 1) * cout];
+        let cr = &cols[r * ckk..(r + 1) * ckk];
+        for (oc, &ev) in er.iter().enumerate() {
+            if ev == 0.0 {
+                continue;
+            }
+            let grow = &mut gw[oc * ckk..(oc + 1) * ckk];
+            for (gv, &cv) in grow.iter_mut().zip(cr) {
+                *gv += ev * cv;
+            }
+        }
+    }
+    // gb = per-channel sums
+    let mut gb = vec![0.0f32; cout];
+    for r in 0..rows {
+        for oc in 0..cout {
+            gb[oc] += e_mat[r * cout + oc];
+        }
+    }
+    // e_cols (rows, CKK) = e_mat (rows, OC) @ wt (OC, CKK); then col2im
+    let mut e_cols = vec![0.0f32; rows * ckk];
+    ops::matmul_f32_into(&e_mat, wt, &mut e_cols, rows, cout, ckk);
+    let e_in = col2im(&e_cols, bsz, cin, h, w, k, k, pad);
+    (gw, gb, e_in)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// 1×1 input, 1×1 kernel: conv is a scalar multiply.
+    #[test]
+    fn conv_1x1_scalar() {
+        let (out, _) = forward(&[3.0], &[2.0], &[1.0], 1, 1, 1, 1, 1, 1, 0, false);
+        assert_eq!(out, vec![7.0]);
+    }
+
+    #[test]
+    fn conv_known_3x3() {
+        // 3x3 image, 3x3 all-ones kernel, pad 1: center output = sum of all
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let wt = vec![1.0f32; 9];
+        let (out, _) = forward(&x, &wt, &[0.0], 1, 1, 3, 3, 1, 3, 1, false);
+        assert_eq!(out.len(), 9);
+        assert_eq!(out[4], 45.0); // center sees everything
+        assert_eq!(out[0], 1.0 + 2.0 + 4.0 + 5.0); // corner
+    }
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), c> == <x, col2im(c)> (adjointness), the property
+        // conv backward relies on.
+        prop::cases(5, |rng, _| {
+            let (b, c, h, w, k, pad) = (2usize, 3usize, 6usize, 5usize, 3usize, 1usize);
+            let x: Vec<f32> = (0..b * c * h * w).map(|_| rng.normal()).collect();
+            let (cols, oh, ow) = im2col(&x, b, c, h, w, k, k, pad);
+            let cvec: Vec<f32> = (0..b * oh * ow * c * k * k).map(|_| rng.normal()).collect();
+            let lhs: f64 = cols.iter().zip(&cvec).map(|(a, b)| (a * b) as f64).sum();
+            let back = col2im(&cvec, b, c, h, w, k, k, pad);
+            let rhs: f64 = x.iter().zip(&back).map(|(a, b)| (a * b) as f64).sum();
+            assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+        });
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        prop::cases(3, |rng, _| {
+            let (b, cin, h, w, cout, k, pad) = (1usize, 2, 5, 5, 3, 3, 1);
+            let x: Vec<f32> = (0..b * cin * h * w).map(|_| rng.normal()).collect();
+            let wt: Vec<f32> = (0..cout * cin * k * k).map(|_| rng.normal() * 0.3).collect();
+            let bias: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+            let loss = |wt: &[f32]| -> f64 {
+                let (out, _) = forward(&x, wt, &bias, b, cin, h, w, cout, k, pad, true);
+                out.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / 2.0
+            };
+            let (out, cols) = forward(&x, &wt, &bias, b, cin, h, w, cout, k, pad, true);
+            let (gw, _gb, _) =
+                backward(&out, &out, &cols, &wt, b, cin, h, w, cout, k, pad, true);
+            let eps = 1e-3f32;
+            for idx in [0usize, wt.len() / 2, wt.len() - 1] {
+                let mut wp = wt.clone();
+                wp[idx] += eps;
+                let mut wm = wt.clone();
+                wm[idx] -= eps;
+                let fd = (loss(&wp) - loss(&wm)) / (2.0 * eps as f64);
+                assert!(
+                    (fd - gw[idx] as f64).abs() < 3e-2 * (1.0 + fd.abs()),
+                    "gw[{idx}] fd {fd} vs {}",
+                    gw[idx]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn input_grad_finite_difference() {
+        prop::cases(2, |rng, _| {
+            let (b, cin, h, w, cout, k, pad) = (1usize, 1, 4, 4, 2, 3, 1);
+            let x: Vec<f32> = (0..b * cin * h * w).map(|_| rng.normal()).collect();
+            let wt: Vec<f32> = (0..cout * cin * k * k).map(|_| rng.normal() * 0.3).collect();
+            let bias = vec![0.0f32; cout];
+            let loss = |x: &[f32]| -> f64 {
+                let (out, _) = forward(x, &wt, &bias, b, cin, h, w, cout, k, pad, false);
+                out.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / 2.0
+            };
+            let (out, cols) = forward(&x, &wt, &bias, b, cin, h, w, cout, k, pad, false);
+            let (_, _, e_in) =
+                backward(&out, &out, &cols, &wt, b, cin, h, w, cout, k, pad, false);
+            let eps = 1e-3f32;
+            for idx in 0..x.len() {
+                let mut xp = x.clone();
+                xp[idx] += eps;
+                let mut xm = x.clone();
+                xm[idx] -= eps;
+                let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+                assert!(
+                    (fd - e_in[idx] as f64).abs() < 3e-2 * (1.0 + fd.abs()),
+                    "e_in[{idx}] fd {fd} vs {}",
+                    e_in[idx]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn lenet_shapes() {
+        let x = vec![0.5f32; 2 * 1 * 28 * 28];
+        let wt = vec![0.01f32; 6 * 1 * 5 * 5];
+        let bias = vec![0.0f32; 6];
+        let (out, _) = forward(&x, &wt, &bias, 2, 1, 28, 28, 6, 5, 2, true);
+        assert_eq!(out.len(), 2 * 6 * 28 * 28);
+    }
+}

@@ -1,0 +1,261 @@
+//! Native LeNet-5 (paper variant): forward, tail-BP and full-BP.
+//!
+//! Parameter ABI (identical to python/compile/model.py::LENET_PARAMS):
+//! `[conv1_w, conv1_b, conv2_w, conv2_b, fc1_w, fc1_b, fc2_w, fc2_b,
+//!   fc3_w, fc3_b]` — 107,786 params total.
+
+use super::{conv, linear, loss, pool, Forward, TailGrads};
+
+pub const NCLASS: usize = 10;
+pub const FLAT: usize = 784; // 16 * 7 * 7
+
+/// `(name, shape)` of every parameter in ABI order.
+pub const PARAM_SPECS: [(&str, &[usize]); 10] = [
+    ("conv1_w", &[6, 1, 5, 5]),
+    ("conv1_b", &[6]),
+    ("conv2_w", &[16, 6, 5, 5]),
+    ("conv2_b", &[16]),
+    ("fc1_w", &[784, 120]),
+    ("fc1_b", &[120]),
+    ("fc2_w", &[120, 84]),
+    ("fc2_b", &[84]),
+    ("fc3_w", &[84, 10]),
+    ("fc3_b", &[10]),
+];
+
+/// Activation cache for the full backward pass.
+pub struct Cache {
+    pub x: Vec<f32>,
+    pub cols1: Vec<f32>,
+    pub out1: Vec<f32>,
+    pub arg1: Vec<u32>,
+    pub pool1: Vec<f32>,
+    pub cols2: Vec<f32>,
+    pub out2: Vec<f32>,
+    pub arg2: Vec<u32>,
+    pub flat: Vec<f32>,
+    pub a1: Vec<f32>,
+    pub a2: Vec<f32>,
+    pub logits: Vec<f32>,
+    pub bsz: usize,
+}
+
+/// Forward + loss. `x` is `(B,1,28,28)` flattened, `y` one-hot `(B,10)`.
+pub fn forward(params: &[Vec<f32>], x: &[f32], y: &[f32], bsz: usize) -> (Forward, Cache) {
+    assert_eq!(params.len(), 10);
+    assert_eq!(x.len(), bsz * 784);
+    let (out1, cols1) =
+        conv::forward(x, &params[0], &params[1], bsz, 1, 28, 28, 6, 5, 2, true);
+    let (pool1, arg1) = pool::maxpool2_forward(&out1, bsz, 6, 28, 28);
+    let (out2, cols2) =
+        conv::forward(&pool1, &params[2], &params[3], bsz, 6, 14, 14, 16, 5, 2, true);
+    let (pool2, arg2) = pool::maxpool2_forward(&out2, bsz, 16, 14, 14);
+    let flat = pool2; // (B,16,7,7) row-major == (B,784)
+    let a1 = linear::forward(&flat, &params[4], &params[5], bsz, FLAT, 120, true);
+    let a2 = linear::forward(&a1, &params[6], &params[7], bsz, 120, 84, true);
+    let logits = linear::forward(&a2, &params[8], &params[9], bsz, 84, NCLASS, false);
+    let l = loss::cross_entropy(&logits, y, bsz, NCLASS);
+    (
+        Forward {
+            loss: l,
+            logits: logits.clone(),
+            act_c2: a1.clone(),
+            act_c1: a2.clone(),
+        },
+        Cache {
+            x: x.to_vec(),
+            cols1,
+            out1,
+            arg1,
+            pool1,
+            cols2,
+            out2,
+            arg2,
+            flat,
+            a1,
+            a2,
+            logits,
+            bsz,
+        },
+    )
+}
+
+/// BP for the last `k` ∈ {1,2} FC layers (ZO-Feat-Cls1 / -Cls2).
+/// Inputs are the partition activations returned by `forward`.
+pub fn tail_grads(params: &[Vec<f32>], fwd: &Forward, y: &[f32], k: usize, bsz: usize) -> TailGrads {
+    match k {
+        1 => {
+            let a = &fwd.act_c1; // (B,84)
+            let logits = linear::forward(a, &params[8], &params[9], bsz, 84, NCLASS, false);
+            let e = loss::cross_entropy_grad(&logits, y, bsz, NCLASS);
+            let (gw, gb, _) =
+                linear::backward(a, &params[8], &logits, &e, bsz, 84, NCLASS, false);
+            vec![(8, gw), (9, gb)]
+        }
+        2 => {
+            let a1 = &fwd.act_c2; // (B,120)
+            let a2 = linear::forward(a1, &params[6], &params[7], bsz, 120, 84, true);
+            let logits = linear::forward(&a2, &params[8], &params[9], bsz, 84, NCLASS, false);
+            let e = loss::cross_entropy_grad(&logits, y, bsz, NCLASS);
+            let (gw5, gb5, e2) =
+                linear::backward(&a2, &params[8], &logits, &e, bsz, 84, NCLASS, false);
+            let (gw4, gb4, _) =
+                linear::backward(a1, &params[6], &a2, &e2, bsz, 120, 84, true);
+            vec![(6, gw4), (7, gb4), (8, gw5), (9, gb5)]
+        }
+        _ => panic!("tail_grads supports k in {{1,2}}, got {k}"),
+    }
+}
+
+/// Full backward: gradients for all 10 parameters (Full-BP baseline).
+pub fn full_grads(params: &[Vec<f32>], cache: &Cache, y: &[f32]) -> Vec<Vec<f32>> {
+    let bsz = cache.bsz;
+    let e = loss::cross_entropy_grad(&cache.logits, y, bsz, NCLASS);
+    let (gw5, gb5, e_a2) =
+        linear::backward(&cache.a2, &params[8], &cache.logits, &e, bsz, 84, NCLASS, false);
+    let (gw4, gb4, e_a1) =
+        linear::backward(&cache.a1, &params[6], &cache.a2, &e_a2, bsz, 120, 84, true);
+    let (gw3, gb3, e_flat) =
+        linear::backward(&cache.flat, &params[4], &cache.a1, &e_a1, bsz, FLAT, 120, true);
+    // flat == pool2 output; route error back through pool2 -> conv2
+    let e_out2 = pool::maxpool2_backward(&e_flat, &cache.arg2, bsz * 16 * 14 * 14);
+    let (gw2, gb2, e_pool1) = conv::backward(
+        &e_out2, &cache.out2, &cache.cols2, &params[2], bsz, 6, 14, 14, 16, 5, 2, true,
+    );
+    let e_out1 = pool::maxpool2_backward(&e_pool1, &cache.arg1, bsz * 6 * 28 * 28);
+    let (gw1, gb1, _) = conv::backward(
+        &e_out1, &cache.out1, &cache.cols1, &params[0], bsz, 1, 28, 28, 6, 5, 2, true,
+    );
+    vec![gw1, gb1, gw2, gb2, gw3, gb3, gw4, gb4, gw5, gb5]
+}
+
+/// Total parameter count (must equal the paper's 107,786).
+pub fn param_count() -> usize {
+    PARAM_SPECS
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng64;
+
+    pub fn init_params(seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng64::new(seed);
+        PARAM_SPECS
+            .iter()
+            .map(|(_, shape)| {
+                let n: usize = shape.iter().product();
+                // conv (OC,C,KH,KW): fan_in = C*KH*KW; fc (K,N): fan_in = K
+                let fan_in = match shape.len() {
+                    4 => shape[1] * shape[2] * shape[3],
+                    2 => shape[0],
+                    _ => n,
+                };
+                let mut v = vec![0.0f32; n];
+                rng.fill_kaiming_uniform(&mut v, fan_in);
+                v
+            })
+            .collect()
+    }
+
+    fn batch(bsz: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng64::new(seed);
+        let x: Vec<f32> = (0..bsz * 784).map(|_| rng.uniform()).collect();
+        let mut y = vec![0.0f32; bsz * 10];
+        for r in 0..bsz {
+            y[r * 10 + (rng.next_u64() % 10) as usize] = 1.0;
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn param_count_matches_paper() {
+        assert_eq!(param_count(), 107_786);
+    }
+
+    #[test]
+    fn forward_shapes_and_loss_near_log10() {
+        let params = init_params(1);
+        let (x, y) = batch(4, 2);
+        let (fwd, _) = forward(&params, &x, &y, 4);
+        assert_eq!(fwd.logits.len(), 40);
+        assert_eq!(fwd.act_c2.len(), 4 * 120);
+        assert_eq!(fwd.act_c1.len(), 4 * 84);
+        // random init -> a finite, plausible CE (exact magnitude depends
+        // on the unnormalized uniform inputs used here)
+        assert!(fwd.loss.is_finite() && fwd.loss > 0.5 && fwd.loss < 20.0, "loss {}", fwd.loss);
+    }
+
+    #[test]
+    fn tail1_matches_full_grads() {
+        let params = init_params(3);
+        let (x, y) = batch(3, 4);
+        let (fwd, cache) = forward(&params, &x, &y, 3);
+        let tail = tail_grads(&params, &fwd, &y, 1, 3);
+        let full = full_grads(&params, &cache, &y);
+        for (idx, g) in &tail {
+            for (a, b) in g.iter().zip(&full[*idx]) {
+                assert!((a - b).abs() < 1e-5, "param {idx}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn tail2_matches_full_grads() {
+        let params = init_params(5);
+        let (x, y) = batch(3, 6);
+        let (fwd, cache) = forward(&params, &x, &y, 3);
+        let tail = tail_grads(&params, &fwd, &y, 2, 3);
+        let full = full_grads(&params, &cache, &y);
+        assert_eq!(tail.len(), 4);
+        for (idx, g) in &tail {
+            for (a, b) in g.iter().zip(&full[*idx]) {
+                assert!((a - b).abs() < 1e-5, "param {idx}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_grads_finite_difference_spotcheck() {
+        let params = init_params(7);
+        let (x, y) = batch(2, 8);
+        let (_, cache) = forward(&params, &x, &y, 2);
+        let grads = full_grads(&params, &cache, &y);
+        let eps = 2e-3f32;
+        // spot-check a few weights in each layer
+        for (pi, n_checks) in [(0usize, 2usize), (2, 2), (4, 2), (8, 3)] {
+            let plen = params[pi].len();
+            for t in 0..n_checks {
+                let idx = (t * 7919) % plen;
+                let mut pp = params.clone();
+                pp[pi][idx] += eps;
+                let (fp, _) = forward(&pp, &x, &y, 2);
+                let mut pm = params.clone();
+                pm[pi][idx] -= eps;
+                let (fm, _) = forward(&pm, &x, &y, 2);
+                let fd = (fp.loss - fm.loss) / (2.0 * eps);
+                let g = grads[pi][idx];
+                assert!(
+                    (fd - g).abs() < 5e-2 * (1.0 + fd.abs().max(g.abs())),
+                    "param {pi}[{idx}]: fd {fd} vs bp {g}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_step_decreases_loss() {
+        let mut params = init_params(9);
+        let (x, y) = batch(8, 10);
+        let (f0, cache) = forward(&params, &x, &y, 8);
+        let grads = full_grads(&params, &cache, &y);
+        for (p, g) in params.iter_mut().zip(&grads) {
+            crate::tensor::ops::axpy(-0.05, g, p);
+        }
+        let (f1, _) = forward(&params, &x, &y, 8);
+        assert!(f1.loss < f0.loss, "{} -> {}", f0.loss, f1.loss);
+    }
+}

@@ -1,0 +1,178 @@
+//! Fully-connected layer: forward and backward on flat slices.
+
+use crate::tensor::ops;
+
+/// y(B,N) = x(B,K) @ w(K,N) + b(N), optional ReLU.
+pub fn forward(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    bsz: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; bsz * n];
+    ops::matmul_f32_into(x, w, &mut y, bsz, k, n);
+    for row in 0..bsz {
+        for j in 0..n {
+            let v = &mut y[row * n + j];
+            *v += b[j];
+            if relu && *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+    y
+}
+
+/// Backward through `y = act(x @ w + b)`.
+///
+/// * `e_out` — upstream error ∂L/∂y, `(B,N)`
+/// * `y` — the layer's own output (used for the ReLU mask)
+/// * returns `(gw (K,N), gb (N,), e_in (B,K))`
+#[allow(clippy::too_many_arguments)]
+pub fn backward(
+    x: &[f32],
+    w: &[f32],
+    y: &[f32],
+    e_out: &[f32],
+    bsz: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    // ReLU mask: zero error where the output was clamped.
+    let mut e = e_out.to_vec();
+    if relu {
+        for (ev, &yv) in e.iter_mut().zip(y) {
+            if yv <= 0.0 {
+                *ev = 0.0;
+            }
+        }
+    }
+    // gw = xᵀ e : (K,B)@(B,N)
+    let mut gw = vec![0.0f32; k * n];
+    for row in 0..bsz {
+        let xr = &x[row * k..(row + 1) * k];
+        let er = &e[row * n..(row + 1) * n];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let grow = &mut gw[kk * n..(kk + 1) * n];
+            for (gv, &ev) in grow.iter_mut().zip(er) {
+                *gv += xv * ev;
+            }
+        }
+    }
+    // gb = column sums of e
+    let mut gb = vec![0.0f32; n];
+    for row in 0..bsz {
+        for j in 0..n {
+            gb[j] += e[row * n + j];
+        }
+    }
+    // e_in = e @ wᵀ : (B,N)@(N,K)
+    let mut e_in = vec![0.0f32; bsz * k];
+    for row in 0..bsz {
+        let er = &e[row * n..(row + 1) * n];
+        let ei = &mut e_in[row * k..(row + 1) * k];
+        for (kk, eiv) in ei.iter_mut().enumerate() {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (&ev, &wv) in er.iter().zip(wrow) {
+                acc += ev * wv;
+            }
+            *eiv = acc;
+        }
+    }
+    (gw, gb, e_in)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn forward_known() {
+        // x = [1,2], w = [[1,0],[0,1]], b = [10, -10]
+        let y = forward(&[1.0, 2.0], &[1.0, 0.0, 0.0, 1.0], &[10.0, -10.0], 1, 2, 2, false);
+        assert_eq!(y, vec![11.0, -8.0]);
+        let yr = forward(&[1.0, 2.0], &[1.0, 0.0, 0.0, 1.0], &[10.0, -10.0], 1, 2, 2, true);
+        assert_eq!(yr, vec![11.0, 0.0]);
+    }
+
+    /// Finite-difference check of the full backward.
+    #[test]
+    fn backward_matches_finite_difference() {
+        prop::cases(5, |rng, _| {
+            let (bsz, k, n) = (3usize, 5usize, 4usize);
+            let x: Vec<f32> = (0..bsz * k).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+            // scalar loss L = sum(y^2)/2 so e_out = y
+            let loss = |w: &[f32], b: &[f32]| -> f64 {
+                let y = forward(&x, w, b, bsz, k, n, true);
+                y.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / 2.0
+            };
+            let y = forward(&x, &w, &b, bsz, k, n, true);
+            let (gw, gb, _) = backward(&x, &w, &y, &y, bsz, k, n, true);
+            let eps = 1e-3f32;
+            for idx in [0usize, k * n / 2, k * n - 1] {
+                let mut wp = w.clone();
+                wp[idx] += eps;
+                let mut wm = w.clone();
+                wm[idx] -= eps;
+                let fd = (loss(&wp, &b) - loss(&wm, &b)) / (2.0 * eps as f64);
+                assert!(
+                    (fd - gw[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "gw[{idx}]: fd {fd} vs {}",
+                    gw[idx]
+                );
+            }
+            for idx in 0..n {
+                let mut bp = b.clone();
+                bp[idx] += eps;
+                let mut bm = b.clone();
+                bm[idx] -= eps;
+                let fd = (loss(&w, &bp) - loss(&w, &bm)) / (2.0 * eps as f64);
+                assert!(
+                    (fd - gb[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "gb[{idx}]: fd {fd} vs {}",
+                    gb[idx]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn backward_input_error_finite_difference() {
+        prop::cases(3, |rng, _| {
+            let (bsz, k, n) = (2usize, 4usize, 3usize);
+            let x: Vec<f32> = (0..bsz * k).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+            let b: Vec<f32> = vec![0.0; n];
+            let loss = |x: &[f32]| -> f64 {
+                let y = forward(x, &w, &b, bsz, k, n, false);
+                y.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / 2.0
+            };
+            let y = forward(&x, &w, &b, bsz, k, n, false);
+            let (_, _, e_in) = backward(&x, &w, &y, &y, bsz, k, n, false);
+            let eps = 1e-3f32;
+            for idx in 0..x.len() {
+                let mut xp = x.clone();
+                xp[idx] += eps;
+                let mut xm = x.clone();
+                xm[idx] -= eps;
+                let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+                assert!(
+                    (fd - e_in[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "e_in[{idx}]: fd {fd} vs {}",
+                    e_in[idx]
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,152 @@
+//! Softmax cross-entropy: mean loss over the batch and its logits
+//! gradient — the BP-tail seed (paper Alg. 1, line 23).
+
+/// Numerically-stable mean CE from logits (B,N) and one-hot labels.
+pub fn cross_entropy(logits: &[f32], onehot: &[f32], bsz: usize, n: usize) -> f32 {
+    let mut total = 0.0f64;
+    for row in 0..bsz {
+        let lg = &logits[row * n..(row + 1) * n];
+        let oh = &onehot[row * n..(row + 1) * n];
+        let m = lg.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f64 = m as f64
+            + lg.iter()
+                .map(|&v| ((v - m) as f64).exp())
+                .sum::<f64>()
+                .ln();
+        let picked: f64 = lg.iter().zip(oh).map(|(&l, &o)| (l * o) as f64).sum();
+        total += lse - picked;
+    }
+    (total / bsz as f64) as f32
+}
+
+/// Softmax probabilities per row.
+pub fn softmax(logits: &[f32], bsz: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; bsz * n];
+    for row in 0..bsz {
+        let lg = &logits[row * n..(row + 1) * n];
+        let m = lg.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (j, &v) in lg.iter().enumerate() {
+            let e = (v - m).exp();
+            out[row * n + j] = e;
+            sum += e;
+        }
+        for j in 0..n {
+            out[row * n + j] /= sum;
+        }
+    }
+    out
+}
+
+/// ∂(mean CE)/∂logits = (softmax − onehot) / B.
+pub fn cross_entropy_grad(logits: &[f32], onehot: &[f32], bsz: usize, n: usize) -> Vec<f32> {
+    let mut g = softmax(logits, bsz, n);
+    for (gv, &ov) in g.iter_mut().zip(onehot) {
+        *gv = (*gv - ov) / bsz as f32;
+    }
+    g
+}
+
+/// Classification accuracy over the first `real` rows.
+pub fn accuracy(logits: &[f32], labels: &[u8], real: usize, n: usize) -> (usize, usize) {
+    let mut correct = 0;
+    for row in 0..real {
+        let lg = &logits[row * n..(row + 1) * n];
+        let pred = lg
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == labels[row] as usize {
+            correct += 1;
+        }
+    }
+    (correct, real)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn uniform_logits_loss_is_log_n() {
+        let logits = vec![0.0f32; 4 * 10];
+        let mut onehot = vec![0.0f32; 4 * 10];
+        for r in 0..4 {
+            onehot[r * 10 + r] = 1.0;
+        }
+        let l = cross_entropy(&logits, &onehot, 4, 10);
+        assert!((l - (10.0f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_rows_sum_to_zero() {
+        prop::cases(10, |rng, _| {
+            let (b, n) = (4usize, 10usize);
+            let logits: Vec<f32> = (0..b * n).map(|_| rng.normal() * 3.0).collect();
+            let mut onehot = vec![0.0f32; b * n];
+            for r in 0..b {
+                onehot[r * n + (rng.next_u64() % n as u64) as usize] = 1.0;
+            }
+            let g = cross_entropy_grad(&logits, &onehot, b, n);
+            for r in 0..b {
+                let s: f32 = g[r * n..(r + 1) * n].iter().sum();
+                assert!(s.abs() < 1e-6, "row sum {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        prop::cases(5, |rng, _| {
+            let (b, n) = (3usize, 5usize);
+            let logits: Vec<f32> = (0..b * n).map(|_| rng.normal()).collect();
+            let mut onehot = vec![0.0f32; b * n];
+            for r in 0..b {
+                onehot[r * n + (rng.next_u64() % n as u64) as usize] = 1.0;
+            }
+            let g = cross_entropy_grad(&logits, &onehot, b, n);
+            let eps = 1e-3f32;
+            for idx in 0..b * n {
+                let mut lp = logits.clone();
+                lp[idx] += eps;
+                let mut lm = logits.clone();
+                lm[idx] -= eps;
+                let fd = (cross_entropy(&lp, &onehot, b, n)
+                    - cross_entropy(&lm, &onehot, b, n))
+                    / (2.0 * eps);
+                assert!((fd - g[idx]).abs() < 1e-3, "fd {fd} vs {}", g[idx]);
+            }
+        });
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        prop::cases(5, |rng, _| {
+            let (b, n) = (4usize, 7usize);
+            let logits: Vec<f32> = (0..b * n).map(|_| rng.normal() * 5.0).collect();
+            let s = softmax(&logits, b, n);
+            for r in 0..b {
+                let sum: f32 = s[r * n..(r + 1) * n].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn stability_extreme_logits() {
+        let logits = vec![1000.0f32, -1000.0];
+        let onehot = vec![1.0f32, 0.0];
+        let l = cross_entropy(&logits, &onehot, 1, 2);
+        assert!(l.is_finite() && l >= 0.0);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = vec![0.9, 0.1, 0.2, 0.8];
+        let (c, t) = accuracy(&logits, &[0, 0], 2, 2);
+        assert_eq!((c, t), (1, 2));
+    }
+}

@@ -1,0 +1,33 @@
+//! Native f32 NN engine — the pure-rust counterpart of the paper's
+//! C++/NEON on-device implementation.
+//!
+//! Implements forward, tail-backward and full-backward for the two
+//! paper models (LeNet-5, PointNet) on plain slices, mirroring the AOT
+//! artifact ABI exactly (same parameter ordering, same activations
+//! returned at the ZO/BP partition points). Integration tests assert
+//! this engine and the XLA engine agree on loss/logits to float
+//! tolerance.
+
+pub mod conv;
+pub mod lenet;
+pub mod linear;
+pub mod loss;
+pub mod pointnet;
+pub mod pool;
+
+/// Forward result common to both models and both engines.
+#[derive(Debug, Clone)]
+pub struct Forward {
+    /// Mean cross-entropy loss over the batch.
+    pub loss: f32,
+    /// Logits, `bsz * nclass` row-major.
+    pub logits: Vec<f32>,
+    /// Post-ReLU activation entering the second-to-last FC (`a_fc1`/`h1`).
+    pub act_c2: Vec<f32>,
+    /// Post-ReLU activation entering the last FC (`a_fc2`/`h2`).
+    pub act_c1: Vec<f32>,
+}
+
+/// Gradients for the BP tail: `(name_index, grad)` pairs in parameter
+/// ABI order, covering only the last `bp_layers` FC layers.
+pub type TailGrads = Vec<(usize, Vec<f32>)>;

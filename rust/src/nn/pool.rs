@@ -1,0 +1,146 @@
+//! Pooling: 2×2/stride-2 spatial max pool (LeNet) and global max pool
+//! over points (PointNet), both with argmax caching for backward.
+
+/// 2×2 stride-2 max pool over (B,C,H,W). Returns (out, argmax) where
+/// argmax stores the flat input index chosen for each output cell.
+pub fn maxpool2_forward(
+    x: &[f32],
+    bsz: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+) -> (Vec<f32>, Vec<u32>) {
+    assert!(h % 2 == 0 && w % 2 == 0, "maxpool2 needs even dims");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; bsz * c * oh * ow];
+    let mut arg = vec![0u32; bsz * c * oh * ow];
+    for b in 0..bsz {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0u32;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let iy = oy * 2 + dy;
+                            let ix = ox * 2 + dx;
+                            let idx = ((b * c + ch) * h + iy) * w + ix;
+                            if x[idx] > best {
+                                best = x[idx];
+                                best_idx = idx as u32;
+                            }
+                        }
+                    }
+                    let o = ((b * c + ch) * oh + oy) * ow + ox;
+                    out[o] = best;
+                    arg[o] = best_idx;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Max-pool backward: scatter upstream error to the argmax positions.
+pub fn maxpool2_backward(e_out: &[f32], arg: &[u32], input_len: usize) -> Vec<f32> {
+    let mut e_in = vec![0.0f32; input_len];
+    for (ev, &idx) in e_out.iter().zip(arg) {
+        e_in[idx as usize] += ev;
+    }
+    e_in
+}
+
+/// Global max over the point axis: x (B,N,F) -> (out (B,F), argmax (B,F)).
+pub fn global_maxpool_forward(x: &[f32], bsz: usize, n: usize, f: usize) -> (Vec<f32>, Vec<u32>) {
+    let mut out = vec![f32::NEG_INFINITY; bsz * f];
+    let mut arg = vec![0u32; bsz * f];
+    for b in 0..bsz {
+        for p in 0..n {
+            let row = &x[(b * n + p) * f..(b * n + p + 1) * f];
+            for (j, &v) in row.iter().enumerate() {
+                if v > out[b * f + j] {
+                    out[b * f + j] = v;
+                    arg[b * f + j] = ((b * n + p) * f + j) as u32;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+pub fn global_maxpool_backward(e_out: &[f32], arg: &[u32], input_len: usize) -> Vec<f32> {
+    let mut e_in = vec![0.0f32; input_len];
+    for (ev, &idx) in e_out.iter().zip(arg) {
+        e_in[idx as usize] += ev;
+    }
+    e_in
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn maxpool_known() {
+        #[rustfmt::skip]
+        let x = vec![
+            1.0, 2.0, 3.0, 4.0,
+            5.0, 6.0, 7.0, 8.0,
+            9.0, 1.0, 2.0, 3.0,
+            4.0, 5.0, 6.0, 7.0,
+        ];
+        let (out, arg) = maxpool2_forward(&x, 1, 1, 4, 4);
+        assert_eq!(out, vec![6.0, 8.0, 9.0, 7.0]);
+        assert_eq!(arg[0], 5);
+    }
+
+    #[test]
+    fn maxpool_backward_routes_to_argmax() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let (_, arg) = maxpool2_forward(&x, 1, 1, 2, 2);
+        let e_in = maxpool2_backward(&[10.0], &arg, 4);
+        assert_eq!(e_in, vec![0.0, 0.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn maxpool_output_ge_inputs() {
+        prop::cases(5, |rng, _| {
+            let (b, c, h, w) = (2usize, 3usize, 8usize, 8usize);
+            let x: Vec<f32> = (0..b * c * h * w).map(|_| rng.normal()).collect();
+            let (out, _) = maxpool2_forward(&x, b, c, h, w);
+            let mx_in = x.iter().cloned().fold(f32::MIN, f32::max);
+            let mx_out = out.iter().cloned().fold(f32::MIN, f32::max);
+            assert_eq!(mx_in, mx_out);
+        });
+    }
+
+    #[test]
+    fn global_maxpool_known() {
+        // B=1, N=3, F=2
+        let x = vec![1.0, 9.0, 5.0, 2.0, 3.0, 4.0];
+        let (out, arg) = global_maxpool_forward(&x, 1, 3, 2);
+        assert_eq!(out, vec![5.0, 9.0]);
+        assert_eq!(arg, vec![2, 1]);
+        let e_in = global_maxpool_backward(&[1.0, 2.0], &arg, 6);
+        assert_eq!(e_in, vec![0.0, 2.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn global_maxpool_permutation_invariant() {
+        prop::cases(5, |rng, _| {
+            let (b, n, f) = (2usize, 8usize, 4usize);
+            let x: Vec<f32> = (0..b * n * f).map(|_| rng.normal()).collect();
+            let (out1, _) = global_maxpool_forward(&x, b, n, f);
+            // swap two points in each batch row
+            let mut x2 = x.clone();
+            for bi in 0..b {
+                for j in 0..f {
+                    x2.swap((bi * n) * f + j, (bi * n + 5) * f + j);
+                }
+            }
+            let (out2, _) = global_maxpool_forward(&x2, b, n, f);
+            assert_eq!(out1, out2);
+        });
+    }
+}

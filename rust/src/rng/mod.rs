@@ -1,0 +1,304 @@
+//! Pseudo-random substrate for the MeZO seed trick.
+//!
+//! ZO training regenerates the SAME perturbation vector `z` four times
+//! per step (perturb +ε, perturb −2ε, restore +ε, update −ηg·z) from a
+//! stored 8-byte seed instead of materializing `z` (paper §3.2). This
+//! module provides the deterministic streams that make that exact replay
+//! possible: [`Rng64`] (splitmix64-seeded xoshiro256**), Gaussian
+//! sampling via Box–Muller for FP32 perturbations, and the
+//! uniform-int8 + Bernoulli-mask sparse perturbations of ElasticZO-INT8
+//! (paper Alg. 2 lines 15–16).
+
+/// xoshiro256** seeded through splitmix64 — fast, high-quality, and
+/// fully deterministic across platforms (no libc rand, no HW entropy).
+#[derive(Debug, Clone)]
+pub struct Rng64 {
+    s: [u64; 4],
+}
+
+impl Rng64 {
+    pub fn new(seed: u64) -> Rng64 {
+        // splitmix64 to spread a small seed over the full state.
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Rng64 { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn uniform_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        debug_assert!(lo <= hi);
+        let span = (hi as i64 - lo as i64 + 1) as u64;
+        lo + (self.next_u64() % span) as i32
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the pair's
+    /// second half is deliberately dropped to keep the stream position
+    /// a pure function of the call count — essential for seed replay).
+    #[inline]
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-12 {
+                let u2 = self.uniform();
+                let r = (-2.0 * (u1 as f64).ln()).sqrt();
+                let theta = 2.0 * std::f64::consts::PI * u2 as f64;
+                return (r * theta.cos()) as f32;
+            }
+        }
+    }
+
+    /// Bernoulli(p) sample.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.uniform() < p
+    }
+
+    /// Fill `out` with N(0, I) — the FP32 perturbation z (paper Eq. 1).
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for v in out {
+            *v = self.normal();
+        }
+    }
+
+    /// One sparse INT8 perturbation entry: Bernoulli(1−p_zero) mask ⊙
+    /// U(−r_max, r_max) (paper Alg. 2 line 15–16).
+    #[inline]
+    pub fn sparse_i8(&mut self, r_max: i8, p_zero: f32) -> i8 {
+        // Draw the uniform FIRST so the stream advances identically
+        // regardless of the mask outcome (replay safety).
+        let u = self.uniform_i32(-(r_max as i32), r_max as i32) as i8;
+        let keep = !self.bernoulli(p_zero);
+        if keep {
+            u
+        } else {
+            0
+        }
+    }
+
+    /// Kaiming-uniform fill for layer init: U(−b, b), b = sqrt(6/fan_in).
+    pub fn fill_kaiming_uniform(&mut self, out: &mut [f32], fan_in: usize) {
+        let bound = (6.0 / fan_in.max(1) as f32).sqrt();
+        for v in out {
+            *v = (self.uniform() * 2.0 - 1.0) * bound;
+        }
+    }
+
+    /// Shuffle indices in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = (self.next_u64() % (i as u64 + 1)) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// A per-step ZO perturbation stream: the seed-trick object.
+///
+/// All four replays within one training step construct a `ZoStream`
+/// from the same `(run_seed, step)` pair and therefore observe the
+/// identical `z` sequence. Box–Muller produces values in PAIRS
+/// (cos & sin); caching the spare halves the transcendental work per
+/// element — replay-safe because every phase rebuilds the stream and
+/// replays the same call count (EXPERIMENTS.md §Perf, L3 iteration 3).
+#[derive(Debug, Clone)]
+pub struct ZoStream {
+    rng: Rng64,
+    spare: Option<f32>,
+}
+
+impl ZoStream {
+    pub fn for_step(run_seed: u64, step: u64) -> ZoStream {
+        // Mix run seed and step index into one 64-bit stream id.
+        let seed = run_seed ^ step.wrapping_mul(0xA076_1D64_78BD_642F) ^ 0x5EED_2E10;
+        ZoStream { rng: Rng64::new(seed), spare: None }
+    }
+
+    /// Next Gaussian z entry (FP32 path).
+    #[inline]
+    pub fn normal(&mut self) -> f32 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.rng.uniform();
+            if u1 > 1e-12 {
+                let u2 = self.rng.uniform();
+                let r = (-2.0 * (u1 as f64).ln()).sqrt();
+                let (s, c) = (2.0 * std::f64::consts::PI * u2 as f64).sin_cos();
+                self.spare = Some((r * s) as f32);
+                return (r * c) as f32;
+            }
+        }
+    }
+
+    /// Next sparse int8 z entry (INT8 path).
+    #[inline]
+    pub fn sparse_i8(&mut self, r_max: i8, p_zero: f32) -> i8 {
+        self.rng.sparse_i8(r_max, p_zero)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a: Vec<u64> = {
+            let mut r = Rng64::new(42);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng64::new(42);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng64::new(1);
+        let mut b = Rng64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng64::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng64::new(11);
+        let n = 200_000;
+        let (mut sum, mut sumsq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn uniform_i32_bounds_and_coverage() {
+        let mut r = Rng64::new(13);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.uniform_i32(-3, 3);
+            assert!((-3..=3).contains(&v));
+            seen[(v + 3) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sparse_i8_zero_fraction_tracks_p() {
+        let mut r = Rng64::new(17);
+        let n = 50_000;
+        let zeros = (0..n).filter(|_| r.sparse_i8(31, 0.9) == 0).count();
+        let frac = zeros as f64 / n as f64;
+        // p_zero=0.9 plus the ~1/63 chance u==0 itself.
+        assert!((frac - 0.9).abs() < 0.02, "zero frac {frac}");
+    }
+
+    #[test]
+    fn sparse_i8_stream_position_is_mask_independent() {
+        // Two streams with different p_zero must consume the same number
+        // of raw draws per entry — verified by checking that after N
+        // entries both underlying RNGs produce the same next_u64.
+        let mut a = Rng64::new(23);
+        let mut b = Rng64::new(23);
+        for _ in 0..1000 {
+            let _ = a.sparse_i8(31, 0.0);
+            let _ = b.sparse_i8(31, 1.0);
+        }
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn zo_stream_replay_exact() {
+        let mut s1 = ZoStream::for_step(99, 1234);
+        let z1: Vec<f32> = (0..512).map(|_| s1.normal()).collect();
+        let mut s2 = ZoStream::for_step(99, 1234);
+        let z2: Vec<f32> = (0..512).map(|_| s2.normal()).collect();
+        assert_eq!(z1, z2); // bitwise identical
+    }
+
+    #[test]
+    fn zo_stream_steps_decorrelated() {
+        let mut s1 = ZoStream::for_step(99, 1);
+        let mut s2 = ZoStream::for_step(99, 2);
+        let a: Vec<i32> = (0..64).map(|_| (s1.normal() * 1000.0) as i32).collect();
+        let b: Vec<i32> = (0..64).map(|_| (s2.normal() * 1000.0) as i32).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng64::new(3);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn kaiming_bound() {
+        let mut r = Rng64::new(5);
+        let mut buf = vec![0.0f32; 4096];
+        r.fill_kaiming_uniform(&mut buf, 100);
+        let bound = (6.0f32 / 100.0).sqrt();
+        assert!(buf.iter().all(|v| v.abs() <= bound));
+        assert!(buf.iter().any(|v| v.abs() > bound * 0.5));
+    }
+}

@@ -1,0 +1,215 @@
+//! A loaded artifact: compiled PJRT executable + typed I/O marshalling
+//! checked against the manifest ABI.
+
+use super::manifest::{ArtifactSpec, Dtype, IoSpec};
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A typed argument for an artifact call (borrowed host data).
+#[derive(Debug, Clone, Copy)]
+pub enum ArgValue<'a> {
+    F32(&'a [f32]),
+    I8(&'a [i8]),
+    I32(&'a [i32]),
+}
+
+impl ArgValue<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            ArgValue::F32(v) => v.len(),
+            ArgValue::I8(v) => v.len(),
+            ArgValue::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            ArgValue::F32(_) => Dtype::F32,
+            ArgValue::I8(_) => Dtype::I8,
+            ArgValue::I32(_) => Dtype::I32,
+        }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            ArgValue::F32(v) => bytemuck_cast(v),
+            ArgValue::I8(v) => bytemuck_cast(v),
+            ArgValue::I32(v) => bytemuck_cast(v),
+        }
+    }
+}
+
+fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
+    // Safe for plain-old-data scalar slices.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// A typed output tensor copied back to the host.
+#[derive(Debug, Clone)]
+pub enum OutValue {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+impl OutValue {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            OutValue::F32(v) => Ok(v),
+            _ => bail!("output is not f32"),
+        }
+    }
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            OutValue::I8(v) => Ok(v),
+            _ => bail!("output is not i8"),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            OutValue::I32(v) => Ok(v),
+            _ => bail!("output is not i32"),
+        }
+    }
+    pub fn scalar_f32(&self) -> Result<f32> {
+        Ok(self.as_f32()?[0])
+    }
+}
+
+fn element_type(d: Dtype) -> ElementType {
+    match d {
+        Dtype::F32 => ElementType::F32,
+        Dtype::I8 => ElementType::S8,
+        Dtype::I32 => ElementType::S32,
+    }
+}
+
+/// Build an XLA literal for one manifest input from a typed arg.
+fn to_literal(spec: &IoSpec, arg: &ArgValue) -> Result<Literal> {
+    if arg.dtype() != spec.dtype {
+        bail!(
+            "input '{}' dtype mismatch: artifact wants {:?}, got {:?}",
+            spec.name,
+            spec.dtype,
+            arg.dtype()
+        );
+    }
+    if arg.len() != spec.numel() {
+        bail!(
+            "input '{}' length mismatch: artifact wants {:?} ({} elems), got {}",
+            spec.name,
+            spec.shape,
+            spec.numel(),
+            arg.len()
+        );
+    }
+    Literal::create_from_shape_and_untyped_data(
+        element_type(spec.dtype),
+        &spec.shape,
+        arg.bytes(),
+    )
+    .with_context(|| format!("literal for input '{}'", spec.name))
+}
+
+/// An artifact compiled onto a PJRT client.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Load HLO text from `path`, compile, wrap.
+    pub fn load(client: &PjRtClient, spec: ArtifactSpec, path: &std::path::Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{}'", spec.name))?;
+        Ok(LoadedArtifact { spec, exe })
+    }
+
+    /// Execute with ABI-checked inputs; outputs come back in manifest
+    /// order, copied to host vectors.
+    pub fn run(&self, args: &[ArgValue]) -> Result<Vec<OutValue>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact '{}' wants {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                args.len()
+            );
+        }
+        let literals = self
+            .spec
+            .inputs
+            .iter()
+            .zip(args)
+            .map(|(spec, arg)| to_literal(spec, arg))
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = result.to_tuple().context("detupling result")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        self.spec
+            .outputs
+            .iter()
+            .zip(parts)
+            .map(|(ospec, lit)| -> Result<OutValue> {
+                Ok(match ospec.dtype {
+                    Dtype::F32 => OutValue::F32(lit.to_vec::<f32>()?),
+                    Dtype::I8 => OutValue::I8(lit.to_vec::<i8>()?),
+                    Dtype::I32 => OutValue::I32(lit.to_vec::<i32>()?),
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argvalue_lengths_and_bytes() {
+        let f = [1.0f32, 2.0];
+        let a = ArgValue::F32(&f);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.bytes().len(), 8);
+        let i = [1i8, 2, 3];
+        assert_eq!(ArgValue::I8(&i).bytes().len(), 3);
+    }
+
+    #[test]
+    fn to_literal_rejects_mismatch() {
+        let spec = IoSpec { name: "x".into(), shape: vec![2, 2], dtype: Dtype::F32 };
+        let short = [0.0f32; 3];
+        assert!(to_literal(&spec, &ArgValue::F32(&short)).is_err());
+        let wrong_ty = [0i8; 4];
+        assert!(to_literal(&spec, &ArgValue::I8(&wrong_ty)).is_err());
+        let ok = [0.0f32; 4];
+        assert!(to_literal(&spec, &ArgValue::F32(&ok)).is_ok());
+    }
+
+    #[test]
+    fn outvalue_accessors() {
+        let o = OutValue::F32(vec![3.5]);
+        assert_eq!(o.scalar_f32().unwrap(), 3.5);
+        assert!(o.as_i8().is_err());
+    }
+}

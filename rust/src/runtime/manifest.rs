@@ -1,0 +1,198 @@
+//! Artifact manifest: the ABI contract emitted by aot.py
+//! (`artifacts/manifest.json`), parsed with the in-tree JSON module.
+
+use crate::util::json::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i8" => Ok(Dtype::I8),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+/// One input or output tensor of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text path, relative to the manifest directory.
+    pub path: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: Value,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactSpec>,
+}
+
+fn parse_io(v: &Value) -> Result<IoSpec> {
+    let name = v.get("name").as_str().context("io missing name")?.to_string();
+    let shape = v
+        .get("shape")
+        .as_arr()
+        .context("io missing shape")?
+        .iter()
+        .map(|d| d.as_usize().context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = Dtype::parse(v.get("dtype").as_str().context("io missing dtype")?)?;
+    Ok(IoSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let v = json::parse(text).context("manifest json")?;
+        let version = v.get("version").as_i64().context("manifest version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let entries = v
+            .get("entries")
+            .as_arr()
+            .context("manifest entries")?
+            .iter()
+            .map(|e| -> Result<ArtifactSpec> {
+                Ok(ArtifactSpec {
+                    name: e.get("name").as_str().context("entry name")?.to_string(),
+                    path: e.get("path").as_str().context("entry path")?.to_string(),
+                    inputs: e
+                        .get("inputs")
+                        .as_arr()
+                        .context("entry inputs")?
+                        .iter()
+                        .map(parse_io)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: e
+                        .get("outputs")
+                        .as_arr()
+                        .context("entry outputs")?
+                        .iter()
+                        .map(parse_io)
+                        .collect::<Result<Vec<_>>>()?,
+                    meta: e.get("meta").clone(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| {
+                format!(
+                    "artifact '{name}' not in manifest (have: {})",
+                    self.entries
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+}
+
+/// Default artifacts directory: `$REPRO_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("REPRO_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // relative to the crate root (works for cargo test/run from repo root)
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "m1", "path": "m1.hlo.txt",
+         "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32"},
+                     {"name": "s", "shape": [], "dtype": "i32"}],
+         "outputs": [{"name": "y", "shape": [2], "dtype": "i8"}],
+         "meta": {"model": "lenet", "batch": 2}}
+      ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("m1").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.inputs[0].dtype, Dtype::F32);
+        assert_eq!(e.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(e.outputs[0].dtype, Dtype::I8);
+        assert_eq!(e.meta.get("model").as_str(), Some("lenet"));
+        assert_eq!(e.inputs[1].numel(), 1); // scalar
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let err = m.find("nope").unwrap_err().to_string();
+        assert!(err.contains("m1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(Dtype::F32.size(), 4);
+        assert_eq!(Dtype::I8.size(), 1);
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

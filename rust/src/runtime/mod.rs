@@ -1,0 +1,16 @@
+//! PJRT runtime: load the AOT artifacts emitted by `python/compile/aot.py`
+//! and execute them from the training hot loop.
+//!
+//! The flow is the one proven by /opt/xla-example/load_hlo:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. HLO **text** is the interchange
+//! format (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids).
+
+pub mod executable;
+pub mod manifest;
+pub mod registry;
+
+pub use executable::{ArgValue, LoadedArtifact, OutValue};
+pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};
+pub use registry::Registry;

@@ -1,0 +1,48 @@
+//! Executable registry: one PJRT CPU client, artifacts compiled lazily
+//! on first use and cached for the rest of the process lifetime.
+
+use super::executable::LoadedArtifact;
+use super::manifest::Manifest;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use xla::PjRtClient;
+
+pub struct Registry {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, LoadedArtifact>,
+}
+
+impl Registry {
+    /// Open the registry over an artifacts directory.
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Registry> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Registry { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Open at the default artifacts location.
+    pub fn open_default() -> Result<Registry> {
+        Registry::open(super::manifest::default_dir())
+    }
+
+    /// Get (compiling if needed) an artifact by name.
+    pub fn get(&mut self, name: &str) -> Result<&LoadedArtifact> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.find(name)?.clone();
+            let path = self.manifest.hlo_path(&spec);
+            let loaded = LoadedArtifact::load(&self.client, spec, &path)?;
+            self.cache.insert(name.to_string(), loaded);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Names available in the manifest.
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}

@@ -1,0 +1,163 @@
+//! Per-phase wall-clock telemetry — the instrumentation behind the
+//! paper's Fig. 7 execution-time breakdown (Forward / ZO Perturb /
+//! ZO Update / BP / Loss / Data).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Data,
+    Forward,
+    Loss,
+    ZoPerturb,
+    ZoUpdate,
+    BpBackward,
+    Eval,
+    Other,
+}
+
+pub const ALL_PHASES: [Phase; 8] = [
+    Phase::Data,
+    Phase::Forward,
+    Phase::Loss,
+    Phase::ZoPerturb,
+    Phase::ZoUpdate,
+    Phase::BpBackward,
+    Phase::Eval,
+    Phase::Other,
+];
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Data => "Data",
+            Phase::Forward => "Forward",
+            Phase::Loss => "Loss",
+            Phase::ZoPerturb => "ZO Perturb",
+            Phase::ZoUpdate => "ZO Update",
+            Phase::BpBackward => "BP Backward",
+            Phase::Eval => "Eval",
+            Phase::Other => "Other",
+        }
+    }
+
+    fn index(&self) -> usize {
+        ALL_PHASES.iter().position(|p| p == self).unwrap()
+    }
+}
+
+/// Accumulates time per phase across a run.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimer {
+    totals: [Duration; 8],
+    counts: [u64; 8],
+}
+
+impl PhaseTimer {
+    pub fn new() -> PhaseTimer {
+        PhaseTimer::default()
+    }
+
+    /// Time a closure under a phase.
+    pub fn time<R>(&mut self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(phase, t0.elapsed());
+        r
+    }
+
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        let i = phase.index();
+        self.totals[i] += d;
+        self.counts[i] += 1;
+    }
+
+    pub fn total(&self, phase: Phase) -> Duration {
+        self.totals[phase.index()]
+    }
+
+    pub fn grand_total(&self) -> Duration {
+        self.totals.iter().sum()
+    }
+
+    /// Fraction of total time per phase (Fig. 7's stacked bars).
+    pub fn fractions(&self) -> Vec<(Phase, f64)> {
+        let g = self.grand_total().as_secs_f64().max(1e-12);
+        ALL_PHASES
+            .iter()
+            .map(|&p| (p, self.total(p).as_secs_f64() / g))
+            .collect()
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for i in 0..8 {
+            self.totals[i] += other.totals[i];
+            self.counts[i] += other.counts[i];
+        }
+    }
+
+    /// Render a Fig.7-style breakdown table.
+    pub fn report(&self, title: &str) -> String {
+        let mut out = format!("-- {title} (total {:?})\n", self.grand_total());
+        for (p, f) in self.fractions() {
+            if f > 0.0 {
+                out.push_str(&format!(
+                    "   {:<12} {:>8.2?}  {:>5.1}%  ({} calls)\n",
+                    p.name(),
+                    self.total(p),
+                    f * 100.0,
+                    self.counts[p.index()]
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_accumulates() {
+        let mut t = PhaseTimer::new();
+        let r = t.time(Phase::Forward, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(r, 42);
+        assert!(t.total(Phase::Forward) >= Duration::from_millis(5));
+        assert_eq!(t.total(Phase::ZoUpdate), Duration::ZERO);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut t = PhaseTimer::new();
+        t.add(Phase::Forward, Duration::from_millis(80));
+        t.add(Phase::ZoPerturb, Duration::from_millis(15));
+        t.add(Phase::BpBackward, Duration::from_millis(5));
+        let sum: f64 = t.fractions().iter().map(|(_, f)| f).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        let fwd = t.fractions()[1].1;
+        assert!((fwd - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = PhaseTimer::new();
+        a.add(Phase::Forward, Duration::from_millis(10));
+        let mut b = PhaseTimer::new();
+        b.add(Phase::Forward, Duration::from_millis(20));
+        a.merge(&b);
+        assert_eq!(a.total(Phase::Forward), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn report_contains_phases() {
+        let mut t = PhaseTimer::new();
+        t.add(Phase::Forward, Duration::from_millis(10));
+        let r = t.report("epoch");
+        assert!(r.contains("Forward"));
+        assert!(!r.contains("ZO Update")); // zero phases omitted
+    }
+}

@@ -1,0 +1,167 @@
+//! Dense CPU tensors for the native engine (f32 / i8 / i32).
+//!
+//! Deliberately small: contiguous row-major storage, shape tracking,
+//! and the handful of ops the LeNet/PointNet engines need. The heavy
+//! math lives in `nn::` (f32) and `int8::` (NITI), which operate on
+//! these buffers directly.
+
+pub mod ops;
+
+/// Shape = dimension list; row-major (C-order) layout, matching both
+/// numpy defaults and the XLA literals produced by the runtime.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn of(dims: &[usize]) -> Shape {
+        Shape(dims.to_vec())
+    }
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// Generic dense tensor over a scalar element type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor<T> {
+    pub shape: Shape,
+    pub data: Vec<T>,
+}
+
+pub type TensorF32 = Tensor<f32>;
+pub type TensorI8 = Tensor<i8>;
+pub type TensorI32 = Tensor<i32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(dims: &[usize]) -> Tensor<T> {
+        let shape = Shape::of(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![T::default(); n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<T>) -> Tensor<T> {
+        let shape = Shape::of(dims);
+        assert_eq!(shape.numel(), data.len(), "shape {shape} vs len {}", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, dims: &[usize]) -> Tensor<T> {
+        let new = Shape::of(dims);
+        assert_eq!(new.numel(), self.numel(), "reshape {new} from {}", self.shape);
+        self.shape = new;
+        self
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> T {
+        debug_assert_eq!(self.shape.rank(), 2);
+        self.data[i * self.shape.0[1] + j]
+    }
+
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> T {
+        debug_assert_eq!(self.shape.rank(), 4);
+        let s = &self.shape.0;
+        self.data[((a * s[1] + b) * s[2] + c) * s[3] + d]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: T) {
+        let s = &self.shape.0;
+        let idx = ((a * s[1] + b) * s[2] + c) * s[3] + d;
+        self.data[idx] = v;
+    }
+}
+
+impl TensorF32 {
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+}
+
+impl TensorI32 {
+    pub fn max_abs(&self) -> i32 {
+        self.data.iter().fold(0i32, |m, v| m.max(v.wrapping_abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t: TensorF32 = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.shape.rank(), 3);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn from_vec_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_wrong_len_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0f32]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[4], vec![1i32, 2, 3, 4]).reshape(&[2, 2]);
+        assert_eq!(t.at2(1, 1), 4);
+    }
+
+    #[test]
+    fn index4() {
+        let mut t: TensorI8 = Tensor::zeros(&[2, 3, 4, 5]);
+        t.set4(1, 2, 3, 4, 7);
+        assert_eq!(t.at4(1, 2, 3, 4), 7);
+        assert_eq!(t.at4(0, 0, 0, 0), 0);
+    }
+
+    #[test]
+    fn max_abs() {
+        let t = Tensor::from_vec(&[4], vec![1.0f32, -5.0, 3.0, -2.0]);
+        assert_eq!(t.max_abs(), 5.0);
+        let t = Tensor::from_vec(&[3], vec![1i32, -9, 4]);
+        assert_eq!(t.max_abs(), 9);
+    }
+
+    #[test]
+    fn shape_display() {
+        assert_eq!(Shape::of(&[2, 3]).to_string(), "(2,3)");
+    }
+}

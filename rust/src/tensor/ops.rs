@@ -1,0 +1,238 @@
+//! Core tensor math used by the native engines: f32 GEMM (the hot path,
+//! written cache-friendly), int8→int32 GEMM, transposes and reductions.
+
+use super::{Tensor, TensorF32, TensorI32, TensorI8};
+
+/// C = A(M,K) @ B(K,N), f32. i-k-j loop order: the inner loop runs
+/// contiguously over B's rows and C's row, which vectorizes well.
+pub fn matmul_f32(a: &TensorF32, b: &TensorF32) -> TensorF32 {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (k2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut c = vec![0.0f32; m * n];
+    matmul_f32_into(&a.data, &b.data, &mut c, m, k, n);
+    Tensor::from_vec(&[m, n], c)
+}
+
+/// GEMM into a caller-provided buffer (avoids allocation on hot paths).
+pub fn matmul_f32_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // post-ReLU activations are sparse
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C = A(M,K) @ B(K,N), int8 operands, exact int32 accumulation.
+pub fn matmul_i8(a: &TensorI8, b: &TensorI8) -> TensorI32 {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (k2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv as i32;
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], c)
+}
+
+/// B = Aᵀ for a 2-D tensor.
+pub fn transpose2<T: Copy + Default>(a: &Tensor<T>) -> Tensor<T> {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    let mut out = vec![T::default(); m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = a.data[i * n + j];
+        }
+    }
+    Tensor::from_vec(&[n, m], out)
+}
+
+/// Column sums of a 2-D tensor: (M,N) -> (N,).
+pub fn col_sum_f32(a: &TensorF32) -> TensorF32 {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j] += a.data[i * n + j];
+        }
+    }
+    Tensor::from_vec(&[n], out)
+}
+
+/// y += alpha * x (saxpy), used by SGD updates.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// ReLU in place.
+pub fn relu_f32(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+pub fn relu_i8(x: &mut [i8]) {
+    for v in x {
+        if *v < 0 {
+            *v = 0;
+        }
+    }
+}
+
+/// argmax over the last axis of a 2-D tensor; returns (M,) indices.
+pub fn argmax_rows(a: &TensorF32) -> Vec<usize> {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    (0..m)
+        .map(|i| {
+            let row = &a.data[i * n..(i + 1) * n];
+            row.iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect()
+}
+
+pub fn argmax_rows_i8(a: &TensorI8) -> Vec<usize> {
+    let (m, n) = (a.dims()[0], a.dims()[1]);
+    (0..m)
+        .map(|i| {
+            let row = &a.data[i * n..(i + 1) * n];
+            row.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = matmul_f32(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity_prop() {
+        prop::cases(10, |rng, _| {
+            let m = 1 + (rng.next_u64() % 16) as usize;
+            let k = 1 + (rng.next_u64() % 16) as usize;
+            let a = Tensor::from_vec(
+                &[m, k],
+                (0..m * k).map(|_| rng.normal()).collect(),
+            );
+            let mut eye = Tensor::zeros(&[k, k]);
+            for i in 0..k {
+                eye.data[i * k + i] = 1.0f32;
+            }
+            let c = matmul_f32(&a, &eye);
+            assert_eq!(c.data, a.data);
+        });
+    }
+
+    #[test]
+    fn matmul_i8_matches_f32_path() {
+        prop::cases(10, |rng, _| {
+            let m = 1 + (rng.next_u64() % 8) as usize;
+            let k = 1 + (rng.next_u64() % 32) as usize;
+            let n = 1 + (rng.next_u64() % 8) as usize;
+            let a = Tensor::from_vec(
+                &[m, k],
+                (0..m * k).map(|_| rng.uniform_i32(-128, 127) as i8).collect(),
+            );
+            let b = Tensor::from_vec(
+                &[k, n],
+                (0..k * n).map(|_| rng.uniform_i32(-128, 127) as i8).collect(),
+            );
+            let ci = matmul_i8(&a, &b);
+            let af = Tensor::from_vec(&[m, k], a.data.iter().map(|&v| v as f32).collect());
+            let bf = Tensor::from_vec(&[k, n], b.data.iter().map(|&v| v as f32).collect());
+            let cf = matmul_f32(&af, &bf);
+            for (x, y) in ci.data.iter().zip(&cf.data) {
+                assert_eq!(*x, *y as i32);
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        prop::cases(10, |rng, _| {
+            let m = 1 + (rng.next_u64() % 10) as usize;
+            let n = 1 + (rng.next_u64() % 10) as usize;
+            let a = Tensor::from_vec(&[m, n], (0..m * n).map(|_| rng.normal()).collect());
+            let tt = transpose2(&transpose2(&a));
+            assert_eq!(tt, a);
+        });
+    }
+
+    #[test]
+    fn transpose_matmul_identity() {
+        // (A B)ᵀ = Bᵀ Aᵀ
+        prop::cases(5, |rng, _| {
+            let (m, k, n) = (3usize, 4usize, 5usize);
+            let a = Tensor::from_vec(&[m, k], (0..m * k).map(|_| rng.normal()).collect());
+            let b = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.normal()).collect());
+            let lhs = transpose2(&matmul_f32(&a, &b));
+            let rhs = matmul_f32(&transpose2(&b), &transpose2(&a));
+            for (x, y) in lhs.data.iter().zip(&rhs.data) {
+                assert!((x - y).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn col_sum() {
+        let a = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(col_sum_f32(&a).data, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn relu_and_argmax() {
+        let mut v = vec![-1.0f32, 2.0, -3.0];
+        relu_f32(&mut v);
+        assert_eq!(v, vec![0.0, 2.0, 0.0]);
+        let a = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.3, 0.7, 0.2, 0.1]);
+        assert_eq!(argmax_rows(&a), vec![1, 0]);
+    }
+
+    #[test]
+    fn axpy_updates() {
+        let x = vec![1.0f32, 2.0];
+        let mut y = vec![10.0f32, 20.0];
+        axpy(-2.0, &x, &mut y);
+        assert_eq!(y, vec![8.0, 16.0]);
+    }
+}

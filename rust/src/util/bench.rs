@@ -1,0 +1,113 @@
+//! Micro-benchmark harness (offline substitute for criterion).
+//!
+//! Used by `rust/benches/*.rs` (built with `harness = false`). Each
+//! benchmark warms up, then runs timed iterations until a minimum
+//! wall-clock budget is met, and reports mean / p50 / p95 per-iteration
+//! times plus derived throughput.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+pub struct Bencher {
+    pub min_time: Duration,
+    pub min_iters: usize,
+    pub results: Vec<Stats>,
+    filter: Option<String>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // `cargo bench -- <filter>` passes the filter as a positional arg.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-') && a != "--bench");
+        let fast = std::env::var("BENCH_FAST").is_ok();
+        Bencher {
+            min_time: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
+            min_iters: 5,
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Time `f`, which performs ONE iteration of the workload.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Option<&Stats> {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return None;
+            }
+        }
+        // Warm-up: one untimed call (artifact compile, page faults, ...).
+        black_box(f());
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.min_time || samples.len() < self.min_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let stats = Stats {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+            min: samples[0],
+        };
+        println!(
+            "{:<44} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+            stats.name, stats.iters, stats.mean, stats.p50, stats.p95
+        );
+        self.results.push(stats);
+        self.results.last()
+    }
+
+    /// Report a named scalar alongside the timings (e.g. a ratio).
+    pub fn report_metric(&self, name: &str, value: f64, unit: &str) {
+        println!("{name:<44} {value:>12.4} {unit}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_stats() {
+        let mut b = Bencher::new();
+        b.min_time = Duration::from_millis(5);
+        let s = b.bench("noop", || 1 + 1).unwrap().clone();
+        assert!(s.iters >= 5);
+        assert!(s.p50 <= s.p95);
+        assert!(s.min <= s.mean * 2);
+    }
+}

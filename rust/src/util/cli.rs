@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (offline substitute for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list (excluding argv[0]).
+    ///
+    /// A `--key` followed by a non-`--` token is an option; a `--key` at
+    /// the end or followed by another `--key` is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let items: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> anyhow::Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a float, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["train", "--model", "lenet", "--epochs=5", "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("model"), Some("lenet"));
+        assert_eq!(a.get_usize("epochs", 0).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse(&["--dry-run", "--lr", "0.01"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_f32("lr", 0.0).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["exp", "table1", "--fast"]);
+        assert_eq!(a.positional, vec!["exp", "table1"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--epochs", "five"]);
+        assert!(a.get_usize("epochs", 0).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained utility substrates (the build box is offline, so the
+//! usual serde/clap/criterion/proptest stack is re-implemented in-tree
+//! at the size this project needs).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod table;

@@ -1,0 +1,137 @@
+//! Engine parity: the XLA (AOT artifact) engine and the native rust
+//! engine must agree on every Engine method — loss, logits, partition
+//! activations, tail gradients and full-BP steps — for both models.
+//! This is the cross-check that pins the three-layer stack to the
+//! reference implementation. Skipped when artifacts/ is absent.
+
+use elasticzo::coordinator::native_engine::NativeEngine;
+use elasticzo::coordinator::xla_engine::XlaEngine;
+use elasticzo::coordinator::{Engine, Model, ParamSet};
+use elasticzo::data;
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+fn lenet_batch(bsz: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let d = data::synth_mnist::generate(bsz, seed);
+    let mut y = vec![0.0f32; bsz * 10];
+    for (i, &l) in d.labels.iter().enumerate() {
+        y[i * 10 + l as usize] = 1.0;
+    }
+    (d.x, y)
+}
+
+fn xla(model: Model, bsz: usize) -> Option<XlaEngine> {
+    match XlaEngine::open_default(model, bsz) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping parity test: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn lenet_forward_parity() {
+    let Some(mut xe) = xla(Model::LeNet, 32) else { return };
+    let mut ne = NativeEngine::new(Model::LeNet);
+    let params = ParamSet::init(Model::LeNet, 77);
+    let (x, y) = lenet_batch(32, 78);
+    let fx = xe.forward(&params, &x, &y, 32).unwrap();
+    let fnv = ne.forward(&params, &x, &y, 32).unwrap();
+    assert!(close(fx.loss, fnv.loss, 1e-3), "{} vs {}", fx.loss, fnv.loss);
+    for (a, b) in fx.logits.iter().zip(&fnv.logits) {
+        assert!(close(*a, *b, 1e-3));
+    }
+    for (a, b) in fx.act_c1.iter().zip(&fnv.act_c1) {
+        assert!(close(*a, *b, 1e-3));
+    }
+    for (a, b) in fx.act_c2.iter().zip(&fnv.act_c2) {
+        assert!(close(*a, *b, 1e-3));
+    }
+}
+
+#[test]
+fn lenet_tail_grads_parity() {
+    let Some(mut xe) = xla(Model::LeNet, 32) else { return };
+    let mut ne = NativeEngine::new(Model::LeNet);
+    let params = ParamSet::init(Model::LeNet, 80);
+    let (x, y) = lenet_batch(32, 81);
+    let fwd = ne.forward(&params, &x, &y, 32).unwrap();
+    for k in [1usize, 2] {
+        let gx = xe.tail_grads(&params, &fwd, &y, k, 32).unwrap();
+        let gn = ne.tail_grads(&params, &fwd, &y, k, 32).unwrap();
+        assert_eq!(gx.len(), gn.len());
+        for ((ix, vx), (inn, vn)) in gx.iter().zip(&gn) {
+            assert_eq!(ix, inn, "tail grad index ordering");
+            for (a, b) in vx.iter().zip(vn) {
+                assert!((a - b).abs() < 1e-4 + 1e-3 * b.abs(), "k={k} idx={ix}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lenet_full_step_parity() {
+    let Some(mut xe) = xla(Model::LeNet, 32) else { return };
+    let mut ne = NativeEngine::new(Model::LeNet);
+    let mut px = ParamSet::init(Model::LeNet, 83);
+    let mut pn = px.clone();
+    let (x, y) = lenet_batch(32, 84);
+    let lx = xe.full_step(&mut px, &x, &y, 32, 0.05).unwrap();
+    let ln = ne.full_step(&mut pn, &x, &y, 32, 0.05).unwrap();
+    assert!(close(lx, ln, 1e-3));
+    // updated parameters must match across engines
+    for (tx, tn) in px.data.iter().zip(&pn.data) {
+        for (a, b) in tx.iter().zip(tn) {
+            assert!((a - b).abs() < 1e-4 + 1e-3 * b.abs(), "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn pointnet_forward_parity() {
+    let model = Model::PointNet { npoints: 128, ncls: 40 };
+    let Some(mut xe) = xla(model, 16) else { return };
+    let mut ne = NativeEngine::new(model);
+    let params = ParamSet::init(model, 85);
+    let d = data::synth_modelnet::generate(16, 128, 86);
+    let mut y = vec![0.0f32; 16 * 40];
+    for (i, &l) in d.labels.iter().enumerate() {
+        y[i * 40 + l as usize] = 1.0;
+    }
+    let fx = xe.forward(&params, &d.x, &y, 16).unwrap();
+    let fnv = ne.forward(&params, &d.x, &y, 16).unwrap();
+    assert!(close(fx.loss, fnv.loss, 1e-3), "{} vs {}", fx.loss, fnv.loss);
+    for (a, b) in fx.logits.iter().zip(&fnv.logits) {
+        assert!(close(*a, *b, 2e-3));
+    }
+}
+
+#[test]
+fn pallas_and_fast_forward_agree() {
+    // the Pallas-interpret artifact and the fast reference-ops artifact
+    // lower the SAME math — loss must agree to float tolerance.
+    std::env::set_var("REPRO_PALLAS_FWD", "1");
+    let pallas = xla(Model::LeNet, 8);
+    std::env::remove_var("REPRO_PALLAS_FWD");
+    let Some(mut pe) = pallas else { return };
+    let Some(mut fe) = xla(Model::LeNet, 8) else { return };
+    let params = ParamSet::init(Model::LeNet, 90);
+    let (x, y) = lenet_batch(8, 91);
+    let fp = pe.forward(&params, &x, &y, 8).unwrap();
+    let ff = fe.forward(&params, &x, &y, 8).unwrap();
+    assert!(close(fp.loss, ff.loss, 1e-3), "{} vs {}", fp.loss, ff.loss);
+    for (a, b) in fp.logits.iter().zip(&ff.logits) {
+        assert!(close(*a, *b, 1e-3));
+    }
+}
+
+#[test]
+fn batch_size_mismatch_is_error() {
+    let Some(mut xe) = xla(Model::LeNet, 32) else { return };
+    let params = ParamSet::init(Model::LeNet, 92);
+    let (x, y) = lenet_batch(8, 93);
+    assert!(xe.forward(&params, &x, &y, 8).is_err());
+}

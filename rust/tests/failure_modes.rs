@@ -1,0 +1,106 @@
+//! Failure injection: the runtime and coordinator must fail loudly and
+//! legibly on broken inputs — bad manifests, corrupt HLO, ABI
+//! mismatches, invalid configs.
+
+use elasticzo::config::Config;
+use elasticzo::runtime::{ArtifactSpec, Dtype, IoSpec, LoadedArtifact, Manifest};
+use elasticzo::util::cli::Args;
+use std::path::PathBuf;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ezo_fail_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_mentions_make_artifacts() {
+    let d = tmp_dir("nomanifest");
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "{err}");
+    std::fs::remove_dir_all(d).ok();
+}
+
+#[test]
+fn malformed_manifest_rejected() {
+    let d = tmp_dir("badjson");
+    std::fs::write(d.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&d).is_err());
+    std::fs::write(d.join("manifest.json"), r#"{"version": 1}"#).unwrap();
+    assert!(Manifest::load(&d).is_err()); // missing entries
+    std::fs::remove_dir_all(d).ok();
+}
+
+#[test]
+fn corrupt_hlo_text_rejected() {
+    let client = match xla_client() {
+        Some(c) => c,
+        None => return,
+    };
+    let d = tmp_dir("badhlo");
+    let path = d.join("bad.hlo.txt");
+    std::fs::write(&path, "HloModule garbage !!! not hlo").unwrap();
+    let spec = ArtifactSpec {
+        name: "bad".into(),
+        path: "bad.hlo.txt".into(),
+        inputs: vec![],
+        outputs: vec![],
+        meta: elasticzo::util::json::Value::Null,
+    };
+    assert!(LoadedArtifact::load(&client, spec, &path).is_err());
+    std::fs::remove_dir_all(d).ok();
+}
+
+fn xla_client() -> Option<xla::PjRtClient> {
+    xla::PjRtClient::cpu().ok()
+}
+
+#[test]
+fn abi_mismatch_rejected_before_execution() {
+    // wrong arg count / wrong shape / wrong dtype must be caught by the
+    // marshalling layer, not by XLA
+    let Ok(mut reg) = elasticzo::runtime::Registry::open_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let Ok(exe) = reg.get("lenet_fwd_b8") else { return };
+    // 0 args instead of 12
+    assert!(exe.run(&[]).is_err());
+    // right count, wrong shapes
+    let junk = vec![0.0f32; 3];
+    let args: Vec<elasticzo::runtime::ArgValue> =
+        (0..12).map(|_| elasticzo::runtime::ArgValue::F32(&junk)).collect();
+    let err = exe.run(&args).unwrap_err().to_string();
+    assert!(err.contains("mismatch"), "{err}");
+}
+
+#[test]
+fn invalid_configs_rejected_with_context() {
+    let bad = [
+        vec!["--epochs", "0"],
+        vec!["--batch", "0"],
+        vec!["--eps", "-1"],
+        vec!["--b-zo", "9"],
+        vec!["--model", "resnet"],
+        vec!["--method", "cls3"],
+        vec!["--precision", "fp16"],
+    ];
+    for case in bad {
+        let args = Args::parse(case.iter().map(|s| s.to_string()));
+        assert!(Config::from_args(&args).is_err(), "should reject {case:?}");
+    }
+}
+
+#[test]
+fn checkpoint_truncation_detected() {
+    use elasticzo::coordinator::{checkpoint, Model, ParamSet};
+    let p = ParamSet::init(Model::LeNet, 1);
+    let path = std::env::temp_dir().join(format!("ezo_trunc_{}.ckpt", std::process::id()));
+    checkpoint::save_params(&path, &p).unwrap();
+    // truncate the file and expect a read error
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    let mut q = ParamSet::init(Model::LeNet, 2);
+    assert!(checkpoint::load_params(&path, &mut q).is_err());
+    std::fs::remove_file(path).ok();
+}

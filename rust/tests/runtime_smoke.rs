@@ -1,0 +1,181 @@
+//! Runtime smoke tests: load real artifacts, execute, and cross-check
+//! against the native rust engine. Skipped when artifacts/ is absent
+//! (run `make artifacts` first).
+
+use elasticzo::int8::lenet8;
+use elasticzo::nn::lenet;
+use elasticzo::rng::Rng64;
+use elasticzo::runtime::{ArgValue, Registry};
+
+fn registry() -> Option<Registry> {
+    match Registry::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping runtime smoke test: {e:#}");
+            None
+        }
+    }
+}
+
+fn lenet_params(seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng64::new(seed);
+    lenet::PARAM_SPECS
+        .iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product();
+            let fan_in = match shape.len() {
+                4 => shape[1] * shape[2] * shape[3],
+                2 => shape[0],
+                _ => n,
+            };
+            let mut v = vec![0.0f32; n];
+            rng.fill_kaiming_uniform(&mut v, fan_in);
+            v
+        })
+        .collect()
+}
+
+fn batch(bsz: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<u8>) {
+    let d = elasticzo::data::synth_mnist::generate(bsz, seed);
+    let mut y = vec![0.0f32; bsz * 10];
+    for (i, &l) in d.labels.iter().enumerate() {
+        y[i * 10 + l as usize] = 1.0;
+    }
+    (d.x, y, d.labels)
+}
+
+#[test]
+fn lenet_fwd_artifact_matches_native_engine() {
+    let Some(mut reg) = registry() else { return };
+    let params = lenet_params(11);
+    let (x, y, _) = batch(8, 22);
+
+    let exe = reg.get("lenet_fwd_b8").expect("artifact lenet_fwd_b8");
+    let mut args: Vec<ArgValue> = params.iter().map(|p| ArgValue::F32(p)).collect();
+    args.push(ArgValue::F32(&x));
+    args.push(ArgValue::F32(&y));
+    let out = exe.run(&args).expect("execute");
+    let loss_xla = out[0].scalar_f32().unwrap();
+    let logits_xla = out[1].as_f32().unwrap();
+    let a1_xla = out[2].as_f32().unwrap();
+    let a2_xla = out[3].as_f32().unwrap();
+
+    let (fwd, _) = lenet::forward(&params, &x, &y, 8);
+    assert!(
+        (loss_xla - fwd.loss).abs() < 1e-3 * (1.0 + fwd.loss.abs()),
+        "loss xla {loss_xla} vs native {}",
+        fwd.loss
+    );
+    assert_eq!(logits_xla.len(), fwd.logits.len());
+    for (a, b) in logits_xla.iter().zip(&fwd.logits) {
+        assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()), "logits {a} vs {b}");
+    }
+    for (a, b) in a1_xla.iter().zip(&fwd.act_c2) {
+        assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()));
+    }
+    for (a, b) in a2_xla.iter().zip(&fwd.act_c1) {
+        assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()));
+    }
+}
+
+#[test]
+fn lenet_tail_artifacts_match_native() {
+    let Some(mut reg) = registry() else { return };
+    let params = lenet_params(13);
+    let (x, y, _) = batch(8, 24);
+    let (fwd, _) = lenet::forward(&params, &x, &y, 8);
+
+    // tail c1: (a_fc2, fc3_w, fc3_b, y) -> (gw, gb)
+    let exe = reg.get("lenet_tail_c1_b8").unwrap();
+    let out = exe
+        .run(&[
+            ArgValue::F32(&fwd.act_c1),
+            ArgValue::F32(&params[8]),
+            ArgValue::F32(&params[9]),
+            ArgValue::F32(&y),
+        ])
+        .unwrap();
+    let native = lenet::tail_grads(&params, &fwd, &y, 1, 8);
+    for ((_, g_native), o) in native.iter().zip(out.iter()) {
+        for (a, b) in o.as_f32().unwrap().iter().zip(g_native) {
+            assert!((a - b).abs() < 1e-4 + 2e-3 * b.abs(), "tail1 {a} vs {b}");
+        }
+    }
+
+    // tail c2
+    let exe = reg.get("lenet_tail_c2_b8").unwrap();
+    let out = exe
+        .run(&[
+            ArgValue::F32(&fwd.act_c2),
+            ArgValue::F32(&params[6]),
+            ArgValue::F32(&params[7]),
+            ArgValue::F32(&params[8]),
+            ArgValue::F32(&params[9]),
+            ArgValue::F32(&y),
+        ])
+        .unwrap();
+    let native = lenet::tail_grads(&params, &fwd, &y, 2, 8);
+    for ((_, g_native), o) in native.iter().zip(out.iter()) {
+        for (a, b) in o.as_f32().unwrap().iter().zip(g_native) {
+            assert!((a - b).abs() < 1e-4 + 2e-3 * b.abs(), "tail2 {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn lenet_step_artifact_reduces_loss() {
+    let Some(mut reg) = registry() else { return };
+    let params = lenet_params(15);
+    let (x, y, _) = batch(8, 26);
+    let exe = reg.get("lenet_step_b8").unwrap();
+    let lr = [0.05f32];
+    let mut args: Vec<ArgValue> = params.iter().map(|p| ArgValue::F32(p)).collect();
+    args.push(ArgValue::F32(&x));
+    args.push(ArgValue::F32(&y));
+    args.push(ArgValue::F32(&lr));
+    let out = exe.run(&args).unwrap();
+    assert_eq!(out.len(), 11);
+    let loss0 = out[10].scalar_f32().unwrap();
+    // feed updated params through the native engine
+    let new_params: Vec<Vec<f32>> = out[..10]
+        .iter()
+        .map(|o| o.as_f32().unwrap().to_vec())
+        .collect();
+    let (f1, _) = lenet::forward(&new_params, &x, &y, 8);
+    assert!(f1.loss < loss0, "{loss0} -> {}", f1.loss);
+}
+
+#[test]
+fn lenet_int8_artifact_matches_native_bit_for_bit() {
+    let Some(mut reg) = registry() else { return };
+    let ws = lenet8::init_params(17, 32);
+    let d = elasticzo::data::synth_mnist::generate(8, 28);
+    let xq = lenet8::quantize_input(&d.x, 8);
+
+    let exe = reg.get("lenet_int8_fwd_b8").unwrap();
+    let exps: Vec<[i32; 1]> = ws.iter().map(|w| [w.exp]).collect();
+    let x_exp = [xq.exp];
+    let mut args: Vec<ArgValue> = ws.iter().map(|w| ArgValue::I8(&w.data)).collect();
+    for e in &exps {
+        args.push(ArgValue::I32(e));
+    }
+    args.push(ArgValue::I8(&xq.data));
+    args.push(ArgValue::I32(&x_exp));
+    let out = exe.run(&args).unwrap();
+    let logits_xla = out[0].as_i8().unwrap();
+    let s_xla = out[1].as_i32().unwrap()[0];
+
+    let fwd = lenet8::forward(&ws, &xq, 8);
+    assert_eq!(s_xla, fwd.logits.exp, "exponent mismatch");
+    assert_eq!(logits_xla, &fwd.logits.data[..], "int8 logits must be bit-identical");
+}
+
+#[test]
+fn registry_lists_and_caches() {
+    let Some(mut reg) = registry() else { return };
+    assert!(reg.names().len() >= 10);
+    assert_eq!(reg.loaded_count(), 0);
+    reg.get("lenet_fwd_b8").unwrap();
+    reg.get("lenet_fwd_b8").unwrap();
+    assert_eq!(reg.loaded_count(), 1);
+}
