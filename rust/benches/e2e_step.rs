@@ -6,6 +6,7 @@
 use elasticzo::coordinator::int8_trainer::{Int8TrainConfig, ZoGradMode};
 use elasticzo::coordinator::native_engine::NativeEngine;
 use elasticzo::coordinator::trainer::{zo_step, TrainConfig};
+#[cfg(feature = "xla")]
 use elasticzo::coordinator::xla_engine::XlaEngine;
 use elasticzo::coordinator::{Engine, Method, Model, ParamSet};
 use elasticzo::data;
@@ -31,6 +32,7 @@ fn main() {
         seed: 9,
         eval_every: 1,
         verbose: false,
+        ..Default::default()
     };
 
     // FP32 steps on both engines
@@ -43,18 +45,25 @@ fn main() {
         let mut step = 0u64;
         b.bench(&format!("step_{}/native", cfg.method.label().replace(' ', "_")), || {
             step += 1;
-            zo_step(&mut native, &mut params, &d.x, &y, 32, step, 1e-3, &cfg, &mut timer)
-                .unwrap()
+            zo_step(
+                &mut native, &mut params, &d.x, &y, &d.labels, 32, step, 1e-3, &cfg,
+                &mut timer,
+            )
+            .unwrap()
         });
 
+        #[cfg(feature = "xla")]
         if let Ok(mut xla) = XlaEngine::open_default(Model::LeNet, 32) {
             let mut params = ParamSet::init(Model::LeNet, 3);
             let mut timer = PhaseTimer::new();
             let mut step = 0u64;
             b.bench(&format!("step_{}/xla", cfg.method.label().replace(' ', "_")), || {
                 step += 1;
-                zo_step(&mut xla, &mut params, &d.x, &y, 32, step, 1e-3, &cfg, &mut timer)
-                    .unwrap()
+                zo_step(
+                    &mut xla, &mut params, &d.x, &y, &d.labels, 32, step, 1e-3, &cfg,
+                    &mut timer,
+                )
+                .unwrap()
             });
         }
     }
@@ -65,6 +74,7 @@ fn main() {
     b.bench("step_Full_BP/native", || {
         native.full_step(&mut params, &d.x, &y, 32, 0.01).unwrap()
     });
+    #[cfg(feature = "xla")]
     if let Ok(mut xla) = XlaEngine::open_default(Model::LeNet, 32) {
         let mut params = ParamSet::init(Model::LeNet, 4);
         b.bench("step_Full_BP/xla", || {

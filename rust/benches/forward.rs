@@ -3,9 +3,10 @@
 //! comparison is the §Perf L2 result; the Pallas variant documents why
 //! interpret mode is compile-target-only on CPU.
 
-use elasticzo::coordinator::{Engine, Model, ParamSet};
 use elasticzo::coordinator::native_engine::NativeEngine;
+#[cfg(feature = "xla")]
 use elasticzo::coordinator::xla_engine::XlaEngine;
+use elasticzo::coordinator::{Engine, Model, ParamSet};
 use elasticzo::data;
 use elasticzo::util::bench::Bencher;
 
@@ -30,6 +31,7 @@ fn main() {
     });
 
     // XLA fast artifact
+    #[cfg(feature = "xla")]
     match XlaEngine::open_default(Model::LeNet, 32) {
         Ok(mut xla) => {
             b.bench("lenet_fwd_b32/xla_fast", || {
@@ -40,16 +42,19 @@ fn main() {
     }
 
     // XLA Pallas-interpret artifact (compile-target path; slow on CPU)
-    std::env::set_var("REPRO_PALLAS_FWD", "1");
-    match XlaEngine::open_default(Model::LeNet, 32) {
-        Ok(mut xla) => {
-            b.bench("lenet_fwd_b32/xla_pallas_interp", || {
-                xla.forward(&params, &x, &y, 32).unwrap().loss
-            });
+    #[cfg(feature = "xla")]
+    {
+        std::env::set_var("REPRO_PALLAS_FWD", "1");
+        match XlaEngine::open_default(Model::LeNet, 32) {
+            Ok(mut xla) => {
+                b.bench("lenet_fwd_b32/xla_pallas_interp", || {
+                    xla.forward(&params, &x, &y, 32).unwrap().loss
+                });
+            }
+            Err(e) => eprintln!("skipping xla pallas bench: {e:#}"),
         }
-        Err(e) => eprintln!("skipping xla pallas bench: {e:#}"),
+        std::env::remove_var("REPRO_PALLAS_FWD");
     }
-    std::env::remove_var("REPRO_PALLAS_FWD");
 
     // PointNet
     let model = Model::PointNet { npoints: 128, ncls: 40 };
@@ -63,6 +68,7 @@ fn main() {
     b.bench("pointnet_fwd_n128_b16/native", || {
         native_pn.forward(&pn_params, &d.x, &yy, 16).unwrap().loss
     });
+    #[cfg(feature = "xla")]
     if let Ok(mut xla) = XlaEngine::open_default(model, 16) {
         b.bench("pointnet_fwd_n128_b16/xla_fast", || {
             xla.forward(&pn_params, &d.x, &yy, 16).unwrap().loss

@@ -1,0 +1,67 @@
+//! Job-server throughput: jobs/sec for a batch of tiny training jobs at
+//! worker-pool sizes 1 / 2 / 4, over the real HTTP + queue + registry
+//! stack. The headline metric is the 4-worker : 1-worker speedup —
+//! >1.5x demonstrates that `repro serve` genuinely overlaps jobs.
+
+use elasticzo::serve::{request, ServeOptions, Server};
+use elasticzo::util::bench::Bencher;
+use elasticzo::util::json;
+use std::time::{Duration, Instant};
+
+const JOBS: usize = 12;
+
+/// Tiny but real job: 1 epoch of FP32 Cls1 LeNet on 64 synthetic
+/// samples (4 ZO steps of 2 forwards each + eval).
+fn tiny_spec(seed: usize) -> String {
+    format!(
+        r#"{{"method": "cls1", "precision": "fp32", "engine": "native",
+            "epochs": 1, "batch": 16, "train_n": 64, "test_n": 32, "seed": {seed}}}"#
+    )
+}
+
+/// Boot a server with `workers` workers, push JOBS jobs through it, and
+/// return the jobs/sec of the drain.
+fn run_fleet(workers: usize) -> f64 {
+    let server = Server::bind(&ServeOptions { port: 0, workers, queue_cap: JOBS + 4 })
+        .expect("bind server");
+    let addr = server.local_addr().expect("addr").to_string();
+    let handle = std::thread::spawn(move || server.run().expect("server run"));
+
+    let t0 = Instant::now();
+    for i in 0..JOBS {
+        let body = json::parse(&tiny_spec(i)).unwrap();
+        let (status, v) = request(&addr, "POST", "/jobs", Some(&body)).expect("submit");
+        assert_eq!(status, 200, "submit: {}", json::to_string(&v));
+    }
+    // drain: poll aggregate stats until every job is done
+    loop {
+        let (_, s) = request(&addr, "GET", "/stats", None).expect("stats");
+        let done = s.get("jobs_done").as_usize().unwrap_or(0);
+        let failed = s.get("jobs_failed").as_usize().unwrap_or(0);
+        assert_eq!(failed, 0, "jobs failed during bench");
+        if done == JOBS {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    let (status, _) = request(&addr, "POST", "/shutdown", None).expect("shutdown");
+    assert_eq!(status, 200);
+    handle.join().expect("server thread");
+    JOBS as f64 / secs
+}
+
+fn main() {
+    let b = Bencher::new();
+    let mut rates = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let rate = run_fleet(workers);
+        b.report_metric(&format!("serve_throughput/workers_{workers}"), rate, "jobs/sec");
+        rates.push((workers, rate));
+    }
+    let rate_of = |w: usize| rates.iter().find(|(n, _)| *n == w).map(|(_, r)| *r);
+    if let (Some(r1), Some(r4)) = (rate_of(1), rate_of(4)) {
+        b.report_metric("serve_throughput 4-worker : 1-worker speedup", r4 / r1, "x");
+    }
+}

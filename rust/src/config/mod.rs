@@ -43,6 +43,15 @@ impl Precision {
             Precision::Int8Star => "INT8*",
         }
     }
+
+    /// The canonical CLI/JSON token; `parse(token()) == self`.
+    pub fn token(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Int8 => "int8",
+            Precision::Int8Star => "int8*",
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -103,7 +112,7 @@ impl Config {
     pub fn apply_json(&mut self, v: &Value) -> Result<()> {
         let obj = v.as_obj().context("config root must be an object")?;
         for (k, val) in obj {
-            self.set(k, &json_scalar_to_string(val)?)?;
+            self.set(k, &scalar_to_string(val)?)?;
         }
         Ok(())
     }
@@ -191,7 +200,9 @@ impl Config {
     }
 }
 
-fn json_scalar_to_string(v: &Value) -> Result<String> {
+/// Canonical JSON-scalar → config-string coercion, shared by config
+/// files and `serve` job specs (both feed [`Config::set`]).
+pub fn scalar_to_string(v: &Value) -> Result<String> {
     Ok(match v {
         Value::Str(s) => s.clone(),
         Value::Num(n) => {
@@ -264,5 +275,12 @@ mod tests {
     fn precision_labels() {
         assert_eq!(Precision::Int8Star.label(), "INT8*");
         assert!(Precision::parse("bf16").is_err());
+    }
+
+    #[test]
+    fn precision_tokens_roundtrip() {
+        for p in [Precision::Fp32, Precision::Int8, Precision::Int8Star] {
+            assert_eq!(Precision::parse(p.token()).unwrap(), p);
+        }
     }
 }

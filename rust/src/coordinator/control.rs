@@ -1,0 +1,103 @@
+//! Run-control hooks threaded through the training loops: cooperative
+//! cancellation ([`StopFlag`]) and live per-epoch progress publishing
+//! ([`ProgressSink`]). Both default to no-ops so plain CLI runs are
+//! unaffected; the `serve` worker pool arms them per job.
+
+use super::metrics::EpochStats;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Cooperative cancellation handle. Cloning shares the underlying flag;
+/// the trainers poll it between batches and between epochs and exit
+/// early (marking the run as stopped) once it fires.
+#[derive(Debug, Clone, Default)]
+pub struct StopFlag(Option<Arc<AtomicBool>>);
+
+impl StopFlag {
+    /// An armed (but not yet fired) flag.
+    pub fn new() -> StopFlag {
+        StopFlag(Some(Arc::new(AtomicBool::new(false))))
+    }
+
+    /// A flag that can never fire — the default for plain CLI runs.
+    pub fn disabled() -> StopFlag {
+        StopFlag(None)
+    }
+
+    /// Request cancellation. No-op on a disabled flag.
+    pub fn request_stop(&self) {
+        if let Some(f) = &self.0 {
+            f.store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// Has cancellation been requested?
+    pub fn should_stop(&self) -> bool {
+        self.0.as_ref().map_or(false, |f| f.load(Ordering::SeqCst))
+    }
+}
+
+/// Per-epoch progress callback. The trainers invoke it with every
+/// [`EpochStats`] they record, before appending to the run history.
+#[derive(Clone, Default)]
+pub struct ProgressSink(Option<Arc<dyn Fn(&EpochStats) + Send + Sync>>);
+
+impl ProgressSink {
+    pub fn new(f: impl Fn(&EpochStats) + Send + Sync + 'static) -> ProgressSink {
+        ProgressSink(Some(Arc::new(f)))
+    }
+
+    /// A sink that drops everything — the default for plain CLI runs.
+    pub fn disabled() -> ProgressSink {
+        ProgressSink(None)
+    }
+
+    pub fn publish(&self, e: &EpochStats) {
+        if let Some(f) = &self.0 {
+            f(e);
+        }
+    }
+}
+
+impl fmt::Debug for ProgressSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(if self.0.is_some() { "ProgressSink(on)" } else { "ProgressSink(off)" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn stop_flag_shares_state_across_clones() {
+        let a = StopFlag::new();
+        let b = a.clone();
+        assert!(!a.should_stop() && !b.should_stop());
+        b.request_stop();
+        assert!(a.should_stop() && b.should_stop());
+    }
+
+    #[test]
+    fn disabled_flag_never_fires() {
+        let f = StopFlag::disabled();
+        f.request_stop();
+        assert!(!f.should_stop());
+        assert!(!StopFlag::default().should_stop());
+    }
+
+    #[test]
+    fn progress_sink_delivers() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = count.clone();
+        let sink = ProgressSink::new(move |_| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        sink.publish(&EpochStats::default());
+        sink.publish(&EpochStats::default());
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+        ProgressSink::disabled().publish(&EpochStats::default()); // no-op
+    }
+}

@@ -50,6 +50,14 @@ impl EngineKind {
             other => anyhow::bail!("unknown engine '{other}' (want xla|native)"),
         }
     }
+
+    /// The canonical CLI/JSON token; `parse(token()) == self`.
+    pub fn token(&self) -> &'static str {
+        match self {
+            EngineKind::Xla => "xla",
+            EngineKind::Native => "native",
+        }
+    }
 }
 
 /// Training method — the paper's four configurations.
@@ -99,6 +107,16 @@ impl Method {
         }
     }
 
+    /// The canonical CLI/JSON token; `parse(token()) == self`.
+    pub fn token(&self) -> &'static str {
+        match self {
+            Method::FullZo => "full-zo",
+            Method::Cls1 => "cls1",
+            Method::Cls2 => "cls2",
+            Method::FullBp => "full-bp",
+        }
+    }
+
     pub const ALL: [Method; 4] = [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp];
 
     /// Memory-model mapping.
@@ -144,5 +162,15 @@ mod tests {
     fn labels_match_paper_tables() {
         assert_eq!(Method::FullZo.label(), "Full ZO");
         assert_eq!(Method::Cls1.label(), "ZO-Feat-Cls1");
+    }
+
+    #[test]
+    fn tokens_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.token()).unwrap(), m);
+        }
+        for e in [EngineKind::Xla, EngineKind::Native] {
+            assert_eq!(EngineKind::parse(e.token()).unwrap(), e);
+        }
     }
 }

@@ -11,6 +11,7 @@
 //! like the FP32 path; p_zero and the BP bitwidth follow the paper's
 //! staged schedules.
 
+use super::control::{ProgressSink, StopFlag};
 use super::engine::Method;
 use super::metrics::{EpochStats, History};
 use super::schedules::{paper_b_bp, paper_p_zero};
@@ -54,6 +55,10 @@ pub struct Int8TrainConfig {
     pub seed: u64,
     pub eval_every: usize,
     pub verbose: bool,
+    /// Cooperative cancellation; polled between batches and epochs.
+    pub stop: StopFlag,
+    /// Live per-epoch progress callback (armed by the `serve` workers).
+    pub progress: ProgressSink,
 }
 
 impl Default for Int8TrainConfig {
@@ -68,6 +73,8 @@ impl Default for Int8TrainConfig {
             seed: 1,
             eval_every: 1,
             verbose: false,
+            stop: StopFlag::default(),
+            progress: ProgressSink::default(),
         }
     }
 }
@@ -167,6 +174,8 @@ pub fn evaluate_int8(ws: &[QTensor], data: &Dataset, batch: usize) -> (f32, f32)
 pub struct Int8TrainResult {
     pub history: History,
     pub timer: PhaseTimer,
+    /// True iff the run ended early because [`Int8TrainConfig::stop`] fired.
+    pub stopped: bool,
 }
 
 /// Train INT8 LeNet with any method (FullZO / Cls1 / Cls2 / FullBP=NITI).
@@ -193,15 +202,26 @@ pub fn train_int8(
         m => lenet8::zo_layer_count(m.bp_layers()),
     };
     let mut step: u64 = 0;
+    let mut stopped = false;
 
-    for epoch in 0..cfg.epochs {
+    'epochs: for epoch in 0..cfg.epochs {
+        if cfg.stop.should_stop() {
+            stopped = true;
+            break;
+        }
         let epoch_t0 = std::time::Instant::now();
         let p_zero = p_zero_sched.at(epoch);
         let b_bp = b_bp_sched.at(epoch);
         let mut epoch_loss = 0.0f64;
         let mut nbatches = 0usize;
+        let mut correct = 0usize;
+        let mut seen = 0usize;
 
         for b in Loader::new(train_data, cfg.batch, cfg.seed ^ 0xDA7A, epoch as u64) {
+            if cfg.stop.should_stop() {
+                stopped = true;
+                break 'epochs;
+            }
             let xq = timer.time(Phase::Data, || lenet8::quantize_input(&b.x, cfg.batch));
 
             if cfg.method == Method::FullBp {
@@ -210,6 +230,9 @@ pub fn train_int8(
                 let fwd = lenet8::forward(ws, &xq, cfg.batch);
                 timer.add(Phase::Forward, t0.elapsed());
                 epoch_loss += int8_ce(&fwd.logits, &b.labels, cfg.batch) as f64;
+                let (c, _) = int8_accuracy(&fwd, &b.labels, cfg.batch);
+                correct += c;
+                seen += cfg.batch;
                 let t0 = std::time::Instant::now();
                 lenet8::full_update(ws, &fwd, &b.labels, cfg.batch, b_bp);
                 timer.add(Phase::BpBackward, t0.elapsed());
@@ -272,6 +295,9 @@ pub fn train_int8(
                     timer.add(Phase::BpBackward, t0.elapsed());
                 }
                 epoch_loss += int8_ce(&fwd_minus.logits, &b.labels, cfg.batch) as f64;
+                let (c, _) = int8_accuracy(&fwd_minus, &b.labels, cfg.batch);
+                correct += c;
+                seen += cfg.batch;
             }
             nbatches += 1;
             step += 1;
@@ -294,23 +320,25 @@ pub fn train_int8(
             epoch,
             train_loss: (epoch_loss / nbatches.max(1) as f64) as f32,
             test_loss,
-            train_acc: 0.0,
+            train_acc: if seen > 0 { correct as f32 / seen as f32 } else { 0.0 },
             test_acc,
             lr: 0.0,
             seconds: epoch_t0.elapsed().as_secs_f64(),
         };
         if cfg.verbose {
             println!(
-                "[{label}] epoch {:>3}  loss {:.4}  test_loss {:.4}  acc {:.2}%  p_zero {p_zero}  b_bp {b_bp}",
+                "[{label}] epoch {:>3}  loss {:.4}  test_loss {:.4}  acc {:.2}%  train_acc {:.2}%  p_zero {p_zero}  b_bp {b_bp}",
                 epoch,
                 stats.train_loss,
                 stats.test_loss,
                 stats.test_acc * 100.0,
+                stats.train_acc * 100.0,
             );
         }
+        cfg.progress.publish(&stats);
         history.push(stats);
     }
-    Ok(Int8TrainResult { history, timer })
+    Ok(Int8TrainResult { history, timer, stopped })
 }
 
 #[cfg(test)]
@@ -394,6 +422,33 @@ mod tests {
         assert!(r.timer.total(Phase::ZoUpdate).as_nanos() > 0);
         assert!(r.timer.total(Phase::BpBackward).as_nanos() > 0);
         assert_eq!(r.history.epochs.len(), 2);
+    }
+
+    #[test]
+    fn int8_train_acc_computed_and_stop_flag_cancels() {
+        use crate::coordinator::control::{ProgressSink, StopFlag};
+        let train_d = synth_mnist::generate(96, 31);
+        let test_d = synth_mnist::generate(48, 32);
+        let mut ws = lenet8::init_params(33, 32);
+        let stop = StopFlag::new();
+        let stop2 = stop.clone();
+        let cfg = Int8TrainConfig {
+            method: Method::Cls1,
+            epochs: 50,
+            batch: 16,
+            progress: ProgressSink::new(move |e| {
+                if e.epoch == 1 {
+                    stop2.request_stop();
+                }
+            }),
+            stop,
+            ..Default::default()
+        };
+        let r = train_int8(&mut ws, &train_d, &test_d, &cfg).unwrap();
+        assert!(r.stopped);
+        assert_eq!(r.history.epochs.len(), 2, "must stop right after epoch 1");
+        let acc = r.history.epochs[1].train_acc;
+        assert!(acc > 0.0 && acc <= 1.0, "train_acc {acc}");
     }
 
     #[test]

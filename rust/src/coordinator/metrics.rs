@@ -14,6 +14,20 @@ pub struct EpochStats {
     pub seconds: f64,
 }
 
+impl EpochStats {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("epoch", Value::num(self.epoch as f64)),
+            ("train_loss", Value::num(self.train_loss as f64)),
+            ("test_loss", Value::num(self.test_loss as f64)),
+            ("train_acc", Value::num(self.train_acc as f64)),
+            ("test_acc", Value::num(self.test_acc as f64)),
+            ("lr", Value::num(self.lr as f64)),
+            ("seconds", Value::num(self.seconds)),
+        ])
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct History {
     pub label: String,
@@ -48,22 +62,7 @@ impl History {
             ("label", Value::str(self.label.clone())),
             (
                 "epochs",
-                Value::Arr(
-                    self.epochs
-                        .iter()
-                        .map(|e| {
-                            Value::obj(vec![
-                                ("epoch", Value::num(e.epoch as f64)),
-                                ("train_loss", Value::num(e.train_loss as f64)),
-                                ("test_loss", Value::num(e.test_loss as f64)),
-                                ("train_acc", Value::num(e.train_acc as f64)),
-                                ("test_acc", Value::num(e.test_acc as f64)),
-                                ("lr", Value::num(e.lr as f64)),
-                                ("seconds", Value::num(e.seconds)),
-                            ])
-                        })
-                        .collect(),
-                ),
+                Value::Arr(self.epochs.iter().map(EpochStats::to_json).collect()),
             ),
         ])
     }

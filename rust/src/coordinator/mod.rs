@@ -8,6 +8,7 @@
 //! ([`native_engine`]).
 
 pub mod checkpoint;
+pub mod control;
 pub mod engine;
 pub mod int8_trainer;
 pub mod metrics;
@@ -15,9 +16,11 @@ pub mod native_engine;
 pub mod params;
 pub mod schedules;
 pub mod trainer;
+#[cfg(feature = "xla")]
 pub mod xla_engine;
 pub mod zo;
 
+pub use control::{ProgressSink, StopFlag};
 pub use engine::{Engine, EngineKind, Method};
 pub use int8_trainer::{Int8TrainConfig, ZoGradMode};
 pub use params::{Model, ParamSet};

@@ -11,6 +11,7 @@
 //!   6. BP the last L−C layers from the partition activation of the ℓ₋
 //!      pass and apply SGD.
 
+use super::control::{ProgressSink, StopFlag};
 use super::engine::{Engine, Method};
 use super::metrics::{EpochStats, History};
 use super::params::ParamSet;
@@ -35,6 +36,10 @@ pub struct TrainConfig {
     /// Evaluate every N epochs (always evaluates the last).
     pub eval_every: usize,
     pub verbose: bool,
+    /// Cooperative cancellation; polled between batches and epochs.
+    pub stop: StopFlag,
+    /// Live per-epoch progress callback (armed by the `serve` workers).
+    pub progress: ProgressSink,
 }
 
 impl Default for TrainConfig {
@@ -52,6 +57,8 @@ impl Default for TrainConfig {
             seed: 1,
             eval_every: 1,
             verbose: false,
+            stop: StopFlag::default(),
+            progress: ProgressSink::default(),
         }
     }
 }
@@ -60,6 +67,8 @@ impl Default for TrainConfig {
 pub struct TrainResult {
     pub history: History,
     pub timer: PhaseTimer,
+    /// True iff the run ended early because [`TrainConfig::stop`] fired.
+    pub stopped: bool,
 }
 
 /// Evaluate mean loss and accuracy over a dataset.
@@ -88,19 +97,22 @@ pub fn evaluate(
     ))
 }
 
-/// One ElasticZO/FullZO minibatch step. Returns the step's train loss.
+/// One ElasticZO/FullZO minibatch step. Returns the step's train loss
+/// and the number of correct predictions in this minibatch (from the
+/// ℓ₋-pass logits, which the step already produces).
 #[allow(clippy::too_many_arguments)]
 pub fn zo_step(
     engine: &mut dyn Engine,
     params: &mut ParamSet,
     x: &[f32],
     y: &[f32],
+    labels: &[u8],
     bsz: usize,
     step: u64,
     lr: f32,
     cfg: &TrainConfig,
     timer: &mut PhaseTimer,
-) -> Result<f32> {
+) -> Result<(f32, usize)> {
     let bp_layers = cfg.method.bp_layers();
     let boundary = params.zo_boundary(bp_layers);
     let (seed, eps) = (cfg.seed, cfg.eps);
@@ -129,6 +141,11 @@ pub fn zo_step(
 
     let g = zo::projected_gradient(fwd_plus.loss, fwd_minus.loss, eps, cfg.g_clip);
 
+    // train accuracy from the ℓ₋ logits (θ−εz is within O(ε) of θ, and
+    // this pass's outputs are already in hand — no extra forward)
+    let nclass = fwd_minus.logits.len() / bsz.max(1);
+    let (correct, _) = accuracy(&fwd_minus.logits, labels, bsz, nclass);
+
     // merged restore + ZO update: θ += (ε − ηg)z
     let t0 = std::time::Instant::now();
     zo::perturb(params, boundary, seed, step, eps - lr * g);
@@ -145,7 +162,7 @@ pub fn zo_step(
         timer.add(Phase::BpBackward, t0.elapsed());
     }
 
-    Ok(0.5 * (fwd_plus.loss + fwd_minus.loss))
+    Ok((0.5 * (fwd_plus.loss + fwd_minus.loss), correct))
 }
 
 /// Train with any method; returns per-epoch history + phase breakdown.
@@ -160,25 +177,42 @@ pub fn train(
     let mut timer = PhaseTimer::new();
     let lr_sched = LrSchedule::paper_fp32(cfg.lr0, cfg.epochs);
     let mut step: u64 = 0;
+    let mut stopped = false;
 
-    for epoch in 0..cfg.epochs {
+    'epochs: for epoch in 0..cfg.epochs {
+        if cfg.stop.should_stop() {
+            stopped = true;
+            break;
+        }
         let epoch_t0 = std::time::Instant::now();
         let lr = lr_sched.lr(epoch);
         let mut epoch_loss = 0.0f64;
         let mut nbatches = 0usize;
+        let mut correct = 0usize;
+        let mut seen = 0usize;
 
         let loader = Loader::new(train_data, cfg.batch, cfg.seed ^ 0xDA7A, epoch as u64);
         for b in loader {
+            if cfg.stop.should_stop() {
+                stopped = true;
+                break 'epochs;
+            }
             let loss = match cfg.method {
                 Method::FullBp => {
                     let t0 = std::time::Instant::now();
                     let l = engine.full_step(params, &b.x, &b.y_onehot, cfg.batch, lr)?;
-                    timer.add(Phase::Forward, t0.elapsed());
+                    timer.add(Phase::BpStep, t0.elapsed());
                     l
                 }
-                _ => zo_step(
-                    engine, params, &b.x, &b.y_onehot, cfg.batch, step, lr, cfg, &mut timer,
-                )?,
+                _ => {
+                    let (l, c) = zo_step(
+                        engine, params, &b.x, &b.y_onehot, &b.labels, cfg.batch, step, lr,
+                        cfg, &mut timer,
+                    )?;
+                    correct += c;
+                    seen += cfg.batch;
+                    l
+                }
             };
             epoch_loss += loss as f64;
             nbatches += 1;
@@ -203,26 +237,30 @@ pub fn train(
             epoch,
             train_loss: (epoch_loss / nbatches.max(1) as f64) as f32,
             test_loss,
-            train_acc: 0.0,
+            // Full BP steps through a fused engine call that exposes no
+            // logits, so train accuracy is only available on ZO paths.
+            train_acc: if seen > 0 { correct as f32 / seen as f32 } else { 0.0 },
             test_acc,
             lr,
             seconds: epoch_t0.elapsed().as_secs_f64(),
         };
         if cfg.verbose {
             println!(
-                "[{}] epoch {:>3}  loss {:.4}  test_loss {:.4}  acc {:.2}%  lr {:.5}",
+                "[{}] epoch {:>3}  loss {:.4}  test_loss {:.4}  acc {:.2}%  train_acc {:.2}%  lr {:.5}",
                 cfg.method.label(),
                 epoch,
                 stats.train_loss,
                 stats.test_loss,
                 stats.test_acc * 100.0,
+                stats.train_acc * 100.0,
                 lr
             );
         }
+        cfg.progress.publish(&stats);
         history.push(stats);
     }
 
-    Ok(TrainResult { history, timer })
+    Ok(TrainResult { history, timer, stopped })
 }
 
 #[cfg(test)]
@@ -243,6 +281,7 @@ mod tests {
             seed: 7,
             eval_every: 1,
             verbose: false,
+            ..Default::default()
         }
     }
 
@@ -287,6 +326,60 @@ mod tests {
         assert_ne!(params.data[0], before_conv1, "ZO layers must move");
         assert!(r.timer.total(Phase::BpBackward).as_nanos() > 0);
         assert!(r.timer.total(Phase::ZoPerturb).as_nanos() > 0);
+    }
+
+    #[test]
+    fn full_bp_times_under_bp_step_phase() {
+        let train_d = synth_mnist::generate(64, 31);
+        let test_d = synth_mnist::generate(32, 32);
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 33);
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::FullBp, 1))
+            .unwrap();
+        assert!(r.timer.total(Phase::BpStep).as_nanos() > 0);
+        // the fused step must NOT be misfiled under Forward (only eval
+        // forwards run in a Full-BP epoch, and those are Phase::Eval)
+        assert_eq!(r.timer.total(Phase::Forward).as_nanos(), 0);
+    }
+
+    #[test]
+    fn train_acc_is_computed_on_zo_paths() {
+        let train_d = synth_mnist::generate(192, 41);
+        let test_d = synth_mnist::generate(64, 42);
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 43);
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::Cls1, 2))
+            .unwrap();
+        let last = r.history.epochs.last().unwrap();
+        assert!(
+            last.train_acc > 0.0 && last.train_acc <= 1.0,
+            "train_acc {}",
+            last.train_acc
+        );
+    }
+
+    #[test]
+    fn stop_flag_cancels_between_epochs() {
+        use crate::coordinator::control::{ProgressSink, StopFlag};
+        let train_d = synth_mnist::generate(64, 51);
+        let test_d = synth_mnist::generate(32, 52);
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 53);
+        let stop = StopFlag::new();
+        let stop2 = stop.clone();
+        let cfg = TrainConfig {
+            // fire cancellation as soon as the first epoch reports
+            progress: ProgressSink::new(move |e| {
+                if e.epoch == 0 {
+                    stop2.request_stop();
+                }
+            }),
+            stop,
+            ..tiny_cfg(Method::FullBp, 50)
+        };
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &cfg).unwrap();
+        assert!(r.stopped);
+        assert_eq!(r.history.epochs.len(), 1, "must stop right after epoch 0");
     }
 
     #[test]

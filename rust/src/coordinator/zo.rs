@@ -65,15 +65,19 @@ mod tests {
 
     #[test]
     fn bp_suffix_untouched() {
+        // perturb exactly the ZO prefix of the Cls1 partition; the four
+        // BP-trained suffix tensors (two FC layers × w,b) must not move
         let mut p = ParamSet::init(Model::LeNet, 5);
         let orig = p.clone();
         let b = p.zo_boundary(2);
-        perturb(&mut p, 1, 1, 1, 0.5); // only first tensor (boundary=1)
-        let _ = b;
-        for i in 1..p.num_tensors() {
+        assert_eq!(b, p.num_tensors() - 4);
+        perturb(&mut p, b, 1, 1, 0.5);
+        for i in b..p.num_tensors() {
             assert_eq!(p.data[i], orig.data[i], "tensor {i} must be untouched");
         }
-        assert_ne!(p.data[0], orig.data[0]);
+        for i in 0..b {
+            assert_ne!(p.data[i], orig.data[i], "tensor {i} must be perturbed");
+        }
     }
 
     #[test]

@@ -89,6 +89,15 @@ impl DatasetKind {
             other => anyhow::bail!("unknown dataset '{other}'"),
         }
     }
+
+    /// The canonical CLI/JSON token; `parse(token()) == self`.
+    pub fn token(&self) -> &'static str {
+        match self {
+            DatasetKind::SynthMnist => "mnist",
+            DatasetKind::SynthFashion => "fashion",
+            DatasetKind::SynthModelNet => "modelnet",
+        }
+    }
 }
 
 /// Generate `(train, test)` splits for a dataset kind.
@@ -137,5 +146,16 @@ mod tests {
             DatasetKind::SynthFashion
         );
         assert!(DatasetKind::parse("imagenet").is_err());
+    }
+
+    #[test]
+    fn tokens_roundtrip() {
+        for k in [
+            DatasetKind::SynthMnist,
+            DatasetKind::SynthFashion,
+            DatasetKind::SynthModelNet,
+        ] {
+            assert_eq!(DatasetKind::parse(k.token()).unwrap(), k);
+        }
     }
 }

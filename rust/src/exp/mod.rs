@@ -24,6 +24,7 @@ use crate::coordinator::engine::{EngineKind, Method};
 use crate::coordinator::int8_trainer::{self, Int8TrainConfig, ZoGradMode};
 use crate::coordinator::native_engine::NativeEngine;
 use crate::coordinator::trainer::{self, TrainConfig, TrainResult};
+#[cfg(feature = "xla")]
 use crate::coordinator::xla_engine::XlaEngine;
 use crate::coordinator::{Engine, Model, ParamSet};
 use crate::data::{self, Dataset, DatasetKind};
@@ -122,19 +123,52 @@ pub struct Fp32Run {
 }
 
 /// Build the configured engine, falling back to native (with a warning)
-/// when artifacts are unavailable.
+/// when artifacts are unavailable or the crate was built without the
+/// `xla` feature.
 pub fn build_engine(model: Model, batch: usize, kind: EngineKind) -> Box<dyn Engine> {
+    build_engine_at(model, batch, kind, None)
+}
+
+/// Like [`build_engine`], with an explicit artifacts directory override
+/// (the `serve` workers use this so per-job `artifacts` specs don't
+/// race on a process-wide env var).
+pub fn build_engine_at(
+    model: Model,
+    batch: usize,
+    kind: EngineKind,
+    artifacts: Option<&str>,
+) -> Box<dyn Engine> {
     match kind {
         EngineKind::Native => Box::new(NativeEngine::new(model)),
-        EngineKind::Xla => match XlaEngine::open_default(model, batch) {
-            Ok(e) => Box::new(e),
-            Err(err) => {
-                eprintln!(
-                    "warning: XLA engine unavailable ({err:#}); falling back to native engine"
-                );
-                Box::new(NativeEngine::new(model))
+        #[cfg(feature = "xla")]
+        EngineKind::Xla => {
+            let open = || -> Result<XlaEngine> {
+                match artifacts {
+                    Some(dir) => {
+                        XlaEngine::new(crate::runtime::Registry::open(dir)?, model, batch)
+                    }
+                    None => XlaEngine::open_default(model, batch),
+                }
+            };
+            match open() {
+                Ok(e) => Box::new(e),
+                Err(err) => {
+                    eprintln!(
+                        "warning: XLA engine unavailable ({err:#}); falling back to native engine"
+                    );
+                    Box::new(NativeEngine::new(model))
+                }
             }
-        },
+        }
+        #[cfg(not(feature = "xla"))]
+        EngineKind::Xla => {
+            // only the XLA artifacts have static batch shapes / a dir
+            let _ = (batch, artifacts);
+            eprintln!(
+                "warning: built without the `xla` feature; falling back to native engine"
+            );
+            Box::new(NativeEngine::new(model))
+        }
     }
 }
 
@@ -156,6 +190,7 @@ pub fn fp32_train_config(method: Method, epochs: usize, batch: usize, seed: u64)
         seed,
         eval_every: 1,
         verbose: std::env::var("REPRO_VERBOSE").is_ok(),
+        ..Default::default()
     }
 }
 
@@ -205,6 +240,7 @@ pub fn run_int8(
         seed,
         eval_every: 1,
         verbose: std::env::var("REPRO_VERBOSE").is_ok(),
+        ..Default::default()
     };
     int8_trainer::train_int8(&mut ws, &train_d, &test_d, &cfg)
 }

@@ -17,9 +17,15 @@
 //!
 //! Two interchangeable execution engines mirror the paper's two
 //! implementations (PyTorch for accuracy, C++/NEON for on-device cost):
-//! the **XLA engine** ([`coordinator::xla_engine`]) runs the AOT
-//! artifacts, and the **native engine** ([`nn`], [`int8`]) is a pure-rust
-//! reference — including the paper's integer-only INT8* path.
+//! the **XLA engine** (`coordinator::xla_engine`, behind the
+//! off-by-default `xla` cargo feature) runs the AOT artifacts, and the
+//! **native engine** ([`nn`], [`int8`]) is a pure-rust reference —
+//! including the paper's integer-only INT8* path.
+//!
+//! On top of the trainers sits [`serve`]: a std-only multi-job training
+//! server (`repro serve`) that queues, schedules, observes and cancels
+//! jobs across a worker pool over an HTTP/1.1 + JSON control plane —
+//! see the [`serve`] module docs for the protocol.
 
 pub mod config;
 pub mod coordinator;
@@ -30,6 +36,7 @@ pub mod memory;
 pub mod nn;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod telemetry;
 pub mod tensor;
 pub mod util;

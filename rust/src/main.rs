@@ -11,6 +11,13 @@
 //!              [--fast|--paper] [--engine xla|native]
 //! repro memory [--model lenet|pointnet] [--batch N] [--precision fp32|int8]
 //! repro inspect            # list AOT artifacts
+//!
+//! repro serve  [--port P] [--workers N] [--queue-cap C]
+//!              # multi-job training server (HTTP/1.1 + JSON)
+//! repro submit [--addr host:port] [--name S] [--priority N] [train flags...]
+//! repro jobs   [--addr host:port]
+//! repro job    <id> [--addr host:port] [--cancel]
+//! repro stats  [--addr host:port]
 //! ```
 
 use anyhow::Result;
@@ -20,6 +27,7 @@ use elasticzo::coordinator::{checkpoint, trainer, Method, ParamSet, TrainConfig}
 use elasticzo::data;
 use elasticzo::exp::{self, Scale};
 use elasticzo::int8::lenet8;
+use elasticzo::serve;
 use elasticzo::util::cli::Args;
 
 fn main() {
@@ -31,6 +39,11 @@ fn main() {
         "exp" => cmd_exp(&args),
         "memory" => cmd_memory(&args),
         "inspect" => cmd_inspect(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "jobs" => cmd_jobs(&args),
+        "job" => cmd_job(&args),
+        "stats" => cmd_stats(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -56,7 +69,15 @@ fn print_help() {
          \x20 repro eval   --load ckpt [--dataset D] [--rotate DEG] [--precision P]\n\
          \x20 repro exp    table1|table2|fig2..fig7|all [--fast|--paper] [--engine E]\n\
          \x20 repro memory [--model M] [--batch N] [--precision fp32|int8] [--adam]\n\
-         \x20 repro inspect"
+         \x20 repro inspect\n\
+         \n  repro serve  [--port P] [--workers N] [--queue-cap C]\n\
+         \x20              multi-job training server; HTTP/1.1 + JSON on 127.0.0.1:\n\
+         \x20              GET /healthz | GET /stats | GET /jobs | POST /jobs\n\
+         \x20              GET /jobs/<id> | POST /jobs/<id>/cancel | POST /shutdown\n\
+         \x20 repro submit [--addr host:port] [--name S] [--priority N] [train flags]\n\
+         \x20 repro jobs   [--addr host:port]\n\
+         \x20 repro job    <id> [--addr host:port] [--cancel]\n\
+         \x20 repro stats  [--addr host:port]"
     );
 }
 
@@ -97,6 +118,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 seed: cfg.seed,
                 eval_every: 1,
                 verbose: true,
+                ..Default::default()
             };
             let r = trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &tcfg)?;
             println!(
@@ -126,6 +148,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 seed: cfg.seed,
                 eval_every: 1,
                 verbose: true,
+                ..Default::default()
             };
             let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &icfg)?;
             println!("done: best test acc {:.2}%", r.history.best_test_acc() * 100.0);
@@ -224,6 +247,116 @@ fn cmd_memory(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port = args.get_u64("port", serve::DEFAULT_PORT as u64)?;
+    anyhow::ensure!(port <= u16::MAX as u64, "--port must be <= 65535, got {port}");
+    let opts = serve::ServeOptions {
+        port: port as u16,
+        workers: args.get_usize("workers", 2)?,
+        queue_cap: args.get_usize("queue-cap", 64)?,
+    };
+    let server = serve::Server::bind(&opts)?;
+    println!(
+        "serve: listening on http://{} ({} workers, queue capacity {})",
+        server.local_addr()?,
+        opts.workers,
+        opts.queue_cap
+    );
+    println!("endpoints: GET /healthz /stats /jobs /jobs/<id>  POST /jobs /jobs/<id>/cancel /shutdown");
+    server.run()
+}
+
+fn server_addr(args: &Args) -> String {
+    args.get("addr")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("127.0.0.1:{}", serve::DEFAULT_PORT))
+}
+
+/// Build a job spec from `repro submit` flags: the client-side keys
+/// (`addr`, `name`, `priority`) are stripped, then everything else
+/// goes through the exact `repro train` pipeline (`Config::from_args`,
+/// including `--config file.json`).
+fn submit_spec(args: &Args) -> Result<serve::JobSpec> {
+    let mut train_args = args.clone();
+    for k in ["addr", "name", "priority"] {
+        train_args.options.remove(k);
+    }
+    let mut spec = serve::JobSpec::new(Config::from_args(&train_args)?);
+    spec.name = args.get_or("name", "").to_string();
+    if let Some(p) = args.get("priority") {
+        spec.priority = p
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--priority expects an integer, got '{p}'"))?;
+    }
+    Ok(spec)
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let addr = server_addr(args);
+    let spec = submit_spec(args)?;
+    let (status, v) = serve::request(&addr, "POST", "/jobs", Some(&spec.to_json()))?;
+    if status != 200 {
+        anyhow::bail!("submit rejected ({status}): {}", elasticzo::util::json::to_string(&v));
+    }
+    let id = v.get("id").as_usize().unwrap_or(0);
+    println!("submitted job {id} ({})", v.get("state").as_str().unwrap_or("?"));
+    Ok(())
+}
+
+fn cmd_jobs(args: &Args) -> Result<()> {
+    use elasticzo::util::table::Table;
+    let addr = server_addr(args);
+    let (status, v) = serve::request(&addr, "GET", "/jobs", None)?;
+    anyhow::ensure!(status == 200, "server returned {status}");
+    let mut t = Table::new(
+        &format!("jobs @ {addr}"),
+        &["id", "name", "state", "method", "precision", "epochs", "best acc"],
+    );
+    for j in v.get("jobs").as_arr().unwrap_or(&[]) {
+        t.row(&[
+            format!("{}", j.get("id").as_usize().unwrap_or(0)),
+            j.get("name").as_str().unwrap_or("").to_string(),
+            j.get("state").as_str().unwrap_or("?").to_string(),
+            j.get("method").as_str().unwrap_or("?").to_string(),
+            j.get("precision").as_str().unwrap_or("?").to_string(),
+            format!(
+                "{}/{}",
+                j.get("epochs_done").as_usize().unwrap_or(0),
+                j.get("epochs_total").as_usize().unwrap_or(0)
+            ),
+            format!("{:.2}%", j.get("best_test_acc").as_f64().unwrap_or(0.0) * 100.0),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_job(args: &Args) -> Result<()> {
+    let addr = server_addr(args);
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: repro job <id> [--addr A] [--cancel]"))?;
+    let id: u64 = id.parse().map_err(|_| anyhow::anyhow!("job id must be an integer"))?;
+    let (status, v) = if args.flag("cancel") {
+        serve::request(&addr, "POST", &format!("/jobs/{id}/cancel"), None)?
+    } else {
+        serve::request(&addr, "GET", &format!("/jobs/{id}"), None)?
+    };
+    anyhow::ensure!(status == 200, "server returned {status}: {}",
+        elasticzo::util::json::to_string(&v));
+    println!("{}", elasticzo::util::json::to_string_pretty(&v));
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = server_addr(args);
+    let (status, v) = serve::request(&addr, "GET", "/stats", None)?;
+    anyhow::ensure!(status == 200, "server returned {status}");
+    println!("{}", elasticzo::util::json::to_string_pretty(&v));
     Ok(())
 }
 

@@ -7,10 +7,18 @@
 //! format (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids).
 
+//! The manifest parser is always available; the PJRT executor
+//! (`executable`/`registry`) needs the external `xla` bindings and is
+//! gated behind the off-by-default `xla` cargo feature.
+
+#[cfg(feature = "xla")]
 pub mod executable;
 pub mod manifest;
+#[cfg(feature = "xla")]
 pub mod registry;
 
+#[cfg(feature = "xla")]
 pub use executable::{ArgValue, LoadedArtifact, OutValue};
 pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};
+#[cfg(feature = "xla")]
 pub use registry::Registry;

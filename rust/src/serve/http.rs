@@ -1,0 +1,358 @@
+//! Minimal HTTP/1.1 front end on `std::net::TcpListener` — content-length
+//! framing only, one request per connection (`Connection: close`), JSON
+//! bodies everywhere. One acceptor thread handles the (cheap) control
+//! plane; training runs on the worker pool.
+//!
+//! Routes:
+//!
+//! | method+path            | action                                   |
+//! |------------------------|------------------------------------------|
+//! | GET  /healthz          | liveness probe                           |
+//! | GET  /stats            | aggregate `ServerStats`                  |
+//! | GET  /jobs             | job summaries, newest first              |
+//! | POST /jobs             | submit a `JobSpec` (429 when queue full) |
+//! | GET  /jobs/{id}        | full status + per-epoch history          |
+//! | POST /jobs/{id}/cancel | cancel queued / stop running             |
+//! | POST /shutdown         | drain acceptor, close queue, join pool   |
+
+use super::protocol::{error_json, JobSpec, DEFAULT_PORT};
+use super::queue::JobQueue;
+use super::registry::{CancelOutcome, JobRegistry};
+use super::worker::WorkerPool;
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// TCP port on 127.0.0.1; 0 picks an ephemeral port.
+    pub port: u16,
+    /// Worker-pool size (concurrent training jobs).
+    pub workers: usize,
+    /// Queue capacity; submissions beyond it get a 429.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { port: DEFAULT_PORT, workers: 2, queue_cap: 64 }
+    }
+}
+
+/// A bound job server: acceptor + queue + registry + worker pool.
+pub struct Server {
+    listener: TcpListener,
+    queue: Arc<JobQueue>,
+    registry: Arc<JobRegistry>,
+    pool: WorkerPool,
+}
+
+impl Server {
+    /// Bind the listener and spawn the worker pool (jobs start flowing
+    /// only once [`Server::run`] accepts submissions).
+    pub fn bind(opts: &ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", opts.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", opts.port))?;
+        let queue = Arc::new(JobQueue::new(opts.queue_cap));
+        let registry = Arc::new(JobRegistry::new());
+        let pool = WorkerPool::spawn(opts.workers, queue.clone(), registry.clone());
+        Ok(Server { listener, queue, registry, pool })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept loop; returns after a `POST /shutdown`, once the queue is
+    /// closed, in-flight jobs are stop-flagged, and every worker has
+    /// exited.
+    pub fn run(self) -> Result<()> {
+        for conn in self.listener.incoming() {
+            let mut stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            if self.handle(&mut stream) {
+                break;
+            }
+        }
+        self.queue.close();
+        // without this, pool.join() would block for the remainder of
+        // any in-flight training run
+        self.registry.stop_all_running();
+        self.pool.join();
+        Ok(())
+    }
+
+    /// Serve one connection; returns true iff shutdown was requested.
+    fn handle(&self, stream: &mut TcpStream) -> bool {
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+        let req = match read_request(stream) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = write_json(stream, 400, &error_json(&format!("bad request: {e:#}")));
+                return false;
+            }
+        };
+        let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+        let (status, body, shutdown) = self.route(&req.method, &segs, &req.body);
+        let _ = write_json(stream, status, &body);
+        shutdown
+    }
+
+    fn route(&self, method: &str, segs: &[&str], body: &[u8]) -> (u16, Value, bool) {
+        match (method, segs) {
+            ("GET", ["healthz"]) => (200, Value::obj(vec![("ok", Value::Bool(true))]), false),
+            ("GET", ["stats"]) => (
+                200,
+                self.registry.stats_json(self.queue.len(), self.pool.len()),
+                false,
+            ),
+            ("GET", ["jobs"]) => (200, self.registry.jobs_json(), false),
+            ("POST", ["jobs"]) => {
+                let (status, v) = self.submit(body);
+                (status, v, false)
+            }
+            ("GET", ["jobs", id]) => match parse_id(id) {
+                Some(id) => match self.registry.job_json(id) {
+                    Some(v) => (200, v, false),
+                    None => (404, error_json(&format!("no job {id}")), false),
+                },
+                None => (400, error_json("job id must be an integer"), false),
+            },
+            ("POST", ["jobs", id, "cancel"]) => match parse_id(id) {
+                Some(id) => self.cancel(id),
+                None => (400, error_json("job id must be an integer"), false),
+            },
+            ("POST", ["shutdown"]) => {
+                (200, Value::obj(vec![("ok", Value::Bool(true))]), true)
+            }
+            _ => (404, error_json(&format!("no route {method} /{}", segs.join("/"))), false),
+        }
+    }
+
+    fn submit(&self, body: &[u8]) -> (u16, Value) {
+        let text = match std::str::from_utf8(body) {
+            Ok(t) => t,
+            Err(_) => return (400, error_json("body must be utf-8 JSON")),
+        };
+        let v = match json::parse(text) {
+            Ok(v) => v,
+            Err(e) => return (400, error_json(&format!("invalid JSON: {e}"))),
+        };
+        let spec = match JobSpec::from_json(&v) {
+            Ok(s) => s,
+            Err(e) => return (400, error_json(&format!("invalid job spec: {e:#}"))),
+        };
+        let priority = spec.priority;
+        let id = self.registry.add(spec);
+        match self.queue.push(id, priority) {
+            Ok(()) => (
+                200,
+                Value::obj(vec![
+                    ("id", Value::num(id as f64)),
+                    ("state", Value::str("queued")),
+                ]),
+            ),
+            Err(full) => {
+                // roll the record back so the rejected job never shows up
+                self.registry.forget(id);
+                (
+                    429,
+                    Value::obj(vec![
+                        ("error", Value::str("queue full")),
+                        ("capacity", Value::num(full.capacity as f64)),
+                    ]),
+                )
+            }
+        }
+    }
+
+    fn cancel(&self, id: u64) -> (u16, Value, bool) {
+        match self.registry.cancel(id) {
+            None => (404, error_json(&format!("no job {id}")), false),
+            Some(outcome) => {
+                let action = match outcome {
+                    CancelOutcome::CancelledQueued => {
+                        self.queue.remove(id);
+                        "cancelled-while-queued"
+                    }
+                    CancelOutcome::StopRequested => "stop-requested",
+                    CancelOutcome::AlreadyTerminal(_) => "already-terminal",
+                };
+                let state = self
+                    .registry
+                    .state_of(id)
+                    .map(|s| s.as_str())
+                    .unwrap_or("unknown");
+                (
+                    200,
+                    Value::obj(vec![
+                        ("id", Value::num(id as f64)),
+                        ("action", Value::str(action)),
+                        ("state", Value::str(state)),
+                    ]),
+                    false,
+                )
+            }
+        }
+    }
+}
+
+fn parse_id(s: &str) -> Option<u64> {
+    s.parse().ok()
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read one content-length-framed request (no chunked encoding).
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        anyhow::ensure!(buf.len() < 64 * 1024, "headers too large");
+        let n = stream.read(&mut tmp)?;
+        anyhow::ensure!(n > 0, "connection closed mid-headers");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..header_end]).context("non-utf8 headers")?;
+    let mut lines = head.split("\r\n");
+    let reqline = lines.next().context("empty request")?;
+    let mut parts = reqline.split_whitespace();
+    let method = parts.next().context("missing method")?.to_ascii_uppercase();
+    let path = parts.next().context("missing path")?.to_string();
+    let mut content_len = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    anyhow::ensure!(content_len <= 1 << 20, "body too large (max 1 MiB)");
+    let mut body: Vec<u8> = buf[header_end + 4..].to_vec();
+    while body.len() < content_len {
+        let n = stream.read(&mut tmp)?;
+        anyhow::ensure!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_len);
+    Ok(Request { method, path, body })
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+fn write_json(stream: &mut TcpStream, status: u16, v: &Value) -> std::io::Result<()> {
+    let body = json::to_string(v);
+    let resp = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        status_text(status),
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+/// Tiny blocking HTTP/1.1 client for `repro submit|jobs|job` and the
+/// integration tests. Returns `(status, parsed JSON body)`.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&Value>) -> Result<(u16, Value)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    let body_text = body.map(json::to_string).unwrap_or_default();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body_text}",
+        body_text.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("reading response")?;
+    parse_response(&raw)
+}
+
+fn parse_response(raw: &[u8]) -> Result<(u16, Value)> {
+    let text = String::from_utf8_lossy(raw);
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .context("malformed HTTP response (no header terminator)")?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .context("missing status code")?
+        .parse()
+        .context("non-numeric status code")?;
+    let trimmed = body.trim();
+    let v = if trimmed.is_empty() {
+        Value::Null
+    } else {
+        json::parse(trimmed).context("parsing response JSON")?
+    };
+    Ok((status, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subslice_search() {
+        assert_eq!(find_subslice(b"ab\r\n\r\ncd", b"\r\n\r\n"), Some(2));
+        assert_eq!(find_subslice(b"abcd", b"\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn response_parsing() {
+        let raw = b"HTTP/1.1 429 Too Many Requests\r\nContent-Length: 16\r\n\r\n{\"error\":\"full\"}";
+        let (status, v) = parse_response(raw).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(v.get("error").as_str(), Some("full"));
+        assert!(parse_response(b"garbage").is_err());
+    }
+
+    #[test]
+    fn healthz_and_404_over_real_sockets() {
+        let server = Server::bind(&ServeOptions { port: 0, workers: 1, queue_cap: 2 }).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || server.run().unwrap());
+
+        let (status, v) = request(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+
+        let (status, v) = request(&addr, "GET", "/nope", None).unwrap();
+        assert_eq!(status, 404);
+        assert!(v.get("error").as_str().is_some());
+
+        let (status, _) = request(&addr, "GET", "/jobs/xyz", None).unwrap();
+        assert_eq!(status, 400);
+
+        let (status, _) = request(&addr, "POST", "/shutdown", None).unwrap();
+        assert_eq!(status, 200);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,37 @@
+//! `serve` — the multi-job on-device-learning server (fleet
+//! coordinator). Turns the one-shot trainers into a service: many
+//! concurrent jobs, queued with priority + backpressure, scheduled onto
+//! a pool of worker threads, observable over a dependency-free HTTP/1.1
+//! + JSON control plane, cancellable mid-run, and checkpointed.
+//!
+//! Layering (std-only; JSON via the in-tree `util::json`):
+//!
+//! * [`protocol`] — `JobSpec` / `JobState` / error bodies; a job spec
+//!   covers every scenario `repro train` supports (both models, all
+//!   three datasets, all four methods, FP32/INT8/INT8*, checkpoints).
+//! * [`queue`]    — bounded MPMC priority+FIFO queue on `Mutex`+`Condvar`;
+//!   a full queue rejects submissions (HTTP 429) instead of blocking.
+//! * [`registry`] — in-memory job table (Queued→Running→Done/Failed/
+//!   Cancelled), per-epoch history snapshots, aggregate `ServerStats`
+//!   rolled up from each job's `telemetry::PhaseTimer`.
+//! * [`worker`]   — N OS threads running the exact `cmd_train` paths with
+//!   a cooperative [`crate::coordinator::StopFlag`] and a registry-backed
+//!   progress sink threaded into the train configs.
+//! * [`http`]     — `TcpListener` front end (GET /jobs, GET /jobs/{id},
+//!   POST /jobs, POST /jobs/{id}/cancel, GET /stats, GET /healthz,
+//!   POST /shutdown) plus the tiny client used by `repro submit|jobs|job`.
+//!
+//! Entry points: `repro serve --port P --workers N --queue-cap C` boots
+//! [`http::Server`]; `repro submit|jobs|job|stats` talk to it.
+
+pub mod http;
+pub mod protocol;
+pub mod queue;
+pub mod registry;
+pub mod worker;
+
+pub use http::{request, ServeOptions, Server};
+pub use protocol::{JobSpec, JobState, DEFAULT_PORT};
+pub use queue::{JobQueue, QueueFull};
+pub use registry::{CancelOutcome, JobOutcome, JobRegistry};
+pub use worker::WorkerPool;

@@ -1,0 +1,180 @@
+//! JSON wire types for the job server — in the spirit of the in-tree
+//! `util::json` substrate: no serde, hand-rolled (de)serialization.
+//!
+//! A job spec is a flat JSON object. Two keys are server-level
+//! (`name`, `priority`); every other key is a training-config key with
+//! exactly the `repro train` semantics (`model`, `dataset`, `method`,
+//! `precision`, `engine`, `epochs`, `batch`, `lr`, `eps`, `seed`,
+//! `r_max`, `b_zo`, `train_n`, `test_n`, `npoints`, `save`, `load`, …),
+//! so everything the CLI can run, the server can schedule.
+
+use crate::config::{scalar_to_string, Config};
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+
+/// Default TCP port of `repro serve`.
+pub const DEFAULT_PORT: u16 = 8377;
+
+/// One schedulable training job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Optional human label, echoed back in listings.
+    pub name: String,
+    /// Higher runs first; FIFO within a priority level. Default 0.
+    pub priority: i64,
+    /// The full training configuration (validated at submit time).
+    pub config: Config,
+}
+
+impl JobSpec {
+    pub fn new(config: Config) -> JobSpec {
+        JobSpec { name: String::new(), priority: 0, config }
+    }
+
+    /// Parse a submit body. Unknown keys and invalid combinations are
+    /// rejected with context (surfaced to the client as a 400).
+    pub fn from_json(v: &Value) -> Result<JobSpec> {
+        let obj = v.as_obj().context("job spec must be a JSON object")?;
+        let mut spec = JobSpec::new(Config::default());
+        for (k, val) in obj {
+            match k.as_str() {
+                "name" => spec.name = val.as_str().context("name must be a string")?.to_string(),
+                "priority" => {
+                    spec.priority = val.as_i64().context("priority must be a number")?
+                }
+                key => {
+                    let s = scalar_to_string(val)
+                        .with_context(|| format!("job spec key '{key}'"))?;
+                    spec.config.set(key, &s)?;
+                }
+            }
+        }
+        spec.config.validate()?;
+        Ok(spec)
+    }
+
+    /// Serialize back to the same flat shape `from_json` accepts.
+    pub fn to_json(&self) -> Value {
+        let c = &self.config;
+        let mut pairs = vec![
+            ("name", Value::str(self.name.clone())),
+            ("priority", Value::num(self.priority as f64)),
+            ("model", Value::str(c.model.clone())),
+            ("dataset", Value::str(c.dataset.token())),
+            ("method", Value::str(c.method.token())),
+            ("precision", Value::str(c.precision.token())),
+            ("engine", Value::str(c.engine.token())),
+            ("epochs", Value::num(c.epochs as f64)),
+            ("batch", Value::num(c.batch as f64)),
+            ("lr", Value::num(c.lr as f64)),
+            ("eps", Value::num(c.eps as f64)),
+            ("g_clip", Value::num(c.g_clip as f64)),
+            ("r_max", Value::num(c.r_max as f64)),
+            ("b_zo", Value::num(c.b_zo as f64)),
+            ("seed", Value::num(c.seed as f64)),
+            ("train_n", Value::num(c.train_n as f64)),
+            ("test_n", Value::num(c.test_n as f64)),
+            ("npoints", Value::num(c.npoints as f64)),
+            ("ncls", Value::num(c.ncls as f64)),
+            ("verbose", Value::Bool(c.verbose)),
+        ];
+        if let Some(p) = &c.artifacts_dir {
+            pairs.push(("artifacts", Value::str(p.clone())));
+        }
+        if let Some(p) = &c.load_checkpoint {
+            pairs.push(("load", Value::str(p.clone())));
+        }
+        if let Some(p) = &c.save_checkpoint {
+            pairs.push(("save", Value::str(p.clone())));
+        }
+        Value::obj(pairs)
+    }
+}
+
+/// Job lifecycle: Queued → Running → Done | Failed | Cancelled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// The structured error body every non-2xx response carries.
+pub fn error_json(msg: &str) -> Value {
+    Value::obj(vec![("error", Value::str(msg))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+    use crate::coordinator::Method;
+    use crate::util::json;
+
+    #[test]
+    fn spec_roundtrips_through_json() {
+        let v = json::parse(
+            r#"{"name": "night-ft", "priority": 3, "model": "lenet",
+                "dataset": "fashion", "method": "cls2", "precision": "int8*",
+                "epochs": 4, "batch": 16, "seed": 9, "train_n": 128, "test_n": 64,
+                "ncls": 10, "verbose": true}"#,
+        )
+        .unwrap();
+        let spec = JobSpec::from_json(&v).unwrap();
+        assert_eq!(spec.name, "night-ft");
+        assert_eq!(spec.priority, 3);
+        assert_eq!(spec.config.method, Method::Cls2);
+        assert_eq!(spec.config.precision, Precision::Int8Star);
+        assert_eq!(spec.config.epochs, 4);
+
+        let back = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.priority, spec.priority);
+        assert_eq!(back.config.method, spec.config.method);
+        assert_eq!(back.config.precision, spec.config.precision);
+        assert_eq!(back.config.train_n, spec.config.train_n);
+        assert_eq!(back.config.ncls, spec.config.ncls);
+        assert_eq!(back.config.verbose, spec.config.verbose);
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        for bad in [
+            r#"[1, 2]"#,
+            r#"{"model": "resnet"}"#,
+            r#"{"optimzer": "adam"}"#,
+            r#"{"epochs": 0}"#,
+            r#"{"model": "pointnet", "precision": "int8"}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(JobSpec::from_json(&v).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn job_states() {
+        assert!(!JobState::Queued.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Done.is_terminal());
+        assert!(JobState::Cancelled.is_terminal());
+        assert_eq!(JobState::Failed.as_str(), "failed");
+    }
+}

@@ -1,0 +1,190 @@
+//! Bounded MPMC job queue: priority + FIFO ordering on
+//! `std::sync::{Mutex, Condvar}`. `push` never blocks — a full queue is
+//! backpressure, reported to the submitter as a structured 429 — while
+//! `pop` parks worker threads until work arrives or the queue closes.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::fmt;
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Heap entry: max-priority first, then FIFO (lowest sequence) within a
+/// priority level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Entry {
+    priority: i64,
+    seq: u64,
+    job_id: u64,
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Rejection on `push` when the queue is at capacity (or closed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueFull {
+    pub capacity: usize,
+}
+
+impl fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job queue full (capacity {})", self.capacity)
+    }
+}
+
+impl std::error::Error for QueueFull {}
+
+struct State {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    closed: bool,
+}
+
+pub struct JobQueue {
+    capacity: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl JobQueue {
+    pub fn new(capacity: usize) -> JobQueue {
+        assert!(capacity > 0, "queue capacity must be positive");
+        JobQueue {
+            capacity,
+            state: Mutex::new(State { heap: BinaryHeap::new(), seq: 0, closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current queue depth (jobs waiting, not counting running ones).
+    pub fn len(&self) -> usize {
+        self.lock().heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue without blocking; `Err(QueueFull)` is the backpressure
+    /// signal when at capacity (a closed queue also rejects).
+    pub fn push(&self, job_id: u64, priority: i64) -> Result<(), QueueFull> {
+        let mut st = self.lock();
+        if st.closed || st.heap.len() >= self.capacity {
+            return Err(QueueFull { capacity: self.capacity });
+        }
+        let seq = st.seq;
+        st.seq += 1;
+        st.heap.push(Entry { priority, seq, job_id });
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block until a job is available (highest priority, FIFO within) or
+    /// the queue is closed. `None` means "closed: worker should exit";
+    /// jobs still queued at close time are abandoned to the registry's
+    /// terminal bookkeeping.
+    pub fn pop(&self) -> Option<u64> {
+        let mut st = self.lock();
+        loop {
+            if st.closed {
+                return None;
+            }
+            if let Some(e) = st.heap.pop() {
+                return Some(e.job_id);
+            }
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Drop a queued job (cancellation before a worker claimed it).
+    /// Returns true if it was still queued.
+    pub fn remove(&self, job_id: u64) -> bool {
+        let mut st = self.lock();
+        let before = st.heap.len();
+        let kept: Vec<Entry> = st.heap.drain().filter(|e| e.job_id != job_id).collect();
+        st.heap = kept.into();
+        st.heap.len() != before
+    }
+
+    /// Close the queue: wake every parked worker so the pool can exit.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_within_priority_and_priority_first() {
+        let q = JobQueue::new(8);
+        q.push(1, 0).unwrap();
+        q.push(2, 0).unwrap();
+        q.push(3, 5).unwrap();
+        q.push(4, 5).unwrap();
+        assert_eq!(q.pop(), Some(3)); // higher priority first
+        assert_eq!(q.pop(), Some(4)); // FIFO within priority 5
+        assert_eq!(q.pop(), Some(1)); // then FIFO at priority 0
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn full_queue_rejects_with_backpressure() {
+        let q = JobQueue::new(2);
+        q.push(1, 0).unwrap();
+        q.push(2, 0).unwrap();
+        let err = q.push(3, 99).unwrap_err();
+        assert_eq!(err.capacity, 2);
+        assert!(err.to_string().contains("capacity 2"));
+        // draining makes room again
+        assert_eq!(q.pop(), Some(1));
+        q.push(3, 0).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_wakes_blocked_workers() {
+        let q = Arc::new(JobQueue::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop());
+        // give the worker a moment to park, then close
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+        assert!(q.push(9, 0).is_err(), "closed queue must reject");
+    }
+
+    #[test]
+    fn remove_cancels_queued_entry() {
+        let q = JobQueue::new(4);
+        q.push(1, 0).unwrap();
+        q.push(2, 1).unwrap();
+        assert!(q.remove(2));
+        assert!(!q.remove(2));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some(1));
+    }
+}

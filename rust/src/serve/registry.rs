@@ -1,0 +1,383 @@
+//! In-memory job table: id → spec + state machine + per-epoch history,
+//! plus aggregate server statistics (jobs served, epochs/sec, per-phase
+//! time rolled up from each job's `telemetry::PhaseTimer`).
+
+use super::protocol::{JobSpec, JobState};
+use crate::coordinator::control::StopFlag;
+use crate::coordinator::metrics::EpochStats;
+use crate::telemetry::{PhaseTimer, ALL_PHASES};
+use crate::util::json::Value;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Everything the worker hands back when a job leaves the Running state.
+pub struct JobOutcome {
+    pub best_test_acc: f32,
+    pub timer: PhaseTimer,
+    /// True iff the run ended early via the job's stop flag.
+    pub stopped: bool,
+}
+
+/// What `cancel` did — drives the HTTP response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// The job was still queued and is now terminally Cancelled.
+    CancelledQueued,
+    /// The job is running; its stop flag fired and a worker will mark it
+    /// Cancelled at the next batch boundary.
+    StopRequested,
+    /// Already Done/Failed/Cancelled — nothing to do.
+    AlreadyTerminal(JobState),
+}
+
+pub struct JobRecord {
+    pub id: u64,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub stop: StopFlag,
+    pub worker: Option<usize>,
+    pub submitted_unix: f64,
+    pub started: Option<Instant>,
+    pub run_seconds: f64,
+    pub epochs: Vec<EpochStats>,
+    pub best_test_acc: f32,
+    pub error: Option<String>,
+}
+
+impl JobRecord {
+    /// Wall-clock training time: live while Running, frozen once terminal.
+    fn live_run_seconds(&self) -> f64 {
+        if self.state == JobState::Running {
+            self.started.map_or(0.0, |t| t.elapsed().as_secs_f64())
+        } else {
+            self.run_seconds
+        }
+    }
+
+    fn summary_json(&self) -> Value {
+        Value::obj(vec![
+            ("id", Value::num(self.id as f64)),
+            ("name", Value::str(self.spec.name.clone())),
+            ("state", Value::str(self.state.as_str())),
+            ("priority", Value::num(self.spec.priority as f64)),
+            ("model", Value::str(self.spec.config.model.clone())),
+            ("dataset", Value::str(self.spec.config.dataset.token())),
+            ("method", Value::str(self.spec.config.method.token())),
+            ("precision", Value::str(self.spec.config.precision.token())),
+            ("epochs_total", Value::num(self.spec.config.epochs as f64)),
+            ("epochs_done", Value::num(self.epochs.len() as f64)),
+            ("best_test_acc", Value::num(self.best_test_acc as f64)),
+            ("submitted_unix", Value::num(self.submitted_unix)),
+            ("run_seconds", Value::num(self.live_run_seconds())),
+        ])
+    }
+
+    fn detail_json(&self) -> Value {
+        let Value::Obj(mut obj) = self.summary_json() else { unreachable!() };
+        obj.insert("spec".into(), self.spec.to_json());
+        obj.insert(
+            "history".into(),
+            Value::Arr(self.epochs.iter().map(EpochStats::to_json).collect()),
+        );
+        if let Some(w) = self.worker {
+            obj.insert("worker".into(), Value::num(w as f64));
+        }
+        if let Some(e) = &self.error {
+            obj.insert("error".into(), Value::str(e.clone()));
+        }
+        Value::Obj(obj)
+    }
+}
+
+struct Inner {
+    jobs: BTreeMap<u64, JobRecord>,
+    next_id: u64,
+    total_epochs: u64,
+    timer: PhaseTimer,
+}
+
+/// Thread-shared job table; every method takes `&self`.
+pub struct JobRegistry {
+    started_at: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Default for JobRegistry {
+    fn default() -> Self {
+        JobRegistry::new()
+    }
+}
+
+impl JobRegistry {
+    pub fn new() -> JobRegistry {
+        JobRegistry {
+            started_at: Instant::now(),
+            inner: Mutex::new(Inner {
+                jobs: BTreeMap::new(),
+                next_id: 1,
+                total_epochs: 0,
+                timer: PhaseTimer::new(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Register a new job in the Queued state; returns its id.
+    pub fn add(&self, spec: JobSpec) -> u64 {
+        let mut st = self.lock();
+        let id = st.next_id;
+        st.next_id += 1;
+        let now = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        st.jobs.insert(
+            id,
+            JobRecord {
+                id,
+                spec,
+                state: JobState::Queued,
+                stop: StopFlag::new(),
+                worker: None,
+                submitted_unix: now,
+                started: None,
+                run_seconds: 0.0,
+                epochs: Vec::new(),
+                best_test_acc: 0.0,
+                error: None,
+            },
+        );
+        id
+    }
+
+    /// Roll back a submission whose queue push was rejected.
+    pub fn forget(&self, id: u64) {
+        self.lock().jobs.remove(&id);
+    }
+
+    /// Worker-side claim: Queued → Running. `None` if the job was
+    /// cancelled (or vanished) while waiting in the queue.
+    pub fn claim(&self, id: u64, worker: usize) -> Option<(JobSpec, StopFlag)> {
+        let mut st = self.lock();
+        let job = st.jobs.get_mut(&id)?;
+        if job.state != JobState::Queued {
+            return None;
+        }
+        job.state = JobState::Running;
+        job.worker = Some(worker);
+        job.started = Some(Instant::now());
+        Some((job.spec.clone(), job.stop.clone()))
+    }
+
+    /// Per-epoch progress from a running job.
+    pub fn record_epoch(&self, id: u64, stats: EpochStats) {
+        let mut st = self.lock();
+        st.total_epochs += 1;
+        if let Some(job) = st.jobs.get_mut(&id) {
+            job.best_test_acc = job.best_test_acc.max(stats.test_acc);
+            job.epochs.push(stats);
+        }
+    }
+
+    /// Running → Done (or Cancelled when the outcome says it stopped).
+    pub fn complete(&self, id: u64, outcome: JobOutcome) {
+        let mut st = self.lock();
+        st.timer.merge(&outcome.timer);
+        if let Some(job) = st.jobs.get_mut(&id) {
+            job.state = if outcome.stopped { JobState::Cancelled } else { JobState::Done };
+            job.best_test_acc = job.best_test_acc.max(outcome.best_test_acc);
+            job.run_seconds = job.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Running → Failed with an error message.
+    pub fn fail(&self, id: u64, msg: String) {
+        let mut st = self.lock();
+        if let Some(job) = st.jobs.get_mut(&id) {
+            job.state = JobState::Failed;
+            job.error = Some(msg);
+            job.run_seconds = job.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Cancel by id. Unknown ids return `None`.
+    pub fn cancel(&self, id: u64) -> Option<CancelOutcome> {
+        let mut st = self.lock();
+        let job = st.jobs.get_mut(&id)?;
+        Some(match job.state {
+            JobState::Queued => {
+                job.state = JobState::Cancelled;
+                CancelOutcome::CancelledQueued
+            }
+            JobState::Running => {
+                job.stop.request_stop();
+                CancelOutcome::StopRequested
+            }
+            terminal => CancelOutcome::AlreadyTerminal(terminal),
+        })
+    }
+
+    pub fn state_of(&self, id: u64) -> Option<JobState> {
+        self.lock().jobs.get(&id).map(|j| j.state)
+    }
+
+    /// Fire the stop flag of every Running job (server shutdown): the
+    /// workers notice at their next batch boundary and exit promptly
+    /// instead of holding the pool-join for the rest of the run.
+    pub fn stop_all_running(&self) {
+        let st = self.lock();
+        for job in st.jobs.values() {
+            if job.state == JobState::Running {
+                job.stop.request_stop();
+            }
+        }
+    }
+
+    /// Full detail JSON for one job (`GET /jobs/<id>`).
+    pub fn job_json(&self, id: u64) -> Option<Value> {
+        self.lock().jobs.get(&id).map(JobRecord::detail_json)
+    }
+
+    /// Summary list (`GET /jobs`), newest first.
+    pub fn jobs_json(&self) -> Value {
+        let st = self.lock();
+        Value::obj(vec![(
+            "jobs",
+            Value::Arr(st.jobs.values().rev().map(JobRecord::summary_json).collect()),
+        )])
+    }
+
+    /// Aggregate stats (`GET /stats`). `queue_depth` comes from the
+    /// queue, which the registry deliberately knows nothing about.
+    pub fn stats_json(&self, queue_depth: usize, workers: usize) -> Value {
+        let st = self.lock();
+        let mut counts = [0usize; 5];
+        for j in st.jobs.values() {
+            let i = match j.state {
+                JobState::Queued => 0,
+                JobState::Running => 1,
+                JobState::Done => 2,
+                JobState::Failed => 3,
+                JobState::Cancelled => 4,
+            };
+            counts[i] += 1;
+        }
+        let uptime = self.started_at.elapsed().as_secs_f64();
+        let phases = Value::Obj(
+            ALL_PHASES
+                .iter()
+                .filter(|&&p| st.timer.total(p).as_nanos() > 0)
+                .map(|&p| (p.name().to_string(), Value::num(st.timer.total(p).as_secs_f64())))
+                .collect(),
+        );
+        Value::obj(vec![
+            ("uptime_seconds", Value::num(uptime)),
+            ("workers", Value::num(workers as f64)),
+            ("queue_depth", Value::num(queue_depth as f64)),
+            ("jobs_total", Value::num(st.jobs.len() as f64)),
+            ("jobs_queued", Value::num(counts[0] as f64)),
+            ("jobs_running", Value::num(counts[1] as f64)),
+            ("jobs_done", Value::num(counts[2] as f64)),
+            ("jobs_failed", Value::num(counts[3] as f64)),
+            ("jobs_cancelled", Value::num(counts[4] as f64)),
+            ("epochs_total", Value::num(st.total_epochs as f64)),
+            ("epochs_per_sec", Value::num(st.total_epochs as f64 / uptime.max(1e-9))),
+            ("phase_seconds", phases),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::telemetry::Phase;
+    use std::time::Duration;
+
+    fn spec() -> JobSpec {
+        JobSpec::new(Config::default())
+    }
+
+    #[test]
+    fn lifecycle_queued_running_done() {
+        let r = JobRegistry::new();
+        let id = r.add(spec());
+        assert_eq!(r.state_of(id), Some(JobState::Queued));
+
+        let (s, _stop) = r.claim(id, 0).expect("claimable");
+        assert_eq!(s.config.epochs, Config::default().epochs);
+        assert_eq!(r.state_of(id), Some(JobState::Running));
+        // double-claim must fail
+        assert!(r.claim(id, 1).is_none());
+
+        r.record_epoch(id, EpochStats { epoch: 0, test_acc: 0.4, ..Default::default() });
+        let mut timer = PhaseTimer::new();
+        timer.add(Phase::Forward, Duration::from_millis(3));
+        r.complete(id, JobOutcome { best_test_acc: 0.4, timer, stopped: false });
+        assert_eq!(r.state_of(id), Some(JobState::Done));
+
+        let j = r.job_json(id).unwrap();
+        assert_eq!(j.get("state").as_str(), Some("done"));
+        assert_eq!(j.get("epochs_done").as_usize(), Some(1));
+        assert!(j.get("best_test_acc").as_f64().unwrap() > 0.39);
+    }
+
+    #[test]
+    fn cancel_queued_and_running() {
+        let r = JobRegistry::new();
+        let a = r.add(spec());
+        assert_eq!(r.cancel(a), Some(CancelOutcome::CancelledQueued));
+        assert_eq!(r.state_of(a), Some(JobState::Cancelled));
+        // a cancelled-while-queued job is no longer claimable
+        assert!(r.claim(a, 0).is_none());
+
+        let b = r.add(spec());
+        let (_, stop) = r.claim(b, 0).unwrap();
+        assert!(!stop.should_stop());
+        assert_eq!(r.cancel(b), Some(CancelOutcome::StopRequested));
+        assert!(stop.should_stop());
+        r.complete(b, JobOutcome { best_test_acc: 0.0, timer: PhaseTimer::new(), stopped: true });
+        assert_eq!(r.state_of(b), Some(JobState::Cancelled));
+        assert_eq!(
+            r.cancel(b),
+            Some(CancelOutcome::AlreadyTerminal(JobState::Cancelled))
+        );
+        assert_eq!(r.cancel(999), None);
+    }
+
+    #[test]
+    fn failure_records_error() {
+        let r = JobRegistry::new();
+        let id = r.add(spec());
+        r.claim(id, 2).unwrap();
+        r.fail(id, "engine exploded".into());
+        let j = r.job_json(id).unwrap();
+        assert_eq!(j.get("state").as_str(), Some("failed"));
+        assert_eq!(j.get("error").as_str(), Some("engine exploded"));
+        assert_eq!(j.get("worker").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let r = JobRegistry::new();
+        let a = r.add(spec());
+        let _b = r.add(spec());
+        r.claim(a, 0).unwrap();
+        r.record_epoch(a, EpochStats::default());
+        r.record_epoch(a, EpochStats::default());
+        let s = r.stats_json(1, 4);
+        assert_eq!(s.get("jobs_total").as_usize(), Some(2));
+        assert_eq!(s.get("jobs_running").as_usize(), Some(1));
+        assert_eq!(s.get("jobs_queued").as_usize(), Some(1));
+        assert_eq!(s.get("queue_depth").as_usize(), Some(1));
+        assert_eq!(s.get("workers").as_usize(), Some(4));
+        assert_eq!(s.get("epochs_total").as_usize(), Some(2));
+        // valid JSON end to end
+        let text = crate::util::json::to_string(&s);
+        crate::util::json::parse(&text).unwrap();
+    }
+}

@@ -1,0 +1,217 @@
+//! The worker pool: N OS threads popping jobs off the queue and driving
+//! the exact same training paths as `repro train` — FP32 via
+//! `trainer::train` over either engine, INT8/INT8* via
+//! `int8_trainer::train_int8` — with the job's stop flag and a
+//! registry-backed progress sink threaded into the config.
+
+use super::queue::JobQueue;
+use super::registry::{JobOutcome, JobRegistry};
+use crate::config::Precision;
+use crate::coordinator::control::{ProgressSink, StopFlag};
+use crate::coordinator::int8_trainer::{self, Int8TrainConfig};
+use crate::coordinator::{checkpoint, trainer, ParamSet, TrainConfig};
+use crate::data;
+use crate::exp;
+use crate::int8::lenet8;
+use anyhow::Result;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+pub struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers over a shared queue + registry. Workers exit
+    /// when the queue is closed.
+    pub fn spawn(n: usize, queue: Arc<JobQueue>, registry: Arc<JobRegistry>) -> WorkerPool {
+        let handles = (0..n.max(1))
+            .map(|i| {
+                let q = queue.clone();
+                let r = registry.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(i, &q, &r))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Wait for every worker to exit (call after closing the queue).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(idx: usize, queue: &JobQueue, registry: &Arc<JobRegistry>) {
+    while let Some(id) = queue.pop() {
+        // Claim may fail: the job was cancelled while queued.
+        let Some((spec, stop)) = registry.claim(id, idx) else { continue };
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            run_job(id, &spec.config, stop, registry)
+        }));
+        match outcome {
+            Ok(Ok(done)) => registry.complete(id, done),
+            Ok(Err(e)) => registry.fail(id, format!("{e:#}")),
+            Err(_) => registry.fail(id, "worker panicked during training".to_string()),
+        }
+    }
+}
+
+/// Run one job to completion (or cancellation). Mirrors `cmd_train` in
+/// `main.rs`, with the stop flag + progress sink armed.
+fn run_job(
+    id: u64,
+    cfg: &crate::config::Config,
+    stop: StopFlag,
+    registry: &Arc<JobRegistry>,
+) -> Result<JobOutcome> {
+    let (train_d, test_d) =
+        data::generate(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed, cfg.npoints);
+    let reg = registry.clone();
+    let progress = ProgressSink::new(move |e| reg.record_epoch(id, e.clone()));
+
+    match cfg.precision {
+        Precision::Fp32 => {
+            let model = cfg.model_enum();
+            let mut engine =
+                exp::build_engine_at(model, cfg.batch, cfg.engine, cfg.artifacts_dir.as_deref());
+            let mut params = ParamSet::init(model, cfg.seed ^ 0xC0FFEE);
+            if let Some(path) = &cfg.load_checkpoint {
+                checkpoint::load_params(path, &mut params)?;
+            }
+            let tcfg = TrainConfig {
+                method: cfg.method,
+                epochs: cfg.epochs,
+                batch: cfg.batch,
+                lr0: cfg.lr,
+                eps: cfg.eps,
+                g_clip: cfg.g_clip,
+                seed: cfg.seed,
+                eval_every: 1,
+                verbose: cfg.verbose,
+                stop,
+                progress,
+            };
+            let r = trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &tcfg)?;
+            if let (Some(path), false) = (&cfg.save_checkpoint, r.stopped) {
+                checkpoint::save_params(path, &params)?;
+            }
+            Ok(JobOutcome {
+                best_test_acc: r.history.best_test_acc(),
+                timer: r.timer,
+                stopped: r.stopped,
+            })
+        }
+        Precision::Int8 | Precision::Int8Star => {
+            let mut ws = lenet8::init_params(cfg.seed ^ 0xC0FFEE, cfg.r_max.max(16));
+            if let Some(path) = &cfg.load_checkpoint {
+                ws = checkpoint::load_int8(path)?;
+            }
+            let icfg = Int8TrainConfig {
+                method: cfg.method,
+                grad_mode: cfg.precision.grad_mode(),
+                epochs: cfg.epochs,
+                batch: cfg.batch,
+                r_max: cfg.r_max,
+                b_zo: cfg.b_zo,
+                seed: cfg.seed,
+                eval_every: 1,
+                verbose: cfg.verbose,
+                stop,
+                progress,
+            };
+            let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &icfg)?;
+            if let (Some(path), false) = (&cfg.save_checkpoint, r.stopped) {
+                let names: Vec<&str> = lenet8::PARAM_SPECS.iter().map(|(n, _)| *n).collect();
+                checkpoint::save_int8(path, &names, &ws)?;
+            }
+            Ok(JobOutcome {
+                best_test_acc: r.history.best_test_acc(),
+                timer: r.timer,
+                stopped: r.stopped,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::serve::protocol::{JobSpec, JobState};
+    use std::time::{Duration, Instant};
+
+    fn tiny_spec(precision: &str) -> JobSpec {
+        let mut cfg = Config::default();
+        cfg.set("engine", "native").unwrap();
+        cfg.set("precision", precision).unwrap();
+        cfg.set("epochs", "1").unwrap();
+        cfg.set("batch", "16").unwrap();
+        cfg.set("train_n", "48").unwrap();
+        cfg.set("test_n", "32").unwrap();
+        cfg.validate().unwrap();
+        JobSpec::new(cfg)
+    }
+
+    fn wait_terminal(reg: &JobRegistry, id: u64) -> JobState {
+        let t0 = Instant::now();
+        loop {
+            let s = reg.state_of(id).unwrap();
+            if s.is_terminal() {
+                return s;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(120), "job {id} stuck in {s:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    #[test]
+    fn pool_runs_fp32_and_int8_jobs_to_done() {
+        let queue = Arc::new(JobQueue::new(8));
+        let registry = Arc::new(JobRegistry::new());
+        let pool = WorkerPool::spawn(2, queue.clone(), registry.clone());
+        assert_eq!(pool.len(), 2);
+
+        let a = registry.add(tiny_spec("fp32"));
+        let b = registry.add(tiny_spec("int8"));
+        queue.push(a, 0).unwrap();
+        queue.push(b, 0).unwrap();
+
+        assert_eq!(wait_terminal(&registry, a), JobState::Done);
+        assert_eq!(wait_terminal(&registry, b), JobState::Done);
+        let ja = registry.job_json(a).unwrap();
+        assert_eq!(ja.get("epochs_done").as_usize(), Some(1));
+
+        queue.close();
+        pool.join();
+    }
+
+    #[test]
+    fn cancelled_while_queued_is_skipped() {
+        let queue = Arc::new(JobQueue::new(8));
+        let registry = Arc::new(JobRegistry::new());
+        let id = registry.add(tiny_spec("fp32"));
+        registry.cancel(id).unwrap();
+        queue.push(id, 0).unwrap(); // worker pops it, claim fails, skips
+
+        let pool = WorkerPool::spawn(1, queue.clone(), registry.clone());
+        // the job must stay Cancelled, never flip to Running/Done
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(registry.state_of(id), Some(JobState::Cancelled));
+        queue.close();
+        pool.join();
+    }
+}

@@ -11,18 +11,24 @@ pub enum Phase {
     Loss,
     ZoPerturb,
     ZoUpdate,
+    /// Tail-BP of the last `k` FC layers (ElasticZO methods).
     BpBackward,
+    /// A fused Full-BP forward+backward+SGD step (`Engine::full_step`);
+    /// distinct from [`Phase::Forward`] so Fig.-7-style breakdowns don't
+    /// conflate whole BP steps with plain forward passes.
+    BpStep,
     Eval,
     Other,
 }
 
-pub const ALL_PHASES: [Phase; 8] = [
+pub const ALL_PHASES: [Phase; 9] = [
     Phase::Data,
     Phase::Forward,
     Phase::Loss,
     Phase::ZoPerturb,
     Phase::ZoUpdate,
     Phase::BpBackward,
+    Phase::BpStep,
     Phase::Eval,
     Phase::Other,
 ];
@@ -36,6 +42,7 @@ impl Phase {
             Phase::ZoPerturb => "ZO Perturb",
             Phase::ZoUpdate => "ZO Update",
             Phase::BpBackward => "BP Backward",
+            Phase::BpStep => "BP Step",
             Phase::Eval => "Eval",
             Phase::Other => "Other",
         }
@@ -49,8 +56,8 @@ impl Phase {
 /// Accumulates time per phase across a run.
 #[derive(Debug, Clone, Default)]
 pub struct PhaseTimer {
-    totals: [Duration; 8],
-    counts: [u64; 8],
+    totals: [Duration; 9],
+    counts: [u64; 9],
 }
 
 impl PhaseTimer {
@@ -90,7 +97,7 @@ impl PhaseTimer {
     }
 
     pub fn merge(&mut self, other: &PhaseTimer) {
-        for i in 0..8 {
+        for i in 0..ALL_PHASES.len() {
             self.totals[i] += other.totals[i];
             self.counts[i] += other.counts[i];
         }
@@ -150,6 +157,16 @@ mod tests {
         b.add(Phase::Forward, Duration::from_millis(20));
         a.merge(&b);
         assert_eq!(a.total(Phase::Forward), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn bp_step_is_a_distinct_phase() {
+        let mut t = PhaseTimer::new();
+        t.add(Phase::BpStep, Duration::from_millis(10));
+        assert_eq!(t.total(Phase::Forward), Duration::ZERO);
+        assert_eq!(t.total(Phase::BpBackward), Duration::ZERO);
+        assert_eq!(t.total(Phase::BpStep), Duration::from_millis(10));
+        assert!(t.report("x").contains("BP Step"));
     }
 
     #[test]

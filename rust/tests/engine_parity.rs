@@ -3,6 +3,9 @@
 //! activations, tail gradients and full-BP steps — for both models.
 //! This is the cross-check that pins the three-layer stack to the
 //! reference implementation. Skipped when artifacts/ is absent.
+//! Compiled only with the `xla` cargo feature (needs the PJRT runtime).
+
+#![cfg(feature = "xla")]
 
 use elasticzo::coordinator::native_engine::NativeEngine;
 use elasticzo::coordinator::xla_engine::XlaEngine;

@@ -3,7 +3,7 @@
 //! mismatches, invalid configs.
 
 use elasticzo::config::Config;
-use elasticzo::runtime::{ArtifactSpec, Dtype, IoSpec, LoadedArtifact, Manifest};
+use elasticzo::runtime::Manifest;
 use elasticzo::util::cli::Args;
 use std::path::PathBuf;
 
@@ -31,8 +31,10 @@ fn malformed_manifest_rejected() {
     std::fs::remove_dir_all(d).ok();
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn corrupt_hlo_text_rejected() {
+    use elasticzo::runtime::{ArtifactSpec, LoadedArtifact};
     let client = match xla_client() {
         Some(c) => c,
         None => return,
@@ -51,10 +53,12 @@ fn corrupt_hlo_text_rejected() {
     std::fs::remove_dir_all(d).ok();
 }
 
+#[cfg(feature = "xla")]
 fn xla_client() -> Option<xla::PjRtClient> {
     xla::PjRtClient::cpu().ok()
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn abi_mismatch_rejected_before_execution() {
     // wrong arg count / wrong shape / wrong dtype must be caught by the

@@ -1,6 +1,9 @@
 //! Runtime smoke tests: load real artifacts, execute, and cross-check
 //! against the native rust engine. Skipped when artifacts/ is absent
 //! (run `make artifacts` first).
+//! Compiled only with the `xla` cargo feature (needs the PJRT runtime).
+
+#![cfg(feature = "xla")]
 
 use elasticzo::int8::lenet8;
 use elasticzo::nn::lenet;

@@ -1,0 +1,195 @@
+//! End-to-end test of the `serve` subsystem: boot a real server on an
+//! ephemeral port, drive it purely over the HTTP/JSON protocol — submit
+//! FP32 + INT8 jobs against the synthetic datasets, poll them to Done,
+//! cancel one mid-run, and exercise queue-full backpressure.
+
+use elasticzo::serve::{request, ServeOptions, Server};
+use elasticzo::util::json::Value;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+fn start_server(workers: usize, queue_cap: usize) -> (String, JoinHandle<()>) {
+    let server = Server::bind(&ServeOptions { port: 0, workers, queue_cap }).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || server.run().unwrap());
+    (addr, h)
+}
+
+fn shutdown(addr: &str, handle: JoinHandle<()>) {
+    let (status, _) = request(addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap();
+}
+
+fn submit(addr: &str, spec: &str) -> u64 {
+    let body = elasticzo::util::json::parse(spec).unwrap();
+    let (status, v) = request(addr, "POST", "/jobs", Some(&body)).unwrap();
+    assert_eq!(status, 200, "submit failed: {}", elasticzo::util::json::to_string(&v));
+    v.get("id").as_f64().unwrap() as u64
+}
+
+fn get_job(addr: &str, id: u64) -> Value {
+    let (status, v) = request(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(status, 200);
+    v
+}
+
+fn state_of(v: &Value) -> String {
+    v.get("state").as_str().unwrap_or("?").to_string()
+}
+
+fn poll_until(
+    addr: &str,
+    id: u64,
+    pred: impl Fn(&Value) -> bool,
+    what: &str,
+    timeout: Duration,
+) -> Value {
+    let t0 = Instant::now();
+    loop {
+        let v = get_job(addr, id);
+        if pred(&v) {
+            return v;
+        }
+        assert!(
+            t0.elapsed() < timeout,
+            "timed out waiting for {what} on job {id}; last state: {}",
+            elasticzo::util::json::to_string(&v)
+        );
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+fn poll_terminal(addr: &str, id: u64, timeout: Duration) -> Value {
+    poll_until(
+        addr,
+        id,
+        |v| matches!(state_of(v).as_str(), "done" | "failed" | "cancelled"),
+        "a terminal state",
+        timeout,
+    )
+}
+
+const LONG: Duration = Duration::from_secs(300);
+
+#[test]
+fn concurrent_fp32_and_int8_jobs_reach_done() {
+    let (addr, h) = start_server(2, 8);
+
+    // health + empty listing first
+    let (status, v) = request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    let (_, v) = request(&addr, "GET", "/jobs", None).unwrap();
+    assert_eq!(v.get("jobs").as_arr().unwrap().len(), 0);
+
+    // one FP32 cls1 job + one INT8 job, running concurrently on 2 workers
+    let fp32 = submit(
+        &addr,
+        r#"{"name": "fp32-cls1", "model": "lenet", "dataset": "mnist",
+            "method": "cls1", "precision": "fp32", "engine": "native",
+            "epochs": 2, "batch": 16, "train_n": 192, "test_n": 96, "seed": 7}"#,
+    );
+    let int8 = submit(
+        &addr,
+        r#"{"name": "int8-cls1", "dataset": "mnist", "method": "cls1",
+            "precision": "int8", "epochs": 2, "batch": 16,
+            "train_n": 192, "test_n": 96, "seed": 8}"#,
+    );
+    assert_ne!(fp32, int8);
+
+    let vf = poll_terminal(&addr, fp32, LONG);
+    let vi = poll_terminal(&addr, int8, LONG);
+    assert_eq!(state_of(&vf), "done", "{}", elasticzo::util::json::to_string(&vf));
+    assert_eq!(state_of(&vi), "done", "{}", elasticzo::util::json::to_string(&vi));
+    for (v, label) in [(&vf, "fp32"), (&vi, "int8")] {
+        assert!(
+            v.get("best_test_acc").as_f64().unwrap() > 0.0,
+            "{label} job must reach nonzero accuracy"
+        );
+        assert_eq!(v.get("history").as_arr().unwrap().len(), 2, "{label} history");
+    }
+
+    // aggregate stats reflect the runs
+    let (_, s) = request(&addr, "GET", "/stats", None).unwrap();
+    assert_eq!(s.get("jobs_done").as_usize(), Some(2));
+    assert_eq!(s.get("epochs_total").as_usize(), Some(4));
+    assert!(s.get("epochs_per_sec").as_f64().unwrap() > 0.0);
+
+    shutdown(&addr, h);
+}
+
+#[test]
+fn cancellation_stops_a_running_job() {
+    let (addr, h) = start_server(1, 8);
+    // far more epochs than can finish; cancelled as soon as it reports
+    // its first epoch
+    let id = submit(
+        &addr,
+        r#"{"method": "full-zo", "precision": "fp32", "engine": "native",
+            "epochs": 10000, "batch": 16, "train_n": 64, "test_n": 32}"#,
+    );
+    poll_until(
+        &addr,
+        id,
+        |v| v.get("epochs_done").as_usize().unwrap_or(0) >= 1,
+        "first epoch",
+        LONG,
+    );
+    let (status, v) = request(&addr, "POST", &format!("/jobs/{id}/cancel"), None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v.get("action").as_str(), Some("stop-requested"));
+
+    let v = poll_terminal(&addr, id, LONG);
+    assert_eq!(state_of(&v), "cancelled");
+    let epochs_done = v.get("epochs_done").as_usize().unwrap();
+    assert!(epochs_done < 10000, "must stop early, ran {epochs_done} epochs");
+
+    // cancelling again reports already-terminal; unknown ids 404
+    let (_, v) = request(&addr, "POST", &format!("/jobs/{id}/cancel"), None).unwrap();
+    assert_eq!(v.get("action").as_str(), Some("already-terminal"));
+    let (status, _) = request(&addr, "POST", "/jobs/99999/cancel", None).unwrap();
+    assert_eq!(status, 404);
+
+    shutdown(&addr, h);
+}
+
+#[test]
+fn queue_full_returns_structured_429() {
+    // 1 worker, queue capacity 1: one running + one queued fills the
+    // server; the third submission must be rejected with backpressure.
+    let (addr, h) = start_server(1, 1);
+    let long_job = r#"{"method": "full-zo", "precision": "fp32", "engine": "native",
+                       "epochs": 10000, "batch": 16, "train_n": 64, "test_n": 32}"#;
+
+    let a = submit(&addr, long_job);
+    // wait until the worker picked job A up, so B deterministically
+    // occupies the single queue slot
+    poll_until(&addr, a, |v| state_of(v) == "running", "job A running", LONG);
+    let b = submit(&addr, long_job);
+
+    let body = elasticzo::util::json::parse(long_job).unwrap();
+    let (status, v) = request(&addr, "POST", "/jobs", Some(&body)).unwrap();
+    assert_eq!(status, 429, "expected backpressure, got {status}");
+    assert_eq!(v.get("error").as_str(), Some("queue full"));
+    assert_eq!(v.get("capacity").as_usize(), Some(1));
+
+    // the rejected job never shows up in the listing
+    let (_, listing) = request(&addr, "GET", "/jobs", None).unwrap();
+    assert_eq!(listing.get("jobs").as_arr().unwrap().len(), 2);
+
+    // malformed and invalid submissions are 400s with structured errors
+    let bad = elasticzo::util::json::parse(r#"{"model": "resnet"}"#).unwrap();
+    let (status, v) = request(&addr, "POST", "/jobs", Some(&bad)).unwrap();
+    assert_eq!(status, 400);
+    assert!(v.get("error").as_str().unwrap().contains("invalid job spec"));
+
+    // unblock the workers so shutdown joins quickly
+    for id in [a, b] {
+        let (status, _) =
+            request(&addr, "POST", &format!("/jobs/{id}/cancel"), None).unwrap();
+        assert_eq!(status, 200);
+    }
+    poll_terminal(&addr, a, LONG);
+    shutdown(&addr, h);
+}
