@@ -128,7 +128,8 @@ def build_lenet(b: Builder, batch: int):
         f"lenet_step_b{batch}",
         lambda *a: model.lenet_step(a[:10], a[10], a[11], a[12]),
         params + [x, y, ("lr", spec(()))],
-        [(f"new_{n}", s) for n, s in params] + [("loss", spec(()))],
+        [(f"new_{n}", s) for n, s in params]
+        + [("loss", spec(())), ("logits", spec((batch, 10)))],
         {"model": "lenet", "kind": "step", "batch": batch},
     )
 
@@ -185,7 +186,8 @@ def build_pointnet(b: Builder, batch: int, npoints: int, ncls: int):
         f"pointnet_step_n{npoints}_b{batch}",
         lambda *a: model.pointnet_step(a[:np_], a[np_], a[np_ + 1], a[np_ + 2]),
         params + [x, y, ("lr", spec(()))],
-        [(f"new_{n}", s) for n, s in params] + [("loss", spec(()))],
+        [(f"new_{n}", s) for n, s in params]
+        + [("loss", spec(())), ("logits", spec((batch, ncls)))],
         {"model": "pointnet", "kind": "step", "batch": batch,
          "npoints": npoints, "ncls": ncls},
     )

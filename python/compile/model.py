@@ -144,15 +144,21 @@ def fc_tail2_grads(a1, w4, b4, w5, b5, y):
 
 def lenet_loss_ref(params, x, y):
     """Reference forward+loss for jax.grad (full-BP step)."""
-    loss, _, _, _ = lenet_fwd(params, x, y, use_pallas=False)
-    return loss
+    loss, logits, _, _ = lenet_fwd(params, x, y, use_pallas=False)
+    return loss, logits
 
 
 def lenet_step(params, x, y, lr):
-    """Full-BP SGD step: returns (new_params..., loss)."""
-    loss, grads = jax.value_and_grad(lenet_loss_ref)(list(params), x, y)
+    """Full-BP SGD step: returns (new_params..., loss, logits).
+
+    The pre-step logits ride along so the rust coordinator can report
+    train accuracy on the Full-BP path without an extra forward.
+    """
+    (loss, logits), grads = jax.value_and_grad(lenet_loss_ref, has_aux=True)(
+        list(params), x, y
+    )
     new = [p - lr * g for p, g in zip(params, grads)]
-    return tuple(new) + (loss,)
+    return tuple(new) + (loss, logits)
 
 
 # ---------------------------------------------------------------------------
@@ -192,12 +198,17 @@ def pointnet_fwd(params, x, y, use_pallas: bool = True):
 
 
 def pointnet_loss_ref(params, x, y):
-    loss, _, _, _ = pointnet_fwd(params, x, y, use_pallas=False)
-    return loss
+    loss, logits, _, _ = pointnet_fwd(params, x, y, use_pallas=False)
+    return loss, logits
 
 
 def pointnet_step(params, x, y, lr):
-    """Full-BP SGD step over all PointNet parameters."""
-    loss, grads = jax.value_and_grad(pointnet_loss_ref)(list(params), x, y)
+    """Full-BP SGD step over all PointNet parameters.
+
+    Returns (new_params..., loss, logits) — see `lenet_step`.
+    """
+    (loss, logits), grads = jax.value_and_grad(pointnet_loss_ref, has_aux=True)(
+        list(params), x, y
+    )
     new = [p - lr * g for p, g in zip(params, grads)]
-    return tuple(new) + (loss,)
+    return tuple(new) + (loss, logits)

@@ -177,7 +177,7 @@ def test_lenet_step_decreases_loss():
     params = lenet_init()
     x, y = batch_lenet(bsz=16)
     out = model.lenet_step(params, x, y, jnp.float32(0.05))
-    new_params, loss0 = list(out[:-1]), out[-1]
+    new_params, loss0 = list(out[:-2]), out[-2]
     loss1, _, _, _ = model.lenet_fwd(new_params, x, y, use_pallas=False)
     assert float(loss1) < float(loss0)
 
@@ -186,7 +186,7 @@ def test_pointnet_step_decreases_loss():
     params = pointnet_init()
     x, y = batch_pointnet(bsz=8, n=32)
     out = model.pointnet_step(params, x, y, jnp.float32(0.05))
-    new_params, loss0 = list(out[:-1]), out[-1]
+    new_params, loss0 = list(out[:-2]), out[-2]
     loss1, _, _, _ = model.pointnet_fwd(new_params, x, y, use_pallas=False)
     assert float(loss1) < float(loss0)
 
@@ -195,6 +195,16 @@ def test_lenet_step_preserves_shapes():
     params = lenet_init()
     x, y = batch_lenet(bsz=8)
     out = model.lenet_step(params, x, y, jnp.float32(0.01))
-    assert len(out) == 11
-    for p, (name, shape) in zip(out[:-1], model.LENET_PARAMS):
+    # 10 updated params + loss + the pre-step logits
+    assert len(out) == 12
+    for p, (name, shape) in zip(out[:-2], model.LENET_PARAMS):
         assert p.shape == shape, name
+    assert out[-1].shape == (8, 10)
+
+
+def test_lenet_step_logits_match_prestep_forward():
+    params = lenet_init()
+    x, y = batch_lenet(bsz=8)
+    out = model.lenet_step(params, x, y, jnp.float32(0.01))
+    _, logits, _, _ = model.lenet_fwd(params, x, y, use_pallas=False)
+    assert jnp.allclose(out[-1], logits, atol=1e-5)

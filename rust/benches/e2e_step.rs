@@ -3,13 +3,14 @@
 //! on both engines, FP32 and INT8. These are the rows behind the
 //! Fig. 7 epoch-time claims and the §Perf L3 numbers.
 
-use elasticzo::coordinator::int8_trainer::{Int8TrainConfig, ZoGradMode};
 use elasticzo::coordinator::native_engine::NativeEngine;
-use elasticzo::coordinator::trainer::{zo_step, TrainConfig};
+use elasticzo::coordinator::trainer::zo_step;
+use elasticzo::coordinator::TrainSpec;
 #[cfg(feature = "xla")]
 use elasticzo::coordinator::xla_engine::XlaEngine;
 use elasticzo::coordinator::{Engine, Method, Model, ParamSet};
 use elasticzo::data;
+use elasticzo::data::loader::Batch;
 use elasticzo::int8::lenet8;
 use elasticzo::telemetry::PhaseTimer;
 use elasticzo::util::bench::Bencher;
@@ -21,8 +22,9 @@ fn main() {
     for (i, &l) in d.labels.iter().enumerate() {
         y[i * 10 + l as usize] = 1.0;
     }
+    let batch = Batch { x: d.x.clone(), y_onehot: y.clone(), labels: d.labels.clone(), bsz: 32 };
 
-    let cfg_for = |method: Method| TrainConfig {
+    let spec_for = |method: Method| TrainSpec {
         method,
         epochs: 1,
         batch: 32,
@@ -37,19 +39,15 @@ fn main() {
 
     // FP32 steps on both engines
     for method in [Method::FullZo, Method::Cls1, Method::Cls2] {
-        let cfg = cfg_for(method);
+        let spec = spec_for(method);
 
         let mut native = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 3);
         let mut timer = PhaseTimer::new();
         let mut step = 0u64;
-        b.bench(&format!("step_{}/native", cfg.method.label().replace(' ', "_")), || {
+        b.bench(&format!("step_{}/native", spec.method.label().replace(' ', "_")), || {
             step += 1;
-            zo_step(
-                &mut native, &mut params, &d.x, &y, &d.labels, 32, step, 1e-3, &cfg,
-                &mut timer,
-            )
-            .unwrap()
+            zo_step(&mut native, &mut params, &batch, step, 1e-3, &spec, &mut timer).unwrap()
         });
 
         #[cfg(feature = "xla")]
@@ -57,13 +55,9 @@ fn main() {
             let mut params = ParamSet::init(Model::LeNet, 3);
             let mut timer = PhaseTimer::new();
             let mut step = 0u64;
-            b.bench(&format!("step_{}/xla", cfg.method.label().replace(' ', "_")), || {
+            b.bench(&format!("step_{}/xla", spec.method.label().replace(' ', "_")), || {
                 step += 1;
-                zo_step(
-                    &mut xla, &mut params, &d.x, &y, &d.labels, 32, step, 1e-3, &cfg,
-                    &mut timer,
-                )
-                .unwrap()
+                zo_step(&mut xla, &mut params, &batch, step, 1e-3, &spec, &mut timer).unwrap()
             });
         }
     }
@@ -72,39 +66,35 @@ fn main() {
     let mut native = NativeEngine::new(Model::LeNet);
     let mut params = ParamSet::init(Model::LeNet, 4);
     b.bench("step_Full_BP/native", || {
-        native.full_step(&mut params, &d.x, &y, 32, 0.01).unwrap()
+        native.full_step(&mut params, &d.x, &y, 32, 0.01).unwrap().loss
     });
     #[cfg(feature = "xla")]
     if let Ok(mut xla) = XlaEngine::open_default(Model::LeNet, 32) {
         let mut params = ParamSet::init(Model::LeNet, 4);
         b.bench("step_Full_BP/xla", || {
-            xla.full_step(&mut params, &d.x, &y, 32, 0.01).unwrap()
+            xla.full_step(&mut params, &d.x, &y, 32, 0.01).unwrap().loss
         });
     }
 
-    // INT8 step (one minibatch of the int8 trainer loop, Cls1)
+    // INT8 step (one minibatch of the int8 session step, Cls1)
     let mut ws = lenet8::init_params(5, 32);
     let xq = lenet8::quantize_input(&d.x, 32);
-    let icfg = Int8TrainConfig {
-        method: Method::Cls1,
-        grad_mode: ZoGradMode::IntCE,
-        ..Default::default()
-    };
+    let (seed, r_max) = (1u64, 15i8);
     let mut step = 0u64;
     b.bench("step_Cls1/int8_native", || {
         use elasticzo::coordinator::int8_trainer::{perturb_int8, zo_update_int8};
         use elasticzo::int8::intce;
         step += 1;
-        perturb_int8(&mut ws, 4, icfg.seed, step, 1, icfg.r_max, 0.5);
+        perturb_int8(&mut ws, 4, seed, step, 1, r_max, 0.5);
         let fp = lenet8::forward(&ws, &xq, 32);
-        perturb_int8(&mut ws, 4, icfg.seed, step, -2, icfg.r_max, 0.5);
+        perturb_int8(&mut ws, 4, seed, step, -2, r_max, 0.5);
         let fm = lenet8::forward(&ws, &xq, 32);
         let g = intce::loss_diff_sign_int(
             &fp.logits.data, fp.logits.exp, &fm.logits.data, fm.logits.exp,
             &d.labels, 32, 10,
         );
-        perturb_int8(&mut ws, 4, icfg.seed, step, 1, icfg.r_max, 0.5);
-        zo_update_int8(&mut ws, 4, icfg.seed, step, g, 1, icfg.r_max, 0.5);
+        perturb_int8(&mut ws, 4, seed, step, 1, r_max, 0.5);
+        zo_update_int8(&mut ws, 4, seed, step, g, 1, r_max, 0.5);
         lenet8::tail_update(&mut ws, &fm, &d.labels, 1, 32, 5);
         g
     });

@@ -3,7 +3,7 @@
 //!
 //! Precedence: defaults < `--config file.json` < individual CLI flags.
 
-use crate::coordinator::{EngineKind, Method, ZoGradMode};
+use crate::coordinator::{EngineKind, Method, PrecisionSpec, TrainSpec, ZoGradMode};
 use crate::data::DatasetKind;
 use crate::util::cli::Args;
 use crate::util::json::{self, Value};
@@ -69,6 +69,8 @@ pub struct Config {
     pub r_max: i8,
     pub b_zo: u32,
     pub seed: u64,
+    /// Evaluate every N epochs (the last epoch always evaluates).
+    pub eval_every: usize,
     pub train_n: usize,
     pub test_n: usize,
     pub npoints: usize,
@@ -95,6 +97,7 @@ impl Default for Config {
             r_max: 15,
             b_zo: 1,
             seed: 1,
+            eval_every: 1,
             train_n: 2048,
             test_n: 512,
             npoints: 128,
@@ -133,6 +136,9 @@ impl Config {
             "r-max" | "r_max" => self.r_max = val.parse().context("r_max")?,
             "b-zo" | "b_zo" => self.b_zo = val.parse().context("b_zo")?,
             "seed" => self.seed = val.parse().context("seed")?,
+            "eval-every" | "eval_every" => {
+                self.eval_every = val.parse().context("eval_every")?
+            }
             "train-n" | "train_n" => self.train_n = val.parse().context("train_n")?,
             "test-n" | "test_n" => self.test_n = val.parse().context("test_n")?,
             "npoints" => self.npoints = val.parse().context("npoints")?,
@@ -189,7 +195,37 @@ impl Config {
         if !(1..=7).contains(&self.b_zo) {
             anyhow::bail!("b_zo must be in 1..=7");
         }
+        if self.eval_every == 0 {
+            anyhow::bail!("eval_every must be >= 1");
+        }
         Ok(())
+    }
+
+    /// The unified training-run description (precision-agnostic session
+    /// API): everything `coordinator::session::run` needs, with the
+    /// stop flag / progress sink left at their no-op defaults for the
+    /// caller to arm.
+    pub fn train_spec(&self) -> TrainSpec {
+        TrainSpec {
+            method: self.method,
+            precision: match self.precision {
+                Precision::Fp32 => PrecisionSpec::Fp32,
+                p => PrecisionSpec::Int8 {
+                    grad_mode: p.grad_mode(),
+                    r_max: self.r_max,
+                    b_zo: self.b_zo,
+                },
+            },
+            epochs: self.epochs,
+            batch: self.batch,
+            lr0: self.lr,
+            eps: self.eps,
+            g_clip: self.g_clip,
+            seed: self.seed,
+            eval_every: self.eval_every,
+            verbose: self.verbose,
+            ..TrainSpec::default()
+        }
     }
 
     pub fn model_enum(&self) -> crate::coordinator::Model {
@@ -282,5 +318,31 @@ mod tests {
         for p in [Precision::Fp32, Precision::Int8, Precision::Int8Star] {
             assert_eq!(Precision::parse(p.token()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn train_spec_carries_precision_and_knobs() {
+        let mut cfg = Config::default();
+        cfg.set("precision", "int8*").unwrap();
+        cfg.set("r_max", "31").unwrap();
+        cfg.set("eval_every", "3").unwrap();
+        cfg.validate().unwrap();
+        let spec = cfg.train_spec();
+        assert_eq!(
+            spec.precision,
+            PrecisionSpec::Int8 { grad_mode: ZoGradMode::IntCE, r_max: 31, b_zo: 1 }
+        );
+        assert_eq!(spec.eval_every, 3);
+        assert_eq!(spec.label(), "ZO-Feat-Cls1 INT8*");
+
+        cfg.set("precision", "fp32").unwrap();
+        assert_eq!(cfg.train_spec().precision, PrecisionSpec::Fp32);
+    }
+
+    #[test]
+    fn eval_every_zero_rejected() {
+        let mut cfg = Config::default();
+        cfg.set("eval_every", "0").unwrap();
+        assert!(cfg.validate().is_err());
     }
 }

@@ -5,6 +5,18 @@ use super::params::ParamSet;
 use crate::nn::{Forward, TailGrads};
 use anyhow::Result;
 
+/// Outcome of a fused full-BP step ([`Engine::full_step`]).
+#[derive(Debug, Clone)]
+pub struct StepOut {
+    /// Pre-step minibatch loss.
+    pub loss: f32,
+    /// Pre-step logits (`bsz * nclass`, row-major) when the backend
+    /// exposes them. The native engine always does; XLA AOT artifact
+    /// sets compiled before the logits output was added return `None`
+    /// (train accuracy then stays unreported for Full BP, never wrong).
+    pub logits: Option<Vec<f32>>,
+}
+
 /// FP32 execution engine.
 pub trait Engine {
     /// Forward + loss; also returns the partition activations.
@@ -21,7 +33,8 @@ pub trait Engine {
         bsz: usize,
     ) -> Result<TailGrads>;
 
-    /// One full-BP SGD step, in place. Returns the pre-step loss.
+    /// One full-BP SGD step, in place. Returns the pre-step loss and
+    /// (when available) the pre-step logits.
     fn full_step(
         &mut self,
         params: &mut ParamSet,
@@ -29,7 +42,7 @@ pub trait Engine {
         y: &[f32],
         bsz: usize,
         lr: f32,
-    ) -> Result<f32>;
+    ) -> Result<StepOut>;
 
     /// Human-readable engine name (for logs/EXPERIMENTS.md).
     fn name(&self) -> &'static str;
@@ -60,6 +73,18 @@ impl EngineKind {
     }
 }
 
+/// How deep backprop reaches for a method — the ZO/BP partition, made
+/// unambiguous (no `usize::MAX` sentinel for "everything").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BpDepth {
+    /// BP trains only the last `k` FC layers (`k = 0` ⇒ pure ZO); ZO
+    /// trains everything before the partition.
+    Tail(usize),
+    /// Full backprop over every layer — there is no ZO partition, and
+    /// no ZO boundary may be derived from this variant.
+    All,
+}
+
 /// Training method — the paper's four configurations.
 ///
 /// Naming follows the paper §5.1.1: the suffix counts the *classifier*
@@ -88,13 +113,13 @@ impl Method {
         }
     }
 
-    /// Number of trailing FC layers trained by BP.
-    pub fn bp_layers(&self) -> usize {
+    /// The ZO/BP partition for this method.
+    pub fn bp_depth(&self) -> BpDepth {
         match self {
-            Method::FullZo => 0,
-            Method::Cls2 => 1,
-            Method::Cls1 => 2,
-            Method::FullBp => usize::MAX, // all — handled specially
+            Method::FullZo => BpDepth::Tail(0),
+            Method::Cls2 => BpDepth::Tail(1),
+            Method::Cls1 => BpDepth::Tail(2),
+            Method::FullBp => BpDepth::All,
         }
     }
 
@@ -119,13 +144,12 @@ impl Method {
 
     pub const ALL: [Method; 4] = [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp];
 
-    /// Memory-model mapping.
+    /// Memory-model mapping, derived from the ZO/BP partition.
     pub fn memory_method(&self) -> crate::memory::Method {
-        match self {
-            Method::FullZo => crate::memory::Method::FullZo,
-            Method::Cls2 => crate::memory::Method::Elastic { bp_layers: 1 },
-            Method::Cls1 => crate::memory::Method::Elastic { bp_layers: 2 },
-            Method::FullBp => crate::memory::Method::FullBp,
+        match self.bp_depth() {
+            BpDepth::All => crate::memory::Method::FullBp,
+            BpDepth::Tail(0) => crate::memory::Method::FullZo,
+            BpDepth::Tail(k) => crate::memory::Method::Elastic { bp_layers: k },
         }
     }
 }
@@ -135,11 +159,13 @@ mod tests {
     use super::*;
 
     #[test]
-    fn method_parse_and_layers() {
+    fn method_parse_and_depth() {
         assert_eq!(Method::parse("full-zo").unwrap(), Method::FullZo);
         // paper naming: Cls1 -> BP on TWO layers, Cls2 -> BP on ONE
-        assert_eq!(Method::parse("cls1").unwrap().bp_layers(), 2);
-        assert_eq!(Method::parse("zo-feat-cls2").unwrap().bp_layers(), 1);
+        assert_eq!(Method::parse("cls1").unwrap().bp_depth(), BpDepth::Tail(2));
+        assert_eq!(Method::parse("zo-feat-cls2").unwrap().bp_depth(), BpDepth::Tail(1));
+        // Full BP is not a ZO boundary — it is its own variant
+        assert_eq!(Method::FullBp.bp_depth(), BpDepth::All);
         assert!(Method::parse("magic").is_err());
     }
 
@@ -148,8 +174,23 @@ mod tests {
         use crate::coordinator::params::{Model, ParamSet};
         let p = ParamSet::init(Model::LeNet, 1);
         // paper §5.1.1: Cls1 trains 96,772 params by ZO, Cls2 106,936
-        assert_eq!(p.zo_param_count(Method::Cls1.bp_layers()), 96_772);
-        assert_eq!(p.zo_param_count(Method::Cls2.bp_layers()), 106_936);
+        assert_eq!(p.zo_param_count(2), 96_772);
+        assert_eq!(p.zo_param_count(1), 106_936);
+    }
+
+    #[test]
+    fn memory_method_follows_partition() {
+        use crate::memory;
+        assert_eq!(Method::FullZo.memory_method(), memory::Method::FullZo);
+        assert_eq!(
+            Method::Cls2.memory_method(),
+            memory::Method::Elastic { bp_layers: 1 }
+        );
+        assert_eq!(
+            Method::Cls1.memory_method(),
+            memory::Method::Elastic { bp_layers: 2 }
+        );
+        assert_eq!(Method::FullBp.memory_method(), memory::Method::FullBp);
     }
 
     #[test]

@@ -1,21 +1,27 @@
-//! INT8 training loop — paper Alg. 2 (ElasticZO-INT8) on the native
-//! NITI engine, with both gradient modes:
+//! INT8 backend of the unified session API — paper Alg. 2
+//! (ElasticZO-INT8) on the native NITI engine, with both gradient
+//! modes:
 //!
 //! * [`ZoGradMode::FloatCE`] — `g = sgn(ℓ₊−ℓ₋)` from float CE of the
 //!   int8 logits (the paper's "INT8" columns);
 //! * [`ZoGradMode::IntCE`]   — the integer-only Eq. 7–12 sign (the
 //!   paper's "INT8*" columns; no FPU anywhere in the step).
 //!
+//! The epoch loop lives in [`super::session::run`]; this module
+//! contributes the per-minibatch INT8 work ([`Int8Session`] owning the
+//! NITI weight tensors and the staged p_zero / b_BP schedules) plus the
+//! reusable primitives ([`perturb_int8`], [`zo_update_int8`],
+//! [`evaluate_int8`]).
+//!
 //! The sparse int8 perturbation `z = m ⊙ u`, `u ~ U(−r_max, r_max)`,
 //! `m ~ Bernoulli(1−p_zero)` is regenerated from the step seed exactly
 //! like the FP32 path; p_zero and the BP bitwidth follow the paper's
 //! staged schedules.
 
-use super::control::{ProgressSink, StopFlag};
-use super::engine::Method;
-use super::metrics::{EpochStats, History};
-use super::schedules::{paper_b_bp, paper_p_zero};
-use crate::data::loader::{eval_batches, Loader};
+use super::engine::BpDepth;
+use super::schedules::{paper_b_bp, paper_p_zero, StagedSchedule};
+use super::session::{self, PrecisionSpec, StepOutcome, TrainResult, TrainSession, TrainSpec};
+use crate::data::loader::{eval_batches, Batch};
 use crate::data::Dataset;
 use crate::int8::lenet8::{self, Fwd8};
 use crate::int8::qtensor::QTensor;
@@ -40,41 +46,12 @@ impl ZoGradMode {
             other => anyhow::bail!("unknown zo grad mode '{other}' (float|int)"),
         }
     }
-}
 
-#[derive(Debug, Clone)]
-pub struct Int8TrainConfig {
-    pub method: Method,
-    pub grad_mode: ZoGradMode,
-    pub epochs: usize,
-    pub batch: usize,
-    /// Perturbation scale r_max (paper tunes in {1,3,7,15,31,63}).
-    pub r_max: i8,
-    /// ZO update bitwidth (paper fixes b_ZO = 1).
-    pub b_zo: u32,
-    pub seed: u64,
-    pub eval_every: usize,
-    pub verbose: bool,
-    /// Cooperative cancellation; polled between batches and epochs.
-    pub stop: StopFlag,
-    /// Live per-epoch progress callback (armed by the `serve` workers).
-    pub progress: ProgressSink,
-}
-
-impl Default for Int8TrainConfig {
-    fn default() -> Self {
-        Int8TrainConfig {
-            method: Method::Cls1,
-            grad_mode: ZoGradMode::FloatCE,
-            epochs: 10,
-            batch: 32,
-            r_max: 15,
-            b_zo: 1,
-            seed: 1,
-            eval_every: 1,
-            verbose: false,
-            stop: StopFlag::default(),
-            progress: ProgressSink::default(),
+    /// The canonical CLI/JSON token; `parse(token()) == self`.
+    pub fn token(&self) -> &'static str {
+        match self {
+            ZoGradMode::FloatCE => "float",
+            ZoGradMode::IntCE => "int",
         }
     }
 }
@@ -171,180 +148,198 @@ pub fn evaluate_int8(ws: &[QTensor], data: &Dataset, batch: usize) -> (f32, f32)
     )
 }
 
-pub struct Int8TrainResult {
-    pub history: History,
-    pub timer: PhaseTimer,
-    /// True iff the run ended early because [`Int8TrainConfig::stop`] fired.
-    pub stopped: bool,
+/// INT8 implementation of [`TrainSession`] over the NITI weights: pure
+/// int8 full-BP (the NITI baseline) or the Alg. 2 ZO(+tail BP) step.
+pub struct Int8Session<'a> {
+    ws: &'a mut Vec<QTensor>,
+    grad_mode: ZoGradMode,
+    r_max: i8,
+    b_zo: u32,
+    seed: u64,
+    batch: usize,
+    label: String,
+    p_zero_sched: StagedSchedule<f32>,
+    b_bp_sched: StagedSchedule<u32>,
+    /// Current-epoch schedule values (set by `begin_epoch`).
+    p_zero: f32,
+    b_bp: u32,
+    /// `true` for the NITI full-BP baseline (no ZO partition).
+    full_bp: bool,
+    /// FC layers trained by tail BP (ZO methods only).
+    bp_tail: usize,
+    /// Weight tensors trained by ZO (prefix of the ABI order).
+    n_zo: usize,
+}
+
+impl<'a> Int8Session<'a> {
+    pub fn new(ws: &'a mut Vec<QTensor>, spec: &TrainSpec) -> Result<Int8Session<'a>> {
+        let PrecisionSpec::Int8 { grad_mode, r_max, b_zo } = spec.precision else {
+            anyhow::bail!(
+                "Int8Session requires an int8 TrainSpec (got precision '{}')",
+                spec.precision.token()
+            );
+        };
+        let (full_bp, bp_tail, n_zo) = match spec.method.bp_depth() {
+            BpDepth::All => (true, 0, 0),
+            BpDepth::Tail(k) => (false, k, lenet8::zo_layer_count(k)),
+        };
+        Ok(Int8Session {
+            ws,
+            grad_mode,
+            r_max,
+            b_zo,
+            seed: spec.seed,
+            batch: spec.batch,
+            label: spec.label(),
+            p_zero_sched: paper_p_zero(spec.epochs),
+            b_bp_sched: paper_b_bp(spec.epochs),
+            p_zero: 0.0,
+            b_bp: 0,
+            full_bp,
+            bp_tail,
+            n_zo,
+        })
+    }
+}
+
+impl TrainSession for Int8Session<'_> {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn begin_epoch(&mut self, epoch: usize) -> f32 {
+        self.p_zero = self.p_zero_sched.at(epoch);
+        self.b_bp = self.b_bp_sched.at(epoch);
+        0.0 // the int8 update has no learning rate
+    }
+
+    fn step(&mut self, b: &Batch, step_idx: u64, timer: &mut PhaseTimer) -> Result<StepOutcome> {
+        let bsz = self.batch;
+        let xq = timer.time(Phase::Data, || lenet8::quantize_input(&b.x, bsz));
+
+        if self.full_bp {
+            // NITI baseline: pure int8 BP
+            let t0 = std::time::Instant::now();
+            let fwd = lenet8::forward(self.ws, &xq, bsz);
+            timer.add(Phase::Forward, t0.elapsed());
+            let loss = int8_ce(&fwd.logits, &b.labels, bsz);
+            let (correct, _) = int8_accuracy(&fwd, &b.labels, bsz);
+            let t0 = std::time::Instant::now();
+            lenet8::full_update(self.ws, &fwd, &b.labels, bsz, self.b_bp);
+            timer.add(Phase::BpBackward, t0.elapsed());
+            return Ok(StepOutcome { loss, correct, seen: bsz });
+        }
+
+        // ZO(+tail BP) step, Alg. 2
+        let (seed, r_max, p_zero) = (self.seed, self.r_max, self.p_zero);
+        let t0 = std::time::Instant::now();
+        perturb_int8(self.ws, self.n_zo, seed, step_idx, 1, r_max, p_zero);
+        timer.add(Phase::ZoPerturb, t0.elapsed());
+
+        let t0 = std::time::Instant::now();
+        let fwd_plus = lenet8::forward(self.ws, &xq, bsz);
+        timer.add(Phase::Forward, t0.elapsed());
+
+        let t0 = std::time::Instant::now();
+        perturb_int8(self.ws, self.n_zo, seed, step_idx, -2, r_max, p_zero);
+        timer.add(Phase::ZoPerturb, t0.elapsed());
+
+        let t0 = std::time::Instant::now();
+        let fwd_minus = lenet8::forward(self.ws, &xq, bsz);
+        timer.add(Phase::Forward, t0.elapsed());
+
+        let t0 = std::time::Instant::now();
+        let g = match self.grad_mode {
+            ZoGradMode::IntCE => intce::loss_diff_sign_int(
+                &fwd_plus.logits.data,
+                fwd_plus.logits.exp,
+                &fwd_minus.logits.data,
+                fwd_minus.logits.exp,
+                &b.labels,
+                bsz,
+                lenet8::NCLASS,
+            ),
+            ZoGradMode::FloatCE => {
+                let d = intce::loss_diff_f32(
+                    &fwd_plus.logits.data,
+                    fwd_plus.logits.exp,
+                    &fwd_minus.logits.data,
+                    fwd_minus.logits.exp,
+                    &b.labels,
+                    bsz,
+                    lenet8::NCLASS,
+                );
+                d.signum() as i32
+            }
+        };
+        timer.add(Phase::Loss, t0.elapsed());
+
+        // restore
+        let t0 = std::time::Instant::now();
+        perturb_int8(self.ws, self.n_zo, seed, step_idx, 1, r_max, p_zero);
+        timer.add(Phase::ZoPerturb, t0.elapsed());
+
+        let t0 = std::time::Instant::now();
+        zo_update_int8(self.ws, self.n_zo, seed, step_idx, g, self.b_zo, r_max, p_zero);
+        timer.add(Phase::ZoUpdate, t0.elapsed());
+
+        if self.bp_tail > 0 {
+            let t0 = std::time::Instant::now();
+            lenet8::tail_update(self.ws, &fwd_minus, &b.labels, self.bp_tail, bsz, self.b_bp);
+            timer.add(Phase::BpBackward, t0.elapsed());
+        }
+        let loss = int8_ce(&fwd_minus.logits, &b.labels, bsz);
+        let (correct, _) = int8_accuracy(&fwd_minus, &b.labels, bsz);
+        Ok(StepOutcome { loss, correct, seen: bsz })
+    }
+
+    fn evaluate(&mut self, data: &Dataset) -> Result<(f32, f32)> {
+        Ok(evaluate_int8(self.ws, data, self.batch))
+    }
+
+    fn verbose_note(&self) -> String {
+        // surface the staged-schedule values the epoch ran under (the
+        // old int8 loop printed these; lr is meaningless here)
+        format!("  p_zero {}  b_bp {}", self.p_zero, self.b_bp)
+    }
 }
 
 /// Train INT8 LeNet with any method (FullZO / Cls1 / Cls2 / FullBP=NITI).
+/// Thin wrapper: builds an [`Int8Session`] and hands it to the one
+/// generic loop in [`session::run`].
 pub fn train_int8(
     ws: &mut Vec<QTensor>,
     train_data: &Dataset,
     test_data: &Dataset,
-    cfg: &Int8TrainConfig,
-) -> Result<Int8TrainResult> {
-    let label = match cfg.grad_mode {
-        ZoGradMode::FloatCE => format!("{} INT8", cfg.method.label()),
-        ZoGradMode::IntCE => format!("{} INT8*", cfg.method.label()),
-    };
-    let mut history = History::new(&label);
-    let mut timer = PhaseTimer::new();
-    let p_zero_sched = paper_p_zero(cfg.epochs);
-    let b_bp_sched = paper_b_bp(cfg.epochs);
-    let bp_layers = match cfg.method {
-        Method::FullBp => 0, // handled by full_update below
-        m => m.bp_layers(),
-    };
-    let n_zo = match cfg.method {
-        Method::FullBp => 0,
-        m => lenet8::zo_layer_count(m.bp_layers()),
-    };
-    let mut step: u64 = 0;
-    let mut stopped = false;
-
-    'epochs: for epoch in 0..cfg.epochs {
-        if cfg.stop.should_stop() {
-            stopped = true;
-            break;
-        }
-        let epoch_t0 = std::time::Instant::now();
-        let p_zero = p_zero_sched.at(epoch);
-        let b_bp = b_bp_sched.at(epoch);
-        let mut epoch_loss = 0.0f64;
-        let mut nbatches = 0usize;
-        let mut correct = 0usize;
-        let mut seen = 0usize;
-
-        for b in Loader::new(train_data, cfg.batch, cfg.seed ^ 0xDA7A, epoch as u64) {
-            if cfg.stop.should_stop() {
-                stopped = true;
-                break 'epochs;
-            }
-            let xq = timer.time(Phase::Data, || lenet8::quantize_input(&b.x, cfg.batch));
-
-            if cfg.method == Method::FullBp {
-                // NITI baseline: pure int8 BP
-                let t0 = std::time::Instant::now();
-                let fwd = lenet8::forward(ws, &xq, cfg.batch);
-                timer.add(Phase::Forward, t0.elapsed());
-                epoch_loss += int8_ce(&fwd.logits, &b.labels, cfg.batch) as f64;
-                let (c, _) = int8_accuracy(&fwd, &b.labels, cfg.batch);
-                correct += c;
-                seen += cfg.batch;
-                let t0 = std::time::Instant::now();
-                lenet8::full_update(ws, &fwd, &b.labels, cfg.batch, b_bp);
-                timer.add(Phase::BpBackward, t0.elapsed());
-            } else {
-                // ZO(+tail BP) step, Alg. 2
-                let t0 = std::time::Instant::now();
-                perturb_int8(ws, n_zo, cfg.seed, step, 1, cfg.r_max, p_zero);
-                timer.add(Phase::ZoPerturb, t0.elapsed());
-
-                let t0 = std::time::Instant::now();
-                let fwd_plus = lenet8::forward(ws, &xq, cfg.batch);
-                timer.add(Phase::Forward, t0.elapsed());
-
-                let t0 = std::time::Instant::now();
-                perturb_int8(ws, n_zo, cfg.seed, step, -2, cfg.r_max, p_zero);
-                timer.add(Phase::ZoPerturb, t0.elapsed());
-
-                let t0 = std::time::Instant::now();
-                let fwd_minus = lenet8::forward(ws, &xq, cfg.batch);
-                timer.add(Phase::Forward, t0.elapsed());
-
-                let t0 = std::time::Instant::now();
-                let g = match cfg.grad_mode {
-                    ZoGradMode::IntCE => intce::loss_diff_sign_int(
-                        &fwd_plus.logits.data,
-                        fwd_plus.logits.exp,
-                        &fwd_minus.logits.data,
-                        fwd_minus.logits.exp,
-                        &b.labels,
-                        cfg.batch,
-                        lenet8::NCLASS,
-                    ),
-                    ZoGradMode::FloatCE => {
-                        let d = intce::loss_diff_f32(
-                            &fwd_plus.logits.data,
-                            fwd_plus.logits.exp,
-                            &fwd_minus.logits.data,
-                            fwd_minus.logits.exp,
-                            &b.labels,
-                            cfg.batch,
-                            lenet8::NCLASS,
-                        );
-                        d.signum() as i32
-                    }
-                };
-                timer.add(Phase::Loss, t0.elapsed());
-
-                // restore
-                let t0 = std::time::Instant::now();
-                perturb_int8(ws, n_zo, cfg.seed, step, 1, cfg.r_max, p_zero);
-                timer.add(Phase::ZoPerturb, t0.elapsed());
-
-                let t0 = std::time::Instant::now();
-                zo_update_int8(ws, n_zo, cfg.seed, step, g, cfg.b_zo, cfg.r_max, p_zero);
-                timer.add(Phase::ZoUpdate, t0.elapsed());
-
-                if bp_layers > 0 {
-                    let t0 = std::time::Instant::now();
-                    lenet8::tail_update(ws, &fwd_minus, &b.labels, bp_layers, cfg.batch, b_bp);
-                    timer.add(Phase::BpBackward, t0.elapsed());
-                }
-                epoch_loss += int8_ce(&fwd_minus.logits, &b.labels, cfg.batch) as f64;
-                let (c, _) = int8_accuracy(&fwd_minus, &b.labels, cfg.batch);
-                correct += c;
-                seen += cfg.batch;
-            }
-            nbatches += 1;
-            step += 1;
-        }
-
-        let is_last = epoch + 1 == cfg.epochs;
-        let (test_loss, test_acc) = if epoch % cfg.eval_every == 0 || is_last {
-            let t0 = std::time::Instant::now();
-            let r = evaluate_int8(ws, test_data, cfg.batch);
-            timer.add(Phase::Eval, t0.elapsed());
-            r
-        } else {
-            let prev = history.epochs.last();
-            (
-                prev.map(|e| e.test_loss).unwrap_or(f32::NAN),
-                prev.map(|e| e.test_acc).unwrap_or(0.0),
-            )
-        };
-        let stats = EpochStats {
-            epoch,
-            train_loss: (epoch_loss / nbatches.max(1) as f64) as f32,
-            test_loss,
-            train_acc: if seen > 0 { correct as f32 / seen as f32 } else { 0.0 },
-            test_acc,
-            lr: 0.0,
-            seconds: epoch_t0.elapsed().as_secs_f64(),
-        };
-        if cfg.verbose {
-            println!(
-                "[{label}] epoch {:>3}  loss {:.4}  test_loss {:.4}  acc {:.2}%  train_acc {:.2}%  p_zero {p_zero}  b_bp {b_bp}",
-                epoch,
-                stats.train_loss,
-                stats.test_loss,
-                stats.test_acc * 100.0,
-                stats.train_acc * 100.0,
-            );
-        }
-        cfg.progress.publish(&stats);
-        history.push(stats);
-    }
-    Ok(Int8TrainResult { history, timer, stopped })
+    spec: &TrainSpec,
+) -> Result<TrainResult> {
+    let mut s = Int8Session::new(ws, spec)?;
+    session::run(&mut s, spec, train_data, test_data)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::Method;
     use crate::data::synth_mnist;
+
+    fn int8_spec(method: Method, grad_mode: ZoGradMode, epochs: usize, batch: usize) -> TrainSpec {
+        TrainSpec {
+            method,
+            precision: PrecisionSpec::int8(grad_mode),
+            epochs,
+            batch,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grad_mode_tokens_roundtrip() {
+        for gm in [ZoGradMode::FloatCE, ZoGradMode::IntCE] {
+            assert_eq!(ZoGradMode::parse(gm.token()).unwrap(), gm);
+        }
+        assert!(ZoGradMode::parse("bf16").is_err());
+    }
 
     #[test]
     fn perturb_restore_roundtrip_without_saturation() {
@@ -391,13 +386,8 @@ mod tests {
         let train_d = synth_mnist::generate(256, 21);
         let test_d = synth_mnist::generate(128, 22);
         let mut ws = lenet8::init_params(23, 32);
-        let cfg = Int8TrainConfig {
-            method: Method::FullBp,
-            epochs: 3,
-            batch: 32,
-            ..Default::default()
-        };
-        let r = train_int8(&mut ws, &train_d, &test_d, &cfg).unwrap();
+        let spec = int8_spec(Method::FullBp, ZoGradMode::FloatCE, 3, 32);
+        let r = train_int8(&mut ws, &train_d, &test_d, &spec).unwrap();
         assert!(
             r.history.best_test_acc() > 0.3,
             "acc {}",
@@ -410,18 +400,13 @@ mod tests {
         let train_d = synth_mnist::generate(128, 24);
         let test_d = synth_mnist::generate(64, 25);
         let mut ws = lenet8::init_params(26, 32);
-        let cfg = Int8TrainConfig {
-            method: Method::Cls1,
-            epochs: 2,
-            batch: 16,
-            r_max: 15,
-            ..Default::default()
-        };
-        let r = train_int8(&mut ws, &train_d, &test_d, &cfg).unwrap();
+        let spec = int8_spec(Method::Cls1, ZoGradMode::FloatCE, 2, 16);
+        let r = train_int8(&mut ws, &train_d, &test_d, &spec).unwrap();
         assert!(r.timer.total(Phase::Forward).as_nanos() > 0);
         assert!(r.timer.total(Phase::ZoUpdate).as_nanos() > 0);
         assert!(r.timer.total(Phase::BpBackward).as_nanos() > 0);
         assert_eq!(r.history.epochs.len(), 2);
+        assert_eq!(r.history.label, "ZO-Feat-Cls1 INT8");
     }
 
     #[test]
@@ -432,19 +417,16 @@ mod tests {
         let mut ws = lenet8::init_params(33, 32);
         let stop = StopFlag::new();
         let stop2 = stop.clone();
-        let cfg = Int8TrainConfig {
-            method: Method::Cls1,
-            epochs: 50,
-            batch: 16,
+        let spec = TrainSpec {
             progress: ProgressSink::new(move |e| {
                 if e.epoch == 1 {
                     stop2.request_stop();
                 }
             }),
             stop,
-            ..Default::default()
+            ..int8_spec(Method::Cls1, ZoGradMode::FloatCE, 50, 16)
         };
-        let r = train_int8(&mut ws, &train_d, &test_d, &cfg).unwrap();
+        let r = train_int8(&mut ws, &train_d, &test_d, &spec).unwrap();
         assert!(r.stopped);
         assert_eq!(r.history.epochs.len(), 2, "must stop right after epoch 1");
         let acc = r.history.epochs[1].train_acc;
@@ -456,15 +438,17 @@ mod tests {
         let train_d = synth_mnist::generate(64, 27);
         let test_d = synth_mnist::generate(32, 28);
         let mut ws = lenet8::init_params(29, 32);
-        let cfg = Int8TrainConfig {
-            method: Method::FullZo,
-            grad_mode: ZoGradMode::IntCE,
-            epochs: 1,
-            batch: 16,
-            ..Default::default()
-        };
-        let r = train_int8(&mut ws, &train_d, &test_d, &cfg).unwrap();
+        let spec = int8_spec(Method::FullZo, ZoGradMode::IntCE, 1, 16);
+        let r = train_int8(&mut ws, &train_d, &test_d, &spec).unwrap();
         assert_eq!(r.history.epochs.len(), 1);
         assert!(r.history.epochs[0].train_loss.is_finite());
+        assert_eq!(r.history.label, "Full ZO INT8*");
+    }
+
+    #[test]
+    fn int8_session_rejects_fp32_spec() {
+        let mut ws = lenet8::init_params(30, 32);
+        let spec = TrainSpec::default(); // fp32 precision
+        assert!(Int8Session::new(&mut ws, &spec).is_err());
     }
 }

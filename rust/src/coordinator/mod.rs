@@ -2,10 +2,14 @@
 //!
 //! Owns the training loop end to end: parameter store, the seed-trick
 //! ZO engine, elastic ZO/BP partitioning, the NITI INT8 driver, the
-//! hyper-parameter schedules, metrics and checkpoints. Compute is
-//! delegated to an [`engine::Engine`] — either the XLA artifacts
-//! ([`xla_engine`]) or the native rust implementation
-//! ([`native_engine`]).
+//! hyper-parameter schedules, metrics and checkpoints. Training runs
+//! through the precision-agnostic [`session`] API: one [`session::TrainSpec`]
+//! describes any method × precision cell of the paper's grid, one
+//! generic [`session::run`] epoch loop drives a [`session::TrainSession`]
+//! backend — [`trainer::Fp32Session`] (compute delegated to an
+//! [`engine::Engine`], either the XLA artifacts in [`xla_engine`] or the
+//! native rust implementation in [`native_engine`]) or
+//! [`int8_trainer::Int8Session`] (the NITI int8 path).
 
 pub mod checkpoint;
 pub mod control;
@@ -15,13 +19,15 @@ pub mod metrics;
 pub mod native_engine;
 pub mod params;
 pub mod schedules;
+pub mod session;
 pub mod trainer;
 #[cfg(feature = "xla")]
 pub mod xla_engine;
 pub mod zo;
 
 pub use control::{ProgressSink, StopFlag};
-pub use engine::{Engine, EngineKind, Method};
-pub use int8_trainer::{Int8TrainConfig, ZoGradMode};
+pub use engine::{BpDepth, Engine, EngineKind, Method, StepOut};
+pub use int8_trainer::{Int8Session, ZoGradMode};
 pub use params::{Model, ParamSet};
-pub use trainer::{TrainConfig, TrainResult};
+pub use session::{PrecisionSpec, StepOutcome, TrainResult, TrainSession, TrainSpec};
+pub use trainer::Fp32Session;

@@ -1,7 +1,7 @@
 //! Native engine: the pure-rust nn/ implementations behind the `Engine`
 //! trait — the stand-in for the paper's C++ on-device build.
 
-use super::engine::Engine;
+use super::engine::{Engine, StepOut};
 use super::params::{Model, ParamSet};
 use crate::nn::{lenet, pointnet, Forward, TailGrads};
 use crate::tensor::ops;
@@ -50,21 +50,21 @@ impl Engine for NativeEngine {
         y: &[f32],
         bsz: usize,
         lr: f32,
-    ) -> Result<f32> {
-        let (loss, grads) = match self.model {
+    ) -> Result<StepOut> {
+        let (loss, logits, grads) = match self.model {
             Model::LeNet => {
                 let (fwd, cache) = lenet::forward(&params.data, x, y, bsz);
-                (fwd.loss, lenet::full_grads(&params.data, &cache, y))
+                (fwd.loss, fwd.logits, lenet::full_grads(&params.data, &cache, y))
             }
             Model::PointNet { npoints, ncls } => {
                 let (fwd, cache) = pointnet::forward(&params.data, x, y, bsz, npoints, ncls);
-                (fwd.loss, pointnet::full_grads(&params.data, &cache, y))
+                (fwd.loss, fwd.logits, pointnet::full_grads(&params.data, &cache, y))
             }
         };
         for (p, g) in params.data.iter_mut().zip(&grads) {
             ops::axpy(-lr, g, p);
         }
-        Ok(loss)
+        Ok(StepOut { loss, logits: Some(logits) })
     }
 
     fn name(&self) -> &'static str {
@@ -88,9 +88,12 @@ mod tests {
         }
         let f = eng.forward(&params, &d.x, &y, 8).unwrap();
         assert_eq!(f.logits.len(), 80);
-        let l0 = eng.full_step(&mut params, &d.x, &y, 8, 0.05).unwrap();
+        let s0 = eng.full_step(&mut params, &d.x, &y, 8, 0.05).unwrap();
+        // the fused step exposes the pre-step logits for train accuracy
+        assert_eq!(s0.logits.as_ref().unwrap().len(), 80);
+        assert_eq!(s0.logits.as_deref(), Some(f.logits.as_slice()));
         let f1 = eng.forward(&params, &d.x, &y, 8).unwrap();
-        assert!(f1.loss < l0);
+        assert!(f1.loss < s0.loss);
         let tails = eng.tail_grads(&params, &f1, &y, 2, 8).unwrap();
         assert_eq!(tails.len(), 4);
     }

@@ -1,0 +1,538 @@
+//! The precision-agnostic training session API — the one place the
+//! epoch loop lives.
+//!
+//! The paper's four methods (Full ZO / ZO-Feat-Cls1 / ZO-Feat-Cls2 /
+//! Full BP) × two precisions (FP32, INT8/INT8*) are a single family on
+//! a method×precision grid (Alg. 1 vs Alg. 2); this module gives them a
+//! single driver:
+//!
+//! * [`TrainSpec`] — the unified run description (method, precision and
+//!   its knobs, epochs/batch/schedule seeds, eval cadence, stop flag,
+//!   progress sink). Subsumes the former `TrainConfig` and
+//!   `Int8TrainConfig`, and (de)serializes to the flat JSON shape the
+//!   `serve` protocol ships over the wire.
+//! * [`TrainSession`] — per-minibatch work (`step`), per-epoch schedule
+//!   application (`begin_epoch`) and dataset evaluation (`evaluate`),
+//!   implemented once per backend: `trainer::Fp32Session` over an
+//!   [`super::engine::Engine`], `int8_trainer::Int8Session` over the
+//!   NITI int8 path.
+//! * [`run`] — THE epoch loop: shuffled minibatches, cooperative stop
+//!   polling, eval cadence with carry-forward, [`EpochStats`]/
+//!   [`History`] bookkeeping, [`PhaseTimer`] rollup and [`ProgressSink`]
+//!   publishing. No other epoch loop exists in the coordinator.
+
+use super::control::{ProgressSink, StopFlag};
+use super::engine::Method;
+use super::int8_trainer::ZoGradMode;
+use super::metrics::{EpochStats, History};
+use crate::data::loader::{Batch, Loader};
+use crate::data::Dataset;
+use crate::telemetry::{Phase, PhaseTimer};
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+
+/// Numeric precision of a run, with the precision-specific knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrecisionSpec {
+    /// IEEE float32 over an `Engine` (paper Alg. 1).
+    Fp32,
+    /// NITI int8 (paper Alg. 2).
+    Int8 {
+        /// ZO gradient sign: float CE ("INT8") or integer-only ("INT8*").
+        grad_mode: ZoGradMode,
+        /// Perturbation scale r_max (paper tunes in {1,3,7,15,31,63}).
+        r_max: i8,
+        /// ZO update bitwidth (paper fixes b_ZO = 1).
+        b_zo: u32,
+    },
+}
+
+impl PrecisionSpec {
+    /// Paper-default INT8 knobs for a gradient mode (r_max 15, b_ZO 1).
+    pub fn int8(grad_mode: ZoGradMode) -> PrecisionSpec {
+        PrecisionSpec::Int8 { grad_mode, r_max: 15, b_zo: 1 }
+    }
+
+    /// The canonical CLI/JSON token, matching `config::Precision`:
+    /// `fp32`, `int8` (float-CE sign) or `int8*` (integer-only sign).
+    pub fn token(&self) -> &'static str {
+        match self {
+            PrecisionSpec::Fp32 => "fp32",
+            PrecisionSpec::Int8 { grad_mode: ZoGradMode::FloatCE, .. } => "int8",
+            PrecisionSpec::Int8 { grad_mode: ZoGradMode::IntCE, .. } => "int8*",
+        }
+    }
+
+    /// Paper column label (`FP32`, `INT8`, `INT8*`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PrecisionSpec::Fp32 => "FP32",
+            PrecisionSpec::Int8 { grad_mode: ZoGradMode::FloatCE, .. } => "INT8",
+            PrecisionSpec::Int8 { grad_mode: ZoGradMode::IntCE, .. } => "INT8*",
+        }
+    }
+}
+
+/// The unified training-run description — one spec drives every method
+/// × precision cell of the paper's grid through the same [`run`] loop.
+#[derive(Debug, Clone)]
+pub struct TrainSpec {
+    pub method: Method,
+    pub precision: PrecisionSpec,
+    pub epochs: usize,
+    pub batch: usize,
+    /// Initial learning rate (FP32 paths; the INT8 update is LR-free).
+    pub lr0: f32,
+    /// ZO perturbation scale ε (FP32 paths).
+    pub eps: f32,
+    /// Projected-gradient clip (FP32 paths).
+    pub g_clip: f32,
+    pub seed: u64,
+    /// Evaluate every N epochs (the last epoch always evaluates).
+    pub eval_every: usize,
+    pub verbose: bool,
+    /// Cooperative cancellation; polled between batches and epochs.
+    pub stop: StopFlag,
+    /// Live per-epoch progress callback (armed by the `serve` workers).
+    pub progress: ProgressSink,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        TrainSpec {
+            method: Method::Cls1,
+            precision: PrecisionSpec::Fp32,
+            epochs: 10,
+            batch: 32,
+            lr0: 1e-3,
+            eps: 1e-2,
+            // SPSA's projected gradient scales like √d·|∇L| (d ≈ 10⁵
+            // here), so a tight clip is essential — the paper clips g
+            // to stabilize training (§5.1.1).
+            g_clip: 5.0,
+            seed: 1,
+            eval_every: 1,
+            verbose: false,
+            stop: StopFlag::default(),
+            progress: ProgressSink::default(),
+        }
+    }
+}
+
+impl TrainSpec {
+    /// Paper-style row label: the method, suffixed with the int8 column
+    /// tag when applicable ("ZO-Feat-Cls1 INT8*", "Full BP", …).
+    pub fn label(&self) -> String {
+        match self.precision {
+            PrecisionSpec::Fp32 => self.method.label().to_string(),
+            p => format!("{} {}", self.method.label(), p.label()),
+        }
+    }
+
+    /// Serialize to the flat JSON shape shared with `repro train` flags
+    /// and the `serve` job protocol. The precision is carried by the
+    /// combined `precision` token (`fp32`/`int8`/`int8*`); int8 specs
+    /// additionally carry the redundant-but-explicit `grad_mode` token
+    /// plus their `r_max`/`b_zo` knobs.
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![
+            ("method", Value::str(self.method.token())),
+            ("precision", Value::str(self.precision.token())),
+            ("epochs", Value::num(self.epochs as f64)),
+            ("batch", Value::num(self.batch as f64)),
+            ("lr", Value::num(self.lr0 as f64)),
+            ("eps", Value::num(self.eps as f64)),
+            ("g_clip", Value::num(self.g_clip as f64)),
+            ("seed", Value::num(self.seed as f64)),
+            ("eval_every", Value::num(self.eval_every as f64)),
+            ("verbose", Value::Bool(self.verbose)),
+        ];
+        if let PrecisionSpec::Int8 { grad_mode, r_max, b_zo } = self.precision {
+            pairs.push(("grad_mode", Value::str(grad_mode.token())));
+            pairs.push(("r_max", Value::num(r_max as f64)));
+            pairs.push(("b_zo", Value::num(b_zo as f64)));
+        }
+        Value::obj(pairs)
+    }
+
+    /// Parse the shape [`TrainSpec::to_json`] emits. One rule, shared
+    /// with the serve protocol: a `grad_mode` token may *refine* a plain
+    /// `int8` precision to the integer-only sign, but a true conflict
+    /// (`grad_mode` on `fp32`, or `"float"` against `"int8*"`) is an
+    /// error. Unknown keys are rejected so wire typos surface instead
+    /// of silently training a different run.
+    pub fn from_json(v: &Value) -> Result<TrainSpec> {
+        let obj = v.as_obj().context("train spec must be a JSON object")?;
+        let mut spec = TrainSpec::default();
+        let mut int8 = false;
+        let mut star = false;
+        let mut grad_key: Option<ZoGradMode> = None;
+        let mut r_max: i8 = 15;
+        let mut b_zo: u32 = 1;
+        let str_of = |k: &str, val: &Value| -> Result<String> {
+            Ok(val.as_str().with_context(|| format!("'{k}' must be a string"))?.to_string())
+        };
+        let num_of = |k: &str, val: &Value| -> Result<f64> {
+            val.as_f64().with_context(|| format!("'{k}' must be a number"))
+        };
+        for (k, val) in obj {
+            match k.as_str() {
+                "method" => spec.method = Method::parse(&str_of(k, val)?)?,
+                "precision" => match str_of(k, val)?.as_str() {
+                    "fp32" => int8 = false,
+                    "int8" => int8 = true,
+                    "int8*" | "int8star" => {
+                        int8 = true;
+                        star = true;
+                    }
+                    other => anyhow::bail!("unknown precision '{other}' (fp32|int8|int8*)"),
+                },
+                "grad_mode" | "grad-mode" => {
+                    grad_key = Some(ZoGradMode::parse(&str_of(k, val)?)?)
+                }
+                "epochs" => spec.epochs = num_of(k, val)? as usize,
+                "batch" => spec.batch = num_of(k, val)? as usize,
+                "lr" | "lr0" => spec.lr0 = num_of(k, val)? as f32,
+                "eps" => spec.eps = num_of(k, val)? as f32,
+                "g_clip" | "g-clip" => spec.g_clip = num_of(k, val)? as f32,
+                "seed" => spec.seed = num_of(k, val)? as u64,
+                "eval_every" | "eval-every" => spec.eval_every = num_of(k, val)? as usize,
+                "verbose" => {
+                    spec.verbose = val.as_bool().context("'verbose' must be a bool")?
+                }
+                "r_max" | "r-max" => {
+                    let n = num_of(k, val)? as i64;
+                    anyhow::ensure!((1..=127).contains(&n), "r_max must be in 1..=127");
+                    r_max = n as i8;
+                }
+                "b_zo" | "b-zo" => {
+                    let n = num_of(k, val)? as i64;
+                    anyhow::ensure!((1..=7).contains(&n), "b_zo must be in 1..=7");
+                    b_zo = n as u32;
+                }
+                other => anyhow::bail!("unknown train spec key '{other}'"),
+            }
+        }
+        anyhow::ensure!(spec.epochs > 0 && spec.batch > 0, "batch and epochs must be positive");
+        anyhow::ensure!(spec.eval_every >= 1, "eval_every must be >= 1");
+        let grad_mode = resolve_grad_mode(int8, star, grad_key)?;
+        spec.precision = if int8 {
+            PrecisionSpec::Int8 { grad_mode, r_max, b_zo }
+        } else {
+            PrecisionSpec::Fp32
+        };
+        Ok(spec)
+    }
+}
+
+/// The one wire rule for the `precision` × `grad_mode` pair, shared by
+/// [`TrainSpec::from_json`] and the serve protocol so the two layers
+/// can never disagree on the same bytes:
+///
+/// * `fp32` + any `grad_mode` key → error (meaningless);
+/// * plain `int8` + `"int"` → refined to the integer-only sign (INT8*);
+/// * `int8*` + `"float"` → error (true conflict);
+/// * consistent/absent combinations pass through.
+///
+/// `star` is whether the precision token itself was `int8*`.
+pub fn resolve_grad_mode(
+    int8: bool,
+    star: bool,
+    grad_key: Option<ZoGradMode>,
+) -> Result<ZoGradMode> {
+    match (int8, star, grad_key) {
+        (false, _, Some(gm)) => {
+            anyhow::bail!("grad_mode '{}' requires an int8 precision", gm.token())
+        }
+        (true, true, Some(ZoGradMode::FloatCE)) => {
+            anyhow::bail!("grad_mode 'float' conflicts with precision 'int8*'")
+        }
+        (_, true, _) => Ok(ZoGradMode::IntCE),
+        (_, false, Some(gm)) => Ok(gm),
+        (_, false, None) => Ok(ZoGradMode::FloatCE),
+    }
+}
+
+/// What one minibatch update reports back to the loop.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepOutcome {
+    /// Minibatch train loss.
+    pub loss: f32,
+    /// Correct predictions among `seen` (train accuracy numerator).
+    pub correct: usize,
+    /// Samples the `correct` count covers (0 when the backend exposes
+    /// no logits for this step, e.g. logits-less AOT full-BP artifacts).
+    pub seen: usize,
+}
+
+/// One backend of the unified loop: per-batch work + evaluation.
+///
+/// Implementations own the model state (an `Engine` + `ParamSet`, or
+/// the NITI weight tensors) and any precision-specific schedules; the
+/// generic [`run`] owns everything else.
+pub trait TrainSession {
+    /// Row label for history/logs ("ZO-Feat-Cls1 INT8*", "Full BP", …).
+    fn label(&self) -> String;
+
+    /// Apply per-epoch schedules (LR decay, p_zero/b_BP stages).
+    /// Returns the effective learning rate for bookkeeping (0.0 where
+    /// the update has no LR, as in the int8 path).
+    fn begin_epoch(&mut self, epoch: usize) -> f32;
+
+    /// One minibatch update. `step_idx` is the global step counter (the
+    /// ZO seed-trick input); phase timings go into `timer`.
+    fn step(&mut self, b: &Batch, step_idx: u64, timer: &mut PhaseTimer) -> Result<StepOutcome>;
+
+    /// Mean loss and accuracy over a dataset.
+    fn evaluate(&mut self, data: &Dataset) -> Result<(f32, f32)>;
+
+    /// Extra fields for the verbose per-epoch line (current schedule
+    /// values etc.); empty by default. Read after the epoch's steps.
+    fn verbose_note(&self) -> String {
+        String::new()
+    }
+}
+
+/// Outcome of a training run.
+pub struct TrainResult {
+    pub history: History,
+    pub timer: PhaseTimer,
+    /// True iff the run ended early because [`TrainSpec::stop`] fired.
+    pub stopped: bool,
+}
+
+/// Drive a session through `spec.epochs` epochs — the single epoch loop
+/// behind every method × precision combination, `repro train`, every
+/// `exp` harness and the `serve` workers.
+pub fn run(
+    session: &mut dyn TrainSession,
+    spec: &TrainSpec,
+    train_data: &Dataset,
+    test_data: &Dataset,
+) -> Result<TrainResult> {
+    let mut history = History::new(&session.label());
+    let mut timer = PhaseTimer::new();
+    let mut step: u64 = 0;
+    let mut stopped = false;
+
+    'epochs: for epoch in 0..spec.epochs {
+        if spec.stop.should_stop() {
+            stopped = true;
+            break;
+        }
+        let epoch_t0 = std::time::Instant::now();
+        let lr = session.begin_epoch(epoch);
+        let mut epoch_loss = 0.0f64;
+        let mut nbatches = 0usize;
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+
+        for b in Loader::new(train_data, spec.batch, spec.seed ^ 0xDA7A, epoch as u64) {
+            if spec.stop.should_stop() {
+                stopped = true;
+                break 'epochs;
+            }
+            let out = session.step(&b, step, &mut timer)?;
+            epoch_loss += out.loss as f64;
+            correct += out.correct;
+            seen += out.seen;
+            nbatches += 1;
+            step += 1;
+        }
+
+        let is_last = epoch + 1 == spec.epochs;
+        let (test_loss, test_acc) = if epoch % spec.eval_every == 0 || is_last {
+            let t0 = std::time::Instant::now();
+            let r = session.evaluate(test_data)?;
+            timer.add(Phase::Eval, t0.elapsed());
+            r
+        } else {
+            // off-cadence epochs carry the previous eval forward
+            let prev = history.epochs.last();
+            (
+                prev.map(|e| e.test_loss).unwrap_or(f32::NAN),
+                prev.map(|e| e.test_acc).unwrap_or(0.0),
+            )
+        };
+
+        let stats = EpochStats {
+            epoch,
+            train_loss: (epoch_loss / nbatches.max(1) as f64) as f32,
+            test_loss,
+            train_acc: if seen > 0 { correct as f32 / seen as f32 } else { 0.0 },
+            test_acc,
+            lr,
+            seconds: epoch_t0.elapsed().as_secs_f64(),
+        };
+        if spec.verbose {
+            println!(
+                "[{}] epoch {:>3}  loss {:.4}  test_loss {:.4}  acc {:.2}%  train_acc {:.2}%  lr {:.5}{}",
+                history.label,
+                epoch,
+                stats.train_loss,
+                stats.test_loss,
+                stats.test_acc * 100.0,
+                stats.train_acc * 100.0,
+                lr,
+                session.verbose_note()
+            );
+        }
+        spec.progress.publish(&stats);
+        history.push(stats);
+    }
+
+    Ok(TrainResult { history, timer, stopped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist;
+
+    /// A deterministic no-train session for loop-behaviour tests.
+    struct FakeSession {
+        loss: f32,
+        evals: usize,
+        steps: usize,
+        epochs_begun: Vec<usize>,
+    }
+
+    impl FakeSession {
+        fn new() -> FakeSession {
+            FakeSession { loss: 2.0, evals: 0, steps: 0, epochs_begun: Vec::new() }
+        }
+    }
+
+    impl TrainSession for FakeSession {
+        fn label(&self) -> String {
+            "fake".to_string()
+        }
+        fn begin_epoch(&mut self, epoch: usize) -> f32 {
+            self.epochs_begun.push(epoch);
+            0.5
+        }
+        fn step(&mut self, b: &Batch, _s: u64, _t: &mut PhaseTimer) -> Result<StepOutcome> {
+            self.steps += 1;
+            self.loss *= 0.9;
+            Ok(StepOutcome { loss: self.loss, correct: b.bsz / 2, seen: b.bsz })
+        }
+        fn evaluate(&mut self, _d: &Dataset) -> Result<(f32, f32)> {
+            self.evals += 1;
+            Ok((1.0 / self.evals as f32, 0.25 * self.evals as f32))
+        }
+    }
+
+    #[test]
+    fn eval_cadence_carries_forward() {
+        let d = synth_mnist::generate(64, 1);
+        let spec = TrainSpec { epochs: 5, batch: 16, eval_every: 2, ..Default::default() };
+        let mut s = FakeSession::new();
+        let r = run(&mut s, &spec, &d, &d).unwrap();
+        assert_eq!(r.history.epochs.len(), 5);
+        // evals at epochs 0, 2, 4 only
+        assert_eq!(s.evals, 3);
+        let e = &r.history.epochs;
+        assert_eq!(e[1].test_acc, e[0].test_acc, "epoch 1 must carry epoch 0's eval");
+        assert_eq!(e[1].test_loss, e[0].test_loss);
+        assert_ne!(e[2].test_acc, e[1].test_acc);
+        assert_eq!(e[3].test_acc, e[2].test_acc);
+        // bookkeeping from the session
+        assert_eq!(s.epochs_begun, vec![0, 1, 2, 3, 4]);
+        assert_eq!(e[0].lr, 0.5);
+        assert!((e[0].train_acc - 0.5).abs() < 1e-6);
+        assert_eq!(s.steps, 5 * 4); // 64 samples / batch 16 = 4 per epoch
+    }
+
+    #[test]
+    fn stop_flag_ends_run_after_reporting_epoch() {
+        let d = synth_mnist::generate(32, 2);
+        let stop = StopFlag::new();
+        let stop2 = stop.clone();
+        let spec = TrainSpec {
+            epochs: 100,
+            batch: 16,
+            progress: ProgressSink::new(move |e| {
+                if e.epoch == 0 {
+                    stop2.request_stop();
+                }
+            }),
+            stop,
+            ..Default::default()
+        };
+        let mut s = FakeSession::new();
+        let r = run(&mut s, &spec, &d, &d).unwrap();
+        assert!(r.stopped);
+        assert_eq!(r.history.epochs.len(), 1, "must stop right after epoch 0");
+    }
+
+    #[test]
+    fn labels_cover_the_paper_grid() {
+        let mut spec = TrainSpec { method: Method::Cls1, ..Default::default() };
+        assert_eq!(spec.label(), "ZO-Feat-Cls1");
+        spec.precision = PrecisionSpec::int8(ZoGradMode::FloatCE);
+        assert_eq!(spec.label(), "ZO-Feat-Cls1 INT8");
+        spec.precision = PrecisionSpec::int8(ZoGradMode::IntCE);
+        assert_eq!(spec.label(), "ZO-Feat-Cls1 INT8*");
+    }
+
+    #[test]
+    fn spec_json_roundtrips_fp32_and_int8() {
+        let fp32 = TrainSpec {
+            method: Method::FullBp,
+            epochs: 7,
+            batch: 64,
+            lr0: 0.05,
+            eval_every: 3,
+            verbose: true,
+            ..Default::default()
+        };
+        let back = TrainSpec::from_json(&fp32.to_json()).unwrap();
+        assert_eq!(back.to_json(), fp32.to_json());
+
+        let int8 = TrainSpec {
+            method: Method::Cls2,
+            precision: PrecisionSpec::Int8 {
+                grad_mode: ZoGradMode::IntCE,
+                r_max: 31,
+                b_zo: 2,
+            },
+            epochs: 4,
+            seed: 9,
+            ..Default::default()
+        };
+        let v = int8.to_json();
+        assert_eq!(v.get("precision").as_str(), Some("int8*"));
+        assert_eq!(v.get("grad_mode").as_str(), Some("int"));
+        let back = TrainSpec::from_json(&v).unwrap();
+        assert_eq!(back.to_json(), v);
+        assert_eq!(back.precision, int8.precision);
+    }
+
+    #[test]
+    fn spec_json_grad_mode_refines_plain_int8() {
+        let v = crate::util::json::parse(
+            r#"{"precision": "int8", "grad_mode": "int", "method": "cls1"}"#,
+        )
+        .unwrap();
+        let spec = TrainSpec::from_json(&v).unwrap();
+        assert_eq!(spec.precision, PrecisionSpec::int8(ZoGradMode::IntCE));
+        assert_eq!(spec.precision.token(), "int8*");
+    }
+
+    #[test]
+    fn spec_json_rejects_unknown_keys_and_bad_values() {
+        for bad in [
+            r#"{"optimzer": "adam"}"#,
+            r#"{"precision": "bf16"}"#,
+            r#"{"epochs": 0}"#,
+            r#"{"eval_every": 0}"#,
+            r#"{"r_max": 0}"#,
+            r#"{"precision": "fp32", "grad_mode": "int"}"#,
+            r#"{"precision": "int8*", "grad_mode": "float"}"#,
+            r#"[1]"#,
+        ] {
+            let v = crate::util::json::parse(bad).unwrap();
+            assert!(TrainSpec::from_json(&v).is_err(), "should reject {bad}");
+        }
+    }
+}

@@ -1,5 +1,10 @@
-//! FP32 training loop — paper Alg. 1 for all four methods (Full ZO,
-//! ZO-Feat-Cls1/2, Full BP) over either engine.
+//! FP32 backend of the unified session API — paper Alg. 1 for all four
+//! methods over either engine.
+//!
+//! The epoch loop itself lives in [`super::session::run`]; this module
+//! contributes the per-minibatch FP32 work ([`Fp32Session`] wrapping an
+//! [`Engine`] + [`ParamSet`]) and the reusable pieces behind it
+//! ([`zo_step`], [`evaluate`]).
 //!
 //! Per-minibatch ElasticZO step:
 //!   1. sample the step seed (just the step counter mixed with the run
@@ -10,66 +15,21 @@
 //!   5. perturb by (ε − ηg)z — merged restore+update (paper §4)
 //!   6. BP the last L−C layers from the partition activation of the ℓ₋
 //!      pass and apply SGD.
+//!
+//! Full BP runs through the engine's fused `full_step`, whose returned
+//! logits keep train accuracy live on that path too.
 
-use super::control::{ProgressSink, StopFlag};
-use super::engine::{Engine, Method};
-use super::metrics::{EpochStats, History};
+use super::engine::{BpDepth, Engine};
 use super::params::ParamSet;
 use super::schedules::LrSchedule;
+use super::session::{self, StepOutcome, TrainResult, TrainSession, TrainSpec};
 use super::zo;
-use crate::data::loader::{eval_batches, Loader};
+use crate::data::loader::{eval_batches, Batch};
 use crate::data::Dataset;
 use crate::nn::loss::accuracy;
 use crate::telemetry::{Phase, PhaseTimer};
 use crate::tensor::ops;
 use anyhow::Result;
-
-#[derive(Debug, Clone)]
-pub struct TrainConfig {
-    pub method: Method,
-    pub epochs: usize,
-    pub batch: usize,
-    pub lr0: f32,
-    pub eps: f32,
-    pub g_clip: f32,
-    pub seed: u64,
-    /// Evaluate every N epochs (always evaluates the last).
-    pub eval_every: usize,
-    pub verbose: bool,
-    /// Cooperative cancellation; polled between batches and epochs.
-    pub stop: StopFlag,
-    /// Live per-epoch progress callback (armed by the `serve` workers).
-    pub progress: ProgressSink,
-}
-
-impl Default for TrainConfig {
-    fn default() -> Self {
-        TrainConfig {
-            method: Method::Cls1,
-            epochs: 10,
-            batch: 32,
-            lr0: 1e-3,
-            eps: 1e-2,
-            // SPSA's projected gradient scales like √d·|∇L| (d ≈ 10⁵
-            // here), so a tight clip is essential — the paper clips g
-            // to stabilize training (§5.1.1).
-            g_clip: 5.0,
-            seed: 1,
-            eval_every: 1,
-            verbose: false,
-            stop: StopFlag::default(),
-            progress: ProgressSink::default(),
-        }
-    }
-}
-
-/// Outcome of a training run.
-pub struct TrainResult {
-    pub history: History,
-    pub timer: PhaseTimer,
-    /// True iff the run ended early because [`TrainConfig::stop`] fired.
-    pub stopped: bool,
-}
 
 /// Evaluate mean loss and accuracy over a dataset.
 pub fn evaluate(
@@ -97,25 +57,26 @@ pub fn evaluate(
     ))
 }
 
-/// One ElasticZO/FullZO minibatch step. Returns the step's train loss
-/// and the number of correct predictions in this minibatch (from the
-/// ℓ₋-pass logits, which the step already produces).
-#[allow(clippy::too_many_arguments)]
+/// One ElasticZO/FullZO minibatch step (`spec.method` must be a ZO
+/// method). Returns the step's train loss and the number of correct
+/// predictions in this minibatch (from the ℓ₋-pass logits, which the
+/// step already produces).
 pub fn zo_step(
     engine: &mut dyn Engine,
     params: &mut ParamSet,
-    x: &[f32],
-    y: &[f32],
-    labels: &[u8],
-    bsz: usize,
+    b: &Batch,
     step: u64,
     lr: f32,
-    cfg: &TrainConfig,
+    spec: &TrainSpec,
     timer: &mut PhaseTimer,
 ) -> Result<(f32, usize)> {
-    let bp_layers = cfg.method.bp_layers();
-    let boundary = params.zo_boundary(bp_layers);
-    let (seed, eps) = (cfg.seed, cfg.eps);
+    let BpDepth::Tail(bp_tail) = spec.method.bp_depth() else {
+        anyhow::bail!("zo_step is undefined for Full BP (use Engine::full_step)");
+    };
+    let bsz = spec.batch;
+    let boundary = params.zo_boundary(bp_tail);
+    let (seed, eps) = (spec.seed, spec.eps);
+    let (x, y) = (&b.x, &b.y_onehot);
 
     let t0 = std::time::Instant::now();
     zo::perturb(params, boundary, seed, step, eps);
@@ -139,12 +100,12 @@ pub fn zo_step(
         f
     };
 
-    let g = zo::projected_gradient(fwd_plus.loss, fwd_minus.loss, eps, cfg.g_clip);
+    let g = zo::projected_gradient(fwd_plus.loss, fwd_minus.loss, eps, spec.g_clip);
 
     // train accuracy from the ℓ₋ logits (θ−εz is within O(ε) of θ, and
     // this pass's outputs are already in hand — no extra forward)
     let nclass = fwd_minus.logits.len() / bsz.max(1);
-    let (correct, _) = accuracy(&fwd_minus.logits, labels, bsz, nclass);
+    let (correct, _) = accuracy(&fwd_minus.logits, &b.labels, bsz, nclass);
 
     // merged restore + ZO update: θ += (ε − ηg)z
     let t0 = std::time::Instant::now();
@@ -153,9 +114,9 @@ pub fn zo_step(
 
     // BP tail from the ℓ₋ pass activations (paper keeps perturbed-pass
     // activations to avoid a third forward)
-    if bp_layers > 0 {
+    if bp_tail > 0 {
         let t0 = std::time::Instant::now();
-        let tails = engine.tail_grads(params, &fwd_minus, y, bp_layers, bsz)?;
+        let tails = engine.tail_grads(params, &fwd_minus, y, bp_tail, bsz)?;
         for (idx, grad) in tails {
             ops::axpy(-lr, &grad, &mut params.data[idx]);
         }
@@ -165,113 +126,106 @@ pub fn zo_step(
     Ok((0.5 * (fwd_plus.loss + fwd_minus.loss), correct))
 }
 
+/// FP32 implementation of [`TrainSession`]: ZO(+tail BP) steps via
+/// [`zo_step`], Full BP via the engine's fused `full_step`.
+pub struct Fp32Session<'a> {
+    engine: &'a mut dyn Engine,
+    params: &'a mut ParamSet,
+    spec: TrainSpec,
+    lr_sched: LrSchedule,
+    lr: f32,
+}
+
+impl<'a> Fp32Session<'a> {
+    pub fn new(
+        engine: &'a mut dyn Engine,
+        params: &'a mut ParamSet,
+        spec: &TrainSpec,
+    ) -> Result<Fp32Session<'a>> {
+        anyhow::ensure!(
+            matches!(spec.precision, session::PrecisionSpec::Fp32),
+            "Fp32Session requires a fp32 TrainSpec (got precision '{}')",
+            spec.precision.token()
+        );
+        Ok(Fp32Session {
+            engine,
+            params,
+            lr_sched: LrSchedule::paper_fp32(spec.lr0, spec.epochs),
+            lr: spec.lr0,
+            spec: spec.clone(),
+        })
+    }
+}
+
+impl TrainSession for Fp32Session<'_> {
+    fn label(&self) -> String {
+        self.spec.label()
+    }
+
+    fn begin_epoch(&mut self, epoch: usize) -> f32 {
+        self.lr = self.lr_sched.lr(epoch);
+        self.lr
+    }
+
+    fn step(&mut self, b: &Batch, step_idx: u64, timer: &mut PhaseTimer) -> Result<StepOutcome> {
+        match self.spec.method.bp_depth() {
+            BpDepth::All => {
+                let t0 = std::time::Instant::now();
+                let out = self.engine.full_step(
+                    self.params,
+                    &b.x,
+                    &b.y_onehot,
+                    self.spec.batch,
+                    self.lr,
+                )?;
+                timer.add(Phase::BpStep, t0.elapsed());
+                let (correct, seen) = match &out.logits {
+                    Some(logits) => {
+                        let nclass = logits.len() / self.spec.batch.max(1);
+                        let (c, t) = accuracy(logits, &b.labels, self.spec.batch, nclass);
+                        (c, t)
+                    }
+                    None => (0, 0),
+                };
+                Ok(StepOutcome { loss: out.loss, correct, seen })
+            }
+            BpDepth::Tail(_) => {
+                let (loss, correct) =
+                    zo_step(self.engine, self.params, b, step_idx, self.lr, &self.spec, timer)?;
+                Ok(StepOutcome { loss, correct, seen: self.spec.batch })
+            }
+        }
+    }
+
+    fn evaluate(&mut self, data: &Dataset) -> Result<(f32, f32)> {
+        evaluate(self.engine, self.params, data, self.spec.batch)
+    }
+}
+
 /// Train with any method; returns per-epoch history + phase breakdown.
+/// Thin wrapper: builds an [`Fp32Session`] and hands it to the one
+/// generic loop in [`session::run`].
 pub fn train(
     engine: &mut dyn Engine,
     params: &mut ParamSet,
     train_data: &Dataset,
     test_data: &Dataset,
-    cfg: &TrainConfig,
+    spec: &TrainSpec,
 ) -> Result<TrainResult> {
-    let mut history = History::new(cfg.method.label());
-    let mut timer = PhaseTimer::new();
-    let lr_sched = LrSchedule::paper_fp32(cfg.lr0, cfg.epochs);
-    let mut step: u64 = 0;
-    let mut stopped = false;
-
-    'epochs: for epoch in 0..cfg.epochs {
-        if cfg.stop.should_stop() {
-            stopped = true;
-            break;
-        }
-        let epoch_t0 = std::time::Instant::now();
-        let lr = lr_sched.lr(epoch);
-        let mut epoch_loss = 0.0f64;
-        let mut nbatches = 0usize;
-        let mut correct = 0usize;
-        let mut seen = 0usize;
-
-        let loader = Loader::new(train_data, cfg.batch, cfg.seed ^ 0xDA7A, epoch as u64);
-        for b in loader {
-            if cfg.stop.should_stop() {
-                stopped = true;
-                break 'epochs;
-            }
-            let loss = match cfg.method {
-                Method::FullBp => {
-                    let t0 = std::time::Instant::now();
-                    let l = engine.full_step(params, &b.x, &b.y_onehot, cfg.batch, lr)?;
-                    timer.add(Phase::BpStep, t0.elapsed());
-                    l
-                }
-                _ => {
-                    let (l, c) = zo_step(
-                        engine, params, &b.x, &b.y_onehot, &b.labels, cfg.batch, step, lr,
-                        cfg, &mut timer,
-                    )?;
-                    correct += c;
-                    seen += cfg.batch;
-                    l
-                }
-            };
-            epoch_loss += loss as f64;
-            nbatches += 1;
-            step += 1;
-        }
-
-        let is_last = epoch + 1 == cfg.epochs;
-        let (test_loss, test_acc) = if epoch % cfg.eval_every == 0 || is_last {
-            let t0 = std::time::Instant::now();
-            let r = evaluate(engine, params, test_data, cfg.batch)?;
-            timer.add(Phase::Eval, t0.elapsed());
-            r
-        } else {
-            let prev = history.epochs.last();
-            (
-                prev.map(|e| e.test_loss).unwrap_or(f32::NAN),
-                prev.map(|e| e.test_acc).unwrap_or(0.0),
-            )
-        };
-
-        let stats = EpochStats {
-            epoch,
-            train_loss: (epoch_loss / nbatches.max(1) as f64) as f32,
-            test_loss,
-            // Full BP steps through a fused engine call that exposes no
-            // logits, so train accuracy is only available on ZO paths.
-            train_acc: if seen > 0 { correct as f32 / seen as f32 } else { 0.0 },
-            test_acc,
-            lr,
-            seconds: epoch_t0.elapsed().as_secs_f64(),
-        };
-        if cfg.verbose {
-            println!(
-                "[{}] epoch {:>3}  loss {:.4}  test_loss {:.4}  acc {:.2}%  train_acc {:.2}%  lr {:.5}",
-                cfg.method.label(),
-                epoch,
-                stats.train_loss,
-                stats.test_loss,
-                stats.test_acc * 100.0,
-                stats.train_acc * 100.0,
-                lr
-            );
-        }
-        cfg.progress.publish(&stats);
-        history.push(stats);
-    }
-
-    Ok(TrainResult { history, timer, stopped })
+    let mut s = Fp32Session::new(engine, params, spec)?;
+    session::run(&mut s, spec, train_data, test_data)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::Method;
     use crate::coordinator::native_engine::NativeEngine;
     use crate::coordinator::params::Model;
     use crate::data::synth_mnist;
 
-    fn tiny_cfg(method: Method, epochs: usize) -> TrainConfig {
-        TrainConfig {
+    fn tiny_spec(method: Method, epochs: usize) -> TrainSpec {
+        TrainSpec {
             method,
             epochs,
             batch: 16,
@@ -291,11 +245,30 @@ mod tests {
         let test_d = synth_mnist::generate(128, 2);
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 3);
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::FullBp, 3))
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::FullBp, 3))
             .unwrap();
         assert!(r.history.best_test_acc() > 0.5, "acc {}", r.history.best_test_acc());
         // loss must fall
         assert!(r.history.epochs[2].train_loss < r.history.epochs[0].train_loss);
+    }
+
+    #[test]
+    fn full_bp_train_acc_is_live() {
+        // regression: the fused full_step now returns logits, so the
+        // Full-BP path reports train accuracy like every other cell of
+        // the method×precision grid (closes the ROADMAP open item)
+        let train_d = synth_mnist::generate(256, 61);
+        let test_d = synth_mnist::generate(64, 62);
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 63);
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::FullBp, 2))
+            .unwrap();
+        let last = r.history.epochs.last().unwrap();
+        assert!(
+            last.train_acc > 0.0 && last.train_acc <= 1.0,
+            "Full BP train_acc must be live, got {}",
+            last.train_acc
+        );
     }
 
     #[test]
@@ -305,7 +278,7 @@ mod tests {
         let test_d = synth_mnist::generate(64, 5);
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 6);
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::FullZo, 4))
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::FullZo, 4))
             .unwrap();
         let first = r.history.epochs.first().unwrap().train_loss;
         let last = r.history.epochs.last().unwrap().train_loss;
@@ -320,7 +293,7 @@ mod tests {
         let mut params = ParamSet::init(Model::LeNet, 10);
         let before_fc3 = params.data[8].clone();
         let before_conv1 = params.data[0].clone();
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::Cls1, 2))
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::Cls1, 2))
             .unwrap();
         assert_ne!(params.data[8], before_fc3, "BP tail must move");
         assert_ne!(params.data[0], before_conv1, "ZO layers must move");
@@ -334,7 +307,7 @@ mod tests {
         let test_d = synth_mnist::generate(32, 32);
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 33);
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::FullBp, 1))
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::FullBp, 1))
             .unwrap();
         assert!(r.timer.total(Phase::BpStep).as_nanos() > 0);
         // the fused step must NOT be misfiled under Forward (only eval
@@ -348,7 +321,7 @@ mod tests {
         let test_d = synth_mnist::generate(64, 42);
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 43);
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::Cls1, 2))
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::Cls1, 2))
             .unwrap();
         let last = r.history.epochs.last().unwrap();
         assert!(
@@ -367,7 +340,7 @@ mod tests {
         let mut params = ParamSet::init(Model::LeNet, 53);
         let stop = StopFlag::new();
         let stop2 = stop.clone();
-        let cfg = TrainConfig {
+        let spec = TrainSpec {
             // fire cancellation as soon as the first epoch reports
             progress: ProgressSink::new(move |e| {
                 if e.epoch == 0 {
@@ -375,9 +348,9 @@ mod tests {
                 }
             }),
             stop,
-            ..tiny_cfg(Method::FullBp, 50)
+            ..tiny_spec(Method::FullBp, 50)
         };
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &cfg).unwrap();
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &spec).unwrap();
         assert!(r.stopped);
         assert_eq!(r.history.epochs.len(), 1, "must stop right after epoch 0");
     }
@@ -389,11 +362,24 @@ mod tests {
         let test_d = synth_mnist::generate(32, 12);
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 13);
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_cfg(Method::Cls1, 1))
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::Cls1, 1))
             .unwrap();
         let fwd = r.timer.total(Phase::Forward).as_secs_f64();
         let zo = r.timer.total(Phase::ZoPerturb).as_secs_f64()
             + r.timer.total(Phase::ZoUpdate).as_secs_f64();
         assert!(fwd > zo, "forward {fwd} should dominate zo {zo}");
+    }
+
+    #[test]
+    fn fp32_session_rejects_int8_spec() {
+        use crate::coordinator::int8_trainer::ZoGradMode;
+        use crate::coordinator::session::PrecisionSpec;
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 70);
+        let spec = TrainSpec {
+            precision: PrecisionSpec::int8(ZoGradMode::FloatCE),
+            ..Default::default()
+        };
+        assert!(Fp32Session::new(&mut eng, &mut params, &spec).is_err());
     }
 }

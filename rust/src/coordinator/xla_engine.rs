@@ -3,7 +3,7 @@
 //! authored the computation once at build time; every call here is pure
 //! rust → PJRT.
 
-use super::engine::Engine;
+use super::engine::{Engine, StepOut};
 use super::params::{Model, ParamSet};
 use crate::nn::{Forward, TailGrads};
 use crate::runtime::{ArgValue, Registry};
@@ -149,7 +149,7 @@ impl Engine for XlaEngine {
         y: &[f32],
         bsz: usize,
         lr: f32,
-    ) -> Result<f32> {
+    ) -> Result<StepOut> {
         self.check_bsz(bsz)?;
         let name = self.step_name.clone();
         let exe = self.registry.get(&name)?;
@@ -163,7 +163,16 @@ impl Engine for XlaEngine {
         for (i, o) in out[..n].iter().enumerate() {
             params.data[i].copy_from_slice(o.as_f32()?);
         }
-        out[n].scalar_f32()
+        let loss = out[n].scalar_f32()?;
+        // Step artifacts compiled by the current python pipeline emit
+        // the pre-step logits after the loss; older artifact sets stop
+        // at the loss, in which case Full-BP train accuracy is simply
+        // unreported (never wrong).
+        let logits = match out.get(n + 1) {
+            Some(o) => Some(o.as_f32()?.to_vec()),
+            None => None,
+        };
+        Ok(StepOut { loss, logits })
     }
 
     fn name(&self) -> &'static str {

@@ -8,9 +8,10 @@
 
 use super::{dump_result, Scale};
 use crate::coordinator::engine::Method;
-use crate::coordinator::int8_trainer::{self, Int8TrainConfig, ZoGradMode};
+use crate::coordinator::int8_trainer::{self, ZoGradMode};
 use crate::coordinator::native_engine::NativeEngine;
-use crate::coordinator::trainer::{self, TrainConfig};
+use crate::coordinator::session::{PrecisionSpec, TrainSpec};
+use crate::coordinator::trainer;
 use crate::coordinator::{Model, ParamSet};
 use crate::data::{self, DatasetKind};
 use crate::int8::lenet8;
@@ -51,8 +52,8 @@ pub fn run(scale: Scale) -> Result<()> {
     for method in [Method::FullZo, Method::Cls2, Method::Cls1] {
         let mut engine = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 1);
-        let cfg = TrainConfig { method, epochs, batch: 32, ..Default::default() };
-        let r = trainer::train(&mut engine, &mut params, &train_d, &test_d, &cfg)?;
+        let spec = TrainSpec { method, epochs, batch: 32, ..Default::default() };
+        let r = trainer::train(&mut engine, &mut params, &train_d, &test_d, &spec)?;
         let secs: f64 = r.history.epochs.iter().map(|e| e.seconds).sum::<f64>()
             / r.history.epochs.len() as f64;
         if method == Method::FullZo {
@@ -76,14 +77,14 @@ pub fn run(scale: Scale) -> Result<()> {
     let mut int8_epoch_secs = 0.0;
     for method in [Method::FullZo, Method::Cls2, Method::Cls1] {
         let mut ws = lenet8::init_params(2, 32);
-        let cfg = Int8TrainConfig {
+        let spec = TrainSpec {
             method,
-            grad_mode: ZoGradMode::IntCE,
+            precision: PrecisionSpec::int8(ZoGradMode::IntCE),
             epochs,
             batch: 32,
             ..Default::default()
         };
-        let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &cfg)?;
+        let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &spec)?;
         let secs: f64 = r.history.epochs.iter().map(|e| e.seconds).sum::<f64>()
             / r.history.epochs.len() as f64;
         if method == Method::FullZo {

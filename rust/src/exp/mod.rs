@@ -21,9 +21,10 @@ pub mod table1;
 pub mod table2;
 
 use crate::coordinator::engine::{EngineKind, Method};
-use crate::coordinator::int8_trainer::{self, Int8TrainConfig, ZoGradMode};
+use crate::coordinator::int8_trainer::{self, ZoGradMode};
 use crate::coordinator::native_engine::NativeEngine;
-use crate::coordinator::trainer::{self, TrainConfig, TrainResult};
+use crate::coordinator::session::{PrecisionSpec, TrainResult, TrainSpec};
+use crate::coordinator::trainer;
 #[cfg(feature = "xla")]
 use crate::coordinator::xla_engine::XlaEngine;
 use crate::coordinator::{Engine, Model, ParamSet};
@@ -174,13 +175,13 @@ pub fn build_engine_at(
 
 /// Per-method FP32 hyper-parameters (paper §5.1.1 shapes, pre-tuned on
 /// the synthetic datasets).
-pub fn fp32_train_config(method: Method, epochs: usize, batch: usize, seed: u64) -> TrainConfig {
+pub fn fp32_train_spec(method: Method, epochs: usize, batch: usize, seed: u64) -> TrainSpec {
     let lr0 = match method {
         Method::FullBp => 0.05,
         Method::Cls1 | Method::Cls2 => 2e-3,
         Method::FullZo => 2e-3,
     };
-    TrainConfig {
+    TrainSpec {
         method,
         epochs,
         batch,
@@ -213,8 +214,8 @@ pub fn run_fp32(
     let (train_d, test_d) = data::generate(kind, train_n, test_n, seed, npoints);
     let mut engine = build_engine(model, batch, engine_kind);
     let mut params = ParamSet::init(model, seed ^ 0xC0FFEE);
-    let cfg = fp32_train_config(method, epochs, batch, seed);
-    trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &cfg)
+    let spec = fp32_train_spec(method, epochs, batch, seed);
+    trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &spec)
 }
 
 /// One INT8 training run (fresh NITI weights). LeNet only, as in the paper.
@@ -227,22 +228,20 @@ pub fn run_int8(
     train_n: usize,
     test_n: usize,
     seed: u64,
-) -> Result<int8_trainer::Int8TrainResult> {
+) -> Result<TrainResult> {
     let (train_d, test_d) = data::generate(kind, train_n, test_n, seed, 0);
     let mut ws: Vec<QTensor> = lenet8::init_params(seed ^ 0xC0FFEE, 32);
-    let cfg = Int8TrainConfig {
+    let spec = TrainSpec {
         method,
-        grad_mode,
+        precision: PrecisionSpec::int8(grad_mode),
         epochs,
         batch,
-        r_max: 15,
-        b_zo: 1,
         seed,
         eval_every: 1,
         verbose: std::env::var("REPRO_VERBOSE").is_ok(),
         ..Default::default()
     };
-    int8_trainer::train_int8(&mut ws, &train_d, &test_d, &cfg)
+    int8_trainer::train_int8(&mut ws, &train_d, &test_d, &spec)
 }
 
 /// Generate rotated fine-tuning splits (paper Table 2 protocol).

@@ -7,9 +7,10 @@
 //! split directly. Shape check: fine-tuning recovers most of the
 //! rotation-induced drop, ordering Full ZO < Cls2 ≈ Cls1 < Full BP.
 
-use super::{build_engine, dump_result, fp32_train_config, rotated_splits, Scale};
+use super::{build_engine, dump_result, fp32_train_spec, rotated_splits, Scale};
 use crate::coordinator::engine::{EngineKind, Method};
-use crate::coordinator::int8_trainer::{self, Int8TrainConfig, ZoGradMode};
+use crate::coordinator::int8_trainer::{self, ZoGradMode};
+use crate::coordinator::session::{PrecisionSpec, TrainSpec};
 use crate::coordinator::{trainer, Model, ParamSet};
 use crate::data::{self, DatasetKind};
 use crate::int8::lenet8;
@@ -40,19 +41,20 @@ pub fn run(scale: Scale, engine_kind: EngineKind) -> Result<()> {
         // FP32 pretrain: Full BP
         let mut engine = build_engine(Model::LeNet, 32, engine_kind);
         let mut params = ParamSet::init(Model::LeNet, 500 + di as u64);
-        let cfg = fp32_train_config(Method::FullBp, scale.ft_epochs().min(8), 32, 77);
-        trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &cfg)?;
+        let spec = fp32_train_spec(Method::FullBp, scale.ft_epochs().min(8), 32, 77);
+        trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &spec)?;
         fp32_pre.push(params);
         // INT8 pretrain: NITI full BP
         let mut ws = lenet8::init_params(600 + di as u64, 32);
-        let icfg = Int8TrainConfig {
+        let ispec = TrainSpec {
             method: Method::FullBp,
+            precision: PrecisionSpec::int8(ZoGradMode::FloatCE),
             epochs: scale.int8_epochs().min(10),
             batch: 32,
             seed: 77,
             ..Default::default()
         };
-        int8_trainer::train_int8(&mut ws, &train_d, &test_d, &icfg)?;
+        int8_trainer::train_int8(&mut ws, &train_d, &test_d, &ispec)?;
         int8_pre.push(ws);
     }
 
@@ -83,9 +85,9 @@ pub fn run(scale: Scale, engine_kind: EngineKind) -> Result<()> {
                     ("fp32", Some(method)) => {
                         let mut engine = build_engine(Model::LeNet, 32, engine_kind);
                         let mut params = fp32_pre[di].clone();
-                        let cfg = fp32_train_config(method, scale.ft_epochs(), 32, 90 + ci as u64);
+                        let spec = fp32_train_spec(method, scale.ft_epochs(), 32, 90 + ci as u64);
                         let r = trainer::train(
-                            engine.as_mut(), &mut params, &ft_train, &ft_test, &cfg,
+                            engine.as_mut(), &mut params, &ft_train, &ft_test, &spec,
                         )?;
                         r.history.best_test_acc()
                     }
@@ -94,15 +96,15 @@ pub fn run(scale: Scale, engine_kind: EngineKind) -> Result<()> {
                     }
                     ("int8", Some(method)) => {
                         let mut ws = int8_pre[di].clone();
-                        let icfg = Int8TrainConfig {
+                        let ispec = TrainSpec {
                             method,
-                            grad_mode: ZoGradMode::FloatCE,
+                            precision: PrecisionSpec::int8(ZoGradMode::FloatCE),
                             epochs: scale.ft_epochs(),
                             batch: 32,
                             seed: 91 + ci as u64,
                             ..Default::default()
                         };
-                        let r = int8_trainer::train_int8(&mut ws, &ft_train, &ft_test, &icfg)?;
+                        let r = int8_trainer::train_int8(&mut ws, &ft_train, &ft_test, &ispec)?;
                         r.history.best_test_acc()
                     }
                     _ => unreachable!(),

@@ -1,0 +1,109 @@
+//! The precision-agnostic run launcher: one [`Config`] in, one
+//! [`TrainResult`] out.
+//!
+//! This is the single place that turns a validated config into a
+//! running session — dataset generation, backend construction (engine +
+//! params for FP32, NITI weights for INT8), checkpoint load/save, and
+//! the dispatch into the unified `coordinator::session` loop. Both the
+//! `repro train` CLI and every `serve` worker go through [`run`], so a
+//! job spec and a command line can never drift apart.
+
+use crate::config::{Config, Precision};
+use crate::coordinator::control::{ProgressSink, StopFlag};
+use crate::coordinator::session::TrainResult;
+use crate::coordinator::{checkpoint, int8_trainer, trainer, ParamSet};
+use crate::data;
+use crate::exp;
+use crate::int8::lenet8;
+use anyhow::Result;
+
+/// Outcome of a launched run.
+pub struct Launch {
+    pub result: TrainResult,
+    /// Backend label for logs: the engine name for FP32 runs,
+    /// `"niti-int8"` for the int8 path.
+    pub engine: String,
+}
+
+/// Run one training job to completion (or cancellation): the exact
+/// same path behind `repro train` and the `serve` worker pool.
+pub fn run(cfg: &Config, stop: StopFlag, progress: ProgressSink) -> Result<Launch> {
+    let (train_d, test_d) =
+        data::generate(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed, cfg.npoints);
+    let mut spec = cfg.train_spec();
+    spec.stop = stop;
+    spec.progress = progress;
+
+    match cfg.precision {
+        Precision::Fp32 => {
+            let model = cfg.model_enum();
+            let mut engine =
+                exp::build_engine_at(model, cfg.batch, cfg.engine, cfg.artifacts_dir.as_deref());
+            let mut params = ParamSet::init(model, cfg.seed ^ 0xC0FFEE);
+            if let Some(path) = &cfg.load_checkpoint {
+                checkpoint::load_params(path, &mut params)?;
+            }
+            let result = trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &spec)?;
+            if let (Some(path), false) = (&cfg.save_checkpoint, result.stopped) {
+                checkpoint::save_params(path, &params)?;
+            }
+            Ok(Launch { result, engine: engine.name().to_string() })
+        }
+        Precision::Int8 | Precision::Int8Star => {
+            let mut ws = lenet8::init_params(cfg.seed ^ 0xC0FFEE, cfg.r_max.max(16));
+            if let Some(path) = &cfg.load_checkpoint {
+                ws = checkpoint::load_int8(path)?;
+            }
+            let result = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &spec)?;
+            if let (Some(path), false) = (&cfg.save_checkpoint, result.stopped) {
+                let names: Vec<&str> = lenet8::PARAM_SPECS.iter().map(|(n, _)| *n).collect();
+                checkpoint::save_int8(path, &names, &ws)?;
+            }
+            Ok(Launch { result, engine: "niti-int8".to_string() })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(precision: &str, method: &str) -> Config {
+        let mut cfg = Config::default();
+        cfg.set("engine", "native").unwrap();
+        cfg.set("precision", precision).unwrap();
+        cfg.set("method", method).unwrap();
+        cfg.set("epochs", "1").unwrap();
+        cfg.set("batch", "16").unwrap();
+        cfg.set("train_n", "48").unwrap();
+        cfg.set("test_n", "32").unwrap();
+        cfg.validate().unwrap();
+        cfg
+    }
+
+    #[test]
+    fn all_four_methods_run_on_both_precisions() {
+        for method in ["full-zo", "cls1", "cls2", "full-bp"] {
+            for precision in ["fp32", "int8", "int8*"] {
+                let cfg = tiny_cfg(precision, method);
+                let l = run(&cfg, StopFlag::default(), ProgressSink::default())
+                    .unwrap_or_else(|e| panic!("{precision}/{method}: {e:#}"));
+                assert_eq!(l.result.history.epochs.len(), 1, "{precision}/{method}");
+                assert!(!l.result.stopped);
+            }
+        }
+    }
+
+    #[test]
+    fn fp32_full_bp_reports_live_train_acc() {
+        // acceptance: Full BP drives the unified loop with nonzero
+        // train accuracy (the full_step logits ABI)
+        let mut cfg = tiny_cfg("fp32", "full-bp");
+        cfg.set("epochs", "2").unwrap();
+        cfg.set("train_n", "128").unwrap();
+        cfg.set("lr", "0.05").unwrap();
+        let l = run(&cfg, StopFlag::default(), ProgressSink::default()).unwrap();
+        let last = l.result.history.epochs.last().unwrap();
+        assert!(last.train_acc > 0.0, "Full BP train_acc must be live");
+    }
+}

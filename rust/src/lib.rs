@@ -32,6 +32,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod int8;
+pub mod launch;
 pub mod memory;
 pub mod nn;
 pub mod rng;

@@ -22,11 +22,12 @@
 
 use anyhow::Result;
 use elasticzo::config::{Config, Precision};
-use elasticzo::coordinator::int8_trainer::{self, Int8TrainConfig};
-use elasticzo::coordinator::{checkpoint, trainer, Method, ParamSet, TrainConfig};
+use elasticzo::coordinator::control::{ProgressSink, StopFlag};
+use elasticzo::coordinator::int8_trainer;
+use elasticzo::coordinator::{checkpoint, trainer, Method, ParamSet};
 use elasticzo::data;
 use elasticzo::exp::{self, Scale};
-use elasticzo::int8::lenet8;
+use elasticzo::launch;
 use elasticzo::serve;
 use elasticzo::util::cli::Args;
 
@@ -65,7 +66,8 @@ fn print_help() {
          \n  repro train  [--model lenet|pointnet] [--method full-zo|cls1|cls2|full-bp]\n\
          \x20              [--dataset mnist|fashion|modelnet] [--engine xla|native]\n\
          \x20              [--precision fp32|int8|int8*] [--epochs N] [--batch N] [--lr F]\n\
-         \x20              [--save ckpt] [--load ckpt] [--config file.json] [--verbose]\n\
+         \x20              [--eval-every N] [--save ckpt] [--load ckpt] [--config file.json]\n\
+         \x20              [--verbose]\n\
          \x20 repro eval   --load ckpt [--dataset D] [--rotate DEG] [--precision P]\n\
          \x20 repro exp    table1|table2|fig2..fig7|all [--fast|--paper] [--engine E]\n\
          \x20 repro memory [--model M] [--batch N] [--precision fp32|int8] [--adam]\n\
@@ -82,84 +84,37 @@ fn print_help() {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = Config::from_args(args)?;
+    let mut cfg = Config::from_args(args)?;
+    cfg.verbose = true; // CLI runs always stream per-epoch lines
     if let Some(dir) = &cfg.artifacts_dir {
         std::env::set_var("REPRO_ARTIFACTS", dir);
     }
-    let (train_d, test_d) =
-        data::generate(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed, cfg.npoints);
     println!(
         "train: model={} dataset={} method={} precision={} engine={:?} epochs={} batch={}",
         cfg.model,
-        train_d.name,
+        cfg.dataset.token(),
         cfg.method.label(),
         cfg.precision.label(),
         cfg.engine,
         cfg.epochs,
         cfg.batch
     );
+    if let Some(path) = &cfg.load_checkpoint {
+        println!("loading checkpoint {path}");
+    }
 
-    match cfg.precision {
-        Precision::Fp32 => {
-            let model = cfg.model_enum();
-            let mut engine = exp::build_engine(model, cfg.batch, cfg.engine);
-            let mut params = ParamSet::init(model, cfg.seed ^ 0xC0FFEE);
-            if let Some(path) = &cfg.load_checkpoint {
-                checkpoint::load_params(path, &mut params)?;
-                println!("loaded checkpoint {path}");
-            }
-            let tcfg = TrainConfig {
-                method: cfg.method,
-                epochs: cfg.epochs,
-                batch: cfg.batch,
-                lr0: cfg.lr,
-                eps: cfg.eps,
-                g_clip: cfg.g_clip,
-                seed: cfg.seed,
-                eval_every: 1,
-                verbose: true,
-                ..Default::default()
-            };
-            let r = trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &tcfg)?;
-            println!(
-                "done: best test acc {:.2}% (engine {})",
-                r.history.best_test_acc() * 100.0,
-                engine.name()
-            );
-            println!("{}", r.timer.report("phase breakdown"));
-            if let Some(path) = &cfg.save_checkpoint {
-                checkpoint::save_params(path, &params)?;
-                println!("saved checkpoint {path}");
-            }
-        }
-        Precision::Int8 | Precision::Int8Star => {
-            let mut ws = lenet8::init_params(cfg.seed ^ 0xC0FFEE, cfg.r_max.max(16));
-            if let Some(path) = &cfg.load_checkpoint {
-                ws = checkpoint::load_int8(path)?;
-                println!("loaded checkpoint {path}");
-            }
-            let icfg = Int8TrainConfig {
-                method: cfg.method,
-                grad_mode: cfg.precision.grad_mode(),
-                epochs: cfg.epochs,
-                batch: cfg.batch,
-                r_max: cfg.r_max,
-                b_zo: cfg.b_zo,
-                seed: cfg.seed,
-                eval_every: 1,
-                verbose: true,
-                ..Default::default()
-            };
-            let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &icfg)?;
-            println!("done: best test acc {:.2}%", r.history.best_test_acc() * 100.0);
-            println!("{}", r.timer.report("phase breakdown"));
-            if let Some(path) = &cfg.save_checkpoint {
-                let names: Vec<&str> =
-                    lenet8::PARAM_SPECS.iter().map(|(n, _)| *n).collect();
-                checkpoint::save_int8(path, &names, &ws)?;
-                println!("saved checkpoint {path}");
-            }
-        }
+    // the precision dispatch, session setup and checkpoint plumbing all
+    // live in launch::run — the exact path the serve workers drive
+    let l = launch::run(&cfg, StopFlag::default(), ProgressSink::default())?;
+    println!(
+        "done: best test acc {:.2}% (engine {})",
+        l.result.history.best_test_acc() * 100.0,
+        l.engine
+    );
+    println!("{}", l.result.timer.report("phase breakdown"));
+    // launch::run skips the save when a run is stopped mid-way
+    if let (Some(path), false) = (&cfg.save_checkpoint, l.result.stopped) {
+        println!("saved checkpoint {path}");
     }
     Ok(())
 }

@@ -14,9 +14,10 @@
 //! * [`registry`] — in-memory job table (Queued→Running→Done/Failed/
 //!   Cancelled), per-epoch history snapshots, aggregate `ServerStats`
 //!   rolled up from each job's `telemetry::PhaseTimer`.
-//! * [`worker`]   — N OS threads running the exact `cmd_train` paths with
-//!   a cooperative [`crate::coordinator::StopFlag`] and a registry-backed
-//!   progress sink threaded into the train configs.
+//! * [`worker`]   — N OS threads running the exact `repro train` path
+//!   (`launch::run` into the unified `coordinator::session` loop) with a
+//!   cooperative [`crate::coordinator::StopFlag`] and a registry-backed
+//!   progress sink armed on each job's `TrainSpec`.
 //! * [`http`]     — `TcpListener` front end (GET /jobs, GET /jobs/{id},
 //!   POST /jobs, POST /jobs/{id}/cancel, GET /stats, GET /healthz,
 //!   POST /shutdown) plus the tiny client used by `repro submit|jobs|job`.

@@ -2,13 +2,18 @@
 //! `util::json` substrate: no serde, hand-rolled (de)serialization.
 //!
 //! A job spec is a flat JSON object. Two keys are server-level
-//! (`name`, `priority`); every other key is a training-config key with
-//! exactly the `repro train` semantics (`model`, `dataset`, `method`,
-//! `precision`, `engine`, `epochs`, `batch`, `lr`, `eps`, `seed`,
-//! `r_max`, `b_zo`, `train_n`, `test_n`, `npoints`, `save`, `load`, …),
-//! so everything the CLI can run, the server can schedule.
+//! (`name`, `priority`); the training keys are exactly one serialized
+//! `coordinator::session::TrainSpec` (method, combined precision token,
+//! `grad_mode`, epochs/batch/lr/eps/seed/eval_every, int8 knobs — no
+//! fp32/int8 union, one spec shape for every cell of the paper's grid);
+//! the rest are data/backend keys with the `repro train` semantics
+//! (`model`, `dataset`, `engine`, `train_n`, `test_n`, `npoints`,
+//! `ncls`, `artifacts`, `save`, `load`). Everything the CLI can run,
+//! the server can schedule.
 
-use crate::config::{scalar_to_string, Config};
+use crate::config::{scalar_to_string, Config, Precision};
+use crate::coordinator::session::resolve_grad_mode;
+use crate::coordinator::ZoGradMode;
 use crate::util::json::Value;
 use anyhow::{Context, Result};
 
@@ -32,15 +37,26 @@ impl JobSpec {
     }
 
     /// Parse a submit body. Unknown keys and invalid combinations are
-    /// rejected with context (surfaced to the client as a 400).
+    /// rejected with context (surfaced to the client as a 400). The
+    /// `precision` × `grad_mode` pair (the [`ZoGradMode::token`] form a
+    /// serialized `TrainSpec` carries) is resolved through the same
+    /// [`resolve_grad_mode`] rule as `TrainSpec::from_json`, so the two
+    /// layers can never disagree: a `"int"` token refines a plain
+    /// `int8` precision to INT8*, true conflicts fail loudly.
     pub fn from_json(v: &Value) -> Result<JobSpec> {
         let obj = v.as_obj().context("job spec must be a JSON object")?;
         let mut spec = JobSpec::new(Config::default());
+        let mut grad_mode: Option<ZoGradMode> = None;
         for (k, val) in obj {
             match k.as_str() {
                 "name" => spec.name = val.as_str().context("name must be a string")?.to_string(),
                 "priority" => {
                     spec.priority = val.as_i64().context("priority must be a number")?
+                }
+                "grad_mode" | "grad-mode" => {
+                    grad_mode = Some(ZoGradMode::parse(
+                        val.as_str().context("grad_mode must be a string")?,
+                    )?)
                 }
                 key => {
                     let s = scalar_to_string(val)
@@ -49,45 +65,51 @@ impl JobSpec {
                 }
             }
         }
+        if grad_mode.is_some() {
+            let resolved = resolve_grad_mode(
+                spec.config.precision != Precision::Fp32,
+                spec.config.precision == Precision::Int8Star,
+                grad_mode,
+            )?;
+            if resolved == ZoGradMode::IntCE {
+                spec.config.precision = Precision::Int8Star;
+            }
+        }
         spec.config.validate()?;
         Ok(spec)
     }
 
-    /// Serialize back to the same flat shape `from_json` accepts.
+    /// Serialize back to the same flat shape `from_json` accepts: the
+    /// training keys come from the one unified
+    /// [`crate::coordinator::TrainSpec`] serializer, with the server
+    /// and data/backend keys merged alongside.
     pub fn to_json(&self) -> Value {
         let c = &self.config;
-        let mut pairs = vec![
-            ("name", Value::str(self.name.clone())),
-            ("priority", Value::num(self.priority as f64)),
-            ("model", Value::str(c.model.clone())),
-            ("dataset", Value::str(c.dataset.token())),
-            ("method", Value::str(c.method.token())),
-            ("precision", Value::str(c.precision.token())),
-            ("engine", Value::str(c.engine.token())),
-            ("epochs", Value::num(c.epochs as f64)),
-            ("batch", Value::num(c.batch as f64)),
-            ("lr", Value::num(c.lr as f64)),
-            ("eps", Value::num(c.eps as f64)),
-            ("g_clip", Value::num(c.g_clip as f64)),
-            ("r_max", Value::num(c.r_max as f64)),
-            ("b_zo", Value::num(c.b_zo as f64)),
-            ("seed", Value::num(c.seed as f64)),
-            ("train_n", Value::num(c.train_n as f64)),
-            ("test_n", Value::num(c.test_n as f64)),
-            ("npoints", Value::num(c.npoints as f64)),
-            ("ncls", Value::num(c.ncls as f64)),
-            ("verbose", Value::Bool(c.verbose)),
-        ];
+        let Value::Obj(mut obj) = c.train_spec().to_json() else {
+            unreachable!("TrainSpec::to_json returns an object")
+        };
+        let mut put = |k: &str, v: Value| {
+            obj.insert(k.to_string(), v);
+        };
+        put("name", Value::str(self.name.clone()));
+        put("priority", Value::num(self.priority as f64));
+        put("model", Value::str(c.model.clone()));
+        put("dataset", Value::str(c.dataset.token()));
+        put("engine", Value::str(c.engine.token()));
+        put("train_n", Value::num(c.train_n as f64));
+        put("test_n", Value::num(c.test_n as f64));
+        put("npoints", Value::num(c.npoints as f64));
+        put("ncls", Value::num(c.ncls as f64));
         if let Some(p) = &c.artifacts_dir {
-            pairs.push(("artifacts", Value::str(p.clone())));
+            put("artifacts", Value::str(p.clone()));
         }
         if let Some(p) = &c.load_checkpoint {
-            pairs.push(("load", Value::str(p.clone())));
+            put("load", Value::str(p.clone()));
         }
         if let Some(p) = &c.save_checkpoint {
-            pairs.push(("save", Value::str(p.clone())));
+            put("save", Value::str(p.clone()));
         }
-        Value::obj(pairs)
+        Value::Obj(obj)
     }
 }
 
@@ -153,6 +175,65 @@ mod tests {
         assert_eq!(back.config.train_n, spec.config.train_n);
         assert_eq!(back.config.ncls, spec.config.ncls);
         assert_eq!(back.config.verbose, spec.config.verbose);
+    }
+
+    #[test]
+    fn train_spec_roundtrips_through_protocol() {
+        // the unified TrainSpec survives JobSpec -> JSON -> JobSpec for
+        // every precision (including the int8 knobs and grad_mode token)
+        for precision in ["fp32", "int8", "int8*"] {
+            let mut cfg = Config::default();
+            cfg.set("precision", precision).unwrap();
+            cfg.set("method", "cls2").unwrap();
+            cfg.set("epochs", "6").unwrap();
+            cfg.set("r_max", "31").unwrap();
+            cfg.set("eval_every", "2").unwrap();
+            cfg.validate().unwrap();
+            let spec = JobSpec::new(cfg);
+            let wire = spec.to_json();
+            if precision == "int8*" {
+                assert_eq!(wire.get("precision").as_str(), Some("int8*"));
+                assert_eq!(
+                    wire.get("grad_mode").as_str(),
+                    Some(crate::coordinator::ZoGradMode::IntCE.token())
+                );
+            }
+            let back = JobSpec::from_json(&wire).unwrap();
+            assert_eq!(
+                back.config.train_spec().to_json(),
+                spec.config.train_spec().to_json(),
+                "{precision}: TrainSpec must round-trip through the protocol"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_mode_refines_or_conflicts_like_train_spec() {
+        for bad in [
+            // grad_mode on a fp32 spec
+            r#"{"precision": "fp32", "grad_mode": "int"}"#,
+            // float-CE token on the int-CE precision: a true conflict
+            r#"{"precision": "int8*", "grad_mode": "float"}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(JobSpec::from_json(&v).is_err(), "should reject {bad}");
+        }
+        // a consistent grad_mode is accepted, and an "int" token refines
+        // a plain int8 precision — the same rule TrainSpec::from_json
+        // applies, so the two parsers agree on identical bytes
+        for refined in [
+            r#"{"precision": "int8*", "grad_mode": "int"}"#,
+            r#"{"precision": "int8", "grad_mode": "int"}"#,
+        ] {
+            let v = json::parse(refined).unwrap();
+            assert_eq!(
+                JobSpec::from_json(&v).unwrap().config.precision,
+                Precision::Int8Star,
+                "{refined}"
+            );
+            let spec = crate::coordinator::TrainSpec::from_json(&v).unwrap();
+            assert_eq!(spec.precision.token(), "int8*", "{refined}");
+        }
     }
 
     #[test]

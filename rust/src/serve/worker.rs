@@ -1,18 +1,14 @@
 //! The worker pool: N OS threads popping jobs off the queue and driving
-//! the exact same training paths as `repro train` — FP32 via
-//! `trainer::train` over either engine, INT8/INT8* via
-//! `int8_trainer::train_int8` — with the job's stop flag and a
-//! registry-backed progress sink threaded into the config.
+//! the exact same training path as `repro train` — `launch::run`, which
+//! dispatches the job's unified `TrainSpec` into the one
+//! `coordinator::session` loop (FP32 over either engine, INT8/INT8*
+//! over the NITI path) — with the job's stop flag and a registry-backed
+//! progress sink armed on the spec.
 
 use super::queue::JobQueue;
 use super::registry::{JobOutcome, JobRegistry};
-use crate::config::Precision;
 use crate::coordinator::control::{ProgressSink, StopFlag};
-use crate::coordinator::int8_trainer::{self, Int8TrainConfig};
-use crate::coordinator::{checkpoint, trainer, ParamSet, TrainConfig};
-use crate::data;
-use crate::exp;
-use crate::int8::lenet8;
+use crate::launch;
 use anyhow::Result;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
@@ -70,81 +66,22 @@ fn worker_loop(idx: usize, queue: &JobQueue, registry: &Arc<JobRegistry>) {
     }
 }
 
-/// Run one job to completion (or cancellation). Mirrors `cmd_train` in
-/// `main.rs`, with the stop flag + progress sink armed.
+/// Run one job to completion (or cancellation): exactly `launch::run`
+/// (the `repro train` path) with the stop flag + progress sink armed.
 fn run_job(
     id: u64,
     cfg: &crate::config::Config,
     stop: StopFlag,
     registry: &Arc<JobRegistry>,
 ) -> Result<JobOutcome> {
-    let (train_d, test_d) =
-        data::generate(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed, cfg.npoints);
     let reg = registry.clone();
     let progress = ProgressSink::new(move |e| reg.record_epoch(id, e.clone()));
-
-    match cfg.precision {
-        Precision::Fp32 => {
-            let model = cfg.model_enum();
-            let mut engine =
-                exp::build_engine_at(model, cfg.batch, cfg.engine, cfg.artifacts_dir.as_deref());
-            let mut params = ParamSet::init(model, cfg.seed ^ 0xC0FFEE);
-            if let Some(path) = &cfg.load_checkpoint {
-                checkpoint::load_params(path, &mut params)?;
-            }
-            let tcfg = TrainConfig {
-                method: cfg.method,
-                epochs: cfg.epochs,
-                batch: cfg.batch,
-                lr0: cfg.lr,
-                eps: cfg.eps,
-                g_clip: cfg.g_clip,
-                seed: cfg.seed,
-                eval_every: 1,
-                verbose: cfg.verbose,
-                stop,
-                progress,
-            };
-            let r = trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &tcfg)?;
-            if let (Some(path), false) = (&cfg.save_checkpoint, r.stopped) {
-                checkpoint::save_params(path, &params)?;
-            }
-            Ok(JobOutcome {
-                best_test_acc: r.history.best_test_acc(),
-                timer: r.timer,
-                stopped: r.stopped,
-            })
-        }
-        Precision::Int8 | Precision::Int8Star => {
-            let mut ws = lenet8::init_params(cfg.seed ^ 0xC0FFEE, cfg.r_max.max(16));
-            if let Some(path) = &cfg.load_checkpoint {
-                ws = checkpoint::load_int8(path)?;
-            }
-            let icfg = Int8TrainConfig {
-                method: cfg.method,
-                grad_mode: cfg.precision.grad_mode(),
-                epochs: cfg.epochs,
-                batch: cfg.batch,
-                r_max: cfg.r_max,
-                b_zo: cfg.b_zo,
-                seed: cfg.seed,
-                eval_every: 1,
-                verbose: cfg.verbose,
-                stop,
-                progress,
-            };
-            let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &icfg)?;
-            if let (Some(path), false) = (&cfg.save_checkpoint, r.stopped) {
-                let names: Vec<&str> = lenet8::PARAM_SPECS.iter().map(|(n, _)| *n).collect();
-                checkpoint::save_int8(path, &names, &ws)?;
-            }
-            Ok(JobOutcome {
-                best_test_acc: r.history.best_test_acc(),
-                timer: r.timer,
-                stopped: r.stopped,
-            })
-        }
-    }
+    let l = launch::run(cfg, stop, progress)?;
+    Ok(JobOutcome {
+        best_test_acc: l.result.history.best_test_acc(),
+        timer: l.result.timer,
+        stopped: l.result.stopped,
+    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,109 @@
+//! Unified-session-API integration tests: the fp32 and int8 stacks must
+//! behave identically wherever the shared `coordinator::session::run`
+//! loop is in charge — epoch count, eval cadence with carry-forward,
+//! and cooperative stop semantics — because it is literally the same
+//! loop (PR acceptance: exactly one epoch loop in the coordinator).
+
+use elasticzo::coordinator::control::{ProgressSink, StopFlag};
+use elasticzo::coordinator::native_engine::NativeEngine;
+use elasticzo::coordinator::{
+    int8_trainer, trainer, Method, Model, ParamSet, PrecisionSpec, TrainResult, TrainSpec,
+    ZoGradMode,
+};
+use elasticzo::data::{self, DatasetKind};
+use elasticzo::int8::lenet8;
+
+fn fp32_spec(method: Method, epochs: usize, eval_every: usize) -> TrainSpec {
+    TrainSpec { method, epochs, batch: 16, eval_every, seed: 5, ..Default::default() }
+}
+
+fn int8_spec(method: Method, epochs: usize, eval_every: usize) -> TrainSpec {
+    TrainSpec {
+        precision: PrecisionSpec::int8(ZoGradMode::FloatCE),
+        ..fp32_spec(method, epochs, eval_every)
+    }
+}
+
+fn run_fp32(spec: &TrainSpec) -> TrainResult {
+    let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 96, 48, 21, 0);
+    let mut eng = NativeEngine::new(Model::LeNet);
+    let mut params = ParamSet::init(Model::LeNet, 22);
+    trainer::train(&mut eng, &mut params, &train_d, &test_d, spec).unwrap()
+}
+
+fn run_int8(spec: &TrainSpec) -> TrainResult {
+    let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 96, 48, 21, 0);
+    let mut ws = lenet8::init_params(23, 32);
+    int8_trainer::train_int8(&mut ws, &train_d, &test_d, spec).unwrap()
+}
+
+/// Eval-cadence carry-forward pattern of a history: `true` where the
+/// epoch reused the previous epoch's eval instead of re-evaluating.
+fn carry_pattern(r: &TrainResult) -> Vec<bool> {
+    r.history
+        .epochs
+        .windows(2)
+        .map(|w| w[1].test_loss == w[0].test_loss && w[1].test_acc == w[0].test_acc)
+        .collect()
+}
+
+#[test]
+fn fp32_and_int8_share_epoch_and_eval_semantics() {
+    // same spec shape -> same loop behaviour on both stacks
+    let rf = run_fp32(&fp32_spec(Method::Cls1, 5, 2));
+    let ri = run_int8(&int8_spec(Method::Cls1, 5, 2));
+    for (label, r) in [("fp32", &rf), ("int8", &ri)] {
+        assert_eq!(r.history.epochs.len(), 5, "{label}: one stats row per epoch");
+        assert!(!r.stopped, "{label}");
+        // eval at epochs 0, 2, 4 — epochs 1 and 3 carry forward
+        let carries = carry_pattern(r);
+        assert!(carries[0] && carries[2], "{label}: off-cadence epochs must carry, {carries:?}");
+        // both stacks report live train accuracy through the shared loop
+        let last = r.history.epochs.last().unwrap();
+        assert!(last.train_acc > 0.0 && last.train_acc <= 1.0, "{label}");
+    }
+    // fresh evals actually happen on-cadence (fp32 float means make a
+    // coincidental exact repeat effectively impossible)
+    let carries = carry_pattern(&rf);
+    assert!(!carries[1] && !carries[3], "fp32: on-cadence epochs must re-evaluate, {carries:?}");
+    // the labels identify the grid cell
+    assert_eq!(rf.history.label, "ZO-Feat-Cls1");
+    assert_eq!(ri.history.label, "ZO-Feat-Cls1 INT8");
+}
+
+#[test]
+fn full_bp_drives_the_same_loop_with_live_train_acc() {
+    // acceptance: Full BP on BOTH precisions reports nonzero train_acc
+    let rf = run_fp32(&fp32_spec(Method::FullBp, 2, 1));
+    let ri = run_int8(&int8_spec(Method::FullBp, 2, 1));
+    for (label, r) in [("fp32", &rf), ("int8", &ri)] {
+        let last = r.history.epochs.last().unwrap();
+        assert!(last.train_acc > 0.0, "{label}: Full BP train_acc must be live");
+    }
+}
+
+#[test]
+fn stop_semantics_identical_across_precisions() {
+    // firing the stop flag from the epoch-0 progress callback must end
+    // both stacks after exactly one recorded epoch
+    let arm = |spec: &mut TrainSpec| {
+        let stop = StopFlag::new();
+        let stop2 = stop.clone();
+        spec.progress = ProgressSink::new(move |e| {
+            if e.epoch == 0 {
+                stop2.request_stop();
+            }
+        });
+        spec.stop = stop;
+    };
+    let mut sf = fp32_spec(Method::Cls2, 50, 1);
+    arm(&mut sf);
+    let rf = run_fp32(&sf);
+    let mut si = int8_spec(Method::Cls2, 50, 1);
+    arm(&mut si);
+    let ri = run_int8(&si);
+    for (label, r) in [("fp32", &rf), ("int8", &ri)] {
+        assert!(r.stopped, "{label}");
+        assert_eq!(r.history.epochs.len(), 1, "{label}: must stop right after epoch 0");
+    }
+}

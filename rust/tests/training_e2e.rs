@@ -1,11 +1,13 @@
-//! End-to-end training integration tests: the full coordinator loop
-//! over both engines and both precisions, at smoke scale — the paper's
-//! headline behaviours as assertions.
+//! End-to-end training integration tests: the full coordinator session
+//! loop over both precisions, at smoke scale — the paper's headline
+//! behaviours as assertions.
 
 use elasticzo::config::Config;
-use elasticzo::coordinator::int8_trainer::{self, Int8TrainConfig, ZoGradMode};
+use elasticzo::coordinator::{
+    checkpoint, int8_trainer, trainer, Method, Model, ParamSet, PrecisionSpec, TrainSpec,
+    ZoGradMode,
+};
 use elasticzo::coordinator::native_engine::NativeEngine;
-use elasticzo::coordinator::{checkpoint, trainer, Method, Model, ParamSet, TrainConfig};
 use elasticzo::data::{self, DatasetKind};
 use elasticzo::int8::lenet8;
 use elasticzo::util::cli::Args;
@@ -29,8 +31,8 @@ fn thr(x: f32) -> f32 {
     }
 }
 
-fn cfg(method: Method, epochs: usize) -> TrainConfig {
-    TrainConfig {
+fn spec(method: Method, epochs: usize) -> TrainSpec {
+    TrainSpec {
         method,
         epochs,
         batch: 16,
@@ -40,6 +42,16 @@ fn cfg(method: Method, epochs: usize) -> TrainConfig {
         seed: 3,
         eval_every: 1,
         verbose: false,
+        ..Default::default()
+    }
+}
+
+fn int8_spec(method: Method, grad_mode: ZoGradMode, epochs: usize) -> TrainSpec {
+    TrainSpec {
+        method,
+        precision: PrecisionSpec::int8(grad_mode),
+        seed: 11,
+        ..spec(method, epochs)
     }
 }
 
@@ -51,7 +63,8 @@ fn elastic_beats_full_zo_at_equal_budget() {
     for method in [Method::FullZo, Method::Cls1] {
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 6);
-        let r = trainer::train(&mut eng, &mut params, &train_d, &test_d, &cfg(method, scaled(6))).unwrap();
+        let r = trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(method, scaled(6)))
+            .unwrap();
         acc.insert(method.label(), r.history.best_test_acc());
     }
     assert!(
@@ -67,9 +80,12 @@ fn full_bp_reaches_high_accuracy() {
     let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, scaled(768), scaled(256), 7, 0);
     let mut eng = NativeEngine::new(Model::LeNet);
     let mut params = ParamSet::init(Model::LeNet, 8);
-    let r = trainer::train(&mut eng, &mut params, &train_d, &test_d, &cfg(Method::FullBp, scaled(5)))
+    let r = trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(Method::FullBp, scaled(5)))
         .unwrap();
     assert!(r.history.best_test_acc() > thr(0.7), "{}", r.history.best_test_acc());
+    // regression (full_step logits ABI): Full BP reports train accuracy
+    let last = r.history.epochs.last().unwrap();
+    assert!(last.train_acc > 0.0, "Full BP train_acc must be live");
 }
 
 #[test]
@@ -77,18 +93,13 @@ fn int8_elastic_trains_with_integer_only_gradient() {
     // INT8* end to end: no float in the ZO gradient path
     let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, scaled(512), scaled(256), 9, 0);
     let mut ws = lenet8::init_params(10, 32);
-    let icfg = Int8TrainConfig {
-        method: Method::Cls1,
-        grad_mode: ZoGradMode::IntCE,
-        epochs: scaled(5),
-        batch: 16,
-        r_max: 15,
-        b_zo: 1,
-        seed: 11,
-        eval_every: 1,
-        verbose: false,
-    };
-    let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &icfg).unwrap();
+    let r = int8_trainer::train_int8(
+        &mut ws,
+        &train_d,
+        &test_d,
+        &int8_spec(Method::Cls1, ZoGradMode::IntCE, scaled(5)),
+    )
+    .unwrap();
     // well above chance (10%)
     assert!(r.history.best_test_acc() > thr(0.25), "{}", r.history.best_test_acc());
 }
@@ -99,13 +110,13 @@ fn finetuning_recovers_rotation_shift() {
     let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, scaled(768), scaled(384), 13, 0);
     let mut eng = NativeEngine::new(Model::LeNet);
     let mut params = ParamSet::init(Model::LeNet, 14);
-    trainer::train(&mut eng, &mut params, &train_d, &test_d, &cfg(Method::FullBp, scaled(5))).unwrap();
+    trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(Method::FullBp, scaled(5))).unwrap();
 
     let rot_train = data::rotate::rotate_dataset(&train_d.split_at(scaled(512)).0, 45.0);
     let rot_test = data::rotate::rotate_dataset(&test_d, 45.0);
     let (_, acc_before) = trainer::evaluate(&mut eng, &params, &rot_test, 16).unwrap();
 
-    let r = trainer::train(&mut eng, &mut params, &rot_train, &rot_test, &cfg(Method::Cls1, scaled(6)))
+    let r = trainer::train(&mut eng, &mut params, &rot_train, &rot_test, &spec(Method::Cls1, scaled(6)))
         .unwrap();
     let acc_after = r.history.best_test_acc();
     assert!(
@@ -116,13 +127,13 @@ fn finetuning_recovers_rotation_shift() {
 
 #[test]
 fn deterministic_replay_same_seed() {
-    // identical config + seed => identical history (seed trick + data
+    // identical spec + seed => identical history (seed trick + data
     // pipeline are fully deterministic)
     let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 256, 128, 15, 0);
     let run = || {
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 16);
-        trainer::train(&mut eng, &mut params, &train_d, &test_d, &cfg(Method::Cls2, 2))
+        trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(Method::Cls2, 2))
             .unwrap()
             .history
     };
@@ -139,7 +150,7 @@ fn checkpoint_resume_matches_continuous_eval() {
     let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 256, 128, 17, 0);
     let mut eng = NativeEngine::new(Model::LeNet);
     let mut params = ParamSet::init(Model::LeNet, 18);
-    trainer::train(&mut eng, &mut params, &train_d, &test_d, &cfg(Method::FullBp, 2)).unwrap();
+    trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(Method::FullBp, 2)).unwrap();
     let path = std::env::temp_dir().join(format!("ezo_e2e_{}.ckpt", std::process::id()));
     checkpoint::save_params(&path, &params).unwrap();
     let mut params2 = ParamSet::init(Model::LeNet, 999);
@@ -162,6 +173,10 @@ fn config_cli_pipeline() {
     assert_eq!(cfg.method, Method::Cls2);
     assert_eq!(cfg.precision.grad_mode(), ZoGradMode::IntCE);
     assert_eq!(cfg.batch, 8);
+    // the CLI pipeline lands on the same unified spec the sessions take
+    let s = cfg.train_spec();
+    assert_eq!(s.precision, PrecisionSpec::Int8 { grad_mode: ZoGradMode::IntCE, r_max: 15, b_zo: 1 });
+    assert_eq!(s.label(), "ZO-Feat-Cls2 INT8*");
 }
 
 #[test]
@@ -173,9 +188,9 @@ fn pointnet_native_training_improves() {
     // full BP verifies the whole native PointNet fwd/bwd path learns;
     // 40-way at this tiny scale needs the strongest learner (the
     // ElasticZO-vs-FullZO ordering is checked at exp scale instead)
-    let mut c = cfg(Method::FullBp, scaled(8));
-    c.batch = 16;
-    let r = trainer::train(&mut eng, &mut params, &train_d, &test_d, &c).unwrap();
+    let mut s = spec(Method::FullBp, scaled(8));
+    s.batch = 16;
+    let r = trainer::train(&mut eng, &mut params, &train_d, &test_d, &s).unwrap();
     // 40-way chance is 2.5%
     assert!(r.history.best_test_acc() > thr(0.12), "{}", r.history.best_test_acc());
 }
