@@ -22,8 +22,13 @@ fn tiny_spec(seed: usize) -> String {
 /// Boot a server with `workers` workers, push JOBS jobs through it, and
 /// return the jobs/sec of the drain.
 fn run_fleet(workers: usize) -> f64 {
-    let server = Server::bind(&ServeOptions { port: 0, workers, queue_cap: JOBS + 4 })
-        .expect("bind server");
+    let server = Server::bind(&ServeOptions {
+        port: 0,
+        workers,
+        queue_cap: JOBS + 4,
+        ..Default::default()
+    })
+    .expect("bind server");
     let addr = server.local_addr().expect("addr").to_string();
     let handle = std::thread::spawn(move || server.run().expect("server run"));
 

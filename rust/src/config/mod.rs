@@ -3,7 +3,9 @@
 //!
 //! Precedence: defaults < `--config file.json` < individual CLI flags.
 
-use crate::coordinator::{EngineKind, Method, PrecisionSpec, TrainSpec, ZoGradMode};
+use crate::coordinator::{
+    CheckpointPolicy, EngineKind, Method, PrecisionSpec, TrainSpec, ZoGradMode,
+};
 use crate::data::DatasetKind;
 use crate::util::cli::Args;
 use crate::util::json::{self, Value};
@@ -78,6 +80,16 @@ pub struct Config {
     pub artifacts_dir: Option<String>,
     pub load_checkpoint: Option<String>,
     pub save_checkpoint: Option<String>,
+    /// Resume a run from a v2 checkpoint's training state: restores
+    /// params AND loop position (epoch, ZO stream, eval carry), unlike
+    /// `load_checkpoint` which only warm-starts the params.
+    pub resume: Option<String>,
+    /// Cadence of mid-run snapshots to `save_checkpoint`, in epochs
+    /// (0 = final save only). Defaults to every epoch, so a killed or
+    /// cancelled run keeps its last completed epoch on disk.
+    pub ckpt_every: usize,
+    /// Snapshot generations kept (>= 1): `path`, `path.1`, ….
+    pub ckpt_keep: usize,
     pub verbose: bool,
 }
 
@@ -105,6 +117,9 @@ impl Default for Config {
             artifacts_dir: None,
             load_checkpoint: None,
             save_checkpoint: None,
+            resume: None,
+            ckpt_every: 1,
+            ckpt_keep: 1,
             verbose: false,
         }
     }
@@ -146,6 +161,11 @@ impl Config {
             "artifacts" | "artifacts_dir" => self.artifacts_dir = Some(val.to_string()),
             "load" | "load_checkpoint" => self.load_checkpoint = Some(val.to_string()),
             "save" | "save_checkpoint" => self.save_checkpoint = Some(val.to_string()),
+            "resume" => self.resume = Some(val.to_string()),
+            "ckpt-every" | "ckpt_every" => {
+                self.ckpt_every = val.parse().context("ckpt_every")?
+            }
+            "ckpt-keep" | "ckpt_keep" => self.ckpt_keep = val.parse().context("ckpt_keep")?,
             "verbose" => self.verbose = val == "true" || val == "1",
             other => anyhow::bail!("unknown config key '{other}'"),
         }
@@ -198,6 +218,14 @@ impl Config {
         if self.eval_every == 0 {
             anyhow::bail!("eval_every must be >= 1");
         }
+        if self.ckpt_keep == 0 {
+            anyhow::bail!("ckpt_keep must be >= 1");
+        }
+        if self.resume.is_some() && self.load_checkpoint.is_some() {
+            anyhow::bail!(
+                "--resume restores params AND loop state; it cannot be combined with --load"
+            );
+        }
         Ok(())
     }
 
@@ -224,6 +252,15 @@ impl Config {
             seed: self.seed,
             eval_every: self.eval_every,
             verbose: self.verbose,
+            checkpoint: self
+                .save_checkpoint
+                .as_ref()
+                .filter(|_| self.ckpt_every > 0)
+                .map(|path| CheckpointPolicy {
+                    path: path.clone(),
+                    every_n_epochs: self.ckpt_every,
+                    keep_last: self.ckpt_keep,
+                }),
             ..TrainSpec::default()
         }
     }
@@ -343,6 +380,40 @@ mod tests {
     fn eval_every_zero_rejected() {
         let mut cfg = Config::default();
         cfg.set("eval_every", "0").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_policy_arms_with_save_path() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.train_spec().checkpoint, None, "no save path, no policy");
+        cfg.set("save", "/tmp/run.ckpt").unwrap();
+        cfg.set("ckpt_every", "2").unwrap();
+        cfg.set("ckpt-keep", "3").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(
+            cfg.train_spec().checkpoint,
+            Some(CheckpointPolicy {
+                path: "/tmp/run.ckpt".into(),
+                every_n_epochs: 2,
+                keep_last: 3,
+            })
+        );
+        // cadence 0 = final-save-only: the mid-run policy disarms
+        cfg.set("ckpt_every", "0").unwrap();
+        assert_eq!(cfg.train_spec().checkpoint, None);
+    }
+
+    #[test]
+    fn resume_excludes_load_and_bad_keep_rejected() {
+        let mut cfg = Config::default();
+        cfg.set("resume", "/tmp/a.ckpt").unwrap();
+        cfg.validate().unwrap();
+        cfg.set("load", "/tmp/b.ckpt").unwrap();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = Config::default();
+        cfg.set("ckpt_keep", "0").unwrap();
         assert!(cfg.validate().is_err());
     }
 }

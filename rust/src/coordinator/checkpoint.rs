@@ -1,18 +1,75 @@
-//! Checkpointing: save/load parameter sets (FP32 and INT8) in a simple
-//! self-describing binary format — used by the fine-tuning experiments
-//! (pretrain on clean data → fine-tune on rotated data, paper Table 2).
+//! Checkpointing: the `EZOC` self-describing binary format for
+//! parameter sets (FP32 and INT8), plus — since v2 — an optional
+//! trailing **training-state section** that makes a checkpoint
+//! resumable (`repro train --resume`, serve-job requeue after a
+//! restart). Used by the fine-tuning experiments (pretrain on clean
+//! data → fine-tune on rotated data, paper Table 2) and by the
+//! durability layer around `coordinator::session::run`.
 //!
-//! Format: magic "EZOC", version u32, tensor count u32, then per tensor:
-//! name (u32 len + utf8), dtype tag u8 (0=f32, 1=i8), exponent i32
-//! (int8 only, 0 otherwise), rank u32, dims u64×rank, payload.
+//! # Binary layout
+//!
+//! v1 (legacy) and v2 share the header and tensor section; every
+//! integer is little-endian:
+//!
+//! ```text
+//!   magic    4 B    b"EZOC"
+//!   version  u32    1 | 2
+//!   count    u32    number of tensors
+//!   per tensor:
+//!     name_len u32, name (utf-8, name_len bytes)
+//!     dtype    u8     0 = f32, 1 = i8
+//!     exp      i32    block exponent (int8 only; 0 for f32)
+//!     rank     u32,  dims u64 × rank
+//!     payload  numel × 4 B f32 LE  |  numel × 1 B i8
+//! ```
+//!
+//! A v2 file may append **one** training-state section after the last
+//! tensor payload (absent ⇒ the file is params-only, exactly like v1):
+//!
+//! ```text
+//!   marker   4 B    b"TRNS"
+//!   len      u32    JSON byte length
+//!   state    len B  utf-8 JSON — see [`TrainState`]
+//! ```
+//!
+//! Compatibility rules:
+//!
+//! * v1 files load fine through [`load`]/[`load_full`] (the tensor
+//!   section is identical); they simply carry no training state.
+//! * A v2 file whose trailer is absent is params-only; a *truncated or
+//!   malformed* trailer is a hard error, never a silent params-only
+//!   fallback.
+//! * Writers always emit v2. [`save`]/[`save_params`]/[`save_int8`]
+//!   write params-only files; [`save_with_state`] appends the state
+//!   section.
+//!
+//! # Resumable checkpoints
+//!
+//! [`TrainState`] records where the epoch loop stood when the tensors
+//! were written: the number of completed epochs, the global step
+//! counter (the ZO seed-trick stream position — perturbations are a
+//! pure function of `(run_seed, step)`), best/last-eval bookkeeping
+//! for cadence carry-forward, and the serialized `TrainSpec` the run
+//! belonged to. Resume refuses a checkpoint whose spec differs from
+//! the current run's (modulo the non-mathematical keys in
+//! [`SPEC_IDENTITY_EXEMPT`]) — see [`ensure_spec_matches`].
+//!
+//! [`CheckpointPolicy`] + [`write_snapshot`] implement the mid-run
+//! cadence snapshots `coordinator::session::run` takes at completed
+//! epoch boundaries: atomic tmp-file + rename, with optional rotation
+//! (`keep_last`) of the previous snapshot generations as
+//! `path.1`, `path.2`, ….
 
 use crate::int8::qtensor::QTensor;
+use crate::util::json::{self, Value};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"EZOC";
-const VERSION: u32 = 1;
+const STATE_MARKER: &[u8; 4] = b"TRNS";
+/// Newest format version written; readers accept `1..=VERSION`.
+pub const VERSION: u32 = 2;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
@@ -27,8 +84,139 @@ pub struct CkptTensor {
     pub data: TensorData,
 }
 
+/// Mid-run snapshot policy, threaded through `TrainSpec`/`Config`:
+/// where cadence snapshots go, how often, and how many generations of
+/// them to keep.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointPolicy {
+    /// Snapshot file; always holds the newest snapshot.
+    pub path: String,
+    /// Snapshot after every Nth completed epoch (0 disables cadence —
+    /// only the final post-run save happens).
+    pub every_n_epochs: usize,
+    /// Snapshot generations retained (≥ 1). With `keep_last = k`, the
+    /// previous k−1 snapshots survive as `path.1` (newest backup) …
+    /// `path.{k-1}` (oldest).
+    pub keep_last: usize,
+}
+
+/// The v2 training-state trailer: everything `session::run_from` needs
+/// to continue a run from epoch `epochs_done` with bit-identical batch
+/// order and ZO perturbation streams (the tensors in the same file
+/// supply the params).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    /// Completed epochs; a resumed run starts at this epoch index.
+    pub epochs_done: usize,
+    /// Global minibatch counter — the ZO seed-trick stream position.
+    pub step: u64,
+    /// Best test accuracy seen so far (paper-table bookkeeping).
+    pub best_test_acc: f32,
+    /// Last evaluated test loss (NaN if never evaluated) — the eval
+    /// cadence carry-forward across the resume boundary.
+    pub last_test_loss: f32,
+    /// Last evaluated test accuracy.
+    pub last_test_acc: f32,
+    /// The serialized `TrainSpec` (`TrainSpec::to_json`) this state
+    /// belongs to; checked on resume via [`ensure_spec_matches`].
+    pub spec: Value,
+}
+
+impl TrainState {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("epochs_done", Value::num(self.epochs_done as f64)),
+            ("step", Value::num(self.step as f64)),
+            ("best_test_acc", Value::num(self.best_test_acc as f64)),
+            (
+                "last_test_loss",
+                if self.last_test_loss.is_finite() {
+                    Value::num(self.last_test_loss as f64)
+                } else {
+                    Value::Null
+                },
+            ),
+            ("last_test_acc", Value::num(self.last_test_acc as f64)),
+            ("spec", self.spec.clone()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<TrainState> {
+        anyhow::ensure!(v.as_obj().is_some(), "training state must be a JSON object");
+        Ok(TrainState {
+            epochs_done: v
+                .get("epochs_done")
+                .as_usize()
+                .context("training state: missing 'epochs_done'")?,
+            step: v.get("step").as_f64().context("training state: missing 'step'")? as u64,
+            best_test_acc: v.get("best_test_acc").as_f64().unwrap_or(0.0) as f32,
+            last_test_loss: v.get("last_test_loss").as_f64().map_or(f32::NAN, |n| n as f32),
+            last_test_acc: v.get("last_test_acc").as_f64().unwrap_or(0.0) as f32,
+            spec: v.get("spec").clone(),
+        })
+    }
+}
+
+/// Serialized-`TrainSpec` keys that do NOT affect the math of a run
+/// (logging and checkpoint plumbing); [`ensure_spec_matches`] ignores
+/// them when deciding whether a checkpoint belongs to the spec being
+/// resumed.
+pub const SPEC_IDENTITY_EXEMPT: [&str; 4] = ["verbose", "save", "ckpt_every", "ckpt_keep"];
+
+/// A serialized spec with the [`SPEC_IDENTITY_EXEMPT`] keys stripped —
+/// the part of a `TrainSpec` that defines the run's identity.
+pub fn spec_identity(spec: &Value) -> Value {
+    match spec {
+        Value::Obj(o) => Value::Obj(
+            o.iter()
+                .filter(|(k, _)| !SPEC_IDENTITY_EXEMPT.contains(&k.as_str()))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// Hard spec-mismatch check for resume: the stored and current specs
+/// must agree on every identity key (method, precision + knobs,
+/// epochs, batch, lr/eps/clip, seed, eval cadence). Names the
+/// differing keys in the error.
+pub fn ensure_spec_matches(stored: &Value, current: &Value) -> Result<()> {
+    let (a, b) = (spec_identity(stored), spec_identity(current));
+    if a == b {
+        return Ok(());
+    }
+    let mut diffs: Vec<String> = Vec::new();
+    if let (Some(ao), Some(bo)) = (a.as_obj(), b.as_obj()) {
+        let keys: std::collections::BTreeSet<&String> = ao.keys().chain(bo.keys()).collect();
+        for k in keys {
+            if ao.get(k) != bo.get(k) {
+                diffs.push(k.clone());
+            }
+        }
+    }
+    bail!(
+        "checkpoint belongs to a different run (differing spec keys: {}); \
+         resume requires the original TrainSpec",
+        if diffs.is_empty() { "non-object spec".to_string() } else { diffs.join(", ") }
+    )
+}
+
+/// Write a params-only checkpoint (v2, no training-state trailer).
 pub fn save(path: impl AsRef<Path>, tensors: &[CkptTensor]) -> Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    save_with_state(path, tensors, None)
+}
+
+/// Write a v2 checkpoint, optionally with a training-state trailer.
+pub fn save_with_state(
+    path: impl AsRef<Path>,
+    tensors: &[CkptTensor],
+    state: Option<&TrainState>,
+) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating checkpoint {}", path.as_ref().display()))?,
+    );
     f.write_all(MAGIC)?;
     f.write_all(&VERSION.to_le_bytes())?;
     f.write_all(&(tensors.len() as u32).to_le_bytes())?;
@@ -57,10 +245,25 @@ pub fn save(path: impl AsRef<Path>, tensors: &[CkptTensor]) -> Result<()> {
             }
         }
     }
+    if let Some(s) = state {
+        let text = json::to_string(&s.to_json());
+        f.write_all(STATE_MARKER)?;
+        f.write_all(&(text.len() as u32).to_le_bytes())?;
+        f.write_all(text.as_bytes())?;
+    }
+    f.flush()?;
     Ok(())
 }
 
+/// Load the tensor section of a v1/v2 checkpoint (any training state
+/// is read and discarded — see [`load_full`] to keep it).
 pub fn load(path: impl AsRef<Path>) -> Result<Vec<CkptTensor>> {
+    Ok(load_full(path)?.0)
+}
+
+/// Load a checkpoint: tensors plus the v2 training state when present
+/// (`None` for v1 files and params-only v2 files).
+pub fn load_full(path: impl AsRef<Path>) -> Result<(Vec<CkptTensor>, Option<TrainState>)> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path.as_ref())
             .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
@@ -71,8 +274,8 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<CkptTensor>> {
         bail!("not an ElasticZO checkpoint (bad magic)");
     }
     let version = read_u32(&mut f)?;
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
+    if version == 0 || version > VERSION {
+        bail!("unsupported checkpoint version {version} (this build reads 1..={VERSION})");
     }
     let count = read_u32(&mut f)? as usize;
     let mut out = Vec::with_capacity(count);
@@ -113,12 +316,64 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<CkptTensor>> {
         };
         out.push(CkptTensor { name, dims, data });
     }
-    Ok(out)
+    let state = if version >= 2 {
+        let mut marker = [0u8; 4];
+        match read_fully(&mut f, &mut marker)? {
+            0 => None, // params-only: ends cleanly after the tensors
+            4 if &marker == STATE_MARKER => {
+                let len = read_u32(&mut f)? as usize;
+                anyhow::ensure!(len <= 16 << 20, "training-state section too large ({len} B)");
+                let mut buf = vec![0u8; len];
+                f.read_exact(&mut buf).context("truncated training-state section")?;
+                let text =
+                    std::str::from_utf8(&buf).context("training-state section utf8")?;
+                let v = json::parse(text).context("training-state section json")?;
+                Some(TrainState::from_json(&v)?)
+            }
+            _ => bail!("corrupt checkpoint trailer (expected TRNS marker or EOF)"),
+        }
+    } else {
+        None
+    };
+    Ok((out, state))
 }
 
-/// Save an FP32 [`ParamSet`](super::params::ParamSet).
-pub fn save_params(path: impl AsRef<Path>, params: &super::params::ParamSet) -> Result<()> {
-    let tensors: Vec<CkptTensor> = params
+/// Atomic cadence snapshot: write to `path.tmp`, rotate previous
+/// generations (`keep_last` > 1 ⇒ old `path` becomes `path.1`, which
+/// becomes `path.2`, …), then rename into place — a crash mid-write
+/// never corrupts the last good snapshot.
+pub fn write_snapshot(
+    policy: &CheckpointPolicy,
+    tensors: &[CkptTensor],
+    state: Option<&TrainState>,
+) -> Result<()> {
+    let tmp = format!("{}.tmp", policy.path);
+    save_with_state(&tmp, tensors, state)?;
+    if policy.keep_last > 1 {
+        for i in (1..policy.keep_last).rev() {
+            if i == 1 {
+                // the live snapshot is COPIED (not renamed) into .1 so
+                // `path` stays present through the whole rotation — a
+                // kill here still leaves the last good snapshot live
+                if Path::new(&policy.path).exists() {
+                    let _ = std::fs::copy(&policy.path, format!("{}.1", policy.path));
+                }
+            } else {
+                let src = format!("{}.{}", policy.path, i - 1);
+                if Path::new(&src).exists() {
+                    let _ = std::fs::rename(&src, format!("{}.{}", policy.path, i));
+                }
+            }
+        }
+    }
+    std::fs::rename(&tmp, &policy.path)
+        .with_context(|| format!("publishing snapshot {}", policy.path))?;
+    Ok(())
+}
+
+/// An FP32 [`ParamSet`](super::params::ParamSet) as checkpoint tensors.
+pub fn params_to_tensors(params: &super::params::ParamSet) -> Vec<CkptTensor> {
+    params
         .specs
         .iter()
         .zip(&params.data)
@@ -127,13 +382,19 @@ pub fn save_params(path: impl AsRef<Path>, params: &super::params::ParamSet) -> 
             dims: dims.clone(),
             data: TensorData::F32(data.clone()),
         })
-        .collect();
-    save(path, &tensors)
+        .collect()
 }
 
-/// Load into an existing FP32 ParamSet (shapes must match).
-pub fn load_params(path: impl AsRef<Path>, params: &mut super::params::ParamSet) -> Result<()> {
-    let tensors = load(path)?;
+/// Save an FP32 [`ParamSet`](super::params::ParamSet) (params-only).
+pub fn save_params(path: impl AsRef<Path>, params: &super::params::ParamSet) -> Result<()> {
+    save(path, &params_to_tensors(params))
+}
+
+/// Copy loaded tensors into an existing FP32 ParamSet (shapes must match).
+pub fn params_from_tensors(
+    tensors: &[CkptTensor],
+    params: &mut super::params::ParamSet,
+) -> Result<()> {
     if tensors.len() != params.num_tensors() {
         bail!(
             "checkpoint has {} tensors, model wants {}",
@@ -156,9 +417,14 @@ pub fn load_params(path: impl AsRef<Path>, params: &mut super::params::ParamSet)
     Ok(())
 }
 
-/// Save INT8 NITI weights.
-pub fn save_int8(path: impl AsRef<Path>, names: &[&str], ws: &[QTensor]) -> Result<()> {
-    let tensors: Vec<CkptTensor> = names
+/// Load into an existing FP32 ParamSet (shapes must match).
+pub fn load_params(path: impl AsRef<Path>, params: &mut super::params::ParamSet) -> Result<()> {
+    params_from_tensors(&load(path)?, params)
+}
+
+/// INT8 NITI weights as checkpoint tensors.
+pub fn int8_to_tensors(names: &[&str], ws: &[QTensor]) -> Vec<CkptTensor> {
+    names
         .iter()
         .zip(ws)
         .map(|(name, w)| CkptTensor {
@@ -166,13 +432,17 @@ pub fn save_int8(path: impl AsRef<Path>, names: &[&str], ws: &[QTensor]) -> Resu
             dims: w.dims.clone(),
             data: TensorData::I8 { data: w.data.clone(), exp: w.exp },
         })
-        .collect();
-    save(path, &tensors)
+        .collect()
 }
 
-/// Load INT8 NITI weights.
-pub fn load_int8(path: impl AsRef<Path>) -> Result<Vec<QTensor>> {
-    load(path)?
+/// Save INT8 NITI weights (params-only).
+pub fn save_int8(path: impl AsRef<Path>, names: &[&str], ws: &[QTensor]) -> Result<()> {
+    save(path, &int8_to_tensors(names, ws))
+}
+
+/// Rebuild INT8 NITI weights from loaded tensors.
+pub fn int8_from_tensors(tensors: Vec<CkptTensor>) -> Result<Vec<QTensor>> {
+    tensors
         .into_iter()
         .map(|t| match t.data {
             TensorData::I8 { data, exp } => Ok(QTensor::from_vec(&t.dims, data, exp)),
@@ -181,10 +451,29 @@ pub fn load_int8(path: impl AsRef<Path>) -> Result<Vec<QTensor>> {
         .collect()
 }
 
+/// Load INT8 NITI weights.
+pub fn load_int8(path: impl AsRef<Path>) -> Result<Vec<QTensor>> {
+    int8_from_tensors(load(path)?)
+}
+
 fn read_u32(f: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     f.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+/// Read up to `buf.len()` bytes; returns how many were available (a
+/// clean EOF mid-buffer is reported, not an error).
+fn read_fully(f: &mut impl Read, buf: &mut [u8]) -> Result<usize> {
+    let mut n = 0;
+    while n < buf.len() {
+        let k = f.read(&mut buf[n..])?;
+        if k == 0 {
+            break;
+        }
+        n += k;
+    }
+    Ok(n)
 }
 
 #[cfg(test)]
@@ -194,6 +483,17 @@ mod tests {
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("ezo_test_{name}_{}", std::process::id()))
+    }
+
+    fn state(epochs_done: usize, step: u64) -> TrainState {
+        TrainState {
+            epochs_done,
+            step,
+            best_test_acc: 0.5,
+            last_test_loss: 1.25,
+            last_test_acc: 0.5,
+            spec: Value::obj(vec![("method", Value::str("cls1"))]),
+        }
     }
 
     #[test]
@@ -222,6 +522,124 @@ mod tests {
             assert_eq!(a.dims, b.dims);
         }
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_state_roundtrip() {
+        let p = ParamSet::init(Model::LeNet, 3);
+        let path = tmp("v2state");
+        let s = state(4, 28);
+        save_with_state(&path, &params_to_tensors(&p), Some(&s)).unwrap();
+        let (tensors, back) = load_full(&path).unwrap();
+        assert_eq!(tensors, params_to_tensors(&p));
+        assert_eq!(back.as_ref(), Some(&s));
+        // params-only readers still see just the tensors
+        let mut q = ParamSet::init(Model::LeNet, 99);
+        load_params(&path, &mut q).unwrap();
+        assert_eq!(p.data, q.data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn non_finite_last_loss_survives_as_null() {
+        let path = tmp("nanloss");
+        let mut s = state(1, 2);
+        s.last_test_loss = f32::NAN;
+        save_with_state(&path, &[], Some(&s)).unwrap();
+        let (_, back) = load_full(&path).unwrap();
+        assert!(back.unwrap().last_test_loss.is_nan());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v1_file_loads_without_state() {
+        // hand-rolled v1 file: one f32 tensor "w" of shape [3]
+        let mut b: Vec<u8> = Vec::new();
+        b.extend_from_slice(b"EZOC");
+        b.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        b.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        b.extend_from_slice(&1u32.to_le_bytes()); // name len
+        b.extend_from_slice(b"w");
+        b.push(0); // f32 tag
+        b.extend_from_slice(&0i32.to_le_bytes()); // exp
+        b.extend_from_slice(&1u32.to_le_bytes()); // rank
+        b.extend_from_slice(&3u64.to_le_bytes());
+        for x in [1.0f32, -2.5, 0.125] {
+            b.extend_from_slice(&x.to_le_bytes());
+        }
+        let path = tmp("v1");
+        std::fs::write(&path, &b).unwrap();
+        let (tensors, st) = load_full(&path).unwrap();
+        assert!(st.is_none(), "v1 files carry no training state");
+        assert_eq!(tensors.len(), 1);
+        assert_eq!(tensors[0].name, "w");
+        assert_eq!(tensors[0].data, TensorData::F32(vec![1.0, -2.5, 0.125]));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_trailer_rejected_not_silently_dropped() {
+        let path = tmp("trailer");
+        save(&path, &[]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"JUNK");
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_full(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn snapshot_rotation_keeps_last_k() {
+        let base = tmp("rot");
+        let policy = CheckpointPolicy {
+            path: base.display().to_string(),
+            every_n_epochs: 1,
+            keep_last: 3,
+        };
+        let tensor = |v: f32| CkptTensor {
+            name: "x".into(),
+            dims: vec![1],
+            data: TensorData::F32(vec![v]),
+        };
+        for i in 0..4 {
+            write_snapshot(&policy, &[tensor(i as f32)], None).unwrap();
+        }
+        let read = |p: &str| match &load(p).unwrap()[0].data {
+            TensorData::F32(v) => v[0],
+            _ => unreachable!(),
+        };
+        assert_eq!(read(&policy.path), 3.0);
+        assert_eq!(read(&format!("{}.1", policy.path)), 2.0);
+        assert_eq!(read(&format!("{}.2", policy.path)), 1.0);
+        assert!(!Path::new(&format!("{}.3", policy.path)).exists());
+        for p in [
+            policy.path.clone(),
+            format!("{}.1", policy.path),
+            format!("{}.2", policy.path),
+        ] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn spec_identity_ignores_logging_and_ckpt_keys() {
+        let a = Value::obj(vec![
+            ("method", Value::str("cls1")),
+            ("seed", Value::num(1.0)),
+            ("verbose", Value::Bool(true)),
+            ("save", Value::str("/tmp/a.ckpt")),
+            ("ckpt_every", Value::num(1.0)),
+        ]);
+        let b = Value::obj(vec![
+            ("method", Value::str("cls1")),
+            ("seed", Value::num(1.0)),
+            ("verbose", Value::Bool(false)),
+            ("ckpt_keep", Value::num(3.0)),
+        ]);
+        ensure_spec_matches(&a, &b).unwrap();
+        let c = Value::obj(vec![("method", Value::str("cls2")), ("seed", Value::num(1.0))]);
+        let err = ensure_spec_matches(&a, &c).unwrap_err().to_string();
+        assert!(err.contains("method"), "{err}");
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! like the FP32 path; p_zero and the BP bitwidth follow the paper's
 //! staged schedules.
 
+use super::checkpoint::{self, TrainState};
 use super::engine::BpDepth;
 use super::schedules::{paper_b_bp, paper_p_zero, StagedSchedule};
 use super::session::{self, PrecisionSpec, StepOutcome, TrainResult, TrainSession, TrainSpec};
@@ -302,6 +303,11 @@ impl TrainSession for Int8Session<'_> {
         // old int8 loop printed these; lr is meaningless here)
         format!("  p_zero {}  b_bp {}", self.p_zero, self.b_bp)
     }
+
+    fn snapshot(&self) -> Vec<checkpoint::CkptTensor> {
+        let names: Vec<&str> = lenet8::PARAM_SPECS.iter().map(|(n, _)| *n).collect();
+        checkpoint::int8_to_tensors(&names, self.ws)
+    }
 }
 
 /// Train INT8 LeNet with any method (FullZO / Cls1 / Cls2 / FullBP=NITI).
@@ -313,8 +319,21 @@ pub fn train_int8(
     test_data: &Dataset,
     spec: &TrainSpec,
 ) -> Result<TrainResult> {
+    train_int8_from(ws, train_data, test_data, spec, None)
+}
+
+/// [`train_int8`], continuing from a checkpoint's training state (the
+/// caller has already restored `ws` from the same checkpoint) — the
+/// INT8/INT8* leg of `repro train --resume`.
+pub fn train_int8_from(
+    ws: &mut Vec<QTensor>,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    spec: &TrainSpec,
+    resume: Option<&TrainState>,
+) -> Result<TrainResult> {
     let mut s = Int8Session::new(ws, spec)?;
-    session::run(&mut s, spec, train_data, test_data)
+    session::run_from(&mut s, spec, train_data, test_data, resume)
 }
 
 #[cfg(test)]

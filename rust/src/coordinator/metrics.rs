@@ -26,6 +26,25 @@ impl EpochStats {
             ("seconds", Value::num(self.seconds)),
         ])
     }
+
+    /// Parse the shape [`EpochStats::to_json`] emits (serve's job
+    /// journal replays epoch events through this). Only `epoch` is
+    /// required; missing metrics default to zero.
+    pub fn from_json(v: &Value) -> anyhow::Result<EpochStats> {
+        use anyhow::Context;
+        Ok(EpochStats {
+            epoch: v
+                .get("epoch")
+                .as_usize()
+                .context("epoch stats: missing 'epoch'")?,
+            train_loss: v.get("train_loss").as_f64().unwrap_or(0.0) as f32,
+            test_loss: v.get("test_loss").as_f64().unwrap_or(0.0) as f32,
+            train_acc: v.get("train_acc").as_f64().unwrap_or(0.0) as f32,
+            test_acc: v.get("test_acc").as_f64().unwrap_or(0.0) as f32,
+            lr: v.get("lr").as_f64().unwrap_or(0.0) as f32,
+            seconds: v.get("seconds").as_f64().unwrap_or(0.0),
+        })
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -116,5 +135,21 @@ mod tests {
     #[test]
     fn curve_rows_one_per_epoch() {
         assert_eq!(h().curve_rows().len(), 3);
+    }
+
+    #[test]
+    fn epoch_stats_json_roundtrip() {
+        let e = EpochStats {
+            epoch: 7,
+            train_loss: 1.25,
+            test_loss: 1.5,
+            train_acc: 0.625,
+            test_acc: 0.75,
+            lr: 0.001953125,
+            seconds: 2.5,
+        };
+        let back = EpochStats::from_json(&e.to_json()).unwrap();
+        assert_eq!(back.to_json(), e.to_json());
+        assert!(EpochStats::from_json(&Value::Null).is_err());
     }
 }

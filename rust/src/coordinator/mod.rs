@@ -25,6 +25,7 @@ pub mod trainer;
 pub mod xla_engine;
 pub mod zo;
 
+pub use checkpoint::{CheckpointPolicy, CkptTensor, TrainState};
 pub use control::{ProgressSink, StopFlag};
 pub use engine::{BpDepth, Engine, EngineKind, Method, StepOut};
 pub use int8_trainer::{Int8Session, ZoGradMode};

@@ -21,6 +21,7 @@
 //!   [`History`] bookkeeping, [`PhaseTimer`] rollup and [`ProgressSink`]
 //!   publishing. No other epoch loop exists in the coordinator.
 
+use super::checkpoint::{self, CheckpointPolicy, TrainState};
 use super::control::{ProgressSink, StopFlag};
 use super::engine::Method;
 use super::int8_trainer::ZoGradMode;
@@ -91,6 +92,10 @@ pub struct TrainSpec {
     /// Evaluate every N epochs (the last epoch always evaluates).
     pub eval_every: usize,
     pub verbose: bool,
+    /// Mid-run durability: cadence snapshots at completed-epoch
+    /// boundaries (`None` disables them). See
+    /// [`checkpoint::CheckpointPolicy`] and [`run_from`].
+    pub checkpoint: Option<CheckpointPolicy>,
     /// Cooperative cancellation; polled between batches and epochs.
     pub stop: StopFlag,
     /// Live per-epoch progress callback (armed by the `serve` workers).
@@ -113,6 +118,7 @@ impl Default for TrainSpec {
             seed: 1,
             eval_every: 1,
             verbose: false,
+            checkpoint: None,
             stop: StopFlag::default(),
             progress: ProgressSink::default(),
         }
@@ -152,6 +158,11 @@ impl TrainSpec {
             pairs.push(("r_max", Value::num(r_max as f64)));
             pairs.push(("b_zo", Value::num(b_zo as f64)));
         }
+        if let Some(p) = &self.checkpoint {
+            pairs.push(("save", Value::str(p.path.clone())));
+            pairs.push(("ckpt_every", Value::num(p.every_n_epochs as f64)));
+            pairs.push(("ckpt_keep", Value::num(p.keep_last as f64)));
+        }
         Value::obj(pairs)
     }
 
@@ -169,6 +180,9 @@ impl TrainSpec {
         let mut grad_key: Option<ZoGradMode> = None;
         let mut r_max: i8 = 15;
         let mut b_zo: u32 = 1;
+        let mut ckpt_path: Option<String> = None;
+        let mut ckpt_every: usize = 1;
+        let mut ckpt_keep: usize = 1;
         let str_of = |k: &str, val: &Value| -> Result<String> {
             Ok(val.as_str().with_context(|| format!("'{k}' must be a string"))?.to_string())
         };
@@ -210,6 +224,19 @@ impl TrainSpec {
                     anyhow::ensure!((1..=7).contains(&n), "b_zo must be in 1..=7");
                     b_zo = n as u32;
                 }
+                "save" | "save_checkpoint" | "ckpt_path" => {
+                    ckpt_path = Some(str_of(k, val)?)
+                }
+                "ckpt_every" | "ckpt-every" => {
+                    let n = num_of(k, val)? as i64;
+                    anyhow::ensure!(n >= 0, "ckpt_every must be >= 0");
+                    ckpt_every = n as usize;
+                }
+                "ckpt_keep" | "ckpt-keep" => {
+                    let n = num_of(k, val)? as i64;
+                    anyhow::ensure!(n >= 1, "ckpt_keep must be >= 1");
+                    ckpt_keep = n as usize;
+                }
                 other => anyhow::bail!("unknown train spec key '{other}'"),
             }
         }
@@ -221,6 +248,12 @@ impl TrainSpec {
         } else {
             PrecisionSpec::Fp32
         };
+        // a checkpoint path with a nonzero cadence arms mid-run snapshots
+        spec.checkpoint = ckpt_path.filter(|_| ckpt_every > 0).map(|path| CheckpointPolicy {
+            path,
+            every_n_epochs: ckpt_every,
+            keep_last: ckpt_keep,
+        });
         Ok(spec)
     }
 }
@@ -291,6 +324,14 @@ pub trait TrainSession {
     fn verbose_note(&self) -> String {
         String::new()
     }
+
+    /// The model state as checkpoint tensors — what a cadence snapshot
+    /// persists ([`TrainSpec::checkpoint`]). The default is empty (a
+    /// non-checkpointable session, e.g. test fakes); real backends
+    /// return their full parameter set.
+    fn snapshot(&self) -> Vec<checkpoint::CkptTensor> {
+        Vec::new()
+    }
 }
 
 /// Outcome of a training run.
@@ -299,6 +340,10 @@ pub struct TrainResult {
     pub timer: PhaseTimer,
     /// True iff the run ended early because [`TrainSpec::stop`] fired.
     pub stopped: bool,
+    /// Final value of the global step counter (the ZO stream position)
+    /// — resumed runs start from the checkpoint's counter, so this is
+    /// the all-time count, not just this process's.
+    pub steps_done: u64,
 }
 
 /// Drive a session through `spec.epochs` epochs — the single epoch loop
@@ -310,12 +355,33 @@ pub fn run(
     train_data: &Dataset,
     test_data: &Dataset,
 ) -> Result<TrainResult> {
+    run_from(session, spec, train_data, test_data, None)
+}
+
+/// [`run`], optionally continuing from a checkpoint's [`TrainState`]:
+/// epochs `state.epochs_done..spec.epochs` execute with the global
+/// step counter, eval carry-forward and best-accuracy bookkeeping
+/// restored. Because minibatch order is a pure function of
+/// `(seed, epoch)` and ZO perturbations of `(seed, step)`, a resumed
+/// run replays the exact streams of an uninterrupted one — the caller
+/// restores the params from the same checkpoint (`launch::run` does).
+pub fn run_from(
+    session: &mut dyn TrainSession,
+    spec: &TrainSpec,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    resume: Option<&TrainState>,
+) -> Result<TrainResult> {
     let mut history = History::new(&session.label());
     let mut timer = PhaseTimer::new();
-    let mut step: u64 = 0;
+    let start_epoch = resume.map_or(0, |s| s.epochs_done);
+    let mut step: u64 = resume.map_or(0, |s| s.step);
+    let mut best = resume.map_or(0.0f32, |s| s.best_test_acc);
+    // eval carry-forward across the resume boundary
+    let carry = resume.map_or((f32::NAN, 0.0), |s| (s.last_test_loss, s.last_test_acc));
     let mut stopped = false;
 
-    'epochs: for epoch in 0..spec.epochs {
+    'epochs: for epoch in start_epoch..spec.epochs {
         if spec.stop.should_stop() {
             stopped = true;
             break;
@@ -347,11 +413,12 @@ pub fn run(
             timer.add(Phase::Eval, t0.elapsed());
             r
         } else {
-            // off-cadence epochs carry the previous eval forward
+            // off-cadence epochs carry the previous eval forward (the
+            // resume state supplies it across a resume boundary)
             let prev = history.epochs.last();
             (
-                prev.map(|e| e.test_loss).unwrap_or(f32::NAN),
-                prev.map(|e| e.test_acc).unwrap_or(0.0),
+                prev.map_or(carry.0, |e| e.test_loss),
+                prev.map_or(carry.1, |e| e.test_acc),
             )
         };
 
@@ -377,11 +444,63 @@ pub fn run(
                 session.verbose_note()
             );
         }
+        best = best.max(stats.test_acc);
         spec.progress.publish(&stats);
         history.push(stats);
+
+        // cadence snapshot at the completed-epoch boundary: params +
+        // loop state, so a kill after this point loses at most the
+        // epochs since the last snapshot
+        if let Some(p) = &spec.checkpoint {
+            if p.every_n_epochs > 0 && (epoch + 1) % p.every_n_epochs == 0 {
+                let last = history.epochs.last().expect("epoch just pushed");
+                let state = TrainState {
+                    epochs_done: epoch + 1,
+                    step,
+                    best_test_acc: best,
+                    last_test_loss: last.test_loss,
+                    last_test_acc: last.test_acc,
+                    spec: spec.to_json(),
+                };
+                checkpoint::write_snapshot(p, &session.snapshot(), Some(&state))
+                    .with_context(|| format!("writing cadence snapshot {}", p.path))?;
+            }
+        }
     }
 
-    Ok(TrainResult { history, timer, stopped })
+    Ok(TrainResult { history, timer, stopped, steps_done: step })
+}
+
+/// The [`TrainState`] describing a finished run — what `launch::run`
+/// embeds in the final checkpoint so even a completed run's file can
+/// seed further training (e.g. a spec with more epochs is a mismatch,
+/// but listing/inspection tools see the full picture).
+pub fn final_state(
+    spec: &TrainSpec,
+    result: &TrainResult,
+    resume: Option<&TrainState>,
+) -> TrainState {
+    let last = result.history.epochs.last();
+    TrainState {
+        epochs_done: last
+            .map(|e| e.epoch + 1)
+            .or(resume.map(|s| s.epochs_done))
+            .unwrap_or(0),
+        step: result.steps_done,
+        best_test_acc: result
+            .history
+            .best_test_acc()
+            .max(resume.map_or(0.0, |s| s.best_test_acc)),
+        last_test_loss: last
+            .map(|e| e.test_loss)
+            .or(resume.map(|s| s.last_test_loss))
+            .unwrap_or(f32::NAN),
+        last_test_acc: last
+            .map(|e| e.test_acc)
+            .or(resume.map(|s| s.last_test_acc))
+            .unwrap_or(0.0),
+        spec: spec.to_json(),
+    }
 }
 
 #[cfg(test)]
@@ -527,6 +646,7 @@ mod tests {
             r#"{"epochs": 0}"#,
             r#"{"eval_every": 0}"#,
             r#"{"r_max": 0}"#,
+            r#"{"ckpt_keep": 0}"#,
             r#"{"precision": "fp32", "grad_mode": "int"}"#,
             r#"{"precision": "int8*", "grad_mode": "float"}"#,
             r#"[1]"#,
@@ -534,5 +654,81 @@ mod tests {
             let v = crate::util::json::parse(bad).unwrap();
             assert!(TrainSpec::from_json(&v).is_err(), "should reject {bad}");
         }
+    }
+
+    #[test]
+    fn spec_json_roundtrips_checkpoint_policy() {
+        let spec = TrainSpec {
+            checkpoint: Some(CheckpointPolicy {
+                path: "/tmp/run.ckpt".into(),
+                every_n_epochs: 2,
+                keep_last: 3,
+            }),
+            ..Default::default()
+        };
+        let v = spec.to_json();
+        assert_eq!(v.get("save").as_str(), Some("/tmp/run.ckpt"));
+        let back = TrainSpec::from_json(&v).unwrap();
+        assert_eq!(back.checkpoint, spec.checkpoint);
+        assert_eq!(back.to_json(), v);
+        // a zero cadence disarms the policy even with a path
+        let v = crate::util::json::parse(r#"{"save": "/tmp/x", "ckpt_every": 0}"#).unwrap();
+        assert_eq!(TrainSpec::from_json(&v).unwrap().checkpoint, None);
+    }
+
+    #[test]
+    fn cadence_snapshots_write_resumable_state() {
+        let d = synth_mnist::generate(64, 1);
+        let path = std::env::temp_dir()
+            .join(format!("ezo_cadence_{}", std::process::id()))
+            .display()
+            .to_string();
+        let spec = TrainSpec {
+            epochs: 5,
+            batch: 16,
+            checkpoint: Some(CheckpointPolicy {
+                path: path.clone(),
+                every_n_epochs: 2,
+                keep_last: 1,
+            }),
+            ..Default::default()
+        };
+        let mut s = FakeSession::new();
+        let r = run(&mut s, &spec, &d, &d).unwrap();
+        assert_eq!(r.steps_done, 5 * 4, "64 samples / batch 16 over 5 epochs");
+        let (tensors, state) = checkpoint::load_full(&path).unwrap();
+        let state = state.expect("cadence snapshot must carry training state");
+        // snapshots fire after epochs 2 and 4; the file holds the last
+        assert_eq!(state.epochs_done, 4);
+        assert_eq!(state.step, 4 * 4);
+        assert!(tensors.is_empty(), "FakeSession has no params");
+        checkpoint::ensure_spec_matches(&state.spec, &spec.to_json()).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn run_from_restores_step_carry_and_epoch_range() {
+        let d = synth_mnist::generate(64, 1);
+        let spec = TrainSpec { epochs: 6, batch: 16, eval_every: 4, ..Default::default() };
+        let state = TrainState {
+            epochs_done: 3,
+            step: 12,
+            best_test_acc: 0.9,
+            last_test_loss: 1.5,
+            last_test_acc: 0.75,
+            spec: spec.to_json(),
+        };
+        let mut s = FakeSession::new();
+        let r = run_from(&mut s, &spec, &d, &d, Some(&state)).unwrap();
+        // epochs 3, 4, 5 run; 3 is off-cadence (3 % 4 != 0) so it
+        // carries the resume state's eval forward
+        assert_eq!(s.epochs_begun, vec![3, 4, 5]);
+        assert_eq!(r.history.epochs.len(), 3);
+        assert_eq!(r.history.epochs[0].epoch, 3);
+        assert_eq!(r.history.epochs[0].test_loss, 1.5);
+        assert_eq!(r.history.epochs[0].test_acc, 0.75);
+        // epoch 4 is on-cadence, epoch 5 is last: both evaluate
+        assert_eq!(s.evals, 2);
+        assert_eq!(r.steps_done, 12 + 3 * 4);
     }
 }

@@ -19,6 +19,7 @@
 //! Full BP runs through the engine's fused `full_step`, whose returned
 //! logits keep train accuracy live on that path too.
 
+use super::checkpoint::{self, TrainState};
 use super::engine::{BpDepth, Engine};
 use super::params::ParamSet;
 use super::schedules::LrSchedule;
@@ -200,6 +201,10 @@ impl TrainSession for Fp32Session<'_> {
     fn evaluate(&mut self, data: &Dataset) -> Result<(f32, f32)> {
         evaluate(self.engine, self.params, data, self.spec.batch)
     }
+
+    fn snapshot(&self) -> Vec<checkpoint::CkptTensor> {
+        checkpoint::params_to_tensors(self.params)
+    }
 }
 
 /// Train with any method; returns per-epoch history + phase breakdown.
@@ -212,8 +217,22 @@ pub fn train(
     test_data: &Dataset,
     spec: &TrainSpec,
 ) -> Result<TrainResult> {
+    train_from(engine, params, train_data, test_data, spec, None)
+}
+
+/// [`train`], continuing from a checkpoint's training state (the
+/// caller has already restored `params` from the same checkpoint) —
+/// the FP32 leg of `repro train --resume`.
+pub fn train_from(
+    engine: &mut dyn Engine,
+    params: &mut ParamSet,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    spec: &TrainSpec,
+    resume: Option<&TrainState>,
+) -> Result<TrainResult> {
     let mut s = Fp32Session::new(engine, params, spec)?;
-    session::run(&mut s, spec, train_data, test_data)
+    session::run_from(&mut s, spec, train_data, test_data, resume)
 }
 
 #[cfg(test)]

@@ -3,15 +3,34 @@
 //!
 //! This is the single place that turns a validated config into a
 //! running session — dataset generation, backend construction (engine +
-//! params for FP32, NITI weights for INT8), checkpoint load/save, and
-//! the dispatch into the unified `coordinator::session` loop. Both the
-//! `repro train` CLI and every `serve` worker go through [`run`], so a
-//! job spec and a command line can never drift apart.
+//! params for FP32, NITI weights for INT8), checkpoint load/save/resume,
+//! and the dispatch into the unified `coordinator::session` loop. Both
+//! the `repro train` CLI and every `serve` worker go through [`run`], so
+//! a job spec and a command line can never drift apart.
+//!
+//! # Durability
+//!
+//! Three checkpoint paths flow through here:
+//!
+//! * `load` — warm-start the params only (fine-tuning, paper Table 2);
+//!   the loop starts from epoch 0 with fresh streams.
+//! * `save` — the final checkpoint, written with a v2 training-state
+//!   trailer when the run completes. While the run is live, the same
+//!   path receives cadence snapshots (`Config::ckpt_every`, default
+//!   every epoch) from inside `session::run`, so a killed or cancelled
+//!   run keeps its last completed epoch on disk — the final save is
+//!   deliberately skipped for stopped runs instead of clobbering that
+//!   snapshot with mid-epoch params.
+//! * `resume` — restore params AND loop state from a v2 checkpoint and
+//!   continue from epoch k with bit-identical batch order and ZO
+//!   perturbation streams. The checkpoint's serialized spec must match
+//!   the current run's (see `checkpoint::ensure_spec_matches`).
 
 use crate::config::{Config, Precision};
+use crate::coordinator::checkpoint::{self, CkptTensor, TrainState};
 use crate::coordinator::control::{ProgressSink, StopFlag};
-use crate::coordinator::session::TrainResult;
-use crate::coordinator::{checkpoint, int8_trainer, trainer, ParamSet};
+use crate::coordinator::session::{self, TrainResult, TrainSpec};
+use crate::coordinator::{int8_trainer, trainer, ParamSet};
 use crate::data;
 use crate::exp;
 use crate::int8::lenet8;
@@ -23,6 +42,8 @@ pub struct Launch {
     /// Backend label for logs: the engine name for FP32 runs,
     /// `"niti-int8"` for the int8 path.
     pub engine: String,
+    /// Epoch the run resumed from (`--resume` only).
+    pub resumed_from: Option<usize>,
 }
 
 /// Run one training job to completion (or cancellation): the exact
@@ -40,28 +61,102 @@ pub fn run(cfg: &Config, stop: StopFlag, progress: ProgressSink) -> Result<Launc
             let mut engine =
                 exp::build_engine_at(model, cfg.batch, cfg.engine, cfg.artifacts_dir.as_deref());
             let mut params = ParamSet::init(model, cfg.seed ^ 0xC0FFEE);
-            if let Some(path) = &cfg.load_checkpoint {
-                checkpoint::load_params(path, &mut params)?;
-            }
-            let result = trainer::train(engine.as_mut(), &mut params, &train_d, &test_d, &spec)?;
-            if let (Some(path), false) = (&cfg.save_checkpoint, result.stopped) {
-                checkpoint::save_params(path, &params)?;
-            }
-            Ok(Launch { result, engine: engine.name().to_string() })
+            let resume_state = match &cfg.resume {
+                Some(path) => {
+                    let (tensors, state) = load_resumable(path, &spec)?;
+                    checkpoint::params_from_tensors(&tensors, &mut params)?;
+                    Some(state)
+                }
+                None => {
+                    if let Some(path) = &cfg.load_checkpoint {
+                        checkpoint::load_params(path, &mut params)?;
+                    }
+                    None
+                }
+            };
+            let result = trainer::train_from(
+                engine.as_mut(),
+                &mut params,
+                &train_d,
+                &test_d,
+                &spec,
+                resume_state.as_ref(),
+            )?;
+            save_final(cfg, &spec, &result, resume_state.as_ref(), || {
+                checkpoint::params_to_tensors(&params)
+            })?;
+            Ok(Launch {
+                result,
+                engine: engine.name().to_string(),
+                resumed_from: resume_state.map(|s| s.epochs_done),
+            })
         }
         Precision::Int8 | Precision::Int8Star => {
             let mut ws = lenet8::init_params(cfg.seed ^ 0xC0FFEE, cfg.r_max.max(16));
-            if let Some(path) = &cfg.load_checkpoint {
-                ws = checkpoint::load_int8(path)?;
-            }
-            let result = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &spec)?;
-            if let (Some(path), false) = (&cfg.save_checkpoint, result.stopped) {
-                let names: Vec<&str> = lenet8::PARAM_SPECS.iter().map(|(n, _)| *n).collect();
-                checkpoint::save_int8(path, &names, &ws)?;
-            }
-            Ok(Launch { result, engine: "niti-int8".to_string() })
+            let resume_state = match &cfg.resume {
+                Some(path) => {
+                    let (tensors, state) = load_resumable(path, &spec)?;
+                    ws = checkpoint::int8_from_tensors(tensors)?;
+                    Some(state)
+                }
+                None => {
+                    if let Some(path) = &cfg.load_checkpoint {
+                        ws = checkpoint::load_int8(path)?;
+                    }
+                    None
+                }
+            };
+            let result = int8_trainer::train_int8_from(
+                &mut ws,
+                &train_d,
+                &test_d,
+                &spec,
+                resume_state.as_ref(),
+            )?;
+            let names: Vec<&str> = lenet8::PARAM_SPECS.iter().map(|(n, _)| *n).collect();
+            save_final(cfg, &spec, &result, resume_state.as_ref(), || {
+                checkpoint::int8_to_tensors(&names, &ws)
+            })?;
+            Ok(Launch {
+                result,
+                engine: "niti-int8".to_string(),
+                resumed_from: resume_state.map(|s| s.epochs_done),
+            })
         }
     }
+}
+
+/// Load a `--resume` checkpoint: its tensors plus the (required)
+/// training state, spec-checked against the current run.
+fn load_resumable(path: &str, spec: &TrainSpec) -> Result<(Vec<CkptTensor>, TrainState)> {
+    let (tensors, state) = checkpoint::load_full(path)?;
+    let state = state.ok_or_else(|| {
+        anyhow::anyhow!(
+            "checkpoint {path} has no training state (v1 or params-only); \
+             use --load for a params-only warm start instead of --resume"
+        )
+    })?;
+    checkpoint::ensure_spec_matches(&state.spec, &spec.to_json())?;
+    Ok((tensors, state))
+}
+
+/// The final checkpoint, written with its training state when the run
+/// completes. A stopped run skips it on purpose: its params are
+/// mid-epoch (the stop flag fires between batches), while the cadence
+/// snapshots `session::run` already wrote hold the last *completed*
+/// epoch — previously a job cancelled at epoch 9/10 persisted nothing.
+fn save_final(
+    cfg: &Config,
+    spec: &TrainSpec,
+    result: &TrainResult,
+    resume: Option<&TrainState>,
+    tensors: impl FnOnce() -> Vec<CkptTensor>,
+) -> Result<()> {
+    if let (Some(path), false) = (&cfg.save_checkpoint, result.stopped) {
+        let state = session::final_state(spec, result, resume);
+        checkpoint::save_with_state(path, &tensors(), Some(&state))?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -105,5 +200,25 @@ mod tests {
         let l = run(&cfg, StopFlag::default(), ProgressSink::default()).unwrap();
         let last = l.result.history.epochs.last().unwrap();
         assert!(last.train_acc > 0.0, "Full BP train_acc must be live");
+    }
+
+    #[test]
+    fn final_save_carries_training_state() {
+        let path = std::env::temp_dir()
+            .join(format!("ezo_launch_final_{}", std::process::id()))
+            .display()
+            .to_string();
+        let mut cfg = tiny_cfg("fp32", "cls1");
+        cfg.set("epochs", "2").unwrap();
+        cfg.set("save", &path).unwrap();
+        cfg.validate().unwrap();
+        let l = run(&cfg, StopFlag::default(), ProgressSink::default()).unwrap();
+        assert!(!l.result.stopped);
+        let (_, state) = checkpoint::load_full(&path).unwrap();
+        let state = state.expect("final save must carry training state");
+        assert_eq!(state.epochs_done, 2);
+        assert_eq!(state.step, l.result.steps_done);
+        checkpoint::ensure_spec_matches(&state.spec, &cfg.train_spec().to_json()).unwrap();
+        std::fs::remove_file(&path).ok();
     }
 }

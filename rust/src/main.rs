@@ -5,6 +5,7 @@
 //!              [--method full-zo|cls1|cls2|full-bp] [--engine xla|native]
 //!              [--precision fp32|int8|int8*] [--epochs N] [--batch N]
 //!              [--lr F] [--eps F] [--seed N] [--save ckpt] [--load ckpt]
+//!              [--resume ckpt] [--ckpt-every N] [--ckpt-keep K]
 //!              [--config file.json] [--verbose]
 //! repro eval   --load ckpt [--dataset ...] [--rotate DEG]
 //! repro exp    table1|table2|fig2|fig3|fig4|fig5|fig6|fig7|all
@@ -12,8 +13,9 @@
 //! repro memory [--model lenet|pointnet] [--batch N] [--precision fp32|int8]
 //! repro inspect            # list AOT artifacts
 //!
-//! repro serve  [--port P] [--workers N] [--queue-cap C]
-//!              # multi-job training server (HTTP/1.1 + JSON)
+//! repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]
+//!              # multi-job training server (HTTP/1.1 + JSON); --journal
+//!              # persists the job table across restarts (JSONL replay)
 //! repro submit [--addr host:port] [--name S] [--priority N] [train flags...]
 //! repro jobs   [--addr host:port]
 //! repro job    <id> [--addr host:port] [--cancel]
@@ -66,13 +68,13 @@ fn print_help() {
          \n  repro train  [--model lenet|pointnet] [--method full-zo|cls1|cls2|full-bp]\n\
          \x20              [--dataset mnist|fashion|modelnet] [--engine xla|native]\n\
          \x20              [--precision fp32|int8|int8*] [--epochs N] [--batch N] [--lr F]\n\
-         \x20              [--eval-every N] [--save ckpt] [--load ckpt] [--config file.json]\n\
-         \x20              [--verbose]\n\
+         \x20              [--eval-every N] [--save ckpt] [--load ckpt] [--resume ckpt]\n\
+         \x20              [--ckpt-every N] [--ckpt-keep K] [--config file.json] [--verbose]\n\
          \x20 repro eval   --load ckpt [--dataset D] [--rotate DEG] [--precision P]\n\
          \x20 repro exp    table1|table2|fig2..fig7|all [--fast|--paper] [--engine E]\n\
          \x20 repro memory [--model M] [--batch N] [--precision fp32|int8] [--adam]\n\
          \x20 repro inspect\n\
-         \n  repro serve  [--port P] [--workers N] [--queue-cap C]\n\
+         \n  repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]\n\
          \x20              multi-job training server; HTTP/1.1 + JSON on 127.0.0.1:\n\
          \x20              GET /healthz | GET /stats | GET /jobs | POST /jobs\n\
          \x20              GET /jobs/<id> | POST /jobs/<id>/cancel | POST /shutdown\n\
@@ -102,19 +104,32 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(path) = &cfg.load_checkpoint {
         println!("loading checkpoint {path}");
     }
+    if let Some(path) = &cfg.resume {
+        println!("resuming from checkpoint {path}");
+    }
 
     // the precision dispatch, session setup and checkpoint plumbing all
     // live in launch::run — the exact path the serve workers drive
     let l = launch::run(&cfg, StopFlag::default(), ProgressSink::default())?;
+    if let Some(epoch) = l.resumed_from {
+        println!("resumed at epoch {epoch}");
+    }
     println!(
         "done: best test acc {:.2}% (engine {})",
         l.result.history.best_test_acc() * 100.0,
         l.engine
     );
     println!("{}", l.result.timer.report("phase breakdown"));
-    // launch::run skips the save when a run is stopped mid-way
-    if let (Some(path), false) = (&cfg.save_checkpoint, l.result.stopped) {
-        println!("saved checkpoint {path}");
+    match (&cfg.save_checkpoint, l.result.stopped) {
+        (Some(path), false) => println!("saved checkpoint {path}"),
+        // a stopped run keeps its last cadence snapshot instead of a
+        // final save (params are mid-epoch at the stop point) — but
+        // only if at least one on-cadence epoch completed
+        (Some(path), true) if std::path::Path::new(path).exists() => {
+            println!("stopped: last completed-epoch snapshot remains at {path}")
+        }
+        (Some(_), true) => println!("stopped before the first snapshot; nothing saved"),
+        _ => {}
     }
     Ok(())
 }
@@ -212,6 +227,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         port: port as u16,
         workers: args.get_usize("workers", 2)?,
         queue_cap: args.get_usize("queue-cap", 64)?,
+        journal: args.get("journal").map(str::to_string),
     };
     let server = serve::Server::bind(&opts)?;
     println!(
@@ -220,6 +236,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         opts.workers,
         opts.queue_cap
     );
+    if let Some(j) = &opts.journal {
+        println!("journal: {j} (job table replayed on restart; interrupted jobs requeue)");
+    }
     println!("endpoints: GET /healthz /stats /jobs /jobs/<id>  POST /jobs /jobs/<id>/cancel /shutdown");
     server.run()
 }

@@ -15,6 +15,7 @@
 //! | POST /jobs/{id}/cancel | cancel queued / stop running             |
 //! | POST /shutdown         | drain acceptor, close queue, join pool   |
 
+use super::journal::{self, Journal};
 use super::protocol::{error_json, JobSpec, DEFAULT_PORT};
 use super::queue::JobQueue;
 use super::registry::{CancelOutcome, JobRegistry};
@@ -34,32 +35,68 @@ pub struct ServeOptions {
     pub workers: usize,
     /// Queue capacity; submissions beyond it get a 429.
     pub queue_cap: usize,
+    /// Path of the persistent JSONL job journal (`None` = in-memory
+    /// only, the pre-journal behavior). With a journal, the job table
+    /// is replayed on startup, interrupted jobs requeue from their
+    /// last checkpoint, and clean shutdown compacts the file.
+    pub journal: Option<String>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { port: DEFAULT_PORT, workers: 2, queue_cap: 64 }
+        ServeOptions { port: DEFAULT_PORT, workers: 2, queue_cap: 64, journal: None }
     }
 }
 
-/// A bound job server: acceptor + queue + registry + worker pool.
+/// A bound job server: acceptor + queue + registry + worker pool,
+/// optionally backed by a persistent job journal.
 pub struct Server {
     listener: TcpListener,
     queue: Arc<JobQueue>,
     registry: Arc<JobRegistry>,
     pool: WorkerPool,
+    journal: Option<Arc<Journal>>,
 }
 
 impl Server {
     /// Bind the listener and spawn the worker pool (jobs start flowing
-    /// only once [`Server::run`] accepts submissions).
+    /// only once [`Server::run`] accepts submissions). With a journal
+    /// configured, the previous process's job table is replayed first:
+    /// terminal jobs reappear in listings, and jobs that were queued,
+    /// running or interrupted go back on the queue — resuming from
+    /// their last checkpoint when one exists.
     pub fn bind(opts: &ServeOptions) -> Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", opts.port))
             .with_context(|| format!("binding 127.0.0.1:{}", opts.port))?;
         let queue = Arc::new(JobQueue::new(opts.queue_cap));
-        let registry = Arc::new(JobRegistry::new());
+        let (registry, jrnl, requeue) = match &opts.journal {
+            None => (Arc::new(JobRegistry::new()), None, Vec::new()),
+            Some(path) => {
+                let mut replayed = journal::replay(path)?;
+                let mut requeue = Vec::new();
+                for job in &mut replayed {
+                    if journal::prepare_requeue(job) {
+                        requeue.push((job.id, job.spec.priority));
+                    }
+                }
+                let j = Arc::new(Journal::open(path)?);
+                let registry = Arc::new(JobRegistry::with_journal(Some(j.clone())));
+                for job in replayed {
+                    registry.restore(job);
+                }
+                // collapse the replayed event stream right away so the
+                // file stays bounded across repeated restarts
+                j.compact(&registry.compacted_jobs())?;
+                (registry, Some(j), requeue)
+            }
+        };
         let pool = WorkerPool::spawn(opts.workers, queue.clone(), registry.clone());
-        Ok(Server { listener, queue, registry, pool })
+        for (id, priority) in requeue {
+            if queue.push(id, priority).is_err() {
+                registry.fail(id, "restart requeue rejected: queue full".into());
+            }
+        }
+        Ok(Server { listener, queue, registry, pool, journal: jrnl })
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
@@ -67,8 +104,10 @@ impl Server {
     }
 
     /// Accept loop; returns after a `POST /shutdown`, once the queue is
-    /// closed, in-flight jobs are stop-flagged, and every worker has
-    /// exited.
+    /// closed, in-flight jobs are stop-flagged (completing as
+    /// Interrupted, so the next journal replay requeues them), every
+    /// worker has exited, and the journal — when configured — has been
+    /// compacted with the final job states.
     pub fn run(self) -> Result<()> {
         for conn in self.listener.incoming() {
             let mut stream = match conn {
@@ -84,6 +123,9 @@ impl Server {
         // any in-flight training run
         self.registry.stop_all_running();
         self.pool.join();
+        if let Some(j) = &self.journal {
+            j.compact(&self.registry.compacted_jobs())?;
+        }
         Ok(())
     }
 
@@ -150,6 +192,11 @@ impl Server {
         };
         let priority = spec.priority;
         let id = self.registry.add(spec);
+        // journal the submission BEFORE the job becomes poppable: once
+        // push succeeds a worker may claim it immediately, and its
+        // start/epoch/terminal events must replay after the submit
+        // line. A rejected push compensates with a 'forget' event.
+        self.registry.journal_submit(id);
         match self.queue.push(id, priority) {
             Ok(()) => (
                 200,
@@ -336,7 +383,9 @@ mod tests {
 
     #[test]
     fn healthz_and_404_over_real_sockets() {
-        let server = Server::bind(&ServeOptions { port: 0, workers: 1, queue_cap: 2 }).unwrap();
+        let server =
+            Server::bind(&ServeOptions { port: 0, workers: 1, queue_cap: 2, journal: None })
+                .unwrap();
         let addr = server.local_addr().unwrap().to_string();
         let h = std::thread::spawn(move || server.run().unwrap());
 

@@ -1,0 +1,449 @@
+//! The persistent job journal: an append-only JSONL file that lets a
+//! restarted `repro serve` remember every job the previous process
+//! knew about.
+//!
+//! # Event stream
+//!
+//! While the server runs, the registry appends one JSON object per
+//! line (all built on the in-tree `util::json`, no serde):
+//!
+//! ```text
+//! {"event":"submit","id":N,"ts":UNIX,"spec":{JobSpec}}   submission (pre-queue)
+//! {"event":"forget","id":N}                              queue push rejected: void it
+//! {"event":"start","id":N,"worker":W}                    worker claimed the job
+//! {"event":"epoch","id":N,"stats":{EpochStats}}          one epoch reported
+//! {"event":"terminal","id":N,"state":S,...}              Done/Failed/Cancelled/Interrupted
+//! {"event":"job",...}                                    compacted full record (below)
+//! ```
+//!
+//! The submit line is written *before* the queue push makes the job
+//! claimable, so a worker's start/epoch/terminal events always replay
+//! after it; a push rejected with backpressure (429) appends the
+//! compensating `forget` event instead.
+//!
+//! Each line is flushed as it is written, so a hard kill loses at most
+//! the line being appended; [`replay`] skips a torn trailing line
+//! instead of refusing the whole journal.
+//!
+//! # Replay and requeue
+//!
+//! On startup the server folds the event stream into one [`Replayed`]
+//! record per job. Terminal jobs (Done/Failed/Cancelled) are restored
+//! for listing only; Queued/Running/Interrupted jobs go back on the
+//! queue — and when the job's checkpoint file carries a v2 training
+//! state, [`prepare_requeue`] arms `resume` on its config so the job
+//! continues from its last completed-epoch snapshot rather than
+//! restarting from scratch.
+//!
+//! # Compaction
+//!
+//! On clean shutdown (and again right after a replay) the journal is
+//! rewritten as one consolidated `{"event":"job",...}` line per job —
+//! spec, state, per-epoch history, best accuracy — via tmp-file +
+//! rename, so the file stays bounded by the job table instead of
+//! growing with every epoch ever trained.
+
+use super::protocol::{JobSpec, JobState};
+use crate::coordinator::checkpoint;
+use crate::coordinator::metrics::EpochStats;
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Append handle to the journal file. Shared by the registry (events)
+/// and the server (compaction) behind an `Arc`.
+pub struct Journal {
+    path: PathBuf,
+    w: Mutex<BufWriter<File>>,
+}
+
+impl Journal {
+    /// Open (creating if needed) the journal for appending.
+    pub fn open(path: impl AsRef<Path>) -> Result<Journal> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating journal dir {}", dir.display()))?;
+            }
+        }
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening job journal {}", path.display()))?;
+        Ok(Journal { path, w: Mutex::new(BufWriter::new(f)) })
+    }
+
+    /// Append one event line (flushed immediately). Best-effort: an
+    /// un-writable journal must not take down training, so failures
+    /// are logged, not propagated.
+    pub fn append(&self, ev: &Value) {
+        let mut w = self.w.lock().unwrap_or_else(|e| e.into_inner());
+        let line = json::to_string(ev);
+        if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
+            eprintln!("serve: failed to append to job journal {}", self.path.display());
+        }
+    }
+
+    /// Rewrite the journal as the given consolidated `job` records
+    /// (atomic tmp + rename), then re-point the append handle at the
+    /// fresh file.
+    pub fn compact(&self, jobs: &[Value]) -> Result<()> {
+        let tmp = PathBuf::from(format!("{}.tmp", self.path.display()));
+        {
+            let mut f = BufWriter::new(
+                File::create(&tmp)
+                    .with_context(|| format!("creating {}", tmp.display()))?,
+            );
+            for j in jobs {
+                writeln!(f, "{}", json::to_string(j))?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("publishing compacted journal {}", self.path.display()))?;
+        let f = OpenOptions::new().create(true).append(true).open(&self.path)?;
+        *self.w.lock().unwrap_or_else(|e| e.into_inner()) = BufWriter::new(f);
+        Ok(())
+    }
+}
+
+/// One job folded out of the journal's event stream.
+#[derive(Debug, Clone)]
+pub struct Replayed {
+    pub id: u64,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub submitted_unix: f64,
+    pub run_seconds: f64,
+    pub best_test_acc: f32,
+    pub error: Option<String>,
+    pub epochs: Vec<EpochStats>,
+}
+
+/// Fold a journal file into per-job records (empty when the file does
+/// not exist yet). Unparseable lines — e.g. a torn tail from a hard
+/// kill — are skipped with a warning.
+pub fn replay(path: impl AsRef<Path>) -> Result<Vec<Replayed>> {
+    let path = path.as_ref();
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading job journal {}", path.display()))?;
+    let mut jobs: BTreeMap<u64, Replayed> = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = json::parse(line) else {
+            eprintln!(
+                "serve: skipping malformed journal line {} in {}",
+                lineno + 1,
+                path.display()
+            );
+            continue;
+        };
+        let Some(id) = v.get("id").as_f64().map(|n| n as u64) else { continue };
+        match v.get("event").as_str() {
+            Some(ev @ ("submit" | "job")) => {
+                let spec = match JobSpec::from_json(v.get("spec")) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("serve: journal job {id} has an unreadable spec: {e:#}");
+                        continue;
+                    }
+                };
+                let mut job = Replayed {
+                    id,
+                    spec,
+                    state: JobState::Queued,
+                    submitted_unix: v.get("ts").as_f64().unwrap_or(0.0),
+                    run_seconds: 0.0,
+                    best_test_acc: 0.0,
+                    error: None,
+                    epochs: Vec::new(),
+                };
+                if ev == "job" {
+                    job.state = v
+                        .get("state")
+                        .as_str()
+                        .and_then(|s| JobState::parse(s).ok())
+                        .unwrap_or(JobState::Queued);
+                    job.run_seconds = v.get("run_seconds").as_f64().unwrap_or(0.0);
+                    job.best_test_acc = v.get("best_test_acc").as_f64().unwrap_or(0.0) as f32;
+                    job.error = v.get("error").as_str().map(str::to_string);
+                    if let Some(arr) = v.get("epochs").as_arr() {
+                        job.epochs =
+                            arr.iter().filter_map(|e| EpochStats::from_json(e).ok()).collect();
+                    }
+                }
+                jobs.insert(id, job);
+            }
+            Some("start") => {
+                if let Some(j) = jobs.get_mut(&id) {
+                    j.state = JobState::Running;
+                }
+            }
+            Some("epoch") => {
+                if let Some(j) = jobs.get_mut(&id) {
+                    if let Ok(s) = EpochStats::from_json(v.get("stats")) {
+                        j.best_test_acc = j.best_test_acc.max(s.test_acc);
+                        j.epochs.push(s);
+                    }
+                }
+            }
+            Some("terminal") => {
+                if let Some(j) = jobs.get_mut(&id) {
+                    j.state = v
+                        .get("state")
+                        .as_str()
+                        .and_then(|s| JobState::parse(s).ok())
+                        .unwrap_or(JobState::Failed);
+                    j.run_seconds = v.get("run_seconds").as_f64().unwrap_or(0.0);
+                    if let Some(acc) = v.get("best_test_acc").as_f64() {
+                        j.best_test_acc = acc as f32;
+                    }
+                    j.error = v.get("error").as_str().map(str::to_string);
+                }
+            }
+            // a submission whose queue push was rejected (429): void it
+            Some("forget") => {
+                jobs.remove(&id);
+            }
+            _ => {}
+        }
+    }
+    Ok(jobs.into_values().collect())
+}
+
+/// Turn a replayed non-terminal-or-interrupted job back into a
+/// schedulable one. Returns `false` for Done/Failed/Cancelled jobs
+/// (restored for listing only). For requeued jobs:
+///
+/// * if the job's checkpoint file holds a v2 training state, `resume`
+///   is armed on its config and the replayed history is trimmed to the
+///   snapshot's completed epochs (the resumed run re-reports the rest);
+/// * otherwise the history is cleared and the job reruns under its
+///   original config.
+pub fn prepare_requeue(job: &mut Replayed) -> bool {
+    match job.state {
+        JobState::Done | JobState::Failed | JobState::Cancelled => false,
+        JobState::Queued | JobState::Running | JobState::Interrupted => {
+            job.state = JobState::Queued;
+            // only a snapshot that verifiably belongs to THIS job's
+            // spec arms resume — a stale file from an earlier run at a
+            // reused path must fall back to a from-scratch rerun, not
+            // doom the requeue to a spec-mismatch failure
+            let current_spec = job.spec.config.train_spec().to_json();
+            let snapshot = job.spec.config.save_checkpoint.as_ref().and_then(|p| {
+                match checkpoint::load_full(p) {
+                    Ok((_, Some(state)))
+                        if state.epochs_done > 0
+                            && checkpoint::ensure_spec_matches(&state.spec, &current_spec)
+                                .is_ok() =>
+                    {
+                        Some((p.clone(), state.epochs_done))
+                    }
+                    _ => None,
+                }
+            });
+            match snapshot {
+                Some((path, epochs_done)) => {
+                    job.spec.config.resume = Some(path);
+                    job.spec.config.load_checkpoint = None;
+                    job.epochs.retain(|e| e.epoch < epochs_done);
+                }
+                // no snapshot: rerun from the job's original config
+                None => job.epochs.clear(),
+            }
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ezo_journal_{name}_{}", std::process::id()))
+    }
+
+    fn submit_ev(id: u64) -> Value {
+        Value::obj(vec![
+            ("event", Value::str("submit")),
+            ("id", Value::num(id as f64)),
+            ("ts", Value::num(123.0)),
+            ("spec", JobSpec::new(Config::default()).to_json()),
+        ])
+    }
+
+    #[test]
+    fn replay_folds_event_stream() {
+        let path = tmp("fold");
+        let j = Journal::open(&path).unwrap();
+        j.append(&submit_ev(1));
+        j.append(&Value::obj(vec![
+            ("event", Value::str("start")),
+            ("id", Value::num(1.0)),
+            ("worker", Value::num(0.0)),
+        ]));
+        j.append(&Value::obj(vec![
+            ("event", Value::str("epoch")),
+            ("id", Value::num(1.0)),
+            (
+                "stats",
+                EpochStats { epoch: 0, test_acc: 0.5, ..Default::default() }.to_json(),
+            ),
+        ]));
+        j.append(&submit_ev(2));
+        j.append(&Value::obj(vec![
+            ("event", Value::str("terminal")),
+            ("id", Value::num(2.0)),
+            ("state", Value::str("cancelled")),
+            ("best_test_acc", Value::num(0.0)),
+            ("run_seconds", Value::num(0.0)),
+        ]));
+        // torn tail from a crash mid-append: skipped, not fatal
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"event\":\"epo").unwrap();
+        }
+        let jobs = replay(&path).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].id, 1);
+        assert_eq!(jobs[0].state, JobState::Running);
+        assert_eq!(jobs[0].epochs.len(), 1);
+        assert!((jobs[0].best_test_acc - 0.5).abs() < 1e-6);
+        assert_eq!(jobs[1].state, JobState::Cancelled);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_journal_is_empty() {
+        assert!(replay(tmp("nonexistent")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn forget_voids_a_rejected_submission() {
+        let path = tmp("forget");
+        let j = Journal::open(&path).unwrap();
+        j.append(&submit_ev(1));
+        j.append(&submit_ev(2));
+        j.append(&Value::obj(vec![
+            ("event", Value::str("forget")),
+            ("id", Value::num(2.0)),
+        ]));
+        let jobs = replay(&path).unwrap();
+        assert_eq!(jobs.len(), 1, "the 429'd submission must not replay");
+        assert_eq!(jobs[0].id, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compact_rewrites_and_keeps_appending() {
+        let path = tmp("compact");
+        let j = Journal::open(&path).unwrap();
+        j.append(&submit_ev(1));
+        j.append(&submit_ev(2));
+        let consolidated = Value::obj(vec![
+            ("event", Value::str("job")),
+            ("id", Value::num(1.0)),
+            ("ts", Value::num(9.0)),
+            ("spec", JobSpec::new(Config::default()).to_json()),
+            ("state", Value::str("done")),
+            ("best_test_acc", Value::num(0.75)),
+            ("run_seconds", Value::num(1.5)),
+            ("epochs", Value::Arr(vec![])),
+        ]);
+        j.compact(std::slice::from_ref(&consolidated)).unwrap();
+        // appends after compaction land in the new file
+        j.append(&submit_ev(3));
+        let jobs = replay(&path).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].id, 1);
+        assert_eq!(jobs[0].state, JobState::Done);
+        assert!((jobs[0].best_test_acc - 0.75).abs() < 1e-6);
+        assert_eq!(jobs[1].id, 3);
+        assert_eq!(jobs[1].state, JobState::Queued);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn requeue_rules() {
+        let mk = |state: JobState| Replayed {
+            id: 1,
+            spec: JobSpec::new(Config::default()),
+            state,
+            submitted_unix: 0.0,
+            run_seconds: 0.0,
+            best_test_acc: 0.0,
+            error: None,
+            epochs: vec![EpochStats::default()],
+        };
+        for s in [JobState::Done, JobState::Failed, JobState::Cancelled] {
+            let mut job = mk(s);
+            assert!(!prepare_requeue(&mut job), "{s:?} must not requeue");
+            assert_eq!(job.state, s);
+        }
+        for s in [JobState::Queued, JobState::Running, JobState::Interrupted] {
+            let mut job = mk(s);
+            assert!(prepare_requeue(&mut job), "{s:?} must requeue");
+            assert_eq!(job.state, JobState::Queued);
+            // no checkpoint file ⇒ fresh rerun: history cleared
+            assert!(job.epochs.is_empty());
+            assert_eq!(job.spec.config.resume, None);
+        }
+    }
+
+    #[test]
+    fn requeue_arms_resume_when_snapshot_matches() {
+        let ckpt = tmp("requeue_ckpt").display().to_string();
+        let mut cfg = Config::default();
+        cfg.set("save", &ckpt).unwrap();
+        let state = checkpoint::TrainState {
+            epochs_done: 2,
+            step: 8,
+            best_test_acc: 0.5,
+            last_test_loss: 1.0,
+            last_test_acc: 0.5,
+            spec: cfg.train_spec().to_json(),
+        };
+        checkpoint::save_with_state(&ckpt, &[], Some(&state)).unwrap();
+        let mk = |cfg: Config| Replayed {
+            id: 4,
+            spec: JobSpec::new(cfg),
+            state: JobState::Interrupted,
+            submitted_unix: 0.0,
+            run_seconds: 3.0,
+            best_test_acc: 0.5,
+            error: None,
+            epochs: (0..4)
+                .map(|i| EpochStats { epoch: i, ..Default::default() })
+                .collect(),
+        };
+        let mut job = mk(cfg.clone());
+        assert!(prepare_requeue(&mut job));
+        assert_eq!(job.spec.config.resume.as_deref(), Some(ckpt.as_str()));
+        // history trimmed to the snapshot's completed epochs
+        assert_eq!(job.epochs.len(), 2);
+
+        // a stale snapshot from a DIFFERENT run at the same path must
+        // fall back to a from-scratch rerun, not arm a doomed resume
+        let mut other = cfg;
+        other.set("seed", "999").unwrap();
+        let mut job = mk(other);
+        assert!(prepare_requeue(&mut job));
+        assert_eq!(job.spec.config.resume, None);
+        assert!(job.epochs.is_empty());
+        std::fs::remove_file(&ckpt).ok();
+    }
+}

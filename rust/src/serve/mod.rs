@@ -2,18 +2,24 @@
 //! coordinator). Turns the one-shot trainers into a service: many
 //! concurrent jobs, queued with priority + backpressure, scheduled onto
 //! a pool of worker threads, observable over a dependency-free HTTP/1.1
-//! + JSON control plane, cancellable mid-run, and checkpointed.
+//! + JSON control plane, cancellable mid-run, checkpointed, and — with
+//! `--journal` — durable across server restarts.
 //!
 //! Layering (std-only; JSON via the in-tree `util::json`):
 //!
 //! * [`protocol`] — `JobSpec` / `JobState` / error bodies; a job spec
 //!   covers every scenario `repro train` supports (both models, all
-//!   three datasets, all four methods, FP32/INT8/INT8*, checkpoints).
+//!   three datasets, all four methods, FP32/INT8/INT8*, checkpoints,
+//!   checkpoint-resume).
 //! * [`queue`]    — bounded MPMC priority+FIFO queue on `Mutex`+`Condvar`;
 //!   a full queue rejects submissions (HTTP 429) instead of blocking.
-//! * [`registry`] — in-memory job table (Queued→Running→Done/Failed/
-//!   Cancelled), per-epoch history snapshots, aggregate `ServerStats`
-//!   rolled up from each job's `telemetry::PhaseTimer`.
+//! * [`registry`] — job table (Queued→Running→Done/Failed/Cancelled/
+//!   Interrupted), per-epoch history snapshots, aggregate `ServerStats`
+//!   rolled up from each job's `telemetry::PhaseTimer`; doubles as the
+//!   journal's event source when one is configured.
+//! * [`journal`]  — append-only JSONL job log: replayed at startup so
+//!   `GET /jobs` survives restarts, requeues interrupted jobs from
+//!   their last checkpoint, compacted on clean shutdown.
 //! * [`worker`]   — N OS threads running the exact `repro train` path
 //!   (`launch::run` into the unified `coordinator::session` loop) with a
 //!   cooperative [`crate::coordinator::StopFlag`] and a registry-backed
@@ -22,16 +28,20 @@
 //!   POST /jobs, POST /jobs/{id}/cancel, GET /stats, GET /healthz,
 //!   POST /shutdown) plus the tiny client used by `repro submit|jobs|job`.
 //!
-//! Entry points: `repro serve --port P --workers N --queue-cap C` boots
-//! [`http::Server`]; `repro submit|jobs|job|stats` talk to it.
+//! Entry points: `repro serve --port P --workers N --queue-cap C
+//! [--journal F]` boots [`http::Server`]; `repro submit|jobs|job|stats`
+//! talk to it. The HTTP surface is documented with request/response
+//! examples in `rust/docs/SERVE_API.md`.
 
 pub mod http;
+pub mod journal;
 pub mod protocol;
 pub mod queue;
 pub mod registry;
 pub mod worker;
 
 pub use http::{request, ServeOptions, Server};
+pub use journal::Journal;
 pub use protocol::{JobSpec, JobState, DEFAULT_PORT};
 pub use queue::{JobQueue, QueueFull};
 pub use registry::{CancelOutcome, JobOutcome, JobRegistry};

@@ -109,11 +109,23 @@ impl JobSpec {
         if let Some(p) = &c.save_checkpoint {
             put("save", Value::str(p.clone()));
         }
+        if let Some(p) = &c.resume {
+            put("resume", Value::str(p.clone()));
+        }
+        put("ckpt_every", Value::num(c.ckpt_every as f64));
+        put("ckpt_keep", Value::num(c.ckpt_keep as f64));
         Value::Obj(obj)
     }
 }
 
-/// Job lifecycle: Queued → Running → Done | Failed | Cancelled.
+/// Job lifecycle: Queued → Running → Done | Failed | Cancelled |
+/// Interrupted.
+///
+/// `Interrupted` is the shutdown-stop state: the server's own shutdown
+/// fired the job's stop flag, not a user cancel. It is terminal for
+/// the current process, but a journal replay on the next startup
+/// requeues interrupted jobs (from their last checkpoint when one
+/// exists) — cancelled jobs stay cancelled.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
     Queued,
@@ -121,6 +133,7 @@ pub enum JobState {
     Done,
     Failed,
     Cancelled,
+    Interrupted,
 }
 
 impl JobState {
@@ -131,11 +144,28 @@ impl JobState {
             JobState::Done => "done",
             JobState::Failed => "failed",
             JobState::Cancelled => "cancelled",
+            JobState::Interrupted => "interrupted",
         }
     }
 
+    /// Inverse of [`JobState::as_str`] (journal replay).
+    pub fn parse(s: &str) -> Result<JobState> {
+        Ok(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            "interrupted" => JobState::Interrupted,
+            other => anyhow::bail!("unknown job state '{other}'"),
+        })
+    }
+
     pub fn is_terminal(&self) -> bool {
-        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+        matches!(
+            self,
+            JobState::Done | JobState::Failed | JobState::Cancelled | JobState::Interrupted
+        )
     }
 }
 
@@ -256,6 +286,41 @@ mod tests {
         assert!(!JobState::Running.is_terminal());
         assert!(JobState::Done.is_terminal());
         assert!(JobState::Cancelled.is_terminal());
+        assert!(JobState::Interrupted.is_terminal());
         assert_eq!(JobState::Failed.as_str(), "failed");
+        for s in [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Done,
+            JobState::Failed,
+            JobState::Cancelled,
+            JobState::Interrupted,
+        ] {
+            assert_eq!(JobState::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(JobState::parse("paused").is_err());
+    }
+
+    #[test]
+    fn checkpoint_keys_roundtrip_through_job_spec() {
+        let v = json::parse(
+            r#"{"method": "cls1", "engine": "native", "epochs": 3,
+                "save": "/tmp/j.ckpt", "ckpt_every": 2, "ckpt_keep": 4,
+                "resume": "/tmp/j.ckpt"}"#,
+        )
+        .unwrap();
+        let spec = JobSpec::from_json(&v).unwrap();
+        assert_eq!(spec.config.save_checkpoint.as_deref(), Some("/tmp/j.ckpt"));
+        assert_eq!(spec.config.resume.as_deref(), Some("/tmp/j.ckpt"));
+        assert_eq!(spec.config.ckpt_every, 2);
+        assert_eq!(spec.config.ckpt_keep, 4);
+        let back = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.config.resume, spec.config.resume);
+        assert_eq!(back.config.ckpt_every, spec.config.ckpt_every);
+        assert_eq!(back.config.ckpt_keep, spec.config.ckpt_keep);
+        assert_eq!(
+            back.config.train_spec().to_json(),
+            spec.config.train_spec().to_json()
+        );
     }
 }

@@ -1,14 +1,21 @@
 //! In-memory job table: id → spec + state machine + per-epoch history,
 //! plus aggregate server statistics (jobs served, epochs/sec, per-phase
 //! time rolled up from each job's `telemetry::PhaseTimer`).
+//!
+//! When the server runs with a job journal, the registry doubles as the
+//! journal's event source: every accepted submission, claim, epoch and
+//! terminal transition appends one JSONL line (see `serve::journal`),
+//! and [`JobRegistry::restore`] re-inserts jobs replayed at startup
+//! without re-journaling their history (compaction snapshots it).
 
+use super::journal::{Journal, Replayed};
 use super::protocol::{JobSpec, JobState};
 use crate::coordinator::control::StopFlag;
 use crate::coordinator::metrics::EpochStats;
 use crate::telemetry::{PhaseTimer, ALL_PHASES};
 use crate::util::json::Value;
 use std::collections::BTreeMap;
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 /// Everything the worker hands back when a job leaves the Running state.
@@ -27,7 +34,7 @@ pub enum CancelOutcome {
     /// The job is running; its stop flag fired and a worker will mark it
     /// Cancelled at the next batch boundary.
     StopRequested,
-    /// Already Done/Failed/Cancelled — nothing to do.
+    /// Already Done/Failed/Cancelled/Interrupted — nothing to do.
     AlreadyTerminal(JobState),
 }
 
@@ -43,6 +50,10 @@ pub struct JobRecord {
     pub epochs: Vec<EpochStats>,
     pub best_test_acc: f32,
     pub error: Option<String>,
+    /// Set when the server's own shutdown fired this job's stop flag:
+    /// the stopped run completes as Interrupted (requeued on the next
+    /// journal replay) rather than Cancelled (a user decision).
+    interrupted: bool,
 }
 
 impl JobRecord {
@@ -88,6 +99,42 @@ impl JobRecord {
         }
         Value::Obj(obj)
     }
+
+    /// The consolidated journal record (`{"event":"job",...}`) used by
+    /// startup/shutdown compaction.
+    fn compacted_json(&self) -> Value {
+        let mut pairs = vec![
+            ("event", Value::str("job")),
+            ("id", Value::num(self.id as f64)),
+            ("ts", Value::num(self.submitted_unix)),
+            ("spec", self.spec.to_json()),
+            ("state", Value::str(self.state.as_str())),
+            ("best_test_acc", Value::num(self.best_test_acc as f64)),
+            ("run_seconds", Value::num(self.live_run_seconds())),
+            (
+                "epochs",
+                Value::Arr(self.epochs.iter().map(EpochStats::to_json).collect()),
+            ),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Value::str(e.clone())));
+        }
+        Value::obj(pairs)
+    }
+}
+
+fn terminal_event(job: &JobRecord) -> Value {
+    let mut pairs = vec![
+        ("event", Value::str("terminal")),
+        ("id", Value::num(job.id as f64)),
+        ("state", Value::str(job.state.as_str())),
+        ("best_test_acc", Value::num(job.best_test_acc as f64)),
+        ("run_seconds", Value::num(job.run_seconds)),
+    ];
+    if let Some(e) = &job.error {
+        pairs.push(("error", Value::str(e.clone())));
+    }
+    Value::obj(pairs)
 }
 
 struct Inner {
@@ -100,6 +147,7 @@ struct Inner {
 /// Thread-shared job table; every method takes `&self`.
 pub struct JobRegistry {
     started_at: Instant,
+    journal: Option<Arc<Journal>>,
     inner: Mutex<Inner>,
 }
 
@@ -111,8 +159,14 @@ impl Default for JobRegistry {
 
 impl JobRegistry {
     pub fn new() -> JobRegistry {
+        JobRegistry::with_journal(None)
+    }
+
+    /// A registry that appends every job event to `journal`.
+    pub fn with_journal(journal: Option<Arc<Journal>>) -> JobRegistry {
         JobRegistry {
             started_at: Instant::now(),
+            journal,
             inner: Mutex::new(Inner {
                 jobs: BTreeMap::new(),
                 next_id: 1,
@@ -126,7 +180,16 @@ impl JobRegistry {
         self.inner.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
-    /// Register a new job in the Queued state; returns its id.
+    fn append_event(&self, ev: Option<Value>) {
+        if let (Some(j), Some(ev)) = (&self.journal, ev) {
+            j.append(&ev);
+        }
+    }
+
+    /// Register a new job in the Queued state; returns its id. NOT yet
+    /// journaled — the submission only becomes durable once it is also
+    /// queued (see [`JobRegistry::journal_submit`]); a rejected push is
+    /// rolled back with [`JobRegistry::forget`] and leaves no trace.
     pub fn add(&self, spec: JobSpec) -> u64 {
         let mut st = self.lock();
         let id = st.next_id;
@@ -149,76 +212,174 @@ impl JobRegistry {
                 epochs: Vec::new(),
                 best_test_acc: 0.0,
                 error: None,
+                interrupted: false,
             },
         );
         id
     }
 
-    /// Roll back a submission whose queue push was rejected.
+    /// Journal a submission. Call BEFORE the queue push makes the job
+    /// claimable (worker events must replay after the submit line); a
+    /// rejected push is compensated by [`JobRegistry::forget`]'s
+    /// 'forget' event.
+    pub fn journal_submit(&self, id: u64) {
+        if self.journal.is_none() {
+            return;
+        }
+        let ev = {
+            let st = self.lock();
+            st.jobs.get(&id).map(|job| {
+                Value::obj(vec![
+                    ("event", Value::str("submit")),
+                    ("id", Value::num(id as f64)),
+                    ("ts", Value::num(job.submitted_unix)),
+                    ("spec", job.spec.to_json()),
+                ])
+            })
+        };
+        self.append_event(ev);
+    }
+
+    /// Re-insert a job replayed from the journal at startup. Historical
+    /// events are not re-journaled (compaction snapshots them); the id
+    /// counter advances past every restored id.
+    pub fn restore(&self, r: Replayed) {
+        let mut st = self.lock();
+        st.next_id = st.next_id.max(r.id + 1);
+        st.jobs.insert(
+            r.id,
+            JobRecord {
+                id: r.id,
+                spec: r.spec,
+                state: r.state,
+                stop: StopFlag::new(),
+                worker: None,
+                submitted_unix: r.submitted_unix,
+                started: None,
+                run_seconds: r.run_seconds,
+                epochs: r.epochs,
+                best_test_acc: r.best_test_acc,
+                error: r.error,
+                interrupted: false,
+            },
+        );
+    }
+
+    /// Roll back a submission whose queue push was rejected: the job
+    /// leaves the table, and a 'forget' event voids its already-written
+    /// submit line so a 429'd job never replays on restart.
     pub fn forget(&self, id: u64) {
         self.lock().jobs.remove(&id);
+        self.append_event(self.journal.is_some().then(|| {
+            Value::obj(vec![("event", Value::str("forget")), ("id", Value::num(id as f64))])
+        }));
     }
 
     /// Worker-side claim: Queued → Running. `None` if the job was
     /// cancelled (or vanished) while waiting in the queue.
     pub fn claim(&self, id: u64, worker: usize) -> Option<(JobSpec, StopFlag)> {
-        let mut st = self.lock();
-        let job = st.jobs.get_mut(&id)?;
-        if job.state != JobState::Queued {
-            return None;
-        }
-        job.state = JobState::Running;
-        job.worker = Some(worker);
-        job.started = Some(Instant::now());
-        Some((job.spec.clone(), job.stop.clone()))
+        let (out, ev) = {
+            let mut st = self.lock();
+            let job = st.jobs.get_mut(&id)?;
+            if job.state != JobState::Queued {
+                return None;
+            }
+            job.state = JobState::Running;
+            job.worker = Some(worker);
+            job.started = Some(Instant::now());
+            (
+                (job.spec.clone(), job.stop.clone()),
+                self.journal.is_some().then(|| {
+                    Value::obj(vec![
+                        ("event", Value::str("start")),
+                        ("id", Value::num(id as f64)),
+                        ("worker", Value::num(worker as f64)),
+                    ])
+                }),
+            )
+        };
+        self.append_event(ev);
+        Some(out)
     }
 
     /// Per-epoch progress from a running job.
     pub fn record_epoch(&self, id: u64, stats: EpochStats) {
-        let mut st = self.lock();
-        st.total_epochs += 1;
-        if let Some(job) = st.jobs.get_mut(&id) {
-            job.best_test_acc = job.best_test_acc.max(stats.test_acc);
-            job.epochs.push(stats);
-        }
+        let ev = {
+            let mut st = self.lock();
+            st.total_epochs += 1;
+            if let Some(job) = st.jobs.get_mut(&id) {
+                job.best_test_acc = job.best_test_acc.max(stats.test_acc);
+                job.epochs.push(stats.clone());
+            }
+            self.journal.is_some().then(|| {
+                Value::obj(vec![
+                    ("event", Value::str("epoch")),
+                    ("id", Value::num(id as f64)),
+                    ("stats", stats.to_json()),
+                ])
+            })
+        };
+        self.append_event(ev);
     }
 
-    /// Running → Done (or Cancelled when the outcome says it stopped).
+    /// Running → Done, or — when the outcome says it stopped —
+    /// Cancelled (user cancel) / Interrupted (server shutdown).
     pub fn complete(&self, id: u64, outcome: JobOutcome) {
-        let mut st = self.lock();
-        st.timer.merge(&outcome.timer);
-        if let Some(job) = st.jobs.get_mut(&id) {
-            job.state = if outcome.stopped { JobState::Cancelled } else { JobState::Done };
+        let ev = {
+            let mut st = self.lock();
+            st.timer.merge(&outcome.timer);
+            let Some(job) = st.jobs.get_mut(&id) else { return };
+            job.state = if outcome.stopped {
+                if job.interrupted {
+                    JobState::Interrupted
+                } else {
+                    JobState::Cancelled
+                }
+            } else {
+                JobState::Done
+            };
             job.best_test_acc = job.best_test_acc.max(outcome.best_test_acc);
             job.run_seconds = job.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
-        }
+            self.journal.is_some().then(|| terminal_event(job))
+        };
+        self.append_event(ev);
     }
 
     /// Running → Failed with an error message.
     pub fn fail(&self, id: u64, msg: String) {
-        let mut st = self.lock();
-        if let Some(job) = st.jobs.get_mut(&id) {
+        let ev = {
+            let mut st = self.lock();
+            let Some(job) = st.jobs.get_mut(&id) else { return };
             job.state = JobState::Failed;
             job.error = Some(msg);
             job.run_seconds = job.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
-        }
+            self.journal.is_some().then(|| terminal_event(job))
+        };
+        self.append_event(ev);
     }
 
     /// Cancel by id. Unknown ids return `None`.
     pub fn cancel(&self, id: u64) -> Option<CancelOutcome> {
-        let mut st = self.lock();
-        let job = st.jobs.get_mut(&id)?;
-        Some(match job.state {
-            JobState::Queued => {
-                job.state = JobState::Cancelled;
-                CancelOutcome::CancelledQueued
+        let (outcome, ev) = {
+            let mut st = self.lock();
+            let job = st.jobs.get_mut(&id)?;
+            match job.state {
+                JobState::Queued => {
+                    job.state = JobState::Cancelled;
+                    (
+                        CancelOutcome::CancelledQueued,
+                        self.journal.is_some().then(|| terminal_event(job)),
+                    )
+                }
+                JobState::Running => {
+                    job.stop.request_stop();
+                    (CancelOutcome::StopRequested, None)
+                }
+                terminal => (CancelOutcome::AlreadyTerminal(terminal), None),
             }
-            JobState::Running => {
-                job.stop.request_stop();
-                CancelOutcome::StopRequested
-            }
-            terminal => CancelOutcome::AlreadyTerminal(terminal),
-        })
+        };
+        self.append_event(ev);
+        Some(outcome)
     }
 
     pub fn state_of(&self, id: u64) -> Option<JobState> {
@@ -227,14 +388,23 @@ impl JobRegistry {
 
     /// Fire the stop flag of every Running job (server shutdown): the
     /// workers notice at their next batch boundary and exit promptly
-    /// instead of holding the pool-join for the rest of the run.
+    /// instead of holding the pool-join for the rest of the run. Jobs
+    /// stopped this way complete as Interrupted — the journal replay on
+    /// the next startup requeues them from their last checkpoint —
+    /// while user cancels stay terminally Cancelled.
     pub fn stop_all_running(&self) {
-        let st = self.lock();
-        for job in st.jobs.values() {
+        let mut st = self.lock();
+        for job in st.jobs.values_mut() {
             if job.state == JobState::Running {
+                job.interrupted = true;
                 job.stop.request_stop();
             }
         }
+    }
+
+    /// Consolidated journal records for every job (compaction).
+    pub fn compacted_jobs(&self) -> Vec<Value> {
+        self.lock().jobs.values().map(JobRecord::compacted_json).collect()
     }
 
     /// Full detail JSON for one job (`GET /jobs/<id>`).
@@ -253,9 +423,11 @@ impl JobRegistry {
 
     /// Aggregate stats (`GET /stats`). `queue_depth` comes from the
     /// queue, which the registry deliberately knows nothing about.
+    /// `epochs_total` counts epochs trained by THIS process (journal
+    /// restores do not inflate `epochs_per_sec`).
     pub fn stats_json(&self, queue_depth: usize, workers: usize) -> Value {
         let st = self.lock();
-        let mut counts = [0usize; 5];
+        let mut counts = [0usize; 6];
         for j in st.jobs.values() {
             let i = match j.state {
                 JobState::Queued => 0,
@@ -263,6 +435,7 @@ impl JobRegistry {
                 JobState::Done => 2,
                 JobState::Failed => 3,
                 JobState::Cancelled => 4,
+                JobState::Interrupted => 5,
             };
             counts[i] += 1;
         }
@@ -284,6 +457,7 @@ impl JobRegistry {
             ("jobs_done", Value::num(counts[2] as f64)),
             ("jobs_failed", Value::num(counts[3] as f64)),
             ("jobs_cancelled", Value::num(counts[4] as f64)),
+            ("jobs_interrupted", Value::num(counts[5] as f64)),
             ("epochs_total", Value::num(st.total_epochs as f64)),
             ("epochs_per_sec", Value::num(st.total_epochs as f64 / uptime.max(1e-9))),
             ("phase_seconds", phases),
@@ -350,6 +524,47 @@ mod tests {
     }
 
     #[test]
+    fn shutdown_stop_completes_as_interrupted() {
+        // the same stopped outcome lands differently depending on who
+        // asked: stop_all_running (shutdown) ⇒ Interrupted, a user
+        // cancel ⇒ Cancelled (exercised above)
+        let r = JobRegistry::new();
+        let id = r.add(spec());
+        let (_, stop) = r.claim(id, 0).unwrap();
+        r.stop_all_running();
+        assert!(stop.should_stop());
+        r.complete(id, JobOutcome { best_test_acc: 0.1, timer: PhaseTimer::new(), stopped: true });
+        assert_eq!(r.state_of(id), Some(JobState::Interrupted));
+        assert_eq!(
+            r.cancel(id),
+            Some(CancelOutcome::AlreadyTerminal(JobState::Interrupted))
+        );
+    }
+
+    #[test]
+    fn restore_rebuilds_table_and_advances_ids() {
+        use super::super::journal::Replayed;
+        let r = JobRegistry::new();
+        r.restore(Replayed {
+            id: 7,
+            spec: spec(),
+            state: JobState::Done,
+            submitted_unix: 11.0,
+            run_seconds: 2.0,
+            best_test_acc: 0.8,
+            error: None,
+            epochs: vec![EpochStats { epoch: 0, test_acc: 0.8, ..Default::default() }],
+        });
+        assert_eq!(r.state_of(7), Some(JobState::Done));
+        let j = r.job_json(7).unwrap();
+        assert_eq!(j.get("epochs_done").as_usize(), Some(1));
+        assert!(j.get("best_test_acc").as_f64().unwrap() > 0.79);
+        // new submissions never collide with restored ids
+        let fresh = r.add(spec());
+        assert_eq!(fresh, 8);
+    }
+
+    #[test]
     fn failure_records_error() {
         let r = JobRegistry::new();
         let id = r.add(spec());
@@ -373,6 +588,7 @@ mod tests {
         assert_eq!(s.get("jobs_total").as_usize(), Some(2));
         assert_eq!(s.get("jobs_running").as_usize(), Some(1));
         assert_eq!(s.get("jobs_queued").as_usize(), Some(1));
+        assert_eq!(s.get("jobs_interrupted").as_usize(), Some(0));
         assert_eq!(s.get("queue_depth").as_usize(), Some(1));
         assert_eq!(s.get("workers").as_usize(), Some(4));
         assert_eq!(s.get("epochs_total").as_usize(), Some(2));

@@ -4,6 +4,12 @@
 //! `coordinator::session` loop (FP32 over either engine, INT8/INT8*
 //! over the NITI path) — with the job's stop flag and a registry-backed
 //! progress sink armed on the spec.
+//!
+//! Durability rides the same path with zero worker-side code: a job
+//! whose config sets `save` gets cadence snapshots from inside the
+//! session loop, and a requeued-after-restart job arrives with
+//! `resume` armed on its config, so `launch::run` restores params +
+//! loop state before the first batch.
 
 use super::queue::JobQueue;
 use super::registry::{JobOutcome, JobRegistry};

@@ -1,0 +1,245 @@
+//! Durability acceptance tests: EZOC v2 checkpoint round-trips
+//! (property-tested), v1 forward compatibility, and the headline
+//! resume-parity guarantee — a run checkpointed at epoch k and resumed
+//! matches an uninterrupted run EXACTLY (same params, same metrics),
+//! for both the FP32 and the INT8 stacks, because minibatch order is a
+//! pure function of `(seed, epoch)` and ZO perturbations of
+//! `(seed, step)`.
+
+use elasticzo::config::Config;
+use elasticzo::coordinator::checkpoint::{
+    self, CkptTensor, TensorData, TrainState,
+};
+use elasticzo::coordinator::control::{ProgressSink, StopFlag};
+use elasticzo::coordinator::{Model, ParamSet, TrainSpec};
+use elasticzo::launch;
+use elasticzo::util::prop;
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("ezo_resume_{name}_{}", std::process::id()))
+        .display()
+        .to_string()
+}
+
+#[test]
+fn v2_checkpoint_roundtrip_property() {
+    prop::cases(20, |rng, case| {
+        let ntensors = 1 + (rng.next_u64() % 4) as usize;
+        let tensors: Vec<CkptTensor> = (0..ntensors)
+            .map(|i| {
+                let rank = 1 + (rng.next_u64() % 3) as usize;
+                let dims: Vec<usize> =
+                    (0..rank).map(|_| 1 + (rng.next_u64() % 5) as usize).collect();
+                let numel: usize = dims.iter().product();
+                let name = format!("tensor_{i}");
+                if rng.bernoulli(0.5) {
+                    CkptTensor {
+                        name,
+                        dims,
+                        data: TensorData::F32((0..numel).map(|_| rng.normal()).collect()),
+                    }
+                } else {
+                    CkptTensor {
+                        name,
+                        dims,
+                        data: TensorData::I8 {
+                            data: (0..numel)
+                                .map(|_| rng.uniform_i32(-128, 127) as i8)
+                                .collect(),
+                            exp: rng.uniform_i32(-20, 20),
+                        },
+                    }
+                }
+            })
+            .collect();
+        let state = (case % 2 == 0).then(|| TrainState {
+            epochs_done: (rng.next_u64() % 100) as usize,
+            step: rng.next_u64() % 1_000_000,
+            best_test_acc: rng.uniform(),
+            last_test_loss: rng.normal().abs(),
+            last_test_acc: rng.uniform(),
+            spec: TrainSpec::default().to_json(),
+        });
+
+        let path = tmp(&format!("prop_{case}"));
+        checkpoint::save_with_state(&path, &tensors, state.as_ref()).unwrap();
+        let (back_tensors, back_state) = checkpoint::load_full(&path).unwrap();
+        assert_eq!(back_tensors, tensors, "case {case}: tensors must round-trip bitwise");
+        assert_eq!(back_state, state, "case {case}: training state must round-trip");
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn v1_files_remain_loadable() {
+    // a v1 file written byte-by-byte (the legacy writer no longer
+    // exists): same tensor section, no version-2 trailer
+    let mut b: Vec<u8> = Vec::new();
+    b.extend_from_slice(b"EZOC");
+    b.extend_from_slice(&1u32.to_le_bytes());
+    b.extend_from_slice(&2u32.to_le_bytes()); // two tensors
+    for (name, vals) in [("conv1_w", vec![0.5f32, -1.5]), ("fc_b", vec![3.25f32, 0.0])] {
+        b.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        b.extend_from_slice(name.as_bytes());
+        b.push(0); // f32
+        b.extend_from_slice(&0i32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+        b.extend_from_slice(&(vals.len() as u64).to_le_bytes());
+        for v in &vals {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let path = tmp("v1");
+    std::fs::write(&path, &b).unwrap();
+
+    let (tensors, state) = checkpoint::load_full(&path).unwrap();
+    assert!(state.is_none(), "v1 files have no training state");
+    assert_eq!(tensors.len(), 2);
+    assert_eq!(tensors[0].name, "conv1_w");
+    assert_eq!(tensors[0].data, TensorData::F32(vec![0.5, -1.5]));
+    assert_eq!(tensors[1].name, "fc_b");
+    std::fs::remove_file(&path).ok();
+}
+
+fn parity_cfg(precision: &str, epochs: usize, save: &str) -> Config {
+    let mut cfg = Config::default();
+    cfg.set("engine", "native").unwrap();
+    cfg.set("method", "cls1").unwrap();
+    cfg.set("precision", precision).unwrap();
+    cfg.set("epochs", &epochs.to_string()).unwrap();
+    cfg.set("batch", "16").unwrap();
+    cfg.set("train_n", "64").unwrap();
+    cfg.set("test_n", "32").unwrap();
+    cfg.set("seed", "7").unwrap();
+    cfg.set("save", save).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Stop the run right after epoch `k` reports (the loop exits at the
+/// top of epoch k+1, after epoch k's cadence snapshot was written).
+fn stop_after_epoch(k: usize) -> (StopFlag, ProgressSink) {
+    let stop = StopFlag::new();
+    let stop2 = stop.clone();
+    let sink = ProgressSink::new(move |e| {
+        if e.epoch == k {
+            stop2.request_stop();
+        }
+    });
+    (stop, sink)
+}
+
+/// Train `epochs` straight; train a second lineage interrupted after
+/// `interrupt_after + 1` completed epochs and resumed to the end; both
+/// final checkpoints (params AND training state) must match bitwise.
+fn assert_resume_parity(precision: &str, epochs: usize, interrupt_after: usize) {
+    let path_a = tmp(&format!("straight_{precision}", precision = precision.replace('*', "s")));
+    let path_b = tmp(&format!("resumed_{precision}", precision = precision.replace('*', "s")));
+
+    // lineage A: uninterrupted
+    let cfg_a = parity_cfg(precision, epochs, &path_a);
+    let la = launch::run(&cfg_a, StopFlag::default(), ProgressSink::default()).unwrap();
+    assert!(!la.result.stopped);
+    assert_eq!(la.result.history.epochs.len(), epochs);
+
+    // lineage B: interrupted mid-run…
+    let cfg_b = parity_cfg(precision, epochs, &path_b);
+    let (stop, sink) = stop_after_epoch(interrupt_after);
+    let lb = launch::run(&cfg_b, stop, sink).unwrap();
+    assert!(lb.result.stopped, "{precision}: run must stop early");
+    let (_, state) = checkpoint::load_full(&path_b).unwrap();
+    let state = state.expect("cadence snapshot carries training state");
+    assert_eq!(
+        state.epochs_done,
+        interrupt_after + 1,
+        "{precision}: the cancelled run must persist its last completed epoch"
+    );
+
+    // …and resumed to completion
+    let mut cfg_r = parity_cfg(precision, epochs, &path_b);
+    cfg_r.set("resume", &path_b).unwrap();
+    cfg_r.validate().unwrap();
+    let lr = launch::run(&cfg_r, StopFlag::default(), ProgressSink::default()).unwrap();
+    assert_eq!(lr.resumed_from, Some(interrupt_after + 1));
+    assert!(!lr.result.stopped);
+    assert_eq!(
+        lr.result.history.epochs.len(),
+        epochs - (interrupt_after + 1),
+        "{precision}: resume must run exactly the remaining epochs"
+    );
+
+    // the resumed lineage's final epoch must equal the straight run's
+    // final epoch EXACTLY (same losses, same accuracies)
+    let ea = la.result.history.epochs.last().unwrap();
+    let eb = lr.result.history.epochs.last().unwrap();
+    assert_eq!(ea.epoch, eb.epoch, "{precision}");
+    assert_eq!(ea.train_loss, eb.train_loss, "{precision}: train loss must match bitwise");
+    assert_eq!(ea.test_loss, eb.test_loss, "{precision}: test loss must match bitwise");
+    assert_eq!(ea.train_acc, eb.train_acc, "{precision}: train acc must match");
+    assert_eq!(ea.test_acc, eb.test_acc, "{precision}: test acc must match");
+
+    // and so must the final checkpoints: identical params + loop state
+    let (ta, sa) = checkpoint::load_full(&path_a).unwrap();
+    let (tb, sb) = checkpoint::load_full(&path_b).unwrap();
+    assert_eq!(ta, tb, "{precision}: final params must be bit-identical");
+    let (sa, sb) = (sa.unwrap(), sb.unwrap());
+    assert_eq!(sa.epochs_done, epochs);
+    assert_eq!(sa.epochs_done, sb.epochs_done);
+    assert_eq!(sa.step, sb.step, "{precision}: ZO stream positions must match");
+    assert_eq!(sa.best_test_acc, sb.best_test_acc, "{precision}");
+    assert_eq!(sa.last_test_loss, sb.last_test_loss, "{precision}");
+
+    for p in [path_a, path_b] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn fp32_resume_matches_uninterrupted_run_exactly() {
+    // 2 epochs + interrupt + 3 resumed == 5 straight
+    assert_resume_parity("fp32", 5, 1);
+}
+
+#[test]
+fn int8_resume_matches_uninterrupted_run_exactly() {
+    assert_resume_parity("int8", 4, 1);
+}
+
+#[test]
+fn int8_star_resume_matches_uninterrupted_run_exactly() {
+    // the integer-only sign path shares the same durability machinery
+    assert_resume_parity("int8*", 4, 1);
+}
+
+#[test]
+fn resume_rejects_a_different_spec() {
+    let path = tmp("mismatch");
+    let cfg = parity_cfg("fp32", 3, &path);
+    launch::run(&cfg, StopFlag::default(), ProgressSink::default()).unwrap();
+
+    // same checkpoint, different seed ⇒ a different run: hard error
+    let mut other = parity_cfg("fp32", 3, &path);
+    other.set("seed", "8").unwrap();
+    other.set("resume", &path).unwrap();
+    other.validate().unwrap();
+    let err = launch::run(&other, StopFlag::default(), ProgressSink::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("seed"), "error must name the differing key: {err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resume_rejects_params_only_checkpoints() {
+    let path = tmp("params_only");
+    checkpoint::save_params(&path, &ParamSet::init(Model::LeNet, 3)).unwrap();
+    let mut cfg = parity_cfg("fp32", 3, &tmp("params_only_save"));
+    cfg.set("resume", &path).unwrap();
+    cfg.validate().unwrap();
+    let err = launch::run(&cfg, StopFlag::default(), ProgressSink::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no training state"), "{err}");
+    std::fs::remove_file(&path).ok();
+}

@@ -9,7 +9,8 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 fn start_server(workers: usize, queue_cap: usize) -> (String, JoinHandle<()>) {
-    let server = Server::bind(&ServeOptions { port: 0, workers, queue_cap }).unwrap();
+    let server =
+        Server::bind(&ServeOptions { port: 0, workers, queue_cap, ..Default::default() }).unwrap();
     let addr = server.local_addr().unwrap().to_string();
     let h = std::thread::spawn(move || server.run().unwrap());
     (addr, h)

@@ -1,0 +1,161 @@
+//! Restart e2e for the persistent job journal: boot a journaled
+//! server, run one job to Done and interrupt another mid-run via
+//! shutdown, then boot a SECOND server on the same journal and check
+//! that (a) the finished job is still listed with its terminal state
+//! and history, and (b) the interrupted job was requeued and resumed
+//! from its last checkpoint through to completion.
+
+use elasticzo::serve::{request, ServeOptions, Server};
+use elasticzo::util::json::Value;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const LONG: Duration = Duration::from_secs(300);
+
+fn start_server(journal: &str) -> (String, JoinHandle<()>) {
+    let server = Server::bind(&ServeOptions {
+        port: 0,
+        workers: 1,
+        queue_cap: 8,
+        journal: Some(journal.to_string()),
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || server.run().unwrap());
+    (addr, h)
+}
+
+fn shutdown(addr: &str, handle: JoinHandle<()>) {
+    let (status, _) = request(addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap();
+}
+
+fn submit(addr: &str, spec: &str) -> u64 {
+    let body = elasticzo::util::json::parse(spec).unwrap();
+    let (status, v) = request(addr, "POST", "/jobs", Some(&body)).unwrap();
+    assert_eq!(status, 200, "submit failed: {}", elasticzo::util::json::to_string(&v));
+    v.get("id").as_f64().unwrap() as u64
+}
+
+fn get_job(addr: &str, id: u64) -> Value {
+    let (status, v) = request(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(status, 200, "job {id} must exist");
+    v
+}
+
+fn poll_until(addr: &str, id: u64, pred: impl Fn(&Value) -> bool, what: &str) -> Value {
+    let t0 = Instant::now();
+    loop {
+        let v = get_job(addr, id);
+        if pred(&v) {
+            return v;
+        }
+        assert!(
+            t0.elapsed() < LONG,
+            "timed out waiting for {what} on job {id}; last: {}",
+            elasticzo::util::json::to_string(&v)
+        );
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+#[test]
+fn restart_replays_jobs_and_resumes_interrupted_runs() {
+    let dir = std::env::temp_dir().join(format!("ezo_restart_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("journal.jsonl").display().to_string();
+    let ckpt = dir.join("long.ckpt").display().to_string();
+    std::fs::remove_file(&journal).ok();
+    std::fs::remove_file(&ckpt).ok();
+
+    // release-mode epochs are ~2 orders of magnitude faster; keep the
+    // long job long enough that the shutdown below lands mid-run
+    let epochs: usize = if cfg!(debug_assertions) { 20 } else { 200 };
+
+    // ---- server A: one quick job to Done, one long job interrupted
+    let (addr, h) = start_server(&journal);
+    let quick = submit(
+        &addr,
+        r#"{"name": "quick", "method": "cls1", "precision": "fp32",
+            "engine": "native", "epochs": 2, "batch": 16,
+            "train_n": 192, "test_n": 96, "seed": 7}"#,
+    );
+    poll_until(&addr, quick, |v| v.get("state").as_str() == Some("done"), "quick job done");
+
+    let long = submit(
+        &addr,
+        &format!(
+            r#"{{"name": "long", "method": "full-zo", "precision": "fp32",
+                "engine": "native", "epochs": {epochs}, "batch": 16,
+                "train_n": 64, "test_n": 32, "seed": 5, "save": "{ckpt}"}}"#
+        ),
+    );
+    // let it make real progress (and write cadence snapshots), then
+    // shut the server down mid-run — the job must land as interrupted
+    poll_until(
+        &addr,
+        long,
+        |v| v.get("epochs_done").as_usize().unwrap_or(0) >= 2,
+        "two epochs of the long job",
+    );
+    shutdown(&addr, h);
+
+    // the compacted journal records the shutdown-stop as interrupted
+    // (NOT cancelled: a user cancel would stay terminal on restart)
+    let replayed = elasticzo::serve::journal::replay(&journal).unwrap();
+    let rl = replayed.iter().find(|j| j.id == long).expect("long job journaled");
+    assert_eq!(
+        rl.state,
+        elasticzo::serve::JobState::Interrupted,
+        "shutdown must interrupt, not cancel"
+    );
+    assert!(rl.epochs.len() >= 2, "progress journaled: {}", rl.epochs.len());
+
+    // ---- server B on the same journal
+    let (addr, h) = start_server(&journal);
+
+    // the finished job survived the restart with state + history intact
+    let vq = get_job(&addr, quick);
+    assert_eq!(vq.get("state").as_str(), Some("done"));
+    assert_eq!(vq.get("name").as_str(), Some("quick"));
+    assert_eq!(vq.get("history").as_arr().unwrap().len(), 2);
+    assert!(vq.get("best_test_acc").as_f64().unwrap() > 0.0);
+
+    // the interrupted job was requeued (resume armed) and runs through
+    // to completion: all epochs present, no duplicates
+    let vl = poll_until(
+        &addr,
+        long,
+        |v| v.get("state").as_str() == Some("done"),
+        "long job resumed to done",
+    );
+    assert_eq!(vl.get("epochs_done").as_usize(), Some(epochs));
+    let history = vl.get("history").as_arr().unwrap();
+    assert_eq!(history.len(), epochs, "replayed + resumed epochs must form one history");
+    for (i, e) in history.iter().enumerate() {
+        assert_eq!(e.get("epoch").as_usize(), Some(i), "history must be the epochs 0..{epochs}");
+    }
+    // the requeued spec carries the resume path back through the wire
+    assert_eq!(vl.get("spec").get("resume").as_str(), Some(ckpt.as_str()));
+
+    // the final checkpoint on disk covers the full run
+    let (_, state) = elasticzo::coordinator::checkpoint::load_full(&ckpt).unwrap();
+    assert_eq!(state.unwrap().epochs_done, epochs);
+
+    // stats reflect the replayed table
+    let (_, s) = request(&addr, "GET", "/stats", None).unwrap();
+    assert_eq!(s.get("jobs_total").as_usize(), Some(2));
+    assert_eq!(s.get("jobs_done").as_usize(), Some(2));
+
+    shutdown(&addr, h);
+
+    // ---- a third boot shows the compacted journal still replays
+    let (addr, h) = start_server(&journal);
+    let (_, listing) = request(&addr, "GET", "/jobs", None).unwrap();
+    assert_eq!(listing.get("jobs").as_arr().unwrap().len(), 2);
+    shutdown(&addr, h);
+
+    std::fs::remove_file(&journal).ok();
+    std::fs::remove_file(&ckpt).ok();
+}
