@@ -36,6 +36,17 @@ impl StopFlag {
     pub fn should_stop(&self) -> bool {
         self.0.as_ref().map_or(false, |f| f.load(Ordering::SeqCst))
     }
+
+    /// True iff `other` is a clone of this flag (shares the underlying
+    /// atomic). Lets an owner guard map cleanup against an entry that
+    /// was replaced by a newer run's flag; disabled flags share
+    /// nothing.
+    pub fn shares_state(&self, other: &StopFlag) -> bool {
+        match (&self.0, &other.0) {
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
 }
 
 /// Per-epoch progress callback. The trainers invoke it with every
@@ -78,6 +89,16 @@ mod tests {
         assert!(!a.should_stop() && !b.should_stop());
         b.request_stop();
         assert!(a.should_stop() && b.should_stop());
+    }
+
+    #[test]
+    fn shares_state_tracks_clone_lineage() {
+        let a = StopFlag::new();
+        let b = a.clone();
+        let c = StopFlag::new();
+        assert!(a.shares_state(&b));
+        assert!(!a.shares_state(&c));
+        assert!(!StopFlag::disabled().shares_state(&StopFlag::disabled()));
     }
 
     #[test]

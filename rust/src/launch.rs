@@ -4,9 +4,12 @@
 //! This is the single place that turns a validated config into a
 //! running session — dataset generation, backend construction (engine +
 //! params for FP32, NITI weights for INT8), checkpoint load/save/resume,
-//! and the dispatch into the unified `coordinator::session` loop. Both
-//! the `repro train` CLI and every `serve` worker go through [`run`], so
-//! a job spec and a command line can never drift apart.
+//! and the dispatch into the unified `coordinator::session` loop. The
+//! `repro train` CLI, every local `serve` worker AND every remote
+//! cluster agent (`repro agent`, which receives the same serialized
+//! spec over the wire) go through [`run`], so a job spec and a command
+//! line can never drift apart — and a job interrupted on one machine
+//! resumes bit-identically on another.
 //!
 //! # Durability
 //!

@@ -24,8 +24,10 @@
 //!
 //! On top of the trainers sits [`serve`]: a std-only multi-job training
 //! server (`repro serve`) that queues, schedules, observes and cancels
-//! jobs across a worker pool over an HTTP/1.1 + JSON control plane —
-//! see the [`serve`] module docs for the protocol.
+//! jobs across a worker pool — and, in cluster mode, across a fleet of
+//! remote worker agents (`repro agent`) with lease-based failover —
+//! over an HTTP/1.1 + JSON control plane; see the [`serve`] module
+//! docs for the protocol.
 
 pub mod config;
 pub mod coordinator;

@@ -14,8 +14,17 @@
 //! repro inspect            # list AOT artifacts
 //!
 //! repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]
+//!              [--cluster] [--lease-ms L]
 //!              # multi-job training server (HTTP/1.1 + JSON); --journal
-//!              # persists the job table across restarts (JSONL replay)
+//!              # persists the job table across restarts (JSONL replay);
+//!              # --cluster opens the /cluster/* control plane so remote
+//!              # agents can register and pull work (--workers 0 = pure
+//!              # coordinator)
+//! repro agent  --coordinator host:port [--capacity N] [--name S]
+//!              [--poll-ms P] [--max-poll-failures N]
+//!              # remote worker agent: registers with a cluster
+//!              # coordinator, pulls jobs, runs them via the exact
+//!              # `repro train` path, streams progress back
 //! repro submit [--addr host:port] [--name S] [--priority N] [train flags...]
 //! repro jobs   [--addr host:port]
 //! repro job    <id> [--addr host:port] [--cancel]
@@ -43,6 +52,7 @@ fn main() {
         "memory" => cmd_memory(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
+        "agent" => cmd_agent(&args),
         "submit" => cmd_submit(&args),
         "jobs" => cmd_jobs(&args),
         "job" => cmd_job(&args),
@@ -75,9 +85,14 @@ fn print_help() {
          \x20 repro memory [--model M] [--batch N] [--precision fp32|int8] [--adam]\n\
          \x20 repro inspect\n\
          \n  repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]\n\
+         \x20              [--cluster] [--lease-ms L]\n\
          \x20              multi-job training server; HTTP/1.1 + JSON on 127.0.0.1:\n\
          \x20              GET /healthz | GET /stats | GET /jobs | POST /jobs\n\
          \x20              GET /jobs/<id> | POST /jobs/<id>/cancel | POST /shutdown\n\
+         \x20              --cluster adds /cluster/* (agent registry + job fan-out)\n\
+         \x20 repro agent  --coordinator host:port [--capacity N] [--name S]\n\
+         \x20              [--poll-ms P] [--max-poll-failures N]\n\
+         \x20              remote worker: pulls jobs from a --cluster coordinator\n\
          \x20 repro submit [--addr host:port] [--name S] [--priority N] [train flags]\n\
          \x20 repro jobs   [--addr host:port]\n\
          \x20 repro job    <id> [--addr host:port] [--cancel]\n\
@@ -223,11 +238,24 @@ fn cmd_memory(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let port = args.get_u64("port", serve::DEFAULT_PORT as u64)?;
     anyhow::ensure!(port <= u16::MAX as u64, "--port must be <= 65535, got {port}");
+    let cluster = (args.flag("cluster") || args.get("lease-ms").is_some())
+        .then(|| -> Result<serve::ClusterOptions> {
+            let lease_ms = args.get_u64("lease-ms", serve::ClusterOptions::default().lease_ms)?;
+            // a sub-poll-interval lease would reap every agent on every
+            // tick — endless register/reap churn with no error anywhere
+            anyhow::ensure!(
+                lease_ms >= 100,
+                "--lease-ms must be >= 100 (and comfortably above the agents' --poll-ms)"
+            );
+            Ok(serve::ClusterOptions { lease_ms })
+        })
+        .transpose()?;
     let opts = serve::ServeOptions {
         port: port as u16,
         workers: args.get_usize("workers", 2)?,
         queue_cap: args.get_usize("queue-cap", 64)?,
         journal: args.get("journal").map(str::to_string),
+        cluster,
     };
     let server = serve::Server::bind(&opts)?;
     println!(
@@ -240,7 +268,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("journal: {j} (job table replayed on restart; interrupted jobs requeue)");
     }
     println!("endpoints: GET /healthz /stats /jobs /jobs/<id>  POST /jobs /jobs/<id>/cancel /shutdown");
+    if let Some(c) = &opts.cluster {
+        println!(
+            "cluster: agents register at POST /cluster/register (lease {} ms); \
+             queued jobs fan out to polling agents",
+            c.lease_ms
+        );
+    }
     server.run()
+}
+
+fn cmd_agent(args: &Args) -> Result<()> {
+    // the defaults live in ONE place (AgentOptions::default); the CLI
+    // only overrides what was passed
+    let d = serve::AgentOptions::default();
+    let opts = serve::AgentOptions {
+        coordinator: args.get_or("coordinator", &d.coordinator).to_string(),
+        capacity: args.get_usize("capacity", d.capacity)?,
+        name: args.get_or("name", &d.name).to_string(),
+        poll_ms: args.get_u64("poll-ms", d.poll_ms)?,
+        max_poll_failures: args.get_u64("max-poll-failures", d.max_poll_failures as u64)?
+            as u32,
+    };
+    anyhow::ensure!(opts.capacity >= 1, "--capacity must be >= 1");
+    anyhow::ensure!(opts.poll_ms >= 1, "--poll-ms must be >= 1");
+    let coordinator = opts.coordinator.clone();
+    let capacity = opts.capacity;
+    let handle = serve::Agent::spawn(opts)?;
+    println!(
+        "agent {} registered with {coordinator} (capacity {capacity}); polling for work",
+        handle.id()
+    );
+    handle.join()
 }
 
 fn server_addr(args: &Args) -> String {

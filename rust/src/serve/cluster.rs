@@ -1,0 +1,379 @@
+//! The remote worker agent (`repro agent`): the device side of
+//! multi-node sharding. An agent registers with a cluster-enabled
+//! coordinator (`repro serve --cluster`), then pulls work over the
+//! same std-only HTTP/JSON stack the local CLI clients use:
+//!
+//! 1. `POST /cluster/register` → agent id + lease duration;
+//! 2. poll loop (`POST /cluster/agents/{id}/poll`, the heartbeat):
+//!    each answer carries job assignments — a serialized
+//!    [`JobSpec`](super::protocol::JobSpec), i.e. exactly the
+//!    `TrainSpec` + data/backend keys `repro train` accepts — and
+//!    stop requests for running jobs;
+//! 3. every assignment runs on its own thread through the very same
+//!    [`launch::run`] path as `repro train` and the coordinator's
+//!    local workers, with a `ProgressSink` that POSTs each epoch back
+//!    and a terminal `done` report at the end.
+//!
+//! Pull-based on purpose: edge devices rarely accept inbound
+//! connections, so the coordinator never needs to reach an agent —
+//! a dead agent is simply one that stops polling, and the
+//! coordinator's lease reaper requeues its jobs from their last
+//! checkpoint. Checkpoint paths in job specs are interpreted on the
+//! machine that runs the job; failover-with-resume therefore assumes
+//! agents share the checkpoint filesystem (or accepts a from-scratch
+//! rerun when they do not).
+//!
+//! If a poll answers 404 the agent knows its lease expired (a long
+//! network partition): its jobs were requeued elsewhere, so it stops
+//! them locally — double-writing their checkpoints would corrupt the
+//! resumed lineage — and re-registers as a fresh agent. If the
+//! coordinator stays unreachable for `max_poll_failures` consecutive
+//! polls, the agent stops its jobs and exits.
+
+use super::http::request_with_timeout;
+use crate::coordinator::control::{ProgressSink, StopFlag};
+use crate::launch;
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Agent-side HTTP timeout: polls and reports are small; a coordinator
+/// that cannot answer within this is treated as a failed poll.
+const HTTP_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Knobs of `repro agent`.
+#[derive(Debug, Clone)]
+pub struct AgentOptions {
+    /// Coordinator address (`host:port`).
+    pub coordinator: String,
+    /// Concurrent jobs this device can run.
+    pub capacity: usize,
+    /// Optional human label, echoed in `GET /cluster/agents`.
+    pub name: String,
+    /// Poll (= heartbeat) interval. Must be comfortably below the
+    /// coordinator's lease.
+    pub poll_ms: u64,
+    /// Exit after this many consecutive failed polls.
+    pub max_poll_failures: u32,
+}
+
+impl Default for AgentOptions {
+    fn default() -> Self {
+        AgentOptions {
+            coordinator: format!("127.0.0.1:{}", super::protocol::DEFAULT_PORT),
+            capacity: 1,
+            name: String::new(),
+            poll_ms: 500,
+            max_poll_failures: 20,
+        }
+    }
+}
+
+struct AgentShared {
+    coordinator: String,
+    /// Current registration id (re-registration after a lost lease
+    /// installs a fresh one).
+    agent_id: AtomicU64,
+    /// Simulated crash: vanish without a trace (tests).
+    dead: AtomicBool,
+    /// Graceful drain: deregister, stop jobs, exit.
+    draining: AtomicBool,
+    /// Stop flags of the jobs currently running here.
+    jobs: Mutex<HashMap<u64, StopFlag>>,
+    active: AtomicUsize,
+}
+
+impl AgentShared {
+    fn post(&self, path: &str, body: Option<&Value>) -> Result<(u16, Value)> {
+        request_with_timeout(&self.coordinator, "POST", path, body, HTTP_TIMEOUT)
+    }
+
+    fn silent(&self) -> bool {
+        self.dead.load(Ordering::SeqCst) || self.draining.load(Ordering::SeqCst)
+    }
+
+    fn stop_all_jobs(&self) {
+        for stop in self.jobs.lock().unwrap_or_else(PoisonError::into_inner).values() {
+            stop.request_stop();
+        }
+    }
+
+    fn wait_jobs_done(&self) {
+        let t0 = Instant::now();
+        while self.active.load(Ordering::SeqCst) > 0 && t0.elapsed() < Duration::from_secs(60)
+        {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+}
+
+/// A running agent. Dropping the handle does NOT stop the agent; use
+/// [`AgentHandle::stop`] (graceful) or [`AgentHandle::join`] (run
+/// until the coordinator goes away).
+pub struct AgentHandle {
+    shared: Arc<AgentShared>,
+    thread: JoinHandle<()>,
+    id: u64,
+}
+
+impl AgentHandle {
+    /// The id the coordinator assigned at registration.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Graceful drain: deregister with the coordinator (which requeues
+    /// whatever this agent was running, from its last checkpoint),
+    /// stop local jobs, and exit.
+    pub fn stop(self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        let _ = self.thread.join();
+    }
+
+    /// Simulated crash (tests / chaos): vanish without deregistering —
+    /// no further polls or terminal reports, and running jobs are
+    /// stop-flagged so they quit touching their checkpoints within a
+    /// batch. (An epoch that was already completing may still publish
+    /// its report and cadence snapshot — the pair lands atomically
+    /// from the coordinator's perspective, and a post-expiry report is
+    /// rejected as stale.) The coordinator only finds out when the
+    /// lease expires.
+    pub fn kill(self) {
+        self.shared.dead.store(true, Ordering::SeqCst);
+        self.shared.stop_all_jobs();
+        let _ = self.thread.join();
+    }
+
+    /// Block until the agent exits on its own (coordinator gone for
+    /// `max_poll_failures` consecutive polls).
+    pub fn join(self) -> Result<()> {
+        self.thread
+            .join()
+            .map_err(|_| anyhow::anyhow!("agent thread panicked"))
+    }
+}
+
+/// Entry point: `Agent::spawn(opts)` registers and starts polling.
+pub struct Agent;
+
+impl Agent {
+    /// Register with the coordinator (synchronously, so a missing or
+    /// non-cluster coordinator fails loudly here) and start the poll
+    /// loop on a background thread.
+    pub fn spawn(opts: AgentOptions) -> Result<AgentHandle> {
+        let shared = Arc::new(AgentShared {
+            coordinator: opts.coordinator.clone(),
+            agent_id: AtomicU64::new(0),
+            dead: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            jobs: Mutex::new(HashMap::new()),
+            active: AtomicUsize::new(0),
+        });
+        let id = register(&shared, &opts)
+            .with_context(|| format!("registering with coordinator {}", opts.coordinator))?;
+        let sh = shared.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("cluster-agent-{id}"))
+            .spawn(move || poll_loop(&sh, &opts))
+            .expect("spawning agent thread");
+        Ok(AgentHandle { shared, thread, id })
+    }
+}
+
+fn register(sh: &Arc<AgentShared>, opts: &AgentOptions) -> Result<u64> {
+    let body = Value::obj(vec![
+        ("name", Value::str(opts.name.clone())),
+        ("capacity", Value::num(opts.capacity as f64)),
+    ]);
+    let (status, v) = sh.post("/cluster/register", Some(&body))?;
+    anyhow::ensure!(
+        status == 200,
+        "registration rejected ({status}): {}",
+        json::to_string(&v)
+    );
+    let id = v
+        .get("agent")
+        .as_f64()
+        .context("register response missing agent id")? as u64;
+    sh.agent_id.store(id, Ordering::SeqCst);
+    Ok(id)
+}
+
+fn poll_loop(sh: &Arc<AgentShared>, opts: &AgentOptions) {
+    let mut failures: u32 = 0;
+    loop {
+        if sh.dead.load(Ordering::SeqCst) {
+            return;
+        }
+        if sh.draining.load(Ordering::SeqCst) {
+            // stop local jobs and wait them out BEFORE deregistering:
+            // the coordinator requeues our assignments the moment we
+            // deregister, and a survivor must never start resuming a
+            // checkpoint this agent is still writing to
+            sh.stop_all_jobs();
+            sh.wait_jobs_done();
+            let id = sh.agent_id.load(Ordering::SeqCst);
+            let _ = sh.post(&format!("/cluster/agents/{id}/deregister"), None);
+            return;
+        }
+        let id = sh.agent_id.load(Ordering::SeqCst);
+        // the poll doubles as the assignment ack: report what is
+        // actually running here, so the coordinator can detect (and
+        // requeue) an assignment whose response never reached us
+        let running: Vec<Value> = sh
+            .jobs
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .keys()
+            .map(|&j| Value::num(j as f64))
+            .collect();
+        let body = Value::obj(vec![("running", Value::Arr(running))]);
+        match sh.post(&format!("/cluster/agents/{id}/poll"), Some(&body)) {
+            Ok((200, v)) => {
+                failures = 0;
+                for j in v.get("stop").as_arr().unwrap_or(&[]) {
+                    if let Some(job) = j.as_f64().map(|n| n as u64) {
+                        if let Some(stop) =
+                            sh.jobs.lock().unwrap_or_else(PoisonError::into_inner).get(&job)
+                        {
+                            stop.request_stop();
+                        }
+                    }
+                }
+                for a in v.get("assign").as_arr().unwrap_or(&[]) {
+                    start_job(sh, id, a);
+                }
+            }
+            // lease lost (e.g. a long partition): our jobs were
+            // requeued elsewhere — stop them before their checkpoint
+            // writes can collide with the resumed lineage, then come
+            // back as a fresh agent
+            Ok((404, _)) => {
+                sh.stop_all_jobs();
+                match register(sh, opts) {
+                    Ok(_) => failures = 0,
+                    Err(_) => failures += 1,
+                }
+            }
+            Ok((_, _)) | Err(_) => failures += 1,
+        }
+        if failures >= opts.max_poll_failures {
+            eprintln!(
+                "agent: coordinator {} unreachable after {failures} polls; stopping",
+                sh.coordinator
+            );
+            sh.stop_all_jobs();
+            sh.wait_jobs_done();
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(opts.poll_ms));
+    }
+}
+
+/// Run one assignment on its own thread: the exact `repro train` path
+/// (`launch::run`), epochs POSTed back as they complete, terminal
+/// outcome reported at the end. Reports are best-effort — the poll
+/// loop, not the job, is the heartbeat. The terminal report is
+/// suppressed when the agent is dead or draining (the job belongs to
+/// someone else by then, and reporting it stopped would wrongly
+/// cancel it); epoch reports are never suppressed (see the sink
+/// comment below).
+fn start_job(sh: &Arc<AgentShared>, agent_id: u64, assignment: &Value) {
+    let done_path = move |job: u64| format!("/cluster/agents/{agent_id}/jobs/{job}/done");
+    let (job_id, spec) = match super::dispatch::assignment_spec(assignment) {
+        Ok(x) => x,
+        Err(e) => {
+            // report the unparseable spec if the assignment at least
+            // carried a job id, so the job fails instead of leasing out
+            if let Some(id) = assignment.get("id").as_f64() {
+                let body = Value::obj(vec![(
+                    "error",
+                    Value::str(format!("agent could not parse job spec: {e:#}")),
+                )]);
+                let _ = sh.post(&done_path(id as u64), Some(&body));
+            }
+            return;
+        }
+    };
+    let stop = StopFlag::new();
+    sh.jobs
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .insert(job_id, stop.clone());
+    sh.active.fetch_add(1, Ordering::SeqCst);
+    let sh2 = sh.clone();
+    let spawned = std::thread::Builder::new()
+        .name(format!("agent-job-{job_id}"))
+        .spawn(move || {
+            let sink_sh = sh2.clone();
+            let epoch_path = format!("/cluster/agents/{agent_id}/jobs/{job_id}/epoch");
+            // The sink posts synchronously from the training thread,
+            // strictly before the epoch's cadence snapshot is written,
+            // and is NEVER suppressed — not even when dead/draining: a
+            // stop that lands at an epoch tail still completes that
+            // epoch's publish + snapshot, and suppressing the publish
+            // would leave the coordinator's history one epoch short of
+            // what the checkpoint claims (a permanent gap after a
+            // requeue-trim). Stale posts are rejected server-side
+            // (409) and cannot renew the lease, so letting them
+            // through is always safe. One retry covers a transient
+            // connection failure; beyond that the gap is cosmetic —
+            // resume correctness comes from the checkpoint, not the
+            // reported history.
+            let sink = ProgressSink::new(move |e| {
+                let body = e.to_json();
+                if sink_sh.post(&epoch_path, Some(&body)).is_err() {
+                    std::thread::sleep(Duration::from_millis(100));
+                    let _ = sink_sh.post(&epoch_path, Some(&body));
+                }
+            });
+            let cleanup_flag = stop.clone();
+            let out = catch_unwind(AssertUnwindSafe(|| launch::run(&spec.config, stop, sink)));
+            // report done BEFORE evicting the map entry: the poll
+            // loop's running-set must keep listing this job until its
+            // assignment is released server-side, or a concurrent poll
+            // would read "assigned but not running" and requeue a job
+            // that actually finished
+            if !sh2.silent() {
+                let body = match out {
+                    Ok(Ok(l)) => Value::obj(vec![
+                        ("stopped", Value::Bool(l.result.stopped)),
+                        (
+                            "best_test_acc",
+                            Value::num(l.result.history.best_test_acc() as f64),
+                        ),
+                    ]),
+                    Ok(Err(e)) => Value::obj(vec![("error", Value::str(format!("{e:#}")))]),
+                    Err(_) => Value::obj(vec![(
+                        "error",
+                        Value::str("agent job panicked during training"),
+                    )]),
+                };
+                let _ = sh2.post(&done_path(job_id), Some(&body));
+            }
+            {
+                // guarded eviction: after a lost-lease re-registration
+                // the same job can be re-assigned here while this old
+                // run winds down — its map entry then holds the NEW
+                // run's stop flag, which must survive this cleanup or
+                // later cancels would be silently dropped
+                let mut jobs = sh2.jobs.lock().unwrap_or_else(PoisonError::into_inner);
+                if jobs.get(&job_id).is_some_and(|f| f.shares_state(&cleanup_flag)) {
+                    jobs.remove(&job_id);
+                }
+            }
+            sh2.active.fetch_sub(1, Ordering::SeqCst);
+        });
+    if spawned.is_err() {
+        sh.jobs
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .remove(&job_id);
+        sh.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}

@@ -1,0 +1,625 @@
+//! The cluster dispatcher: the coordinator side of multi-node
+//! sharding. Remote worker agents (`repro agent`) register here, then
+//! pull work — every poll renews the agent's lease, hands back queued
+//! jobs up to the agent's free capacity (serialized `JobSpec` on the
+//! wire) and relays stop requests for jobs the user cancelled or the
+//! server is shutting down. Per-epoch progress and terminal outcomes
+//! are POSTed back and land in the same registry/journal as local
+//! worker runs, so `GET /jobs`, `GET /stats` and the restart replay
+//! are agent-agnostic.
+//!
+//! # Leases
+//!
+//! Polling is the heartbeat (deliberately: epoch reports do NOT renew
+//! the lease, so a wedged agent that still streams progress from an
+//! old run cannot hold jobs hostage). A background reaper declares any
+//! agent that has not polled within `lease_ms` lost, removes it, and
+//! requeues its assigned jobs through the exact interrupted-requeue
+//! rule journal replay uses ([`super::journal::arm_resume`]): resume
+//! armed from the job's last spec-matching checkpoint, history trimmed
+//! to the snapshot, from-scratch rerun otherwise. Requeues re-enter
+//! the queue through the capacity-bypassing `push_admitted` — a lost
+//! agent must never translate into destroyed jobs.
+//!
+//! A report that arrives for a job the reaper already requeued gets a
+//! 409 (stale assignment) and changes nothing; an agent whose poll
+//! answers 404 knows it was presumed dead and re-registers fresh.
+
+use super::protocol::{error_json, AgentState, JobSpec};
+use super::queue::JobQueue;
+use super::registry::{JobOutcome, JobRegistry};
+use crate::coordinator::metrics::EpochStats;
+use crate::telemetry::PhaseTimer;
+use crate::util::json::{self, Value};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Cluster-side knobs of `repro serve --cluster`.
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    /// Lease duration in milliseconds: an agent that has not polled
+    /// for this long is declared lost and its jobs requeue from their
+    /// last checkpoint.
+    pub lease_ms: u64,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions { lease_ms: 10_000 }
+    }
+}
+
+struct AgentRec {
+    id: u64,
+    name: String,
+    capacity: usize,
+    /// Job ids currently assigned to (running on) this agent.
+    assigned: Vec<u64>,
+    last_seen: Instant,
+    jobs_done: u64,
+}
+
+struct DispatchInner {
+    agents: BTreeMap<u64, AgentRec>,
+    next_agent: u64,
+}
+
+/// Agent table + assignment logic + the lease reaper. One per
+/// cluster-enabled server, shared with every connection handler.
+pub struct Dispatcher {
+    opts: ClusterOptions,
+    queue: Arc<JobQueue>,
+    registry: Arc<JobRegistry>,
+    inner: Mutex<DispatchInner>,
+    stop: AtomicBool,
+    reaper: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Dispatcher {
+    /// Build the dispatcher and start its lease reaper thread. The
+    /// reaper holds only a `Weak` reference, so a dispatcher whose
+    /// server is dropped without a clean [`Dispatcher::shutdown`]
+    /// (e.g. bound but never run) is still freed — the thread notices
+    /// the dead upgrade within one tick and exits on its own.
+    pub fn spawn(
+        opts: ClusterOptions,
+        queue: Arc<JobQueue>,
+        registry: Arc<JobRegistry>,
+    ) -> Arc<Dispatcher> {
+        let tick = Duration::from_millis((opts.lease_ms / 4).clamp(25, 250));
+        let d = Arc::new(Dispatcher {
+            opts,
+            queue,
+            registry,
+            inner: Mutex::new(DispatchInner { agents: BTreeMap::new(), next_agent: 1 }),
+            stop: AtomicBool::new(false),
+            reaper: Mutex::new(None),
+        });
+        let weak = Arc::downgrade(&d);
+        let h = std::thread::Builder::new()
+            .name("serve-lease-reaper".into())
+            .spawn(move || loop {
+                let Some(d) = weak.upgrade() else { return };
+                if d.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                d.reap_expired();
+                drop(d);
+                std::thread::sleep(tick);
+            })
+            .expect("spawning lease reaper");
+        *d.reaper.lock().unwrap_or_else(PoisonError::into_inner) = Some(h);
+        d
+    }
+
+    fn lock(&self) -> MutexGuard<'_, DispatchInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn agent_count(&self) -> usize {
+        self.lock().agents.len()
+    }
+
+    /// `POST /cluster/register` — admit a new agent; body
+    /// `{"name": S?, "capacity": N?}` (capacity defaults to 1).
+    pub fn register(&self, body: &[u8]) -> (u16, Value) {
+        let v = match parse_body(body) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let name = v.get("name").as_str().unwrap_or("").to_string();
+        let capacity = v.get("capacity").as_usize().unwrap_or(1).max(1);
+        let id = {
+            let mut inner = self.lock();
+            let id = inner.next_agent;
+            inner.next_agent += 1;
+            inner.agents.insert(
+                id,
+                AgentRec {
+                    id,
+                    name,
+                    capacity,
+                    assigned: Vec::new(),
+                    last_seen: Instant::now(),
+                    jobs_done: 0,
+                },
+            );
+            id
+        };
+        (
+            200,
+            Value::obj(vec![
+                ("agent", Value::num(id as f64)),
+                ("lease_ms", Value::num(self.opts.lease_ms as f64)),
+            ]),
+        )
+    }
+
+    /// `POST /cluster/agents/{id}/poll` — heartbeat + work pull.
+    /// Renews the lease, then answers with jobs to start (up to the
+    /// agent's free capacity) and running jobs to stop.
+    ///
+    /// The body's optional `"running": [ids]` is the assignment ack:
+    /// the agent's poll loop is sequential, so every assignment it
+    /// ever received is either in that set or already done-reported.
+    /// An assigned job missing from it was handed out in a poll
+    /// response that never arrived — the dispatcher takes it back and
+    /// requeues it, closing the lost-response liveness hole (without
+    /// the ack, such a job would stay Running forever on an agent
+    /// that keeps renewing its lease but never learned of the job).
+    /// Polls without the key (e.g. manual curl) skip reconciliation.
+    pub fn poll(&self, agent: u64, body: &[u8]) -> (u16, Value) {
+        let v = match parse_body(body) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let reported: Option<Vec<u64>> = v
+            .get("running")
+            .as_arr()
+            .map(|arr| arr.iter().filter_map(|x| x.as_f64().map(|n| n as u64)).collect());
+        let mut lost: Vec<u64> = Vec::new();
+        let (capacity, assigned) = {
+            let mut inner = self.lock();
+            let Some(a) = inner.agents.get_mut(&agent) else {
+                return unknown_agent();
+            };
+            a.last_seen = Instant::now();
+            if let Some(run) = &reported {
+                let (keep, gone): (Vec<u64>, Vec<u64>) =
+                    a.assigned.iter().copied().partition(|j| run.contains(j));
+                a.assigned = keep;
+                lost = gone;
+            }
+            (a.capacity, a.assigned.clone())
+        };
+        // requeue lost assignments before handing out work, so the
+        // freed slots (and even the lost jobs themselves) are
+        // available to this very poll
+        self.requeue_all(&lost);
+        // stop fan-out: cancelled (or shutdown-stopped) running jobs
+        let stop: Vec<Value> = assigned
+            .iter()
+            .filter(|&&id| self.registry.stop_requested(id))
+            .map(|&id| Value::num(id as f64))
+            .collect();
+        // hand out queued work up to the agent's free slots
+        let mut assign = Vec::new();
+        let mut nassigned = assigned.len();
+        while nassigned < capacity {
+            let Some(id) = self.queue.try_pop() else { break };
+            // a pop that fails to claim was cancelled while queued
+            let Some(spec) = self.registry.claim_for_agent(id, agent) else { continue };
+            {
+                let mut inner = self.lock();
+                match inner.agents.get_mut(&agent) {
+                    Some(a) => a.assigned.push(id),
+                    None => {
+                        // reaped between locks: hand the job straight back
+                        drop(inner);
+                        if let Some(p) = self.registry.requeue_interrupted(id) {
+                            let _ = self.queue.push_admitted(id, p);
+                        }
+                        return unknown_agent();
+                    }
+                }
+            }
+            assign.push(Value::obj(vec![
+                ("id", Value::num(id as f64)),
+                ("spec", spec.to_json()),
+            ]));
+            nassigned += 1;
+        }
+        (
+            200,
+            Value::obj(vec![
+                ("agent", Value::num(agent as f64)),
+                ("assign", Value::Arr(assign)),
+                ("stop", Value::Arr(stop)),
+            ]),
+        )
+    }
+
+    /// `POST /cluster/agents/{id}/jobs/{job}/epoch` — per-epoch
+    /// progress from a remote run; lands in the registry (and journal)
+    /// exactly like a local worker's `ProgressSink` callback. Does NOT
+    /// renew the lease (see the module docs).
+    pub fn report_epoch(&self, agent: u64, job: u64, body: &[u8]) -> (u16, Value) {
+        let v = match parse_body(body) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        {
+            let inner = self.lock();
+            let Some(a) = inner.agents.get(&agent) else {
+                return unknown_agent();
+            };
+            if !a.assigned.contains(&job) {
+                return stale_assignment();
+            }
+        }
+        match EpochStats::from_json(&v) {
+            Ok(stats) => {
+                // the registry re-checks ownership under its own lock,
+                // closing the window between our assignment check and
+                // this call (reap + re-claim by a successor)
+                self.registry.record_epoch_from_agent(job, agent, stats);
+                (200, Value::obj(vec![("ok", Value::Bool(true))]))
+            }
+            Err(e) => (400, error_json(&format!("invalid epoch stats: {e:#}"))),
+        }
+    }
+
+    /// `POST /cluster/agents/{id}/jobs/{job}/done` — terminal outcome
+    /// of a remote run: `{"stopped": bool, "best_test_acc": F}` or
+    /// `{"error": S}`. Frees the agent's slot and completes the job in
+    /// the registry.
+    pub fn report_done(&self, agent: u64, job: u64, body: &[u8]) -> (u16, Value) {
+        let v = match parse_body(body) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        {
+            let mut inner = self.lock();
+            let Some(a) = inner.agents.get_mut(&agent) else {
+                return unknown_agent();
+            };
+            let Some(pos) = a.assigned.iter().position(|&j| j == job) else {
+                return stale_assignment();
+            };
+            a.assigned.remove(pos);
+            a.jobs_done += 1;
+        }
+        match v.get("error").as_str() {
+            Some(msg) => self.registry.fail(job, msg.to_string()),
+            None => {
+                let stopped = v.get("stopped").as_bool().unwrap_or(false);
+                let best = v.get("best_test_acc").as_f64().unwrap_or(0.0) as f32;
+                self.registry.complete(
+                    job,
+                    JobOutcome { best_test_acc: best, timer: PhaseTimer::new(), stopped },
+                );
+            }
+        }
+        let state = self
+            .registry
+            .state_of(job)
+            .map(|s| s.as_str())
+            .unwrap_or("unknown");
+        (
+            200,
+            Value::obj(vec![("ok", Value::Bool(true)), ("state", Value::str(state))]),
+        )
+    }
+
+    /// `POST /cluster/agents/{id}/deregister` — graceful leave: the
+    /// agent's assigned jobs requeue immediately (same path as lease
+    /// expiry, without waiting out the lease).
+    pub fn deregister(&self, agent: u64) -> (u16, Value) {
+        let assigned = {
+            let mut inner = self.lock();
+            match inner.agents.remove(&agent) {
+                Some(a) => a.assigned,
+                None => return unknown_agent(),
+            }
+        };
+        let requeued = self.requeue_all(&assigned);
+        (
+            200,
+            Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("requeued", Value::num(requeued as f64)),
+            ]),
+        )
+    }
+
+    /// `GET /cluster/agents` — observability listing.
+    pub fn agents_json(&self) -> Value {
+        let inner = self.lock();
+        Value::obj(vec![(
+            "agents",
+            Value::Arr(
+                inner
+                    .agents
+                    .values()
+                    .map(|a| {
+                        let state = if a.assigned.is_empty() {
+                            AgentState::Idle
+                        } else {
+                            AgentState::Busy
+                        };
+                        Value::obj(vec![
+                            ("agent", Value::num(a.id as f64)),
+                            ("name", Value::str(a.name.clone())),
+                            ("state", Value::str(state.as_str())),
+                            ("capacity", Value::num(a.capacity as f64)),
+                            (
+                                "running",
+                                Value::Arr(
+                                    a.assigned.iter().map(|&j| Value::num(j as f64)).collect(),
+                                ),
+                            ),
+                            ("jobs_done", Value::num(a.jobs_done as f64)),
+                            (
+                                "seen_ms_ago",
+                                Value::num(a.last_seen.elapsed().as_millis() as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    /// One reaper tick: agents past their lease are removed and their
+    /// jobs requeued from their last checkpoint.
+    fn reap_expired(&self) {
+        let lease = Duration::from_millis(self.opts.lease_ms);
+        let expired: Vec<(u64, Vec<u64>)> = {
+            let mut inner = self.lock();
+            let dead: Vec<u64> = inner
+                .agents
+                .values()
+                .filter(|a| a.last_seen.elapsed() > lease)
+                .map(|a| a.id)
+                .collect();
+            dead.into_iter()
+                .filter_map(|id| inner.agents.remove(&id).map(|a| (id, a.assigned)))
+                .collect()
+        };
+        for (id, jobs) in expired {
+            let n = self.requeue_all(&jobs);
+            eprintln!(
+                "serve: agent {id} lease expired ({} ms); requeued {n} job(s)",
+                self.opts.lease_ms
+            );
+        }
+    }
+
+    fn requeue_all(&self, jobs: &[u64]) -> usize {
+        let mut n = 0;
+        for &id in jobs {
+            if let Some(priority) = self.registry.requeue_interrupted(id) {
+                if self.queue.push_admitted(id, priority) {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Stop the reaper and complete every remotely-running job as
+    /// interrupted: the server is shutting down and agents can no
+    /// longer report in, but `stop_all_running` has already marked the
+    /// jobs, so completing them here makes the journal's compaction
+    /// record the terminal state the next boot requeues from.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.reaper.lock().unwrap_or_else(PoisonError::into_inner).take() {
+            let _ = h.join();
+        }
+        let assigned: Vec<u64> = {
+            let inner = self.lock();
+            inner.agents.values().flat_map(|a| a.assigned.iter().copied()).collect()
+        };
+        for id in assigned {
+            self.registry.complete(
+                id,
+                JobOutcome { best_test_acc: 0.0, timer: PhaseTimer::new(), stopped: true },
+            );
+        }
+    }
+}
+
+fn unknown_agent() -> (u16, Value) {
+    (404, error_json("unknown agent (lease expired? re-register)"))
+}
+
+fn stale_assignment() -> (u16, Value) {
+    (409, error_json("stale assignment (the job was requeued)"))
+}
+
+fn parse_body(body: &[u8]) -> Result<Value, (u16, Value)> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| (400, error_json("body must be utf-8 JSON")))?;
+    if text.trim().is_empty() {
+        return Ok(Value::obj(vec![]));
+    }
+    json::parse(text).map_err(|e| (400, error_json(&format!("invalid JSON: {e}"))))
+}
+
+/// Wire helper for the agent side: the spec a poll assignment carries.
+pub(crate) fn assignment_spec(assignment: &Value) -> anyhow::Result<(u64, JobSpec)> {
+    let id = assignment
+        .get("id")
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("assignment missing job id"))? as u64;
+    let spec = JobSpec::from_json(assignment.get("spec"))?;
+    Ok((id, spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::serve::protocol::JobState;
+
+    fn parts() -> (Arc<JobQueue>, Arc<JobRegistry>) {
+        (Arc::new(JobQueue::new(8)), Arc::new(JobRegistry::new()))
+    }
+
+    fn queued_job(queue: &JobQueue, registry: &JobRegistry) -> u64 {
+        let id = registry.add(JobSpec::new(Config::default()));
+        queue.push(id, 0).unwrap();
+        id
+    }
+
+    #[test]
+    fn register_poll_assign_report() {
+        let (queue, registry) = parts();
+        let d = Dispatcher::spawn(ClusterOptions::default(), queue.clone(), registry.clone());
+        let (status, v) = d.register(br#"{"name": "edge-1", "capacity": 2}"#);
+        assert_eq!(status, 200);
+        let agent = v.get("agent").as_f64().unwrap() as u64;
+        assert!(v.get("lease_ms").as_f64().unwrap() > 0.0);
+        assert_eq!(d.agent_count(), 1);
+
+        let j1 = queued_job(&queue, &registry);
+        let j2 = queued_job(&queue, &registry);
+        let j3 = queued_job(&queue, &registry);
+        let (status, v) = d.poll(agent, b"{}");
+        assert_eq!(status, 200);
+        let assign = v.get("assign").as_arr().unwrap();
+        assert_eq!(assign.len(), 2, "capacity 2 caps the hand-out");
+        let (aid, spec) = assignment_spec(&assign[0]).unwrap();
+        assert_eq!(aid, j1);
+        assert_eq!(spec.config.epochs, Config::default().epochs);
+        assert_eq!(registry.state_of(j1), Some(JobState::Running));
+        assert_eq!(registry.state_of(j3), Some(JobState::Queued));
+
+        // epoch + done reports flow into the registry; the freed slot
+        // picks up the remaining job on the next poll
+        let stats = EpochStats { epoch: 0, test_acc: 0.5, ..Default::default() };
+        let (status, _) = d.report_epoch(agent, j1, json::to_string(&stats.to_json()).as_bytes());
+        assert_eq!(status, 200);
+        let body = br#"{"stopped": false, "best_test_acc": 0.5}"#;
+        let (status, v) = d.report_done(agent, j1, body);
+        assert_eq!(status, 200);
+        assert_eq!(v.get("state").as_str(), Some("done"));
+        assert_eq!(registry.state_of(j1), Some(JobState::Done));
+        let (_, v) = d.poll(agent, b"{}");
+        assert_eq!(v.get("assign").as_arr().unwrap().len(), 1);
+
+        // reports against a job the agent does not hold are stale
+        let (status, _) = d.report_done(agent, j1, body);
+        assert_eq!(status, 409);
+        // unknown agents 404 everywhere
+        assert_eq!(d.poll(999, b"{}").0, 404);
+        assert_eq!(d.report_epoch(999, j2, b"{}").0, 404);
+        d.shutdown();
+    }
+
+    #[test]
+    fn cancel_fans_out_through_poll_and_failed_jobs_record_errors() {
+        let (queue, registry) = parts();
+        let d = Dispatcher::spawn(ClusterOptions::default(), queue.clone(), registry.clone());
+        let (_, v) = d.register(b"{}");
+        let agent = v.get("agent").as_f64().unwrap() as u64;
+        let job = queued_job(&queue, &registry);
+        let (_, v) = d.poll(agent, b"{}");
+        assert_eq!(v.get("assign").as_arr().unwrap().len(), 1);
+
+        registry.cancel(job).unwrap();
+        let (_, v) = d.poll(agent, b"{}");
+        let stop = v.get("stop").as_arr().unwrap();
+        assert_eq!(stop.len(), 1, "the cancel must reach the agent");
+        assert_eq!(stop[0].as_f64().unwrap() as u64, job);
+        d.report_done(agent, job, br#"{"stopped": true}"#);
+        assert_eq!(registry.state_of(job), Some(JobState::Cancelled));
+
+        // an error outcome lands as Failed with the message recorded
+        let job2 = queued_job(&queue, &registry);
+        d.poll(agent, b"{}");
+        d.report_done(agent, job2, br#"{"error": "engine exploded"}"#);
+        assert_eq!(registry.state_of(job2), Some(JobState::Failed));
+        let detail = registry.job_json(job2).unwrap();
+        assert_eq!(detail.get("error").as_str(), Some("engine exploded"));
+        d.shutdown();
+    }
+
+    #[test]
+    fn lost_assignment_is_reconciled_on_the_next_poll() {
+        let (queue, registry) = parts();
+        let d = Dispatcher::spawn(ClusterOptions::default(), queue.clone(), registry.clone());
+        let (_, v) = d.register(b"{}");
+        let agent = v.get("agent").as_f64().unwrap() as u64;
+        let job = queued_job(&queue, &registry);
+
+        // the assignment goes out…
+        let (_, v) = d.poll(agent, br#"{"running": []}"#);
+        assert_eq!(v.get("assign").as_arr().unwrap().len(), 1);
+        assert_eq!(registry.state_of(job), Some(JobState::Running));
+
+        // …but the response never reached the agent: its next poll
+        // still reports nothing running, so the dispatcher takes the
+        // job back — and can hand it out again in the same answer
+        let (_, v) = d.poll(agent, br#"{"running": []}"#);
+        assert_eq!(v.get("assign").as_arr().unwrap().len(), 1);
+        assert_eq!(registry.state_of(job), Some(JobState::Running));
+
+        // once the agent acks the job, polls leave it alone
+        let ack = format!(r#"{{"running": [{job}]}}"#);
+        let (_, v) = d.poll(agent, ack.as_bytes());
+        assert_eq!(v.get("assign").as_arr().unwrap().len(), 0);
+        assert_eq!(registry.state_of(job), Some(JobState::Running));
+        // a poll WITHOUT the running key must not reconcile (curl)
+        let (_, v) = d.poll(agent, b"{}");
+        assert_eq!(v.get("assign").as_arr().unwrap().len(), 0);
+        assert_eq!(registry.state_of(job), Some(JobState::Running));
+        d.shutdown();
+    }
+
+    #[test]
+    fn lease_expiry_reaps_the_agent_and_requeues_its_jobs() {
+        let (queue, registry) = parts();
+        let d = Dispatcher::spawn(
+            ClusterOptions { lease_ms: 120 },
+            queue.clone(),
+            registry.clone(),
+        );
+        let (_, v) = d.register(br#"{"capacity": 2}"#);
+        let agent = v.get("agent").as_f64().unwrap() as u64;
+        let j1 = queued_job(&queue, &registry);
+        let j2 = queued_job(&queue, &registry);
+        d.poll(agent, b"{}");
+        assert_eq!(registry.state_of(j1), Some(JobState::Running));
+        assert_eq!(queue.len(), 0);
+
+        // the agent goes silent: within a few lease periods both jobs
+        // are back on the queue and the agent is gone
+        let t0 = Instant::now();
+        while (registry.state_of(j1) != Some(JobState::Queued)
+            || registry.state_of(j2) != Some(JobState::Queued))
+            && t0.elapsed() < Duration::from_secs(10)
+        {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(registry.state_of(j1), Some(JobState::Queued));
+        assert_eq!(registry.state_of(j2), Some(JobState::Queued));
+        assert_eq!(queue.len(), 2);
+        assert_eq!(d.poll(agent, b"{}").0, 404, "a reaped agent must re-register");
+        assert_eq!(d.agent_count(), 0);
+
+        // deregister is the graceful version of the same path
+        let (_, v) = d.register(b"{}");
+        let agent2 = v.get("agent").as_f64().unwrap() as u64;
+        d.poll(agent2, b"{}");
+        let (status, v) = d.deregister(agent2);
+        assert_eq!(status, 200);
+        assert_eq!(v.get("requeued").as_usize(), Some(1));
+        assert_eq!(d.agent_count(), 0);
+        d.shutdown();
+    }
+}

@@ -1,7 +1,10 @@
 //! Minimal HTTP/1.1 front end on `std::net::TcpListener` — content-length
 //! framing only, one request per connection (`Connection: close`), JSON
-//! bodies everywhere. One acceptor thread handles the (cheap) control
-//! plane; training runs on the worker pool.
+//! bodies everywhere. The acceptor hands each connection to a
+//! short-lived handler thread, so a slow or hung client can never
+//! block `/healthz`, `/stats` or submissions behind its socket
+//! timeout; training runs on the worker pool (and, with `--cluster`,
+//! on remote agents).
 //!
 //! Routes:
 //!
@@ -10,52 +13,93 @@
 //! | GET  /healthz          | liveness probe                           |
 //! | GET  /stats            | aggregate `ServerStats`                  |
 //! | GET  /jobs             | job summaries, newest first              |
-//! | POST /jobs             | submit a `JobSpec` (429 when queue full) |
+//! | POST /jobs             | submit a `JobSpec` (429 full, 503 closed)|
 //! | GET  /jobs/{id}        | full status + per-epoch history          |
 //! | POST /jobs/{id}/cancel | cancel queued / stop running             |
-//! | POST /shutdown         | drain acceptor, close queue, join pool   |
+//! | POST /shutdown         | close queue, stop jobs, drain, compact   |
+//!
+//! With `ServeOptions::cluster` set, the `/cluster/*` control plane is
+//! live as well (see [`super::dispatch`]):
+//!
+//! | method+path                              | action                      |
+//! |------------------------------------------|-----------------------------|
+//! | POST /cluster/register                   | admit a remote worker agent |
+//! | GET  /cluster/agents                     | agent listing               |
+//! | POST /cluster/agents/{a}/poll            | heartbeat + work pull       |
+//! | POST /cluster/agents/{a}/deregister      | graceful leave (requeues)   |
+//! | POST /cluster/agents/{a}/jobs/{j}/epoch  | per-epoch progress          |
+//! | POST /cluster/agents/{a}/jobs/{j}/done   | terminal outcome            |
 
+use super::dispatch::{ClusterOptions, Dispatcher};
 use super::journal::{self, Journal};
 use super::protocol::{error_json, JobSpec, DEFAULT_PORT};
-use super::queue::JobQueue;
+use super::queue::{JobQueue, PushError};
 use super::registry::{CancelOutcome, JobRegistry};
 use super::worker::WorkerPool;
 use crate::util::json::{self, Value};
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
     /// TCP port on 127.0.0.1; 0 picks an ephemeral port.
     pub port: u16,
-    /// Worker-pool size (concurrent training jobs).
+    /// Worker-pool size (concurrent local training jobs). 0 is allowed
+    /// only with `cluster` set: a pure coordinator that runs nothing
+    /// itself.
     pub workers: usize,
-    /// Queue capacity; submissions beyond it get a 429.
+    /// Queue capacity; fresh submissions beyond it get a 429. Journal
+    /// replay and lease-expiry requeues bypass it (jobs admitted once
+    /// are never destroyed by capacity).
     pub queue_cap: usize,
     /// Path of the persistent JSONL job journal (`None` = in-memory
     /// only, the pre-journal behavior). With a journal, the job table
     /// is replayed on startup, interrupted jobs requeue from their
     /// last checkpoint, and clean shutdown compacts the file.
     pub journal: Option<String>,
+    /// Enable the cluster control plane (`/cluster/*`): remote worker
+    /// agents register here and the dispatcher fans queued jobs out to
+    /// them. `None` = single-node; with no registered agents a cluster
+    /// server behaves exactly like a single-node one.
+    pub cluster: Option<ClusterOptions>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { port: DEFAULT_PORT, workers: 2, queue_cap: 64, journal: None }
+        ServeOptions {
+            port: DEFAULT_PORT,
+            workers: 2,
+            queue_cap: 64,
+            journal: None,
+            cluster: None,
+        }
     }
 }
 
-/// A bound job server: acceptor + queue + registry + worker pool,
-/// optionally backed by a persistent job journal.
-pub struct Server {
-    listener: TcpListener,
+/// Everything a connection handler needs, shared across the acceptor
+/// and the per-connection threads.
+struct Gateway {
+    addr: SocketAddr,
     queue: Arc<JobQueue>,
     registry: Arc<JobRegistry>,
-    pool: WorkerPool,
     journal: Option<Arc<Journal>>,
+    dispatcher: Option<Arc<Dispatcher>>,
+    workers: usize,
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+}
+
+/// A bound job server: acceptor + queue + registry + worker pool,
+/// optionally backed by a persistent job journal and/or fronting a
+/// cluster of remote agents.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Gateway>,
+    pool: WorkerPool,
 }
 
 impl Server {
@@ -64,10 +108,17 @@ impl Server {
     /// configured, the previous process's job table is replayed first:
     /// terminal jobs reappear in listings, and jobs that were queued,
     /// running or interrupted go back on the queue — resuming from
-    /// their last checkpoint when one exists.
+    /// their last checkpoint when one exists. Replay requeue bypasses
+    /// `queue_cap`: a durable backlog larger than the queue must never
+    /// fail jobs at boot.
     pub fn bind(opts: &ServeOptions) -> Result<Server> {
+        anyhow::ensure!(
+            opts.workers > 0 || opts.cluster.is_some(),
+            "a server without --cluster needs at least one local worker"
+        );
         let listener = TcpListener::bind(("127.0.0.1", opts.port))
             .with_context(|| format!("binding 127.0.0.1:{}", opts.port))?;
+        let addr = listener.local_addr()?;
         let queue = Arc::new(JobQueue::new(opts.queue_cap));
         let (registry, jrnl, requeue) = match &opts.journal {
             None => (Arc::new(JobRegistry::new()), None, Vec::new()),
@@ -90,70 +141,154 @@ impl Server {
                 (registry, Some(j), requeue)
             }
         };
+        let dispatcher = opts
+            .cluster
+            .as_ref()
+            .map(|c| Dispatcher::spawn(c.clone(), queue.clone(), registry.clone()));
         let pool = WorkerPool::spawn(opts.workers, queue.clone(), registry.clone());
         for (id, priority) in requeue {
-            if queue.push(id, priority).is_err() {
-                registry.fail(id, "restart requeue rejected: queue full".into());
+            // push_admitted only refuses on a closed queue, which
+            // cannot happen at boot — but never fail silently
+            if !queue.push_admitted(id, priority) {
+                registry.fail(id, "restart requeue rejected: queue closed".into());
             }
         }
-        Ok(Server { listener, queue, registry, pool, journal: jrnl })
+        let shared = Arc::new(Gateway {
+            addr,
+            queue,
+            registry,
+            journal: jrnl,
+            dispatcher,
+            workers: opts.workers,
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+        });
+        Ok(Server { listener, shared, pool })
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Accept loop; returns after a `POST /shutdown`, once the queue is
-    /// closed, in-flight jobs are stop-flagged (completing as
-    /// Interrupted, so the next journal replay requeues them), every
-    /// worker has exited, and the journal — when configured — has been
-    /// compacted with the final job states.
+    /// Accept loop; each connection is served on its own short-lived
+    /// thread. Returns after a `POST /shutdown`: the handler closes the
+    /// queue first (so racing submissions get a truthful 503), signals
+    /// the acceptor through a flag + self-connect wake-up, in-flight
+    /// handlers are drained, running jobs are stop-flagged (completing
+    /// as Interrupted, so the next journal replay requeues them),
+    /// remote agents' jobs are interrupted coordinator-side, every
+    /// worker joins, and the journal — when configured — is compacted
+    /// with the final job states.
     pub fn run(self) -> Result<()> {
-        for conn in self.listener.incoming() {
+        let Server { listener, shared, pool } = self;
+        for conn in listener.incoming() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
             let mut stream = match conn {
                 Ok(s) => s,
                 Err(_) => continue,
             };
-            if self.handle(&mut stream) {
-                break;
+            shared.active.fetch_add(1, Ordering::SeqCst);
+            let sh = shared.clone();
+            let spawned = std::thread::Builder::new()
+                .name("serve-conn".into())
+                .spawn(move || {
+                    sh.handle(&mut stream);
+                    sh.active.fetch_sub(1, Ordering::SeqCst);
+                });
+            if spawned.is_err() {
+                shared.active.fetch_sub(1, Ordering::SeqCst);
             }
         }
-        self.queue.close();
+        // drain in-flight handlers briefly so their final journal
+        // events land before compaction
+        let t0 = Instant::now();
+        while shared.active.load(Ordering::SeqCst) > 0
+            && t0.elapsed() < Duration::from_secs(5)
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        shared.queue.close();
         // without this, pool.join() would block for the remainder of
         // any in-flight training run
-        self.registry.stop_all_running();
-        self.pool.join();
-        if let Some(j) = &self.journal {
-            j.compact(&self.registry.compacted_jobs())?;
+        shared.registry.stop_all_running();
+        if let Some(d) = &shared.dispatcher {
+            d.shutdown();
+        }
+        pool.join();
+        if let Some(j) = &shared.journal {
+            j.compact(&shared.registry.compacted_jobs())?;
         }
         Ok(())
     }
 
-    /// Serve one connection; returns true iff shutdown was requested.
-    fn handle(&self, stream: &mut TcpStream) -> bool {
+    /// Drive one request through the router without a socket — the
+    /// deterministic seam for tests and embedders (e.g. asserting the
+    /// shutdown 503 without racing the acceptor teardown). Behaves
+    /// exactly like a request over the wire, including shutdown
+    /// side effects.
+    pub fn inject(&self, method: &str, path: &str, body: Option<&Value>) -> (u16, Value) {
+        let text = body.map(json::to_string).unwrap_or_default();
+        let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+        let (status, v, shutdown) = self.shared.route(method, &segs, text.as_bytes());
+        if shutdown {
+            self.shared.begin_shutdown();
+            self.shared.wake();
+        }
+        (status, v)
+    }
+}
+
+impl Gateway {
+    /// Serve one connection (already on its own thread).
+    fn handle(&self, stream: &mut TcpStream) {
         let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
         let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
         let req = match read_request(stream) {
             Ok(r) => r,
             Err(e) => {
                 let _ = write_json(stream, 400, &error_json(&format!("bad request: {e:#}")));
-                return false;
+                return;
             }
         };
         let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
         let (status, body, shutdown) = self.route(&req.method, &segs, &req.body);
+        if shutdown {
+            // close the queue BEFORE acknowledging: any submission
+            // that observes the shutdown gets a truthful 503 instead
+            // of racing the acceptor teardown
+            self.begin_shutdown();
+        }
         let _ = write_json(stream, status, &body);
-        shutdown
+        if shutdown {
+            self.wake();
+        }
+    }
+
+    /// Make the shutdown observable (queue closed, running jobs
+    /// stop-flagged as interrupted) and raise the acceptor's flag.
+    fn begin_shutdown(&self) {
+        self.queue.close();
+        self.registry.stop_all_running();
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Unblock the acceptor so it notices the shutdown flag.
+    fn wake(&self) {
+        let _ = TcpStream::connect(self.addr);
     }
 
     fn route(&self, method: &str, segs: &[&str], body: &[u8]) -> (u16, Value, bool) {
         match (method, segs) {
             ("GET", ["healthz"]) => (200, Value::obj(vec![("ok", Value::Bool(true))]), false),
-            ("GET", ["stats"]) => (
-                200,
-                self.registry.stats_json(self.queue.len(), self.pool.len()),
-                false,
-            ),
+            ("GET", ["stats"]) => {
+                let mut v = self.registry.stats_json(self.queue.len(), self.workers);
+                if let (Some(d), Value::Obj(obj)) = (&self.dispatcher, &mut v) {
+                    obj.insert("agents".into(), Value::num(d.agent_count() as f64));
+                }
+                (200, v, false)
+            }
             ("GET", ["jobs"]) => (200, self.registry.jobs_json(), false),
             ("POST", ["jobs"]) => {
                 let (status, v) = self.submit(body);
@@ -170,10 +305,50 @@ impl Server {
                 Some(id) => self.cancel(id),
                 None => (400, error_json("job id must be an integer"), false),
             },
+            (m, ["cluster", rest @ ..]) => {
+                let (status, v) = self.route_cluster(m, rest, body);
+                (status, v, false)
+            }
             ("POST", ["shutdown"]) => {
                 (200, Value::obj(vec![("ok", Value::Bool(true))]), true)
             }
             _ => (404, error_json(&format!("no route {method} /{}", segs.join("/"))), false),
+        }
+    }
+
+    /// The `/cluster/*` control plane (404 unless the server was
+    /// started with cluster mode enabled).
+    fn route_cluster(&self, method: &str, segs: &[&str], body: &[u8]) -> (u16, Value) {
+        let Some(d) = &self.dispatcher else {
+            return (404, error_json("cluster mode disabled (start with --cluster)"));
+        };
+        match (method, segs) {
+            ("POST", ["register"]) => d.register(body),
+            ("GET", ["agents"]) => (200, d.agents_json()),
+            ("POST", ["agents", aid, "poll"]) => match parse_id(aid) {
+                Some(a) => d.poll(a, body),
+                None => (400, error_json("agent id must be an integer")),
+            },
+            ("POST", ["agents", aid, "deregister"]) => match parse_id(aid) {
+                Some(a) => d.deregister(a),
+                None => (400, error_json("agent id must be an integer")),
+            },
+            ("POST", ["agents", aid, "jobs", jid, "epoch"]) => {
+                match (parse_id(aid), parse_id(jid)) {
+                    (Some(a), Some(j)) => d.report_epoch(a, j, body),
+                    _ => (400, error_json("agent and job ids must be integers")),
+                }
+            }
+            ("POST", ["agents", aid, "jobs", jid, "done"]) => {
+                match (parse_id(aid), parse_id(jid)) {
+                    (Some(a), Some(j)) => d.report_done(a, j, body),
+                    _ => (400, error_json("agent and job ids must be integers")),
+                }
+            }
+            _ => (
+                404,
+                error_json(&format!("no route {method} /cluster/{}", segs.join("/"))),
+            ),
         }
     }
 
@@ -205,16 +380,24 @@ impl Server {
                     ("state", Value::str("queued")),
                 ]),
             ),
-            Err(full) => {
+            Err(e) => {
                 // roll the record back so the rejected job never shows up
                 self.registry.forget(id);
-                (
-                    429,
-                    Value::obj(vec![
-                        ("error", Value::str("queue full")),
-                        ("capacity", Value::num(full.capacity as f64)),
-                    ]),
-                )
+                match e {
+                    PushError::Full { capacity } => (
+                        429,
+                        Value::obj(vec![
+                            ("error", Value::str("queue full")),
+                            ("capacity", Value::num(capacity as f64)),
+                        ]),
+                    ),
+                    // shutdown in progress: not backpressure — this
+                    // instance will never accept the job
+                    PushError::Closed => (
+                        503,
+                        error_json("server shutting down; resubmit after restart"),
+                    ),
+                }
             }
         }
     }
@@ -264,14 +447,21 @@ fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
     haystack.windows(needle.len()).position(|w| w == needle)
 }
 
-/// Read one content-length-framed request (no chunked encoding).
+/// Read one content-length-framed request (no chunked encoding). The
+/// `\r\n\r\n` scan resumes from the previous read's tail instead of
+/// re-scanning the whole buffer after every 4 KiB chunk — linear in
+/// the header size, where the naive rescan is quadratic.
 fn read_request(stream: &mut TcpStream) -> Result<Request> {
     let mut buf: Vec<u8> = Vec::new();
     let mut tmp = [0u8; 4096];
+    let mut scan_from = 0usize;
     let header_end = loop {
-        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
-            break pos;
+        if let Some(pos) = find_subslice(&buf[scan_from..], b"\r\n\r\n") {
+            break scan_from + pos;
         }
+        // the terminator may straddle the chunk boundary: keep the
+        // last 3 bytes of the scanned prefix in play
+        scan_from = buf.len().saturating_sub(3);
         anyhow::ensure!(buf.len() < 64 * 1024, "headers too large");
         let n = stream.read(&mut tmp)?;
         anyhow::ensure!(n > 0, "connection closed mid-headers");
@@ -308,8 +498,10 @@ fn status_text(code: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        409 => "Conflict",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
@@ -324,12 +516,25 @@ fn write_json(stream: &mut TcpStream, status: u16, v: &Value) -> std::io::Result
     stream.write_all(resp.as_bytes())
 }
 
-/// Tiny blocking HTTP/1.1 client for `repro submit|jobs|job` and the
-/// integration tests. Returns `(status, parsed JSON body)`.
+/// Tiny blocking HTTP/1.1 client for `repro submit|jobs|job`, the
+/// cluster agent and the integration tests. Returns `(status, parsed
+/// JSON body)`.
 pub fn request(addr: &str, method: &str, path: &str, body: Option<&Value>) -> Result<(u16, Value)> {
+    request_with_timeout(addr, method, path, body, Duration::from_secs(60))
+}
+
+/// [`request`] with an explicit read timeout (the agent uses a short
+/// one so a dying coordinator shows up as a failed poll, not a hang).
+pub fn request_with_timeout(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&Value>,
+    read_timeout: Duration,
+) -> Result<(u16, Value)> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
-    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    stream.set_read_timeout(Some(read_timeout))?;
     stream.set_write_timeout(Some(Duration::from_secs(10)))?;
     let body_text = body.map(json::to_string).unwrap_or_default();
     let req = format!(
@@ -383,9 +588,13 @@ mod tests {
 
     #[test]
     fn healthz_and_404_over_real_sockets() {
-        let server =
-            Server::bind(&ServeOptions { port: 0, workers: 1, queue_cap: 2, journal: None })
-                .unwrap();
+        let server = Server::bind(&ServeOptions {
+            port: 0,
+            workers: 1,
+            queue_cap: 2,
+            ..Default::default()
+        })
+        .unwrap();
         let addr = server.local_addr().unwrap().to_string();
         let h = std::thread::spawn(move || server.run().unwrap());
 
@@ -400,8 +609,25 @@ mod tests {
         let (status, _) = request(&addr, "GET", "/jobs/xyz", None).unwrap();
         assert_eq!(status, 400);
 
+        // without cluster mode the /cluster routes stay dark
+        let (status, v) = request(&addr, "POST", "/cluster/register", None).unwrap();
+        assert_eq!(status, 404);
+        assert!(v.get("error").as_str().unwrap().contains("cluster mode disabled"));
+
         let (status, _) = request(&addr, "POST", "/shutdown", None).unwrap();
         assert_eq!(status, 200);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn workers_zero_requires_cluster() {
+        let opts = ServeOptions { port: 0, workers: 0, queue_cap: 2, ..Default::default() };
+        assert!(Server::bind(&opts).is_err());
+        let opts = ServeOptions { cluster: Some(ClusterOptions::default()), ..opts };
+        let server = Server::bind(&opts).unwrap();
+        let (status, _) = server.inject("GET", "/healthz", None);
+        assert_eq!(status, 200);
+        let (status, _) = server.inject("POST", "/shutdown", None);
+        assert_eq!(status, 200);
     }
 }

@@ -10,8 +10,11 @@
 //! ```text
 //! {"event":"submit","id":N,"ts":UNIX,"spec":{JobSpec}}   submission (pre-queue)
 //! {"event":"forget","id":N}                              queue push rejected: void it
-//! {"event":"start","id":N,"worker":W}                    worker claimed the job
+//! {"event":"start","id":N,"worker":W}                    local worker claimed the job
+//! {"event":"start","id":N,"agent":A}                     cluster agent was assigned the job
 //! {"event":"epoch","id":N,"stats":{EpochStats}}          one epoch reported
+//! {"event":"requeue","id":N}                             agent lease expired / deregistered:
+//!                                                        the job went back to Queued
 //! {"event":"terminal","id":N,"state":S,...}              Done/Failed/Cancelled/Interrupted
 //! {"event":"job",...}                                    compacted full record (below)
 //! ```
@@ -191,9 +194,23 @@ pub fn replay(path: impl AsRef<Path>) -> Result<Vec<Replayed>> {
                     j.state = JobState::Running;
                 }
             }
+            // a remote agent's lease expired (or it deregistered) and
+            // the job went back on the queue mid-process
+            Some("requeue") => {
+                if let Some(j) = jobs.get_mut(&id) {
+                    j.state = JobState::Queued;
+                }
+            }
             Some("epoch") => {
                 if let Some(j) = jobs.get_mut(&id) {
                     if let Ok(s) = EpochStats::from_json(v.get("stats")) {
+                        // a re-reported epoch supersedes any stale tail
+                        // from a pre-requeue lineage: after a lost-agent
+                        // requeue WITHOUT a usable checkpoint the job
+                        // reran from scratch, and its fresh epoch 0..
+                        // events must replace the dead lineage's — the
+                        // live registry cleared them at requeue time
+                        j.epochs.retain(|e| e.epoch < s.epoch);
                         j.best_test_acc = j.best_test_acc.max(s.test_acc);
                         j.epochs.push(s);
                     }
@@ -237,34 +254,45 @@ pub fn prepare_requeue(job: &mut Replayed) -> bool {
         JobState::Done | JobState::Failed | JobState::Cancelled => false,
         JobState::Queued | JobState::Running | JobState::Interrupted => {
             job.state = JobState::Queued;
-            // only a snapshot that verifiably belongs to THIS job's
-            // spec arms resume — a stale file from an earlier run at a
-            // reused path must fall back to a from-scratch rerun, not
-            // doom the requeue to a spec-mismatch failure
-            let current_spec = job.spec.config.train_spec().to_json();
-            let snapshot = job.spec.config.save_checkpoint.as_ref().and_then(|p| {
-                match checkpoint::load_full(p) {
-                    Ok((_, Some(state)))
-                        if state.epochs_done > 0
-                            && checkpoint::ensure_spec_matches(&state.spec, &current_spec)
-                                .is_ok() =>
-                    {
-                        Some((p.clone(), state.epochs_done))
-                    }
-                    _ => None,
-                }
-            });
-            match snapshot {
-                Some((path, epochs_done)) => {
-                    job.spec.config.resume = Some(path);
-                    job.spec.config.load_checkpoint = None;
-                    job.epochs.retain(|e| e.epoch < epochs_done);
-                }
-                // no snapshot: rerun from the job's original config
-                None => job.epochs.clear(),
-            }
+            arm_resume(&mut job.spec, &mut job.epochs);
             true
         }
+    }
+}
+
+/// The shared requeue core (PR 3's interrupted-requeue rule), used by
+/// boot-time journal replay AND the cluster's lease-expiry requeue of a
+/// lost agent's jobs:
+///
+/// * only a snapshot that verifiably belongs to THIS job's spec arms
+///   `resume` — a stale file from an earlier run at a reused path must
+///   fall back to a from-scratch rerun, not doom the requeue to a
+///   spec-mismatch failure;
+/// * when resume is armed, the recorded history is trimmed to the
+///   snapshot's completed epochs (the resumed run re-reports the rest);
+/// * with no usable snapshot the history is cleared and the job reruns
+///   under its original config.
+pub fn arm_resume(spec: &mut JobSpec, epochs: &mut Vec<EpochStats>) {
+    let current_spec = spec.config.train_spec().to_json();
+    let snapshot = spec.config.save_checkpoint.as_ref().and_then(|p| {
+        match checkpoint::load_full(p) {
+            Ok((_, Some(state)))
+                if state.epochs_done > 0
+                    && checkpoint::ensure_spec_matches(&state.spec, &current_spec).is_ok() =>
+            {
+                Some((p.clone(), state.epochs_done))
+            }
+            _ => None,
+        }
+    });
+    match snapshot {
+        Some((path, epochs_done)) => {
+            spec.config.resume = Some(path);
+            spec.config.load_checkpoint = None;
+            epochs.retain(|e| e.epoch < epochs_done);
+        }
+        // no snapshot: rerun from the job's original config
+        None => epochs.clear(),
     }
 }
 
@@ -324,6 +352,88 @@ mod tests {
         assert_eq!(jobs[0].epochs.len(), 1);
         assert!((jobs[0].best_test_acc - 0.5).abs() < 1e-6);
         assert_eq!(jobs[1].state, JobState::Cancelled);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn requeue_event_folds_back_to_queued() {
+        let path = tmp("requeue_event");
+        let j = Journal::open(&path).unwrap();
+        j.append(&submit_ev(1));
+        j.append(&Value::obj(vec![
+            ("event", Value::str("start")),
+            ("id", Value::num(1.0)),
+            ("agent", Value::num(3.0)),
+        ]));
+        j.append(&Value::obj(vec![
+            ("event", Value::str("epoch")),
+            ("id", Value::num(1.0)),
+            (
+                "stats",
+                EpochStats { epoch: 0, test_acc: 0.4, ..Default::default() }.to_json(),
+            ),
+        ]));
+        // the agent's lease expired: the job went back to Queued…
+        j.append(&Value::obj(vec![
+            ("event", Value::str("requeue")),
+            ("id", Value::num(1.0)),
+        ]));
+        let jobs = replay(&path).unwrap();
+        assert_eq!(jobs[0].state, JobState::Queued);
+        assert_eq!(jobs[0].epochs.len(), 1);
+
+        // …and a later assignment + terminal folds to the final state
+        j.append(&Value::obj(vec![
+            ("event", Value::str("start")),
+            ("id", Value::num(1.0)),
+            ("agent", Value::num(4.0)),
+        ]));
+        j.append(&Value::obj(vec![
+            ("event", Value::str("terminal")),
+            ("id", Value::num(1.0)),
+            ("state", Value::str("done")),
+            ("best_test_acc", Value::num(0.6)),
+            ("run_seconds", Value::num(2.0)),
+        ]));
+        let jobs = replay(&path).unwrap();
+        assert_eq!(jobs[0].state, JobState::Done);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replayed_rerun_supersedes_the_dead_lineage() {
+        // a lost-agent requeue with no usable checkpoint reruns from
+        // scratch: its fresh epoch events must REPLACE the dead
+        // lineage's, not append after them
+        let path = tmp("rerun_dedup");
+        let j = Journal::open(&path).unwrap();
+        j.append(&submit_ev(1));
+        let epoch_ev = |e: usize, acc: f64| {
+            Value::obj(vec![
+                ("event", Value::str("epoch")),
+                ("id", Value::num(1.0)),
+                (
+                    "stats",
+                    EpochStats { epoch: e, test_acc: acc as f32, ..Default::default() }
+                        .to_json(),
+                ),
+            ])
+        };
+        for e in 0..3 {
+            j.append(&epoch_ev(e, 0.3));
+        }
+        j.append(&Value::obj(vec![
+            ("event", Value::str("requeue")),
+            ("id", Value::num(1.0)),
+        ]));
+        for e in 0..5 {
+            j.append(&epoch_ev(e, 0.5));
+        }
+        let jobs = replay(&path).unwrap();
+        assert_eq!(jobs[0].epochs.len(), 5, "history must be the rerun's 0..5, no dups");
+        for (i, e) in jobs[0].epochs.iter().enumerate() {
+            assert_eq!(e.epoch, i);
+        }
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,18 +1,22 @@
 //! `serve` — the multi-job on-device-learning server (fleet
 //! coordinator). Turns the one-shot trainers into a service: many
 //! concurrent jobs, queued with priority + backpressure, scheduled onto
-//! a pool of worker threads, observable over a dependency-free HTTP/1.1
-//! + JSON control plane, cancellable mid-run, checkpointed, and — with
-//! `--journal` — durable across server restarts.
+//! a pool of worker threads — and, with `--cluster`, fanned out to
+//! remote worker agents on other machines — observable over a
+//! dependency-free HTTP/1.1 + JSON control plane, cancellable mid-run,
+//! checkpointed, and — with `--journal` — durable across server
+//! restarts.
 //!
 //! Layering (std-only; JSON via the in-tree `util::json`):
 //!
-//! * [`protocol`] — `JobSpec` / `JobState` / error bodies; a job spec
-//!   covers every scenario `repro train` supports (both models, all
-//!   three datasets, all four methods, FP32/INT8/INT8*, checkpoints,
-//!   checkpoint-resume).
+//! * [`protocol`] — `JobSpec` / `JobState` / `AgentState` / error
+//!   bodies; a job spec covers every scenario `repro train` supports
+//!   (both models, all three datasets, all four methods,
+//!   FP32/INT8/INT8*, checkpoints, checkpoint-resume).
 //! * [`queue`]    — bounded MPMC priority+FIFO queue on `Mutex`+`Condvar`;
-//!   a full queue rejects submissions (HTTP 429) instead of blocking.
+//!   a full queue rejects fresh submissions (HTTP 429), a closed one
+//!   rejects them for good (HTTP 503); replay/lease requeues bypass
+//!   capacity.
 //! * [`registry`] — job table (Queued→Running→Done/Failed/Cancelled/
 //!   Interrupted), per-epoch history snapshots, aggregate `ServerStats`
 //!   rolled up from each job's `telemetry::PhaseTimer`; doubles as the
@@ -24,15 +28,29 @@
 //!   (`launch::run` into the unified `coordinator::session` loop) with a
 //!   cooperative [`crate::coordinator::StopFlag`] and a registry-backed
 //!   progress sink armed on each job's `TrainSpec`.
+//! * [`dispatch`] — the cluster dispatcher: agent registration, lease
+//!   heartbeats, queued-job fan-out to polling agents, and the reaper
+//!   that requeues a lost agent's jobs from their last checkpoint.
+//! * [`cluster`]  — the remote worker agent (`repro agent`): registers
+//!   with a coordinator, pulls serialized `TrainSpec`s, runs them
+//!   through the same `launch::run`, POSTs epochs + outcomes back.
 //! * [`http`]     — `TcpListener` front end (GET /jobs, GET /jobs/{id},
 //!   POST /jobs, POST /jobs/{id}/cancel, GET /stats, GET /healthz,
-//!   POST /shutdown) plus the tiny client used by `repro submit|jobs|job`.
+//!   POST /shutdown, POST/GET /cluster/*) serving each connection on a
+//!   short-lived thread, plus the tiny client used by
+//!   `repro submit|jobs|job` and the agent.
 //!
 //! Entry points: `repro serve --port P --workers N --queue-cap C
-//! [--journal F]` boots [`http::Server`]; `repro submit|jobs|job|stats`
-//! talk to it. The HTTP surface is documented with request/response
-//! examples in `rust/docs/SERVE_API.md`.
+//! [--journal F] [--cluster [--lease-ms L]]` boots [`http::Server`];
+//! `repro agent --coordinator ADDR --capacity N` joins the fleet;
+//! `repro submit|jobs|job|stats` talk to the coordinator. Local
+//! workers remain the degenerate one-node case — a cluster server with
+//! no registered agents behaves exactly like a single-node one. The
+//! HTTP surface is documented with request/response examples in
+//! `rust/docs/SERVE_API.md`.
 
+pub mod cluster;
+pub mod dispatch;
 pub mod http;
 pub mod journal;
 pub mod protocol;
@@ -40,9 +58,11 @@ pub mod queue;
 pub mod registry;
 pub mod worker;
 
-pub use http::{request, ServeOptions, Server};
+pub use cluster::{Agent, AgentHandle, AgentOptions};
+pub use dispatch::{ClusterOptions, Dispatcher};
+pub use http::{request, request_with_timeout, ServeOptions, Server};
 pub use journal::Journal;
-pub use protocol::{JobSpec, JobState, DEFAULT_PORT};
-pub use queue::{JobQueue, QueueFull};
+pub use protocol::{AgentState, JobSpec, JobState, DEFAULT_PORT};
+pub use queue::{JobQueue, PushError};
 pub use registry::{CancelOutcome, JobOutcome, JobRegistry};
 pub use worker::WorkerPool;

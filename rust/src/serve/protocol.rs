@@ -169,6 +169,35 @@ impl JobState {
     }
 }
 
+/// A registered cluster agent as the coordinator sees it: `Idle`
+/// (no assigned jobs) or `Busy` (≥ 1 assigned, possibly below
+/// capacity). There is deliberately no "lost" state — an agent whose
+/// lease expires leaves the table entirely and its jobs requeue, so a
+/// listed agent is always one the dispatcher would hand work to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgentState {
+    Idle,
+    Busy,
+}
+
+impl AgentState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AgentState::Idle => "idle",
+            AgentState::Busy => "busy",
+        }
+    }
+
+    /// Inverse of [`AgentState::as_str`].
+    pub fn parse(s: &str) -> Result<AgentState> {
+        Ok(match s {
+            "idle" => AgentState::Idle,
+            "busy" => AgentState::Busy,
+            other => anyhow::bail!("unknown agent state '{other}'"),
+        })
+    }
+}
+
 /// The structured error body every non-2xx response carries.
 pub fn error_json(msg: &str) -> Value {
     Value::obj(vec![("error", Value::str(msg))])
@@ -278,6 +307,14 @@ mod tests {
             let v = json::parse(bad).unwrap();
             assert!(JobSpec::from_json(&v).is_err(), "should reject {bad}");
         }
+    }
+
+    #[test]
+    fn agent_states_roundtrip() {
+        for s in [AgentState::Idle, AgentState::Busy] {
+            assert_eq!(AgentState::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(AgentState::parse("lost").is_err());
     }
 
     #[test]

@@ -1,7 +1,12 @@
 //! Bounded MPMC job queue: priority + FIFO ordering on
 //! `std::sync::{Mutex, Condvar}`. `push` never blocks — a full queue is
-//! backpressure, reported to the submitter as a structured 429 — while
-//! `pop` parks worker threads until work arrives or the queue closes.
+//! backpressure, reported to the submitter as a structured 429, and a
+//! closed queue (shutdown) is a distinct 503 — while `pop` parks worker
+//! threads until work arrives or the queue closes. The cluster
+//! dispatcher uses the non-blocking `try_pop`, and journal-replay /
+//! lease-expiry requeues re-enter through the capacity-bypassing
+//! `push_admitted` (jobs already admitted once are never destroyed by
+//! a smaller `queue_cap`).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -31,19 +36,30 @@ impl PartialOrd for Entry {
     }
 }
 
-/// Rejection on `push` when the queue is at capacity (or closed).
+/// Rejection on `push`. The two cases are different truths and map to
+/// different HTTP statuses: `Full` is backpressure (429 — retry later),
+/// `Closed` means the server is shutting down (503 — this instance
+/// will never accept the job, resubmit elsewhere/after restart).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct QueueFull {
-    pub capacity: usize,
+pub enum PushError {
+    /// At capacity — transient backpressure.
+    Full { capacity: usize },
+    /// The queue is closed (shutdown in progress) and rejects forever.
+    Closed,
 }
 
-impl fmt::Display for QueueFull {
+impl fmt::Display for PushError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "job queue full (capacity {})", self.capacity)
+        match self {
+            PushError::Full { capacity } => {
+                write!(f, "job queue full (capacity {capacity})")
+            }
+            PushError::Closed => write!(f, "job queue closed (server shutting down)"),
+        }
     }
 }
 
-impl std::error::Error for QueueFull {}
+impl std::error::Error for PushError {}
 
 struct State {
     heap: BinaryHeap<Entry>,
@@ -84,12 +100,16 @@ impl JobQueue {
         self.len() == 0
     }
 
-    /// Enqueue without blocking; `Err(QueueFull)` is the backpressure
-    /// signal when at capacity (a closed queue also rejects).
-    pub fn push(&self, job_id: u64, priority: i64) -> Result<(), QueueFull> {
+    /// Enqueue without blocking; [`PushError::Full`] is the
+    /// backpressure signal when at capacity, [`PushError::Closed`]
+    /// the truthful rejection once shutdown has begun.
+    pub fn push(&self, job_id: u64, priority: i64) -> Result<(), PushError> {
         let mut st = self.lock();
-        if st.closed || st.heap.len() >= self.capacity {
-            return Err(QueueFull { capacity: self.capacity });
+        if st.closed {
+            return Err(PushError::Closed);
+        }
+        if st.heap.len() >= self.capacity {
+            return Err(PushError::Full { capacity: self.capacity });
         }
         let seq = st.seq;
         st.seq += 1;
@@ -97,6 +117,26 @@ impl JobQueue {
         drop(st);
         self.cv.notify_one();
         Ok(())
+    }
+
+    /// Enqueue a job that was already admitted in a previous life —
+    /// journal-replay requeue at boot and lease-expiry requeue of a
+    /// lost agent's jobs. Bypasses the capacity check on purpose:
+    /// replaying a durable backlog must never destroy jobs just
+    /// because it is larger than `queue_cap` (fresh submissions still
+    /// see backpressure, so the overshoot is bounded by the replayed
+    /// set). Returns `false` only when the queue is closed.
+    pub fn push_admitted(&self, job_id: u64, priority: i64) -> bool {
+        let mut st = self.lock();
+        if st.closed {
+            return false;
+        }
+        let seq = st.seq;
+        st.seq += 1;
+        st.heap.push(Entry { priority, seq, job_id });
+        drop(st);
+        self.cv.notify_one();
+        true
     }
 
     /// Block until a job is available (highest priority, FIFO within) or
@@ -114,6 +154,20 @@ impl JobQueue {
             }
             st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
+    }
+
+    /// Non-blocking pop — the cluster dispatcher hands work to polling
+    /// agents from a request handler and must never park there. Like
+    /// [`JobQueue::pop`], a closed queue yields nothing: an agent poll
+    /// racing the shutdown must not walk off with a job the restart
+    /// replay is about to requeue (it would end terminally Cancelled
+    /// instead of Interrupted).
+    pub fn try_pop(&self) -> Option<u64> {
+        let mut st = self.lock();
+        if st.closed {
+            return None;
+        }
+        st.heap.pop().map(|e| e.job_id)
     }
 
     /// Drop a queued job (cancellation before a worker claimed it).
@@ -157,7 +211,7 @@ mod tests {
         q.push(1, 0).unwrap();
         q.push(2, 0).unwrap();
         let err = q.push(3, 99).unwrap_err();
-        assert_eq!(err.capacity, 2);
+        assert_eq!(err, PushError::Full { capacity: 2 });
         assert!(err.to_string().contains("capacity 2"));
         // draining makes room again
         assert_eq!(q.pop(), Some(1));
@@ -174,7 +228,32 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         q.close();
         assert_eq!(h.join().unwrap(), None);
-        assert!(q.push(9, 0).is_err(), "closed queue must reject");
+        // a closed queue reports Closed, never the misleading Full
+        assert_eq!(q.push(9, 0), Err(PushError::Closed));
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let q = JobQueue::new(2);
+        assert_eq!(q.try_pop(), None);
+        q.push(5, 0).unwrap();
+        assert_eq!(q.try_pop(), Some(5));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn admitted_push_bypasses_capacity_but_not_close() {
+        let q = JobQueue::new(1);
+        q.push(1, 0).unwrap();
+        assert_eq!(q.push(2, 0), Err(PushError::Full { capacity: 1 }));
+        // replay/requeue path: over-capacity but admitted
+        assert!(q.push_admitted(2, 5));
+        assert_eq!(q.len(), 2);
+        // ordering rules still apply to admitted entries
+        assert_eq!(q.try_pop(), Some(2));
+        q.close();
+        assert!(!q.push_admitted(3, 0), "a closed queue admits nothing");
+        assert_eq!(q.try_pop(), None, "a closed queue hands out nothing");
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! In-memory job table: id → spec + state machine + per-epoch history,
 //! plus aggregate server statistics (jobs served, epochs/sec, per-phase
-//! time rolled up from each job's `telemetry::PhaseTimer`).
+//! time rolled up from each job's `telemetry::PhaseTimer`). Jobs run
+//! either on a local pool worker ([`JobRegistry::claim`]) or on a
+//! remote cluster agent ([`JobRegistry::claim_for_agent`]); a remote
+//! job whose agent vanishes re-enters the queue through
+//! [`JobRegistry::requeue_interrupted`].
 //!
 //! When the server runs with a job journal, the registry doubles as the
 //! journal's event source: every accepted submission, claim, epoch and
@@ -8,7 +12,7 @@
 //! and [`JobRegistry::restore`] re-inserts jobs replayed at startup
 //! without re-journaling their history (compaction snapshots it).
 
-use super::journal::{Journal, Replayed};
+use super::journal::{self, Journal, Replayed};
 use super::protocol::{JobSpec, JobState};
 use crate::coordinator::control::StopFlag;
 use crate::coordinator::metrics::EpochStats;
@@ -44,6 +48,8 @@ pub struct JobRecord {
     pub state: JobState,
     pub stop: StopFlag,
     pub worker: Option<usize>,
+    /// Set instead of `worker` when a cluster agent runs the job.
+    pub agent: Option<u64>,
     pub submitted_unix: f64,
     pub started: Option<Instant>,
     pub run_seconds: f64,
@@ -93,6 +99,9 @@ impl JobRecord {
         );
         if let Some(w) = self.worker {
             obj.insert("worker".into(), Value::num(w as f64));
+        }
+        if let Some(a) = self.agent {
+            obj.insert("agent".into(), Value::num(a as f64));
         }
         if let Some(e) = &self.error {
             obj.insert("error".into(), Value::str(e.clone()));
@@ -206,6 +215,7 @@ impl JobRegistry {
                 state: JobState::Queued,
                 stop: StopFlag::new(),
                 worker: None,
+                agent: None,
                 submitted_unix: now,
                 started: None,
                 run_seconds: 0.0,
@@ -254,6 +264,7 @@ impl JobRegistry {
                 state: r.state,
                 stop: StopFlag::new(),
                 worker: None,
+                agent: None,
                 submitted_unix: r.submitted_unix,
                 started: None,
                 run_seconds: r.run_seconds,
@@ -302,15 +313,117 @@ impl JobRegistry {
         Some(out)
     }
 
-    /// Per-epoch progress from a running job.
+    /// Remote claim: Queued → Running on a cluster agent. The job's
+    /// stop flag stays coordinator-side — a remote run cannot share an
+    /// `AtomicBool`, so its firing is fanned out through the
+    /// dispatcher's poll stop-list instead (see [`JobRegistry::stop_requested`]).
+    pub fn claim_for_agent(&self, id: u64, agent: u64) -> Option<JobSpec> {
+        let (spec, ev) = {
+            let mut st = self.lock();
+            let job = st.jobs.get_mut(&id)?;
+            if job.state != JobState::Queued {
+                return None;
+            }
+            job.state = JobState::Running;
+            job.agent = Some(agent);
+            job.worker = None;
+            job.started = Some(Instant::now());
+            (
+                job.spec.clone(),
+                self.journal.is_some().then(|| {
+                    Value::obj(vec![
+                        ("event", Value::str("start")),
+                        ("id", Value::num(id as f64)),
+                        ("agent", Value::num(agent as f64)),
+                    ])
+                }),
+            )
+        };
+        self.append_event(ev);
+        Some(spec)
+    }
+
+    /// True iff the job is Running and its stop flag has fired — the
+    /// dispatcher relays this to the owning agent on its next poll, so
+    /// user cancels and server shutdown reach remote runs through the
+    /// exact same flag the local workers share directly.
+    pub fn stop_requested(&self, id: u64) -> bool {
+        self.lock()
+            .jobs
+            .get(&id)
+            .is_some_and(|j| j.state == JobState::Running && j.stop.should_stop())
+    }
+
+    /// Put a remotely-running job whose agent vanished (lease expiry /
+    /// deregister) back into Queued — resume armed from its last
+    /// matching checkpoint and history trimmed to the snapshot, the
+    /// exact rule journal replay applies to interrupted jobs
+    /// ([`super::journal::arm_resume`]). A user cancel that raced in
+    /// wins instead: the job lands terminally Cancelled. Returns the
+    /// priority to requeue with (`None` = nothing to requeue).
+    pub fn requeue_interrupted(&self, id: u64) -> Option<i64> {
+        let (out, ev) = {
+            let mut st = self.lock();
+            let job = st.jobs.get_mut(&id)?;
+            if job.state != JobState::Running {
+                return None;
+            }
+            if job.stop.should_stop() && !job.interrupted {
+                job.state = JobState::Cancelled;
+                job.run_seconds = job.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
+                (None, self.journal.is_some().then(|| terminal_event(job)))
+            } else {
+                job.state = JobState::Queued;
+                job.worker = None;
+                job.agent = None;
+                job.started = None;
+                job.stop = StopFlag::new();
+                journal::arm_resume(&mut job.spec, &mut job.epochs);
+                (
+                    Some(job.spec.priority),
+                    self.journal.is_some().then(|| {
+                        Value::obj(vec![
+                            ("event", Value::str("requeue")),
+                            ("id", Value::num(id as f64)),
+                        ])
+                    }),
+                )
+            }
+        };
+        self.append_event(ev);
+        out
+    }
+
+    /// Per-epoch progress from a local worker's running job.
     pub fn record_epoch(&self, id: u64, stats: EpochStats) {
+        self.record_epoch_inner(id, None, stats);
+    }
+
+    /// Per-epoch progress from a remote run: dropped unless the job is
+    /// still Running AND still owned by `agent`. Both checks happen
+    /// under the same lock `requeue_interrupted` and `claim_for_agent`
+    /// take, so a stale report from a reaped agent can never land in a
+    /// requeued job's history — not even after a successor re-claimed
+    /// it (the owner changed).
+    pub fn record_epoch_from_agent(&self, id: u64, agent: u64, stats: EpochStats) {
+        self.record_epoch_inner(id, Some(agent), stats);
+    }
+
+    fn record_epoch_inner(&self, id: u64, from_agent: Option<u64>, stats: EpochStats) {
         let ev = {
             let mut st = self.lock();
-            st.total_epochs += 1;
-            if let Some(job) = st.jobs.get_mut(&id) {
-                job.best_test_acc = job.best_test_acc.max(stats.test_acc);
-                job.epochs.push(stats.clone());
+            let Some(job) = st.jobs.get_mut(&id) else { return };
+            if job.state != JobState::Running {
+                return;
             }
+            if let Some(a) = from_agent {
+                if job.agent != Some(a) {
+                    return;
+                }
+            }
+            job.best_test_acc = job.best_test_acc.max(stats.test_acc);
+            job.epochs.push(stats.clone());
+            st.total_epochs += 1;
             self.journal.is_some().then(|| {
                 Value::obj(vec![
                     ("event", Value::str("epoch")),
@@ -539,6 +652,44 @@ mod tests {
             r.cancel(id),
             Some(CancelOutcome::AlreadyTerminal(JobState::Interrupted))
         );
+    }
+
+    #[test]
+    fn remote_claim_requeue_and_cancel_race() {
+        let r = JobRegistry::new();
+        let id = r.add(spec());
+        // only Running jobs can requeue
+        assert_eq!(r.requeue_interrupted(id), None);
+
+        let s = r.claim_for_agent(id, 7).expect("claimable by an agent");
+        assert_eq!(s.config.epochs, Config::default().epochs);
+        assert_eq!(r.state_of(id), Some(JobState::Running));
+        assert!(r.claim(id, 0).is_none(), "no double claim across local/remote");
+        assert_eq!(r.job_json(id).unwrap().get("agent").as_usize(), Some(7));
+
+        // the agent dies: the job goes back to Queued (no checkpoint on
+        // disk ⇒ fresh rerun, history cleared) and is claimable again
+        r.record_epoch(id, EpochStats::default());
+        assert_eq!(r.requeue_interrupted(id), Some(0));
+        assert_eq!(r.state_of(id), Some(JobState::Queued));
+        assert_eq!(r.job_json(id).unwrap().get("epochs_done").as_usize(), Some(0));
+        // a stale epoch report racing the requeue changes nothing
+        r.record_epoch(id, EpochStats::default());
+        assert_eq!(r.job_json(id).unwrap().get("epochs_done").as_usize(), Some(0));
+        assert!(r.claim_for_agent(id, 8).is_some());
+        // …and neither does a dead agent's report after a successor
+        // re-claimed the job (the owner changed: 7 ≠ 8)
+        r.record_epoch_from_agent(id, 7, EpochStats::default());
+        assert_eq!(r.job_json(id).unwrap().get("epochs_done").as_usize(), Some(0));
+        r.record_epoch_from_agent(id, 8, EpochStats::default());
+        assert_eq!(r.job_json(id).unwrap().get("epochs_done").as_usize(), Some(1));
+
+        // a user cancel that raced the agent's death wins over requeue
+        assert_eq!(r.cancel(id), Some(CancelOutcome::StopRequested));
+        assert!(r.stop_requested(id), "the dispatcher must relay the stop");
+        assert_eq!(r.requeue_interrupted(id), None);
+        assert_eq!(r.state_of(id), Some(JobState::Cancelled));
+        assert!(!r.stop_requested(id), "terminal jobs have nothing to stop");
     }
 
     #[test]

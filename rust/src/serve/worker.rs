@@ -25,10 +25,12 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn `n` workers over a shared queue + registry. Workers exit
-    /// when the queue is closed.
+    /// Spawn exactly `n` workers over a shared queue + registry (0 is
+    /// a legal pool for a cluster-only coordinator that runs nothing
+    /// locally — `Server::bind` enforces that a non-cluster server has
+    /// at least one). Workers exit when the queue is closed.
     pub fn spawn(n: usize, queue: Arc<JobQueue>, registry: Arc<JobRegistry>) -> WorkerPool {
-        let handles = (0..n.max(1))
+        let handles = (0..n)
             .map(|i| {
                 let q = queue.clone();
                 let r = registry.clone();

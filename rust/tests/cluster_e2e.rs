@@ -1,0 +1,231 @@
+//! Cluster e2e: a `--cluster` coordinator with NO local workers fans
+//! queued jobs out to remote worker agents over the HTTP/JSON control
+//! plane, and survives an agent dying mid-job — the lease reaper
+//! requeues the job from its last checkpoint and it completes on the
+//! surviving agent with bit-identical resume semantics (verified
+//! against an uninterrupted single-process run, the same parity
+//! machinery as `tests/checkpoint_resume.rs`).
+
+use elasticzo::coordinator::checkpoint;
+use elasticzo::coordinator::control::{ProgressSink, StopFlag};
+use elasticzo::launch;
+use elasticzo::serve::{
+    request, Agent, AgentHandle, AgentOptions, ClusterOptions, ServeOptions, Server,
+};
+use elasticzo::util::json::Value;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const LONG: Duration = Duration::from_secs(300);
+
+fn start_coordinator(lease_ms: u64) -> (String, JoinHandle<()>) {
+    let server = Server::bind(&ServeOptions {
+        port: 0,
+        workers: 0, // pure coordinator: every job must run on an agent
+        queue_cap: 8,
+        journal: None,
+        cluster: Some(ClusterOptions { lease_ms }),
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || server.run().unwrap());
+    (addr, h)
+}
+
+fn spawn_agent(addr: &str, name: &str) -> AgentHandle {
+    Agent::spawn(AgentOptions {
+        coordinator: addr.to_string(),
+        capacity: 1,
+        name: name.to_string(),
+        poll_ms: 50,
+        max_poll_failures: 40,
+    })
+    .unwrap()
+}
+
+fn shutdown(addr: &str, handle: JoinHandle<()>) {
+    let (status, _) = request(addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap();
+}
+
+fn submit(addr: &str, spec: &str) -> u64 {
+    let body = elasticzo::util::json::parse(spec).unwrap();
+    let (status, v) = request(addr, "POST", "/jobs", Some(&body)).unwrap();
+    assert_eq!(status, 200, "submit failed: {}", elasticzo::util::json::to_string(&v));
+    v.get("id").as_f64().unwrap() as u64
+}
+
+fn get_job(addr: &str, id: u64) -> Value {
+    let (status, v) = request(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(status, 200, "job {id} must exist");
+    v
+}
+
+fn poll_until(addr: &str, id: u64, pred: impl Fn(&Value) -> bool, what: &str) -> Value {
+    let t0 = Instant::now();
+    loop {
+        let v = get_job(addr, id);
+        if pred(&v) {
+            return v;
+        }
+        assert!(
+            t0.elapsed() < LONG,
+            "timed out waiting for {what} on job {id}; last: {}",
+            elasticzo::util::json::to_string(&v)
+        );
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+#[test]
+fn jobs_fan_out_across_two_agents() {
+    let (addr, h) = start_coordinator(10_000);
+    let a1 = spawn_agent(&addr, "edge-1");
+    let a2 = spawn_agent(&addr, "edge-2");
+
+    // both agents are visible on the control plane
+    let (status, v) = request(&addr, "GET", "/cluster/agents", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v.get("agents").as_arr().unwrap().len(), 2);
+    let (_, s) = request(&addr, "GET", "/stats", None).unwrap();
+    assert_eq!(s.get("agents").as_usize(), Some(2));
+
+    // two jobs, two capacity-1 agents: one each (there are no local
+    // workers, so remote execution is the only way these can finish).
+    // Sized so neither job can finish within a poll interval — the
+    // first agent is still busy when the second one pulls job 2.
+    let spec = r#"{"method": "cls1", "precision": "fp32", "engine": "native",
+                   "epochs": 3, "batch": 32, "train_n": 384, "test_n": 96, "seed": 7}"#;
+    let j1 = submit(&addr, spec);
+    let j2 = submit(&addr, spec);
+
+    let v1 = poll_until(&addr, j1, |v| v.get("state").as_str() == Some("done"), "job 1 done");
+    let v2 = poll_until(&addr, j2, |v| v.get("state").as_str() == Some("done"), "job 2 done");
+    for (v, label) in [(&v1, "j1"), (&v2, "j2")] {
+        assert_eq!(v.get("history").as_arr().unwrap().len(), 3, "{label} history");
+        assert!(v.get("best_test_acc").as_f64().unwrap() > 0.0, "{label} accuracy");
+    }
+    let ag1 = v1.get("agent").as_usize().expect("job 1 ran on an agent") as u64;
+    let ag2 = v2.get("agent").as_usize().expect("job 2 ran on an agent") as u64;
+    assert_ne!(ag1, ag2, "capacity-1 agents must each take one job");
+    let mut got = [ag1, ag2];
+    got.sort_unstable();
+    let mut want = [a1.id(), a2.id()];
+    want.sort_unstable();
+    assert_eq!(got, want, "the work went to the registered agents");
+
+    a1.stop();
+    a2.stop();
+    shutdown(&addr, h);
+}
+
+#[test]
+fn agent_death_requeues_from_checkpoint_and_completes_elsewhere() {
+    let dir = std::env::temp_dir().join(format!("ezo_cluster_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("sharded.ckpt").display().to_string();
+    let ckpt_straight = dir.join("straight.ckpt").display().to_string();
+    std::fs::remove_file(&ckpt).ok();
+    std::fs::remove_file(&ckpt_straight).ok();
+
+    // release-mode epochs are ~2 orders of magnitude faster; keep the
+    // job long enough that the kill below lands mid-run
+    let epochs: usize = if cfg!(debug_assertions) { 20 } else { 200 };
+
+    // a short lease so failover happens within a couple of seconds
+    let (addr, h) = start_coordinator(1_500);
+    let doomed = spawn_agent(&addr, "doomed");
+
+    let job = submit(
+        &addr,
+        &format!(
+            r#"{{"name": "sharded", "method": "full-zo", "precision": "fp32",
+                "engine": "native", "epochs": {epochs}, "batch": 16,
+                "train_n": 64, "test_n": 32, "seed": 5, "save": "{ckpt}"}}"#
+        ),
+    );
+
+    // let it make real progress (and write cadence snapshots) on the
+    // doomed agent, then kill the agent without a goodbye
+    let v = poll_until(
+        &addr,
+        job,
+        |v| v.get("epochs_done").as_usize().unwrap_or(0) >= 2,
+        "two epochs on the first agent",
+    );
+    assert_eq!(v.get("agent").as_usize(), Some(doomed.id() as usize));
+    let doomed_id = doomed.id();
+    doomed.kill();
+
+    // a survivor joins; the lease reaper requeues the job from its
+    // last checkpoint and the survivor finishes it
+    let survivor = spawn_agent(&addr, "survivor");
+    let v = poll_until(
+        &addr,
+        job,
+        |v| v.get("state").as_str() == Some("done"),
+        "failover to the survivor",
+    );
+    assert_eq!(
+        v.get("agent").as_usize(),
+        Some(survivor.id() as usize),
+        "the job must finish on the surviving agent"
+    );
+    assert_ne!(survivor.id(), doomed_id);
+    // the requeued spec carried the resume path back over the wire
+    assert_eq!(v.get("spec").get("resume").as_str(), Some(ckpt.as_str()));
+    // replayed + resumed epochs form one gapless history
+    let history = v.get("history").as_arr().unwrap();
+    assert_eq!(history.len(), epochs, "history must cover every epoch exactly once");
+    for (i, e) in history.iter().enumerate() {
+        assert_eq!(e.get("epoch").as_usize(), Some(i), "history must be the epochs 0..{epochs}");
+    }
+    // the dead agent was reaped from the listing
+    let (_, agents) = request(&addr, "GET", "/cluster/agents", None).unwrap();
+    let listed = agents.get("agents").as_arr().unwrap();
+    assert_eq!(listed.len(), 1);
+    assert_eq!(listed[0].get("agent").as_usize(), Some(survivor.id() as usize));
+
+    // bit-identical resume semantics: the sharded, interrupted, failed-
+    // over lineage must end in EXACTLY the checkpoint an uninterrupted
+    // single-process run of the same spec produces
+    let (_, state) = checkpoint::load_full(&ckpt).unwrap();
+    let state = state.expect("final checkpoint carries training state");
+    assert_eq!(state.epochs_done, epochs);
+
+    let mut cfg = elasticzo::config::Config::default();
+    for (k, val) in [
+        ("method", "full-zo"),
+        ("precision", "fp32"),
+        ("engine", "native"),
+        ("batch", "16"),
+        ("train_n", "64"),
+        ("test_n", "32"),
+        ("seed", "5"),
+    ] {
+        cfg.set(k, val).unwrap();
+    }
+    cfg.set("epochs", &epochs.to_string()).unwrap();
+    cfg.set("save", &ckpt_straight).unwrap();
+    cfg.validate().unwrap();
+    let l = launch::run(&cfg, StopFlag::default(), ProgressSink::default()).unwrap();
+    assert!(!l.result.stopped);
+
+    let (tensors_sharded, _) = checkpoint::load_full(&ckpt).unwrap();
+    let (tensors_straight, straight) = checkpoint::load_full(&ckpt_straight).unwrap();
+    let straight = straight.unwrap();
+    assert_eq!(
+        tensors_sharded, tensors_straight,
+        "failed-over params must be bit-identical to the uninterrupted run"
+    );
+    assert_eq!(state.step, straight.step, "ZO stream positions must match");
+    assert_eq!(state.best_test_acc, straight.best_test_acc);
+    assert_eq!(state.last_test_loss, straight.last_test_loss);
+    assert_eq!(state.last_test_acc, straight.last_test_acc);
+
+    survivor.stop();
+    shutdown(&addr, h);
+    std::fs::remove_file(&ckpt).ok();
+    std::fs::remove_file(&ckpt_straight).ok();
+}

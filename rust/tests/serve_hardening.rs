@@ -1,0 +1,166 @@
+//! Regression coverage for the serve control-plane hardening:
+//!
+//! * a submission racing the shutdown gets a truthful 503, never the
+//!   misleading "queue full, retry" 429;
+//! * journal replay of a durable backlog larger than `queue_cap`
+//!   requeues every job (capacity must never destroy admitted jobs);
+//! * a slow/stalled client cannot block `/healthz` (or anything else)
+//!   behind its socket timeout.
+
+use elasticzo::config::Config;
+use elasticzo::serve::{request, Journal, JobSpec, ServeOptions, Server};
+use elasticzo::util::json::{self, Value};
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+fn tiny_spec() -> JobSpec {
+    let mut cfg = Config::default();
+    cfg.set("engine", "native").unwrap();
+    cfg.set("method", "cls1").unwrap();
+    cfg.set("epochs", "1").unwrap();
+    cfg.set("batch", "16").unwrap();
+    cfg.set("train_n", "48").unwrap();
+    cfg.set("test_n", "32").unwrap();
+    cfg.validate().unwrap();
+    JobSpec::new(cfg)
+}
+
+/// A job that cannot finish within the test (cancelled/stopped at the
+/// end) — keeps queue-depth assertions race-free.
+fn long_spec() -> JobSpec {
+    let mut spec = tiny_spec();
+    spec.config.set("method", "full-zo").unwrap();
+    spec.config.set("epochs", "10000").unwrap();
+    spec.config.validate().unwrap();
+    spec
+}
+
+#[test]
+fn submit_after_shutdown_start_is_503_not_429() {
+    let server = Server::bind(&ServeOptions {
+        port: 0,
+        workers: 1,
+        queue_cap: 4,
+        ..Default::default()
+    })
+    .unwrap();
+
+    // before shutdown a submission is accepted normally
+    let (status, v) = server.inject("POST", "/jobs", Some(&tiny_spec().to_json()));
+    assert_eq!(status, 200, "{}", json::to_string(&v));
+
+    let (status, _) = server.inject("POST", "/shutdown", None);
+    assert_eq!(status, 200);
+
+    // after shutdown began, the queue is closed: the rejection must say
+    // so (503, terminal for this instance) — NOT "queue full" (429,
+    // which invites a pointless retry against a dying server)
+    let (status, v) = server.inject("POST", "/jobs", Some(&tiny_spec().to_json()));
+    assert_eq!(status, 503, "expected unavailable, got {status}: {}", json::to_string(&v));
+    let msg = v.get("error").as_str().unwrap();
+    assert!(msg.contains("shutting down"), "error must name the shutdown: {msg}");
+    assert_eq!(v.get("capacity"), &Value::Null, "503 is not a capacity problem");
+
+    // the rejected job leaves no trace in the table
+    let (_, listing) = server.inject("GET", "/jobs", None);
+    assert_eq!(listing.get("jobs").as_arr().unwrap().len(), 1);
+}
+
+#[test]
+fn replay_backlog_larger_than_queue_cap_requeues_everything() {
+    let dir = std::env::temp_dir().join(format!("ezo_hardening_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("backlog.jsonl").display().to_string();
+    std::fs::remove_file(&journal).ok();
+
+    // a previous life admitted 6 jobs that never ran; this life has a
+    // much smaller queue (long specs so the pool cannot drain the
+    // backlog mid-assertion)
+    const BACKLOG: usize = 6;
+    {
+        let j = Journal::open(&journal).unwrap();
+        for id in 1..=BACKLOG as u64 {
+            j.append(&Value::obj(vec![
+                ("event", Value::str("submit")),
+                ("id", Value::num(id as f64)),
+                ("ts", Value::num(123.0)),
+                ("spec", long_spec().to_json()),
+            ]));
+        }
+    }
+
+    let server = Server::bind(&ServeOptions {
+        port: 0,
+        workers: 1,
+        queue_cap: 2,
+        journal: Some(journal.clone()),
+        ..Default::default()
+    })
+    .unwrap();
+
+    // every replayed job must be admitted — previously jobs beyond
+    // queue_cap were permanently fail()ed at startup
+    let (_, listing) = server.inject("GET", "/jobs", None);
+    let jobs = listing.get("jobs").as_arr().unwrap();
+    assert_eq!(jobs.len(), BACKLOG);
+    for job in jobs {
+        let state = job.get("state").as_str().unwrap();
+        assert_ne!(
+            state, "failed",
+            "replay must never destroy a durable job (id {:?})",
+            job.get("id").as_usize()
+        );
+    }
+
+    // fresh submissions still see capacity backpressure (the bypass is
+    // for admitted jobs only): with the queue already over capacity a
+    // new submit must be rejected with 429
+    let (status, v) = server.inject("POST", "/jobs", Some(&long_spec().to_json()));
+    assert_eq!(status, 429, "fresh submissions still see backpressure: {}", json::to_string(&v));
+
+    let (status, _) = server.inject("POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    std::fs::remove_file(&journal).ok();
+}
+
+#[test]
+fn healthz_answers_while_another_connection_stalls() {
+    let server = Server::bind(&ServeOptions {
+        port: 0,
+        workers: 1,
+        queue_cap: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || server.run().unwrap());
+
+    // a client connects and sends half a request, then goes quiet —
+    // its handler thread sits in read() for up to the 10 s socket
+    // timeout
+    let mut stalled = std::net::TcpStream::connect(&addr).unwrap();
+    stalled.write_all(b"POST /jobs HTTP/1.1\r\nContent-Le").unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+
+    // the control plane must keep answering regardless (the old
+    // single-threaded acceptor served connections inline and would
+    // block here for the full timeout)
+    let t0 = Instant::now();
+    let (status, v) = request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "healthz blocked behind a stalled connection for {:?}",
+        t0.elapsed()
+    );
+
+    // submissions flow too
+    let (status, _) = request(&addr, "POST", "/jobs", Some(&tiny_spec().to_json())).unwrap();
+    assert_eq!(status, 200);
+
+    drop(stalled);
+    let (status, _) = request(&addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    h.join().unwrap();
+}

@@ -18,6 +18,7 @@ fn start_server(journal: &str) -> (String, JoinHandle<()>) {
         workers: 1,
         queue_cap: 8,
         journal: Some(journal.to_string()),
+        ..Default::default()
     })
     .unwrap();
     let addr = server.local_addr().unwrap().to_string();
