@@ -14,12 +14,13 @@
 //! repro inspect            # list AOT artifacts
 //!
 //! repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]
-//!              [--cluster] [--lease-ms L]
+//!              [--cluster] [--lease-ms L] [--events-buffer N]
 //!              # multi-job training server (HTTP/1.1 + JSON); --journal
 //!              # persists the job table across restarts (JSONL replay);
 //!              # --cluster opens the /cluster/* control plane so remote
 //!              # agents can register and pull work (--workers 0 = pure
-//!              # coordinator)
+//!              # coordinator); epoch/state events stream over SSE at
+//!              # GET /events and GET /jobs/<id>/events
 //! repro agent  --coordinator host:port [--capacity N] [--name S]
 //!              [--poll-ms P] [--max-poll-failures N]
 //!              # remote worker agent: registers with a cluster
@@ -28,6 +29,10 @@
 //! repro submit [--addr host:port] [--name S] [--priority N] [train flags...]
 //! repro jobs   [--addr host:port]
 //! repro job    <id> [--addr host:port] [--cancel]
+//! repro watch  <id> [--addr host:port]
+//!              # live-tail a job over the server's SSE stream: replayed
+//!              # history, then one line per epoch as it lands; exits 0
+//!              # when the job completes
 //! repro stats  [--addr host:port]
 //! ```
 
@@ -56,6 +61,7 @@ fn main() {
         "submit" => cmd_submit(&args),
         "jobs" => cmd_jobs(&args),
         "job" => cmd_job(&args),
+        "watch" => cmd_watch(&args),
         "stats" => cmd_stats(&args),
         "help" | "--help" => {
             print_help();
@@ -85,10 +91,11 @@ fn print_help() {
          \x20 repro memory [--model M] [--batch N] [--precision fp32|int8] [--adam]\n\
          \x20 repro inspect\n\
          \n  repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]\n\
-         \x20              [--cluster] [--lease-ms L]\n\
+         \x20              [--cluster] [--lease-ms L] [--events-buffer N]\n\
          \x20              multi-job training server; HTTP/1.1 + JSON on 127.0.0.1:\n\
          \x20              GET /healthz | GET /stats | GET /jobs | POST /jobs\n\
          \x20              GET /jobs/<id> | POST /jobs/<id>/cancel | POST /shutdown\n\
+         \x20              SSE: GET /events (firehose) | GET /jobs/<id>/events\n\
          \x20              --cluster adds /cluster/* (agent registry + job fan-out)\n\
          \x20 repro agent  --coordinator host:port [--capacity N] [--name S]\n\
          \x20              [--poll-ms P] [--max-poll-failures N]\n\
@@ -96,6 +103,7 @@ fn print_help() {
          \x20 repro submit [--addr host:port] [--name S] [--priority N] [train flags]\n\
          \x20 repro jobs   [--addr host:port]\n\
          \x20 repro job    <id> [--addr host:port] [--cancel]\n\
+         \x20 repro watch  <id> [--addr host:port]   live-tail a job's epochs (SSE)\n\
          \x20 repro stats  [--addr host:port]"
     );
 }
@@ -250,12 +258,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(serve::ClusterOptions { lease_ms })
         })
         .transpose()?;
+    let events_buffer = args.get_usize(
+        "events-buffer",
+        elasticzo::serve::events::DEFAULT_SUBSCRIBER_CAP,
+    )?;
+    anyhow::ensure!(events_buffer >= 1, "--events-buffer must be >= 1");
     let opts = serve::ServeOptions {
         port: port as u16,
         workers: args.get_usize("workers", 2)?,
         queue_cap: args.get_usize("queue-cap", 64)?,
         journal: args.get("journal").map(str::to_string),
         cluster,
+        events_buffer,
     };
     let server = serve::Server::bind(&opts)?;
     println!(
@@ -268,6 +282,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("journal: {j} (job table replayed on restart; interrupted jobs requeue)");
     }
     println!("endpoints: GET /healthz /stats /jobs /jobs/<id>  POST /jobs /jobs/<id>/cancel /shutdown");
+    println!(
+        "events: GET /events (firehose, ?since_seq= resume) and GET /jobs/<id>/events \
+         (SSE; `repro watch <id>` tails one job live)"
+    );
     if let Some(c) = &opts.cluster {
         println!(
             "cluster: agents register at POST /cluster/register (lease {} ms); \
@@ -382,6 +400,57 @@ fn cmd_job(args: &Args) -> Result<()> {
     anyhow::ensure!(status == 200, "server returned {status}: {}",
         elasticzo::util::json::to_string(&v));
     println!("{}", elasticzo::util::json::to_string_pretty(&v));
+    Ok(())
+}
+
+/// `repro watch <id>`: live-tail one job over `GET /jobs/<id>/events` —
+/// the replayed history first, then one line per epoch as it lands.
+/// Exits 0 iff the job completes (`done`); a job that ends failed /
+/// cancelled / interrupted exits nonzero so `repro watch <id> &&
+/// next-step` is safe to script, and so does a server that dies
+/// mid-run (the stream ends without a terminal state).
+fn cmd_watch(args: &Args) -> Result<()> {
+    let addr = server_addr(args);
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: repro watch <id> [--addr host:port]"))?;
+    let id: u64 = id.parse().map_err(|_| anyhow::anyhow!("job id must be an integer"))?;
+    println!("watching job {id} on {addr} (detaching does not stop the job)");
+    let state = serve::watch_job(&addr, id, |frame| match frame {
+        serve::WatchFrame::Epoch { replay, stats } => {
+            println!(
+                "epoch {:>4}  train {:.4}  test {:.4}  acc {:>6.2}%  ({:.1}s){}",
+                stats.epoch,
+                stats.train_loss,
+                stats.test_loss,
+                stats.test_acc * 100.0,
+                stats.seconds,
+                if *replay { "  [replay]" } else { "" }
+            );
+        }
+        serve::WatchFrame::State { replay, state, error } => {
+            let tag = if *replay { "  [replay]" } else { "" };
+            match error {
+                Some(e) => println!("state: {state}{tag}  error: {e}"),
+                None => println!("state: {state}{tag}"),
+            }
+        }
+        serve::WatchFrame::Lagged { next_seq } => {
+            println!(
+                "… lagged: this watcher fell behind and events were dropped \
+                 (resumed at seq {next_seq}; `repro job {id}` has the full history)"
+            );
+        }
+    })?;
+    println!("job {id} finished: {}", state.as_str());
+    // exit 0 only for a completed run: `watch && deploy` must not
+    // proceed on a failed or cancelled job
+    anyhow::ensure!(
+        state == elasticzo::serve::JobState::Done,
+        "job {id} did not complete (terminal state: {})",
+        state.as_str()
+    );
     Ok(())
 }
 

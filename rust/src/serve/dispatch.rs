@@ -8,6 +8,13 @@
 //! worker runs, so `GET /jobs`, `GET /stats` and the restart replay
 //! are agent-agnostic.
 //!
+//! Because remote reports land in the shared registry, they also land
+//! on its live-telemetry event bus (`serve::events`): an epoch POSTed
+//! by an agent, a reaper requeue, a remote job's terminal outcome all
+//! stream to `GET /events` / `GET /jobs/{id}/events` subscribers
+//! exactly like local-worker activity — `repro watch` cannot tell
+//! where a job runs.
+//!
 //! # Leases
 //!
 //! Polling is the heartbeat (deliberately: epoch reports do NOT renew

@@ -1,0 +1,682 @@
+//! The live-telemetry event bus: every epoch and job state transition
+//! the registry records is broadcast to in-process subscribers, which
+//! the HTTP layer exposes as Server-Sent Events (`GET /events`,
+//! `GET /jobs/{id}/events`) and `repro watch` consumes. This closes the
+//! "streaming progress" ROADMAP item: operators observe a run as it
+//! happens instead of polling `GET /jobs/<id>` — which, on the
+//! edge-device deployments the paper targets, wastes the very
+//! device/network budget the training method is built to conserve.
+//!
+//! # Design
+//!
+//! One [`EventBus`] lives inside the [`super::registry::JobRegistry`],
+//! so every record point feeds it regardless of where the signal came
+//! from: a local worker's `ProgressSink` callback, a remote agent's
+//! `POST /cluster/agents/{a}/jobs/{j}/epoch`, a user cancel, a lease
+//! -expiry requeue, a journal-replay requeue. Remote-agent jobs stream
+//! exactly like local ones because both paths land in the same
+//! registry methods.
+//!
+//! The bus never blocks a publisher:
+//!
+//! * each subscriber owns a **bounded** buffer ([`EventBus::subscribe`]
+//!   takes the capacity); when a slow consumer overflows it, the
+//!   oldest buffered events are dropped and the subscription is marked
+//!   lagged — the next [`Subscriber::recv`] yields
+//!   [`Poll::Lagged`] (an explicit resync marker, surfaced on the wire
+//!   as an SSE `lagged` frame) before resuming with the newest events;
+//! * a bounded ring of recent events (the last [`RING_CAP`]) backs the
+//!   firehose's `?since_seq=` resume: a reconnecting consumer replays
+//!   what the ring still holds and gets a lagged marker if its resume
+//!   point has been evicted.
+//!
+//! Publishing happens while the registry's own lock is held (registry
+//! lock → bus lock, the one global lock order), which is what makes
+//! per-job streams **exactly-once**: the HTTP handler subscribes
+//! first, then takes a registry snapshot that carries the bus's
+//! sequence watermark ([`super::registry::JobRegistry::stream_snapshot`]);
+//! replayed history covers everything at or below the watermark, the
+//! live subscription everything after it, and no event can straddle
+//! the boundary.
+
+use super::protocol::JobState;
+use crate::coordinator::metrics::EpochStats;
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Events retained for `?since_seq=` resume on the firehose.
+pub const RING_CAP: usize = 1024;
+
+/// Default per-subscriber buffer (events pending delivery to one
+/// consumer before it is marked lagged); `repro serve
+/// --events-buffer N` overrides the server's value.
+pub const DEFAULT_SUBSCRIBER_CAP: usize = 256;
+
+/// One broadcast event. `data` is the full wire JSON (including
+/// `seq`/`job`/`type`), so the HTTP layer serializes it verbatim.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Global, strictly increasing, starting at 1.
+    pub seq: u64,
+    pub job: u64,
+    /// SSE event name: `"epoch"` or `"state"`.
+    pub kind: &'static str,
+    pub data: Value,
+}
+
+impl Event {
+    /// For `state` events: the new state token (`"running"`, …).
+    pub fn state(&self) -> Option<&str> {
+        self.data.get("state").as_str()
+    }
+}
+
+/// What one [`Subscriber::recv`] call yielded.
+#[derive(Debug, Clone)]
+pub enum Poll {
+    /// The next event in order.
+    Event(Arc<Event>),
+    /// The subscriber's buffer overflowed and events were dropped;
+    /// `next_seq` is the sequence number delivery resumes at (resync
+    /// via `GET /jobs/<id>` or `GET /events?since_seq=`).
+    Lagged { next_seq: u64 },
+    /// Nothing arrived within the timeout (the HTTP layer's cue to
+    /// write a keep-alive comment).
+    Timeout,
+    /// The bus shut down (server drain); no further events will come.
+    Closed,
+}
+
+struct SubState {
+    /// `Some(id)` = only this job's events; `None` = firehose.
+    job: Option<u64>,
+    buf: VecDeque<Arc<Event>>,
+    cap: usize,
+    lagged: bool,
+}
+
+struct BusInner {
+    next_seq: u64,
+    ring: VecDeque<Arc<Event>>,
+    subs: BTreeMap<u64, SubState>,
+    next_sub: u64,
+    closed: bool,
+}
+
+/// Broadcast bus: publishers never block, slow consumers lose events
+/// (and learn it), the ring answers short-horizon replays.
+pub struct EventBus {
+    inner: Mutex<BusInner>,
+    cv: Condvar,
+}
+
+impl Default for EventBus {
+    fn default() -> Self {
+        EventBus::new()
+    }
+}
+
+impl EventBus {
+    pub fn new() -> EventBus {
+        EventBus {
+            inner: Mutex::new(BusInner {
+                next_seq: 1,
+                ring: VecDeque::new(),
+                subs: BTreeMap::new(),
+                next_sub: 1,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, BusInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Sequence number of the most recently published event (0 before
+    /// the first). Used as the replay/live watermark by
+    /// [`super::registry::JobRegistry::stream_snapshot`].
+    pub fn current_seq(&self) -> u64 {
+        self.lock().next_seq - 1
+    }
+
+    fn publish(&self, job: u64, kind: &'static str, extra: Vec<(&str, Value)>) {
+        {
+            let mut st = self.lock();
+            if st.closed {
+                return;
+            }
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            let mut pairs = vec![
+                ("type", Value::str(kind)),
+                ("seq", Value::num(seq as f64)),
+                ("job", Value::num(job as f64)),
+            ];
+            pairs.extend(extra);
+            let ev = Arc::new(Event { seq, job, kind, data: Value::obj(pairs) });
+            st.ring.push_back(ev.clone());
+            while st.ring.len() > RING_CAP {
+                st.ring.pop_front();
+            }
+            for sub in st.subs.values_mut() {
+                if sub.job.is_some_and(|j| j != job) {
+                    continue;
+                }
+                // never block the publisher: a full buffer sheds its
+                // oldest event and marks the subscription lagged
+                if sub.buf.len() >= sub.cap {
+                    sub.buf.pop_front();
+                    sub.lagged = true;
+                }
+                sub.buf.push_back(ev.clone());
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// One epoch completed on `job` (local worker sink or remote
+    /// agent report — indistinguishable here on purpose).
+    pub fn publish_epoch(&self, job: u64, stats: &EpochStats) {
+        self.publish(job, "epoch", vec![("stats", stats.to_json())]);
+    }
+
+    /// `job` entered `state`; `error` rides along on failures.
+    pub fn publish_state(&self, job: u64, state: &str, error: Option<&str>) {
+        let mut extra = vec![("state", Value::str(state))];
+        if let Some(e) = error {
+            extra.push(("error", Value::str(e)));
+        }
+        self.publish(job, "state", extra);
+    }
+
+    /// Subscribe to live events — `job = Some(id)` for one job's
+    /// stream, `None` for the firehose. `cap` bounds the pending
+    /// buffer; overflow drops oldest events and yields a
+    /// [`Poll::Lagged`] marker instead of ever blocking a publisher.
+    pub fn subscribe(self: &Arc<Self>, job: Option<u64>, cap: usize) -> Subscriber {
+        let id = {
+            let mut st = self.lock();
+            let id = st.next_sub;
+            st.next_sub += 1;
+            st.subs.insert(
+                id,
+                SubState { job, buf: VecDeque::new(), cap: cap.max(1), lagged: false },
+            );
+            id
+        };
+        Subscriber { bus: self.clone(), id }
+    }
+
+    /// Firehose subscription with `?since_seq=` resume, atomically:
+    /// returns the live [`Subscriber`], the ring-buffered backlog of
+    /// events with `seq > since_seq`, whether a gap precedes the
+    /// backlog — the resume point was evicted from the ring, or is
+    /// beyond the current sequence (sequences restart at 1 on every
+    /// boot, so that means a stale lineage from a previous process,
+    /// not a caught-up consumer; detection is best-effort — a restart
+    /// that has already published past the saved cursor is
+    /// indistinguishable from a continuation) — and the sequence
+    /// delivery actually resumes at (the first backlog seq, or the
+    /// next live seq when there is nothing to replay). All four values
+    /// are taken under one bus lock, so the resume seq the `lagged`
+    /// frame reports can never trail an event the subscription later
+    /// delivers.
+    pub fn subscribe_since(
+        self: &Arc<Self>,
+        cap: usize,
+        since_seq: u64,
+    ) -> (Subscriber, Vec<Arc<Event>>, bool, u64) {
+        let (id, backlog, gap, resume_seq) = {
+            let mut st = self.lock();
+            let backlog: Vec<Arc<Event>> =
+                st.ring.iter().filter(|e| e.seq > since_seq).cloned().collect();
+            let first_missed = since_seq + 1;
+            let resume_seq = match backlog.first() {
+                Some(e) => e.seq,
+                // nothing to replay: delivery resumes at the next live
+                // event; a gap exists iff events beyond the resume
+                // point ever happened (or the point is a stale lineage)
+                None => st.next_seq,
+            };
+            let gap = resume_seq > first_missed || since_seq >= st.next_seq;
+            let id = st.next_sub;
+            st.next_sub += 1;
+            st.subs.insert(
+                id,
+                SubState { job: None, buf: VecDeque::new(), cap: cap.max(1), lagged: false },
+            );
+            (id, backlog, gap, resume_seq)
+        };
+        (Subscriber { bus: self.clone(), id }, backlog, gap, resume_seq)
+    }
+
+    /// Server shutdown: every subscriber's next poll (after its buffer
+    /// drains) yields [`Poll::Closed`] and further publishes are
+    /// dropped.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// A live subscription handle; dropping it unregisters from the bus.
+pub struct Subscriber {
+    bus: Arc<EventBus>,
+    id: u64,
+}
+
+impl Subscriber {
+    /// Next delivery, waiting up to `timeout`: buffered events first
+    /// (preceded by a [`Poll::Lagged`] marker when the buffer
+    /// overflowed since the last call), then [`Poll::Timeout`] /
+    /// [`Poll::Closed`].
+    pub fn recv(&self, timeout: Duration) -> Poll {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.bus.lock();
+        loop {
+            {
+                // deref the guard once so the subscriber entry and the
+                // bus counters can be borrowed field-disjointly
+                let inner: &mut BusInner = &mut st;
+                let Some(sub) = inner.subs.get_mut(&self.id) else {
+                    return Poll::Closed;
+                };
+                if sub.lagged {
+                    sub.lagged = false;
+                    let next_seq = match sub.buf.front() {
+                        Some(e) => e.seq,
+                        None => inner.next_seq,
+                    };
+                    return Poll::Lagged { next_seq };
+                }
+                if let Some(e) = sub.buf.pop_front() {
+                    return Poll::Event(e);
+                }
+                if inner.closed {
+                    return Poll::Closed;
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Poll::Timeout;
+            }
+            let (guard, _timed_out) = self
+                .bus
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+    }
+}
+
+impl Drop for Subscriber {
+    fn drop(&mut self) {
+        self.bus.lock().subs.remove(&self.id);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client side: the SSE consumer behind `repro watch`.
+
+/// One decoded frame as a watching client sees it.
+#[derive(Debug, Clone)]
+pub enum WatchFrame {
+    /// An epoch record; `replay` marks history re-sent at connect
+    /// time (no live sequence number).
+    Epoch { replay: bool, stats: EpochStats },
+    /// A job state transition (`queued`/`running`/…); `replay` marks
+    /// the connect-time snapshot frame.
+    State { replay: bool, state: String, error: Option<String> },
+    /// The server dropped events for this consumer (it fell behind);
+    /// delivery resumed at bus sequence `next_seq`.
+    Lagged { next_seq: u64 },
+}
+
+/// One wire-level SSE frame (before [`WatchFrame`] classification).
+pub struct SseFrame {
+    pub event: String,
+    pub id: Option<u64>,
+    pub data: Option<Value>,
+}
+
+/// Incremental SSE decoder: feed it raw bytes as they arrive, get
+/// complete frames back. Keep-alive comment frames are swallowed.
+#[derive(Default)]
+pub struct SseParser {
+    buf: Vec<u8>,
+}
+
+impl SseParser {
+    pub fn push(&mut self, chunk: &[u8]) -> Vec<SseFrame> {
+        self.buf.extend_from_slice(chunk);
+        let mut out = Vec::new();
+        loop {
+            let Some(pos) = self.buf.windows(2).position(|w| w == b"\n\n") else {
+                return out;
+            };
+            let frame: Vec<u8> = self.buf.drain(..pos + 2).collect();
+            // a frame is complete, so its bytes are whole UTF-8
+            if let Ok(text) = std::str::from_utf8(&frame[..pos]) {
+                if let Some(f) = parse_sse_frame(text) {
+                    out.push(f);
+                }
+            }
+        }
+    }
+}
+
+/// `None` for comment-only frames (keep-alives).
+fn parse_sse_frame(text: &str) -> Option<SseFrame> {
+    let mut f = SseFrame { event: String::new(), id: None, data: None };
+    let mut any_field = false;
+    for line in text.lines() {
+        if line.starts_with(':') {
+            continue; // comment (keep-alive)
+        }
+        let Some((k, v)) = line.split_once(':') else { continue };
+        let v = v.strip_prefix(' ').unwrap_or(v);
+        any_field = true;
+        match k {
+            "event" => f.event = v.to_string(),
+            "id" => f.id = v.parse().ok(),
+            "data" => f.data = crate::util::json::parse(v).ok(),
+            _ => {}
+        }
+    }
+    any_field.then_some(f)
+}
+
+/// Decode a wire frame into the typed [`WatchFrame`]; unknown or
+/// malformed frames are skipped (forward compatibility).
+fn classify(f: &SseFrame) -> Option<WatchFrame> {
+    let data = f.data.as_ref()?;
+    let replay = data.get("replay").as_bool().unwrap_or(false);
+    match f.event.as_str() {
+        "epoch" => EpochStats::from_json(data.get("stats"))
+            .ok()
+            .map(|stats| WatchFrame::Epoch { replay, stats }),
+        "state" => data.get("state").as_str().map(|s| WatchFrame::State {
+            replay,
+            state: s.to_string(),
+            error: data.get("error").as_str().map(str::to_string),
+        }),
+        "lagged" => Some(WatchFrame::Lagged {
+            next_seq: data.get("next_seq").as_f64().unwrap_or(0.0) as u64,
+        }),
+        _ => None,
+    }
+}
+
+/// `repro watch`: connect to `GET /jobs/{job}/events` on `addr`,
+/// hand every decoded frame to `on`, and return the job's final state
+/// once the server closes the stream at a terminal transition. A
+/// stream that ends any other way — server shutdown mid-run, network
+/// drop — is an error, so the CLI exits nonzero unless the job
+/// actually finished.
+pub fn watch_job(
+    addr: &str,
+    job: u64,
+    mut on: impl FnMut(&WatchFrame),
+) -> Result<JobState> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    // keep-alives arrive every second; a generous read timeout makes a
+    // dead server an error instead of a hang
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    let req = format!(
+        "GET /jobs/{job}/events HTTP/1.1\r\nHost: {addr}\r\nAccept: text/event-stream\r\nConnection: close\r\n\r\n"
+    );
+    stream.write_all(req.as_bytes())?;
+
+    // response head first: non-200s carry a one-shot JSON error body
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        let n = stream.read(&mut tmp).context("reading response header")?;
+        anyhow::ensure!(n > 0, "server closed the connection before responding");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).into_owned();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .context("malformed response status line")?
+        .parse()
+        .context("non-numeric status code")?;
+    if status != 200 {
+        let mut rest = buf[header_end + 4..].to_vec();
+        let _ = stream.read_to_end(&mut rest);
+        let body = String::from_utf8_lossy(&rest);
+        let msg = crate::util::json::parse(body.trim())
+            .ok()
+            .and_then(|v| v.get("error").as_str().map(str::to_string))
+            .unwrap_or_else(|| body.trim().to_string());
+        anyhow::bail!("server returned {status}: {msg}");
+    }
+
+    let mut parser = SseParser::default();
+    let mut pending = parser.push(&buf[header_end + 4..]);
+    let mut last_state: Option<JobState> = None;
+    loop {
+        for frame in std::mem::take(&mut pending) {
+            if let Some(wf) = classify(&frame) {
+                if let WatchFrame::State { state, .. } = &wf {
+                    // an unknown token (newer server version) must not
+                    // clobber a terminal state already seen
+                    if let Ok(s) = JobState::parse(state) {
+                        last_state = Some(s);
+                    }
+                }
+                on(&wf);
+            }
+        }
+        if last_state.is_some_and(|s| s.is_terminal()) {
+            // the server closes right after the terminal frame; no
+            // need to wait for the FIN to land
+            break;
+        }
+        let n = stream
+            .read(&mut tmp)
+            .context("reading event stream (no data or keep-alives for 30 s)")?;
+        if n == 0 {
+            break; // server closed the stream
+        }
+        pending = parser.push(&tmp[..n]);
+    }
+    match last_state {
+        Some(s) if s.is_terminal() => Ok(s),
+        other => anyhow::bail!(
+            "event stream ended before the job reached a terminal state \
+             (server shutdown or connection loss; last seen: {})",
+            other.map(|s| s.as_str()).unwrap_or("nothing")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TICK: Duration = Duration::from_millis(10);
+    const WAIT: Duration = Duration::from_secs(5);
+
+    fn stats(epoch: usize) -> EpochStats {
+        EpochStats { epoch, test_acc: 0.5, ..Default::default() }
+    }
+
+    fn expect_event(p: Poll) -> Arc<Event> {
+        match p {
+            Poll::Event(e) => e,
+            other => panic!("expected an event, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn delivers_in_order_with_filter() {
+        let bus = Arc::new(EventBus::new());
+        let all = bus.subscribe(None, 16);
+        let only7 = bus.subscribe(Some(7), 16);
+        bus.publish_state(7, "running", None);
+        bus.publish_epoch(9, &stats(0));
+        bus.publish_epoch(7, &stats(0));
+
+        let e = expect_event(all.recv(WAIT));
+        assert_eq!((e.seq, e.job, e.kind), (1, 7, "state"));
+        assert_eq!(e.state(), Some("running"));
+        let e = expect_event(all.recv(WAIT));
+        assert_eq!((e.seq, e.job, e.kind), (2, 9, "epoch"));
+        assert_eq!(e.data.get("stats").get("epoch").as_usize(), Some(0));
+        let e = expect_event(all.recv(WAIT));
+        assert_eq!(e.seq, 3);
+
+        // the filtered subscriber only saw job 7
+        let e = expect_event(only7.recv(WAIT));
+        assert_eq!((e.seq, e.job), (1, 7));
+        let e = expect_event(only7.recv(WAIT));
+        assert_eq!((e.seq, e.job), (3, 7));
+        assert!(matches!(only7.recv(TICK), Poll::Timeout));
+        assert_eq!(bus.current_seq(), 3);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_marks_lagged() {
+        let bus = Arc::new(EventBus::new());
+        let sub = bus.subscribe(None, 3);
+        for i in 0..10 {
+            bus.publish_epoch(1, &stats(i)); // never blocks
+        }
+        // first delivery is the explicit resync marker…
+        match sub.recv(WAIT) {
+            Poll::Lagged { next_seq } => assert_eq!(next_seq, 8),
+            other => panic!("expected Lagged, got {other:?}"),
+        }
+        // …then the newest `cap` events, in order
+        for seq in 8..=10 {
+            assert_eq!(expect_event(sub.recv(WAIT)).seq, seq);
+        }
+        assert!(matches!(sub.recv(TICK), Poll::Timeout));
+        // back to normal delivery afterwards
+        bus.publish_epoch(1, &stats(10));
+        assert_eq!(expect_event(sub.recv(WAIT)).seq, 11);
+    }
+
+    #[test]
+    fn since_seq_resume_replays_ring_and_flags_gaps() {
+        let bus = Arc::new(EventBus::new());
+        for i in 0..5 {
+            bus.publish_epoch(1, &stats(i)); // seqs 1..=5
+        }
+        // resume from 2: replay 3,4,5; no gap
+        let (sub, backlog, gap, resume) = bus.subscribe_since(16, 2);
+        assert!(!gap);
+        assert_eq!(resume, 3, "delivery resumes at the first backlog seq");
+        assert_eq!(backlog.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![3, 4, 5]);
+        bus.publish_epoch(1, &stats(5));
+        assert_eq!(expect_event(sub.recv(WAIT)).seq, 6);
+
+        // resume from now (= current_seq): empty backlog, no gap
+        let (_sub, backlog, gap, resume) = bus.subscribe_since(16, bus.current_seq());
+        assert!(backlog.is_empty() && !gap);
+        assert_eq!(resume, bus.current_seq() + 1, "caught up: next live seq");
+
+        // a resume point beyond the current sequence is a stale
+        // lineage (sequences restart at 1 on every server boot): the
+        // consumer must get a lagged marker, not silent "caught up"
+        let (_sub, backlog, gap, resume) = bus.subscribe_since(16, bus.current_seq() + 500);
+        assert!(backlog.is_empty());
+        assert!(gap, "a since_seq from a previous process must flag a gap");
+        assert_eq!(resume, bus.current_seq() + 1, "delivery restarts at the live lineage");
+    }
+
+    #[test]
+    fn evicted_resume_point_reports_a_gap() {
+        let bus = Arc::new(EventBus::new());
+        for i in 0..(RING_CAP + 10) {
+            bus.publish_epoch(1, &stats(i));
+        }
+        // seq 1 left the ring long ago
+        let (_sub, backlog, gap, resume) = bus.subscribe_since(16, 0);
+        assert!(gap, "the evicted resume point must be reported");
+        assert_eq!(backlog.len(), RING_CAP);
+        assert_eq!(backlog[0].seq as usize, 11);
+        assert_eq!(resume, backlog[0].seq, "the lagged frame names the first delivered seq");
+    }
+
+    #[test]
+    fn close_wakes_and_finishes_subscribers() {
+        let bus = Arc::new(EventBus::new());
+        let sub = bus.subscribe(None, 4);
+        bus.publish_epoch(1, &stats(0));
+        let b2 = bus.clone();
+        let h = std::thread::spawn(move || b2.close());
+        // buffered events still drain before Closed
+        assert!(matches!(sub.recv(WAIT), Poll::Event(_)));
+        h.join().unwrap();
+        assert!(matches!(sub.recv(WAIT), Poll::Closed));
+        // publishing after close is a silent no-op
+        bus.publish_epoch(1, &stats(1));
+        assert_eq!(bus.current_seq(), 1);
+    }
+
+    #[test]
+    fn sse_parser_decodes_split_frames_and_skips_keepalives() {
+        let mut p = SseParser::default();
+        // frames arrive in arbitrary chunks, including mid-line splits
+        let wire = "id: 4\nevent: epoch\ndata: {\"type\":\"epoch\",\"job\":1,\"stats\":{\"epoch\":0}}\n\n\
+                    : keep-alive\n\n\
+                    event: state\ndata: {\"type\":\"state\",\"job\":1,\"state\":\"done\",\"replay\":true}\n\n";
+        let (a, b) = wire.as_bytes().split_at(17);
+        let mut frames = p.push(a);
+        frames.extend(p.push(b));
+        assert_eq!(frames.len(), 2, "keep-alive comments are not frames");
+        assert_eq!(frames[0].event, "epoch");
+        assert_eq!(frames[0].id, Some(4));
+        match classify(&frames[0]) {
+            Some(WatchFrame::Epoch { replay, stats }) => {
+                assert!(!replay);
+                assert_eq!(stats.epoch, 0);
+            }
+            other => panic!("bad classification: {other:?}"),
+        }
+        match classify(&frames[1]) {
+            Some(WatchFrame::State { replay, state, error }) => {
+                assert!(replay);
+                assert_eq!(state, "done");
+                assert!(error.is_none());
+            }
+            other => panic!("bad classification: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sse_parser_decodes_lagged_marker() {
+        let mut p = SseParser::default();
+        let frames =
+            p.push(b"event: lagged\ndata: {\"type\":\"lagged\",\"next_seq\":42}\n\n");
+        match classify(&frames[0]) {
+            Some(WatchFrame::Lagged { next_seq }) => assert_eq!(next_seq, 42),
+            other => panic!("bad classification: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_subscriber_unregisters() {
+        let bus = Arc::new(EventBus::new());
+        let sub = bus.subscribe(None, 4);
+        drop(sub);
+        bus.publish_epoch(1, &stats(0));
+        assert_eq!(bus.lock().subs.len(), 0);
+    }
+}

@@ -14,9 +14,18 @@
 //! | GET  /stats            | aggregate `ServerStats`                  |
 //! | GET  /jobs             | job summaries, newest first              |
 //! | POST /jobs             | submit a `JobSpec` (429 full, 503 closed)|
-//! | GET  /jobs/{id}        | full status + per-epoch history          |
+//! | GET  /jobs/{id}        | full status + history (`?history_since=`)|
 //! | POST /jobs/{id}/cancel | cancel queued / stop running             |
+//! | GET  /jobs/{id}/events | SSE: one job's epochs/states, replay+live|
+//! | GET  /events           | SSE firehose (`?since_seq=` resume)      |
 //! | POST /shutdown         | close queue, stop jobs, drain, compact   |
+//!
+//! The two `/events` routes are the server's only long-lived
+//! streaming responses: `Content-Type: text/event-stream`, one SSE
+//! frame per bus event, a `: keep-alive` comment each second of
+//! idleness, subscriber teardown on client disconnect (write failure)
+//! and on `/shutdown` (bus close). Everything else stays one-shot
+//! JSON. Wire format details live in `rust/docs/SERVE_API.md`.
 //!
 //! With `ServeOptions::cluster` set, the `/cluster/*` control plane is
 //! live as well (see [`super::dispatch`]):
@@ -31,8 +40,9 @@
 //! | POST /cluster/agents/{a}/jobs/{j}/done   | terminal outcome            |
 
 use super::dispatch::{ClusterOptions, Dispatcher};
+use super::events::{Poll, Subscriber, DEFAULT_SUBSCRIBER_CAP};
 use super::journal::{self, Journal};
-use super::protocol::{error_json, JobSpec, DEFAULT_PORT};
+use super::protocol::{error_json, JobSpec, JobState, DEFAULT_PORT};
 use super::queue::{JobQueue, PushError};
 use super::registry::{CancelOutcome, JobRegistry};
 use super::worker::WorkerPool;
@@ -66,6 +76,11 @@ pub struct ServeOptions {
     /// them. `None` = single-node; with no registered agents a cluster
     /// server behaves exactly like a single-node one.
     pub cluster: Option<ClusterOptions>,
+    /// Per-subscriber event buffer for the SSE streams: a consumer
+    /// this many events behind starts shedding the oldest and gets a
+    /// `lagged` resync marker — the trainers never wait on a slow
+    /// watcher.
+    pub events_buffer: usize,
 }
 
 impl Default for ServeOptions {
@@ -76,6 +91,7 @@ impl Default for ServeOptions {
             queue_cap: 64,
             journal: None,
             cluster: None,
+            events_buffer: DEFAULT_SUBSCRIBER_CAP,
         }
     }
 }
@@ -89,8 +105,12 @@ struct Gateway {
     journal: Option<Arc<Journal>>,
     dispatcher: Option<Arc<Dispatcher>>,
     workers: usize,
+    events_buffer: usize,
     shutdown: AtomicBool,
     active: AtomicUsize,
+    /// Open SSE streams; each pins a connection thread for its whole
+    /// lifetime, so they are bounded (see [`MAX_SSE_STREAMS`]).
+    sse_active: AtomicUsize,
 }
 
 /// A bound job server: acceptor + queue + registry + worker pool,
@@ -160,8 +180,10 @@ impl Server {
             journal: jrnl,
             dispatcher,
             workers: opts.workers,
+            events_buffer: opts.events_buffer.max(1),
             shutdown: AtomicBool::new(false),
             active: AtomicUsize::new(0),
+            sse_active: AtomicUsize::new(0),
         });
         Ok(Server { listener, shared, pool })
     }
@@ -213,6 +235,10 @@ impl Server {
         // without this, pool.join() would block for the remainder of
         // any in-flight training run
         shared.registry.stop_all_running();
+        // idempotent: the shutdown handler already closed the bus, but
+        // an acceptor that exits any other way must still end the SSE
+        // streams instead of leaving watchers on a dead server
+        shared.registry.events().close();
         if let Some(d) = &shared.dispatcher {
             d.shutdown();
         }
@@ -230,8 +256,14 @@ impl Server {
     /// side effects.
     pub fn inject(&self, method: &str, path: &str, body: Option<&Value>) -> (u16, Value) {
         let text = body.map(json::to_string).unwrap_or_default();
+        let (path, query) = split_query(path);
         let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
-        let (status, v, shutdown) = self.shared.route(method, &segs, text.as_bytes());
+        if is_stream_route(method, &segs) {
+            // the SSE endpoints write incrementally and never fit the
+            // one-shot (status, body) seam
+            return (501, error_json("streaming endpoint: connect over a real socket"));
+        }
+        let (status, v, shutdown) = self.shared.route(method, &segs, &query, text.as_bytes());
         if shutdown {
             self.shared.begin_shutdown();
             self.shared.wake();
@@ -252,8 +284,36 @@ impl Gateway {
                 return;
             }
         };
-        let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
-        let (status, body, shutdown) = self.route(&req.method, &segs, &req.body);
+        let (path, query) = split_query(&req.path);
+        let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+        if is_stream_route(&req.method, &segs) {
+            // long-lived SSE response: hand the socket to the stream
+            // writer; it owns the connection until the client leaves,
+            // the job finishes, or the server drains. Each open stream
+            // pins a thread + a bus subscriber, so a runaway client
+            // opening streams in a loop is refused past the cap
+            // instead of exhausting the very devices this stack runs on
+            if self.sse_active.fetch_add(1, Ordering::SeqCst) >= MAX_SSE_STREAMS {
+                self.sse_active.fetch_sub(1, Ordering::SeqCst);
+                let _ = write_json(
+                    stream,
+                    503,
+                    &error_json(&format!(
+                        "too many open event streams (max {MAX_SSE_STREAMS}); \
+                         close one or poll GET /jobs/<id>?history_since="
+                    )),
+                );
+                return;
+            }
+            match segs.as_slice() {
+                ["events"] => self.stream_firehose(stream, &query),
+                ["jobs", id, "events"] => self.stream_job_events(stream, id),
+                _ => unreachable!("is_stream_route and this match must agree"),
+            }
+            self.sse_active.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        let (status, body, shutdown) = self.route(&req.method, &segs, &query, &req.body);
         if shutdown {
             // close the queue BEFORE acknowledging: any submission
             // that observes the shutdown gets a truthful 503 instead
@@ -267,10 +327,13 @@ impl Gateway {
     }
 
     /// Make the shutdown observable (queue closed, running jobs
-    /// stop-flagged as interrupted) and raise the acceptor's flag.
+    /// stop-flagged as interrupted, event bus closed so SSE streams
+    /// end instead of holding the drain open) and raise the acceptor's
+    /// flag.
     fn begin_shutdown(&self) {
         self.queue.close();
         self.registry.stop_all_running();
+        self.registry.events().close();
         self.shutdown.store(true, Ordering::SeqCst);
     }
 
@@ -279,7 +342,13 @@ impl Gateway {
         let _ = TcpStream::connect(self.addr);
     }
 
-    fn route(&self, method: &str, segs: &[&str], body: &[u8]) -> (u16, Value, bool) {
+    fn route(
+        &self,
+        method: &str,
+        segs: &[&str],
+        query: &[(String, String)],
+        body: &[u8],
+    ) -> (u16, Value, bool) {
         match (method, segs) {
             ("GET", ["healthz"]) => (200, Value::obj(vec![("ok", Value::Bool(true))]), false),
             ("GET", ["stats"]) => {
@@ -295,10 +364,28 @@ impl Gateway {
                 (status, v, false)
             }
             ("GET", ["jobs", id]) => match parse_id(id) {
-                Some(id) => match self.registry.job_json(id) {
-                    Some(v) => (200, v, false),
-                    None => (404, error_json(&format!("no job {id}")), false),
-                },
+                Some(id) => {
+                    // ?history_since=E trims the epoch history to
+                    // entries with epoch >= E, so pollers of long runs
+                    // stop shipping ever-growing bodies (default: full)
+                    let since = match qget(query, "history_since") {
+                        None => None,
+                        Some(s) => match s.parse::<usize>() {
+                            Ok(n) => Some(n),
+                            Err(_) => {
+                                return (
+                                    400,
+                                    error_json("history_since must be an integer epoch"),
+                                    false,
+                                )
+                            }
+                        },
+                    };
+                    match self.registry.job_json_since(id, since) {
+                        Some(v) => (200, v, false),
+                        None => (404, error_json(&format!("no job {id}")), false),
+                    }
+                }
                 None => (400, error_json("job id must be an integer"), false),
             },
             ("POST", ["jobs", id, "cancel"]) => match parse_id(id) {
@@ -373,13 +460,19 @@ impl Gateway {
         // line. A rejected push compensates with a 'forget' event.
         self.registry.journal_submit(id);
         match self.queue.push(id, priority) {
-            Ok(()) => (
-                200,
-                Value::obj(vec![
-                    ("id", Value::num(id as f64)),
-                    ("state", Value::str("queued")),
-                ]),
-            ),
+            Ok(()) => {
+                // only now is the submission real: broadcast it (a
+                // rejected push below is rolled back and must never
+                // surface on the event bus)
+                self.registry.announce_queued(id);
+                (
+                    200,
+                    Value::obj(vec![
+                        ("id", Value::num(id as f64)),
+                        ("state", Value::str("queued")),
+                    ]),
+                )
+            }
             Err(e) => {
                 // roll the record back so the rejected job never shows up
                 self.registry.forget(id);
@@ -398,6 +491,147 @@ impl Gateway {
                         error_json("server shutting down; resubmit after restart"),
                     ),
                 }
+            }
+        }
+    }
+
+    /// `GET /jobs/{id}/events` — one job's SSE stream: replay the
+    /// history recorded so far, then go live; closes once the job is
+    /// terminal (or immediately after the replay when it already is).
+    fn stream_job_events(&self, stream: &mut TcpStream, id_seg: &str) {
+        let Some(id) = parse_id(id_seg) else {
+            let _ = write_json(stream, 400, &error_json("job id must be an integer"));
+            return;
+        };
+        // subscribe BEFORE the snapshot: anything published in between
+        // lands in the buffer AND below the snapshot's watermark, and
+        // the live loop skips it — exactly-once across the seam
+        let sub = self.registry.events().subscribe(Some(id), self.events_buffer);
+        let Some(snap) = self.registry.stream_snapshot(id) else {
+            let _ = write_json(stream, 404, &error_json(&format!("no job {id}")));
+            return;
+        };
+        if write_sse_header(stream).is_err() {
+            return;
+        }
+        for e in &snap.epochs {
+            let data = Value::obj(vec![
+                ("type", Value::str("epoch")),
+                ("job", Value::num(id as f64)),
+                ("replay", Value::Bool(true)),
+                ("stats", e.to_json()),
+            ]);
+            if write_sse_frame(stream, "epoch", None, &data).is_err() {
+                return;
+            }
+        }
+        let mut pairs = vec![
+            ("type", Value::str("state")),
+            ("job", Value::num(id as f64)),
+            ("replay", Value::Bool(true)),
+            ("state", Value::str(snap.state.as_str())),
+        ];
+        if let Some(err) = &snap.error {
+            pairs.push(("error", Value::str(err.clone())));
+        }
+        if write_sse_frame(stream, "state", None, &Value::obj(pairs)).is_err() {
+            return;
+        }
+        if snap.state.is_terminal() {
+            return; // the job already finished: replay-only stream
+        }
+        self.pump(stream, &sub, snap.watermark, true);
+    }
+
+    /// `GET /events` — the all-jobs SSE firehose. Without `since_seq`
+    /// it streams from now; `?since_seq=N` atomically replays the
+    /// retained ring tail past N (a leading `lagged` frame marks an
+    /// evicted resume point) before going live.
+    fn stream_firehose(&self, stream: &mut TcpStream, query: &[(String, String)]) {
+        let since = match qget(query, "since_seq") {
+            None => None,
+            Some(s) => match s.parse::<u64>() {
+                Ok(n) => Some(n),
+                Err(_) => {
+                    let _ = write_json(
+                        stream,
+                        400,
+                        &error_json("since_seq must be an integer sequence number"),
+                    );
+                    return;
+                }
+            },
+        };
+        let bus = self.registry.events();
+        let (sub, backlog, gap, resume_seq) =
+            bus.subscribe_since(self.events_buffer, since.unwrap_or_else(|| bus.current_seq()));
+        if write_sse_header(stream).is_err() {
+            return;
+        }
+        if gap {
+            // resume_seq was captured under the same lock that created
+            // the subscription, so it can never trail a delivered event
+            let data = Value::obj(vec![
+                ("type", Value::str("lagged")),
+                ("next_seq", Value::num(resume_seq as f64)),
+            ]);
+            if write_sse_frame(stream, "lagged", None, &data).is_err() {
+                return;
+            }
+        }
+        for e in &backlog {
+            if write_sse_frame(stream, e.kind, Some(e.seq), &e.data).is_err() {
+                return;
+            }
+        }
+        self.pump(stream, &sub, 0, false);
+    }
+
+    /// Shared live loop of both SSE streams: deliver bus events with
+    /// `seq > watermark`, translate buffer overflow into explicit
+    /// `lagged` frames, emit `: keep-alive` comments through idle
+    /// stretches, and tear down on client disconnect (write failure),
+    /// bus close (server drain), or — for per-job streams — the
+    /// watched job's terminal state.
+    fn pump(
+        &self,
+        stream: &mut TcpStream,
+        sub: &Subscriber,
+        watermark: u64,
+        close_on_terminal: bool,
+    ) {
+        loop {
+            match sub.recv(SSE_KEEPALIVE) {
+                Poll::Event(e) => {
+                    if e.seq <= watermark {
+                        continue; // the replay snapshot already covered it
+                    }
+                    if write_sse_frame(stream, e.kind, Some(e.seq), &e.data).is_err() {
+                        return;
+                    }
+                    let terminal = e
+                        .state()
+                        .and_then(|s| JobState::parse(s).ok())
+                        .is_some_and(|s| s.is_terminal());
+                    if close_on_terminal && terminal {
+                        return;
+                    }
+                }
+                Poll::Lagged { next_seq } => {
+                    let data = Value::obj(vec![
+                        ("type", Value::str("lagged")),
+                        ("next_seq", Value::num(next_seq as f64)),
+                    ]);
+                    if write_sse_frame(stream, "lagged", None, &data).is_err() {
+                        return;
+                    }
+                }
+                Poll::Timeout => {
+                    if stream.write_all(b": keep-alive\n\n").is_err() {
+                        return;
+                    }
+                }
+                Poll::Closed => return,
             }
         }
     }
@@ -435,6 +669,67 @@ impl Gateway {
 
 fn parse_id(s: &str) -> Option<u64> {
     s.parse().ok()
+}
+
+/// Idle interval after which the SSE streams emit a `: keep-alive`
+/// comment, so clients (and anything buffering between) can tell a
+/// quiet stream from a dead connection.
+const SSE_KEEPALIVE: Duration = Duration::from_millis(1000);
+
+/// Concurrent SSE streams the server will hold open; each pins a
+/// connection thread and a bus subscriber for its whole lifetime, so
+/// the count must be bounded on memory-constrained hosts. Requests
+/// past the cap get a 503.
+const MAX_SSE_STREAMS: usize = 64;
+
+/// The long-lived SSE routes, dispatched before the one-shot router
+/// (they own the socket instead of returning a `(status, body)`).
+fn is_stream_route(method: &str, segs: &[&str]) -> bool {
+    matches!((method, segs), ("GET", ["events"]) | ("GET", ["jobs", _, "events"]))
+}
+
+/// Split `path?query` and parse the `k=v&k2=v2` pairs. No %-decoding:
+/// every query value this server accepts is a plain integer.
+fn split_query(path: &str) -> (&str, Vec<(String, String)>) {
+    match path.split_once('?') {
+        None => (path, Vec::new()),
+        Some((p, q)) => (
+            p,
+            q.split('&')
+                .filter(|s| !s.is_empty())
+                .map(|kv| match kv.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => (kv.to_string(), String::new()),
+                })
+                .collect(),
+        ),
+    }
+}
+
+fn qget<'a>(query: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn write_sse_header(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )
+}
+
+/// One SSE frame: optional `id:` line (the bus sequence number), the
+/// `event:` name, one `data:` line of compact JSON.
+fn write_sse_frame(
+    stream: &mut TcpStream,
+    event: &str,
+    id: Option<u64>,
+    data: &Value,
+) -> std::io::Result<()> {
+    let mut frame = String::new();
+    if let Some(i) = id {
+        frame.push_str(&format!("id: {i}\n"));
+    }
+    frame.push_str(&format!("event: {event}\ndata: {}\n\n", json::to_string(data)));
+    stream.write_all(frame.as_bytes())
 }
 
 struct Request {
@@ -501,6 +796,7 @@ fn status_text(code: u16) -> &'static str {
         409 => "Conflict",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
+        501 => "Not Implemented",
         503 => "Service Unavailable",
         _ => "Unknown",
     }
@@ -617,6 +913,47 @@ mod tests {
         let (status, _) = request(&addr, "POST", "/shutdown", None).unwrap();
         assert_eq!(status, 200);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn query_splitting_and_stream_route_detection() {
+        let (p, q) = split_query("/jobs/3?history_since=2&x=1");
+        assert_eq!(p, "/jobs/3");
+        assert_eq!(qget(&q, "history_since"), Some("2"));
+        assert_eq!(qget(&q, "x"), Some("1"));
+        assert_eq!(qget(&q, "missing"), None);
+        let (p, q) = split_query("/events");
+        assert_eq!(p, "/events");
+        assert!(q.is_empty());
+
+        assert!(is_stream_route("GET", &["events"]));
+        assert!(is_stream_route("GET", &["jobs", "7", "events"]));
+        assert!(!is_stream_route("POST", &["events"]));
+        assert!(!is_stream_route("GET", &["jobs", "7"]));
+        assert!(!is_stream_route("GET", &["jobs"]));
+    }
+
+    #[test]
+    fn inject_refuses_streaming_routes() {
+        let server = Server::bind(&ServeOptions {
+            port: 0,
+            workers: 1,
+            queue_cap: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        for path in ["/events", "/events?since_seq=3", "/jobs/1/events"] {
+            let (status, v) = server.inject("GET", path, None);
+            assert_eq!(status, 501, "{path}");
+            assert!(v.get("error").as_str().unwrap().contains("streaming"));
+        }
+        // the one-shot router still answers through inject
+        let (status, _) = server.inject("GET", "/jobs/1?history_since=0", None);
+        assert_eq!(status, 404, "no such job, but the query parses");
+        let (status, _) = server.inject("GET", "/jobs/1?history_since=x", None);
+        assert_eq!(status, 400);
+        let (status, _) = server.inject("POST", "/shutdown", None);
+        assert_eq!(status, 200);
     }
 
     #[test]

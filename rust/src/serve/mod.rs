@@ -21,6 +21,13 @@
 //!   Interrupted), per-epoch history snapshots, aggregate `ServerStats`
 //!   rolled up from each job's `telemetry::PhaseTimer`; doubles as the
 //!   journal's event source when one is configured.
+//! * [`events`]   — the live-telemetry broadcast bus: every epoch and
+//!   state transition the registry records (local worker or remote
+//!   agent alike) fans out to bounded per-subscriber buffers — slow
+//!   consumers shed events and get an explicit `lagged` resync marker,
+//!   the trainers never block — exposed over HTTP as Server-Sent
+//!   Events (`GET /events`, `GET /jobs/{id}/events`) and consumed by
+//!   `repro watch`.
 //! * [`journal`]  — append-only JSONL job log: replayed at startup so
 //!   `GET /jobs` survives restarts, requeues interrupted jobs from
 //!   their last checkpoint, compacted on clean shutdown.
@@ -36,14 +43,15 @@
 //!   through the same `launch::run`, POSTs epochs + outcomes back.
 //! * [`http`]     — `TcpListener` front end (GET /jobs, GET /jobs/{id},
 //!   POST /jobs, POST /jobs/{id}/cancel, GET /stats, GET /healthz,
-//!   POST /shutdown, POST/GET /cluster/*) serving each connection on a
-//!   short-lived thread, plus the tiny client used by
-//!   `repro submit|jobs|job` and the agent.
+//!   POST /shutdown, POST/GET /cluster/*, plus the long-lived SSE
+//!   streams GET /events and GET /jobs/{id}/events) serving each
+//!   connection on a short-lived thread, plus the tiny client used by
+//!   `repro submit|jobs|job|watch` and the agent.
 //!
 //! Entry points: `repro serve --port P --workers N --queue-cap C
 //! [--journal F] [--cluster [--lease-ms L]]` boots [`http::Server`];
 //! `repro agent --coordinator ADDR --capacity N` joins the fleet;
-//! `repro submit|jobs|job|stats` talk to the coordinator. Local
+//! `repro submit|jobs|job|watch|stats` talk to the coordinator. Local
 //! workers remain the degenerate one-node case — a cluster server with
 //! no registered agents behaves exactly like a single-node one. The
 //! HTTP surface is documented with request/response examples in
@@ -51,6 +59,7 @@
 
 pub mod cluster;
 pub mod dispatch;
+pub mod events;
 pub mod http;
 pub mod journal;
 pub mod protocol;
@@ -60,6 +69,7 @@ pub mod worker;
 
 pub use cluster::{Agent, AgentHandle, AgentOptions};
 pub use dispatch::{ClusterOptions, Dispatcher};
+pub use events::{watch_job, EventBus, Poll, Subscriber, WatchFrame};
 pub use http::{request, request_with_timeout, ServeOptions, Server};
 pub use journal::Journal;
 pub use protocol::{AgentState, JobSpec, JobState, DEFAULT_PORT};

@@ -11,7 +11,16 @@
 //! terminal transition appends one JSONL line (see `serve::journal`),
 //! and [`JobRegistry::restore`] re-inserts jobs replayed at startup
 //! without re-journaling their history (compaction snapshots it).
+//!
+//! The registry also owns the live-telemetry [`EventBus`]
+//! (`serve::events`): every epoch record and state transition — local
+//! worker or remote agent, user cancel or lease-expiry requeue — is
+//! broadcast from inside the registry lock, which gives the SSE layer
+//! its exactly-once replay/live watermark (see
+//! [`JobRegistry::stream_snapshot`]). Publishing never blocks: slow
+//! subscribers shed events, the trainers never wait.
 
+use super::events::EventBus;
 use super::journal::{self, Journal, Replayed};
 use super::protocol::{JobSpec, JobState};
 use crate::coordinator::control::StopFlag;
@@ -90,13 +99,24 @@ impl JobRecord {
         ])
     }
 
-    fn detail_json(&self) -> Value {
+    /// `since` trims the reported history to epochs `>= since`
+    /// (`?history_since=`); `history_total` always counts the full
+    /// recorded history so a caller can tell trimmed from short.
+    fn detail_json(&self, since: Option<usize>) -> Value {
         let Value::Obj(mut obj) = self.summary_json() else { unreachable!() };
         obj.insert("spec".into(), self.spec.to_json());
+        let since = since.unwrap_or(0);
         obj.insert(
             "history".into(),
-            Value::Arr(self.epochs.iter().map(EpochStats::to_json).collect()),
+            Value::Arr(
+                self.epochs
+                    .iter()
+                    .filter(|e| e.epoch >= since)
+                    .map(EpochStats::to_json)
+                    .collect(),
+            ),
         );
+        obj.insert("history_total".into(), Value::num(self.epochs.len() as f64));
         if let Some(w) = self.worker {
             obj.insert("worker".into(), Value::num(w as f64));
         }
@@ -157,7 +177,19 @@ struct Inner {
 pub struct JobRegistry {
     started_at: Instant,
     journal: Option<Arc<Journal>>,
+    events: Arc<EventBus>,
     inner: Mutex<Inner>,
+}
+
+/// Everything a per-job SSE stream needs to start: the recorded
+/// history so far, the current state, and the bus watermark separating
+/// "covered by this snapshot" from "will arrive live" (taken under the
+/// registry lock, so no event can straddle the boundary).
+pub struct StreamSnapshot {
+    pub epochs: Vec<EpochStats>,
+    pub state: JobState,
+    pub error: Option<String>,
+    pub watermark: u64,
 }
 
 impl Default for JobRegistry {
@@ -176,6 +208,7 @@ impl JobRegistry {
         JobRegistry {
             started_at: Instant::now(),
             journal,
+            events: Arc::new(EventBus::new()),
             inner: Mutex::new(Inner {
                 jobs: BTreeMap::new(),
                 next_id: 1,
@@ -187,6 +220,39 @@ impl JobRegistry {
 
     fn lock(&self) -> MutexGuard<'_, Inner> {
         self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The live-telemetry bus every epoch/state-transition record
+    /// point publishes into (`serve::events`).
+    pub fn events(&self) -> &Arc<EventBus> {
+        &self.events
+    }
+
+    /// Atomic history + state + bus-watermark snapshot for
+    /// `GET /jobs/{id}/events`: a subscriber created *before* this
+    /// call replays the snapshot, then skips live events with
+    /// `seq <= watermark` — exactly-once across the replay/live seam,
+    /// because publishes happen under the same registry lock this
+    /// snapshot holds.
+    pub fn stream_snapshot(&self, id: u64) -> Option<StreamSnapshot> {
+        let st = self.lock();
+        let job = st.jobs.get(&id)?;
+        Some(StreamSnapshot {
+            epochs: job.epochs.clone(),
+            state: job.state,
+            error: job.error.clone(),
+            watermark: self.events.current_seq(),
+        })
+    }
+
+    /// Broadcast that a freshly submitted job is queued (called by the
+    /// HTTP layer after the queue push succeeded — a 429'd submission
+    /// is rolled back and must never surface on the bus).
+    pub fn announce_queued(&self, id: u64) {
+        let st = self.lock();
+        if st.jobs.get(&id).is_some_and(|j| j.state == JobState::Queued) {
+            self.events.publish_state(id, JobState::Queued.as_str(), None);
+        }
     }
 
     fn append_event(&self, ev: Option<Value>) {
@@ -298,6 +364,7 @@ impl JobRegistry {
             job.state = JobState::Running;
             job.worker = Some(worker);
             job.started = Some(Instant::now());
+            self.events.publish_state(id, JobState::Running.as_str(), None);
             (
                 (job.spec.clone(), job.stop.clone()),
                 self.journal.is_some().then(|| {
@@ -328,6 +395,7 @@ impl JobRegistry {
             job.agent = Some(agent);
             job.worker = None;
             job.started = Some(Instant::now());
+            self.events.publish_state(id, JobState::Running.as_str(), None);
             (
                 job.spec.clone(),
                 self.journal.is_some().then(|| {
@@ -371,6 +439,7 @@ impl JobRegistry {
             if job.stop.should_stop() && !job.interrupted {
                 job.state = JobState::Cancelled;
                 job.run_seconds = job.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
+                self.events.publish_state(id, JobState::Cancelled.as_str(), None);
                 (None, self.journal.is_some().then(|| terminal_event(job)))
             } else {
                 job.state = JobState::Queued;
@@ -379,6 +448,7 @@ impl JobRegistry {
                 job.started = None;
                 job.stop = StopFlag::new();
                 journal::arm_resume(&mut job.spec, &mut job.epochs);
+                self.events.publish_state(id, JobState::Queued.as_str(), None);
                 (
                     Some(job.spec.priority),
                     self.journal.is_some().then(|| {
@@ -422,6 +492,7 @@ impl JobRegistry {
                 }
             }
             job.best_test_acc = job.best_test_acc.max(stats.test_acc);
+            self.events.publish_epoch(id, &stats);
             job.epochs.push(stats.clone());
             st.total_epochs += 1;
             self.journal.is_some().then(|| {
@@ -453,6 +524,7 @@ impl JobRegistry {
             };
             job.best_test_acc = job.best_test_acc.max(outcome.best_test_acc);
             job.run_seconds = job.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
+            self.events.publish_state(id, job.state.as_str(), None);
             self.journal.is_some().then(|| terminal_event(job))
         };
         self.append_event(ev);
@@ -466,6 +538,8 @@ impl JobRegistry {
             job.state = JobState::Failed;
             job.error = Some(msg);
             job.run_seconds = job.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
+            self.events
+                .publish_state(id, JobState::Failed.as_str(), job.error.as_deref());
             self.journal.is_some().then(|| terminal_event(job))
         };
         self.append_event(ev);
@@ -479,6 +553,7 @@ impl JobRegistry {
             match job.state {
                 JobState::Queued => {
                     job.state = JobState::Cancelled;
+                    self.events.publish_state(id, JobState::Cancelled.as_str(), None);
                     (
                         CancelOutcome::CancelledQueued,
                         self.journal.is_some().then(|| terminal_event(job)),
@@ -522,7 +597,14 @@ impl JobRegistry {
 
     /// Full detail JSON for one job (`GET /jobs/<id>`).
     pub fn job_json(&self, id: u64) -> Option<Value> {
-        self.lock().jobs.get(&id).map(JobRecord::detail_json)
+        self.job_json_since(id, None)
+    }
+
+    /// [`JobRegistry::job_json`] with the epoch history trimmed to
+    /// entries with `epoch >= since` (`GET /jobs/<id>?history_since=`),
+    /// so pollers of long runs can fetch only what they have not seen.
+    pub fn job_json_since(&self, id: u64, since: Option<usize>) -> Option<Value> {
+        self.lock().jobs.get(&id).map(|j| j.detail_json(since))
     }
 
     /// Summary list (`GET /jobs`), newest first.

@@ -10,6 +10,12 @@
 //! session loop, and a requeued-after-restart job arrives with
 //! `resume` armed on its config, so `launch::run` restores params +
 //! loop state before the first batch.
+//!
+//! Live telemetry rides it too: the progress sink lands in
+//! [`JobRegistry::record_epoch`](super::registry::JobRegistry::record_epoch),
+//! which both appends to the job history and broadcasts the epoch on
+//! the registry's event bus (`serve::events`) — the publish never
+//! blocks, so a slow SSE watcher can never stall a training thread.
 
 use super::queue::JobQueue;
 use super::registry::{JobOutcome, JobRegistry};

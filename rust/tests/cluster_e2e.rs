@@ -25,6 +25,7 @@ fn start_coordinator(lease_ms: u64) -> (String, JoinHandle<()>) {
         queue_cap: 8,
         journal: None,
         cluster: Some(ClusterOptions { lease_ms }),
+        ..Default::default()
     })
     .unwrap();
     let addr = server.local_addr().unwrap().to_string();

@@ -1,0 +1,169 @@
+//! The API doc drifted from the server twice in four PRs; this test
+//! makes that impossible to repeat silently. It extracts every route
+//! pattern from `serve/http.rs`'s dispatch matches (`("GET",
+//! ["jobs", id])` → `GET /jobs/{}`) and every route row from the
+//! tables in `docs/SERVE_API.md` (`` `GET  /jobs/{id}` `` → `GET
+//! /jobs/{}`), and requires the two sets to be identical — a route
+//! added to the server without a doc row fails, and so does a
+//! documented route the server no longer dispatches.
+
+use std::collections::BTreeSet;
+
+const HTTP_RS: &str = include_str!("../src/serve/http.rs");
+const SERVE_API_MD: &str = include_str!("../docs/SERVE_API.md");
+
+/// Routes dispatched by `serve/http.rs`: every `("METHOD", [segs…])`
+/// slice pattern in the routing code (the `#[cfg(test)]` module is
+/// excluded). Bound identifiers and `_` become the `{}` placeholder;
+/// arms inside `route_cluster` get the `/cluster` prefix; the
+/// `rest @ ..` delegation arm is skipped (it is not a route).
+fn source_routes(src: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut prefix = "";
+    for line in src.lines() {
+        if line.trim_start().starts_with("#[cfg(test)]") {
+            break; // unit tests mention paths, not routes
+        }
+        // each fn boundary resets the prefix; only route_cluster's
+        // arms live under /cluster
+        if line.contains("fn ") {
+            prefix = if line.contains("fn route_cluster") { "/cluster" } else { "" };
+        }
+        for method in ["GET", "POST"] {
+            let pat = format!("(\"{method}\", [");
+            let mut from = 0;
+            while let Some(ix) = line[from..].find(&pat) {
+                let start = from + ix + pat.len();
+                let Some(len) = line[start..].find(']') else { break };
+                let inner = &line[start..start + len];
+                let mut segs: Vec<String> = Vec::new();
+                let mut delegation = false;
+                for part in inner.split(',') {
+                    let part = part.trim();
+                    if part.is_empty() {
+                        continue;
+                    }
+                    if part.contains("..") {
+                        delegation = true; // `rest @ ..`: a sub-router, not a route
+                        break;
+                    }
+                    match part.strip_prefix('"').and_then(|p| p.strip_suffix('"')) {
+                        Some(lit) => segs.push(lit.to_string()),
+                        None => segs.push("{}".to_string()),
+                    }
+                }
+                if !delegation {
+                    out.insert(format!("{method} {prefix}/{}", segs.join("/")));
+                }
+                from = start + len;
+            }
+        }
+    }
+    out
+}
+
+/// Routes documented in `SERVE_API.md`: the first backticked cell of
+/// every table row that parses as `METHOD /path`. `{id}`-style path
+/// parameters normalize to `{}`.
+fn doc_routes(doc: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in doc.lines() {
+        let t = line.trim_start();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let Some(a) = t.find('`') else { continue };
+        let rest = &t[a + 1..];
+        let Some(b) = rest.find('`') else { continue };
+        let cell = &rest[..b];
+        let mut it = cell.split_whitespace();
+        let (Some(method), Some(path), None) = (it.next(), it.next(), it.next()) else {
+            continue;
+        };
+        if !(method == "GET" || method == "POST") || !path.starts_with('/') {
+            continue;
+        }
+        let segs: Vec<String> = path
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| if s.starts_with('{') { "{}".to_string() } else { s.to_string() })
+            .collect();
+        out.insert(format!("{method} /{}", segs.join("/")));
+    }
+    out
+}
+
+#[test]
+fn every_dispatched_route_is_documented_and_vice_versa() {
+    let in_src = source_routes(HTTP_RS);
+    let in_doc = doc_routes(SERVE_API_MD);
+
+    // guard against the extractors going blind and vacuously passing
+    for expected in [
+        "GET /healthz",
+        "POST /jobs",
+        "GET /jobs/{}",
+        "GET /jobs/{}/events",
+        "GET /events",
+        "POST /cluster/register",
+        "POST /cluster/agents/{}/jobs/{}/epoch",
+    ] {
+        assert!(in_src.contains(expected), "route extractor missed {expected}: {in_src:?}");
+    }
+    assert!(in_src.len() >= 15, "suspiciously few routes extracted: {in_src:?}");
+    assert!(in_doc.len() >= 15, "suspiciously few doc rows extracted: {in_doc:?}");
+
+    let undocumented: Vec<&String> = in_src.difference(&in_doc).collect();
+    let phantom: Vec<&String> = in_doc.difference(&in_src).collect();
+    assert!(
+        undocumented.is_empty(),
+        "routes dispatched in serve/http.rs but missing from docs/SERVE_API.md \
+         (add a table row): {undocumented:?}"
+    );
+    assert!(
+        phantom.is_empty(),
+        "routes documented in docs/SERVE_API.md but not dispatched in serve/http.rs \
+         (stale doc row?): {phantom:?}"
+    );
+}
+
+#[test]
+fn doc_table_parser_reads_the_expected_shape() {
+    let rows = doc_routes(
+        "| Method + path | Action |\n\
+         |---|---|\n\
+         | `GET  /jobs/{id}` | detail (`?history_since=`) |\n\
+         | `POST /cluster/agents/{a}/poll` | heartbeat |\n\
+         prose mentioning `GET /events` outside a table\n",
+    );
+    assert_eq!(
+        rows.into_iter().collect::<Vec<_>>(),
+        vec!["GET /jobs/{}".to_string(), "POST /cluster/agents/{}/poll".to_string()]
+    );
+}
+
+#[test]
+fn source_pattern_parser_reads_the_expected_shape() {
+    let routes = source_routes(
+        "fn route(&self) {\n\
+             (\"GET\", [\"jobs\", id]) => x,\n\
+             (m, [\"cluster\", rest @ ..]) => y,\n\
+         }\n\
+         fn route_cluster(&self) {\n\
+             (\"POST\", [\"agents\", aid, \"poll\"]) => z,\n\
+         }\n\
+         fn other() { matches!(x, (\"GET\", [\"events\"]) | (\"GET\", [\"jobs\", _, \"events\"])) }\n\
+         #[cfg(test)]\n\
+         mod tests { (\"GET\", [\"not-a-route\"]) }\n",
+    );
+    let want: BTreeSet<String> = [
+        "GET /jobs/{}",
+        "POST /cluster/agents/{}/poll",
+        "GET /events",
+        "GET /jobs/{}/events",
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+    assert_eq!(routes, want);
+}

@@ -1,0 +1,378 @@
+//! End-to-end tests of the live-telemetry subsystem: SSE streams over
+//! real sockets (`GET /jobs/{id}/events` replay+live, `GET /events`
+//! firehose resume), the `repro watch` client path (`watch_job`), the
+//! never-block-the-trainer lagged semantics, and the `?history_since=`
+//! polling trim.
+
+use elasticzo::config::Config;
+use elasticzo::coordinator::metrics::EpochStats;
+use elasticzo::serve::events::SseParser;
+use elasticzo::serve::{
+    request, watch_job, Agent, AgentHandle, AgentOptions, ClusterOptions, JobRegistry,
+    JobSpec, Poll, ServeOptions, Server, WatchFrame,
+};
+use elasticzo::util::json::Value;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const LONG: Duration = Duration::from_secs(300);
+
+/// A quick multi-epoch job against the synthetic dataset.
+fn quick_job(epochs: usize) -> String {
+    format!(
+        r#"{{"method": "full-zo", "precision": "fp32", "engine": "native",
+             "epochs": {epochs}, "batch": 16, "train_n": 64, "test_n": 32, "seed": 3}}"#
+    )
+}
+
+fn start_server(workers: usize) -> (String, JoinHandle<()>) {
+    let server = Server::bind(&ServeOptions {
+        port: 0,
+        workers,
+        queue_cap: 8,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || server.run().unwrap());
+    (addr, h)
+}
+
+fn shutdown(addr: &str, handle: JoinHandle<()>) {
+    let (status, _) = request(addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap();
+}
+
+fn submit(addr: &str, spec: &str) -> u64 {
+    let body = elasticzo::util::json::parse(spec).unwrap();
+    let (status, v) = request(addr, "POST", "/jobs", Some(&body)).unwrap();
+    assert_eq!(status, 200, "submit failed: {}", elasticzo::util::json::to_string(&v));
+    v.get("id").as_f64().unwrap() as u64
+}
+
+fn poll_until(addr: &str, id: u64, pred: impl Fn(&Value) -> bool, what: &str) -> Value {
+    let t0 = Instant::now();
+    loop {
+        let (status, v) = request(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+        assert_eq!(status, 200);
+        if pred(&v) {
+            return v;
+        }
+        assert!(
+            t0.elapsed() < LONG,
+            "timed out waiting for {what} on job {id}; last: {}",
+            elasticzo::util::json::to_string(&v)
+        );
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+/// Epoch indices seen by a watcher, asserting each arrives exactly once.
+fn collect_epochs(frames: &[WatchFrame]) -> Vec<usize> {
+    let mut seen = Vec::new();
+    for f in frames {
+        if let WatchFrame::Epoch { stats, .. } = f {
+            assert!(
+                !seen.contains(&stats.epoch),
+                "epoch {} delivered more than once (saw {seen:?})",
+                stats.epoch
+            );
+            seen.push(stats.epoch);
+        }
+    }
+    seen
+}
+
+#[test]
+fn job_stream_replays_history_then_finishes_exactly_once() {
+    let (addr, h) = start_server(1);
+    let id = submit(&addr, &quick_job(4));
+    // let at least one epoch land first, so the stream has history to
+    // replay before it goes live
+    poll_until(
+        &addr,
+        id,
+        |v| v.get("epochs_done").as_usize().unwrap_or(0) >= 1,
+        "first epoch",
+    );
+
+    let mut frames: Vec<WatchFrame> = Vec::new();
+    let state = watch_job(&addr, id, |f| frames.push(f.clone())).unwrap();
+    // `repro watch` exits 0 exactly when this returns Ok(terminal)
+    assert_eq!(state.as_str(), "done");
+
+    let epochs = collect_epochs(&frames);
+    assert_eq!(epochs, vec![0, 1, 2, 3], "every epoch exactly once, in order");
+    // the pre-connect epoch(s) arrived as replay frames
+    assert!(
+        frames
+            .iter()
+            .any(|f| matches!(f, WatchFrame::Epoch { replay: true, .. })),
+        "connecting after epoch 0 must replay it"
+    );
+    // the stream ends on the terminal state transition
+    assert!(matches!(
+        frames.last(),
+        Some(WatchFrame::State { state, .. }) if state == "done"
+    ));
+    shutdown(&addr, h);
+}
+
+#[test]
+fn job_stream_goes_live_and_survives_cancel() {
+    let (addr, h) = start_server(1);
+    // far more epochs than will run: the watcher is guaranteed to be
+    // connected while the job is still producing live events
+    let id = submit(&addr, &quick_job(10000));
+    poll_until(&addr, id, |v| v.get("state").as_str() == Some("running"), "running");
+
+    let frames: Arc<Mutex<Vec<WatchFrame>>> = Arc::new(Mutex::new(Vec::new()));
+    let f2 = frames.clone();
+    let addr2 = addr.clone();
+    let watcher = std::thread::spawn(move || {
+        watch_job(&addr2, id, |f| f2.lock().unwrap().push(f.clone()))
+    });
+
+    // wait until the watcher has observed at least two epochs, then
+    // cancel; the terminal `cancelled` frame must close the stream
+    let t0 = Instant::now();
+    while frames
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|f| matches!(f, WatchFrame::Epoch { .. }))
+        .count()
+        < 2
+    {
+        assert!(t0.elapsed() < LONG, "watcher saw no epochs");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let (status, _) = request(&addr, "POST", &format!("/jobs/{id}/cancel"), None).unwrap();
+    assert_eq!(status, 200);
+
+    let state = watcher.join().unwrap().unwrap();
+    assert_eq!(state.as_str(), "cancelled");
+    let frames = frames.lock().unwrap();
+    // the job was mid-run at connect time: live (non-replay) epoch
+    // frames must be present, and still exactly-once
+    assert!(
+        frames
+            .iter()
+            .any(|f| matches!(f, WatchFrame::Epoch { replay: false, .. })),
+        "a running job must stream live epochs"
+    );
+    collect_epochs(&frames);
+    shutdown(&addr, h);
+}
+
+fn start_coordinator() -> (String, JoinHandle<()>) {
+    let server = Server::bind(&ServeOptions {
+        port: 0,
+        workers: 0, // pure coordinator: the job must run on the agent
+        queue_cap: 8,
+        cluster: Some(ClusterOptions { lease_ms: 10_000 }),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || server.run().unwrap());
+    (addr, h)
+}
+
+fn spawn_agent(addr: &str) -> AgentHandle {
+    Agent::spawn(AgentOptions {
+        coordinator: addr.to_string(),
+        capacity: 1,
+        name: "events-e2e".to_string(),
+        poll_ms: 50,
+        max_poll_failures: 40,
+    })
+    .unwrap()
+}
+
+#[test]
+fn remote_agent_job_streams_identically_to_a_local_one() {
+    let (addr, h) = start_coordinator();
+    let agent = spawn_agent(&addr);
+    let id = submit(&addr, &quick_job(3));
+
+    // the remote epoch POSTs route through the same registry bus, so a
+    // watcher cannot tell this job ran on an agent
+    let mut frames: Vec<WatchFrame> = Vec::new();
+    let state = watch_job(&addr, id, |f| frames.push(f.clone())).unwrap();
+    assert_eq!(state.as_str(), "done");
+    assert_eq!(collect_epochs(&frames), vec![0, 1, 2]);
+    assert!(matches!(
+        frames.last(),
+        Some(WatchFrame::State { state, .. }) if state == "done"
+    ));
+
+    agent.stop();
+    shutdown(&addr, h);
+}
+
+#[test]
+fn stalled_subscriber_lags_instead_of_blocking_the_trainer() {
+    // registry-level: record_epoch is exactly what a worker's
+    // ProgressSink (and the cluster epoch POST) calls from the
+    // training thread — it must never wait on a slow consumer
+    let registry = JobRegistry::new();
+    let id = registry.add(JobSpec::new(Config::default()));
+    registry.claim(id, 0).unwrap();
+
+    // the subscriber exists but never reads: a stalled `curl -N`
+    let sub = registry.events().subscribe(Some(id), 4);
+    let t0 = Instant::now();
+    for e in 0..100 {
+        registry.record_epoch(id, EpochStats { epoch: e, ..Default::default() });
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "publishing 100 epochs into a stalled subscriber must not block"
+    );
+    // every epoch still landed in the job history (the trainer's view)
+    let v = registry.job_json(id).unwrap();
+    assert_eq!(v.get("epochs_done").as_usize(), Some(100));
+
+    // the stalled consumer wakes up: explicit lagged marker first,
+    // then only the newest `cap` events
+    match sub.recv(Duration::from_secs(1)) {
+        Poll::Lagged { next_seq } => assert!(next_seq > 0),
+        other => panic!("expected a lagged marker, got {other:?}"),
+    }
+    let mut delivered = 0;
+    while let Poll::Event(e) = sub.recv(Duration::from_millis(50)) {
+        assert!(e.data.get("stats").get("epoch").as_usize().unwrap() >= 96);
+        delivered += 1;
+    }
+    assert_eq!(delivered, 4, "only the buffer's worth of newest events survives");
+}
+
+#[test]
+fn firehose_resumes_from_since_seq_over_http() {
+    let (addr, h) = start_server(1);
+    let id = submit(&addr, &quick_job(2));
+    poll_until(&addr, id, |v| v.get("state").as_str() == Some("done"), "done");
+
+    // a malformed resume point is a one-shot 400, not a stream
+    let (status, v) = request(&addr, "GET", "/events?since_seq=abc", None).unwrap();
+    assert_eq!(status, 400);
+    assert!(v.get("error").as_str().unwrap().contains("since_seq"));
+
+    // resume from the beginning: the ring still holds the whole run
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream
+        .write_all(
+            format!("GET /events?since_seq=0 HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")
+                .as_bytes(),
+        )
+        .unwrap();
+
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        let n = stream.read(&mut tmp).unwrap();
+        assert!(n > 0, "no response");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("text/event-stream"), "{head}");
+
+    let mut parser = SseParser::default();
+    let mut frames = parser.push(&buf[header_end + 4..]);
+    let mut epochs = Vec::new();
+    let mut done = false;
+    let t0 = Instant::now();
+    while !done {
+        for f in frames.drain(..) {
+            let Some(data) = &f.data else { continue };
+            if data.get("job").as_f64().map(|n| n as u64) != Some(id) {
+                continue;
+            }
+            match data.get("type").as_str() {
+                Some("epoch") => {
+                    // firehose frames are live bus events: each carries
+                    // its sequence number as the SSE id
+                    assert!(f.id.is_some(), "firehose frames must carry seqs");
+                    epochs.push(data.get("stats").get("epoch").as_usize().unwrap());
+                }
+                Some("state") if data.get("state").as_str() == Some("done") => done = true,
+                _ => {}
+            }
+        }
+        if done {
+            break;
+        }
+        assert!(t0.elapsed() < LONG, "never saw the terminal state on the firehose");
+        let n = stream.read(&mut tmp).unwrap();
+        assert!(n > 0, "stream closed before the terminal state");
+        frames = parser.push(&tmp[..n]);
+    }
+    assert_eq!(epochs, vec![0, 1], "the replayed ring covers the whole finished run");
+    drop(stream);
+    shutdown(&addr, h);
+}
+
+#[test]
+fn history_since_trims_polled_bodies() {
+    let (addr, h) = start_server(1);
+    let id = submit(&addr, &quick_job(3));
+    poll_until(&addr, id, |v| v.get("state").as_str() == Some("done"), "done");
+
+    let (status, full) = request(&addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(full.get("history").as_arr().unwrap().len(), 3);
+    assert_eq!(full.get("history_total").as_usize(), Some(3));
+
+    let (status, tail) =
+        request(&addr, "GET", &format!("/jobs/{id}?history_since=2"), None).unwrap();
+    assert_eq!(status, 200);
+    let hist = tail.get("history").as_arr().unwrap();
+    assert_eq!(hist.len(), 1, "only epochs >= 2 ship");
+    assert_eq!(hist[0].get("epoch").as_usize(), Some(2));
+    assert_eq!(tail.get("history_total").as_usize(), Some(3), "total stays honest");
+
+    // past the end: empty history, not an error
+    let (status, none) =
+        request(&addr, "GET", &format!("/jobs/{id}?history_since=99"), None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(none.get("history").as_arr().unwrap().len(), 0);
+
+    let (status, v) =
+        request(&addr, "GET", &format!("/jobs/{id}?history_since=x"), None).unwrap();
+    assert_eq!(status, 400);
+    assert!(v.get("error").as_str().unwrap().contains("history_since"));
+    shutdown(&addr, h);
+}
+
+#[test]
+fn watching_an_already_finished_job_replays_and_exits_cleanly() {
+    let (addr, h) = start_server(1);
+    let id = submit(&addr, &quick_job(2));
+    poll_until(&addr, id, |v| v.get("state").as_str() == Some("done"), "done");
+
+    // everything arrives as replay, the terminal snapshot state closes
+    // the stream immediately — `repro watch` on a finished job exits 0
+    let mut frames: Vec<WatchFrame> = Vec::new();
+    let state = watch_job(&addr, id, |f| frames.push(f.clone())).unwrap();
+    assert_eq!(state.as_str(), "done");
+    assert_eq!(collect_epochs(&frames), vec![0, 1]);
+    assert!(frames.iter().all(|f| match f {
+        WatchFrame::Epoch { replay, .. } | WatchFrame::State { replay, .. } => *replay,
+        WatchFrame::Lagged { .. } => false,
+    }));
+
+    // watching a job that never existed is a clean error (404 body)
+    let err = watch_job(&addr, 999, |_| {}).unwrap_err();
+    assert!(err.to_string().contains("404"), "{err:#}");
+    shutdown(&addr, h);
+}

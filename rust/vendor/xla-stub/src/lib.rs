@@ -1,0 +1,149 @@
+//! No-op stand-in for the external `xla` (xla-rs) bindings.
+//!
+//! The `elasticzo` crate's `xla` feature compiles the PJRT execution
+//! path (`runtime::{executable,registry}` + `coordinator::xla_engine`)
+//! against the xla-rs API. The real bindings link a PJRT plugin and
+//! cannot be vendored here, so this crate mirrors exactly the API
+//! surface those modules use — same names, same shapes — with every
+//! runtime entry point returning [`Error`]. `cargo check --features
+//! xla` (and the full test suite) therefore builds everywhere; actually
+//! executing AOT artifacts requires substituting the real crate by
+//! retargeting the path dependency in `rust/Cargo.toml`:
+//!
+//! ```toml
+//! [dependencies]
+//! xla = { path = "/path/to/xla-rs", optional = true }
+//! ```
+//!
+//! (or by overwriting `rust/vendor/xla-stub` with a real checkout —
+//! Cargo `[patch]` entries only override registry/git sources, never a
+//! path dependency, so editing the path is the supported swap).
+//!
+//! The `elasticzo` side degrades gracefully either way: the engine
+//! builder catches the open error and falls back to the native engine
+//! with a warning (see `exp::build_engine_at`).
+
+use std::fmt;
+
+/// The single error every stubbed entry point returns.
+#[derive(Debug)]
+pub struct Error(&'static str);
+
+impl Error {
+    fn stub() -> Error {
+        Error(
+            "built against the in-tree no-op `xla` stub (rust/vendor/xla-stub); \
+             retarget the `xla` path dependency in rust/Cargo.toml at the real \
+             xla-rs bindings to execute artifacts",
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes of the artifact ABI (the subset the manifest knows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S8,
+    S32,
+}
+
+/// Host-side tensor value (always empty in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(Error::stub())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::stub())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub())
+    }
+}
+
+/// Parsed HLO module (never constructible at runtime in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+/// A compiled executable bound to a client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_errors_with_the_stub_message() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0; 8])
+            .is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("no-op `xla` stub"), "{msg}");
+    }
+}
