@@ -1,6 +1,7 @@
 //! Training history: per-epoch loss/accuracy series (the data behind
 //! the paper's Figs. 2–3 and Tables 1–2), JSON-dumpable.
 
+use crate::telemetry::{Phase, PhaseDelta};
 use crate::util::json::Value;
 
 #[derive(Debug, Clone, Default)]
@@ -12,11 +13,16 @@ pub struct EpochStats {
     pub test_acc: f32,
     pub lr: f32,
     pub seconds: f64,
+    /// Per-phase wall-clock deltas for this epoch (Fig. 7's slices).
+    /// Empty for histories produced before phase threading existed;
+    /// the `phases` JSON key is omitted when empty so old consumers
+    /// see an unchanged shape.
+    pub phases: Vec<PhaseDelta>,
 }
 
 impl EpochStats {
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut pairs = vec![
             ("epoch", Value::num(self.epoch as f64)),
             ("train_loss", Value::num(self.train_loss as f64)),
             ("test_loss", Value::num(self.test_loss as f64)),
@@ -24,14 +30,43 @@ impl EpochStats {
             ("test_acc", Value::num(self.test_acc as f64)),
             ("lr", Value::num(self.lr as f64)),
             ("seconds", Value::num(self.seconds)),
-        ])
+        ];
+        if !self.phases.is_empty() {
+            let obj = self
+                .phases
+                .iter()
+                .map(|d| {
+                    (
+                        d.phase.name(),
+                        Value::Arr(vec![Value::num(d.seconds), Value::num(d.calls as f64)]),
+                    )
+                })
+                .collect();
+            pairs.push(("phases", Value::obj(obj)));
+        }
+        Value::obj(pairs)
     }
 
     /// Parse the shape [`EpochStats::to_json`] emits (serve's job
-    /// journal replays epoch events through this). Only `epoch` is
-    /// required; missing metrics default to zero.
+    /// journal replays epoch events through this, and remote agents
+    /// POST it verbatim to `/cluster/.../epoch`). Only `epoch` is
+    /// required; missing metrics default to zero and unknown phase
+    /// names are skipped, so payloads from other versions stay
+    /// readable.
     pub fn from_json(v: &Value) -> anyhow::Result<EpochStats> {
         use anyhow::Context;
+        let mut phases = Vec::new();
+        if let Some(obj) = v.get("phases").as_obj() {
+            for (name, val) in obj {
+                let Some(phase) = Phase::parse(name) else { continue };
+                let arr = val.as_arr().unwrap_or(&[]);
+                phases.push(PhaseDelta {
+                    phase,
+                    seconds: arr.first().and_then(Value::as_f64).unwrap_or(0.0),
+                    calls: arr.get(1).and_then(Value::as_f64).unwrap_or(0.0) as u64,
+                });
+            }
+        }
         Ok(EpochStats {
             epoch: v
                 .get("epoch")
@@ -43,6 +78,7 @@ impl EpochStats {
             test_acc: v.get("test_acc").as_f64().unwrap_or(0.0) as f32,
             lr: v.get("lr").as_f64().unwrap_or(0.0) as f32,
             seconds: v.get("seconds").as_f64().unwrap_or(0.0),
+            phases,
         })
     }
 }
@@ -147,9 +183,42 @@ mod tests {
             test_acc: 0.75,
             lr: 0.001953125,
             seconds: 2.5,
+            ..Default::default()
         };
         let back = EpochStats::from_json(&e.to_json()).unwrap();
         assert_eq!(back.to_json(), e.to_json());
         assert!(EpochStats::from_json(&Value::Null).is_err());
+    }
+
+    #[test]
+    fn phases_survive_the_wire_format() {
+        let e = EpochStats {
+            epoch: 3,
+            seconds: 1.0,
+            phases: vec![
+                PhaseDelta { phase: Phase::Forward, seconds: 0.75, calls: 24 },
+                PhaseDelta { phase: Phase::ZoUpdate, seconds: 0.25, calls: 12 },
+            ],
+            ..Default::default()
+        };
+        let v = e.to_json();
+        assert!(v.get("phases").as_obj().is_some(), "phases key present when non-empty");
+        let back = EpochStats::from_json(&v).unwrap();
+        assert_eq!(back.phases.len(), 2);
+        let fwd = back.phases.iter().find(|d| d.phase == Phase::Forward).unwrap();
+        assert_eq!((fwd.seconds, fwd.calls), (0.75, 24));
+        assert_eq!(back.to_json(), v);
+
+        // empty phases → key omitted → old shape exactly
+        let plain = EpochStats { epoch: 1, ..Default::default() };
+        assert!(plain.to_json().get("phases").as_obj().is_none());
+        // unknown phase names from a future version are skipped, not fatal
+        let fwdcompat = crate::util::json::parse(
+            r#"{"epoch": 2, "phases": {"Warp": [1.0, 3], "Eval": [0.5, 1]}}"#,
+        )
+        .unwrap();
+        let got = EpochStats::from_json(&fwdcompat).unwrap();
+        assert_eq!(got.phases.len(), 1);
+        assert_eq!(got.phases[0].phase, Phase::Eval);
     }
 }

@@ -387,6 +387,8 @@ pub fn run_from(
             break;
         }
         let epoch_t0 = std::time::Instant::now();
+        // phase deltas for this epoch = cumulative timer minus this mark
+        let phase_mark = timer.clone();
         let lr = session.begin_epoch(epoch);
         let mut epoch_loss = 0.0f64;
         let mut nbatches = 0usize;
@@ -430,6 +432,7 @@ pub fn run_from(
             test_acc,
             lr,
             seconds: epoch_t0.elapsed().as_secs_f64(),
+            phases: timer.deltas_since(&phase_mark),
         };
         if spec.verbose {
             println!(

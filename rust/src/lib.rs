@@ -27,7 +27,9 @@
 //! jobs across a worker pool — and, in cluster mode, across a fleet of
 //! remote worker agents (`repro agent`) with lease-based failover —
 //! over an HTTP/1.1 + JSON control plane; see the [`serve`] module
-//! docs for the protocol.
+//! docs for the protocol. The [`metrics`] registry exposes the whole
+//! stack — request latencies, per-phase training histograms, live
+//! heap accounting — in Prometheus text format at `GET /metrics`.
 
 pub mod config;
 pub mod coordinator;
@@ -36,6 +38,7 @@ pub mod exp;
 pub mod int8;
 pub mod launch;
 pub mod memory;
+pub mod metrics;
 pub mod nn;
 pub mod rng;
 pub mod runtime;

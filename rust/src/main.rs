@@ -6,12 +6,17 @@
 //!              [--precision fp32|int8|int8*] [--epochs N] [--batch N]
 //!              [--lr F] [--eps F] [--seed N] [--save ckpt] [--load ckpt]
 //!              [--resume ckpt] [--ckpt-every N] [--ckpt-keep K]
-//!              [--config file.json] [--verbose]
+//!              [--config file.json] [--verbose] [--mem-report]
 //! repro eval   --load ckpt [--dataset ...] [--rotate DEG]
 //! repro exp    table1|table2|fig2|fig3|fig4|fig5|fig6|fig7|all
 //!              [--fast|--paper] [--engine xla|native]
 //! repro memory [--model lenet|pointnet] [--batch N] [--precision fp32|int8]
 //! repro inspect            # list AOT artifacts
+//! repro bench  [--json] [--out file.json] [--fast]
+//!              # measured performance snapshot: ZO-op and end-to-end
+//!              # step latencies, serve throughput, and measured peak
+//!              # heap per method next to the paper's memory model
+//!              # (the repo's BENCH_*.json files come from --out)
 //!
 //! repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]
 //!              [--cluster] [--lease-ms L] [--events-buffer N]
@@ -47,6 +52,14 @@ use elasticzo::launch;
 use elasticzo::serve;
 use elasticzo::util::cli::Args;
 
+/// Every allocation in the `repro` binary is tracked, so `GET /metrics`
+/// exposes real `repro_mem_*` gauges and `repro train --mem-report` can
+/// print the measured peak next to the paper's analytic model. Library
+/// consumers (and `cargo test`) keep the default allocator and read
+/// zeros from the counters.
+#[global_allocator]
+static ALLOC: elasticzo::metrics::alloc::TrackedAlloc = elasticzo::metrics::alloc::TrackedAlloc;
+
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -55,6 +68,7 @@ fn main() {
         "eval" => cmd_eval(&args),
         "exp" => cmd_exp(&args),
         "memory" => cmd_memory(&args),
+        "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "agent" => cmd_agent(&args),
@@ -86,9 +100,11 @@ fn print_help() {
          \x20              [--precision fp32|int8|int8*] [--epochs N] [--batch N] [--lr F]\n\
          \x20              [--eval-every N] [--save ckpt] [--load ckpt] [--resume ckpt]\n\
          \x20              [--ckpt-every N] [--ckpt-keep K] [--config file.json] [--verbose]\n\
+         \x20              [--mem-report]   print measured peak heap vs the paper's model\n\
          \x20 repro eval   --load ckpt [--dataset D] [--rotate DEG] [--precision P]\n\
          \x20 repro exp    table1|table2|fig2..fig7|all [--fast|--paper] [--engine E]\n\
          \x20 repro memory [--model M] [--batch N] [--precision fp32|int8] [--adam]\n\
+         \x20 repro bench  [--json] [--out file.json] [--fast]   measured perf snapshot\n\
          \x20 repro inspect\n\
          \n  repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]\n\
          \x20              [--cluster] [--lease-ms L] [--events-buffer N]\n\
@@ -133,7 +149,15 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     // the precision dispatch, session setup and checkpoint plumbing all
     // live in launch::run — the exact path the serve workers drive
-    let l = launch::run(&cfg, StopFlag::default(), ProgressSink::default())?;
+    let mem_report = args.flag("mem-report");
+    let (l, measured) = if mem_report {
+        let (r, scope) = elasticzo::metrics::alloc::measure_scope(|| {
+            launch::run(&cfg, StopFlag::default(), ProgressSink::default())
+        });
+        (r?, Some(scope))
+    } else {
+        (launch::run(&cfg, StopFlag::default(), ProgressSink::default())?, None)
+    };
     if let Some(epoch) = l.resumed_from {
         println!("resumed at epoch {epoch}");
     }
@@ -143,6 +167,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         l.engine
     );
     println!("{}", l.result.timer.report("phase breakdown"));
+    if let Some(scope) = measured {
+        print_mem_report(&cfg, scope.peak_net_bytes);
+    }
     match (&cfg.save_checkpoint, l.result.stopped) {
         (Some(path), false) => println!("saved checkpoint {path}"),
         // a stopped run keeps its last cadence snapshot instead of a
@@ -240,6 +267,294 @@ fn cmd_memory(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// Layer table for the paper's analytic memory model, matching the
+/// run's model + precision.
+fn analytic_layers(cfg: &Config) -> Vec<elasticzo::memory::LayerInfo> {
+    use elasticzo::memory::models;
+    match (cfg.model.as_str(), cfg.precision) {
+        ("lenet", Precision::Fp32) => models::lenet_layers(),
+        ("lenet", _) => models::lenet_int8_layers(),
+        _ => models::pointnet_layers(cfg.npoints, cfg.ncls),
+    }
+}
+
+/// Modeled total training-state bytes (paper Eqs. 2–5 fp32 / 13–15
+/// int8) for one method under this run's configuration.
+fn analytic_total(cfg: &Config, m: Method) -> usize {
+    let layers = analytic_layers(cfg);
+    if cfg.precision == Precision::Fp32 {
+        elasticzo::memory::fp32(&layers, cfg.batch, m.memory_method(), false).total()
+    } else {
+        elasticzo::memory::int8(&layers, cfg.batch, m.memory_method()).total()
+    }
+}
+
+/// `repro train --mem-report`: the measured peak of the run we just
+/// finished, next to the paper's model for every method at the same
+/// model/precision/batch.
+fn print_mem_report(cfg: &Config, measured_peak: usize) {
+    use elasticzo::util::table::{bytes, Table};
+    let mut t = Table::new(
+        &format!(
+            "Measured vs modeled peak memory ({} {} B={})",
+            cfg.model,
+            cfg.precision.label(),
+            cfg.batch
+        ),
+        &["method", "modeled", "measured peak", "measured/modeled"],
+    );
+    for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+        let modeled = analytic_total(cfg, m);
+        let this_run = m == cfg.method;
+        t.row(&[
+            format!("{}{}", m.label(), if this_run { " *" } else { "" }),
+            bytes(modeled),
+            if this_run { bytes(measured_peak) } else { "-".into() },
+            if this_run {
+                format!("{:.2}x", measured_peak as f64 / modeled.max(1) as f64)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.print();
+    println!(
+        "* this run. measured = peak net-new heap over the whole run (tracked\n\
+         allocator): the modeled training state plus dataset, engine scratch and\n\
+         history buffers, so a ratio somewhat above 1x is expected."
+    );
+}
+
+/// `repro bench`: the measured side of the paper's claims in one
+/// command — ZO-op and end-to-end step latencies, serve throughput,
+/// and per-method measured peak heap vs the analytic model. `--json`
+/// prints a machine-readable snapshot; `--out f.json` writes it (the
+/// repo's `BENCH_*.json` files); `--fast` caps each timing at ~200 ms
+/// (same as `BENCH_FAST=1`).
+fn cmd_bench(args: &Args) -> Result<()> {
+    use elasticzo::coordinator::int8_trainer::{perturb_int8, zo_update_int8};
+    use elasticzo::coordinator::native_engine::NativeEngine;
+    use elasticzo::coordinator::trainer::zo_step;
+    use elasticzo::coordinator::{zo, Engine, Model, TrainSpec};
+    use elasticzo::int8::{intce, lenet8};
+    use elasticzo::metrics::alloc;
+    use elasticzo::telemetry::PhaseTimer;
+    use elasticzo::util::bench::{Bencher, Stats};
+    use elasticzo::util::json::{self, Value};
+    use std::collections::BTreeMap;
+
+    if args.flag("fast") {
+        std::env::set_var("BENCH_FAST", "1");
+    }
+    // `repro bench` has a positional subcommand word; a filtering
+    // Bencher would read it as a name filter and skip everything
+    let mut b = Bencher::unfiltered();
+
+    // --- ZO micro-ops (Fig. 7 "ZO Perturb"/"ZO Update" slices) ---
+    let mut lenet = ParamSet::init(Model::LeNet, 1);
+    let nt = lenet.num_tensors();
+    b.bench("zo_perturb/lenet_107k", || {
+        zo::perturb(&mut lenet, nt, 7, 1, 1e-3);
+    });
+    let mut ws = lenet8::init_params(3, 32);
+    b.bench("int8_perturb/lenet_107k", || {
+        perturb_int8(&mut ws, 5, 7, 1, 1, 15, 0.5);
+    });
+    b.bench("int8_zo_update/lenet_107k", || {
+        zo_update_int8(&mut ws, 5, 7, 1, 1, 1, 15, 0.5);
+    });
+    let zo_end = b.results.len();
+
+    // --- end-to-end training steps, native engine ---
+    let d = data::synth_mnist::generate(32, 1);
+    let mut y = vec![0.0f32; 32 * 10];
+    for (i, &l) in d.labels.iter().enumerate() {
+        y[i * 10 + l as usize] = 1.0;
+    }
+    let batch = elasticzo::data::loader::Batch {
+        x: d.x.clone(),
+        y_onehot: y.clone(),
+        labels: d.labels.clone(),
+        bsz: 32,
+    };
+    for method in [Method::FullZo, Method::Cls1, Method::Cls2] {
+        let spec = TrainSpec {
+            method,
+            epochs: 1,
+            batch: 32,
+            lr0: 1e-3,
+            eps: 1e-2,
+            g_clip: 5.0,
+            seed: 9,
+            eval_every: 1,
+            verbose: false,
+            ..Default::default()
+        };
+        let mut native = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 3);
+        let mut timer = PhaseTimer::new();
+        let mut step = 0u64;
+        b.bench(&format!("step_{}/native", method.label().replace(' ', "_")), || {
+            step += 1;
+            zo_step(&mut native, &mut params, &batch, step, 1e-3, &spec, &mut timer).unwrap()
+        });
+    }
+    let mut native = NativeEngine::new(Model::LeNet);
+    let mut params = ParamSet::init(Model::LeNet, 4);
+    b.bench("step_Full_BP/native", || {
+        native.full_step(&mut params, &d.x, &y, 32, 0.01).unwrap().loss
+    });
+    let mut ws8 = lenet8::init_params(5, 32);
+    let xq = lenet8::quantize_input(&d.x, 32);
+    let mut step8 = 0u64;
+    b.bench("step_Cls1/int8_native", || {
+        step8 += 1;
+        perturb_int8(&mut ws8, 4, 1, step8, 1, 15, 0.5);
+        let fp = lenet8::forward(&ws8, &xq, 32);
+        perturb_int8(&mut ws8, 4, 1, step8, -2, 15, 0.5);
+        let fm = lenet8::forward(&ws8, &xq, 32);
+        let g = intce::loss_diff_sign_int(
+            &fp.logits.data,
+            fp.logits.exp,
+            &fm.logits.data,
+            fm.logits.exp,
+            &d.labels,
+            32,
+            10,
+        );
+        perturb_int8(&mut ws8, 4, 1, step8, 1, 15, 0.5);
+        zo_update_int8(&mut ws8, 4, 1, step8, g, 1, 15, 0.5);
+        lenet8::tail_update(&mut ws8, &fm, &d.labels, 1, 32, 5);
+        g
+    });
+
+    // --- serve throughput: tiny real jobs through the HTTP stack ---
+    const JOBS: usize = 8;
+    let run_fleet = |workers: usize| -> Result<f64> {
+        use std::time::{Duration, Instant};
+        let server = serve::Server::bind(&serve::ServeOptions {
+            port: 0,
+            workers,
+            queue_cap: JOBS + 4,
+            ..Default::default()
+        })?;
+        let addr = server.local_addr()?.to_string();
+        let handle = std::thread::spawn(move || server.run());
+        let t0 = Instant::now();
+        for i in 0..JOBS {
+            let body = json::parse(&format!(
+                r#"{{"method": "cls1", "precision": "fp32", "engine": "native",
+                    "epochs": 1, "batch": 16, "train_n": 64, "test_n": 32, "seed": {i}}}"#
+            ))?;
+            let (status, v) = serve::request(&addr, "POST", "/jobs", Some(&body))?;
+            anyhow::ensure!(status == 200, "submit rejected: {}", json::to_string(&v));
+        }
+        loop {
+            let (_, s) = serve::request(&addr, "GET", "/stats", None)?;
+            anyhow::ensure!(
+                s.get("jobs_failed").as_usize() == Some(0),
+                "jobs failed during bench"
+            );
+            if s.get("jobs_done").as_usize() == Some(JOBS) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        serve::request(&addr, "POST", "/shutdown", None)?;
+        handle.join().expect("server thread panicked")?;
+        Ok(JOBS as f64 / secs)
+    };
+    let mut serve_rates: Vec<(usize, f64)> = Vec::new();
+    for workers in [1usize, 4] {
+        let rate = run_fleet(workers)?;
+        b.report_metric(&format!("serve_throughput/workers_{workers}"), rate, "jobs/sec");
+        serve_rates.push((workers, rate));
+    }
+
+    // --- measured peak heap per method vs the paper's model ---
+    let mut mem = BTreeMap::new();
+    for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+        let cfg = Config {
+            engine: elasticzo::coordinator::EngineKind::Native,
+            method: m,
+            epochs: 1,
+            train_n: 64,
+            test_n: 32,
+            ..Config::default()
+        };
+        let (r, scope) = alloc::measure_scope(|| {
+            launch::run(&cfg, StopFlag::default(), ProgressSink::default())
+        });
+        r?;
+        let modeled = analytic_total(&cfg, m);
+        b.report_metric(
+            &format!("peak_heap/{}", m.label().replace(' ', "_")),
+            scope.peak_net_bytes as f64 / 1024.0,
+            "KiB measured",
+        );
+        mem.insert(
+            m.label().to_string(),
+            Value::obj(vec![
+                ("modeled_bytes", Value::num(modeled as f64)),
+                ("measured_peak_bytes", Value::num(scope.peak_net_bytes as f64)),
+            ]),
+        );
+    }
+
+    // --- machine-readable snapshot ---
+    let stats_json = |results: &[Stats]| {
+        Value::Obj(
+            results
+                .iter()
+                .map(|s| {
+                    (
+                        s.name.clone(),
+                        Value::obj(vec![
+                            ("iters", Value::num(s.iters as f64)),
+                            ("mean_s", Value::num(s.mean.as_secs_f64())),
+                            ("p50_s", Value::num(s.p50.as_secs_f64())),
+                            ("p95_s", Value::num(s.p95.as_secs_f64())),
+                            ("min_s", Value::num(s.min.as_secs_f64())),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    };
+    let snapshot = Value::obj(vec![
+        ("zo_ops", stats_json(&b.results[..zo_end])),
+        ("e2e_step", stats_json(&b.results[zo_end..])),
+        (
+            "serve_throughput_jobs_per_sec",
+            Value::Obj(
+                serve_rates
+                    .iter()
+                    .map(|&(w, r)| (format!("workers_{w}"), Value::num(r)))
+                    .collect(),
+            ),
+        ),
+        ("peak_memory", Value::Obj(mem)),
+        (
+            "host",
+            Value::obj(vec![(
+                "parallelism",
+                Value::num(
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64,
+                ),
+            )]),
+        ),
+    ]);
+    if args.flag("json") {
+        println!("{}", json::to_string_pretty(&snapshot));
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, json::to_string_pretty(&snapshot) + "\n")?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

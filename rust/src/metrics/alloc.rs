@@ -1,0 +1,164 @@
+//! Tracked global allocator: live/peak heap accounting for the
+//! `repro` binary, turning the paper's *modeled* memory numbers
+//! (`crate::memory`) into *measured* ones.
+//!
+//! The `repro` binary installs [`TrackedAlloc`] as its
+//! `#[global_allocator]`; every (de)allocation updates process-wide
+//! atomics read by the `repro_mem_live_bytes` / `repro_mem_peak_bytes`
+//! gauges and by `repro train --mem-report`. Library users (and
+//! `cargo test`, which uses the default allocator) simply read zeros —
+//! the counters are only fed when the allocator is installed.
+//!
+//! [`measure_scope`] brackets a region (one training session) and
+//! reports the peak *net new* bytes allocated inside it — i.e. the
+//! high-water mark of (allocations − frees) since scope entry, which
+//! is the quantity the paper's per-method memory model predicts.
+//! Scopes are process-global: allocations from other live threads are
+//! attributed to an open scope, so measure with the serve plane idle.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+/// Depth of open [`measure_scope`] calls (0 = no scope active).
+static SCOPE_DEPTH: AtomicUsize = AtomicUsize::new(0);
+static SCOPE_NET: AtomicI64 = AtomicI64::new(0);
+static SCOPE_PEAK: AtomicI64 = AtomicI64::new(0);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+fn on_alloc(n: usize) {
+    let live = LIVE.fetch_add(n, Ordering::Relaxed) + n;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+    ALLOCS.fetch_add(1, Ordering::Relaxed);
+    if SCOPE_DEPTH.load(Ordering::Relaxed) > 0 {
+        let net = SCOPE_NET.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+        SCOPE_PEAK.fetch_max(net, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+fn on_dealloc(n: usize) {
+    LIVE.fetch_sub(n, Ordering::Relaxed);
+    if SCOPE_DEPTH.load(Ordering::Relaxed) > 0 {
+        SCOPE_NET.fetch_sub(n as i64, Ordering::Relaxed);
+    }
+}
+
+/// A `System`-backed allocator that keeps live/peak byte counts.
+pub struct TrackedAlloc;
+
+// SAFETY: defers all allocation to `System`; the bookkeeping is
+// atomic-only (no allocation, no panics) so it is safe inside the
+// allocator itself.
+unsafe impl GlobalAlloc for TrackedAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = unsafe { System.alloc(layout) };
+        if !p.is_null() {
+            on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = unsafe { System.alloc_zeroed(layout) };
+        if !p.is_null() {
+            on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) };
+        on_dealloc(layout.size());
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = unsafe { System.realloc(ptr, layout, new_size) };
+        if !p.is_null() {
+            on_dealloc(layout.size());
+            on_alloc(new_size);
+        }
+        p
+    }
+}
+
+/// Currently-allocated heap bytes (0 unless [`TrackedAlloc`] is the
+/// global allocator).
+pub fn live_bytes() -> usize {
+    LIVE.load(Ordering::Relaxed)
+}
+
+/// Process-lifetime peak of [`live_bytes`].
+pub fn peak_bytes() -> usize {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// Total number of allocations served (a monotone counter).
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// What a [`measure_scope`] observed.
+#[derive(Debug, Clone, Copy)]
+pub struct ScopeStats {
+    /// High-water mark of net new bytes (allocations − frees) while
+    /// the scope was open.
+    pub peak_net_bytes: usize,
+}
+
+/// Run `f` with scope accounting on and report its peak net
+/// allocation. Nested calls share the outermost scope's counters.
+pub fn measure_scope<R>(f: impl FnOnce() -> R) -> (R, ScopeStats) {
+    if SCOPE_DEPTH.fetch_add(1, Ordering::SeqCst) == 0 {
+        SCOPE_NET.store(0, Ordering::SeqCst);
+        SCOPE_PEAK.store(0, Ordering::SeqCst);
+    }
+    let r = f();
+    let peak = SCOPE_PEAK.load(Ordering::SeqCst).max(0) as usize;
+    SCOPE_DEPTH.fetch_sub(1, Ordering::SeqCst);
+    (r, ScopeStats { peak_net_bytes: peak })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The test binary does not install TrackedAlloc, so exercise the
+    // bookkeeping hooks directly. The counters are process-global, so
+    // these tests serialize on a lock.
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn live_and_peak_track_the_high_water_mark() {
+        let _g = LOCK.lock().unwrap();
+        let before_live = live_bytes();
+        on_alloc(1000);
+        on_alloc(500);
+        on_dealloc(800);
+        assert_eq!(live_bytes(), before_live + 700);
+        assert!(peak_bytes() >= before_live + 1500);
+        on_dealloc(700);
+        assert_eq!(live_bytes(), before_live);
+    }
+
+    #[test]
+    fn scope_reports_net_peak_not_total_traffic() {
+        let _g = LOCK.lock().unwrap();
+        let ((), s) = measure_scope(|| {
+            on_alloc(4096);
+            on_dealloc(4096);
+            on_alloc(1024); // peak net is 4096, not 5120
+            on_dealloc(1024);
+        });
+        assert_eq!(s.peak_net_bytes, 4096);
+    }
+
+    #[test]
+    fn scope_without_allocations_is_zero() {
+        let _g = LOCK.lock().unwrap();
+        let ((), s) = measure_scope(|| {});
+        assert_eq!(s.peak_net_bytes, 0);
+    }
+}

@@ -1,0 +1,410 @@
+//! Std-only metrics registry with Prometheus text-format exposition —
+//! the measurement half of the paper's claims (same no-deps discipline
+//! as `util::json`).
+//!
+//! Three primitives, all lock-free after registration:
+//!
+//! * [`Counter`] — a monotone `AtomicU64` (`_total` series),
+//! * [`Gauge`] — an `f64` stored as atomic bits (sampled values:
+//!   queue depth, live bytes, per-job loss),
+//! * [`Histogram`] — fixed upper-bound buckets + CAS-accumulated sum
+//!   (request latency, per-phase epoch seconds).
+//!
+//! Handles are `Arc`s: instrument sites fetch them from the process
+//! [`global`] registry (a `Mutex<BTreeMap>` — held only during
+//! registration/lookup and [`Registry::render`]) and update with
+//! relaxed atomics. `render()` emits the Prometheus text exposition
+//! format (`# HELP`/`# TYPE`, cumulative `_bucket{le=...}` ending in
+//! `+Inf`, `_sum`/`_count`) served at `GET /metrics`.
+//!
+//! The [`alloc`] submodule holds the tracked global allocator behind
+//! `repro train --mem-report` and the `repro_mem_*` gauges.
+
+pub mod alloc;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Latency buckets in seconds: 100µs … 10s in a 1-2.5-5 ladder. Wide
+/// enough for both sub-millisecond control-plane requests and
+/// multi-second training epochs.
+pub const LATENCY_BUCKETS_S: [f64; 16] = [
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
+    5.0, 10.0,
+];
+
+/// A monotonically-increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Mirror an externally-maintained monotone count (e.g. the event
+    /// bus shed total, authoritative in `BusInner`). `fetch_max` keeps
+    /// the exposed series monotone even under scrape races.
+    pub fn mirror(&self, v: u64) {
+        self.v.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A settable instantaneous value (stored as `f64` bits).
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// A fixed-bucket histogram. Bucket counts are stored per-bucket
+/// (non-cumulative) and summed into the Prometheus cumulative form at
+/// render time.
+#[derive(Debug)]
+pub struct Histogram {
+    uppers: Vec<f64>,
+    buckets: Vec<AtomicU64>, // uppers.len() + 1; last is +Inf
+    count: AtomicU64,
+    sum_bits: AtomicU64, // f64 bits, CAS-accumulated
+}
+
+impl Histogram {
+    fn new(uppers: &[f64]) -> Histogram {
+        debug_assert!(uppers.windows(2).all(|w| w[0] < w[1]), "buckets must ascend");
+        Histogram {
+            uppers: uppers.to_vec(),
+            buckets: (0..=uppers.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let ix = self.uppers.iter().position(|&u| v <= u).unwrap_or(self.uppers.len());
+        self.buckets[ix].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// `(upper_bound, cumulative_count)` pairs ending with `+Inf`
+    /// (`f64::INFINITY`), the shape `_bucket{le=...}` lines are built
+    /// from.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.buckets.len());
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            let le = self.uppers.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((le, acc));
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Child {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Child {
+    fn kind(&self) -> &'static str {
+        match self {
+            Child::Counter(_) => "counter",
+            Child::Gauge(_) => "gauge",
+            Child::Histogram(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Family {
+    help: String,
+    kind: &'static str,
+    /// Children keyed by their rendered label set (`""` for none).
+    children: BTreeMap<String, Child>,
+}
+
+/// A named collection of metric families. One process-wide instance
+/// lives behind [`global`]; separate registries exist only in tests.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Family>>,
+}
+
+/// The process-wide registry rendered at `GET /metrics`.
+pub fn global() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+/// Render a label set as `{k="v",...}` (empty string for no labels).
+fn label_key(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                '\n' => out.push_str("\\n"),
+                _ => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+/// Merge an extra label into an already-rendered label key (used for
+/// histogram `le`).
+fn with_label(key: &str, k: &str, v: &str) -> String {
+    if key.is_empty() {
+        format!("{{{k}=\"{v}\"}}")
+    } else {
+        format!("{},{k}=\"{v}\"}}", &key[..key.len() - 1])
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn child(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        mk: impl FnOnce() -> Child,
+    ) -> Child {
+        debug_assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+                && !name.starts_with(|c: char| c.is_ascii_digit()),
+            "bad metric name {name:?}"
+        );
+        let mut inner = self.inner.lock().unwrap();
+        let fam = inner.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind: "",
+            children: BTreeMap::new(),
+        });
+        let child = fam.children.entry(label_key(labels)).or_insert_with(mk);
+        if fam.kind.is_empty() {
+            fam.kind = child.kind();
+        }
+        assert_eq!(fam.kind, child.kind(), "metric {name} re-registered as a different type");
+        child.clone()
+    }
+
+    /// Register (or fetch) a counter for this name + label set.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.child(name, help, labels, || Child::Counter(Arc::new(Counter::default()))) {
+            Child::Counter(c) => c,
+            _ => unreachable!("metric {name} is not a counter"),
+        }
+    }
+
+    /// Register (or fetch) a gauge for this name + label set.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.child(name, help, labels, || Child::Gauge(Arc::new(Gauge::new()))) {
+            Child::Gauge(g) => g,
+            _ => unreachable!("metric {name} is not a gauge"),
+        }
+    }
+
+    /// Register (or fetch) a histogram with the given finite upper
+    /// bounds (a `+Inf` bucket is always appended).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        uppers: &[f64],
+    ) -> Arc<Histogram> {
+        match self.child(name, help, labels, || Child::Histogram(Arc::new(Histogram::new(uppers))))
+        {
+            Child::Histogram(h) => h,
+            _ => unreachable!("metric {name} is not a histogram"),
+        }
+    }
+
+    /// Names of every registered family (test + catalog support).
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Prometheus text exposition format (version 0.0.4).
+    pub fn render(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in inner.iter() {
+            out.push_str(&format!("# HELP {name} {}\n", fam.help));
+            out.push_str(&format!("# TYPE {name} {}\n", fam.kind));
+            for (key, child) in &fam.children {
+                match child {
+                    Child::Counter(c) => {
+                        out.push_str(&format!("{name}{key} {}\n", c.get()));
+                    }
+                    Child::Gauge(g) => {
+                        out.push_str(&format!("{name}{key} {}\n", fmt_f64(g.get())));
+                    }
+                    Child::Histogram(h) => {
+                        for (le, cum) in h.cumulative() {
+                            let lk = with_label(key, "le", &fmt_f64(le));
+                            out.push_str(&format!("{name}_bucket{lk} {cum}\n"));
+                        }
+                        out.push_str(&format!("{name}_sum{key} {}\n", fmt_f64(h.sum())));
+                        out.push_str(&format!("{name}_count{key} {}\n", h.count()));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("t_requests_total", "requests", &[("route", "GET /x")]);
+        c.inc();
+        c.add(2);
+        assert_eq!(c.get(), 3);
+        // same name + labels yields the same underlying counter
+        r.counter("t_requests_total", "requests", &[("route", "GET /x")]).inc();
+        assert_eq!(c.get(), 4);
+        let g = r.gauge("t_depth", "queue depth", &[]);
+        g.set(7.5);
+        assert_eq!(g.get(), 7.5);
+    }
+
+    #[test]
+    fn histogram_cumulative_ends_at_count() {
+        let r = Registry::new();
+        let h = r.histogram("t_lat_seconds", "latency", &[], &[0.01, 0.1, 1.0]);
+        for v in [0.005, 0.05, 0.05, 0.5, 5.0] {
+            h.observe(v);
+        }
+        let cum = h.cumulative();
+        assert_eq!(cum.len(), 4);
+        assert_eq!(cum[0], (0.01, 1));
+        assert_eq!(cum[1], (0.1, 3));
+        assert_eq!(cum[2], (1.0, 4));
+        assert_eq!(cum[3], (f64::INFINITY, 5));
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 5.605).abs() < 1e-9);
+        // cumulative counts never decrease with le
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn render_is_prometheus_text_format() {
+        let r = Registry::new();
+        r.counter("t_total", "a counter", &[("k", "v")]).add(3);
+        r.gauge("t_gauge", "a gauge", &[]).set(1.5);
+        r.histogram("t_hist", "a histogram", &[], &[0.5]).observe(0.25);
+        let text = r.render();
+        assert!(text.contains("# TYPE t_total counter\n"));
+        assert!(text.contains("t_total{k=\"v\"} 3\n"));
+        assert!(text.contains("# TYPE t_gauge gauge\n"));
+        assert!(text.contains("t_gauge 1.5\n"));
+        assert!(text.contains("# TYPE t_hist histogram\n"));
+        assert!(text.contains("t_hist_bucket{le=\"0.5\"} 1\n"));
+        assert!(text.contains("t_hist_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("t_hist_sum 0.25\n"));
+        assert!(text.contains("t_hist_count 1\n"));
+        // every sample line's family has a preceding # TYPE line
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let fam = line.split(['{', ' ']).next().unwrap();
+            let base = fam
+                .strip_suffix("_bucket")
+                .or_else(|| fam.strip_suffix("_sum"))
+                .or_else(|| fam.strip_suffix("_count"))
+                .unwrap_or(fam);
+            assert!(text.contains(&format!("# TYPE {base} ")), "no TYPE for {line}");
+        }
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(label_key(&[("k", "a\"b\\c\nd")]), "{k=\"a\\\"b\\\\c\\nd\"}");
+        assert_eq!(with_label("{a=\"b\"}", "le", "+Inf"), "{a=\"b\",le=\"+Inf\"}");
+        assert_eq!(with_label("", "le", "1"), "{le=\"1\"}");
+    }
+
+    #[test]
+    fn mirror_is_monotone() {
+        let c = Counter::default();
+        c.mirror(5);
+        c.mirror(3); // stale scrape must not move the series backwards
+        assert_eq!(c.get(), 5);
+        c.mirror(9);
+        assert_eq!(c.get(), 9);
+    }
+}

@@ -304,6 +304,9 @@ impl Dispatcher {
             None => {
                 let stopped = v.get("stopped").as_bool().unwrap_or(false);
                 let best = v.get("best_test_acc").as_f64().unwrap_or(0.0) as f32;
+                // the run's phase breakdown already arrived with each
+                // epoch report (EpochStats.phases) and was merged at
+                // record time, so no timer rides on the done message
                 self.registry.complete(
                     job,
                     JobOutcome { best_test_acc: best, timer: PhaseTimer::new(), stopped },
@@ -413,6 +416,15 @@ impl Dispatcher {
                     n += 1;
                 }
             }
+        }
+        if n > 0 {
+            crate::metrics::global()
+                .counter(
+                    "repro_agent_requeues_total",
+                    "Jobs requeued off vanished agents (lease expiry, deregister, lost-ack reconcile)",
+                    &[],
+                )
+                .add(n as u64);
         }
         n
     }

@@ -106,6 +106,10 @@ struct BusInner {
     subs: BTreeMap<u64, SubState>,
     next_sub: u64,
     closed: bool,
+    /// Lifetime total of events shed from slow subscribers' buffers
+    /// (each shed also marks the victim's `lagged` flag). Surfaced in
+    /// `GET /stats` and mirrored into `repro_sse_lagged_total`.
+    shed_total: u64,
 }
 
 /// Broadcast bus: publishers never block, slow consumers lose events
@@ -130,6 +134,7 @@ impl EventBus {
                 subs: BTreeMap::new(),
                 next_sub: 1,
                 closed: false,
+                shed_total: 0,
             }),
             cv: Condvar::new(),
         }
@@ -144,6 +149,16 @@ impl EventBus {
     /// [`super::registry::JobRegistry::stream_snapshot`].
     pub fn current_seq(&self) -> u64 {
         self.lock().next_seq - 1
+    }
+
+    /// Number of live subscriptions (SSE streams + in-process watchers).
+    pub fn subscriber_count(&self) -> usize {
+        self.lock().subs.len()
+    }
+
+    /// Lifetime total of events shed from slow subscribers (monotone).
+    pub fn lagged_total(&self) -> u64 {
+        self.lock().shed_total
     }
 
     fn publish(&self, job: u64, kind: &'static str, extra: Vec<(&str, Value)>) {
@@ -165,6 +180,7 @@ impl EventBus {
             while st.ring.len() > RING_CAP {
                 st.ring.pop_front();
             }
+            let mut shed = 0u64;
             for sub in st.subs.values_mut() {
                 if sub.job.is_some_and(|j| j != job) {
                     continue;
@@ -174,9 +190,11 @@ impl EventBus {
                 if sub.buf.len() >= sub.cap {
                     sub.buf.pop_front();
                     sub.lagged = true;
+                    shed += 1;
                 }
                 sub.buf.push_back(ev.clone());
             }
+            st.shed_total += shed;
         }
         self.cv.notify_all();
     }
@@ -570,6 +588,24 @@ mod tests {
         // back to normal delivery afterwards
         bus.publish_epoch(1, &stats(10));
         assert_eq!(expect_event(sub.recv(WAIT)).seq, 11);
+    }
+
+    #[test]
+    fn shed_total_and_subscriber_count_introspection() {
+        let bus = Arc::new(EventBus::new());
+        assert_eq!(bus.subscriber_count(), 0);
+        assert_eq!(bus.lagged_total(), 0);
+        let slow = bus.subscribe(None, 3);
+        assert_eq!(bus.subscriber_count(), 1);
+        for i in 0..10 {
+            bus.publish_epoch(1, &stats(i));
+        }
+        // cap 3, 10 published: 7 shed from the slow subscriber
+        assert_eq!(bus.lagged_total(), 7);
+        drop(slow);
+        assert_eq!(bus.subscriber_count(), 0);
+        // the lifetime total survives the subscriber's departure
+        assert_eq!(bus.lagged_total(), 7);
     }
 
     #[test]

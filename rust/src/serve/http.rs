@@ -12,6 +12,7 @@
 //! |------------------------|------------------------------------------|
 //! | GET  /healthz          | liveness probe                           |
 //! | GET  /stats            | aggregate `ServerStats`                  |
+//! | GET  /metrics          | Prometheus text exposition (non-JSON)    |
 //! | GET  /jobs             | job summaries, newest first              |
 //! | POST /jobs             | submit a `JobSpec` (429 full, 503 closed)|
 //! | GET  /jobs/{id}        | full status + history (`?history_since=`)|
@@ -258,6 +259,11 @@ impl Server {
         let text = body.map(json::to_string).unwrap_or_default();
         let (path, query) = split_query(path);
         let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+        if method == "GET" && segs == ["metrics"] {
+            // text/plain on the wire; over this seam the exposition
+            // rides as a JSON string
+            return (200, Value::str(self.shared.render_metrics()));
+        }
         if is_stream_route(method, &segs) {
             // the SSE endpoints write incrementally and never fit the
             // one-shot (status, body) seam
@@ -286,6 +292,15 @@ impl Gateway {
         };
         let (path, query) = split_query(&req.path);
         let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+        // Prometheus exposition is the one non-JSON one-shot response;
+        // it gets its own seam so the JSON router stays JSON-only
+        if let ("GET", ["metrics"]) = (req.method.as_str(), segs.as_slice()) {
+            let t0 = Instant::now();
+            let text = self.render_metrics();
+            observe_http("GET /metrics", 200, t0.elapsed());
+            let _ = write_text(stream, 200, &text);
+            return;
+        }
         if is_stream_route(&req.method, &segs) {
             // long-lived SSE response: hand the socket to the stream
             // writer; it owns the connection until the client leaves,
@@ -305,6 +320,12 @@ impl Gateway {
                 );
                 return;
             }
+            // streams are counted but not latency-timed: their
+            // "duration" is the watch lifetime, not a response time
+            let label = if segs.len() == 1 { "GET /events" } else { "GET /jobs/{}/events" };
+            crate::metrics::global()
+                .counter(HTTP_REQS_NAME, HTTP_REQS_HELP, &[("route", label), ("code", "200")])
+                .inc();
             match segs.as_slice() {
                 ["events"] => self.stream_firehose(stream, &query),
                 ["jobs", id, "events"] => self.stream_job_events(stream, id),
@@ -313,7 +334,9 @@ impl Gateway {
             self.sse_active.fetch_sub(1, Ordering::SeqCst);
             return;
         }
+        let t0 = Instant::now();
         let (status, body, shutdown) = self.route(&req.method, &segs, &query, &req.body);
+        observe_http(&http_route_label(&req.method, &segs, status), status, t0.elapsed());
         if shutdown {
             // close the queue BEFORE acknowledging: any submission
             // that observes the shutdown gets a truthful 503 instead
@@ -324,6 +347,49 @@ impl Gateway {
         if shutdown {
             self.wake();
         }
+    }
+
+    /// Sample the scrape-time gauges (queue depth, jobs by state, SSE
+    /// streams, event bus, agents, heap) into the process registry and
+    /// render the Prometheus text exposition (`GET /metrics`). The
+    /// counters and histograms fed at record time (requests, epochs,
+    /// phases, journal appends, requeues) come along with the render.
+    fn render_metrics(&self) -> String {
+        use crate::metrics::{alloc, global};
+        let m = global();
+        m.gauge("repro_queue_depth", "Jobs waiting in the queue", &[])
+            .set(self.queue.len() as f64);
+        for (state, n) in self.registry.jobs_by_state() {
+            m.gauge("repro_jobs", "Jobs in the registry by state", &[("state", state.as_str())])
+                .set(n as f64);
+        }
+        m.gauge("repro_sse_streams_active", "Open SSE event streams", &[])
+            .set(self.sse_active.load(Ordering::SeqCst) as f64);
+        let events = self.registry.events();
+        m.gauge("repro_events_seq", "Current event-bus sequence number", &[])
+            .set(events.current_seq() as f64);
+        m.gauge("repro_event_subscribers", "Live event-bus subscribers", &[])
+            .set(events.subscriber_count() as f64);
+        m.counter(
+            "repro_sse_lagged_total",
+            "Events shed from slow event-stream subscribers",
+            &[],
+        )
+        .mirror(events.lagged_total());
+        if let Some(d) = &self.dispatcher {
+            m.gauge("repro_agents", "Registered cluster agents", &[]).set(d.agent_count() as f64);
+        }
+        m.gauge(
+            "repro_mem_live_bytes",
+            "Live heap bytes (tracked allocator; 0 outside the repro binary)",
+            &[],
+        )
+        .set(alloc::live_bytes() as f64);
+        m.gauge("repro_mem_peak_bytes", "Peak live heap bytes since process start", &[])
+            .set(alloc::peak_bytes() as f64);
+        m.counter("repro_allocs_total", "Heap allocations served by the tracked allocator", &[])
+            .mirror(alloc::alloc_count());
+        m.render()
     }
 
     /// Make the shutdown observable (queue closed, running jobs
@@ -810,6 +876,77 @@ fn write_json(stream: &mut TcpStream, status: u16, v: &Value) -> std::io::Result
         body.len()
     );
     stream.write_all(resp.as_bytes())
+}
+
+/// Plain-text response writer for the Prometheus exposition — the one
+/// route that is not JSON. `version=0.0.4` is the text-format marker
+/// scrapers key on.
+fn write_text(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    let resp = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        status_text(status),
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+const HTTP_REQS_NAME: &str = "repro_http_requests_total";
+const HTTP_REQS_HELP: &str = "HTTP requests served, by route template and status code";
+
+/// Record one served request into the process metrics: a latency
+/// histogram per route template and a request counter per
+/// (route, code).
+fn observe_http(route: &str, status: u16, elapsed: Duration) {
+    let m = crate::metrics::global();
+    m.histogram(
+        "repro_http_request_duration_seconds",
+        "HTTP request service time by route template",
+        &[("route", route)],
+        &crate::metrics::LATENCY_BUCKETS_S,
+    )
+    .observe(elapsed.as_secs_f64());
+    let code = status.to_string();
+    m.counter(HTTP_REQS_NAME, HTTP_REQS_HELP, &[("route", route), ("code", &code)]).inc();
+}
+
+/// Collapse a request path to a bounded route template so metric
+/// cardinality can't grow with job/agent ids: dynamic segments (the
+/// ones routes match with a binding) become `{}`, and anything that
+/// 404'd is folded into a single "other" label.
+fn http_route_label(method: &str, segs: &[&str], status: u16) -> String {
+    if status == 404 {
+        return "other".to_string();
+    }
+    let mut out = String::from(method);
+    for s in segs {
+        out.push('/');
+        // Ids are the only free-form segments in the route table;
+        // fixed words stay literal so routes remain tell-apart-able.
+        let fixed = matches!(
+            *s,
+            "jobs"
+                | "stats"
+                | "healthz"
+                | "shutdown"
+                | "cancel"
+                | "events"
+                | "metrics"
+                | "cluster"
+                | "register"
+                | "agents"
+                | "poll"
+                | "deregister"
+                | "epoch"
+                | "done"
+        );
+        out.push_str(if fixed { s } else { "{}" });
+    }
+    // "GET /jobs" style: method, space, then the path.
+    if let Some(rest) = out.strip_prefix(method) {
+        format!("{method} {rest}")
+    } else {
+        out
+    }
 }
 
 /// Tiny blocking HTTP/1.1 client for `repro submit|jobs|job`, the

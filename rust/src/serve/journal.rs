@@ -91,6 +91,9 @@ impl Journal {
         if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
             eprintln!("serve: failed to append to job journal {}", self.path.display());
         }
+        crate::metrics::global()
+            .counter("repro_journal_appends_total", "Lines appended to the job journal", &[])
+            .inc();
     }
 
     /// Rewrite the journal as the given consolidated `job` records

@@ -27,9 +27,15 @@ use crate::coordinator::control::StopFlag;
 use crate::coordinator::metrics::EpochStats;
 use crate::telemetry::{PhaseTimer, ALL_PHASES};
 use crate::util::json::Value;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
-use std::time::{Instant, SystemTime, UNIX_EPOCH};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Sliding window over which `GET /stats` computes `epochs_per_sec`.
+/// (The old uptime-since-boot quotient decayed toward zero after any
+/// idle period and made a busy server look slower the longer it
+/// lived.)
+const EPOCH_RATE_WINDOW: Duration = Duration::from_secs(60);
 
 /// Everything the worker hands back when a job leaves the Running state.
 pub struct JobOutcome {
@@ -117,6 +123,29 @@ impl JobRecord {
             ),
         );
         obj.insert("history_total".into(), Value::num(self.epochs.len() as f64));
+        // Fig.-7 per-job breakdown, summed from the per-epoch deltas —
+        // identical for local-worker and remote-agent runs, because
+        // both arrive through the same EpochStats wire shape
+        let mut per_job = PhaseTimer::new();
+        for e in &self.epochs {
+            for d in &e.phases {
+                per_job.add_delta(d);
+            }
+        }
+        if per_job.grand_total() > Duration::ZERO {
+            obj.insert(
+                "phase_seconds".into(),
+                Value::Obj(
+                    ALL_PHASES
+                        .iter()
+                        .filter(|&&p| per_job.total(p) > Duration::ZERO)
+                        .map(|&p| {
+                            (p.name().to_string(), Value::num(per_job.total(p).as_secs_f64()))
+                        })
+                        .collect(),
+                ),
+            );
+        }
         if let Some(w) = self.worker {
             obj.insert("worker".into(), Value::num(w as f64));
         }
@@ -171,6 +200,9 @@ struct Inner {
     next_id: u64,
     total_epochs: u64,
     timer: PhaseTimer,
+    /// Completion instants of recent epochs, pruned to
+    /// [`EPOCH_RATE_WINDOW`] — the sliding-window `epochs_per_sec`.
+    epoch_marks: VecDeque<Instant>,
 }
 
 /// Thread-shared job table; every method takes `&self`.
@@ -214,6 +246,7 @@ impl JobRegistry {
                 next_id: 1,
                 total_epochs: 0,
                 timer: PhaseTimer::new(),
+                epoch_marks: VecDeque::new(),
             }),
         }
     }
@@ -480,7 +513,7 @@ impl JobRegistry {
     }
 
     fn record_epoch_inner(&self, id: u64, from_agent: Option<u64>, stats: EpochStats) {
-        let ev = {
+        let (ev, steps_per_epoch) = {
             let mut st = self.lock();
             let Some(job) = st.jobs.get_mut(&id) else { return };
             if job.state != JobState::Running {
@@ -494,15 +527,35 @@ impl JobRegistry {
             job.best_test_acc = job.best_test_acc.max(stats.test_acc);
             self.events.publish_epoch(id, &stats);
             job.epochs.push(stats.clone());
+            let steps = job.spec.config.train_n.div_ceil(job.spec.config.batch.max(1));
             st.total_epochs += 1;
-            self.journal.is_some().then(|| {
-                Value::obj(vec![
-                    ("event", Value::str("epoch")),
-                    ("id", Value::num(id as f64)),
-                    ("stats", stats.to_json()),
-                ])
-            })
+            // phase deltas roll into the aggregate timer at record time
+            // — one path for local workers and remote agents alike
+            // (`complete` skips its whole-run merge for such jobs)
+            for d in &stats.phases {
+                st.timer.add_delta(d);
+            }
+            let now = Instant::now();
+            st.epoch_marks.push_back(now);
+            while st
+                .epoch_marks
+                .front()
+                .is_some_and(|&t| now.duration_since(t) > EPOCH_RATE_WINDOW)
+            {
+                st.epoch_marks.pop_front();
+            }
+            (
+                self.journal.is_some().then(|| {
+                    Value::obj(vec![
+                        ("event", Value::str("epoch")),
+                        ("id", Value::num(id as f64)),
+                        ("stats", stats.to_json()),
+                    ])
+                }),
+                steps,
+            )
         };
+        observe_epoch_metrics(id, steps_per_epoch, &stats);
         self.append_event(ev);
     }
 
@@ -511,8 +564,11 @@ impl JobRegistry {
     pub fn complete(&self, id: u64, outcome: JobOutcome) {
         let ev = {
             let mut st = self.lock();
-            st.timer.merge(&outcome.timer);
             let Some(job) = st.jobs.get_mut(&id) else { return };
+            // epochs that carried phase deltas already rolled them into
+            // the aggregate timer at record time; merging the whole-run
+            // timer on top would double-count every phase
+            let phases_recorded = job.epochs.iter().any(|e| !e.phases.is_empty());
             job.state = if outcome.stopped {
                 if job.interrupted {
                     JobState::Interrupted
@@ -525,7 +581,11 @@ impl JobRegistry {
             job.best_test_acc = job.best_test_acc.max(outcome.best_test_acc);
             job.run_seconds = job.started.map_or(0.0, |t| t.elapsed().as_secs_f64());
             self.events.publish_state(id, job.state.as_str(), None);
-            self.journal.is_some().then(|| terminal_event(job))
+            let ev = self.journal.is_some().then(|| terminal_event(job));
+            if !phases_recorded {
+                st.timer.merge(&outcome.timer);
+            }
+            ev
         };
         self.append_event(ev);
     }
@@ -642,6 +702,15 @@ impl JobRegistry {
                 .map(|&p| (p.name().to_string(), Value::num(st.timer.total(p).as_secs_f64())))
                 .collect(),
         );
+        // epochs/sec over the sliding window (young servers divide by
+        // their uptime so the early rate isn't underestimated)
+        let now = Instant::now();
+        let in_window = st
+            .epoch_marks
+            .iter()
+            .filter(|&&t| now.duration_since(t) <= EPOCH_RATE_WINDOW)
+            .count();
+        let window = EPOCH_RATE_WINDOW.as_secs_f64().min(uptime).max(1e-9);
         Value::obj(vec![
             ("uptime_seconds", Value::num(uptime)),
             ("workers", Value::num(workers as f64)),
@@ -654,9 +723,76 @@ impl JobRegistry {
             ("jobs_cancelled", Value::num(counts[4] as f64)),
             ("jobs_interrupted", Value::num(counts[5] as f64)),
             ("epochs_total", Value::num(st.total_epochs as f64)),
-            ("epochs_per_sec", Value::num(st.total_epochs as f64 / uptime.max(1e-9))),
+            ("epochs_per_sec", Value::num(in_window as f64 / window)),
+            (
+                "epochs_per_sec_window_seconds",
+                Value::num(EPOCH_RATE_WINDOW.as_secs_f64().min(uptime)),
+            ),
+            ("events_seq", Value::num(self.events.current_seq() as f64)),
+            ("events_subscribers", Value::num(self.events.subscriber_count() as f64)),
+            ("events_lagged_total", Value::num(self.events.lagged_total() as f64)),
             ("phase_seconds", phases),
         ])
+    }
+
+    /// `(state, count)` for every job state — the scrape-time sample
+    /// behind the `repro_jobs{state=...}` gauge.
+    pub fn jobs_by_state(&self) -> [(JobState, usize); 6] {
+        let st = self.lock();
+        let mut out = [
+            (JobState::Queued, 0),
+            (JobState::Running, 0),
+            (JobState::Done, 0),
+            (JobState::Failed, 0),
+            (JobState::Cancelled, 0),
+            (JobState::Interrupted, 0),
+        ];
+        for j in st.jobs.values() {
+            if let Some(slot) = out.iter_mut().find(|(s, _)| *s == j.state) {
+                slot.1 += 1;
+            }
+        }
+        out
+    }
+}
+
+/// Feed the process metrics registry from one recorded epoch. Called
+/// outside the registry lock; histograms and gauges are cheap atomics.
+fn observe_epoch_metrics(id: u64, steps_per_epoch: usize, stats: &EpochStats) {
+    use crate::metrics::{global, LATENCY_BUCKETS_S};
+    let m = global();
+    for d in &stats.phases {
+        m.histogram(
+            "repro_phase_epoch_seconds",
+            "Seconds spent per training phase per epoch (the paper's Fig. 7 slices)",
+            &[("phase", d.phase.name())],
+            &LATENCY_BUCKETS_S,
+        )
+        .observe(d.seconds);
+    }
+    m.histogram(
+        "repro_epoch_seconds",
+        "Wall-clock seconds per completed training epoch",
+        &[],
+        &LATENCY_BUCKETS_S,
+    )
+    .observe(stats.seconds);
+    m.counter("repro_epochs_total", "Training epochs recorded by this process", &[]).inc();
+    let job = id.to_string();
+    let lbl = [("job", job.as_str())];
+    m.gauge("repro_job_train_loss", "Last reported training loss per job", &lbl)
+        .set(stats.train_loss as f64);
+    m.gauge("repro_job_train_acc", "Last reported training accuracy per job", &lbl)
+        .set(stats.train_acc as f64);
+    m.gauge("repro_job_test_acc", "Last reported test accuracy per job", &lbl)
+        .set(stats.test_acc as f64);
+    if stats.seconds > 0.0 {
+        m.gauge(
+            "repro_job_steps_per_sec",
+            "Training steps per second per job (batches/epoch over epoch seconds)",
+            &lbl,
+        )
+        .set(steps_per_epoch as f64 / stats.seconds);
     }
 }
 
@@ -825,8 +961,77 @@ mod tests {
         assert_eq!(s.get("queue_depth").as_usize(), Some(1));
         assert_eq!(s.get("workers").as_usize(), Some(4));
         assert_eq!(s.get("epochs_total").as_usize(), Some(2));
+        // sliding-window rate: 2 fresh epochs over a tiny uptime is a
+        // positive rate (the old uptime quotient also was, but the
+        // window fields must be present and sane)
+        assert!(s.get("epochs_per_sec").as_f64().unwrap() > 0.0);
+        assert!(s.get("epochs_per_sec_window_seconds").as_f64().unwrap() <= 60.0);
+        // event-bus introspection: 2 epoch publishes + 1 state change
+        assert_eq!(s.get("events_seq").as_usize(), Some(3));
+        assert_eq!(s.get("events_subscribers").as_usize(), Some(0));
+        assert_eq!(s.get("events_lagged_total").as_usize(), Some(0));
         // valid JSON end to end
         let text = crate::util::json::to_string(&s);
         crate::util::json::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn phase_deltas_merge_once_and_surface_per_job() {
+        use crate::telemetry::PhaseDelta;
+        let r = JobRegistry::new();
+        let id = r.add(spec());
+        r.claim(id, 0).unwrap();
+        for epoch in 0..2 {
+            r.record_epoch(
+                id,
+                EpochStats {
+                    epoch,
+                    phases: vec![
+                        PhaseDelta { phase: Phase::Forward, seconds: 0.5, calls: 10 },
+                        PhaseDelta { phase: Phase::ZoUpdate, seconds: 0.25, calls: 5 },
+                    ],
+                    ..Default::default()
+                },
+            );
+        }
+        // the worker's whole-run timer covers the same time; it must
+        // NOT be merged on top of the per-epoch deltas
+        let mut timer = PhaseTimer::new();
+        timer.add(Phase::Forward, Duration::from_secs(1));
+        timer.add(Phase::ZoUpdate, Duration::from_millis(500));
+        r.complete(id, JobOutcome { best_test_acc: 0.5, timer, stopped: false });
+
+        let s = r.stats_json(0, 1);
+        let fwd = s.get("phase_seconds").get("Forward").as_f64().unwrap();
+        assert!((fwd - 1.0).abs() < 1e-6, "Forward double-counted: {fwd}");
+
+        // per-job Fig.-7 breakdown in the job detail
+        let j = r.job_json(id).unwrap();
+        let per_job = j.get("phase_seconds");
+        assert!((per_job.get("Forward").as_f64().unwrap() - 1.0).abs() < 1e-6);
+        assert!((per_job.get("ZO Update").as_f64().unwrap() - 0.5).abs() < 1e-6);
+
+        // a job with NO phase-carrying epochs still lands its run timer
+        // in the aggregate (the legacy path)
+        let id2 = r.add(spec());
+        r.claim(id2, 0).unwrap();
+        let mut t2 = PhaseTimer::new();
+        t2.add(Phase::Eval, Duration::from_millis(250));
+        r.complete(id2, JobOutcome { best_test_acc: 0.0, timer: t2, stopped: false });
+        let s = r.stats_json(0, 1);
+        assert!((s.get("phase_seconds").get("Eval").as_f64().unwrap() - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jobs_by_state_counts() {
+        let r = JobRegistry::new();
+        let a = r.add(spec());
+        let _b = r.add(spec());
+        r.claim(a, 0).unwrap();
+        let counts: BTreeMap<_, _> =
+            r.jobs_by_state().into_iter().map(|(s, n)| (s.as_str(), n)).collect();
+        assert_eq!(counts["queued"], 1);
+        assert_eq!(counts["running"], 1);
+        assert_eq!(counts["done"], 0);
     }
 }

@@ -48,9 +48,26 @@ impl Phase {
         }
     }
 
+    /// Inverse of [`Phase::name`] — how phases come back off the wire
+    /// (`/cluster/epoch` payloads, journal replay).
+    pub fn parse(name: &str) -> Option<Phase> {
+        ALL_PHASES.into_iter().find(|p| p.name() == name)
+    }
+
     fn index(&self) -> usize {
         ALL_PHASES.iter().position(|p| p == self).unwrap()
     }
+}
+
+/// One phase's share of a bounded window (an epoch): seconds spent and
+/// number of timed calls. This is the unit serialized into
+/// `EpochStats` so remote agents ship the same Fig.-7 breakdown the
+/// local workers keep in memory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseDelta {
+    pub phase: Phase,
+    pub seconds: f64,
+    pub calls: u64,
 }
 
 /// Accumulates time per phase across a run.
@@ -81,6 +98,38 @@ impl PhaseTimer {
 
     pub fn total(&self, phase: Phase) -> Duration {
         self.totals[phase.index()]
+    }
+
+    /// Number of timed calls recorded for a phase.
+    pub fn count(&self, phase: Phase) -> u64 {
+        self.counts[phase.index()]
+    }
+
+    /// Per-phase deltas accumulated since `mark` (a clone of this
+    /// timer taken earlier, e.g. at epoch start). Phases with no new
+    /// time are omitted.
+    pub fn deltas_since(&self, mark: &PhaseTimer) -> Vec<PhaseDelta> {
+        ALL_PHASES
+            .iter()
+            .filter_map(|&p| {
+                let i = p.index();
+                let d = self.totals[i].saturating_sub(mark.totals[i]);
+                let calls = self.counts[i].saturating_sub(mark.counts[i]);
+                (d > Duration::ZERO || calls > 0).then(|| PhaseDelta {
+                    phase: p,
+                    seconds: d.as_secs_f64(),
+                    calls,
+                })
+            })
+            .collect()
+    }
+
+    /// Merge a wire-format delta back into the timer (registry side of
+    /// [`PhaseTimer::deltas_since`]).
+    pub fn add_delta(&mut self, d: &PhaseDelta) {
+        let i = d.phase.index();
+        self.totals[i] += Duration::from_secs_f64(d.seconds.max(0.0));
+        self.counts[i] += d.calls;
     }
 
     pub fn grand_total(&self) -> Duration {
@@ -167,6 +216,39 @@ mod tests {
         assert_eq!(t.total(Phase::BpBackward), Duration::ZERO);
         assert_eq!(t.total(Phase::BpStep), Duration::from_millis(10));
         assert!(t.report("x").contains("BP Step"));
+    }
+
+    #[test]
+    fn parse_inverts_name() {
+        for p in ALL_PHASES {
+            assert_eq!(Phase::parse(p.name()), Some(p));
+        }
+        assert_eq!(Phase::parse("NotAPhase"), None);
+    }
+
+    #[test]
+    fn deltas_roundtrip_through_add_delta() {
+        let mut t = PhaseTimer::new();
+        t.add(Phase::Forward, Duration::from_millis(100));
+        let mark = t.clone();
+        t.add(Phase::Forward, Duration::from_millis(40));
+        t.add(Phase::ZoUpdate, Duration::from_millis(10));
+        let deltas = t.deltas_since(&mark);
+        assert_eq!(deltas.len(), 2, "only phases with new time appear: {deltas:?}");
+        assert_eq!(deltas[0].phase, Phase::Forward);
+        assert!((deltas[0].seconds - 0.04).abs() < 1e-9);
+        assert_eq!(deltas[0].calls, 1);
+
+        let mut merged = mark.clone();
+        for d in &deltas {
+            merged.add_delta(d);
+        }
+        // seconds go through f64 on the wire: equal to nanosecond noise
+        for p in [Phase::Forward, Phase::ZoUpdate] {
+            let err = (merged.total(p).as_secs_f64() - t.total(p).as_secs_f64()).abs();
+            assert!(err < 1e-6, "{p:?} drifted by {err}");
+        }
+        assert_eq!(merged.count(Phase::Forward), t.count(Phase::Forward));
     }
 
     #[test]

@@ -54,6 +54,13 @@ impl Bencher {
         }
     }
 
+    /// A bencher that ignores argv — for embedding in a binary whose
+    /// positional args are commands, not bench filters (`repro bench`
+    /// would otherwise filter on its own subcommand word).
+    pub fn unfiltered() -> Self {
+        Bencher { filter: None, ..Bencher::new() }
+    }
+
     /// Time `f`, which performs ONE iteration of the workload.
     pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Option<&Stats> {
         if let Some(filt) = &self.filter {

@@ -1,0 +1,264 @@
+//! Metrics e2e: scrape `GET /metrics` off a live cluster coordinator
+//! (remote-agent job in flight) and hold the exposition to the
+//! Prometheus text-format contract — `# TYPE` coverage for every
+//! sample, counter monotonicity across scrapes, histogram bucket
+//! arithmetic — plus the cluster-seam observability this PR wires up:
+//! per-phase histograms fed by a REMOTE job's epoch reports, the
+//! per-job `phase_seconds` breakdown, and the sliding-window /
+//! event-bus fields in `GET /stats`.
+
+use elasticzo::serve::{
+    request, Agent, AgentHandle, AgentOptions, ClusterOptions, ServeOptions, Server,
+};
+use elasticzo::util::json::Value;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const LONG: Duration = Duration::from_secs(300);
+
+fn start_coordinator() -> (String, JoinHandle<()>) {
+    let server = Server::bind(&ServeOptions {
+        port: 0,
+        workers: 0, // pure coordinator: the job MUST run on the agent
+        queue_cap: 8,
+        journal: None,
+        cluster: Some(ClusterOptions { lease_ms: 10_000 }),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || server.run().unwrap());
+    (addr, h)
+}
+
+fn spawn_agent(addr: &str) -> AgentHandle {
+    Agent::spawn(AgentOptions {
+        coordinator: addr.to_string(),
+        capacity: 1,
+        name: "metrics-edge".to_string(),
+        poll_ms: 50,
+        max_poll_failures: 40,
+    })
+    .unwrap()
+}
+
+fn submit(addr: &str, spec: &str) -> u64 {
+    let body = elasticzo::util::json::parse(spec).unwrap();
+    let (status, v) = request(addr, "POST", "/jobs", Some(&body)).unwrap();
+    assert_eq!(status, 200, "submit failed: {}", elasticzo::util::json::to_string(&v));
+    v.get("id").as_f64().unwrap() as u64
+}
+
+fn poll_until(addr: &str, id: u64, pred: impl Fn(&Value) -> bool, what: &str) -> Value {
+    let t0 = Instant::now();
+    loop {
+        let (status, v) = request(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+        assert_eq!(status, 200, "job {id} must exist");
+        if pred(&v) {
+            return v;
+        }
+        assert!(t0.elapsed() < LONG, "timed out waiting for {what} on job {id}");
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+/// Raw HTTP scrape: the shared JSON client refuses non-JSON bodies, and
+/// the exposition is text/plain by design.
+fn scrape(addr: &str) -> (String, String) {
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: repro\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8(buf).expect("exposition must be UTF-8");
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    (head.to_string(), body.to_string())
+}
+
+fn parse_value(s: &str) -> f64 {
+    match s {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        other => other.parse().unwrap_or_else(|_| panic!("bad sample value {other:?}")),
+    }
+}
+
+/// `(family -> declared type, series -> value)` from one exposition.
+fn parse_exposition(body: &str) -> (BTreeMap<String, String>, BTreeMap<String, f64>) {
+    let mut types = BTreeMap::new();
+    let mut series = BTreeMap::new();
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE line has a name");
+            let kind = it.next().expect("TYPE line has a kind");
+            types.insert(name.to_string(), kind.to_string());
+        } else if !line.starts_with('#') && !line.is_empty() {
+            let (name, value) = line.rsplit_once(' ').expect("sample is `name value`");
+            series.insert(name.to_string(), parse_value(value));
+        }
+    }
+    (types, series)
+}
+
+/// Family a sample belongs to (histogram samples carry suffixes).
+fn family_of(series: &str) -> String {
+    let name = series.split('{').next().unwrap();
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            return base.to_string();
+        }
+    }
+    name.to_string()
+}
+
+/// Strip the `le` label off a `_bucket` series so it can be matched
+/// with its `_count` line (`le` is always rendered last).
+fn without_le(series: &str) -> String {
+    let open = series.find('{').unwrap();
+    let labels = &series[open + 1..series.len() - 1];
+    let kept: Vec<&str> =
+        labels.split(',').filter(|kv| !kv.starts_with("le=")).collect();
+    if kept.is_empty() {
+        series[..open].to_string()
+    } else {
+        format!("{}{{{}}}", &series[..open], kept.join(","))
+    }
+}
+
+#[test]
+fn metrics_exposition_is_conformant_and_covers_a_remote_job() {
+    let (addr, h) = start_coordinator();
+    let agent = spawn_agent(&addr);
+
+    let id = submit(
+        &addr,
+        r#"{"method": "cls1", "precision": "fp32", "engine": "native",
+            "epochs": 2, "batch": 16, "train_n": 128, "test_n": 32, "seed": 11}"#,
+    );
+    // first scrape while the job is (very likely) still live — every
+    // counter here must only ever grow by the second scrape
+    let (head1, body1) = scrape(&addr);
+    assert!(head1.starts_with("HTTP/1.1 200"), "scrape status: {head1}");
+    assert!(
+        head1.contains("text/plain; version=0.0.4"),
+        "exposition content type: {head1}"
+    );
+    let (_, series1) = parse_exposition(&body1);
+
+    let done = poll_until(&addr, id, |v| v.get("state").as_str() == Some("done"), "job done");
+
+    // ---- satellite: the REMOTE job's Fig.-7 breakdown reached the
+    // coordinator through the epoch wire ----
+    let phases = done.get("phase_seconds");
+    assert!(phases.as_obj().is_some(), "remote job detail carries phase_seconds: {done:?}");
+    assert!(
+        phases.get("Forward").as_f64().unwrap_or(0.0) > 0.0,
+        "Forward phase time from the remote agent"
+    );
+    assert_eq!(done.get("agent").as_usize(), Some(agent.id() as usize), "ran remotely");
+
+    let (_, body2) = scrape(&addr);
+    let (types2, series2) = parse_exposition(&body2);
+
+    // ---- presence: everything this PR instruments is exposed ----
+    for name in [
+        "repro_http_requests_total",
+        "repro_http_request_duration_seconds",
+        "repro_epochs_total",
+        "repro_epoch_seconds",
+        "repro_phase_epoch_seconds",
+        "repro_job_train_loss",
+        "repro_job_train_acc",
+        "repro_job_test_acc",
+        "repro_queue_depth",
+        "repro_jobs",
+        "repro_agents",
+        "repro_sse_streams_active",
+        "repro_sse_lagged_total",
+        "repro_events_seq",
+        "repro_event_subscribers",
+        "repro_mem_live_bytes",
+        "repro_mem_peak_bytes",
+        "repro_allocs_total",
+    ] {
+        assert!(types2.contains_key(name), "missing # TYPE for {name}\n{body2}");
+    }
+    // the remote job's per-phase histogram has real observations
+    assert!(
+        series2
+            .get("repro_phase_epoch_seconds_count{phase=\"Forward\"}")
+            .is_some_and(|&v| v >= 2.0),
+        "two epochs of Forward observations from the remote agent"
+    );
+    assert!(
+        series2.get("repro_epochs_total").is_some_and(|&v| v >= 2.0),
+        "both epochs counted"
+    );
+
+    // ---- conformance: every sample's family declares a TYPE ----
+    for name in series2.keys() {
+        let fam = family_of(name);
+        assert!(types2.contains_key(&fam), "sample {name} has no # TYPE {fam}");
+    }
+
+    // ---- conformance: counters are monotone across the two scrapes ----
+    for (name, v1) in &series1 {
+        let fam = family_of(name);
+        if types2.get(&fam).map(String::as_str) == Some("counter") {
+            if let Some(v2) = series2.get(name) {
+                assert!(v2 >= v1, "counter {name} went backwards: {v1} -> {v2}");
+            }
+        }
+    }
+
+    // ---- conformance: histogram bucket arithmetic ----
+    // group buckets per series (label set minus `le`), then check the
+    // cumulative counts never decrease in NUMERIC le order (the map
+    // iterates lexicographically, where "10" < "2.5" and "+Inf" sorts
+    // first — that order proves nothing)
+    let mut buckets: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    for (name, &v) in &series2 {
+        if !name.contains("_bucket{") {
+            continue;
+        }
+        let le = name
+            .split("le=\"")
+            .nth(1)
+            .and_then(|s| s.split('"').next())
+            .expect("bucket sample has an le label");
+        buckets.entry(without_le(name)).or_default().push((parse_value(le), v));
+    }
+    assert!(!buckets.is_empty(), "at least one histogram series rendered");
+    for (key, les) in &mut buckets {
+        les.sort_by(|a, b| a.0.total_cmp(&b.0));
+        assert!(
+            les.windows(2).all(|w| w[0].1 <= w[1].1),
+            "cumulative bucket counts decreased in {key}: {les:?}"
+        );
+        let (last_le, inf_cum) = *les.last().unwrap();
+        assert_eq!(last_le, f64::INFINITY, "{key} is missing its +Inf bucket");
+        let count_series = key.replacen("_bucket", "_count", 1);
+        assert_eq!(
+            series2.get(&count_series),
+            Some(&inf_cum),
+            "+Inf bucket must equal _count for {key}"
+        );
+    }
+
+    // ---- satellite: /stats sliding-window rate + event-bus fields ----
+    let (status, s) = request(&addr, "GET", "/stats", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(s.get("epochs_per_sec").as_f64().unwrap() > 0.0, "fresh epochs in the window");
+    let w = s.get("epochs_per_sec_window_seconds").as_f64().unwrap();
+    assert!(w > 0.0 && w <= 60.0, "window clamps to min(60s, uptime): {w}");
+    assert!(s.get("events_seq").as_usize().unwrap() >= 3, "2 epochs + state changes");
+    assert_eq!(s.get("events_subscribers").as_usize(), Some(0));
+    assert!(s.get("events_lagged_total").as_usize().is_some());
+
+    agent.stop();
+    let (status, _) = request(&addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    h.join().unwrap();
+}
