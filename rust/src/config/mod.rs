@@ -4,7 +4,8 @@
 //! Precedence: defaults < `--config file.json` < individual CLI flags.
 
 use crate::coordinator::{
-    CheckpointPolicy, EngineKind, Method, PrecisionSpec, TrainSpec, ZoGradMode,
+    CheckpointPolicy, DpAggregate, DpSpec, EngineKind, Method, PrecisionSpec, TrainSpec,
+    ZoGradMode,
 };
 use crate::data::DatasetKind;
 use crate::util::cli::Args;
@@ -91,6 +92,17 @@ pub struct Config {
     /// Snapshot generations kept (>= 1): `path`, `path.1`, ….
     pub ckpt_keep: usize,
     pub verbose: bool,
+    /// Data-parallel replicas (0 = off). With N >= 1 the run becomes a
+    /// seed-compressed dp run: each global batch is split into N
+    /// strided shards, loss deltas are aggregated per step, and the
+    /// identical update is applied everywhere from the shared RNG
+    /// stream. Requires method=full-zo, precision=fp32, engine=native.
+    pub dp_replicas: usize,
+    /// How per-shard loss deltas combine into the committed gradient.
+    pub dp_aggregate: DpAggregate,
+    /// Smallest surviving quorum allowed to absorb a lost replica's
+    /// shard and keep the step barrier moving (1..=dp_replicas).
+    pub dp_min_replicas: usize,
 }
 
 impl Default for Config {
@@ -121,6 +133,9 @@ impl Default for Config {
             ckpt_every: 1,
             ckpt_keep: 1,
             verbose: false,
+            dp_replicas: 0,
+            dp_aggregate: DpAggregate::Mean,
+            dp_min_replicas: 1,
         }
     }
 }
@@ -166,6 +181,13 @@ impl Config {
                 self.ckpt_every = val.parse().context("ckpt_every")?
             }
             "ckpt-keep" | "ckpt_keep" => self.ckpt_keep = val.parse().context("ckpt_keep")?,
+            "dp" | "dp-replicas" | "dp_replicas" => {
+                self.dp_replicas = val.parse().context("dp_replicas")?
+            }
+            "dp-aggregate" | "dp_aggregate" => self.dp_aggregate = DpAggregate::parse(val)?,
+            "dp-min-replicas" | "dp_min_replicas" => {
+                self.dp_min_replicas = val.parse().context("dp_min_replicas")?
+            }
             "verbose" => self.verbose = val == "true" || val == "1",
             other => anyhow::bail!("unknown config key '{other}'"),
         }
@@ -226,7 +248,42 @@ impl Config {
                 "--resume restores params AND loop state; it cannot be combined with --load"
             );
         }
+        if self.dp_replicas > 0 {
+            if self.method != Method::FullZo {
+                anyhow::bail!("dp requires method=full-zo (the wire carries loss deltas only)");
+            }
+            if self.precision != Precision::Fp32 {
+                anyhow::bail!("dp requires precision=fp32");
+            }
+            if self.engine != EngineKind::Native {
+                anyhow::bail!("dp requires engine=native (shard micro-batches vary in size)");
+            }
+            if self.resume.is_some() || self.load_checkpoint.is_some() {
+                anyhow::bail!("dp runs always start from scratch (no --resume / --load)");
+            }
+            if self.dp_replicas > crate::coordinator::DP_MAX_REPLICAS {
+                anyhow::bail!(
+                    "dp replicas must be <= {}",
+                    crate::coordinator::DP_MAX_REPLICAS
+                );
+            }
+            if self.batch < self.dp_replicas {
+                anyhow::bail!("dp needs batch >= replicas so every shard owns >= 1 row");
+            }
+            if self.dp_min_replicas == 0 || self.dp_min_replicas > self.dp_replicas {
+                anyhow::bail!("dp_min_replicas must be in 1..=dp_replicas");
+            }
+        }
         Ok(())
+    }
+
+    /// The dp mode of this run, if enabled.
+    pub fn dp_spec(&self) -> Option<DpSpec> {
+        (self.dp_replicas > 0).then_some(DpSpec {
+            replicas: self.dp_replicas,
+            aggregate: self.dp_aggregate,
+            min_replicas: self.dp_min_replicas,
+        })
     }
 
     /// The unified training-run description (precision-agnostic session
@@ -402,6 +459,49 @@ mod tests {
         // cadence 0 = final-save-only: the mid-run policy disarms
         cfg.set("ckpt_every", "0").unwrap();
         assert_eq!(cfg.train_spec().checkpoint, None);
+    }
+
+    #[test]
+    fn dp_flags_parse_and_validate() {
+        let cfg = Config::from_args(&args(&[
+            "--method", "full-zo", "--engine", "native", "--dp", "4",
+            "--dp-aggregate", "sum", "--dp-min-replicas", "2",
+        ]))
+        .unwrap();
+        assert_eq!(
+            cfg.dp_spec(),
+            Some(DpSpec { replicas: 4, aggregate: DpAggregate::Sum, min_replicas: 2 })
+        );
+        assert_eq!(Config::default().dp_spec(), None);
+    }
+
+    #[test]
+    fn dp_invalid_combos_rejected() {
+        // wrong method
+        assert!(Config::from_args(&args(&["--engine", "native", "--dp", "2"])).is_err());
+        // wrong engine (default xla)
+        assert!(Config::from_args(&args(&["--method", "full-zo", "--dp", "2"])).is_err());
+        // int8
+        assert!(Config::from_args(&args(&[
+            "--method", "full-zo", "--engine", "native", "--precision", "int8", "--dp", "2",
+        ]))
+        .is_err());
+        // resume
+        assert!(Config::from_args(&args(&[
+            "--method", "full-zo", "--engine", "native", "--dp", "2", "--resume", "/tmp/x",
+        ]))
+        .is_err());
+        // quorum out of range
+        assert!(Config::from_args(&args(&[
+            "--method", "full-zo", "--engine", "native", "--dp", "2",
+            "--dp-min-replicas", "3",
+        ]))
+        .is_err());
+        // batch smaller than replica count
+        assert!(Config::from_args(&args(&[
+            "--method", "full-zo", "--engine", "native", "--dp", "64", "--batch", "32",
+        ]))
+        .is_err());
     }
 
     #[test]

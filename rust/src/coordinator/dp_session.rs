@@ -1,0 +1,504 @@
+//! Seed-compressed data-parallel ZO — the replica-side driver.
+//!
+//! The ZO update is a pure function of `(run_seed, step)` plus one
+//! loss-delta scalar, so N replicas can evaluate the ±ε perturbation on
+//! disjoint shards of each global batch and exchange only
+//! `(step, loss_delta)` records: the coordinator aggregates the deltas,
+//! commits the projected gradient `g`, and every replica applies the
+//! identical update `θ += −η·g·z(seed, step)` from its local RNG
+//! stream. Bytes per step instead of parameter vectors.
+//!
+//! Bit-identity contract (what `tests/dp_e2e.rs` asserts):
+//!
+//! * Every replica — and the single-process reference run
+//!   ([`DpLocalSession`]) — performs exactly ONE perturbation cycle per
+//!   step, `+ε, −2ε, +ε`, regardless of how many shards it owns
+//!   (forwards never mutate params). The cycle's f32 rounding residue
+//!   is therefore identical everywhere, and params stay bitwise equal
+//!   across any membership history.
+//! * A replica that evaluates additional shards for a step whose cycle
+//!   already ran ([`DpWorld::eval_extra`], the failover path) snapshots
+//!   the ZO prefix and restores it exactly afterwards.
+//! * A late joiner replays `+ε, −2ε, +ε, −η·g` per committed step from
+//!   the commit log ([`DpWorld::catch_up`]) — no forwards needed — and
+//!   lands on the same bits.
+//! * Aggregation order is fixed (shard index ascending, f64
+//!   accumulation) because f32 addition is not associative.
+//!
+//! The coordinator-side bookkeeping (shard leases, step barrier, quorum
+//! rules, the `/cluster/dp/*` wire) lives in `serve::dp`; this module
+//! is pure training math shared by the local reference, the remote
+//! replica loop and the unit tests.
+
+use super::engine::{Engine, Method};
+use super::native_engine::NativeEngine;
+use super::params::{Model, ParamSet};
+use super::schedules::LrSchedule;
+use super::session::{PrecisionSpec, StepOutcome, TrainResult, TrainSession, TrainSpec};
+use super::{checkpoint, trainer, zo};
+use crate::data::loader::{Batch, Shard};
+use crate::data::Dataset;
+use crate::nn::loss::accuracy;
+use crate::telemetry::{Phase, PhaseTimer};
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+
+/// Upper bound on `dp.replicas` — the barrier state is O(replicas) per
+/// step and a batch row per shard is required anyway.
+pub const DP_MAX_REPLICAS: usize = 64;
+
+/// How per-shard loss deltas combine into the committed gradient.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DpAggregate {
+    /// Row-weighted mean of shard deltas — the estimator a single node
+    /// would compute over the whole batch (up to f32 rounding).
+    Mean,
+    /// Plain sum of shard deltas (gradient scales with replica count).
+    Sum,
+}
+
+impl DpAggregate {
+    pub fn parse(s: &str) -> Result<DpAggregate> {
+        match s {
+            "mean" => Ok(DpAggregate::Mean),
+            "sum" => Ok(DpAggregate::Sum),
+            other => anyhow::bail!("unknown dp aggregate '{other}' (mean|sum)"),
+        }
+    }
+
+    /// The canonical CLI/JSON token; `parse(token()) == self`.
+    pub fn token(&self) -> &'static str {
+        match self {
+            DpAggregate::Mean => "mean",
+            DpAggregate::Sum => "sum",
+        }
+    }
+}
+
+/// The dp mode of a job: shipped inside `JobSpec` as a nested
+/// `"dp": {replicas, aggregate, min_replicas}` object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DpSpec {
+    pub replicas: usize,
+    pub aggregate: DpAggregate,
+    /// Smallest surviving quorum allowed to absorb a lost replica's
+    /// shard and keep the step barrier moving.
+    pub min_replicas: usize,
+}
+
+impl DpSpec {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("replicas", Value::num(self.replicas as f64)),
+            ("aggregate", Value::Str(self.aggregate.token().into())),
+            ("min_replicas", Value::num(self.min_replicas as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<DpSpec> {
+        let obj = v.as_obj().context("dp must be an object")?;
+        let mut dp = DpSpec { replicas: 0, aggregate: DpAggregate::Mean, min_replicas: 1 };
+        for (k, val) in obj {
+            match k.as_str() {
+                "replicas" => {
+                    dp.replicas = val.as_i64().context("dp.replicas")? as usize;
+                }
+                "aggregate" => {
+                    dp.aggregate =
+                        DpAggregate::parse(val.as_str().context("dp.aggregate")?)?;
+                }
+                "min_replicas" => {
+                    dp.min_replicas = val.as_i64().context("dp.min_replicas")? as usize;
+                }
+                other => anyhow::bail!("unknown dp key '{other}'"),
+            }
+        }
+        if dp.replicas == 0 || dp.replicas > DP_MAX_REPLICAS {
+            anyhow::bail!("dp.replicas must be in 1..={DP_MAX_REPLICAS}");
+        }
+        if dp.min_replicas == 0 || dp.min_replicas > dp.replicas {
+            anyhow::bail!("dp.min_replicas must be in 1..=replicas");
+        }
+        Ok(dp)
+    }
+}
+
+/// One shard's ±ε forward pair for one step — besides identifiers, the
+/// entire per-step wire payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardEval {
+    pub shard: usize,
+    /// ℓ₊ − ℓ₋ on this shard's rows (the seed-compressed signal).
+    pub delta: f32,
+    /// ½(ℓ₊ + ℓ₋) — the shard's train-loss contribution.
+    pub loss: f32,
+    pub correct: usize,
+    pub seen: usize,
+}
+
+impl ShardEval {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("shard", Value::num(self.shard as f64)),
+            ("delta", Value::num(self.delta as f64)),
+            ("loss", Value::num(self.loss as f64)),
+            ("correct", Value::num(self.correct as f64)),
+            ("seen", Value::num(self.seen as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ShardEval> {
+        Ok(ShardEval {
+            shard: v.get("shard").as_i64().context("report.shard")? as usize,
+            delta: v.get("delta").as_f64().context("report.delta")? as f32,
+            loss: v.get("loss").as_f64().context("report.loss")? as f32,
+            correct: v.get("correct").as_i64().unwrap_or(0) as usize,
+            seen: v.get("seen").as_i64().unwrap_or(0) as usize,
+        })
+    }
+}
+
+/// Aggregated step statistics across all shards of one global batch.
+#[derive(Debug, Clone, Copy)]
+pub struct DpAgg {
+    pub delta: f32,
+    pub loss: f32,
+    pub correct: usize,
+    pub seen: usize,
+}
+
+/// Combine a step's shard evals. `evals` MUST be sorted by shard index
+/// and cover each shard exactly once — the fixed order plus f64
+/// accumulation is what makes aggregation deterministic regardless of
+/// which replica evaluated which shard.
+pub fn aggregate(evals: &[ShardEval], agg: DpAggregate) -> DpAgg {
+    debug_assert!(evals.windows(2).all(|w| w[0].shard < w[1].shard));
+    let mut delta = 0.0f64;
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    for e in evals {
+        let w = match agg {
+            DpAggregate::Mean => e.seen as f64,
+            DpAggregate::Sum => 1.0,
+        };
+        delta += w * e.delta as f64;
+        loss += w * e.loss as f64;
+        correct += e.correct;
+        seen += e.seen;
+    }
+    if agg == DpAggregate::Mean && seen > 0 {
+        delta /= seen as f64;
+        loss /= seen as f64;
+    }
+    DpAgg { delta: delta as f32, loss: loss as f32, correct, seen }
+}
+
+/// Replica-side training state: the engine, the full parameter set and
+/// the deterministic schedules — everything needed to evaluate shards
+/// and apply commits. Identical on every replica by construction.
+pub struct DpWorld {
+    pub engine: Box<dyn Engine>,
+    pub params: ParamSet,
+    pub boundary: usize,
+    pub spec: TrainSpec,
+    pub dp: DpSpec,
+    lr_sched: LrSchedule,
+    pub steps_per_epoch: u64,
+}
+
+impl DpWorld {
+    /// Build a replica world. dp only supports Full-ZO / FP32 / native
+    /// (`Config::validate` enforces the same), so the engine choice is
+    /// fixed here.
+    pub fn new(model: Model, spec: TrainSpec, dp: DpSpec, train_len: usize) -> Result<DpWorld> {
+        if spec.method != Method::FullZo || spec.precision != PrecisionSpec::Fp32 {
+            anyhow::bail!("dp requires method=full-zo, precision=fp32");
+        }
+        let params = ParamSet::init(model, spec.seed ^ 0xC0FFEE);
+        let boundary = params.zo_boundary(0);
+        let lr_sched = LrSchedule::paper_fp32(spec.lr0, spec.epochs);
+        let steps_per_epoch = train_len.div_ceil(spec.batch) as u64;
+        Ok(DpWorld {
+            engine: Box::new(NativeEngine::new(model)),
+            params,
+            boundary,
+            spec,
+            dp,
+            lr_sched,
+            steps_per_epoch,
+        })
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.spec.epochs as u64 * self.steps_per_epoch
+    }
+
+    pub fn epoch_of(&self, step: u64) -> usize {
+        (step / self.steps_per_epoch) as usize
+    }
+
+    pub fn lr_for_epoch(&self, epoch: usize) -> f32 {
+        self.lr_sched.lr(epoch)
+    }
+
+    /// The ±ε evaluation cycle for `shards` of global batch `b` at
+    /// `step`. Exactly three perturbs regardless of shard count, so
+    /// every replica traverses the same f32 rounding path.
+    pub fn eval_cycle(
+        &mut self,
+        b: &Batch,
+        step: u64,
+        shards: &[usize],
+        timer: &mut PhaseTimer,
+    ) -> Result<Vec<ShardEval>> {
+        let eps = self.spec.eps;
+        let seed = self.spec.seed;
+        let of = self.dp.replicas;
+
+        let t0 = std::time::Instant::now();
+        zo::perturb(&mut self.params, self.boundary, seed, step, eps);
+        timer.add(Phase::ZoPerturb, t0.elapsed());
+        let mut plus = Vec::with_capacity(shards.len());
+        for &s in shards {
+            let mb = b.shard(Shard { index: s, of });
+            let t = std::time::Instant::now();
+            let fwd = self.engine.forward(&self.params, &mb.x, &mb.y_onehot, mb.bsz)?;
+            timer.add(Phase::Forward, t.elapsed());
+            plus.push(fwd.loss);
+        }
+
+        let t0 = std::time::Instant::now();
+        zo::perturb(&mut self.params, self.boundary, seed, step, -2.0 * eps);
+        timer.add(Phase::ZoPerturb, t0.elapsed());
+        let mut out = Vec::with_capacity(shards.len());
+        for (i, &s) in shards.iter().enumerate() {
+            let mb = b.shard(Shard { index: s, of });
+            let t = std::time::Instant::now();
+            let fwd = self.engine.forward(&self.params, &mb.x, &mb.y_onehot, mb.bsz)?;
+            timer.add(Phase::Forward, t.elapsed());
+            let nclass = fwd.logits.len() / mb.bsz.max(1);
+            let (correct, seen) = accuracy(&fwd.logits, &mb.labels, mb.bsz, nclass);
+            out.push(ShardEval {
+                shard: s,
+                delta: plus[i] - fwd.loss,
+                loss: 0.5 * (plus[i] + fwd.loss),
+                correct,
+                seen,
+            });
+        }
+
+        // restore leg of the cycle (the commit applies −η·g·z later,
+        // once the aggregated delta comes back)
+        let t0 = std::time::Instant::now();
+        zo::perturb(&mut self.params, self.boundary, seed, step, eps);
+        timer.add(Phase::ZoPerturb, t0.elapsed());
+        Ok(out)
+    }
+
+    /// Evaluate additional shards for a step whose cycle already ran
+    /// (a just-absorbed shard of a lost replica): snapshot the ZO
+    /// prefix, rerun the cycle for the new shards, restore bit-exactly.
+    pub fn eval_extra(
+        &mut self,
+        b: &Batch,
+        step: u64,
+        shards: &[usize],
+        timer: &mut PhaseTimer,
+    ) -> Result<Vec<ShardEval>> {
+        let saved: Vec<Vec<f32>> = self.params.data[..self.boundary].to_vec();
+        let out = self.eval_cycle(b, step, shards, timer)?;
+        for (dst, src) in self.params.data[..self.boundary].iter_mut().zip(saved) {
+            *dst = src;
+        }
+        Ok(out)
+    }
+
+    /// Apply a committed step: θ += −η(epoch)·g·z(seed, step).
+    pub fn apply_commit(&mut self, step: u64, g: f32, timer: &mut PhaseTimer) {
+        let lr = self.lr_for_epoch(self.epoch_of(step));
+        let t0 = std::time::Instant::now();
+        zo::perturb(&mut self.params, self.boundary, self.spec.seed, step, -(lr * g));
+        timer.add(Phase::ZoUpdate, t0.elapsed());
+    }
+
+    /// Replay committed steps `from..from+commits.len()` without any
+    /// forwards: each step is the cycle's three perturbs (their rounding
+    /// residue is part of the trajectory) plus the commit itself. A late
+    /// joiner lands on the same bits as replicas that trained through.
+    pub fn catch_up(&mut self, from: u64, commits: &[f32], timer: &mut PhaseTimer) {
+        let eps = self.spec.eps;
+        let seed = self.spec.seed;
+        for (i, &g) in commits.iter().enumerate() {
+            let step = from + i as u64;
+            zo::perturb(&mut self.params, self.boundary, seed, step, eps);
+            zo::perturb(&mut self.params, self.boundary, seed, step, -2.0 * eps);
+            zo::perturb(&mut self.params, self.boundary, seed, step, eps);
+            self.apply_commit(step, g, timer);
+        }
+    }
+
+    pub fn evaluate(&mut self, data: &Dataset) -> Result<(f32, f32)> {
+        trainer::evaluate(self.engine.as_mut(), &self.params, data, self.spec.batch)
+    }
+
+    pub fn snapshot(&self) -> Vec<checkpoint::CkptTensor> {
+        checkpoint::params_to_tensors(&self.params)
+    }
+}
+
+/// Single-process dp run: all N shards evaluated locally, one cycle per
+/// step — the bit-identity reference for the distributed path, and what
+/// `launch::run` executes when a dp job lands on a local worker.
+pub struct DpLocalSession {
+    pub world: DpWorld,
+}
+
+impl DpLocalSession {
+    pub fn new(world: DpWorld) -> DpLocalSession {
+        DpLocalSession { world }
+    }
+}
+
+impl TrainSession for DpLocalSession {
+    fn label(&self) -> String {
+        format!("{} dp{}", self.world.spec.label(), self.world.dp.replicas)
+    }
+
+    fn begin_epoch(&mut self, epoch: usize) -> f32 {
+        self.world.lr_for_epoch(epoch)
+    }
+
+    fn step(&mut self, b: &Batch, step_idx: u64, timer: &mut PhaseTimer) -> Result<StepOutcome> {
+        let shards: Vec<usize> = (0..self.world.dp.replicas).collect();
+        let evals = self.world.eval_cycle(b, step_idx, &shards, timer)?;
+        let agg = aggregate(&evals, self.world.dp.aggregate);
+        let g = zo::projected_gradient_from_delta(
+            agg.delta,
+            self.world.spec.eps,
+            self.world.spec.g_clip,
+        );
+        self.world.apply_commit(step_idx, g, timer);
+        Ok(StepOutcome { loss: agg.loss, correct: agg.correct, seen: agg.seen })
+    }
+
+    fn evaluate(&mut self, data: &Dataset) -> Result<(f32, f32)> {
+        self.world.evaluate(data)
+    }
+
+    fn verbose_note(&self) -> String {
+        format!(
+            "dp=local replicas={} agg={}",
+            self.world.dp.replicas,
+            self.world.dp.aggregate.token()
+        )
+    }
+
+    fn snapshot(&self) -> Vec<checkpoint::CkptTensor> {
+        self.world.snapshot()
+    }
+}
+
+/// The [`TrainState`](checkpoint::TrainState) a finished dp run saves —
+/// shared by the local reference and the distributed primary so final
+/// checkpoints compare bit-identically.
+pub fn final_dp_state(
+    spec: &TrainSpec,
+    result: &TrainResult,
+) -> checkpoint::TrainState {
+    super::session::final_state(spec, result, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::loader::Loader;
+    use crate::data::synth_mnist;
+
+    fn spec(epochs: usize, batch: usize) -> TrainSpec {
+        TrainSpec {
+            method: Method::FullZo,
+            epochs,
+            batch,
+            seed: 11,
+            ..TrainSpec::default()
+        }
+    }
+
+    fn dp(n: usize) -> DpSpec {
+        DpSpec { replicas: n, aggregate: DpAggregate::Mean, min_replicas: 1 }
+    }
+
+    #[test]
+    fn dp_spec_json_roundtrip() {
+        let d = DpSpec { replicas: 4, aggregate: DpAggregate::Sum, min_replicas: 2 };
+        let back = DpSpec::from_json(&d.to_json()).unwrap();
+        assert_eq!(back, d);
+        assert!(DpSpec::from_json(&Value::obj(vec![("replicas", Value::num(0.0))])).is_err());
+    }
+
+    #[test]
+    fn aggregate_is_order_fixed_and_row_weighted() {
+        let evals = [
+            ShardEval { shard: 0, delta: 0.4, loss: 1.0, correct: 3, seen: 4 },
+            ShardEval { shard: 1, delta: -0.2, loss: 2.0, correct: 1, seen: 2 },
+        ];
+        let mean = aggregate(&evals, DpAggregate::Mean);
+        // row-weighted: (4·0.4 + 2·(−0.2)) / 6
+        assert!((mean.delta - 0.2).abs() < 1e-6);
+        assert_eq!((mean.correct, mean.seen), (4, 6));
+        let sum = aggregate(&evals, DpAggregate::Sum);
+        assert!((sum.delta - 0.2f32).abs() < 1e-6);
+        assert!((sum.loss - 3.0).abs() < 1e-6);
+    }
+
+    /// The heart of the dp design: a world that evaluates only its own
+    /// shards (restoring around extra evals) and applies commits stays
+    /// bitwise identical to the all-shards reference, and a late joiner
+    /// catches up to the same bits from the commit log alone.
+    #[test]
+    fn shard_subsets_and_catch_up_are_bit_identical() {
+        let data = synth_mnist::generate(48, 3);
+        let s = spec(1, 16);
+        let mut reference = DpWorld::new(Model::LeNet, s.clone(), dp(2), data.len()).unwrap();
+        let mut partial = DpWorld::new(Model::LeNet, s.clone(), dp(2), data.len()).unwrap();
+        let mut timer = PhaseTimer::new();
+        let mut commits = Vec::new();
+
+        for (i, b) in Loader::new(&data, 16, s.seed ^ 0xDA7A, 0).enumerate() {
+            let step = i as u64;
+            let evals = reference.eval_cycle(&b, step, &[0, 1], &mut timer).unwrap();
+            let agg = aggregate(&evals, DpAggregate::Mean);
+            let g = zo::projected_gradient_from_delta(agg.delta, s.eps, s.g_clip);
+            reference.apply_commit(step, g, &mut timer);
+            commits.push(g);
+
+            // replica that owns shard 0, then absorbs shard 1 mid-step
+            let e0 = partial.eval_cycle(&b, step, &[0], &mut timer).unwrap();
+            let e1 = partial.eval_extra(&b, step, &[1], &mut timer).unwrap();
+            assert_eq!(e0[0], evals[0]);
+            assert_eq!(e1[0], evals[1]);
+            partial.apply_commit(step, g, &mut timer);
+        }
+
+        assert_eq!(reference.params.data, partial.params.data);
+
+        let mut joiner = DpWorld::new(Model::LeNet, s, dp(2), data.len()).unwrap();
+        joiner.catch_up(0, &commits, &mut timer);
+        assert_eq!(reference.params.data, joiner.params.data);
+    }
+
+    #[test]
+    fn local_session_trains_and_snapshots() {
+        let data = synth_mnist::generate(32, 4);
+        let test = synth_mnist::generate(16, 5);
+        let s = spec(2, 8);
+        let world = DpWorld::new(Model::LeNet, s.clone(), dp(4), data.len()).unwrap();
+        let mut sess = DpLocalSession::new(world);
+        let result = crate::coordinator::session::run(&mut sess, &s, &data, &test).unwrap();
+        assert_eq!(result.history.epochs.len(), 2);
+        assert_eq!(result.steps_done, 2 * 4, "32 samples / batch 8 over 2 epochs");
+        assert!(sess.label().contains("dp4"));
+        assert!(!sess.snapshot().is_empty());
+    }
+}

@@ -13,6 +13,7 @@
 
 pub mod checkpoint;
 pub mod control;
+pub mod dp_session;
 pub mod engine;
 pub mod int8_trainer;
 pub mod metrics;
@@ -27,6 +28,7 @@ pub mod zo;
 
 pub use checkpoint::{CheckpointPolicy, CkptTensor, TrainState};
 pub use control::{ProgressSink, StopFlag};
+pub use dp_session::{DpAggregate, DpLocalSession, DpSpec, DpWorld, DP_MAX_REPLICAS};
 pub use engine::{BpDepth, Engine, EngineKind, Method, StepOut};
 pub use int8_trainer::{Int8Session, ZoGradMode};
 pub use params::{Model, ParamSet};

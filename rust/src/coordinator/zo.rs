@@ -27,6 +27,14 @@ pub fn projected_gradient(loss_plus: f32, loss_minus: f32, eps: f32, g_clip: f32
     g.clamp(-g_clip, g_clip)
 }
 
+/// Data-parallel variant of [`projected_gradient`]: the replicas ship
+/// per-shard ℓ₊ − ℓ₋ deltas and the coordinator aggregates them into a
+/// single scalar before projecting, so the two losses never exist
+/// individually here.
+pub fn projected_gradient_from_delta(delta: f32, eps: f32, g_clip: f32) -> f32 {
+    (delta / (2.0 * eps)).clamp(-g_clip, g_clip)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -16,6 +16,58 @@ pub struct Batch {
     pub bsz: usize,
 }
 
+/// One deterministic slice of data-parallel work: replica `index` of
+/// `of`. A shard is applied to each assembled batch by striding over
+/// its rows (`index, index+of, index+2·of, …`), so the union of all
+/// `of` shards of a batch is exactly the batch, shards are pairwise
+/// disjoint, and the batch order itself remains the single-node
+/// `(seed, epoch)` shuffle — replay stays bit-identical no matter how
+/// many replicas share the epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub of: usize,
+}
+
+impl Shard {
+    /// The degenerate single-replica shard (the whole batch).
+    pub fn full() -> Shard {
+        Shard { index: 0, of: 1 }
+    }
+
+    /// Number of rows this shard owns in a `bsz`-row batch.
+    pub fn size(&self, bsz: usize) -> usize {
+        if self.index >= bsz {
+            0
+        } else {
+            (bsz - self.index).div_ceil(self.of)
+        }
+    }
+}
+
+impl Batch {
+    /// The sub-batch owned by `shard`: rows `index, index+of, …` of
+    /// this batch, in batch order.
+    pub fn shard(&self, shard: Shard) -> Batch {
+        assert!(shard.of >= 1 && shard.index < shard.of, "bad shard {shard:?}");
+        if shard.of == 1 {
+            return self.clone();
+        }
+        let sl = self.x.len() / self.bsz.max(1);
+        let nc = self.y_onehot.len() / self.bsz.max(1);
+        let rows = shard.size(self.bsz);
+        let mut x = Vec::with_capacity(rows * sl);
+        let mut y = Vec::with_capacity(rows * nc);
+        let mut labels = Vec::with_capacity(rows);
+        for row in (shard.index..self.bsz).step_by(shard.of) {
+            x.extend_from_slice(&self.x[row * sl..(row + 1) * sl]);
+            y.extend_from_slice(&self.y_onehot[row * nc..(row + 1) * nc]);
+            labels.push(self.labels[row]);
+        }
+        Batch { x, y_onehot: y, labels, bsz: rows }
+    }
+}
+
 /// Shuffled epoch iterator producing fixed-size batches.
 ///
 /// The tail of the dataset is wrapped with samples from the epoch start
@@ -154,6 +206,46 @@ mod tests {
         let batches: Vec<Batch> = Loader::new(&d, 8, 1, 0).collect();
         assert_eq!(batches.len(), 2);
         assert_eq!(batches[1].x.len(), 8 * d.sample_len); // padded to full
+    }
+
+    #[test]
+    fn shards_partition_each_batch() {
+        let d = synth_mnist::generate(40, 6);
+        for b in Loader::new(&d, 8, 9, 0) {
+            for of in [1usize, 2, 3, 4] {
+                let parts: Vec<Batch> =
+                    (0..of).map(|i| b.shard(Shard { index: i, of })).collect();
+                // sizes partition the batch
+                assert_eq!(parts.iter().map(|p| p.bsz).sum::<usize>(), b.bsz);
+                for (i, p) in parts.iter().enumerate() {
+                    assert_eq!(p.bsz, (Shard { index: i, of }).size(b.bsz));
+                    assert_eq!(p.x.len(), p.bsz * d.sample_len);
+                    assert_eq!(p.y_onehot.len(), p.bsz * d.nclass);
+                    // each shard row is the expected strided batch row
+                    for (row, &l) in p.labels.iter().enumerate() {
+                        let src = i + row * of;
+                        assert_eq!(l, b.labels[src]);
+                        assert_eq!(
+                            p.x[row * d.sample_len..(row + 1) * d.sample_len],
+                            b.x[src * d.sample_len..(src + 1) * d.sample_len]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_is_deterministic_and_full_is_identity() {
+        let d = synth_mnist::generate(16, 7);
+        let b = Loader::new(&d, 16, 3, 0).next().unwrap();
+        let a1 = b.shard(Shard { index: 1, of: 3 });
+        let a2 = b.shard(Shard { index: 1, of: 3 });
+        assert_eq!(a1.x, a2.x);
+        assert_eq!(a1.labels, a2.labels);
+        let full = b.shard(Shard::full());
+        assert_eq!(full.x, b.x);
+        assert_eq!(full.bsz, b.bsz);
     }
 
     #[test]

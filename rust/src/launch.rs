@@ -32,6 +32,7 @@
 use crate::config::{Config, Precision};
 use crate::coordinator::checkpoint::{self, CkptTensor, TrainState};
 use crate::coordinator::control::{ProgressSink, StopFlag};
+use crate::coordinator::dp_session::{DpLocalSession, DpWorld};
 use crate::coordinator::session::{self, TrainResult, TrainSpec};
 use crate::coordinator::{int8_trainer, trainer, ParamSet};
 use crate::data;
@@ -57,6 +58,22 @@ pub fn run(cfg: &Config, stop: StopFlag, progress: ProgressSink) -> Result<Launc
     let mut spec = cfg.train_spec();
     spec.stop = stop;
     spec.progress = progress;
+
+    // Data-parallel jobs popped by a LOCAL worker run the single-process
+    // dp reference: all N shards evaluated in one cycle per step — the
+    // same trajectory a distributed run commits, so a dp job degrades
+    // correctly on a coordinator with no agents attached.
+    if let Some(dp) = cfg.dp_spec() {
+        let world = DpWorld::new(cfg.model_enum(), spec.clone(), dp, train_d.len())?;
+        let mut sess = DpLocalSession::new(world);
+        let result = session::run(&mut sess, &spec, &train_d, &test_d)?;
+        save_final(cfg, &spec, &result, None, || sess.world.snapshot())?;
+        return Ok(Launch {
+            result,
+            engine: format!("native dp{}", dp.replicas),
+            resumed_from: None,
+        });
+    }
 
     match cfg.precision {
         Precision::Fp32 => {
@@ -203,6 +220,25 @@ mod tests {
         let l = run(&cfg, StopFlag::default(), ProgressSink::default()).unwrap();
         let last = l.result.history.epochs.last().unwrap();
         assert!(last.train_acc > 0.0, "Full BP train_acc must be live");
+    }
+
+    #[test]
+    fn dp_local_run_trains_and_saves() {
+        let path = std::env::temp_dir()
+            .join(format!("ezo_launch_dp_{}", std::process::id()))
+            .display()
+            .to_string();
+        let mut cfg = tiny_cfg("fp32", "full-zo");
+        cfg.set("dp", "2").unwrap();
+        cfg.set("save", &path).unwrap();
+        cfg.validate().unwrap();
+        let l = run(&cfg, StopFlag::default(), ProgressSink::default()).unwrap();
+        assert_eq!(l.engine, "native dp2");
+        assert_eq!(l.result.history.epochs.len(), 1);
+        let (tensors, state) = checkpoint::load_full(&path).unwrap();
+        assert!(!tensors.is_empty());
+        assert_eq!(state.unwrap().step, l.result.steps_done);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //!              [--precision fp32|int8|int8*] [--epochs N] [--batch N]
 //!              [--lr F] [--eps F] [--seed N] [--save ckpt] [--load ckpt]
 //!              [--resume ckpt] [--ckpt-every N] [--ckpt-keep K]
+//!              [--dp N] [--dp-aggregate mean|sum] [--dp-min-replicas M]
 //!              [--config file.json] [--verbose] [--mem-report]
 //! repro eval   --load ckpt [--dataset ...] [--rotate DEG]
 //! repro exp    table1|table2|fig2|fig3|fig4|fig5|fig6|fig7|all
@@ -13,10 +14,16 @@
 //! repro memory [--model lenet|pointnet] [--batch N] [--precision fp32|int8]
 //! repro inspect            # list AOT artifacts
 //! repro bench  [--json] [--out file.json] [--fast]
+//!              [--compare OLD.json] [--max-regress PCT]
 //!              # measured performance snapshot: ZO-op and end-to-end
-//!              # step latencies, serve throughput, and measured peak
-//!              # heap per method next to the paper's memory model
-//!              # (the repo's BENCH_*.json files come from --out)
+//!              # step latencies, serve throughput, dp scaling
+//!              # (steps/sec at 1/2/4 replicas over the /cluster/dp
+//!              # wire), and measured peak heap per method next to the
+//!              # paper's memory model. Snapshots are stamped with
+//!              # {schema, rev, created_by}; --compare prints
+//!              # per-metric deltas against a committed BENCH_*.json
+//!              # and --max-regress PCT fails the run when any
+//!              # end-to-end step mean slows down by more than PCT%
 //!
 //! repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]
 //!              [--cluster] [--lease-ms L] [--events-buffer N]
@@ -100,11 +107,14 @@ fn print_help() {
          \x20              [--precision fp32|int8|int8*] [--epochs N] [--batch N] [--lr F]\n\
          \x20              [--eval-every N] [--save ckpt] [--load ckpt] [--resume ckpt]\n\
          \x20              [--ckpt-every N] [--ckpt-keep K] [--config file.json] [--verbose]\n\
+         \x20              [--dp N] [--dp-aggregate mean|sum] [--dp-min-replicas M]\n\
+         \x20              train one job across N data-parallel replicas (full-zo/fp32)\n\
          \x20              [--mem-report]   print measured peak heap vs the paper's model\n\
          \x20 repro eval   --load ckpt [--dataset D] [--rotate DEG] [--precision P]\n\
          \x20 repro exp    table1|table2|fig2..fig7|all [--fast|--paper] [--engine E]\n\
          \x20 repro memory [--model M] [--batch N] [--precision fp32|int8] [--adam]\n\
          \x20 repro bench  [--json] [--out file.json] [--fast]   measured perf snapshot\n\
+         \x20              [--compare OLD.json] [--max-regress PCT]   deltas vs a baseline\n\
          \x20 repro inspect\n\
          \n  repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]\n\
          \x20              [--cluster] [--lease-ms L] [--events-buffer N]\n\
@@ -475,6 +485,73 @@ fn cmd_bench(args: &Args) -> Result<()> {
         serve_rates.push((workers, rate));
     }
 
+    // --- dp scaling: ONE full-zo job split across N replica agents ---
+    // A pure coordinator (workers 0) plus N in-process agents measures
+    // committed steps/sec of the seed-compressed /cluster/dp wire as
+    // the replica count grows. The job itself is identical across rows
+    // (same seed, spec and trajectory), so the rows are comparable.
+    let run_dp = |replicas: usize| -> Result<f64> {
+        use std::time::{Duration, Instant};
+        const EPOCHS: usize = 2;
+        const TRAIN_N: usize = 256;
+        const BATCH: usize = 32;
+        let server = serve::Server::bind(&serve::ServeOptions {
+            port: 0,
+            workers: 0,
+            queue_cap: 4,
+            cluster: Some(serve::ClusterOptions { lease_ms: 4_000 }),
+            ..Default::default()
+        })?;
+        let addr = server.local_addr()?.to_string();
+        let handle = std::thread::spawn(move || server.run());
+        let agents: Vec<serve::AgentHandle> = (0..replicas)
+            .map(|i| {
+                serve::Agent::spawn(serve::AgentOptions {
+                    coordinator: addr.clone(),
+                    capacity: 1,
+                    name: format!("bench-dp-{i}"),
+                    poll_ms: 10,
+                    max_poll_failures: 100,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let body = json::parse(&format!(
+            r#"{{"method": "full-zo", "precision": "fp32", "engine": "native",
+                "epochs": {EPOCHS}, "batch": {BATCH}, "train_n": {TRAIN_N},
+                "test_n": 64, "seed": 11,
+                "dp": {{"replicas": {replicas}, "aggregate": "mean",
+                        "min_replicas": 1}}}}"#
+        ))?;
+        let t0 = Instant::now();
+        let (status, v) = serve::request(&addr, "POST", "/jobs", Some(&body))?;
+        anyhow::ensure!(status == 200, "dp submit rejected: {}", json::to_string(&v));
+        loop {
+            let (_, st) = serve::request(&addr, "GET", "/stats", None)?;
+            anyhow::ensure!(
+                st.get("jobs_failed").as_usize() == Some(0),
+                "dp job failed during bench"
+            );
+            if st.get("jobs_done").as_usize() == Some(1) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        for a in agents {
+            a.stop();
+        }
+        serve::request(&addr, "POST", "/shutdown", None)?;
+        handle.join().expect("server thread panicked")?;
+        let steps = (EPOCHS * TRAIN_N.div_ceil(BATCH)) as f64;
+        Ok(steps / secs)
+    };
+    let mut dp_rates: Vec<(usize, f64)> = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let rate = run_dp(replicas)?;
+        b.report_metric(&format!("dp_scaling/replicas_{replicas}"), rate, "steps/sec");
+        dp_rates.push((replicas, rate));
+    }
+
     // --- measured peak heap per method vs the paper's model ---
     let mut mem = BTreeMap::new();
     for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
@@ -525,7 +602,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .collect(),
         )
     };
+    let base_rate = dp_rates.first().map(|&(_, r)| r).unwrap_or(0.0);
     let snapshot = Value::obj(vec![
+        ("schema", Value::str(BENCH_SCHEMA)),
+        ("rev", Value::str(git_rev())),
+        ("created_by", Value::str("repro bench")),
         ("zo_ops", stats_json(&b.results[..zo_end])),
         ("e2e_step", stats_json(&b.results[zo_end..])),
         (
@@ -534,6 +615,23 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 serve_rates
                     .iter()
                     .map(|&(w, r)| (format!("workers_{w}"), Value::num(r)))
+                    .collect(),
+            ),
+        ),
+        (
+            "dp_scaling",
+            Value::Obj(
+                dp_rates
+                    .iter()
+                    .flat_map(|&(n, r)| {
+                        [
+                            (format!("replicas_{n}/steps_per_sec"), Value::num(r)),
+                            (
+                                format!("replicas_{n}/speedup_vs_1"),
+                                Value::num(if base_rate > 0.0 { r / base_rate } else { 0.0 }),
+                            ),
+                        ]
+                    })
                     .collect(),
             ),
         ),
@@ -554,6 +652,113 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if let Some(path) = args.get("out") {
         std::fs::write(path, json::to_string_pretty(&snapshot) + "\n")?;
         println!("wrote {path}");
+    }
+    if let Some(old_path) = args.get("compare") {
+        let text = std::fs::read_to_string(old_path)
+            .map_err(|e| anyhow::anyhow!("reading baseline {old_path}: {e}"))?;
+        let old = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing baseline {old_path}: {e}"))?;
+        let max_regress = args.get_f32("max-regress", f32::INFINITY)? as f64;
+        compare_bench(&old, &snapshot, max_regress)?;
+    }
+    Ok(())
+}
+
+/// The bench snapshot's schema tag: bump when the JSON shape changes so
+/// `--compare` can refuse an incompatible baseline instead of silently
+/// reporting every metric as added/removed.
+const BENCH_SCHEMA: &str = "repro-bench/v1";
+
+/// `git rev-parse --short HEAD` of the working tree, or "unknown"
+/// outside a checkout — provenance for committed BENCH_*.json files.
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Print per-metric deltas between a baseline snapshot and the run that
+/// just finished, then enforce the regression gate: fail when any
+/// end-to-end step's mean latency slowed down by more than
+/// `max_regress_pct` percent. Only `e2e_step/*/mean_s` gates — iter
+/// counts, host facts and throughput wobble are reported but advisory.
+fn compare_bench(
+    old: &elasticzo::util::json::Value,
+    new: &elasticzo::util::json::Value,
+    max_regress_pct: f64,
+) -> Result<()> {
+    use elasticzo::util::json::Value;
+    use std::collections::BTreeMap;
+
+    if let Some(schema) = old.get("schema").as_str() {
+        anyhow::ensure!(
+            schema == BENCH_SCHEMA,
+            "baseline schema {schema:?} != {BENCH_SCHEMA:?}; re-generate the baseline"
+        );
+    }
+    fn leaves(prefix: &str, v: &Value, out: &mut BTreeMap<String, f64>) {
+        match v {
+            Value::Num(n) => {
+                out.insert(prefix.to_string(), *n);
+            }
+            Value::Obj(o) => {
+                for (k, child) in o {
+                    let p = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}/{k}")
+                    };
+                    leaves(&p, child, out);
+                }
+            }
+            _ => {}
+        }
+    }
+    let collect = |v: &Value| -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        leaves("", v, &mut out);
+        // iteration counts and host facts are not performance metrics
+        out.retain(|k, _| !k.starts_with("host/") && !k.ends_with("/iters"));
+        out
+    };
+    let old_m = collect(old);
+    let new_m = collect(new);
+    println!(
+        "\n--- vs baseline rev {} ---",
+        old.get("rev").as_str().unwrap_or("?")
+    );
+    let mut worst: Option<(String, f64)> = None;
+    for (name, new_v) in &new_m {
+        match old_m.get(name) {
+            None => println!("{name:<56} (new metric)"),
+            Some(old_v) if *old_v != 0.0 => {
+                let pct = (new_v - old_v) / old_v * 100.0;
+                println!("{name:<56} {old_v:>12.6} -> {new_v:>12.6}  {pct:>+7.1}%");
+                let gated = name.starts_with("e2e_step/") && name.ends_with("/mean_s");
+                if gated && !matches!(&worst, Some((_, w)) if pct <= *w) {
+                    worst = Some((name.clone(), pct));
+                }
+            }
+            Some(_) => {}
+        }
+    }
+    for name in old_m.keys() {
+        if !new_m.contains_key(name) {
+            println!("{name:<56} (removed)");
+        }
+    }
+    if let Some((name, pct)) = worst {
+        println!("worst e2e step delta: {name} {pct:+.1}%");
+        anyhow::ensure!(
+            pct <= max_regress_pct,
+            "{name} slowed down {pct:+.1}%, above the --max-regress {max_regress_pct}% gate"
+        );
     }
     Ok(())
 }

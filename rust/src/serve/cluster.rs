@@ -29,10 +29,32 @@
 //! resumed lineage — and re-registers as a fresh agent. If the
 //! coordinator stays unreachable for `max_poll_failures` consecutive
 //! polls, the agent stops its jobs and exits.
+//!
+//! An idle agent does not hammer the coordinator at `--poll-ms`:
+//! consecutive workless polls back off exponentially (jittered,
+//! capped at [`IDLE_BACKOFF_CAP_MS`] — still far below any sane
+//! lease), and the first assignment or running job snaps the cadence
+//! back to `poll_ms`.
+//!
+//! # Data-parallel replicas
+//!
+//! An assignment carrying a `"dp": {"shard": S}` object is not a whole
+//! job but one replica's share of a [data-parallel run](super::dp):
+//! the agent builds the same deterministic world every replica (and
+//! the single-node reference) builds, catches up on the commit log via
+//! `POST /cluster/dp/{job}/join`, then per step forward-evaluates its
+//! shards of the globally-assembled batch, reports scalar loss deltas,
+//! and applies the committed projected gradient from its local RNG
+//! stream — parameters never cross the wire, yet stay bit-identical
+//! across every replica.
 
 use super::http::request_with_timeout;
+use crate::coordinator::checkpoint::{self, TrainState};
 use crate::coordinator::control::{ProgressSink, StopFlag};
+use crate::coordinator::dp_session::{DpWorld, ShardEval};
+use crate::data::loader::Loader;
 use crate::launch;
+use crate::telemetry::{Phase, PhaseTimer};
 use crate::util::json::{self, Value};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -204,8 +226,38 @@ fn register(sh: &Arc<AgentShared>, opts: &AgentOptions) -> Result<u64> {
     Ok(id)
 }
 
+/// Ceiling of the idle poll backoff: even a long-idle agent
+/// heartbeats at least this often, far inside any sane lease.
+pub const IDLE_BACKOFF_CAP_MS: u64 = 2_000;
+
+/// Sleep before the next poll after `idle_streak` consecutive polls
+/// that neither carried an assignment nor found a job running here.
+/// Exponential from `poll_ms` up to [`IDLE_BACKOFF_CAP_MS`], with a
+/// deterministic ±25% jitter (salted per agent) so a fleet registered
+/// in the same second does not heartbeat in lockstep forever.
+fn idle_backoff(poll_ms: u64, idle_streak: u32, salt: u64) -> u64 {
+    let base = poll_ms.max(1);
+    if idle_streak == 0 {
+        return base;
+    }
+    let raw = base
+        .saturating_mul(1u64 << idle_streak.min(12))
+        .clamp(base, IDLE_BACKOFF_CAP_MS.max(base));
+    // splitmix-style hash of (salt, streak) → stable, well-spread bits
+    let mut h = salt
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(idle_streak as u64);
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 27;
+    let spread = raw / 2 + 1; // jitter ∈ [-raw/4, raw/4]
+    let jittered = raw as i64 + (h % spread) as i64 - (raw / 4) as i64;
+    (jittered.max(base as i64)) as u64
+}
+
 fn poll_loop(sh: &Arc<AgentShared>, opts: &AgentOptions) {
     let mut failures: u32 = 0;
+    let mut idle_streak: u32 = 0;
     loop {
         if sh.dead.load(Ordering::SeqCst) {
             return;
@@ -233,6 +285,7 @@ fn poll_loop(sh: &Arc<AgentShared>, opts: &AgentOptions) {
             .map(|&j| Value::num(j as f64))
             .collect();
         let body = Value::obj(vec![("running", Value::Arr(running))]);
+        let mut got_work = false;
         match sh.post(&format!("/cluster/agents/{id}/poll"), Some(&body)) {
             Ok((200, v)) => {
                 failures = 0;
@@ -246,6 +299,7 @@ fn poll_loop(sh: &Arc<AgentShared>, opts: &AgentOptions) {
                     }
                 }
                 for a in v.get("assign").as_arr().unwrap_or(&[]) {
+                    got_work = true;
                     start_job(sh, id, a);
                 }
             }
@@ -271,7 +325,19 @@ fn poll_loop(sh: &Arc<AgentShared>, opts: &AgentOptions) {
             sh.wait_jobs_done();
             return;
         }
-        std::thread::sleep(Duration::from_millis(opts.poll_ms));
+        // a running job (or fresh assignment) keeps the heartbeat at
+        // poll_ms — stops must fan out promptly; only a truly idle
+        // agent backs off
+        if got_work || sh.active.load(Ordering::SeqCst) > 0 {
+            idle_streak = 0;
+        } else {
+            idle_streak = idle_streak.saturating_add(1);
+        }
+        std::thread::sleep(Duration::from_millis(idle_backoff(
+            opts.poll_ms,
+            idle_streak,
+            id,
+        )));
     }
 }
 
@@ -300,6 +366,9 @@ fn start_job(sh: &Arc<AgentShared>, agent_id: u64, assignment: &Value) {
             return;
         }
     };
+    // a `"dp": {...}` rider marks this assignment as one replica's
+    // membership in a data-parallel run, not a whole job
+    let is_dp = assignment.get("dp").get("shard").as_f64().is_some();
     let stop = StopFlag::new();
     sh.jobs
         .lock()
@@ -310,6 +379,32 @@ fn start_job(sh: &Arc<AgentShared>, agent_id: u64, assignment: &Value) {
     let spawned = std::thread::Builder::new()
         .name(format!("agent-job-{job_id}"))
         .spawn(move || {
+            if is_dp {
+                let sh3 = sh2.clone();
+                let dp_stop = stop.clone();
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    run_dp_replica(&sh3, agent_id, job_id, &spec.config, dp_stop)
+                }));
+                match out {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        eprintln!("agent: dp replica for job {job_id} exited early: {e:#}")
+                    }
+                    Err(_) => eprintln!("agent: dp replica for job {job_id} panicked"),
+                }
+                // no done report: dp runs complete through the dp wire;
+                // if this replica errored out, the poll loop's
+                // running-ack lets the coordinator free its shards for
+                // the surviving quorum
+                {
+                    let mut jobs = sh2.jobs.lock().unwrap_or_else(PoisonError::into_inner);
+                    if jobs.get(&job_id).is_some_and(|f| f.shares_state(&stop)) {
+                        jobs.remove(&job_id);
+                    }
+                }
+                sh2.active.fetch_sub(1, Ordering::SeqCst);
+                return;
+            }
             let sink_sh = sh2.clone();
             let epoch_path = format!("/cluster/agents/{agent_id}/jobs/{job_id}/epoch");
             // The sink posts synchronously from the training thread,
@@ -375,5 +470,336 @@ fn start_job(sh: &Arc<AgentShared>, agent_id: u64, assignment: &Value) {
             .unwrap_or_else(PoisonError::into_inner)
             .remove(&job_id);
         sh.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One dp response's sync payload, parsed (see [`super::dp`] for the
+/// field semantics).
+struct DpSync {
+    step: u64,
+    watermark: u64,
+    commits_from: u64,
+    commits: Vec<f32>,
+    shards: Vec<usize>,
+    pending: Vec<usize>,
+    primary: bool,
+    report_epochs: Vec<usize>,
+    stop: bool,
+    done: bool,
+}
+
+fn parse_sync(v: &Value) -> DpSync {
+    let nums = |key: &str| -> Vec<usize> {
+        v.get(key)
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_f64().map(|n| n as usize))
+            .collect()
+    };
+    DpSync {
+        step: v.get("step").as_f64().unwrap_or(0.0) as u64,
+        watermark: v.get("watermark").as_f64().unwrap_or(0.0) as u64,
+        commits_from: v.get("commits_from").as_f64().unwrap_or(0.0) as u64,
+        commits: v
+            .get("commits")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_f64().map(|n| n as f32))
+            .collect(),
+        shards: nums("shards"),
+        pending: nums("pending"),
+        primary: v.get("primary").as_bool().unwrap_or(false),
+        report_epochs: nums("report_epochs"),
+        stop: v.get("stop").as_bool().unwrap_or(false),
+        done: v.get("done").as_bool().unwrap_or(false),
+    }
+}
+
+/// Replay any commits in `s` this replica has not applied yet. The
+/// replica always requests `have = applied`, so the slice normally
+/// starts exactly at `applied`; the guards keep a malformed payload
+/// from corrupting the trajectory.
+fn apply_dp_commits(world: &mut DpWorld, timer: &mut PhaseTimer, applied: &mut u64, s: &DpSync) {
+    if s.watermark <= *applied || s.commits_from > *applied {
+        return;
+    }
+    let skip = (*applied - s.commits_from) as usize;
+    if skip >= s.commits.len() {
+        return;
+    }
+    world.catch_up(*applied, &s.commits[skip..], timer);
+    *applied += (s.commits.len() - skip) as u64;
+}
+
+/// Run one replica of a data-parallel job (see the module docs). The
+/// trajectory-bearing state never leaves this process: each step is
+/// eval-cycle → scalar report → barrier on the commit → identical
+/// local update. Epoch test metrics are computed by EVERY replica
+/// (parameters are bit-identical, so the numbers are too) and posted
+/// idempotently; only the final epoch's report — and the final
+/// checkpoint that must exist before it — are gated on being the
+/// primary, a duty that migrates if the primary is lost.
+fn run_dp_replica(
+    sh: &Arc<AgentShared>,
+    agent_id: u64,
+    job: u64,
+    cfg: &crate::config::Config,
+    stop: StopFlag,
+) -> Result<()> {
+    let dp = cfg.dp_spec().context("dp assignment for a non-dp job spec")?;
+    let (train_d, test_d) =
+        crate::data::generate(cfg.dataset, cfg.train_n, cfg.test_n, cfg.seed, cfg.npoints);
+    let spec = cfg.train_spec();
+    let mut world = DpWorld::new(cfg.model_enum(), spec.clone(), dp, train_d.len())?;
+    let mut timer = PhaseTimer::new();
+    let me = agent_id as f64;
+    let base = format!("/cluster/dp/{job}");
+    let post = |path: &str, body: &Value| -> Result<Value> {
+        let (status, v) = sh.post(&format!("{base}/{path}"), Some(body))?;
+        anyhow::ensure!(
+            status == 200,
+            "dp {path} rejected ({status}): {}",
+            json::to_string(&v)
+        );
+        Ok(v)
+    };
+    let post_epoch = |e: usize, tl: f32, ta: f32, lr: f32, secs: f64| -> Result<()> {
+        post(
+            "epoch",
+            &Value::obj(vec![
+                ("agent", Value::num(me)),
+                ("epoch", Value::num(e as f64)),
+                ("test_loss", Value::num(tl as f64)),
+                ("test_acc", Value::num(ta as f64)),
+                ("lr", Value::num(lr as f64)),
+                ("seconds", Value::num(secs)),
+            ]),
+        )?;
+        Ok(())
+    };
+
+    // join: the full commit log catches a late joiner up bit-exactly
+    let mut sync = parse_sync(&post(
+        "join",
+        &Value::obj(vec![("agent", Value::num(me)), ("have", Value::num(0))]),
+    )?);
+    let mut applied: u64 = 0;
+    apply_dp_commits(&mut world, &mut timer, &mut applied, &sync);
+
+    let spe = world.steps_per_epoch;
+    let total = world.total_steps();
+    let epochs = spec.epochs;
+    // per-epoch (test_loss, test_acc, lr), cadence-carried like the
+    // single-node loop; kept on every replica so the primary duty can
+    // migrate without losing history
+    let mut epoch_metrics: Vec<Option<(f32, f32, f32)>> = vec![None; epochs];
+    let mut carry = (f32::NAN, 0.0f32);
+    let mut best = 0.0f32;
+    let mut epoch_t0 = Instant::now();
+    let mut saved_final = false;
+
+    let mut loader: Option<Loader> = None;
+    let mut loader_epoch = usize::MAX;
+
+    'steps: while applied < total {
+        if stop.should_stop() || sh.silent() || sync.stop {
+            break 'steps;
+        }
+        let t = applied;
+        let epoch = (t / spe) as usize;
+        if loader_epoch != epoch {
+            let mut l = Loader::new(&train_d, spec.batch, spec.seed ^ 0xDA7A, epoch as u64);
+            for _ in 0..(t % spe) {
+                l.next(); // a catch-up landed mid-epoch: skip into place
+            }
+            loader = Some(l);
+            loader_epoch = epoch;
+        }
+        let b = loader
+            .as_mut()
+            .and_then(|l| l.next())
+            .context("dp loader exhausted before the epoch's steps")?;
+
+        let shards = sync.shards.clone();
+        anyhow::ensure!(!shards.is_empty(), "dp replica owns no shards (lease lost?)");
+        let evals = world.eval_cycle(&b, t, &shards, &mut timer)?;
+        let report_body = |evals: &[ShardEval]| {
+            Value::obj(vec![
+                ("agent", Value::num(me)),
+                ("step", Value::num(t as f64)),
+                // reports are only posted before commit t lands, so the
+                // replica's applied watermark is exactly t here
+                ("have", Value::num(t as f64)),
+                ("reports", Value::Arr(evals.iter().map(|e| e.to_json()).collect())),
+            ])
+        };
+        sync = parse_sync(&post("step", &report_body(&evals))?);
+
+        // barrier: wait for step t to commit, evaluating any shards
+        // absorbed from a lost replica along the way
+        let mut wait_ms = 1u64;
+        loop {
+            if sync.step == t && !sync.pending.is_empty() {
+                let extra = world.eval_extra(&b, t, &sync.pending, &mut timer)?;
+                sync = parse_sync(&post("step", &report_body(&extra))?);
+                continue;
+            }
+            apply_dp_commits(&mut world, &mut timer, &mut applied, &sync);
+            if applied > t || sync.done || sync.stop {
+                break;
+            }
+            if stop.should_stop() || sh.silent() {
+                break 'steps;
+            }
+            std::thread::sleep(Duration::from_millis(wait_ms));
+            wait_ms = (wait_ms * 2).min(50);
+            sync = parse_sync(&post(
+                "commits",
+                &Value::obj(vec![("agent", Value::num(me)), ("have", Value::num(applied as f64))]),
+            )?);
+        }
+
+        // epoch boundary: mirror the single-node eval cadence exactly
+        if applied > t && applied % spe == 0 {
+            let e = (applied / spe - 1) as usize;
+            let is_last = e + 1 == epochs;
+            let lr = world.lr_for_epoch(e);
+            let (tl, ta) = if e % spec.eval_every == 0 || is_last {
+                let t0 = Instant::now();
+                let r = world.evaluate(&test_d)?;
+                timer.add(Phase::Eval, t0.elapsed());
+                r
+            } else {
+                carry
+            };
+            carry = (tl, ta);
+            best = best.max(ta);
+            epoch_metrics[e] = Some((tl, ta, lr));
+            let secs = epoch_t0.elapsed().as_secs_f64();
+            epoch_t0 = Instant::now();
+            if !is_last {
+                // idempotent: the coordinator keeps the first report
+                post_epoch(e, tl, ta, lr, secs)?;
+            }
+        }
+    }
+
+    // end game: the primary saves the final checkpoint, then posts the
+    // final (and any never-reported) epochs, which completes the run;
+    // everyone else waits for `done` — and inherits the duty if the
+    // primary is lost before reporting
+    let mut wait_ms = 2u64;
+    while applied >= total && !sync.done && !sync.stop && !stop.should_stop() && !sh.silent() {
+        if sync.primary && !sync.report_epochs.is_empty() {
+            if !saved_final {
+                if let Some(path) = &cfg.save_checkpoint {
+                    let last = epoch_metrics[epochs - 1];
+                    let state = TrainState {
+                        epochs_done: epochs,
+                        step: total,
+                        best_test_acc: best,
+                        last_test_loss: last.map_or(f32::NAN, |m| m.0),
+                        last_test_acc: last.map_or(0.0, |m| m.1),
+                        spec: spec.to_json(),
+                    };
+                    checkpoint::save_with_state(path, &world.snapshot(), Some(&state))
+                        .with_context(|| format!("writing dp final checkpoint {path}"))?;
+                }
+                saved_final = true;
+            }
+            for &e in &sync.report_epochs {
+                if e >= epochs {
+                    continue;
+                }
+                let (tl, ta, lr) = match epoch_metrics[e] {
+                    Some(m) => m,
+                    None => {
+                        // joined after this epoch's boundary: evaluate
+                        // with the final params (exact for the last
+                        // epoch, best-effort for a migration backlog)
+                        let r = world.evaluate(&test_d)?;
+                        (r.0, r.1, world.lr_for_epoch(e))
+                    }
+                };
+                best = best.max(ta);
+                post_epoch(e, tl, ta, lr, epoch_t0.elapsed().as_secs_f64())?;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(wait_ms));
+        wait_ms = (wait_ms * 2).min(100);
+        sync = parse_sync(&post(
+            "commits",
+            &Value::obj(vec![("agent", Value::num(me)), ("have", Value::num(applied as f64))]),
+        )?);
+    }
+
+    // graceful exit frees our shards right away; a crash (silent) skips
+    // it and lets the lease machinery reclaim them
+    if !sh.silent() {
+        let _ = post("leave", &Value::obj(vec![("agent", Value::num(me))]));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_backoff_grows_caps_and_resets() {
+        // streak 0 = active: exactly the configured cadence
+        assert_eq!(idle_backoff(500, 0, 7), 500);
+        // grows with the streak, never below base, never above cap+25%
+        let mut prev = 500;
+        for streak in 1..10 {
+            let d = idle_backoff(500, streak, 7);
+            assert!(d >= 500, "below base at streak {streak}: {d}");
+            assert!(
+                d <= IDLE_BACKOFF_CAP_MS + IDLE_BACKOFF_CAP_MS / 4,
+                "above jittered cap at streak {streak}: {d}"
+            );
+            if streak <= 2 {
+                assert!(d >= prev / 2, "collapsed at streak {streak}");
+            }
+            prev = d;
+        }
+        // deterministic for a given (salt, streak)
+        assert_eq!(idle_backoff(500, 5, 42), idle_backoff(500, 5, 42));
+        // different salts jitter differently somewhere in the ladder
+        let a: Vec<u64> = (1..8).map(|s| idle_backoff(500, s, 1)).collect();
+        let b: Vec<u64> = (1..8).map(|s| idle_backoff(500, s, 2)).collect();
+        assert_ne!(a, b, "jitter must depend on the salt");
+    }
+
+    #[test]
+    fn idle_backoff_handles_tiny_and_huge_poll_ms() {
+        assert_eq!(idle_backoff(0, 0, 1), 1);
+        assert!(idle_backoff(1, 30, 1) >= 1);
+        // a poll_ms above the cap is respected (never sleep less than
+        // the configured cadence)
+        assert!(idle_backoff(5_000, 3, 1) >= 5_000);
+    }
+
+    #[test]
+    fn sync_payload_parses_losslessly() {
+        let v = json::parse(
+            r#"{"step": 3, "watermark": 3, "commits_from": 1,
+                "commits": [0.5, -0.25], "shards": [0, 2], "pending": [2],
+                "primary": true, "report_epochs": [1], "stop": false, "done": false}"#,
+        )
+        .unwrap();
+        let s = parse_sync(&v);
+        assert_eq!((s.step, s.watermark, s.commits_from), (3, 3, 1));
+        assert_eq!(s.commits, vec![0.5, -0.25]);
+        assert_eq!(s.shards, vec![0, 2]);
+        assert_eq!(s.pending, vec![2]);
+        assert!(s.primary && !s.stop && !s.done);
+        assert_eq!(s.report_epochs, vec![1]);
+        // defaults for a missing field
+        let s = parse_sync(&json::parse("{}").unwrap());
+        assert_eq!(s.watermark, 0);
+        assert!(s.shards.is_empty() && !s.primary);
     }
 }

@@ -32,6 +32,7 @@
 //! 409 (stale assignment) and changes nothing; an agent whose poll
 //! answers 404 knows it was presumed dead and re-registers fresh.
 
+use super::dp::DpCoordinator;
 use super::protocol::{error_json, AgentState, JobSpec};
 use super::queue::JobQueue;
 use super::registry::{JobOutcome, JobRegistry};
@@ -80,6 +81,11 @@ pub struct Dispatcher {
     opts: ClusterOptions,
     queue: Arc<JobQueue>,
     registry: Arc<JobRegistry>,
+    /// Shard leases + step barriers of data-parallel runs (the
+    /// `/cluster/dp/*` wire). Lives here because dp membership rides
+    /// on the same agent table, leases and reaper as whole-job
+    /// assignments.
+    pub dp: DpCoordinator,
     inner: Mutex<DispatchInner>,
     stop: AtomicBool,
     reaper: Mutex<Option<JoinHandle<()>>>,
@@ -97,7 +103,11 @@ impl Dispatcher {
         registry: Arc<JobRegistry>,
     ) -> Arc<Dispatcher> {
         let tick = Duration::from_millis((opts.lease_ms / 4).clamp(25, 250));
+        // never-owned dp shards stay reserved for fresh agents for half
+        // a lease (capped at 2s) before members may absorb them
+        let grace = Duration::from_millis((opts.lease_ms / 2).min(2_000));
         let d = Arc::new(Dispatcher {
+            dp: DpCoordinator::new(registry.clone(), grace),
             opts,
             queue,
             registry,
@@ -114,6 +124,7 @@ impl Dispatcher {
                     return;
                 }
                 d.reap_expired();
+                d.dp.tick();
                 drop(d);
                 std::thread::sleep(tick);
             })
@@ -205,7 +216,7 @@ impl Dispatcher {
         // requeue lost assignments before handing out work, so the
         // freed slots (and even the lost jobs themselves) are
         // available to this very poll
-        self.requeue_all(&lost);
+        self.requeue_all(agent, &lost);
         // stop fan-out: cancelled (or shutdown-stopped) running jobs
         let stop: Vec<Value> = assigned
             .iter()
@@ -217,6 +228,15 @@ impl Dispatcher {
         let mut nassigned = assigned.len();
         while nassigned < capacity {
             let Some(id) = self.queue.try_pop() else { break };
+            // a dp job is adopted by the dp coordinator instead of
+            // assigned wholesale: its shards go out through the offer
+            // pass below (this poll included)
+            if let Some(dp) = self.registry.dp_of(id) {
+                if let Some(spec) = self.registry.claim_for_dp(id) {
+                    self.dp.adopt(id, spec, dp);
+                }
+                continue;
+            }
             // a pop that fails to claim was cancelled while queued
             let Some(spec) = self.registry.claim_for_agent(id, agent) else { continue };
             {
@@ -238,6 +258,31 @@ impl Dispatcher {
                 ("spec", spec.to_json()),
             ]));
             nassigned += 1;
+        }
+        // dp shard offers: live runs this agent is not yet a member of
+        // lease one shard each into the remaining free slots
+        for (id, shard, spec) in self.dp.offer(agent, capacity.saturating_sub(nassigned)) {
+            {
+                let mut inner = self.lock();
+                match inner.agents.get_mut(&agent) {
+                    Some(a) => {
+                        if !a.assigned.contains(&id) {
+                            a.assigned.push(id);
+                        }
+                    }
+                    None => {
+                        // reaped between locks: give the shard back
+                        drop(inner);
+                        self.dp.agent_lost(id, agent);
+                        return unknown_agent();
+                    }
+                }
+            }
+            assign.push(Value::obj(vec![
+                ("id", Value::num(id as f64)),
+                ("spec", spec.to_json()),
+                ("dp", Value::obj(vec![("shard", Value::num(shard as f64))])),
+            ]));
         }
         (
             200,
@@ -335,7 +380,7 @@ impl Dispatcher {
                 None => return unknown_agent(),
             }
         };
-        let requeued = self.requeue_all(&assigned);
+        let requeued = self.requeue_all(agent, &assigned);
         (
             200,
             Value::obj(vec![
@@ -400,7 +445,7 @@ impl Dispatcher {
                 .collect()
         };
         for (id, jobs) in expired {
-            let n = self.requeue_all(&jobs);
+            let n = self.requeue_all(id, &jobs);
             eprintln!(
                 "serve: agent {id} lease expired ({} ms); requeued {n} job(s)",
                 self.opts.lease_ms
@@ -408,9 +453,15 @@ impl Dispatcher {
         }
     }
 
-    fn requeue_all(&self, jobs: &[u64]) -> usize {
+    /// Hand a vanished agent's jobs back: dp shards return to their
+    /// run's free pool (the surviving quorum absorbs them), whole-job
+    /// assignments requeue from their last checkpoint.
+    fn requeue_all(&self, agent: u64, jobs: &[u64]) -> usize {
         let mut n = 0;
         for &id in jobs {
+            if self.dp.agent_lost(id, agent) {
+                continue;
+            }
             if let Some(priority) = self.registry.requeue_interrupted(id) {
                 if self.queue.push_admitted(id, priority) {
                     n += 1;
@@ -443,7 +494,16 @@ impl Dispatcher {
             let inner = self.lock();
             inner.agents.values().flat_map(|a| a.assigned.iter().copied()).collect()
         };
+        // dp runs complete themselves (once each); finished dp ids may
+        // still linger in assignment lists until the next poll, so skip
+        // anything already terminal rather than clobbering its state
+        let dp_live = self.dp.shutdown();
         for id in assigned {
+            if dp_live.contains(&id)
+                || self.registry.state_of(id).is_some_and(|s| s.is_terminal())
+            {
+                continue;
+            }
             self.registry.complete(
                 id,
                 JobOutcome { best_test_acc: 0.0, timer: PhaseTimer::new(), stopped: true },
@@ -460,7 +520,7 @@ fn stale_assignment() -> (u16, Value) {
     (409, error_json("stale assignment (the job was requeued)"))
 }
 
-fn parse_body(body: &[u8]) -> Result<Value, (u16, Value)> {
+pub(crate) fn parse_body(body: &[u8]) -> Result<Value, (u16, Value)> {
     let text = std::str::from_utf8(body)
         .map_err(|_| (400, error_json("body must be utf-8 JSON")))?;
     if text.trim().is_empty() {

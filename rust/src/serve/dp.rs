@@ -1,0 +1,630 @@
+//! Coordinator-side bookkeeping for seed-compressed data-parallel ZO:
+//! shard leases, the per-step commit barrier and the `/cluster/dp/*`
+//! wire.
+//!
+//! One [`DpRun`] exists per adopted dp job. Its `replicas` shards are
+//! leased to agents through the regular poll hand-out (the assignment
+//! gains a `"dp": {"shard": S}` object); each replica then speaks the
+//! dp wire directly:
+//!
+//! * `join`   — sync up: the full commit log so far (catch-up replay)
+//! * `step`   — report `ShardEval`s for the current step; when all
+//!              shards are in, the coordinator aggregates the deltas,
+//!              projects the gradient and appends it to the commit log
+//! * `commits`— poll for new commits past a watermark (the barrier
+//!              wait of replicas that already reported)
+//! * `epoch`  — the primary replica's test metrics for a finished
+//!              epoch; merged with the coordinator's train-side
+//!              aggregate into one [`EpochStats`] record
+//! * `leave`  — graceful exit (run finished, stop, or agent shutdown)
+//!
+//! Every response carries the same sync payload: current step, commit
+//! watermark + new commits, the caller's shard set, which of those
+//! still owe a report (`pending`), a `primary` flag and `stop`/`done`.
+//!
+//! # Stragglers, loss and quorum
+//!
+//! The commit barrier waits for ALL shards, but shard ownership moves:
+//! when an agent is reaped (lease expiry, deregister, lost-ack
+//! reconcile) its shards are freed, and any surviving member that
+//! calls in absorbs them — provided the surviving membership is at
+//! least `min_replicas`. The absorber learns its new shards from the
+//! sync payload, re-evaluates them for the in-flight step (bit-exactly
+//! restoring its params around the extra forwards) and the barrier
+//! completes from the surviving quorum. Shards never owned by anyone
+//! are absorbable once a short grace window after adoption passes, so
+//! a cluster smaller than `replicas` still completes the job.
+//! Membership changes are journaled (`dp_member` events) as an audit
+//! trail; a dp job interrupted by coordinator restart reruns from
+//! scratch (dp forbids resume).
+
+use super::protocol::{error_json, JobSpec};
+use super::registry::{JobOutcome, JobRegistry};
+use crate::coordinator::dp_session::{aggregate, DpSpec, ShardEval};
+use crate::coordinator::metrics::EpochStats;
+use crate::coordinator::zo;
+use crate::telemetry::PhaseTimer;
+use crate::util::json::Value;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// One live data-parallel run.
+struct DpRun {
+    spec: JobSpec,
+    dp: DpSpec,
+    eps: f32,
+    g_clip: f32,
+    epochs: usize,
+    steps_per_epoch: u64,
+    total_steps: u64,
+    created: Instant,
+    /// Shard → owning agent (`None` = free / offerable).
+    owner: Vec<Option<u64>>,
+    /// Shards that have had an owner at least once are absorbable
+    /// immediately when freed (the lease already burned the wait);
+    /// never-owned shards wait out the post-adoption grace window.
+    ever_owned: Vec<bool>,
+    /// Reports for the CURRENT (uncommitted) step, indexed by shard.
+    reports: Vec<Option<ShardEval>>,
+    /// The commit log: projected gradient per committed step.
+    commits: Vec<f32>,
+    // train-side aggregation of the in-flight epoch
+    ep_loss: f64,
+    ep_correct: u64,
+    ep_seen: u64,
+    ep_steps: u64,
+    /// Per-epoch `(train_loss, train_acc)` once all its steps committed.
+    epoch_train: Vec<Option<(f32, f32)>>,
+    /// Epochs already recorded in the registry.
+    recorded: Vec<bool>,
+    best_test_acc: f32,
+    stopping: bool,
+    done: bool,
+}
+
+impl DpRun {
+    fn step(&self) -> u64 {
+        self.commits.len() as u64
+    }
+
+    fn owned(&self, agent: u64) -> Vec<usize> {
+        (0..self.dp.replicas).filter(|&s| self.owner[s] == Some(agent)).collect()
+    }
+
+    fn member_count(&self) -> usize {
+        let mut seen: Vec<u64> = self.owner.iter().filter_map(|o| *o).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        seen.len()
+    }
+
+    /// The primary is the owner of the lowest owned shard — it posts
+    /// epoch metrics and writes the final checkpoint. Primacy migrates
+    /// with the shard, so losing the primary only moves the duty.
+    fn primary(&self) -> Option<u64> {
+        self.owner.iter().find_map(|o| *o)
+    }
+
+    /// Commit the current step if every shard has reported: aggregate
+    /// in fixed shard order, project the gradient, append to the log
+    /// and roll the train-side epoch accumulators.
+    fn try_commit(&mut self) -> bool {
+        if self.done || self.step() >= self.total_steps {
+            return false;
+        }
+        if self.reports.iter().any(Option::is_none) {
+            return false;
+        }
+        let evals: Vec<ShardEval> = self.reports.iter().map(|r| r.unwrap()).collect();
+        let agg = aggregate(&evals, self.dp.aggregate);
+        let g = zo::projected_gradient_from_delta(agg.delta, self.eps, self.g_clip);
+        let step = self.step();
+        self.commits.push(g);
+        self.ep_loss += agg.loss as f64;
+        self.ep_correct += agg.correct as u64;
+        self.ep_seen += agg.seen as u64;
+        self.ep_steps += 1;
+        if (step + 1) % self.steps_per_epoch == 0 {
+            let e = (step / self.steps_per_epoch) as usize;
+            let loss = (self.ep_loss / self.ep_steps.max(1) as f64) as f32;
+            let acc = if self.ep_seen > 0 {
+                self.ep_correct as f32 / self.ep_seen as f32
+            } else {
+                0.0
+            };
+            self.epoch_train[e] = Some((loss, acc));
+            self.ep_loss = 0.0;
+            self.ep_correct = 0;
+            self.ep_seen = 0;
+            self.ep_steps = 0;
+        }
+        for r in &mut self.reports {
+            *r = None;
+        }
+        true
+    }
+
+    /// The sync payload every dp response carries, from `agent`'s view.
+    fn sync_json(&self, agent: u64, have: usize) -> Value {
+        let shards = self.owned(agent);
+        let from = have.min(self.commits.len());
+        let pending: Vec<Value> = if self.done || self.stopping || self.step() >= self.total_steps
+        {
+            Vec::new()
+        } else {
+            shards
+                .iter()
+                .filter(|&&s| self.reports[s].is_none())
+                .map(|&s| Value::num(s as f64))
+                .collect()
+        };
+        let primary = self.primary() == Some(agent);
+        let report_epochs: Vec<Value> = if primary {
+            (0..self.epochs)
+                .filter(|&e| self.epoch_train[e].is_some() && !self.recorded[e])
+                .map(|e| Value::num(e as f64))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Value::obj(vec![
+            ("step", Value::num(self.step() as f64)),
+            ("watermark", Value::num(self.commits.len() as f64)),
+            ("commits_from", Value::num(from as f64)),
+            (
+                "commits",
+                Value::Arr(self.commits[from..].iter().map(|&g| Value::num(g as f64)).collect()),
+            ),
+            (
+                "shards",
+                Value::Arr(shards.iter().map(|&s| Value::num(s as f64)).collect()),
+            ),
+            ("pending", Value::Arr(pending)),
+            ("primary", Value::Bool(primary)),
+            ("report_epochs", Value::Arr(report_epochs)),
+            ("stop", Value::Bool(self.stopping)),
+            ("done", Value::Bool(self.done)),
+        ])
+    }
+}
+
+/// Shard leases + step barriers for every live dp run. Owned by the
+/// [`super::dispatch::Dispatcher`]; lock order is `runs` before any
+/// registry lock (never the reverse).
+pub struct DpCoordinator {
+    registry: Arc<JobRegistry>,
+    /// How long after adoption never-owned shards stay reserved for
+    /// fresh (non-member) agents before members may absorb them.
+    grace: Duration,
+    runs: Mutex<HashMap<u64, DpRun>>,
+}
+
+impl DpCoordinator {
+    pub fn new(registry: Arc<JobRegistry>, grace: Duration) -> DpCoordinator {
+        DpCoordinator { registry, grace, runs: Mutex::new(HashMap::new()) }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, HashMap<u64, DpRun>> {
+        self.runs.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn runs_active(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Adopt a freshly-claimed dp job: build its run state. Shards all
+    /// start free and are leased out through [`DpCoordinator::offer`].
+    pub fn adopt(&self, id: u64, spec: JobSpec, dp: DpSpec) {
+        let c = &spec.config;
+        let steps_per_epoch = c.train_n.div_ceil(c.batch) as u64;
+        let run = DpRun {
+            eps: c.eps,
+            g_clip: c.g_clip,
+            epochs: c.epochs,
+            steps_per_epoch,
+            total_steps: c.epochs as u64 * steps_per_epoch,
+            created: Instant::now(),
+            owner: vec![None; dp.replicas],
+            ever_owned: vec![false; dp.replicas],
+            reports: vec![None; dp.replicas],
+            commits: Vec::new(),
+            ep_loss: 0.0,
+            ep_correct: 0,
+            ep_seen: 0,
+            ep_steps: 0,
+            epoch_train: vec![None; c.epochs],
+            recorded: vec![false; c.epochs],
+            best_test_acc: 0.0,
+            stopping: false,
+            done: false,
+            spec,
+            dp,
+        };
+        self.lock().insert(id, run);
+        self.gauge_runs();
+    }
+
+    /// Offer free shards of non-member runs to a polling agent, up to
+    /// `slots` (each offer is a new job assignment and consumes one
+    /// capacity slot). Returns `(job, shard, spec)` triples; the
+    /// dispatcher serializes them into poll assignments.
+    pub fn offer(&self, agent: u64, slots: usize) -> Vec<(u64, usize, JobSpec)> {
+        let mut out = Vec::new();
+        if slots == 0 {
+            return out;
+        }
+        let mut runs = self.lock();
+        for (&id, run) in runs.iter_mut() {
+            if out.len() >= slots || run.stopping || run.done {
+                if out.len() >= slots {
+                    break;
+                }
+                continue;
+            }
+            if run.owned(agent).is_empty() {
+                if let Some(s) = (0..run.dp.replicas).find(|&s| run.owner[s].is_none()) {
+                    run.owner[s] = Some(agent);
+                    run.ever_owned[s] = true;
+                    out.push((id, s, run.spec.clone()));
+                }
+            }
+        }
+        drop(runs);
+        for (id, s, _) in &out {
+            self.registry.journal_dp(*id, "join", agent, &[*s]);
+        }
+        if !out.is_empty() {
+            self.gauge_members();
+        }
+        out
+    }
+
+    /// Free shards owned by members at least `min_replicas` strong may
+    /// absorb: freed-by-loss shards immediately, never-owned shards
+    /// after the post-adoption grace window. The caller is a provably
+    /// live member (it is mid-request), so it takes them all.
+    fn absorb_free(&self, run: &mut DpRun, agent: u64) -> Vec<usize> {
+        if run.stopping || run.done || run.owned(agent).is_empty() {
+            return Vec::new();
+        }
+        if run.member_count() < run.dp.min_replicas {
+            return Vec::new();
+        }
+        let mut took = Vec::new();
+        for s in 0..run.dp.replicas {
+            if run.owner[s].is_none()
+                && (run.ever_owned[s] || run.created.elapsed() >= self.grace)
+            {
+                run.owner[s] = Some(agent);
+                run.ever_owned[s] = true;
+                took.push(s);
+            }
+        }
+        took
+    }
+
+    fn post_absorb(&self, id: u64, agent: u64, took: &[usize]) {
+        if took.is_empty() {
+            return;
+        }
+        self.registry.journal_dp(id, "absorb", agent, took);
+        crate::metrics::global()
+            .counter(
+                "repro_dp_shard_moves_total",
+                "dp shards re-leased to a surviving member after agent loss (or a small cluster absorbing unclaimed shards)",
+                &[],
+            )
+            .add(took.len() as u64);
+    }
+
+    /// `POST /cluster/dp/{job}/join` — body `{"agent": A, "have": H?}`.
+    /// Answers the sync payload with the commit log from `H` (default
+    /// 0), i.e. everything a fresh replica needs to catch up.
+    pub fn join(&self, job: u64, body: &[u8]) -> (u16, Value) {
+        self.sync_request(job, body, "join")
+    }
+
+    /// `POST /cluster/dp/{job}/commits` — body `{"agent": A, "have": H}`.
+    /// The barrier wait: replicas that already reported poll here until
+    /// the watermark passes their step (absorbing freed shards while
+    /// they wait, so a lost replica cannot stall the barrier).
+    pub fn commits(&self, job: u64, body: &[u8]) -> (u16, Value) {
+        self.sync_request(job, body, "commits")
+    }
+
+    fn sync_request(&self, job: u64, body: &[u8], what: &str) -> (u16, Value) {
+        let v = match super::dispatch::parse_body(body) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let Some(agent) = v.get("agent").as_i64().map(|a| a as u64) else {
+            return (400, error_json(&format!("dp {what} needs an agent id")));
+        };
+        let have = v.get("have").as_i64().unwrap_or(0).max(0) as usize;
+        let stop = self.registry.stop_requested(job);
+        let mut runs = self.lock();
+        let Some(run) = runs.get_mut(&job) else {
+            return unknown_run();
+        };
+        if stop {
+            run.stopping = true;
+        }
+        if run.owned(agent).is_empty() && !run.done && !run.stopping {
+            return (409, error_json("agent owns no shard of this dp run"));
+        }
+        let took = self.absorb_free(run, agent);
+        let sync = run.sync_json(agent, have);
+        drop(runs);
+        self.post_absorb(job, agent, &took);
+        (200, sync)
+    }
+
+    /// `POST /cluster/dp/{job}/step` — body
+    /// `{"agent": A, "step": T, "have": H, "reports": [ShardEval…]}`.
+    /// First report per shard wins (replicas are deterministic, so
+    /// duplicates are identical); a report for an already-committed
+    /// step is counted as stale and answered with the sync payload so
+    /// the straggler fast-forwards.
+    pub fn step(&self, job: u64, body: &[u8]) -> (u16, Value) {
+        let v = match super::dispatch::parse_body(body) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let Some(agent) = v.get("agent").as_i64().map(|a| a as u64) else {
+            return (400, error_json("dp step needs an agent id"));
+        };
+        let step = v.get("step").as_i64().unwrap_or(-1);
+        let have = v.get("have").as_i64().unwrap_or(0).max(0) as usize;
+        let stop = self.registry.stop_requested(job);
+        let m = crate::metrics::global();
+        let mut runs = self.lock();
+        let Some(run) = runs.get_mut(&job) else {
+            return unknown_run();
+        };
+        if stop {
+            run.stopping = true;
+        }
+        if run.owned(agent).is_empty() && !run.done && !run.stopping {
+            return (409, error_json("agent owns no shard of this dp run"));
+        }
+        if step >= 0 && step as u64 == run.step() {
+            let mut fresh = 0u64;
+            if let Some(arr) = v.get("reports").as_arr() {
+                for r in arr {
+                    let Ok(e) = ShardEval::from_json(r) else { continue };
+                    if e.shard < run.dp.replicas && run.reports[e.shard].is_none() {
+                        run.reports[e.shard] = Some(e);
+                        fresh += 1;
+                    }
+                }
+            }
+            m.counter(
+                "repro_dp_steps_total",
+                "dp shard step-reports accepted by the coordinator",
+                &[],
+            )
+            .add(fresh);
+            if run.try_commit() {
+                m.counter(
+                    "repro_dp_commits_total",
+                    "dp steps committed (all shards aggregated, gradient projected)",
+                    &[],
+                )
+                .inc();
+            }
+        } else {
+            m.counter(
+                "repro_dp_stale_reports_total",
+                "dp step-reports for an already-committed step (stragglers fast-forwarded)",
+                &[],
+            )
+            .inc();
+        }
+        let took = self.absorb_free(run, agent);
+        let sync = run.sync_json(agent, have);
+        drop(runs);
+        self.post_absorb(job, agent, &took);
+        (200, sync)
+    }
+
+    /// `POST /cluster/dp/{job}/epoch` — the primary's test metrics for
+    /// a fully-committed epoch: `{"agent": A, "epoch": E, "test_loss":
+    /// L, "test_acc": C, "lr": R, "seconds": S}`. Merged with the
+    /// coordinator's train-side aggregate into one registry epoch
+    /// record; recording the final epoch completes the job.
+    pub fn epoch(&self, job: u64, body: &[u8]) -> (u16, Value) {
+        let v = match super::dispatch::parse_body(body) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let epoch = v.get("epoch").as_i64().unwrap_or(-1);
+        let (stats, final_epoch, best) = {
+            let mut runs = self.lock();
+            let Some(run) = runs.get_mut(&job) else {
+                return unknown_run();
+            };
+            if epoch < 0 || epoch as usize >= run.epochs {
+                return (400, error_json("epoch out of range"));
+            }
+            let e = epoch as usize;
+            let Some((train_loss, train_acc)) = run.epoch_train[e] else {
+                return (409, error_json("epoch not fully committed yet"));
+            };
+            if run.recorded[e] {
+                return (200, Value::obj(vec![("ok", Value::Bool(true)), ("dup", Value::Bool(true))]));
+            }
+            run.recorded[e] = true;
+            let test_acc = v.get("test_acc").as_f64().unwrap_or(0.0) as f32;
+            run.best_test_acc = run.best_test_acc.max(test_acc);
+            let final_epoch = e + 1 == run.epochs;
+            if final_epoch {
+                run.done = true;
+            }
+            (
+                EpochStats {
+                    epoch: e,
+                    train_loss,
+                    train_acc,
+                    test_loss: v.get("test_loss").as_f64().unwrap_or(f64::NAN) as f32,
+                    test_acc,
+                    lr: v.get("lr").as_f64().unwrap_or(0.0) as f32,
+                    seconds: v.get("seconds").as_f64().unwrap_or(0.0),
+                    phases: Vec::new(),
+                },
+                final_epoch,
+                run.best_test_acc,
+            )
+        };
+        self.registry.record_epoch(job, stats);
+        if final_epoch {
+            self.registry.complete(
+                job,
+                JobOutcome { best_test_acc: best, timer: PhaseTimer::new(), stopped: false },
+            );
+        }
+        (
+            200,
+            Value::obj(vec![("ok", Value::Bool(true)), ("done", Value::Bool(final_epoch))]),
+        )
+    }
+
+    /// `POST /cluster/dp/{job}/leave` — body `{"agent": A}`. Frees the
+    /// agent's shards. When the last member leaves a finished (or
+    /// stopping) run, the run state is dropped — and a stopping run
+    /// that never finished is completed as stopped.
+    pub fn leave(&self, job: u64, body: &[u8]) -> (u16, Value) {
+        let v = match super::dispatch::parse_body(body) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let Some(agent) = v.get("agent").as_i64().map(|a| a as u64) else {
+            return (400, error_json("dp leave needs an agent id"));
+        };
+        let freed = self.release(job, agent, "leave");
+        if freed.is_none() {
+            return unknown_run();
+        }
+        (200, Value::obj(vec![("ok", Value::Bool(true))]))
+    }
+
+    /// The dispatcher's hook for reaped / deregistered / lost-ack
+    /// agents: frees the agent's shards instead of requeueing the whole
+    /// job. Returns false when `job` is not a live dp run (the caller
+    /// falls back to the regular requeue path).
+    pub fn agent_lost(&self, job: u64, agent: u64) -> bool {
+        self.release(job, agent, "lost").is_some()
+    }
+
+    /// Shared leave/lost path. Returns the freed shards, or None if
+    /// the job has no live dp run.
+    fn release(&self, job: u64, agent: u64, action: &str) -> Option<Vec<usize>> {
+        let (freed, finalize) = {
+            let mut runs = self.lock();
+            let run = runs.get_mut(&job)?;
+            let freed = run.owned(agent);
+            for &s in &freed {
+                run.owner[s] = None;
+            }
+            let stranded = run.member_count() == 0;
+            let mut finalize = false;
+            if stranded && (run.done || run.stopping) {
+                finalize = !run.done && run.stopping;
+                runs.remove(&job);
+            }
+            (freed, finalize)
+        };
+        if !freed.is_empty() {
+            self.registry.journal_dp(job, action, agent, &freed);
+        }
+        if finalize {
+            let best = 0.0; // complete() maxes with the recorded epochs' best
+            self.registry.complete(
+                job,
+                JobOutcome { best_test_acc: best, timer: PhaseTimer::new(), stopped: true },
+            );
+        }
+        self.gauge_members();
+        self.gauge_runs();
+        Some(freed)
+    }
+
+    /// Reaper-tick hook: propagate stop requests into runs whose
+    /// members may all be gone (so a cancelled, fully-stranded run
+    /// still reaches a terminal state) and drop finished husks.
+    pub fn tick(&self) {
+        let mut finalize = Vec::new();
+        {
+            let mut runs = self.lock();
+            let ids: Vec<u64> = runs.keys().copied().collect();
+            for id in ids {
+                let stop = self.registry.stop_requested(id);
+                let run = runs.get_mut(&id).unwrap();
+                if stop {
+                    run.stopping = true;
+                }
+                if run.member_count() == 0 && (run.done || run.stopping) {
+                    if !run.done && run.stopping {
+                        finalize.push(id);
+                    }
+                    runs.remove(&id);
+                }
+            }
+        }
+        for id in &finalize {
+            let best = 0.0;
+            self.registry.complete(
+                *id,
+                JobOutcome { best_test_acc: best, timer: PhaseTimer::new(), stopped: true },
+            );
+        }
+        if !finalize.is_empty() {
+            self.gauge_runs();
+        }
+    }
+
+    /// Server shutdown: complete every unfinished run as stopped (the
+    /// registry already marked running jobs interrupted) and drop all
+    /// run state. Returns the ids that were live, so the dispatcher
+    /// skips its own completion pass for them.
+    pub fn shutdown(&self) -> Vec<u64> {
+        let drained: Vec<(u64, bool)> = {
+            let mut runs = self.lock();
+            runs.drain().map(|(id, run)| (id, run.done)).collect()
+        };
+        let mut ids = Vec::new();
+        for (id, done) in drained {
+            if !done {
+                let best = 0.0;
+                self.registry.complete(
+                    id,
+                    JobOutcome { best_test_acc: best, timer: PhaseTimer::new(), stopped: true },
+                );
+            }
+            ids.push(id);
+        }
+        self.gauge_runs();
+        ids
+    }
+
+    fn gauge_runs(&self) {
+        crate::metrics::global()
+            .gauge("repro_dp_runs", "Live data-parallel runs on this coordinator", &[])
+            .set(self.lock().len() as f64);
+    }
+
+    fn gauge_members(&self) {
+        let members: usize = self.lock().values().map(|r| r.member_count()).sum();
+        crate::metrics::global()
+            .gauge(
+                "repro_dp_members",
+                "Agents currently holding dp shards (summed over runs)",
+                &[],
+            )
+            .set(members as f64);
+    }
+}
+
+fn unknown_run() -> (u16, Value) {
+    (404, error_json("no live dp run for this job"))
+}

@@ -39,6 +39,11 @@
 //! | POST /cluster/agents/{a}/deregister      | graceful leave (requeues)   |
 //! | POST /cluster/agents/{a}/jobs/{j}/epoch  | per-epoch progress          |
 //! | POST /cluster/agents/{a}/jobs/{j}/done   | terminal outcome            |
+//! | POST /cluster/dp/{j}/join                | dp replica sync / catch-up  |
+//! | POST /cluster/dp/{j}/step                | dp shard step-report        |
+//! | POST /cluster/dp/{j}/commits             | dp commit watermark poll    |
+//! | POST /cluster/dp/{j}/epoch               | dp epoch test metrics       |
+//! | POST /cluster/dp/{j}/leave               | dp replica leaves the run   |
 
 use super::dispatch::{ClusterOptions, Dispatcher};
 use super::events::{Poll, Subscriber, DEFAULT_SUBSCRIBER_CAP};
@@ -498,6 +503,26 @@ impl Gateway {
                     _ => (400, error_json("agent and job ids must be integers")),
                 }
             }
+            ("POST", ["dp", jid, "join"]) => match parse_id(jid) {
+                Some(j) => d.dp.join(j, body),
+                None => (400, error_json("job id must be an integer")),
+            },
+            ("POST", ["dp", jid, "step"]) => match parse_id(jid) {
+                Some(j) => d.dp.step(j, body),
+                None => (400, error_json("job id must be an integer")),
+            },
+            ("POST", ["dp", jid, "commits"]) => match parse_id(jid) {
+                Some(j) => d.dp.commits(j, body),
+                None => (400, error_json("job id must be an integer")),
+            },
+            ("POST", ["dp", jid, "epoch"]) => match parse_id(jid) {
+                Some(j) => d.dp.epoch(j, body),
+                None => (400, error_json("job id must be an integer")),
+            },
+            ("POST", ["dp", jid, "leave"]) => match parse_id(jid) {
+                Some(j) => d.dp.leave(j, body),
+                None => (400, error_json("job id must be an integer")),
+            },
             _ => (
                 404,
                 error_json(&format!("no route {method} /cluster/{}", segs.join("/"))),
@@ -938,6 +963,11 @@ fn http_route_label(method: &str, segs: &[&str], status: u16) -> String {
                 | "deregister"
                 | "epoch"
                 | "done"
+                | "dp"
+                | "join"
+                | "step"
+                | "commits"
+                | "leave"
         );
         out.push_str(if fixed { s } else { "{}" });
     }

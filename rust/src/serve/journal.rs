@@ -12,6 +12,10 @@
 //! {"event":"forget","id":N}                              queue push rejected: void it
 //! {"event":"start","id":N,"worker":W}                    local worker claimed the job
 //! {"event":"start","id":N,"agent":A}                     cluster agent was assigned the job
+//! {"event":"start","id":N,"dp":true}                     dp run adopted (no single owner)
+//! {"event":"dp_member","id":N,"action":A,"agent":G,"shards":[..]}
+//!                                                        dp membership change (join/leave/
+//!                                                        lost) — audit only, folds to no-op
 //! {"event":"epoch","id":N,"stats":{EpochStats}}          one epoch reported
 //! {"event":"requeue","id":N}                             agent lease expired / deregistered:
 //!                                                        the job went back to Queued

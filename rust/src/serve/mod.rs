@@ -38,6 +38,13 @@
 //! * [`dispatch`] — the cluster dispatcher: agent registration, lease
 //!   heartbeats, queued-job fan-out to polling agents, and the reaper
 //!   that requeues a lost agent's jobs from their last checkpoint.
+//! * [`dp`]       — seed-compressed data-parallel ZO: one job trained
+//!   by N agents at once. Each replica forward-evaluates a
+//!   deterministic shard of every batch; the coordinator aggregates
+//!   per-step loss deltas over `/cluster/dp/*`, commits the projected
+//!   gradient, and every replica applies the identical update from its
+//!   local RNG stream — only `(step, seed, scalar)` tuples cross the
+//!   wire. Lost replicas' shards are re-leased to the surviving quorum.
 //! * [`cluster`]  — the remote worker agent (`repro agent`): registers
 //!   with a coordinator, pulls serialized `TrainSpec`s, runs them
 //!   through the same `launch::run`, POSTs epochs + outcomes back.
@@ -59,6 +66,7 @@
 
 pub mod cluster;
 pub mod dispatch;
+pub mod dp;
 pub mod events;
 pub mod http;
 pub mod journal;
@@ -69,6 +77,7 @@ pub mod worker;
 
 pub use cluster::{Agent, AgentHandle, AgentOptions};
 pub use dispatch::{ClusterOptions, Dispatcher};
+pub use dp::DpCoordinator;
 pub use events::{watch_job, EventBus, Poll, Subscriber, WatchFrame};
 pub use http::{request, request_with_timeout, ServeOptions, Server};
 pub use journal::Journal;

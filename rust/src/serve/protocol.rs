@@ -13,7 +13,7 @@
 
 use crate::config::{scalar_to_string, Config, Precision};
 use crate::coordinator::session::resolve_grad_mode;
-use crate::coordinator::ZoGradMode;
+use crate::coordinator::{DpSpec, ZoGradMode};
 use crate::util::json::Value;
 use anyhow::{Context, Result};
 
@@ -57,6 +57,15 @@ impl JobSpec {
                     grad_mode = Some(ZoGradMode::parse(
                         val.as_str().context("grad_mode must be a string")?,
                     )?)
+                }
+                // dp is the one nested key: {replicas, aggregate,
+                // min_replicas} (a bare number also works via the flat
+                // `"dp": N` form the CLI produces)
+                "dp" if val.as_obj().is_some() => {
+                    let dp = DpSpec::from_json(val)?;
+                    spec.config.dp_replicas = dp.replicas;
+                    spec.config.dp_aggregate = dp.aggregate;
+                    spec.config.dp_min_replicas = dp.min_replicas;
                 }
                 key => {
                     let s = scalar_to_string(val)
@@ -114,6 +123,9 @@ impl JobSpec {
         }
         put("ckpt_every", Value::num(c.ckpt_every as f64));
         put("ckpt_keep", Value::num(c.ckpt_keep as f64));
+        if let Some(dp) = c.dp_spec() {
+            put("dp", dp.to_json());
+        }
         Value::Obj(obj)
     }
 }
@@ -336,6 +348,32 @@ mod tests {
             assert_eq!(JobState::parse(s.as_str()).unwrap(), s);
         }
         assert!(JobState::parse("paused").is_err());
+    }
+
+    #[test]
+    fn dp_roundtrips_through_job_spec() {
+        // nested object form (what to_json emits)
+        let v = json::parse(
+            r#"{"method": "full-zo", "engine": "native",
+                "dp": {"replicas": 4, "aggregate": "sum", "min_replicas": 2}}"#,
+        )
+        .unwrap();
+        let spec = JobSpec::from_json(&v).unwrap();
+        assert_eq!(spec.config.dp_replicas, 4);
+        assert_eq!(spec.config.dp_min_replicas, 2);
+        let back = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.config.dp_spec(), spec.config.dp_spec());
+
+        // flat CLI form: "dp": N
+        let v = json::parse(r#"{"method": "full-zo", "engine": "native", "dp": 2}"#).unwrap();
+        assert_eq!(JobSpec::from_json(&v).unwrap().config.dp_replicas, 2);
+
+        // non-dp specs don't grow a dp key
+        assert_eq!(JobSpec::new(Config::default()).to_json().get("dp"), &Value::Null);
+
+        // dp validation still applies at submit time
+        let v = json::parse(r#"{"method": "cls1", "engine": "native", "dp": 2}"#).unwrap();
+        assert!(JobSpec::from_json(&v).is_err());
     }
 
     #[test]

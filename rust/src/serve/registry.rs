@@ -444,6 +444,66 @@ impl JobRegistry {
         Some(spec)
     }
 
+    /// Data-parallel claim: Queued → Running with NO single owner — a
+    /// dp job belongs to the whole replica set, whose membership the
+    /// `serve::dp` coordinator tracks shard-by-shard (and journals via
+    /// [`JobRegistry::journal_dp`]). Worker/agent stay `None` so a lost
+    /// single agent never requeues the job wholesale; only the shard
+    /// moves.
+    /// The job's data-parallel spec, if it is a dp job.
+    pub fn dp_of(&self, id: u64) -> Option<crate::coordinator::DpSpec> {
+        self.lock().jobs.get(&id).and_then(|j| j.spec.config.dp_spec())
+    }
+
+    pub fn claim_for_dp(&self, id: u64) -> Option<JobSpec> {
+        let (spec, ev) = {
+            let mut st = self.lock();
+            let job = st.jobs.get_mut(&id)?;
+            if job.state != JobState::Queued {
+                return None;
+            }
+            job.state = JobState::Running;
+            job.agent = None;
+            job.worker = None;
+            job.started = Some(Instant::now());
+            self.events.publish_state(id, JobState::Running.as_str(), None);
+            (
+                job.spec.clone(),
+                self.journal.is_some().then(|| {
+                    Value::obj(vec![
+                        ("event", Value::str("start")),
+                        ("id", Value::num(id as f64)),
+                        ("dp", Value::Bool(true)),
+                    ])
+                }),
+            )
+        };
+        self.append_event(ev);
+        Some(spec)
+    }
+
+    /// Journal a dp membership change (`action` ∈ join/leave/lost,
+    /// with the shard set the agent held). Replay treats these as
+    /// unknown events — they are an audit trail of which device
+    /// evaluated which shards, not state to restore: a dp job
+    /// interrupted by coordinator restart reruns from scratch (dp
+    /// forbids resume).
+    pub fn journal_dp(&self, id: u64, action: &str, agent: u64, shards: &[usize]) {
+        if self.journal.is_none() {
+            return;
+        }
+        self.append_event(Some(Value::obj(vec![
+            ("event", Value::str("dp_member")),
+            ("id", Value::num(id as f64)),
+            ("action", Value::str(action)),
+            ("agent", Value::num(agent as f64)),
+            (
+                "shards",
+                Value::Arr(shards.iter().map(|&s| Value::num(s as f64)).collect()),
+            ),
+        ])));
+    }
+
     /// True iff the job is Running and its stop flag has fired — the
     /// dispatcher relays this to the owning agent on its next poll, so
     /// user cancels and server shutdown reach remote runs through the

@@ -1,0 +1,228 @@
+//! Data-parallel e2e: ONE job trained by N agents over the
+//! seed-compressed `/cluster/dp/*` wire must land on EXACTLY the bits
+//! a single-process run of the same spec produces — the whole point of
+//! shipping `(step, seed, scalar)` tuples instead of gradients is that
+//! every replica (and the local reference) walks one identical f32
+//! trajectory. The second test kills a replica mid-run and checks the
+//! surviving quorum absorbs its shards and still finishes on the same
+//! bits.
+
+use elasticzo::coordinator::checkpoint;
+use elasticzo::coordinator::control::{ProgressSink, StopFlag};
+use elasticzo::launch;
+use elasticzo::serve::{
+    request, Agent, AgentHandle, AgentOptions, ClusterOptions, ServeOptions, Server,
+};
+use elasticzo::util::json::Value;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const LONG: Duration = Duration::from_secs(300);
+
+fn start_coordinator(lease_ms: u64) -> (String, JoinHandle<()>) {
+    let server = Server::bind(&ServeOptions {
+        port: 0,
+        workers: 0, // pure coordinator: replicas are the only compute
+        queue_cap: 8,
+        journal: None,
+        cluster: Some(ClusterOptions { lease_ms }),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || server.run().unwrap());
+    (addr, h)
+}
+
+fn spawn_agent(addr: &str, name: &str) -> AgentHandle {
+    Agent::spawn(AgentOptions {
+        coordinator: addr.to_string(),
+        capacity: 1,
+        name: name.to_string(),
+        poll_ms: 50,
+        max_poll_failures: 40,
+    })
+    .unwrap()
+}
+
+fn shutdown(addr: &str, handle: JoinHandle<()>) {
+    let (status, _) = request(addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap();
+}
+
+fn submit(addr: &str, spec: &str) -> u64 {
+    let body = elasticzo::util::json::parse(spec).unwrap();
+    let (status, v) = request(addr, "POST", "/jobs", Some(&body)).unwrap();
+    assert_eq!(status, 200, "submit failed: {}", elasticzo::util::json::to_string(&v));
+    v.get("id").as_f64().unwrap() as u64
+}
+
+fn poll_until(addr: &str, id: u64, pred: impl Fn(&Value) -> bool, what: &str) -> Value {
+    let t0 = Instant::now();
+    loop {
+        let (status, v) = request(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+        assert_eq!(status, 200, "job {id} must exist");
+        if pred(&v) {
+            return v;
+        }
+        assert!(
+            t0.elapsed() < LONG,
+            "timed out waiting for {what} on job {id}; last: {}",
+            elasticzo::util::json::to_string(&v)
+        );
+        std::thread::sleep(Duration::from_millis(30));
+    }
+}
+
+/// The single-process dp reference: `launch::run` with `dp` set runs
+/// the same N-shard world in one process (`DpLocalSession`) and must
+/// produce the trajectory the distributed run commits.
+fn run_reference(epochs: usize, seed: u64, train_n: usize, batch: usize, save: &str) {
+    let mut cfg = elasticzo::config::Config::default();
+    for (k, val) in [
+        ("method", "full-zo"),
+        ("precision", "fp32"),
+        ("engine", "native"),
+        ("test_n", "32"),
+        ("dp", "2"),
+        ("dp-aggregate", "mean"),
+    ] {
+        cfg.set(k, val).unwrap();
+    }
+    cfg.set("epochs", &epochs.to_string()).unwrap();
+    cfg.set("seed", &seed.to_string()).unwrap();
+    cfg.set("train_n", &train_n.to_string()).unwrap();
+    cfg.set("batch", &batch.to_string()).unwrap();
+    cfg.set("save", save).unwrap();
+    cfg.validate().unwrap();
+    let l = launch::run(&cfg, StopFlag::default(), ProgressSink::default()).unwrap();
+    assert!(!l.result.stopped);
+}
+
+/// Compare the distributed dp checkpoint against the local reference:
+/// tensors bit-identical, training-state trailer numerically identical
+/// (the embedded spec JSON differs only in its save path).
+fn assert_bit_identical(dp_ckpt: &str, ref_ckpt: &str, epochs: usize) {
+    let (t_dp, s_dp) = checkpoint::load_full(dp_ckpt).unwrap();
+    let (t_ref, s_ref) = checkpoint::load_full(ref_ckpt).unwrap();
+    assert_eq!(t_dp, t_ref, "dp params must be bit-identical to the local reference");
+    let s_dp = s_dp.expect("dp checkpoint carries training state");
+    let s_ref = s_ref.expect("reference checkpoint carries training state");
+    assert_eq!(s_dp.epochs_done, epochs);
+    assert_eq!(s_dp.epochs_done, s_ref.epochs_done);
+    assert_eq!(s_dp.step, s_ref.step, "ZO stream positions must match");
+    assert_eq!(s_dp.best_test_acc, s_ref.best_test_acc);
+    assert_eq!(s_dp.last_test_loss, s_ref.last_test_loss);
+    assert_eq!(s_dp.last_test_acc, s_ref.last_test_acc);
+}
+
+#[test]
+fn dp_two_replicas_bit_identical_to_local_reference() {
+    let dir = std::env::temp_dir().join(format!("ezo_dp_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_dp = dir.join("dp2.ckpt").display().to_string();
+    let ckpt_ref = dir.join("dp2_ref.ckpt").display().to_string();
+    std::fs::remove_file(&ckpt_dp).ok();
+    std::fs::remove_file(&ckpt_ref).ok();
+
+    let epochs = 3usize;
+    let (addr, h) = start_coordinator(10_000);
+    let a1 = spawn_agent(&addr, "replica-1");
+    let a2 = spawn_agent(&addr, "replica-2");
+
+    // strict quorum: with min_replicas = 2, losing a replica would
+    // stall rather than degrade — nothing should be lost here
+    let job = submit(
+        &addr,
+        &format!(
+            r#"{{"name": "dp2", "method": "full-zo", "precision": "fp32",
+                "engine": "native", "epochs": {epochs}, "batch": 16,
+                "train_n": 64, "test_n": 32, "seed": 5,
+                "dp": {{"replicas": 2, "aggregate": "mean", "min_replicas": 2}},
+                "save": "{ckpt_dp}"}}"#
+        ),
+    );
+    let v = poll_until(&addr, job, |v| v.get("state").as_str() == Some("done"), "dp job done");
+
+    // every epoch reported exactly once, whichever replica posted it
+    let history = v.get("history").as_arr().unwrap();
+    assert_eq!(history.len(), epochs, "history must cover every epoch exactly once");
+    for (i, e) in history.iter().enumerate() {
+        assert_eq!(e.get("epoch").as_usize(), Some(i));
+    }
+    assert!(v.get("best_test_acc").as_f64().unwrap() > 0.0);
+
+    a1.stop();
+    a2.stop();
+    shutdown(&addr, h);
+
+    run_reference(epochs, 5, 64, 16, &ckpt_ref);
+    assert_bit_identical(&ckpt_dp, &ckpt_ref, epochs);
+    std::fs::remove_file(&ckpt_dp).ok();
+    std::fs::remove_file(&ckpt_ref).ok();
+}
+
+#[test]
+fn dp_replica_death_reshards_to_survivor_same_bits() {
+    let dir = std::env::temp_dir().join(format!("ezo_dpkill_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_dp = dir.join("dpkill.ckpt").display().to_string();
+    let ckpt_ref = dir.join("dpkill_ref.ckpt").display().to_string();
+    std::fs::remove_file(&ckpt_dp).ok();
+    std::fs::remove_file(&ckpt_ref).ok();
+
+    // long enough that the kill lands mid-run (release steps are ~2
+    // orders of magnitude faster than debug ones)
+    let epochs: usize = if cfg!(debug_assertions) { 12 } else { 60 };
+
+    // short lease so the dead replica's shards free within seconds
+    let (addr, h) = start_coordinator(1_500);
+    let doomed = spawn_agent(&addr, "doomed");
+    let survivor = spawn_agent(&addr, "survivor");
+
+    // min_replicas = 1: one survivor may absorb the lost shard and
+    // finish alone
+    let job = submit(
+        &addr,
+        &format!(
+            r#"{{"name": "dpkill", "method": "full-zo", "precision": "fp32",
+                "engine": "native", "epochs": {epochs}, "batch": 32,
+                "train_n": 128, "test_n": 32, "seed": 11,
+                "dp": {{"replicas": 2, "aggregate": "mean", "min_replicas": 1}},
+                "save": "{ckpt_dp}"}}"#
+        ),
+    );
+
+    // let both replicas make real progress, then kill one cold: no
+    // leave, no deregistration — only its lease expiry frees the shard
+    poll_until(
+        &addr,
+        job,
+        |v| v.get("epochs_done").as_usize().unwrap_or(0) >= 2,
+        "two epochs with both replicas",
+    );
+    doomed.kill();
+
+    let v = poll_until(
+        &addr,
+        job,
+        |v| v.get("state").as_str() == Some("done"),
+        "dp job finishing on the surviving quorum",
+    );
+    let history = v.get("history").as_arr().unwrap();
+    assert_eq!(history.len(), epochs, "history must cover every epoch exactly once");
+    for (i, e) in history.iter().enumerate() {
+        assert_eq!(e.get("epoch").as_usize(), Some(i));
+    }
+
+    survivor.stop();
+    shutdown(&addr, h);
+
+    // resharding must not have bent the trajectory: same bits as an
+    // undisturbed single-process run of the same spec
+    run_reference(epochs, 11, 128, 32, &ckpt_ref);
+    assert_bit_identical(&ckpt_dp, &ckpt_ref, epochs);
+    std::fs::remove_file(&ckpt_dp).ok();
+    std::fs::remove_file(&ckpt_ref).ok();
+}
