@@ -32,9 +32,10 @@
 //!
 //! An idle agent does not hammer the coordinator at `--poll-ms`:
 //! consecutive workless polls back off exponentially (jittered,
-//! capped at [`IDLE_BACKOFF_CAP_MS`] — still far below any sane
-//! lease), and the first assignment or running job snaps the cadence
-//! back to `poll_ms`.
+//! capped at [`IDLE_BACKOFF_CAP_MS`] and at a third of the lease the
+//! coordinator advertised at registration, so even a short-leased
+//! cluster never reaps an agent for idling), and the first assignment
+//! or running job snaps the cadence back to `poll_ms`.
 //!
 //! # Data-parallel replicas
 //!
@@ -101,6 +102,10 @@ struct AgentShared {
     /// Current registration id (re-registration after a lost lease
     /// installs a fresh one).
     agent_id: AtomicU64,
+    /// The lease the coordinator advertised at registration (0 until
+    /// known): the idle backoff must stay well inside it, or a
+    /// long-idle agent would be reaped between its own heartbeats.
+    lease_ms: AtomicU64,
     /// Simulated crash: vanish without a trace (tests).
     dead: AtomicBool,
     /// Graceful drain: deregister, stop jobs, exit.
@@ -191,6 +196,7 @@ impl Agent {
         let shared = Arc::new(AgentShared {
             coordinator: opts.coordinator.clone(),
             agent_id: AtomicU64::new(0),
+            lease_ms: AtomicU64::new(0),
             dead: AtomicBool::new(false),
             draining: AtomicBool::new(false),
             jobs: Mutex::new(HashMap::new()),
@@ -223,26 +229,41 @@ fn register(sh: &Arc<AgentShared>, opts: &AgentOptions) -> Result<u64> {
         .as_f64()
         .context("register response missing agent id")? as u64;
     sh.agent_id.store(id, Ordering::SeqCst);
+    // the advertised lease bounds the idle backoff; a coordinator too
+    // old to advertise one leaves it 0 (backoff falls back to the
+    // static cap alone)
+    let lease = v.get("lease_ms").as_f64().unwrap_or(0.0).max(0.0) as u64;
+    sh.lease_ms.store(lease, Ordering::SeqCst);
     Ok(id)
 }
 
-/// Ceiling of the idle poll backoff: even a long-idle agent
-/// heartbeats at least this often, far inside any sane lease.
+/// Static ceiling of the idle poll backoff: even a long-idle agent
+/// heartbeats at least this often.
 pub const IDLE_BACKOFF_CAP_MS: u64 = 2_000;
 
 /// Sleep before the next poll after `idle_streak` consecutive polls
 /// that neither carried an assignment nor found a job running here.
-/// Exponential from `poll_ms` up to [`IDLE_BACKOFF_CAP_MS`], with a
+/// Exponential from `poll_ms` up to [`IDLE_BACKOFF_CAP_MS`] — further
+/// clamped to a third of the coordinator-advertised `lease_ms` (0 =
+/// unknown), since a backoff past the lease would get an idle agent
+/// reaped, re-registered and reaped again forever — with a
 /// deterministic ±25% jitter (salted per agent) so a fleet registered
-/// in the same second does not heartbeat in lockstep forever.
-fn idle_backoff(poll_ms: u64, idle_streak: u32, salt: u64) -> u64 {
+/// in the same second does not heartbeat in lockstep forever. A
+/// `poll_ms` above the cap is the operator's explicit cadence and is
+/// never shortened.
+fn idle_backoff(poll_ms: u64, idle_streak: u32, salt: u64, lease_ms: u64) -> u64 {
     let base = poll_ms.max(1);
     if idle_streak == 0 {
         return base;
     }
+    let cap = if lease_ms > 0 {
+        IDLE_BACKOFF_CAP_MS.min((lease_ms / 3).max(1))
+    } else {
+        IDLE_BACKOFF_CAP_MS
+    };
     let raw = base
         .saturating_mul(1u64 << idle_streak.min(12))
-        .clamp(base, IDLE_BACKOFF_CAP_MS.max(base));
+        .clamp(base, cap.max(base));
     // splitmix-style hash of (salt, streak) → stable, well-spread bits
     let mut h = salt
         .wrapping_mul(0x9E37_79B9_7F4A_7C15)
@@ -337,6 +358,7 @@ fn poll_loop(sh: &Arc<AgentShared>, opts: &AgentOptions) {
             opts.poll_ms,
             idle_streak,
             id,
+            sh.lease_ms.load(Ordering::SeqCst),
         )));
     }
 }
@@ -517,11 +539,27 @@ fn parse_sync(v: &Value) -> DpSync {
     }
 }
 
-/// Replay any commits in `s` this replica has not applied yet. The
+/// Apply any commits in `s` this replica has not applied yet. The
 /// replica always requests `have = applied`, so the slice normally
 /// starts exactly at `applied`; the guards keep a malformed payload
 /// from corrupting the trajectory.
-fn apply_dp_commits(world: &mut DpWorld, timer: &mut PhaseTimer, applied: &mut u64, s: &DpSync) {
+///
+/// `cycled` names the step whose ±ε eval cycle already ran in THIS
+/// process (the main loop's in-flight step): its three perturbs — and
+/// their f32 rounding residue, which is part of the trajectory — are
+/// already in the params, so that step gets only the commit. Replaying
+/// the cycle for it (via `catch_up`) would stack a second residue and
+/// fork this replica bitwise from the single-process reference, which
+/// performs exactly ONE cycle per step. Every other step (join-time
+/// backlog, or steps the fleet committed without us) gets the full
+/// cycle-replay so the residue lands exactly once there too.
+fn apply_dp_commits(
+    world: &mut DpWorld,
+    timer: &mut PhaseTimer,
+    applied: &mut u64,
+    s: &DpSync,
+    cycled: Option<u64>,
+) {
     if s.watermark <= *applied || s.commits_from > *applied {
         return;
     }
@@ -529,8 +567,15 @@ fn apply_dp_commits(world: &mut DpWorld, timer: &mut PhaseTimer, applied: &mut u
     if skip >= s.commits.len() {
         return;
     }
-    world.catch_up(*applied, &s.commits[skip..], timer);
-    *applied += (s.commits.len() - skip) as u64;
+    for &g in &s.commits[skip..] {
+        let step = *applied;
+        if cycled == Some(step) {
+            world.apply_commit(step, g, timer);
+        } else {
+            world.catch_up(step, std::slice::from_ref(&g), timer);
+        }
+        *applied += 1;
+    }
 }
 
 /// Run one replica of a data-parallel job (see the module docs). The
@@ -586,7 +631,7 @@ fn run_dp_replica(
         &Value::obj(vec![("agent", Value::num(me)), ("have", Value::num(0))]),
     )?);
     let mut applied: u64 = 0;
-    apply_dp_commits(&mut world, &mut timer, &mut applied, &sync);
+    apply_dp_commits(&mut world, &mut timer, &mut applied, &sync, None);
 
     let spe = world.steps_per_epoch;
     let total = world.total_steps();
@@ -646,7 +691,9 @@ fn run_dp_replica(
                 sync = parse_sync(&post("step", &report_body(&extra))?);
                 continue;
             }
-            apply_dp_commits(&mut world, &mut timer, &mut applied, &sync);
+            // step t's cycle ran above (eval_cycle / eval_extra): its
+            // commit applies bare; anything past t replays in full
+            apply_dp_commits(&mut world, &mut timer, &mut applied, &sync, Some(t));
             if applied > t || sync.done || sync.stop {
                 break;
             }
@@ -750,11 +797,11 @@ mod tests {
     #[test]
     fn idle_backoff_grows_caps_and_resets() {
         // streak 0 = active: exactly the configured cadence
-        assert_eq!(idle_backoff(500, 0, 7), 500);
+        assert_eq!(idle_backoff(500, 0, 7, 0), 500);
         // grows with the streak, never below base, never above cap+25%
         let mut prev = 500;
         for streak in 1..10 {
-            let d = idle_backoff(500, streak, 7);
+            let d = idle_backoff(500, streak, 7, 0);
             assert!(d >= 500, "below base at streak {streak}: {d}");
             assert!(
                 d <= IDLE_BACKOFF_CAP_MS + IDLE_BACKOFF_CAP_MS / 4,
@@ -766,20 +813,123 @@ mod tests {
             prev = d;
         }
         // deterministic for a given (salt, streak)
-        assert_eq!(idle_backoff(500, 5, 42), idle_backoff(500, 5, 42));
+        assert_eq!(idle_backoff(500, 5, 42, 0), idle_backoff(500, 5, 42, 0));
         // different salts jitter differently somewhere in the ladder
-        let a: Vec<u64> = (1..8).map(|s| idle_backoff(500, s, 1)).collect();
-        let b: Vec<u64> = (1..8).map(|s| idle_backoff(500, s, 2)).collect();
+        let a: Vec<u64> = (1..8).map(|s| idle_backoff(500, s, 1, 0)).collect();
+        let b: Vec<u64> = (1..8).map(|s| idle_backoff(500, s, 2, 0)).collect();
         assert_ne!(a, b, "jitter must depend on the salt");
     }
 
     #[test]
     fn idle_backoff_handles_tiny_and_huge_poll_ms() {
-        assert_eq!(idle_backoff(0, 0, 1), 1);
-        assert!(idle_backoff(1, 30, 1) >= 1);
+        assert_eq!(idle_backoff(0, 0, 1, 0), 1);
+        assert!(idle_backoff(1, 30, 1, 0) >= 1);
         // a poll_ms above the cap is respected (never sleep less than
         // the configured cadence)
-        assert!(idle_backoff(5_000, 3, 1) >= 5_000);
+        assert!(idle_backoff(5_000, 3, 1, 0) >= 5_000);
+    }
+
+    #[test]
+    fn idle_backoff_stays_inside_a_short_lease() {
+        // a 120 ms lease (the shortest the tests use) must bound the
+        // backoff: deep idle streaks may never sleep past the lease,
+        // or the idle agent would be reaped between heartbeats
+        for lease in [120u64, 300, 900, 1_500] {
+            for streak in 1..16 {
+                let d = idle_backoff(10, streak, 3, lease);
+                assert!(
+                    d < lease,
+                    "backoff {d} ms >= lease {lease} ms at streak {streak}"
+                );
+            }
+        }
+        // an unknown lease (0) falls back to the static cap alone
+        assert!(idle_backoff(10, 12, 3, 0) > IDLE_BACKOFF_CAP_MS / 2);
+        // a lease longer than 3x the static cap changes nothing
+        assert_eq!(idle_backoff(10, 12, 3, 60_000), idle_backoff(10, 12, 3, 0));
+    }
+
+    /// Regression: a replica that ran `eval_cycle` for step `t` must
+    /// apply the incoming commit for `t` BARE — replaying the ±ε cycle
+    /// (the old `catch_up`-always path) stacks a second f32 rounding
+    /// residue on the step and forks the replica bitwise from the
+    /// single-process reference, which performs exactly one cycle per
+    /// step. A join-time backlog (no local cycle) still replays fully.
+    #[test]
+    fn commit_after_local_cycle_stays_bit_identical() {
+        use crate::coordinator::dp_session::{aggregate, DpAggregate, DpSpec};
+        use crate::coordinator::engine::Method;
+        use crate::coordinator::params::Model;
+        use crate::coordinator::session::TrainSpec;
+        use crate::coordinator::zo;
+        use crate::data::synth_mnist;
+
+        let data = synth_mnist::generate(32, 3);
+        let spec = TrainSpec {
+            method: Method::FullZo,
+            epochs: 1,
+            batch: 16,
+            seed: 5,
+            ..TrainSpec::default()
+        };
+        let dp = DpSpec { replicas: 2, aggregate: DpAggregate::Mean, min_replicas: 1 };
+        let mut reference = DpWorld::new(Model::LeNet, spec.clone(), dp, data.len()).unwrap();
+        let mut replica = DpWorld::new(Model::LeNet, spec.clone(), dp, data.len()).unwrap();
+        let mut timer = PhaseTimer::new();
+        let mut commits = Vec::new();
+
+        for (i, b) in Loader::new(&data, 16, spec.seed ^ 0xDA7A, 0).enumerate() {
+            let t = i as u64;
+            // reference: one cycle + bare commit (the DpLocalSession path)
+            let evals = reference.eval_cycle(&b, t, &[0, 1], &mut timer).unwrap();
+            let agg = aggregate(&evals, dp.aggregate);
+            let g = zo::projected_gradient_from_delta(agg.delta, spec.eps, spec.g_clip);
+            reference.apply_commit(t, g, &mut timer);
+            commits.push(g);
+
+            // replica: cycle runs locally, then the commit arrives in a
+            // sync payload — exactly the trained-through barrier path
+            replica.eval_cycle(&b, t, &[0, 1], &mut timer).unwrap();
+            let sync = DpSync {
+                step: t + 1,
+                watermark: t + 1,
+                commits_from: t,
+                commits: vec![g],
+                shards: vec![0, 1],
+                pending: Vec::new(),
+                primary: false,
+                report_epochs: Vec::new(),
+                stop: false,
+                done: false,
+            };
+            let mut applied = t;
+            apply_dp_commits(&mut replica, &mut timer, &mut applied, &sync, Some(t));
+            assert_eq!(applied, t + 1);
+        }
+        assert_eq!(
+            reference.params.data, replica.params.data,
+            "trained-through replica forked from the reference (double cycle residue?)"
+        );
+
+        // late joiner: no local cycles ran, so every step replays fully
+        let mut joiner = DpWorld::new(Model::LeNet, spec, dp, data.len()).unwrap();
+        let total = commits.len() as u64;
+        let sync = DpSync {
+            step: total,
+            watermark: total,
+            commits_from: 0,
+            commits,
+            shards: vec![0, 1],
+            pending: Vec::new(),
+            primary: false,
+            report_epochs: Vec::new(),
+            stop: false,
+            done: false,
+        };
+        let mut applied = 0u64;
+        apply_dp_commits(&mut joiner, &mut timer, &mut applied, &sync, None);
+        assert_eq!(applied, total);
+        assert_eq!(reference.params.data, joiner.params.data, "join catch-up diverged");
     }
 
     #[test]

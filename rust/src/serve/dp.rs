@@ -438,12 +438,22 @@ impl DpCoordinator {
             Ok(v) => v,
             Err(resp) => return resp,
         };
+        let Some(agent) = v.get("agent").as_i64().map(|a| a as u64) else {
+            return (400, error_json("dp epoch needs an agent id"));
+        };
         let epoch = v.get("epoch").as_i64().unwrap_or(-1);
         let (stats, final_epoch, best) = {
             let mut runs = self.lock();
             let Some(run) = runs.get_mut(&job) else {
                 return unknown_run();
             };
+            // same membership gate as sync_request: epoch metrics (and,
+            // on the final epoch, job completion itself) must come from
+            // a replica that actually holds a shard lease — not from an
+            // arbitrary poster fabricating best_test_acc
+            if run.owned(agent).is_empty() && !run.done && !run.stopping {
+                return (409, error_json("agent owns no shard of this dp run"));
+            }
             if epoch < 0 || epoch as usize >= run.epochs {
                 return (400, error_json("epoch out of range"));
             }
