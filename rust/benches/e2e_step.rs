@@ -1,14 +1,17 @@
 //! End-to-end training-step benches — one per paper-table workload:
 //! the full ZO / ElasticZO / BP step (2 forwards + update [+ tail BP])
 //! on both engines, FP32 and INT8. These are the rows behind the
-//! Fig. 7 epoch-time claims and the §Perf L3 numbers.
+//! Fig. 7 epoch-time claims and the §Perf L3 numbers. Default ZO rows
+//! run the kernel path (`Fp32Session`: per-step cached `z`, parallel
+//! ±ε pair); `*_scalar` rows time [`zo_step`], the scalar reference
+//! the parity suite pins the kernels to.
 
 use elasticzo::coordinator::native_engine::NativeEngine;
 use elasticzo::coordinator::trainer::zo_step;
 use elasticzo::coordinator::TrainSpec;
 #[cfg(feature = "xla")]
 use elasticzo::coordinator::xla_engine::XlaEngine;
-use elasticzo::coordinator::{Engine, Method, Model, ParamSet};
+use elasticzo::coordinator::{kernels, Engine, Fp32Session, Method, Model, ParamSet, TrainSession};
 use elasticzo::data;
 use elasticzo::data::loader::Batch;
 use elasticzo::int8::lenet8;
@@ -40,12 +43,24 @@ fn main() {
     // FP32 steps on both engines
     for method in [Method::FullZo, Method::Cls1, Method::Cls2] {
         let spec = spec_for(method);
+        let tag = spec.method.label().replace(' ', "_");
+
+        let mut native = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 3);
+        let mut sess = Fp32Session::new(&mut native, &mut params, &spec).unwrap();
+        let mut timer = PhaseTimer::new();
+        let mut step = 0u64;
+        b.bench(&format!("step_{tag}/native"), || {
+            step += 1;
+            sess.step(&batch, step, &mut timer).unwrap().loss
+        });
+        drop(sess);
 
         let mut native = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 3);
         let mut timer = PhaseTimer::new();
         let mut step = 0u64;
-        b.bench(&format!("step_{}/native", spec.method.label().replace(' ', "_")), || {
+        b.bench(&format!("step_{tag}_scalar/native"), || {
             step += 1;
             zo_step(&mut native, &mut params, &batch, step, 1e-3, &spec, &mut timer).unwrap()
         });
@@ -55,7 +70,7 @@ fn main() {
             let mut params = ParamSet::init(Model::LeNet, 3);
             let mut timer = PhaseTimer::new();
             let mut step = 0u64;
-            b.bench(&format!("step_{}/xla", spec.method.label().replace(' ', "_")), || {
+            b.bench(&format!("step_{tag}/xla"), || {
                 step += 1;
                 zo_step(&mut xla, &mut params, &batch, step, 1e-3, &spec, &mut timer).unwrap()
             });
@@ -76,26 +91,64 @@ fn main() {
         });
     }
 
-    // INT8 step (one minibatch of the int8 session step, Cls1)
+    // INT8 step (one minibatch of the int8 session step, Cls1) —
+    // kernel path first (one `z` fill replayed by all four legs, ±ε
+    // forwards side by side when a second core is up), then the
+    // scalar reference.
     let mut ws = lenet8::init_params(5, 32);
     let xq = lenet8::quantize_input(&d.x, 32);
     let (seed, r_max) = (1u64, 15i8);
+    let mut snap8 = ws.clone();
+    let zo8: usize = ws[..4].iter().map(|w| w.numel()).sum();
+    let mut kz8 = kernels::StepZi8::new();
+    let (mut acc8, mut upd8) = (Vec::new(), Vec::new());
+    let par8 = kernels::hw_threads() > 1;
     let mut step = 0u64;
     b.bench("step_Cls1/int8_native", || {
-        use elasticzo::coordinator::int8_trainer::{perturb_int8, zo_update_int8};
         use elasticzo::int8::intce;
         step += 1;
-        perturb_int8(&mut ws, 4, seed, step, 1, r_max, 0.5);
-        let fp = lenet8::forward(&ws, &xq, 32);
-        perturb_int8(&mut ws, 4, seed, step, -2, r_max, 0.5);
-        let fm = lenet8::forward(&ws, &xq, 32);
+        kz8.prepare(seed, step, zo8, r_max, 0.5);
+        kernels::apply_z_i8(&mut ws, 4, 1, kz8.z());
+        let (fp, fm) = if par8 {
+            snap8.clone_from(&ws);
+            kernels::apply_z_i8(&mut ws, 4, -2, kz8.z());
+            let (ws_ref, snap_ref, xq_ref) = (&ws, &snap8, &xq);
+            std::thread::scope(|sc| {
+                let h = sc.spawn(move || lenet8::forward(snap_ref, xq_ref, 32));
+                let fm = lenet8::forward(ws_ref, xq_ref, 32);
+                (h.join().expect("±ε int8 bench worker panicked"), fm)
+            })
+        } else {
+            let fp = lenet8::forward(&ws, &xq, 32);
+            kernels::apply_z_i8(&mut ws, 4, -2, kz8.z());
+            (fp, lenet8::forward(&ws, &xq, 32))
+        };
         let g = intce::loss_diff_sign_int(
             &fp.logits.data, fp.logits.exp, &fm.logits.data, fm.logits.exp,
             &d.labels, 32, 10,
         );
-        perturb_int8(&mut ws, 4, seed, step, 1, r_max, 0.5);
-        zo_update_int8(&mut ws, 4, seed, step, g, 1, r_max, 0.5);
+        kernels::apply_z_i8(&mut ws, 4, 1, kz8.z());
+        kernels::zo_update_z_i8(&mut ws, 4, g, 1, kz8.z(), &mut acc8, &mut upd8);
         lenet8::tail_update(&mut ws, &fm, &d.labels, 1, 32, 5);
+        g
+    });
+    let mut ws_s = lenet8::init_params(5, 32);
+    let mut step_s = 0u64;
+    b.bench("step_Cls1_scalar/int8_native", || {
+        use elasticzo::coordinator::int8_trainer::{perturb_int8, zo_update_int8};
+        use elasticzo::int8::intce;
+        step_s += 1;
+        perturb_int8(&mut ws_s, 4, seed, step_s, 1, r_max, 0.5);
+        let fp = lenet8::forward(&ws_s, &xq, 32);
+        perturb_int8(&mut ws_s, 4, seed, step_s, -2, r_max, 0.5);
+        let fm = lenet8::forward(&ws_s, &xq, 32);
+        let g = intce::loss_diff_sign_int(
+            &fp.logits.data, fp.logits.exp, &fm.logits.data, fm.logits.exp,
+            &d.labels, 32, 10,
+        );
+        perturb_int8(&mut ws_s, 4, seed, step_s, 1, r_max, 0.5);
+        zo_update_int8(&mut ws_s, 4, seed, step_s, g, 1, r_max, 0.5);
+        lenet8::tail_update(&mut ws_s, &fm, &d.labels, 1, 32, 5);
         g
     });
 }

@@ -1,10 +1,12 @@
 //! ZO-engine micro-benches: the seed-trick perturb/update passes over
 //! LeNet (108k params) and PointNet (816k params) — the paper Fig. 7
 //! "ZO Perturb"/"ZO Update" slices — plus the int8 sparse perturbation
-//! and the integer CE sign (paper Eq. 7–12).
+//! and the integer CE sign (paper Eq. 7–12). Default rows run the
+//! chunked kernel path (`coordinator::kernels`); `*_scalar` rows keep
+//! the fused one-element-at-a-time reference for comparison.
 
 use elasticzo::coordinator::int8_trainer::{perturb_int8, zo_update_int8};
-use elasticzo::coordinator::{zo, Model, ParamSet};
+use elasticzo::coordinator::{kernels, zo, Model, ParamSet};
 use elasticzo::int8::{intce, lenet8};
 use elasticzo::rng::Rng64;
 use elasticzo::util::bench::Bencher;
@@ -12,19 +14,37 @@ use elasticzo::util::bench::Bencher;
 fn main() {
     let mut b = Bencher::new();
 
-    // FP32 perturbation over both model sizes
+    // FP32 perturbation over both model sizes. Kernel rows bump the
+    // step every call so each iteration pays a fresh `z` fill —
+    // comparable work to the scalar rows.
     let mut lenet = ParamSet::init(Model::LeNet, 1);
     let nt = lenet.num_tensors();
+    let lenet_elems: usize = lenet.data.iter().map(|t| t.len()).sum();
+    let mut kz = kernels::StepZ::new();
+    let mut kstep = 0u64;
     b.bench("zo_perturb/lenet_107k", || {
+        kstep += 1;
+        kz.prepare(7, kstep, lenet_elems, None);
+        kernels::apply_z(&mut lenet, nt, 1e-3, kz.z());
+    });
+    b.bench("zo_perturb_scalar/lenet_107k", || {
         zo::perturb(&mut lenet, nt, 7, 1, 1e-3);
     });
     let mut pn = ParamSet::init(Model::PointNet { npoints: 128, ncls: 40 }, 2);
     let nt_pn = pn.num_tensors();
+    let pn_elems: usize = pn.data.iter().map(|t| t.len()).sum();
+    let mut kz_pn = kernels::StepZ::new();
+    let mut kstep_pn = 0u64;
     b.bench("zo_perturb/pointnet_816k", || {
+        kstep_pn += 1;
+        kz_pn.prepare(7, kstep_pn, pn_elems, None);
+        kernels::apply_z(&mut pn, nt_pn, 1e-3, kz_pn.z());
+    });
+    b.bench("zo_perturb_scalar/pointnet_816k", || {
         zo::perturb(&mut pn, nt_pn, 7, 1, 1e-3);
     });
 
-    if let Some(s) = b.results.last() {
+    if let Some(s) = b.results.iter().find(|s| s.name == "zo_perturb/pointnet_816k") {
         b.report_metric(
             "pointnet perturb throughput",
             816_424.0 / s.mean.as_secs_f64() / 1e6,
@@ -32,12 +52,26 @@ fn main() {
         );
     }
 
-    // INT8 sparse perturbation + update (Alg. 2)
+    // INT8 sparse perturbation + update (Alg. 2). The kernel update
+    // replays the step's cached `z` — the product path, where the
+    // perturb legs already paid for the fill.
     let mut ws = lenet8::init_params(3, 32);
+    let zo8_elems: usize = ws[..5].iter().map(|w| w.numel()).sum();
+    let mut kz8 = kernels::StepZi8::new();
+    let mut kstep8 = 0u64;
     b.bench("int8_perturb/lenet_107k", || {
+        kstep8 += 1;
+        kz8.prepare(7, kstep8, zo8_elems, 15, 0.5);
+        kernels::apply_z_i8(&mut ws, 5, 1, kz8.z());
+    });
+    b.bench("int8_perturb_scalar/lenet_107k", || {
         perturb_int8(&mut ws, 5, 7, 1, 1, 15, 0.5);
     });
+    let (mut acc, mut upd) = (Vec::new(), Vec::new());
     b.bench("int8_zo_update/lenet_107k", || {
+        kernels::zo_update_z_i8(&mut ws, 5, 1, 1, kz8.z(), &mut acc, &mut upd);
+    });
+    b.bench("int8_zo_update_scalar/lenet_107k", || {
         zo_update_int8(&mut ws, 5, 7, 1, 1, 1, 15, 0.5);
     });
 

@@ -92,6 +92,16 @@ pub struct Config {
     /// Snapshot generations kept (>= 1): `path`, `path.1`, ….
     pub ckpt_keep: usize,
     pub verbose: bool,
+    /// Use the chunked/parallel ZO kernels for the hot path (default
+    /// true). `false` forces the scalar reference — bit-identical, just
+    /// slower; useful for parity debugging.
+    pub kernels: bool,
+    /// Structured perturbation block size in elements (0 = off).
+    /// Requires kernels, precision=fp32 and a ZO method; intentionally
+    /// changes the trajectory.
+    pub sparse_block: usize,
+    /// Fraction of perturbation blocks kept when `sparse_block > 0`.
+    pub sparse_keep: f32,
     /// Data-parallel replicas (0 = off). With N >= 1 the run becomes a
     /// seed-compressed dp run: each global batch is split into N
     /// strided shards, loss deltas are aggregated per step, and the
@@ -133,6 +143,9 @@ impl Default for Config {
             ckpt_every: 1,
             ckpt_keep: 1,
             verbose: false,
+            kernels: true,
+            sparse_block: 0,
+            sparse_keep: 1.0,
             dp_replicas: 0,
             dp_aggregate: DpAggregate::Mean,
             dp_min_replicas: 1,
@@ -189,6 +202,19 @@ impl Config {
                 self.dp_min_replicas = val.parse().context("dp_min_replicas")?
             }
             "verbose" => self.verbose = val == "true" || val == "1",
+            "kernels" => {
+                self.kernels = match val {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    other => anyhow::bail!("kernels must be a bool, got '{other}'"),
+                }
+            }
+            "sparse-block" | "sparse_block" => {
+                self.sparse_block = val.parse().context("sparse_block")?
+            }
+            "sparse-keep" | "sparse_keep" => {
+                self.sparse_keep = val.parse().context("sparse_keep")?
+            }
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -247,6 +273,25 @@ impl Config {
             anyhow::bail!(
                 "--resume restores params AND loop state; it cannot be combined with --load"
             );
+        }
+        if self.sparse_block > 0 {
+            if !self.kernels {
+                anyhow::bail!("sparse_block requires the kernel path (kernels=true)");
+            }
+            if self.precision != Precision::Fp32 {
+                anyhow::bail!(
+                    "sparse_block is fp32-only (the int8 path has its own p_zero sparsity)"
+                );
+            }
+            if self.method == Method::FullBp {
+                anyhow::bail!("sparse_block requires a ZO method (full-bp has no perturbation)");
+            }
+            if self.dp_replicas > 0 {
+                anyhow::bail!("sparse_block is not supported for dp runs");
+            }
+            if !(self.sparse_keep > 0.0 && self.sparse_keep <= 1.0) {
+                anyhow::bail!("sparse_keep must be in (0, 1]");
+            }
         }
         if self.dp_replicas > 0 {
             if self.method != Method::FullZo {
@@ -309,6 +354,9 @@ impl Config {
             seed: self.seed,
             eval_every: self.eval_every,
             verbose: self.verbose,
+            kernels: self.kernels,
+            sparse_block: self.sparse_block,
+            sparse_keep: self.sparse_keep,
             checkpoint: self
                 .save_checkpoint
                 .as_ref()
@@ -431,6 +479,56 @@ mod tests {
 
         cfg.set("precision", "fp32").unwrap();
         assert_eq!(cfg.train_spec().precision, PrecisionSpec::Fp32);
+    }
+
+    #[test]
+    fn kernel_flags_parse_and_flow_to_spec() {
+        let cfg = Config::from_args(&args(&[
+            "--method", "full-zo", "--kernels", "false",
+        ]))
+        .unwrap();
+        assert!(!cfg.kernels);
+        assert!(!cfg.train_spec().kernels);
+
+        let cfg = Config::from_args(&args(&[
+            "--method", "full-zo", "--sparse-block", "64", "--sparse-keep", "0.25",
+        ]))
+        .unwrap();
+        let spec = cfg.train_spec();
+        assert_eq!(spec.sparse_block, 64);
+        assert!((spec.sparse_keep - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bad_sparse_combos_rejected() {
+        // scalar path cannot mask
+        assert!(Config::from_args(&args(&[
+            "--method", "full-zo", "--sparse-block", "64", "--kernels", "false",
+        ]))
+        .is_err());
+        // int8 has its own sparsity
+        assert!(Config::from_args(&args(&[
+            "--method", "full-zo", "--precision", "int8", "--sparse-block", "64",
+        ]))
+        .is_err());
+        // full-bp has no perturbation to mask
+        assert!(Config::from_args(&args(&[
+            "--method", "full-bp", "--sparse-block", "64",
+        ]))
+        .is_err());
+        // dp commit log assumes dense z
+        assert!(Config::from_args(&args(&[
+            "--method", "full-zo", "--engine", "native", "--dp", "2",
+            "--sparse-block", "64",
+        ]))
+        .is_err());
+        // keep out of range
+        assert!(Config::from_args(&args(&[
+            "--method", "full-zo", "--sparse-block", "64", "--sparse-keep", "0",
+        ]))
+        .is_err());
+        // bad bool
+        assert!(Config::from_args(&args(&["--kernels", "maybe"])).is_err());
     }
 
     #[test]

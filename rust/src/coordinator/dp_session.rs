@@ -31,6 +31,7 @@
 //! replica loop and the unit tests.
 
 use super::engine::{Engine, Method};
+use super::kernels;
 use super::native_engine::NativeEngine;
 use super::params::{Model, ParamSet};
 use super::schedules::LrSchedule;
@@ -39,6 +40,7 @@ use super::{checkpoint, trainer, zo};
 use crate::data::loader::{Batch, Shard};
 use crate::data::Dataset;
 use crate::nn::loss::accuracy;
+use crate::nn::Forward;
 use crate::telemetry::{Phase, PhaseTimer};
 use crate::util::json::Value;
 use anyhow::{Context, Result};
@@ -205,6 +207,11 @@ pub struct DpWorld {
     pub dp: DpSpec,
     lr_sched: LrSchedule,
     pub steps_per_epoch: u64,
+    /// Per-step cached perturbation (kernel path): one `z` generation
+    /// serves the cycle's three legs plus the commit.
+    kz: kernels::StepZ,
+    /// Total elements in the ZO prefix (the `z` cache length).
+    zo_len: usize,
 }
 
 impl DpWorld {
@@ -215,8 +222,13 @@ impl DpWorld {
         if spec.method != Method::FullZo || spec.precision != PrecisionSpec::Fp32 {
             anyhow::bail!("dp requires method=full-zo, precision=fp32");
         }
+        anyhow::ensure!(
+            spec.sparse_block == 0,
+            "sparse_block is not supported for dp (the commit log assumes dense z)"
+        );
         let params = ParamSet::init(model, spec.seed ^ 0xC0FFEE);
         let boundary = params.zo_boundary(0);
+        let zo_len: usize = params.data[..boundary].iter().map(|t| t.len()).sum();
         let lr_sched = LrSchedule::paper_fp32(spec.lr0, spec.epochs);
         let steps_per_epoch = train_len.div_ceil(spec.batch) as u64;
         Ok(DpWorld {
@@ -227,6 +239,8 @@ impl DpWorld {
             dp,
             lr_sched,
             steps_per_epoch,
+            kz: kernels::StepZ::new(),
+            zo_len,
         })
     }
 
@@ -242,6 +256,83 @@ impl DpWorld {
         self.lr_sched.lr(epoch)
     }
 
+    /// One perturbation leg: θ[..boundary] += scale·z(seed, step). The
+    /// kernel path (`spec.kernels`) replays the step's cached `z` — one
+    /// generation serves the cycle's three legs plus the commit — while
+    /// the scalar path regenerates the stream per leg. Bit-identical
+    /// either way; callers own the phase timing.
+    fn perturb(&mut self, step: u64, scale: f32) {
+        if self.spec.kernels {
+            self.kz.prepare(self.spec.seed, step, self.zo_len, None);
+            kernels::apply_z(&mut self.params, self.boundary, scale, self.kz.z());
+        } else {
+            zo::perturb(&mut self.params, self.boundary, self.spec.seed, step, scale);
+        }
+    }
+
+    /// Forward every requested shard of `b` at the current params,
+    /// returning each shard's minibatch alongside its forward. With the
+    /// kernel path on, spare cores and a forkable engine, the extra
+    /// shards run on scoped worker threads — forwards are pure, so the
+    /// results match the sequential order bit-for-bit; only the
+    /// `Phase::Forward` attribution becomes a joint wall-clock measure.
+    fn shard_forwards(
+        &mut self,
+        b: &Batch,
+        shards: &[usize],
+        timer: &mut PhaseTimer,
+    ) -> Result<Vec<(Batch, Forward)>> {
+        let of = self.dp.replicas;
+        let mbs: Vec<Batch> =
+            shards.iter().map(|&s| b.shard(Shard { index: s, of })).collect();
+
+        if self.spec.kernels && mbs.len() > 1 && kernels::hw_threads() > 1 {
+            let mut workers: Vec<Box<dyn Engine + Send>> = Vec::with_capacity(mbs.len() - 1);
+            for _ in 1..mbs.len() {
+                match self.engine.fork() {
+                    Some(w) => workers.push(w),
+                    None => break,
+                }
+            }
+            if workers.len() == mbs.len() - 1 {
+                let t0 = std::time::Instant::now();
+                let params = &self.params;
+                let engine = self.engine.as_mut();
+                let (first, rest) = std::thread::scope(|sc| {
+                    let handles: Vec<_> = workers
+                        .iter_mut()
+                        .zip(&mbs[1..])
+                        .map(|(w, mb)| {
+                            sc.spawn(move || w.forward(params, &mb.x, &mb.y_onehot, mb.bsz))
+                        })
+                        .collect();
+                    let first = engine.forward(params, &mbs[0].x, &mbs[0].y_onehot, mbs[0].bsz);
+                    let rest: Vec<_> = handles
+                        .into_iter()
+                        .map(|h| h.join().expect("dp shard forward worker panicked"))
+                        .collect();
+                    (first, rest)
+                });
+                timer.add(Phase::Forward, t0.elapsed());
+                let mut fwds = Vec::with_capacity(mbs.len());
+                fwds.push(first?);
+                for r in rest {
+                    fwds.push(r?);
+                }
+                return Ok(mbs.into_iter().zip(fwds).collect());
+            }
+        }
+
+        let mut out = Vec::with_capacity(mbs.len());
+        for mb in mbs {
+            let t = std::time::Instant::now();
+            let fwd = self.engine.forward(&self.params, &mb.x, &mb.y_onehot, mb.bsz)?;
+            timer.add(Phase::Forward, t.elapsed());
+            out.push((mb, fwd));
+        }
+        Ok(out)
+    }
+
     /// The ±ε evaluation cycle for `shards` of global batch `b` at
     /// `step`. Exactly three perturbs regardless of shard count, so
     /// every replica traverses the same f32 rounding path.
@@ -253,36 +344,25 @@ impl DpWorld {
         timer: &mut PhaseTimer,
     ) -> Result<Vec<ShardEval>> {
         let eps = self.spec.eps;
-        let seed = self.spec.seed;
-        let of = self.dp.replicas;
 
         let t0 = std::time::Instant::now();
-        zo::perturb(&mut self.params, self.boundary, seed, step, eps);
+        self.perturb(step, eps);
         timer.add(Phase::ZoPerturb, t0.elapsed());
-        let mut plus = Vec::with_capacity(shards.len());
-        for &s in shards {
-            let mb = b.shard(Shard { index: s, of });
-            let t = std::time::Instant::now();
-            let fwd = self.engine.forward(&self.params, &mb.x, &mb.y_onehot, mb.bsz)?;
-            timer.add(Phase::Forward, t.elapsed());
-            plus.push(fwd.loss);
-        }
+        let plus = self.shard_forwards(b, shards, timer)?;
 
         let t0 = std::time::Instant::now();
-        zo::perturb(&mut self.params, self.boundary, seed, step, -2.0 * eps);
+        self.perturb(step, -2.0 * eps);
         timer.add(Phase::ZoPerturb, t0.elapsed());
+        let minus = self.shard_forwards(b, shards, timer)?;
+
         let mut out = Vec::with_capacity(shards.len());
-        for (i, &s) in shards.iter().enumerate() {
-            let mb = b.shard(Shard { index: s, of });
-            let t = std::time::Instant::now();
-            let fwd = self.engine.forward(&self.params, &mb.x, &mb.y_onehot, mb.bsz)?;
-            timer.add(Phase::Forward, t.elapsed());
-            let nclass = fwd.logits.len() / mb.bsz.max(1);
-            let (correct, seen) = accuracy(&fwd.logits, &mb.labels, mb.bsz, nclass);
+        for (&s, ((mb, fp), (_, fm))) in shards.iter().zip(plus.iter().zip(&minus)) {
+            let nclass = fm.logits.len() / mb.bsz.max(1);
+            let (correct, seen) = accuracy(&fm.logits, &mb.labels, mb.bsz, nclass);
             out.push(ShardEval {
                 shard: s,
-                delta: plus[i] - fwd.loss,
-                loss: 0.5 * (plus[i] + fwd.loss),
+                delta: fp.loss - fm.loss,
+                loss: 0.5 * (fp.loss + fm.loss),
                 correct,
                 seen,
             });
@@ -291,7 +371,7 @@ impl DpWorld {
         // restore leg of the cycle (the commit applies −η·g·z later,
         // once the aggregated delta comes back)
         let t0 = std::time::Instant::now();
-        zo::perturb(&mut self.params, self.boundary, seed, step, eps);
+        self.perturb(step, eps);
         timer.add(Phase::ZoPerturb, t0.elapsed());
         Ok(out)
     }
@@ -318,7 +398,7 @@ impl DpWorld {
     pub fn apply_commit(&mut self, step: u64, g: f32, timer: &mut PhaseTimer) {
         let lr = self.lr_for_epoch(self.epoch_of(step));
         let t0 = std::time::Instant::now();
-        zo::perturb(&mut self.params, self.boundary, self.spec.seed, step, -(lr * g));
+        self.perturb(step, -(lr * g));
         timer.add(Phase::ZoUpdate, t0.elapsed());
     }
 
@@ -328,12 +408,11 @@ impl DpWorld {
     /// joiner lands on the same bits as replicas that trained through.
     pub fn catch_up(&mut self, from: u64, commits: &[f32], timer: &mut PhaseTimer) {
         let eps = self.spec.eps;
-        let seed = self.spec.seed;
         for (i, &g) in commits.iter().enumerate() {
             let step = from + i as u64;
-            zo::perturb(&mut self.params, self.boundary, seed, step, eps);
-            zo::perturb(&mut self.params, self.boundary, seed, step, -2.0 * eps);
-            zo::perturb(&mut self.params, self.boundary, seed, step, eps);
+            self.perturb(step, eps);
+            self.perturb(step, -2.0 * eps);
+            self.perturb(step, eps);
             self.apply_commit(step, g, timer);
         }
     }

@@ -46,6 +46,15 @@ pub trait Engine {
 
     /// Human-readable engine name (for logs/EXPERIMENTS.md).
     fn name(&self) -> &'static str;
+
+    /// A second, independent handle onto the same compute backend, for
+    /// running the ±ε pair (or dp shard evals) on scoped worker threads.
+    /// `None` (the default) means the backend cannot be shared and the
+    /// caller stays sequential; `Some` guarantees the fork's `forward`
+    /// is bit-identical to the original's.
+    fn fork(&self) -> Option<Box<dyn Engine + Send>> {
+        None
+    }
 }
 
 /// Which engine to instantiate (config-level).

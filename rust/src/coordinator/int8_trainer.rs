@@ -20,6 +20,7 @@
 
 use super::checkpoint::{self, TrainState};
 use super::engine::BpDepth;
+use super::kernels;
 use super::schedules::{paper_b_bp, paper_p_zero, StagedSchedule};
 use super::session::{self, PrecisionSpec, StepOutcome, TrainResult, TrainSession, TrainSpec};
 use crate::data::loader::{eval_batches, Batch};
@@ -170,6 +171,20 @@ pub struct Int8Session<'a> {
     bp_tail: usize,
     /// Weight tensors trained by ZO (prefix of the ABI order).
     n_zo: usize,
+    /// Kernel path on/off (`TrainSpec::kernels`): cache the step's `z`
+    /// once and replay it, instead of regenerating the stream 4×.
+    kernels: bool,
+    /// `true` when the ±1 forwards may run on two scoped threads.
+    parallel: bool,
+    /// Total elements in the ZO prefix (the `z` cache length).
+    zo_elems: usize,
+    /// Per-step cached perturbation (kernel path).
+    kz: kernels::StepZi8,
+    /// Reusable θ₊ snapshot for the parallel pair.
+    snap_ws: Vec<QTensor>,
+    /// Reusable per-tensor update scratch (kernel ZO update).
+    acc_scratch: Vec<i32>,
+    upd_scratch: Vec<i8>,
 }
 
 impl<'a> Int8Session<'a> {
@@ -180,10 +195,15 @@ impl<'a> Int8Session<'a> {
                 spec.precision.token()
             );
         };
+        anyhow::ensure!(
+            spec.sparse_block == 0,
+            "sparse_block is fp32-only (the int8 path has its own p_zero sparsity)"
+        );
         let (full_bp, bp_tail, n_zo) = match spec.method.bp_depth() {
             BpDepth::All => (true, 0, 0),
             BpDepth::Tail(k) => (false, k, lenet8::zo_layer_count(k)),
         };
+        let zo_elems: usize = ws[..n_zo].iter().map(|w| w.numel()).sum();
         Ok(Int8Session {
             ws,
             grad_mode,
@@ -199,6 +219,13 @@ impl<'a> Int8Session<'a> {
             full_bp,
             bp_tail,
             n_zo,
+            kernels: spec.kernels,
+            parallel: spec.kernels && n_zo > 0 && kernels::hw_threads() > 1,
+            zo_elems,
+            kz: kernels::StepZi8::new(),
+            snap_ws: Vec::new(),
+            acc_scratch: Vec::new(),
+            upd_scratch: Vec::new(),
         })
     }
 }
@@ -231,23 +258,56 @@ impl TrainSession for Int8Session<'_> {
             return Ok(StepOutcome { loss, correct, seen: bsz });
         }
 
-        // ZO(+tail BP) step, Alg. 2
+        // ZO(+tail BP) step, Alg. 2 — kernel path caches the step's z
+        // once and replays it; scalar path regenerates it per leg.
+        // Bit-identical either way (tests/zo_kernel_parity.rs).
         let (seed, r_max, p_zero) = (self.seed, self.r_max, self.p_zero);
         let t0 = std::time::Instant::now();
-        perturb_int8(self.ws, self.n_zo, seed, step_idx, 1, r_max, p_zero);
+        if self.kernels {
+            self.kz.prepare(seed, step_idx, self.zo_elems, r_max, p_zero);
+            kernels::apply_z_i8(self.ws, self.n_zo, 1, self.kz.z());
+        } else {
+            perturb_int8(self.ws, self.n_zo, seed, step_idx, 1, r_max, p_zero);
+        }
         timer.add(Phase::ZoPerturb, t0.elapsed());
 
-        let t0 = std::time::Instant::now();
-        let fwd_plus = lenet8::forward(self.ws, &xq, bsz);
-        timer.add(Phase::Forward, t0.elapsed());
+        let (fwd_plus, fwd_minus) = if self.parallel {
+            // snapshot θ₊, flip the live weights to θ₋, then run both
+            // forwards concurrently — forwards are pure, bits unchanged
+            self.snap_ws.clone_from(self.ws);
+            let t0 = std::time::Instant::now();
+            kernels::apply_z_i8(self.ws, self.n_zo, -2, self.kz.z());
+            timer.add(Phase::ZoPerturb, t0.elapsed());
 
-        let t0 = std::time::Instant::now();
-        perturb_int8(self.ws, self.n_zo, seed, step_idx, -2, r_max, p_zero);
-        timer.add(Phase::ZoPerturb, t0.elapsed());
+            let t0 = std::time::Instant::now();
+            let ws: &[QTensor] = self.ws;
+            let snap: &[QTensor] = &self.snap_ws;
+            let xq_ref = &xq;
+            let (plus, minus) = std::thread::scope(|sc| {
+                let h = sc.spawn(move || lenet8::forward(snap, xq_ref, bsz));
+                let minus = lenet8::forward(ws, xq_ref, bsz);
+                (h.join().expect("±1 forward worker panicked"), minus)
+            });
+            timer.add(Phase::Forward, t0.elapsed());
+            (plus, minus)
+        } else {
+            let t0 = std::time::Instant::now();
+            let plus = lenet8::forward(self.ws, &xq, bsz);
+            timer.add(Phase::Forward, t0.elapsed());
 
-        let t0 = std::time::Instant::now();
-        let fwd_minus = lenet8::forward(self.ws, &xq, bsz);
-        timer.add(Phase::Forward, t0.elapsed());
+            let t0 = std::time::Instant::now();
+            if self.kernels {
+                kernels::apply_z_i8(self.ws, self.n_zo, -2, self.kz.z());
+            } else {
+                perturb_int8(self.ws, self.n_zo, seed, step_idx, -2, r_max, p_zero);
+            }
+            timer.add(Phase::ZoPerturb, t0.elapsed());
+
+            let t0 = std::time::Instant::now();
+            let minus = lenet8::forward(self.ws, &xq, bsz);
+            timer.add(Phase::Forward, t0.elapsed());
+            (plus, minus)
+        };
 
         let t0 = std::time::Instant::now();
         let g = match self.grad_mode {
@@ -277,11 +337,27 @@ impl TrainSession for Int8Session<'_> {
 
         // restore
         let t0 = std::time::Instant::now();
-        perturb_int8(self.ws, self.n_zo, seed, step_idx, 1, r_max, p_zero);
+        if self.kernels {
+            kernels::apply_z_i8(self.ws, self.n_zo, 1, self.kz.z());
+        } else {
+            perturb_int8(self.ws, self.n_zo, seed, step_idx, 1, r_max, p_zero);
+        }
         timer.add(Phase::ZoPerturb, t0.elapsed());
 
         let t0 = std::time::Instant::now();
-        zo_update_int8(self.ws, self.n_zo, seed, step_idx, g, self.b_zo, r_max, p_zero);
+        if self.kernels {
+            kernels::zo_update_z_i8(
+                self.ws,
+                self.n_zo,
+                g,
+                self.b_zo,
+                self.kz.z(),
+                &mut self.acc_scratch,
+                &mut self.upd_scratch,
+            );
+        } else {
+            zo_update_int8(self.ws, self.n_zo, seed, step_idx, g, self.b_zo, r_max, p_zero);
+        }
         timer.add(Phase::ZoUpdate, t0.elapsed());
 
         if self.bp_tail > 0 {

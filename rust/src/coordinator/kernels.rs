@@ -1,0 +1,392 @@
+//! Fast ZO kernels: the chunked, autovectorization-friendly hot path
+//! behind `zo::perturb` / the int8 perturb/update, plus the per-step
+//! perturbation caches that let one `z` generation serve every leg of a
+//! step.
+//!
+//! Everything here is **bit-identical to the scalar reference** (the
+//! naive loops in [`super::zo`] and [`super::int8_trainer`]) — that is
+//! the contract `tests/zo_kernel_parity.rs` locks down. Three facts make
+//! it possible:
+//!
+//! 1. **Two-phase Gaussian fill.** `ZoStream::normal` interleaves a
+//!    serial rejection-sampled uniform draw with a pure per-pair
+//!    transcendental transform. [`ZoStream::raw_pairs`] drains the
+//!    (inherently serial) raw draws in one tight pass; [`fill_z`] then
+//!    applies the exact Box–Muller float expressions per pair — an
+//!    embarrassingly parallel phase that scoped worker threads split in
+//!    fixed chunks without moving a single bit.
+//! 2. **Per-step replay = one generation.** Within a step every leg
+//!    (+ε, −2ε, +ε−ηg / +1, −2, +1, update) replays the SAME `z(seed,
+//!    step)`. [`StepZ`]/[`StepZi8`] generate it once and the apply
+//!    kernels ([`apply_z`], [`apply_z_i8`], [`zo_update_z_i8`]) replay
+//!    the cached copy with the identical per-element mul-then-add the
+//!    scalar path performs. The cost is one ZO-prefix-sized buffer
+//!    (~0.4 MB fp32 LeNet, ~107 KB int8) — the memory/speed trade is
+//!    reverted by `--kernels false`.
+//! 3. **Forwards are pure.** Engines never mutate params in `forward`,
+//!    so the ±ε pair (and dp shard evals) can run on scoped threads with
+//!    unchanged results; only wall-clock moves.
+//!
+//! The optional structured-perturbation mask ([`mask_blocks`]) is the
+//! ONE intentional divergence: it zeroes whole per-layer blocks of `z`
+//! after generation, drawing the block decisions from a separate salted
+//! stream so the Gaussian stream position never shifts. Off by default
+//! (`TrainSpec::sparse_block == 0`).
+
+use super::params::ParamSet;
+use crate::int8::layers;
+use crate::int8::qtensor::QTensor;
+use crate::int8::rounding::clamp_i8;
+use crate::rng::{Rng64, ZoStream};
+use crate::tensor::ops;
+use std::sync::OnceLock;
+
+/// Below this many Box–Muller pairs per worker the spawn overhead beats
+/// the transcendental savings and [`fill_z`] stays single-threaded.
+const MIN_PAIRS_PER_THREAD: usize = 16 * 1024;
+
+/// Salt for the structured-perturbation mask stream: the block decisions
+/// come from `Rng64(seed ^ step·MIX ^ SPARSE_SALT)`, a stream disjoint
+/// from the Gaussian draws, so masking cannot shift `z` positions.
+const SPARSE_SALT: u64 = 0x5AB5_EB10_0000_B10C;
+
+/// Worker threads available to the kernels. Resolved once per process:
+/// the `REPRO_KERNEL_THREADS` env var when set (parity tests force >1
+/// on single-core CI runners; `1` forces the sequential paths), else
+/// the machine's available parallelism.
+pub fn hw_threads() -> usize {
+    static HW: OnceLock<usize> = OnceLock::new();
+    *HW.get_or_init(|| {
+        if let Some(n) = std::env::var("REPRO_KERNEL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            return n.max(1);
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Fill `out` with the exact `z(seed, step)` sequence the scalar
+/// `ZoStream` produces — raw draws serial, Box–Muller transform chunked
+/// across scoped threads when the buffer is large enough to pay for
+/// them. An odd length drops the final pair's sin half, exactly like a
+/// scalar phase that rebuilds the stream afterwards.
+pub fn fill_z(seed: u64, step: u64, out: &mut [f32]) {
+    if out.is_empty() {
+        return;
+    }
+    let npairs = out.len().div_ceil(2);
+    let mut raw: Vec<(f32, f32)> = Vec::new();
+    ZoStream::for_step(seed, step).raw_pairs(npairs, &mut raw);
+    let threads = (npairs / MIN_PAIRS_PER_THREAD).clamp(1, hw_threads());
+    if threads <= 1 {
+        pairs_to_z(&raw, out);
+        return;
+    }
+    let per = npairs.div_ceil(threads);
+    std::thread::scope(|sc| {
+        let mut rest = out;
+        let mut start = 0usize;
+        while start < npairs {
+            let take = per.min(npairs - start);
+            let elems = (2 * take).min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(elems);
+            let chunk = &raw[start..start + take];
+            sc.spawn(move || pairs_to_z(chunk, head));
+            rest = tail;
+            start += take;
+        }
+    });
+}
+
+/// The pure phase of Box–Muller, per pair — float expressions copied
+/// verbatim from `ZoStream::normal` so the bits cannot differ.
+fn pairs_to_z(raw: &[(f32, f32)], out: &mut [f32]) {
+    for (i, &(u1, u2)) in raw.iter().enumerate() {
+        let r = (-2.0 * (u1 as f64).ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2 as f64).sin_cos();
+        out[2 * i] = (r * c) as f32;
+        if let Some(v) = out.get_mut(2 * i + 1) {
+            *v = (r * s) as f32;
+        }
+    }
+}
+
+/// θ[0..boundary] += scale · z over a cached perturbation — the replay
+/// half of `zo::perturb`, per-tensor chunked saxpy instead of per-call
+/// RNG regeneration. Identical mul-then-add per element.
+pub fn apply_z(params: &mut ParamSet, boundary: usize, scale: f32, z: &[f32]) {
+    let mut off = 0usize;
+    for tensor in &mut params.data[..boundary] {
+        let n = tensor.len();
+        ops::axpy(scale, &z[off..off + n], tensor);
+        off += n;
+    }
+    debug_assert_eq!(off, z.len(), "z cache length must match the ZO prefix");
+}
+
+/// Per-layer block mask description for the structured perturbation.
+pub struct SparseMask<'a> {
+    /// Element count of each ZO-prefix tensor, in ABI order.
+    pub layout: &'a [usize],
+    /// Block width in elements (the flag's value; > 0).
+    pub block: usize,
+    /// Fraction of blocks kept, in (0, 1].
+    pub keep: f32,
+}
+
+/// Zero dropped blocks of `z` in place. One Bernoulli draw per block
+/// from the salted mask stream — drawn unconditionally so the stream
+/// position is a pure function of the layout, never of the outcomes.
+/// Blocks never span tensors (the remainder of each tensor is its own
+/// short block).
+pub fn mask_blocks(z: &mut [f32], layout: &[usize], seed: u64, step: u64, block: usize, keep: f32) {
+    let mut rng = Rng64::new(seed ^ step.wrapping_mul(0xA076_1D64_78BD_642F) ^ SPARSE_SALT);
+    let mut off = 0usize;
+    for &n in layout {
+        for chunk in z[off..off + n].chunks_mut(block) {
+            let keep_block = rng.uniform() < keep;
+            if !keep_block {
+                chunk.fill(0.0);
+            }
+        }
+        off += n;
+    }
+    debug_assert_eq!(off, z.len());
+}
+
+/// One fp32 step's cached perturbation: `z(seed, step)` is generated
+/// once and replayed by every [`apply_z`] leg. `prepare` is idempotent
+/// per `(seed, step)` so each leg can call it defensively.
+#[derive(Debug, Default)]
+pub struct StepZ {
+    key: Option<(u64, u64)>,
+    z: Vec<f32>,
+}
+
+impl StepZ {
+    pub fn new() -> StepZ {
+        StepZ::default()
+    }
+
+    /// Ensure the cache holds `z(seed, step)` over `n` elements,
+    /// regenerating (and optionally masking) only on a step change.
+    pub fn prepare(&mut self, seed: u64, step: u64, n: usize, sparse: Option<SparseMask<'_>>) {
+        if self.key == Some((seed, step)) && self.z.len() == n {
+            return;
+        }
+        self.z.resize(n, 0.0);
+        fill_z(seed, step, &mut self.z);
+        if let Some(m) = sparse {
+            mask_blocks(&mut self.z, m.layout, seed, step, m.block, m.keep);
+        }
+        self.key = Some((seed, step));
+    }
+
+    pub fn z(&self) -> &[f32] {
+        &self.z
+    }
+}
+
+/// Fill `out` with the exact sparse-int8 `z(seed, step)` sequence of
+/// `perturb_int8` (paper Alg. 2 lines 15–16). The draws are two cheap
+/// uniforms per element — no transcendental phase to parallelize; the
+/// win is generating them once per step instead of four times.
+pub fn fill_z_i8(seed: u64, step: u64, r_max: i8, p_zero: f32, out: &mut [i8]) {
+    let mut stream = ZoStream::for_step(seed, step);
+    for v in out {
+        *v = stream.sparse_i8(r_max, p_zero);
+    }
+}
+
+/// θ ← clamp(θ + k·z) over the first `n_zo` tensors from a cached int8
+/// perturbation — the replay half of `perturb_int8`, integer-only.
+pub fn apply_z_i8(ws: &mut [QTensor], n_zo: usize, k: i32, z: &[i8]) {
+    let mut off = 0usize;
+    for w in &mut ws[..n_zo] {
+        let n = w.numel();
+        w.clamp_add_scaled(&z[off..off + n], k);
+        off += n;
+    }
+    debug_assert_eq!(off, z.len(), "z cache length must match the ZO prefix");
+}
+
+/// θ ← clamp(θ − PseudoStochasticRound(g·z, b_ZO)) from a cached int8
+/// perturbation — `zo_update_int8` without the stream regeneration.
+/// `acc`/`upd` are caller-owned scratch buffers (per-tensor i32
+/// accumulator and rounded update) so the hot loop never allocates.
+/// The rounding shift is per tensor, exactly like the reference.
+pub fn zo_update_z_i8(
+    ws: &mut [QTensor],
+    n_zo: usize,
+    g: i32,
+    b_zo: u32,
+    z: &[i8],
+    acc: &mut Vec<i32>,
+    upd: &mut Vec<i8>,
+) {
+    if g == 0 {
+        return;
+    }
+    let mut off = 0usize;
+    for w in &mut ws[..n_zo] {
+        let n = w.numel();
+        acc.clear();
+        acc.extend(z[off..off + n].iter().map(|&zv| g * zv as i32));
+        layers::round_update_into(acc, b_zo, upd);
+        for (v, &uv) in w.data.iter_mut().zip(upd.iter()) {
+            *v = clamp_i8(*v as i32 - uv as i32);
+        }
+        off += n;
+    }
+    debug_assert_eq!(off, z.len(), "z cache length must match the ZO prefix");
+}
+
+/// One int8 step's cached sparse perturbation — the [`StepZ`] of the
+/// Alg. 2 path. The `(seed, step)` key is safe against the staged
+/// p_zero schedule because the global step counter never repeats.
+#[derive(Debug, Default)]
+pub struct StepZi8 {
+    key: Option<(u64, u64)>,
+    z: Vec<i8>,
+}
+
+impl StepZi8 {
+    pub fn new() -> StepZi8 {
+        StepZi8::default()
+    }
+
+    /// Ensure the cache holds the step's `z`, regenerating only on a
+    /// step change.
+    pub fn prepare(&mut self, seed: u64, step: u64, n: usize, r_max: i8, p_zero: f32) {
+        if self.key == Some((seed, step)) && self.z.len() == n {
+            return;
+        }
+        self.z.resize(n, 0);
+        fill_z_i8(seed, step, r_max, p_zero, &mut self.z);
+        self.key = Some((seed, step));
+    }
+
+    pub fn z(&self) -> &[i8] {
+        &self.z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::params::Model;
+    use crate::coordinator::zo;
+    use crate::int8::lenet8;
+
+    fn scalar_z(seed: u64, step: u64, n: usize) -> Vec<f32> {
+        let mut s = ZoStream::for_step(seed, step);
+        (0..n).map(|_| s.normal()).collect()
+    }
+
+    #[test]
+    fn fill_z_matches_scalar_stream_bitwise() {
+        // cover empty, tiny, odd, even and chunk-boundary lengths
+        for n in [0usize, 1, 2, 3, 17, 256, 1023, 4096] {
+            let mut out = vec![0.0f32; n];
+            fill_z(5, 99, &mut out);
+            let want = scalar_z(5, 99, n);
+            let got_bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+            let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got_bits, want_bits, "n={n}");
+        }
+    }
+
+    #[test]
+    fn apply_z_equals_scalar_perturb() {
+        let mut a = ParamSet::init(Model::LeNet, 3);
+        let mut b = a.clone();
+        let boundary = a.zo_boundary(1);
+        let n: usize = a.data[..boundary].iter().map(|t| t.len()).sum();
+        let mut z = vec![0.0f32; n];
+        fill_z(7, 42, &mut z);
+        apply_z(&mut a, boundary, 1e-3, &z);
+        zo::perturb(&mut b, boundary, 7, 42, 1e-3);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn step_z_caches_until_step_changes() {
+        let mut kz = StepZ::new();
+        kz.prepare(1, 10, 64, None);
+        let first = kz.z().to_vec();
+        kz.prepare(1, 10, 64, None); // no-op replay
+        assert_eq!(kz.z(), &first[..]);
+        kz.prepare(1, 11, 64, None);
+        assert_ne!(kz.z(), &first[..]);
+        assert_eq!(kz.z(), &scalar_z(1, 11, 64)[..]);
+    }
+
+    #[test]
+    fn mask_blocks_zeroes_roughly_keep_fraction_and_is_deterministic() {
+        let layout = [4000usize, 2048, 100];
+        let n: usize = layout.iter().sum();
+        let mut z = vec![1.0f32; n];
+        mask_blocks(&mut z, &layout, 9, 3, 64, 0.25);
+        let kept = z.iter().filter(|v| **v != 0.0).count() as f64 / n as f64;
+        assert!((kept - 0.25).abs() < 0.1, "kept fraction {kept}");
+        let mut z2 = vec![1.0f32; n];
+        mask_blocks(&mut z2, &layout, 9, 3, 64, 0.25);
+        assert_eq!(z, z2, "same (seed, step) must mask identically");
+        // the mask stream is independent of the Gaussian stream
+        let mut z3 = vec![1.0f32; n];
+        mask_blocks(&mut z3, &layout, 9, 4, 64, 0.25);
+        assert_ne!(z, z3, "different steps mask differently");
+    }
+
+    #[test]
+    fn mask_blocks_never_spans_tensors() {
+        // with keep=0 everything zeroes; with per-tensor layouts smaller
+        // than the block, each tensor still gets its own draw — verified
+        // by comparing against a manual per-tensor walk
+        let layout = [10usize, 3, 7];
+        let mut z = vec![1.0f32; 20];
+        mask_blocks(&mut z, &layout, 2, 2, 8, 0.5);
+        let mut rng = Rng64::new(2 ^ 2u64.wrapping_mul(0xA076_1D64_78BD_642F) ^ SPARSE_SALT);
+        let mut want = vec![1.0f32; 20];
+        let mut off = 0;
+        for &n in &layout {
+            for chunk in want[off..off + n].chunks_mut(8) {
+                if rng.uniform() >= 0.5 {
+                    chunk.fill(0.0);
+                }
+            }
+            off += n;
+        }
+        assert_eq!(z, want);
+    }
+
+    #[test]
+    fn int8_kernels_match_scalar_reference() {
+        use crate::coordinator::int8_trainer::{perturb_int8, zo_update_int8};
+        let n_zo = 4;
+        let mut a = lenet8::init_params(11, 32);
+        let mut b = a.clone();
+        let n: usize = a[..n_zo].iter().map(|w| w.numel()).sum();
+        let mut kz = StepZi8::new();
+        kz.prepare(5, 13, n, 15, 0.5);
+
+        apply_z_i8(&mut a, n_zo, 1, kz.z());
+        perturb_int8(&mut b, n_zo, 5, 13, 1, 15, 0.5);
+        assert_eq!(a, b, "perturb +1");
+        apply_z_i8(&mut a, n_zo, -2, kz.z());
+        perturb_int8(&mut b, n_zo, 5, 13, -2, 15, 0.5);
+        assert_eq!(a, b, "perturb -2");
+        apply_z_i8(&mut a, n_zo, 1, kz.z());
+        perturb_int8(&mut b, n_zo, 5, 13, 1, 15, 0.5);
+        assert_eq!(a, b, "restore +1");
+
+        let (mut acc, mut upd) = (Vec::new(), Vec::new());
+        for g in [-1i32, 0, 1] {
+            zo_update_z_i8(&mut a, n_zo, g, 1, kz.z(), &mut acc, &mut upd);
+            zo_update_int8(&mut b, n_zo, 5, 13, g, 1, 15, 0.5);
+            assert_eq!(a, b, "update g={g}");
+        }
+    }
+}

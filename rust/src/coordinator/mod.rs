@@ -16,6 +16,7 @@ pub mod control;
 pub mod dp_session;
 pub mod engine;
 pub mod int8_trainer;
+pub mod kernels;
 pub mod metrics;
 pub mod native_engine;
 pub mod params;

@@ -70,6 +70,12 @@ impl Engine for NativeEngine {
     fn name(&self) -> &'static str {
         "native"
     }
+
+    fn fork(&self) -> Option<Box<dyn Engine + Send>> {
+        // stateless: every forward delegates to pure free functions, so
+        // a second handle is trivially bit-identical
+        Some(Box::new(NativeEngine::new(self.model)))
+    }
 }
 
 #[cfg(test)]

@@ -92,6 +92,18 @@ pub struct TrainSpec {
     /// Evaluate every N epochs (the last epoch always evaluates).
     pub eval_every: usize,
     pub verbose: bool,
+    /// Use the chunked/parallel ZO kernels ([`super::kernels`]) for the
+    /// hot path. On by default; `false` forces the scalar reference.
+    /// Bit-identical either way — this is a perf/memory knob, not a
+    /// numerics knob.
+    pub kernels: bool,
+    /// Structured perturbation: zero whole blocks of `z` (per-layer
+    /// blocks of this many elements) from a salted side stream. `0`
+    /// (default) disables masking; > 0 requires `kernels` and an fp32
+    /// ZO method, and *intentionally* changes the trajectory.
+    pub sparse_block: usize,
+    /// Fraction of blocks kept when `sparse_block > 0`, in (0, 1].
+    pub sparse_keep: f32,
     /// Mid-run durability: cadence snapshots at completed-epoch
     /// boundaries (`None` disables them). See
     /// [`checkpoint::CheckpointPolicy`] and [`run_from`].
@@ -118,6 +130,9 @@ impl Default for TrainSpec {
             seed: 1,
             eval_every: 1,
             verbose: false,
+            kernels: true,
+            sparse_block: 0,
+            sparse_keep: 1.0,
             checkpoint: None,
             stop: StopFlag::default(),
             progress: ProgressSink::default(),
@@ -153,6 +168,16 @@ impl TrainSpec {
             ("eval_every", Value::num(self.eval_every as f64)),
             ("verbose", Value::Bool(self.verbose)),
         ];
+        // default-valued kernel knobs are omitted so default specs stay
+        // byte-identical to the pre-kernel JSON shape (checkpoint spec
+        // matching, serve wire compatibility)
+        if !self.kernels {
+            pairs.push(("kernels", Value::Bool(false)));
+        }
+        if self.sparse_block > 0 {
+            pairs.push(("sparse_block", Value::num(self.sparse_block as f64)));
+            pairs.push(("sparse_keep", Value::num(self.sparse_keep as f64)));
+        }
         if let PrecisionSpec::Int8 { grad_mode, r_max, b_zo } = self.precision {
             pairs.push(("grad_mode", Value::str(grad_mode.token())));
             pairs.push(("r_max", Value::num(r_max as f64)));
@@ -214,6 +239,22 @@ impl TrainSpec {
                 "verbose" => {
                     spec.verbose = val.as_bool().context("'verbose' must be a bool")?
                 }
+                "kernels" => {
+                    spec.kernels = val.as_bool().context("'kernels' must be a bool")?
+                }
+                "sparse_block" | "sparse-block" => {
+                    let n = num_of(k, val)? as i64;
+                    anyhow::ensure!(n >= 0, "sparse_block must be >= 0");
+                    spec.sparse_block = n as usize;
+                }
+                "sparse_keep" | "sparse-keep" => {
+                    let f = num_of(k, val)?;
+                    anyhow::ensure!(
+                        f > 0.0 && f <= 1.0,
+                        "sparse_keep must be in (0, 1]"
+                    );
+                    spec.sparse_keep = f as f32;
+                }
                 "r_max" | "r-max" => {
                     let n = num_of(k, val)? as i64;
                     anyhow::ensure!((1..=127).contains(&n), "r_max must be in 1..=127");
@@ -242,6 +283,20 @@ impl TrainSpec {
         }
         anyhow::ensure!(spec.epochs > 0 && spec.batch > 0, "batch and epochs must be positive");
         anyhow::ensure!(spec.eval_every >= 1, "eval_every must be >= 1");
+        if spec.sparse_block > 0 {
+            anyhow::ensure!(
+                spec.kernels,
+                "sparse_block requires the kernel path (kernels=true)"
+            );
+            anyhow::ensure!(
+                !int8,
+                "sparse_block is fp32-only (the int8 path has its own p_zero sparsity)"
+            );
+            anyhow::ensure!(
+                spec.method != Method::FullBp,
+                "sparse_block requires a ZO method (full-bp has no perturbation)"
+            );
+        }
         let grad_mode = resolve_grad_mode(int8, star, grad_key)?;
         spec.precision = if int8 {
             PrecisionSpec::Int8 { grad_mode, r_max, b_zo }
@@ -628,6 +683,47 @@ mod tests {
         let back = TrainSpec::from_json(&v).unwrap();
         assert_eq!(back.to_json(), v);
         assert_eq!(back.precision, int8.precision);
+    }
+
+    #[test]
+    fn spec_json_kernel_knobs_roundtrip_and_stay_off_the_default_wire() {
+        // defaults emit NO kernel keys — byte-compatible with pre-kernel
+        // specs (old checkpoints keep matching)
+        let v = TrainSpec::default().to_json();
+        assert!(v.get("kernels").as_bool().is_none());
+        assert!(v.get("sparse_block").as_f64().is_none());
+
+        let scalar = TrainSpec { kernels: false, ..Default::default() };
+        let v = scalar.to_json();
+        assert_eq!(v.get("kernels").as_bool(), Some(false));
+        assert!(!TrainSpec::from_json(&v).unwrap().kernels);
+
+        let sparse = TrainSpec {
+            method: Method::FullZo,
+            sparse_block: 64,
+            sparse_keep: 0.25,
+            ..Default::default()
+        };
+        let v = sparse.to_json();
+        let back = TrainSpec::from_json(&v).unwrap();
+        assert_eq!(back.sparse_block, 64);
+        assert_eq!(back.sparse_keep, 0.25);
+        assert_eq!(back.to_json(), v);
+    }
+
+    #[test]
+    fn spec_json_rejects_bad_sparse_combos() {
+        for bad in [
+            r#"{"sparse_block": 64, "kernels": false}"#,
+            r#"{"sparse_block": 64, "precision": "int8"}"#,
+            r#"{"sparse_block": 64, "method": "full-bp"}"#,
+            r#"{"sparse_block": 64, "sparse_keep": 0.0}"#,
+            r#"{"sparse_keep": 1.5}"#,
+            r#"{"kernels": 1}"#,
+        ] {
+            let v = crate::util::json::parse(bad).unwrap();
+            assert!(TrainSpec::from_json(&v).is_err(), "should reject {bad}");
+        }
     }
 
     #[test]

@@ -21,6 +21,7 @@
 
 use super::checkpoint::{self, TrainState};
 use super::engine::{BpDepth, Engine};
+use super::kernels;
 use super::params::ParamSet;
 use super::schedules::LrSchedule;
 use super::session::{self, StepOutcome, TrainResult, TrainSession, TrainSpec};
@@ -128,13 +129,29 @@ pub fn zo_step(
 }
 
 /// FP32 implementation of [`TrainSession`]: ZO(+tail BP) steps via
-/// [`zo_step`], Full BP via the engine's fused `full_step`.
+/// the chunked kernel path (or [`zo_step`], the scalar reference, when
+/// `spec.kernels` is off — bit-identical either way), Full BP via the
+/// engine's fused `full_step`.
 pub struct Fp32Session<'a> {
     engine: &'a mut dyn Engine,
     params: &'a mut ParamSet,
     spec: TrainSpec,
     lr_sched: LrSchedule,
     lr: f32,
+    /// Per-step cached perturbation (kernel path).
+    kz: kernels::StepZ,
+    /// ZO/BP partition of `spec.method` (0 for Full BP).
+    boundary: usize,
+    /// FC layers trained by tail BP.
+    bp_tail: usize,
+    /// Element count of each ZO-prefix tensor / their sum.
+    zo_layout: Vec<usize>,
+    zo_total: usize,
+    /// Second engine handle for the parallel ±ε pair (`None` ⇒
+    /// sequential: scalar path, single core, or unforkable engine).
+    aux: Option<Box<dyn Engine + Send>>,
+    /// Reusable θ₊ snapshot for the parallel pair.
+    snap: Option<ParamSet>,
 }
 
 impl<'a> Fp32Session<'a> {
@@ -148,13 +165,125 @@ impl<'a> Fp32Session<'a> {
             "Fp32Session requires a fp32 TrainSpec (got precision '{}')",
             spec.precision.token()
         );
+        if spec.sparse_block > 0 {
+            anyhow::ensure!(
+                spec.kernels,
+                "sparse_block requires the kernel path (kernels=true)"
+            );
+            anyhow::ensure!(
+                spec.method.bp_depth() != BpDepth::All,
+                "sparse_block requires a ZO method (full-bp has no perturbation)"
+            );
+        }
+        let (boundary, bp_tail) = match spec.method.bp_depth() {
+            BpDepth::All => (0, 0),
+            BpDepth::Tail(k) => (params.zo_boundary(k), k),
+        };
+        let zo_layout: Vec<usize> = params.data[..boundary].iter().map(|t| t.len()).collect();
+        let zo_total = zo_layout.iter().sum();
+        let aux = if spec.kernels && boundary > 0 && kernels::hw_threads() > 1 {
+            engine.fork()
+        } else {
+            None
+        };
         Ok(Fp32Session {
             engine,
             params,
             lr_sched: LrSchedule::paper_fp32(spec.lr0, spec.epochs),
             lr: spec.lr0,
             spec: spec.clone(),
+            kz: kernels::StepZ::new(),
+            boundary,
+            bp_tail,
+            zo_layout,
+            zo_total,
+            aux,
+            snap: None,
         })
+    }
+
+    /// The kernel-path ZO step: one `z` generation replayed by every
+    /// leg, ±ε forwards on two engine handles when a second core and a
+    /// forked engine are available. Bit-identical to [`zo_step`] (the
+    /// scalar reference) except behind the structured-perturbation
+    /// flag — `tests/zo_kernel_parity.rs` holds both equalities.
+    fn zo_step_kernels(
+        &mut self,
+        b: &Batch,
+        step: u64,
+        timer: &mut PhaseTimer,
+    ) -> Result<(f32, usize)> {
+        let bsz = self.spec.batch;
+        let (seed, eps) = (self.spec.seed, self.spec.eps);
+        let (x, y) = (&b.x, &b.y_onehot);
+
+        let t0 = std::time::Instant::now();
+        let sparse = (self.spec.sparse_block > 0).then_some(kernels::SparseMask {
+            layout: &self.zo_layout,
+            block: self.spec.sparse_block,
+            keep: self.spec.sparse_keep,
+        });
+        self.kz.prepare(seed, step, self.zo_total, sparse);
+        kernels::apply_z(self.params, self.boundary, eps, self.kz.z());
+        timer.add(Phase::ZoPerturb, t0.elapsed());
+
+        let (fwd_plus, fwd_minus) = if let Some(aux) = self.aux.as_mut() {
+            // snapshot θ₊, flip the live params to θ₋, then run both
+            // forwards concurrently — forwards are pure, so the bits
+            // match the sequential order exactly
+            match &mut self.snap {
+                Some(s) => s.clone_from(self.params),
+                None => self.snap = Some(self.params.clone()),
+            }
+            let t0 = std::time::Instant::now();
+            kernels::apply_z(self.params, self.boundary, -2.0 * eps, self.kz.z());
+            timer.add(Phase::ZoPerturb, t0.elapsed());
+
+            let t0 = std::time::Instant::now();
+            let params: &ParamSet = self.params;
+            let snap: &ParamSet = self.snap.as_ref().expect("snapshot just refreshed");
+            let engine: &mut dyn Engine = &mut *self.engine;
+            let (plus, minus) = std::thread::scope(|sc| {
+                let h = sc.spawn(move || aux.forward(snap, x, y, bsz));
+                let minus = engine.forward(params, x, y, bsz);
+                (h.join().expect("±ε forward worker panicked"), minus)
+            });
+            timer.add(Phase::Forward, t0.elapsed());
+            (plus?, minus?)
+        } else {
+            let t0 = std::time::Instant::now();
+            let plus = self.engine.forward(self.params, x, y, bsz)?;
+            timer.add(Phase::Forward, t0.elapsed());
+
+            let t0 = std::time::Instant::now();
+            kernels::apply_z(self.params, self.boundary, -2.0 * eps, self.kz.z());
+            timer.add(Phase::ZoPerturb, t0.elapsed());
+
+            let t0 = std::time::Instant::now();
+            let minus = self.engine.forward(self.params, x, y, bsz)?;
+            timer.add(Phase::Forward, t0.elapsed());
+            (plus, minus)
+        };
+
+        let g = zo::projected_gradient(fwd_plus.loss, fwd_minus.loss, eps, self.spec.g_clip);
+        let nclass = fwd_minus.logits.len() / bsz.max(1);
+        let (correct, _) = accuracy(&fwd_minus.logits, &b.labels, bsz, nclass);
+
+        // merged restore + ZO update: θ += (ε − ηg)z, replaying the cache
+        let t0 = std::time::Instant::now();
+        kernels::apply_z(self.params, self.boundary, eps - self.lr * g, self.kz.z());
+        timer.add(Phase::ZoUpdate, t0.elapsed());
+
+        if self.bp_tail > 0 {
+            let t0 = std::time::Instant::now();
+            let tails = self.engine.tail_grads(self.params, &fwd_minus, y, self.bp_tail, bsz)?;
+            for (idx, grad) in tails {
+                ops::axpy(-self.lr, &grad, &mut self.params.data[idx]);
+            }
+            timer.add(Phase::BpBackward, t0.elapsed());
+        }
+
+        Ok((0.5 * (fwd_plus.loss + fwd_minus.loss), correct))
     }
 }
 
@@ -191,8 +320,11 @@ impl TrainSession for Fp32Session<'_> {
                 Ok(StepOutcome { loss: out.loss, correct, seen })
             }
             BpDepth::Tail(_) => {
-                let (loss, correct) =
-                    zo_step(self.engine, self.params, b, step_idx, self.lr, &self.spec, timer)?;
+                let (loss, correct) = if self.spec.kernels {
+                    self.zo_step_kernels(b, step_idx, timer)?
+                } else {
+                    zo_step(self.engine, self.params, b, step_idx, self.lr, &self.spec, timer)?
+                };
                 Ok(StepOutcome { loss, correct, seen: self.spec.batch })
             }
         }

@@ -169,12 +169,19 @@ pub fn maxpool2(x: &QTensor, bsz: usize, c: usize, h: usize, w: usize) -> QTenso
 /// with pseudo-stochastic rounding — NITI's update quantization. The
 /// result is the int8 update applied directly to the weight mantissa.
 pub fn round_update(acc: &[i32], bits: u32) -> Vec<i8> {
+    let mut out = Vec::with_capacity(acc.len());
+    round_update_into(acc, bits, &mut out);
+    out
+}
+
+/// [`round_update`] into a caller-owned buffer — the allocation-free
+/// form the per-step ZO update kernel reuses across tensors.
+pub fn round_update_into(acc: &[i32], bits: u32, out: &mut Vec<i8>) {
     let maxabs = acc.iter().fold(0i32, |m, &v| m.max(v.wrapping_abs()));
     let b = bitwidth(maxabs);
     let shift = b.saturating_sub(bits);
-    acc.iter()
-        .map(|&v| clamp_i8(pseudo_stochastic_round(v, shift)))
-        .collect()
+    out.clear();
+    out.extend(acc.iter().map(|&v| clamp_i8(pseudo_stochastic_round(v, shift))));
 }
 
 /// Int8 FC backward for the BP tail:

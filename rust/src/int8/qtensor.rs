@@ -32,6 +32,16 @@ impl QTensor {
         self.data.iter().map(|&v| v as f32 * scale).collect()
     }
 
+    /// θ ← clamp(θ + k·z) over the whole tensor — the replay form of the
+    /// Alg. 2 perturbation leg over a cached `z`, integer-only and
+    /// per-element identical to `perturb_int8`'s inline loop.
+    pub fn clamp_add_scaled(&mut self, z: &[i8], k: i32) {
+        assert_eq!(self.data.len(), z.len());
+        for (v, &zv) in self.data.iter_mut().zip(z) {
+            *v = clamp_i8(*v as i32 + k * zv as i32);
+        }
+    }
+
     /// Quantize an f32 slice: pick the exponent so max|v| maps near 127.
     pub fn quantize(dims: &[usize], values: &[f32]) -> QTensor {
         assert_eq!(dims.iter().product::<usize>(), values.len());

@@ -107,6 +107,8 @@ fn print_help() {
          \x20              [--precision fp32|int8|int8*] [--epochs N] [--batch N] [--lr F]\n\
          \x20              [--eval-every N] [--save ckpt] [--load ckpt] [--resume ckpt]\n\
          \x20              [--ckpt-every N] [--ckpt-keep K] [--config file.json] [--verbose]\n\
+         \x20              [--kernels true|false] [--sparse-block N] [--sparse-keep F]\n\
+         \x20              vectorized ZO kernels (default on) + optional block-sparse z\n\
          \x20              [--dp N] [--dp-aggregate mean|sum] [--dp-min-replicas M]\n\
          \x20              train one job across N data-parallel replicas (full-zo/fp32)\n\
          \x20              [--mem-report]   print measured peak heap vs the paper's model\n\
@@ -348,7 +350,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use elasticzo::coordinator::int8_trainer::{perturb_int8, zo_update_int8};
     use elasticzo::coordinator::native_engine::NativeEngine;
     use elasticzo::coordinator::trainer::zo_step;
-    use elasticzo::coordinator::{zo, Engine, Model, TrainSpec};
+    use elasticzo::coordinator::{kernels, zo, Engine, Fp32Session, Model, TrainSession, TrainSpec};
     use elasticzo::int8::{intce, lenet8};
     use elasticzo::metrics::alloc;
     use elasticzo::telemetry::PhaseTimer;
@@ -364,16 +366,43 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut b = Bencher::unfiltered();
 
     // --- ZO micro-ops (Fig. 7 "ZO Perturb"/"ZO Update" slices) ---
+    // Default rows run the chunked kernel path; `*_scalar` siblings keep
+    // the pre-kernel reference (fused generate+apply, one element at a
+    // time) as ungated context. The kernel perturb rows bump the step
+    // every call so each iteration pays a fresh `z` fill — comparable
+    // work to the scalar rows, which regenerate the stream per call.
     let mut lenet = ParamSet::init(Model::LeNet, 1);
     let nt = lenet.num_tensors();
+    let lenet_elems: usize = lenet.data.iter().map(|t| t.len()).sum();
+    let mut kzf = kernels::StepZ::new();
+    let mut kstep = 0u64;
     b.bench("zo_perturb/lenet_107k", || {
+        kstep += 1;
+        kzf.prepare(7, kstep, lenet_elems, None);
+        kernels::apply_z(&mut lenet, nt, 1e-3, kzf.z());
+    });
+    b.bench("zo_perturb_scalar/lenet_107k", || {
         zo::perturb(&mut lenet, nt, 7, 1, 1e-3);
     });
     let mut ws = lenet8::init_params(3, 32);
+    let zo8_elems: usize = ws[..5].iter().map(|w| w.numel()).sum();
+    let mut kz8 = kernels::StepZi8::new();
+    let mut kstep8 = 0u64;
     b.bench("int8_perturb/lenet_107k", || {
+        kstep8 += 1;
+        kz8.prepare(7, kstep8, zo8_elems, 15, 0.5);
+        kernels::apply_z_i8(&mut ws, 5, 1, kz8.z());
+    });
+    b.bench("int8_perturb_scalar/lenet_107k", || {
         perturb_int8(&mut ws, 5, 7, 1, 1, 15, 0.5);
     });
+    // the kernel update replays the step's cached `z` (that is the
+    // product path: the perturb legs already paid for the fill)
+    let (mut acc8, mut upd8) = (Vec::new(), Vec::new());
     b.bench("int8_zo_update/lenet_107k", || {
+        kernels::zo_update_z_i8(&mut ws, 5, 1, 1, kz8.z(), &mut acc8, &mut upd8);
+    });
+    b.bench("int8_zo_update_scalar/lenet_107k", || {
         zo_update_int8(&mut ws, 5, 7, 1, 1, 1, 15, 0.5);
     });
     let zo_end = b.results.len();
@@ -390,6 +419,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         labels: d.labels.clone(),
         bsz: 32,
     };
+    // Default ZO rows drive `Fp32Session` (the product path: per-step
+    // cached `z`, parallel ±ε pair when a second core is up); the
+    // `*_scalar` siblings time [`zo_step`], the scalar reference the
+    // parity suite pins the kernels to.
     for method in [Method::FullZo, Method::Cls1, Method::Cls2] {
         let spec = TrainSpec {
             method,
@@ -403,11 +436,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
             verbose: false,
             ..Default::default()
         };
+        let tag = method.label().replace(' ', "_");
+        let mut native = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 3);
+        let mut sess = Fp32Session::new(&mut native, &mut params, &spec)?;
+        let mut timer = PhaseTimer::new();
+        let mut step = 0u64;
+        b.bench(&format!("step_{tag}/native"), || {
+            step += 1;
+            sess.step(&batch, step, &mut timer).unwrap().loss
+        });
+        drop(sess);
         let mut native = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 3);
         let mut timer = PhaseTimer::new();
         let mut step = 0u64;
-        b.bench(&format!("step_{}/native", method.label().replace(' ', "_")), || {
+        b.bench(&format!("step_{tag}_scalar/native"), || {
             step += 1;
             zo_step(&mut native, &mut params, &batch, step, 1e-3, &spec, &mut timer).unwrap()
         });
@@ -417,15 +461,35 @@ fn cmd_bench(args: &Args) -> Result<()> {
     b.bench("step_Full_BP/native", || {
         native.full_step(&mut params, &d.x, &y, 32, 0.01).unwrap().loss
     });
+    // int8 composite, kernel path: one `z` fill replayed by all four
+    // legs, ±ε forwards side by side when a second core is up — the
+    // same shape `Int8Session` runs with `spec.kernels` on.
     let mut ws8 = lenet8::init_params(5, 32);
     let xq = lenet8::quantize_input(&d.x, 32);
+    let mut snap8 = ws8.clone();
+    let zo8e: usize = ws8[..4].iter().map(|w| w.numel()).sum();
+    let mut kz8e = kernels::StepZi8::new();
+    let (mut acc8e, mut upd8e) = (Vec::new(), Vec::new());
+    let par8 = kernels::hw_threads() > 1;
     let mut step8 = 0u64;
     b.bench("step_Cls1/int8_native", || {
         step8 += 1;
-        perturb_int8(&mut ws8, 4, 1, step8, 1, 15, 0.5);
-        let fp = lenet8::forward(&ws8, &xq, 32);
-        perturb_int8(&mut ws8, 4, 1, step8, -2, 15, 0.5);
-        let fm = lenet8::forward(&ws8, &xq, 32);
+        kz8e.prepare(1, step8, zo8e, 15, 0.5);
+        kernels::apply_z_i8(&mut ws8, 4, 1, kz8e.z());
+        let (fp, fm) = if par8 {
+            snap8.clone_from(&ws8);
+            kernels::apply_z_i8(&mut ws8, 4, -2, kz8e.z());
+            let (ws_ref, snap_ref, xq_ref) = (&ws8, &snap8, &xq);
+            std::thread::scope(|sc| {
+                let h = sc.spawn(move || lenet8::forward(snap_ref, xq_ref, 32));
+                let fm = lenet8::forward(ws_ref, xq_ref, 32);
+                (h.join().expect("±ε int8 bench worker panicked"), fm)
+            })
+        } else {
+            let fp = lenet8::forward(&ws8, &xq, 32);
+            kernels::apply_z_i8(&mut ws8, 4, -2, kz8e.z());
+            (fp, lenet8::forward(&ws8, &xq, 32))
+        };
         let g = intce::loss_diff_sign_int(
             &fp.logits.data,
             fp.logits.exp,
@@ -435,9 +499,31 @@ fn cmd_bench(args: &Args) -> Result<()> {
             32,
             10,
         );
-        perturb_int8(&mut ws8, 4, 1, step8, 1, 15, 0.5);
-        zo_update_int8(&mut ws8, 4, 1, step8, g, 1, 15, 0.5);
+        kernels::apply_z_i8(&mut ws8, 4, 1, kz8e.z());
+        kernels::zo_update_z_i8(&mut ws8, 4, g, 1, kz8e.z(), &mut acc8e, &mut upd8e);
         lenet8::tail_update(&mut ws8, &fm, &d.labels, 1, 32, 5);
+        g
+    });
+    let mut ws8s = lenet8::init_params(5, 32);
+    let mut step8s = 0u64;
+    b.bench("step_Cls1_scalar/int8_native", || {
+        step8s += 1;
+        perturb_int8(&mut ws8s, 4, 1, step8s, 1, 15, 0.5);
+        let fp = lenet8::forward(&ws8s, &xq, 32);
+        perturb_int8(&mut ws8s, 4, 1, step8s, -2, 15, 0.5);
+        let fm = lenet8::forward(&ws8s, &xq, 32);
+        let g = intce::loss_diff_sign_int(
+            &fp.logits.data,
+            fp.logits.exp,
+            &fm.logits.data,
+            fm.logits.exp,
+            &d.labels,
+            32,
+            10,
+        );
+        perturb_int8(&mut ws8s, 4, 1, step8s, 1, 15, 0.5);
+        zo_update_int8(&mut ws8s, 4, 1, step8s, g, 1, 15, 0.5);
+        lenet8::tail_update(&mut ws8s, &fm, &d.labels, 1, 32, 5);
         g
     });
 
@@ -684,10 +770,11 @@ fn git_rev() -> String {
 }
 
 /// Print per-metric deltas between a baseline snapshot and the run that
-/// just finished, then enforce the regression gate: fail when any
-/// end-to-end step's mean latency slowed down by more than
-/// `max_regress_pct` percent. Only `e2e_step/*/mean_s` gates — iter
-/// counts, host facts and throughput wobble are reported but advisory.
+/// just finished, then enforce the regression gate: fail when any ZO
+/// micro-op's or end-to-end step's mean latency slowed down by more
+/// than `max_regress_pct` percent. Only `zo_ops/*/mean_s` and
+/// `e2e_step/*/mean_s` gate — iter counts, host facts and throughput
+/// wobble are reported but advisory.
 fn compare_bench(
     old: &elasticzo::util::json::Value,
     new: &elasticzo::util::json::Value,
@@ -740,7 +827,8 @@ fn compare_bench(
             Some(old_v) if *old_v != 0.0 => {
                 let pct = (new_v - old_v) / old_v * 100.0;
                 println!("{name:<56} {old_v:>12.6} -> {new_v:>12.6}  {pct:>+7.1}%");
-                let gated = name.starts_with("e2e_step/") && name.ends_with("/mean_s");
+                let gated = (name.starts_with("e2e_step/") || name.starts_with("zo_ops/"))
+                    && name.ends_with("/mean_s");
                 if gated && !matches!(&worst, Some((_, w)) if pct <= *w) {
                     worst = Some((name.clone(), pct));
                 }
@@ -754,7 +842,7 @@ fn compare_bench(
         }
     }
     if let Some((name, pct)) = worst {
-        println!("worst e2e step delta: {name} {pct:+.1}%");
+        println!("worst gated delta: {name} {pct:+.1}%");
         anyhow::ensure!(
             pct <= max_regress_pct,
             "{name} slowed down {pct:+.1}%, above the --max-regress {max_regress_pct}% gate"

@@ -176,6 +176,31 @@ impl ZoStream {
     pub fn sparse_i8(&mut self, r_max: i8, p_zero: f32) -> i8 {
         self.rng.sparse_i8(r_max, p_zero)
     }
+
+    /// Drain the raw Box–Muller uniforms for `npairs` Gaussian pairs in
+    /// one pass — the rejection-sampling phase of [`ZoStream::normal`]
+    /// split off from the transcendental phase, so a caller can evaluate
+    /// the ln/sin_cos work out of stream order (the chunked/parallel
+    /// fill in `coordinator::kernels`). Each `(u1, u2)` entry maps to
+    /// the `(r·cosθ, r·sinθ)` pair two consecutive `normal()` calls
+    /// would return; the rejection loop is replayed exactly, so the
+    /// stream position after this call equals `2·npairs` `normal()`
+    /// calls on a fresh stream. Must be called on a freshly built
+    /// stream (no cached spare half).
+    pub fn raw_pairs(&mut self, npairs: usize, out: &mut Vec<(f32, f32)>) {
+        debug_assert!(self.spare.is_none(), "raw_pairs requires a fresh ZoStream");
+        out.clear();
+        out.reserve(npairs);
+        for _ in 0..npairs {
+            loop {
+                let u1 = self.rng.uniform();
+                if u1 > 1e-12 {
+                    out.push((u1, self.rng.uniform()));
+                    break;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -270,6 +295,24 @@ mod tests {
         let mut s2 = ZoStream::for_step(99, 1234);
         let z2: Vec<f32> = (0..512).map(|_| s2.normal()).collect();
         assert_eq!(z1, z2); // bitwise identical
+    }
+
+    #[test]
+    fn raw_pairs_transform_matches_normal_bitwise() {
+        // raw_pairs + the Box–Muller transform must reproduce normal()'s
+        // exact bits: same draws, same f64 math, same truncation.
+        let mut reference = ZoStream::for_step(21, 77);
+        let want: Vec<u32> = (0..257).map(|_| reference.normal().to_bits()).collect();
+        let mut raw = Vec::new();
+        ZoStream::for_step(21, 77).raw_pairs(129, &mut raw);
+        let mut got = Vec::with_capacity(258);
+        for &(u1, u2) in &raw {
+            let r = (-2.0 * (u1 as f64).ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2 as f64).sin_cos();
+            got.push(((r * c) as f32).to_bits());
+            got.push(((r * s) as f32).to_bits());
+        }
+        assert_eq!(&got[..257], &want[..], "odd tail drops the spare half only");
     }
 
     #[test]

@@ -82,10 +82,22 @@ pub fn col_sum_f32(a: &TensorF32) -> TensorF32 {
     Tensor::from_vec(&[n], out)
 }
 
-/// y += alpha * x (saxpy), used by SGD updates.
+/// y += alpha * x (saxpy), used by SGD updates and the ZO perturbation
+/// replay. Chunked into fixed 16-lane strips so the compiler emits wide
+/// vector code without a `-C target-cpu` hint; per-element math is the
+/// same mul-then-add as the plain loop, so results are bit-identical on
+/// any chunk width.
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (yi, &xi) in y.iter_mut().zip(x) {
+    const LANES: usize = 16;
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (ys, xs) in (&mut yc).zip(&mut xc) {
+        for (yi, &xi) in ys.iter_mut().zip(xs) {
+            *yi += alpha * xi;
+        }
+    }
+    for (yi, &xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
         *yi += alpha * xi;
     }
 }

@@ -1,146 +1,279 @@
-//! Engine parity: the XLA (AOT artifact) engine and the native rust
-//! engine must agree on every Engine method — loss, logits, partition
-//! activations, tail gradients and full-BP steps — for both models.
-//! This is the cross-check that pins the three-layer stack to the
-//! reference implementation. Skipped when artifacts/ is absent.
-//! Compiled only with the `xla` cargo feature (needs the PJRT runtime).
+//! Engine parity and loss-diff edge cases.
+//!
+//! The `xla_parity` module (compiled only with the `xla` cargo
+//! feature; needs the PJRT runtime, skipped when artifacts/ is absent)
+//! pins the XLA (AOT artifact) engine to the native rust engine on
+//! every Engine method — loss, logits, partition activations, tail
+//! gradients and full-BP steps — for both models.
+//!
+//! The ungated tests below pin the ZO loss-difference math at its
+//! edges: exact-zero δ, g_clip saturation on both signs, ε down at
+//! f32 denormal scale, and the integer CE decision at operand
+//! magnitudes far past the i32 accumulation boundary (`int8/intce.rs`
+//! accumulates in i64 — these tests are what make that a contract).
 
-#![cfg(feature = "xla")]
+use elasticzo::coordinator::zo;
+use elasticzo::int8::intce;
+use elasticzo::rng::Rng64;
 
-use elasticzo::coordinator::native_engine::NativeEngine;
-use elasticzo::coordinator::xla_engine::XlaEngine;
-use elasticzo::coordinator::{Engine, Model, ParamSet};
-use elasticzo::data;
-
-fn close(a: f32, b: f32, tol: f32) -> bool {
-    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
-}
-
-fn lenet_batch(bsz: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
-    let d = data::synth_mnist::generate(bsz, seed);
-    let mut y = vec![0.0f32; bsz * 10];
-    for (i, &l) in d.labels.iter().enumerate() {
-        y[i * 10 + l as usize] = 1.0;
+#[test]
+fn zero_delta_projects_to_exact_zero() {
+    // l₊ == l₋ must yield the positive-zero gradient bit pattern, not
+    // merely something small — the int8 g==0 fast path and the dp
+    // commit log both branch on it
+    for l in [0.0f32, 1.0, 2.3e4, f32::MIN_POSITIVE] {
+        for eps in [1e-2f32, 1e-6] {
+            let g = zo::projected_gradient(l, l, eps, 5.0);
+            assert_eq!(g.to_bits(), 0.0f32.to_bits(), "l={l} eps={eps}");
+        }
     }
-    (d.x, y)
+    assert_eq!(zo::projected_gradient_from_delta(0.0, 1e-2, 5.0).to_bits(), 0.0f32.to_bits());
 }
 
-fn xla(model: Model, bsz: usize) -> Option<XlaEngine> {
-    match XlaEngine::open_default(model, bsz) {
-        Ok(e) => Some(e),
-        Err(e) => {
-            eprintln!("skipping parity test: {e:#}");
-            None
+#[test]
+fn g_clip_saturates_exactly_on_both_signs() {
+    let clip = 5.0f32;
+    // |δ|/2ε far above the clip: the result must be the clip value
+    // itself, bit for bit, on either sign
+    let g_pos = zo::projected_gradient(1e3, 0.0, 1e-3, clip);
+    let g_neg = zo::projected_gradient(0.0, 1e3, 1e-3, clip);
+    assert_eq!(g_pos.to_bits(), clip.to_bits());
+    assert_eq!(g_neg.to_bits(), (-clip).to_bits());
+    // and just inside the clip nothing saturates
+    let g_in = zo::projected_gradient(1e-3, 0.0, 1e-3, clip);
+    assert!(g_in.abs() < clip);
+}
+
+#[test]
+fn denormal_eps_never_produces_nan_and_stays_clipped() {
+    let clip = 5.0f32;
+    let denormal = f32::MIN_POSITIVE / 4.0; // ~2.9e-39, subnormal
+    assert!(denormal > 0.0 && !denormal.is_normal());
+    for delta in [denormal, -denormal, 1.0f32, -1.0, f32::MIN_POSITIVE] {
+        let g = zo::projected_gradient_from_delta(delta, denormal, clip);
+        assert!(g.is_finite(), "delta={delta}: g={g}");
+        assert!(g.abs() <= clip, "delta={delta}: g={g}");
+        assert_eq!(g.signum(), delta.signum(), "delta={delta}");
+    }
+    // a denormal δ against a normal ε underflows toward zero quietly
+    let g = zo::projected_gradient_from_delta(denormal, 1e-2, clip);
+    assert!(g.is_finite() && g.abs() < 1e-30);
+}
+
+#[test]
+fn projected_gradient_and_from_delta_agree_bitwise() {
+    // the two spellings feed the same trajectory (local step vs dp
+    // commit log) and must never drift apart
+    let mut rng = Rng64::new(3);
+    for _ in 0..200 {
+        let lp = rng.uniform() * 4.0;
+        let lm = rng.uniform() * 4.0;
+        let eps = 10f32.powi(-((rng.next_u64() % 6) as i32) - 1);
+        let g1 = zo::projected_gradient(lp, lm, eps, 5.0);
+        let g2 = zo::projected_gradient_from_delta(lp - lm, eps, 5.0);
+        assert_eq!(g1.to_bits(), g2.to_bits(), "lp={lp} lm={lm} eps={eps}");
+    }
+}
+
+#[test]
+fn intce_survives_exponents_past_the_i32_boundary() {
+    // s_a=30 against s_b=0 makes the rescaled logit difference reach
+    // ~510·2^30 and the Q15 product ~2.6e16 — orders of magnitude past
+    // i32::MAX. The decision must come out in range (no debug-overflow
+    // panic anywhere in the i64 pipeline) and the f64 oracle must stay
+    // finite on the same inputs.
+    let (bsz, n) = (8usize, 10usize);
+    let mut rng = Rng64::new(29);
+    for &(s_a, s_b) in &[(30i32, 0i32), (0, 30), (30, 30), (-30, -30), (15, -15)] {
+        for _ in 0..20 {
+            let alpha: Vec<i8> = (0..bsz * n).map(|_| rng.uniform_i32(-127, 127) as i8).collect();
+            let beta: Vec<i8> = (0..bsz * n).map(|_| rng.uniform_i32(-127, 127) as i8).collect();
+            let labels: Vec<u8> = (0..bsz).map(|_| (rng.next_u64() % n as u64) as u8).collect();
+            let g = intce::loss_diff_sign_int(&alpha, s_a, &beta, s_b, &labels, bsz, n);
+            assert!((-1..=1).contains(&g));
+            let exact = intce::loss_diff_f32(&alpha, s_a, &beta, s_b, &labels, bsz, n);
+            assert!(exact.is_finite(), "oracle blew up at s_a={s_a} s_b={s_b}");
+        }
+        // an unambiguous pair at the same extremes: alpha confident on
+        // the label, beta uniform — L(α) < L(β), so the sign must be −1
+        // whenever the rescaled hats still resolve (they do for every
+        // pair here with a positive max exponent)
+        if s_a.max(s_b) >= 0 {
+            let mut alpha = vec![-60i8; bsz * n];
+            let labels: Vec<u8> = vec![3; bsz];
+            for b in 0..bsz {
+                alpha[b * n + 3] = 120;
+            }
+            let beta = vec![0i8; bsz * n];
+            let g = intce::loss_diff_sign_int(&alpha, s_a, &beta, s_b, &labels, bsz, n);
+            assert_eq!(g, -1, "s_a={s_a} s_b={s_b}");
         }
     }
 }
 
 #[test]
-fn lenet_forward_parity() {
-    let Some(mut xe) = xla(Model::LeNet, 32) else { return };
-    let mut ne = NativeEngine::new(Model::LeNet);
-    let params = ParamSet::init(Model::LeNet, 77);
-    let (x, y) = lenet_batch(32, 78);
-    let fx = xe.forward(&params, &x, &y, 32).unwrap();
-    let fnv = ne.forward(&params, &x, &y, 32).unwrap();
-    assert!(close(fx.loss, fnv.loss, 1e-3), "{} vs {}", fx.loss, fnv.loss);
-    for (a, b) in fx.logits.iter().zip(&fnv.logits) {
-        assert!(close(*a, *b, 1e-3));
-    }
-    for (a, b) in fx.act_c1.iter().zip(&fnv.act_c1) {
-        assert!(close(*a, *b, 1e-3));
-    }
-    for (a, b) in fx.act_c2.iter().zip(&fnv.act_c2) {
-        assert!(close(*a, *b, 1e-3));
+fn intce_antisymmetric_at_extreme_exponents() {
+    let (bsz, n) = (4usize, 10usize);
+    let mut rng = Rng64::new(31);
+    for &(s_a, s_b) in &[(30i32, 0i32), (15, -15), (-30, -30)] {
+        for _ in 0..20 {
+            let alpha: Vec<i8> = (0..bsz * n).map(|_| rng.uniform_i32(-127, 127) as i8).collect();
+            let beta: Vec<i8> = (0..bsz * n).map(|_| rng.uniform_i32(-127, 127) as i8).collect();
+            let labels: Vec<u8> = (0..bsz).map(|_| (rng.next_u64() % n as u64) as u8).collect();
+            let g1 = intce::loss_diff_sign_int(&alpha, s_a, &beta, s_b, &labels, bsz, n);
+            let g2 = intce::loss_diff_sign_int(&beta, s_b, &alpha, s_a, &labels, bsz, n);
+            assert_eq!(g1, -g2, "s_a={s_a} s_b={s_b}");
+        }
     }
 }
 
 #[test]
-fn lenet_tail_grads_parity() {
-    let Some(mut xe) = xla(Model::LeNet, 32) else { return };
-    let mut ne = NativeEngine::new(Model::LeNet);
-    let params = ParamSet::init(Model::LeNet, 80);
-    let (x, y) = lenet_batch(32, 81);
-    let fwd = ne.forward(&params, &x, &y, 32).unwrap();
-    for k in [1usize, 2] {
-        let gx = xe.tail_grads(&params, &fwd, &y, k, 32).unwrap();
-        let gn = ne.tail_grads(&params, &fwd, &y, k, 32).unwrap();
-        assert_eq!(gx.len(), gn.len());
-        for ((ix, vx), (inn, vn)) in gx.iter().zip(&gn) {
-            assert_eq!(ix, inn, "tail grad index ordering");
-            for (a, b) in vx.iter().zip(vn) {
-                assert!((a - b).abs() < 1e-4 + 1e-3 * b.abs(), "k={k} idx={ix}: {a} vs {b}");
+fn intce_saturated_identical_rows_are_a_tie() {
+    // all-saturated logits on both sides, equal exponents: δ is exactly
+    // zero and the integer path must say so even at the i8 rails
+    let (bsz, n) = (4usize, 10usize);
+    let row: Vec<i8> = (0..bsz * n).map(|i| if i % n == 0 { 127 } else { -128 }).collect();
+    let labels = vec![0u8; bsz];
+    assert_eq!(intce::loss_diff_sign_int(&row, 7, &row, 7, &labels, bsz, n), 0);
+}
+
+#[cfg(feature = "xla")]
+mod xla_parity {
+    use elasticzo::coordinator::native_engine::NativeEngine;
+    use elasticzo::coordinator::xla_engine::XlaEngine;
+    use elasticzo::coordinator::{Engine, Model, ParamSet};
+    use elasticzo::data;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn lenet_batch(bsz: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let d = data::synth_mnist::generate(bsz, seed);
+        let mut y = vec![0.0f32; bsz * 10];
+        for (i, &l) in d.labels.iter().enumerate() {
+            y[i * 10 + l as usize] = 1.0;
+        }
+        (d.x, y)
+    }
+
+    fn xla(model: Model, bsz: usize) -> Option<XlaEngine> {
+        match XlaEngine::open_default(model, bsz) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("skipping parity test: {e:#}");
+                None
             }
         }
     }
-}
 
-#[test]
-fn lenet_full_step_parity() {
-    let Some(mut xe) = xla(Model::LeNet, 32) else { return };
-    let mut ne = NativeEngine::new(Model::LeNet);
-    let mut px = ParamSet::init(Model::LeNet, 83);
-    let mut pn = px.clone();
-    let (x, y) = lenet_batch(32, 84);
-    let sx = xe.full_step(&mut px, &x, &y, 32, 0.05).unwrap();
-    let sn = ne.full_step(&mut pn, &x, &y, 32, 0.05).unwrap();
-    assert!(close(sx.loss, sn.loss, 1e-3));
-    // logits parity when the artifact set exposes them (newer compiles)
-    if let (Some(lx), Some(ln)) = (&sx.logits, &sn.logits) {
-        for (a, b) in lx.iter().zip(ln) {
+    #[test]
+    fn lenet_forward_parity() {
+        let Some(mut xe) = xla(Model::LeNet, 32) else { return };
+        let mut ne = NativeEngine::new(Model::LeNet);
+        let params = ParamSet::init(Model::LeNet, 77);
+        let (x, y) = lenet_batch(32, 78);
+        let fx = xe.forward(&params, &x, &y, 32).unwrap();
+        let fnv = ne.forward(&params, &x, &y, 32).unwrap();
+        assert!(close(fx.loss, fnv.loss, 1e-3), "{} vs {}", fx.loss, fnv.loss);
+        for (a, b) in fx.logits.iter().zip(&fnv.logits) {
+            assert!(close(*a, *b, 1e-3));
+        }
+        for (a, b) in fx.act_c1.iter().zip(&fnv.act_c1) {
+            assert!(close(*a, *b, 1e-3));
+        }
+        for (a, b) in fx.act_c2.iter().zip(&fnv.act_c2) {
             assert!(close(*a, *b, 1e-3));
         }
     }
-    // updated parameters must match across engines
-    for (tx, tn) in px.data.iter().zip(&pn.data) {
-        for (a, b) in tx.iter().zip(tn) {
-            assert!((a - b).abs() < 1e-4 + 1e-3 * b.abs(), "{a} vs {b}");
+
+    #[test]
+    fn lenet_tail_grads_parity() {
+        let Some(mut xe) = xla(Model::LeNet, 32) else { return };
+        let mut ne = NativeEngine::new(Model::LeNet);
+        let params = ParamSet::init(Model::LeNet, 80);
+        let (x, y) = lenet_batch(32, 81);
+        let fwd = ne.forward(&params, &x, &y, 32).unwrap();
+        for k in [1usize, 2] {
+            let gx = xe.tail_grads(&params, &fwd, &y, k, 32).unwrap();
+            let gn = ne.tail_grads(&params, &fwd, &y, k, 32).unwrap();
+            assert_eq!(gx.len(), gn.len());
+            for ((ix, vx), (inn, vn)) in gx.iter().zip(&gn) {
+                assert_eq!(ix, inn, "tail grad index ordering");
+                for (a, b) in vx.iter().zip(vn) {
+                    assert!((a - b).abs() < 1e-4 + 1e-3 * b.abs(), "k={k} idx={ix}: {a} vs {b}");
+                }
+            }
         }
     }
-}
 
-#[test]
-fn pointnet_forward_parity() {
-    let model = Model::PointNet { npoints: 128, ncls: 40 };
-    let Some(mut xe) = xla(model, 16) else { return };
-    let mut ne = NativeEngine::new(model);
-    let params = ParamSet::init(model, 85);
-    let d = data::synth_modelnet::generate(16, 128, 86);
-    let mut y = vec![0.0f32; 16 * 40];
-    for (i, &l) in d.labels.iter().enumerate() {
-        y[i * 40 + l as usize] = 1.0;
+    #[test]
+    fn lenet_full_step_parity() {
+        let Some(mut xe) = xla(Model::LeNet, 32) else { return };
+        let mut ne = NativeEngine::new(Model::LeNet);
+        let mut px = ParamSet::init(Model::LeNet, 83);
+        let mut pn = px.clone();
+        let (x, y) = lenet_batch(32, 84);
+        let sx = xe.full_step(&mut px, &x, &y, 32, 0.05).unwrap();
+        let sn = ne.full_step(&mut pn, &x, &y, 32, 0.05).unwrap();
+        assert!(close(sx.loss, sn.loss, 1e-3));
+        // logits parity when the artifact set exposes them (newer compiles)
+        if let (Some(lx), Some(ln)) = (&sx.logits, &sn.logits) {
+            for (a, b) in lx.iter().zip(ln) {
+                assert!(close(*a, *b, 1e-3));
+            }
+        }
+        // updated parameters must match across engines
+        for (tx, tn) in px.data.iter().zip(&pn.data) {
+            for (a, b) in tx.iter().zip(tn) {
+                assert!((a - b).abs() < 1e-4 + 1e-3 * b.abs(), "{a} vs {b}");
+            }
+        }
     }
-    let fx = xe.forward(&params, &d.x, &y, 16).unwrap();
-    let fnv = ne.forward(&params, &d.x, &y, 16).unwrap();
-    assert!(close(fx.loss, fnv.loss, 1e-3), "{} vs {}", fx.loss, fnv.loss);
-    for (a, b) in fx.logits.iter().zip(&fnv.logits) {
-        assert!(close(*a, *b, 2e-3));
-    }
-}
 
-#[test]
-fn pallas_and_fast_forward_agree() {
-    // the Pallas-interpret artifact and the fast reference-ops artifact
-    // lower the SAME math — loss must agree to float tolerance.
-    std::env::set_var("REPRO_PALLAS_FWD", "1");
-    let pallas = xla(Model::LeNet, 8);
-    std::env::remove_var("REPRO_PALLAS_FWD");
-    let Some(mut pe) = pallas else { return };
-    let Some(mut fe) = xla(Model::LeNet, 8) else { return };
-    let params = ParamSet::init(Model::LeNet, 90);
-    let (x, y) = lenet_batch(8, 91);
-    let fp = pe.forward(&params, &x, &y, 8).unwrap();
-    let ff = fe.forward(&params, &x, &y, 8).unwrap();
-    assert!(close(fp.loss, ff.loss, 1e-3), "{} vs {}", fp.loss, ff.loss);
-    for (a, b) in fp.logits.iter().zip(&ff.logits) {
-        assert!(close(*a, *b, 1e-3));
+    #[test]
+    fn pointnet_forward_parity() {
+        let model = Model::PointNet { npoints: 128, ncls: 40 };
+        let Some(mut xe) = xla(model, 16) else { return };
+        let mut ne = NativeEngine::new(model);
+        let params = ParamSet::init(model, 85);
+        let d = data::synth_modelnet::generate(16, 128, 86);
+        let mut y = vec![0.0f32; 16 * 40];
+        for (i, &l) in d.labels.iter().enumerate() {
+            y[i * 40 + l as usize] = 1.0;
+        }
+        let fx = xe.forward(&params, &d.x, &y, 16).unwrap();
+        let fnv = ne.forward(&params, &d.x, &y, 16).unwrap();
+        assert!(close(fx.loss, fnv.loss, 1e-3), "{} vs {}", fx.loss, fnv.loss);
+        for (a, b) in fx.logits.iter().zip(&fnv.logits) {
+            assert!(close(*a, *b, 2e-3));
+        }
     }
-}
 
-#[test]
-fn batch_size_mismatch_is_error() {
-    let Some(mut xe) = xla(Model::LeNet, 32) else { return };
-    let params = ParamSet::init(Model::LeNet, 92);
-    let (x, y) = lenet_batch(8, 93);
-    assert!(xe.forward(&params, &x, &y, 8).is_err());
+    #[test]
+    fn pallas_and_fast_forward_agree() {
+        // the Pallas-interpret artifact and the fast reference-ops artifact
+        // lower the SAME math — loss must agree to float tolerance.
+        std::env::set_var("REPRO_PALLAS_FWD", "1");
+        let pallas = xla(Model::LeNet, 8);
+        std::env::remove_var("REPRO_PALLAS_FWD");
+        let Some(mut pe) = pallas else { return };
+        let Some(mut fe) = xla(Model::LeNet, 8) else { return };
+        let params = ParamSet::init(Model::LeNet, 90);
+        let (x, y) = lenet_batch(8, 91);
+        let fp = pe.forward(&params, &x, &y, 8).unwrap();
+        let ff = fe.forward(&params, &x, &y, 8).unwrap();
+        assert!(close(fp.loss, ff.loss, 1e-3), "{} vs {}", fp.loss, ff.loss);
+        for (a, b) in fp.logits.iter().zip(&ff.logits) {
+            assert!(close(*a, *b, 1e-3));
+        }
+    }
+
+    #[test]
+    fn batch_size_mismatch_is_error() {
+        let Some(mut xe) = xla(Model::LeNet, 32) else { return };
+        let params = ParamSet::init(Model::LeNet, 92);
+        let (x, y) = lenet_batch(8, 93);
+        assert!(xe.forward(&params, &x, &y, 8).is_err());
+    }
 }

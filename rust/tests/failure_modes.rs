@@ -88,6 +88,15 @@ fn invalid_configs_rejected_with_context() {
         vec!["--model", "resnet"],
         vec!["--method", "cls3"],
         vec!["--precision", "fp16"],
+        // kernel / structured-perturbation knobs: every unsupported
+        // combination must die at config time, not deep in a session
+        vec!["--kernels", "maybe"],
+        vec!["--sparse-block", "64", "--kernels", "false"],
+        vec!["--sparse-block", "64", "--precision", "int8"],
+        vec!["--sparse-block", "64", "--method", "full-bp"],
+        vec!["--sparse-block", "64", "--sparse-keep", "0"],
+        vec!["--sparse-block", "64", "--sparse-keep", "1.5"],
+        vec!["--sparse-block", "64", "--method", "full-zo", "--dp", "2"],
     ];
     for case in bad {
         let args = Args::parse(case.iter().map(|s| s.to_string()));

@@ -127,21 +127,34 @@ fn finetuning_recovers_rotation_shift() {
 
 #[test]
 fn deterministic_replay_same_seed() {
-    // identical spec + seed => identical history (seed trick + data
-    // pipeline are fully deterministic)
+    // identical spec + seed => identical run, down to the bit pattern
+    // of every reported metric AND the final parameters (seed trick +
+    // data pipeline are fully deterministic; a plain float == would
+    // let ±0.0 or latent NaNs slip through)
     let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 256, 128, 15, 0);
     let run = || {
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 16);
-        trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(Method::Cls2, 2))
+        let h = trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(Method::Cls2, 2))
             .unwrap()
-            .history
+            .history;
+        (h, params)
     };
-    let h1 = run();
-    let h2 = run();
+    let (h1, p1) = run();
+    let (h2, p2) = run();
+    assert_eq!(h1.epochs.len(), h2.epochs.len());
     for (a, b) in h1.epochs.iter().zip(&h2.epochs) {
-        assert_eq!(a.train_loss, b.train_loss);
-        assert_eq!(a.test_acc, b.test_acc);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+        assert_eq!(a.train_acc.to_bits(), b.train_acc.to_bits());
+        assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits());
+        assert_eq!(a.lr.to_bits(), b.lr.to_bits());
+        assert!(a.train_loss.is_finite(), "epoch {} loss {}", a.epoch, a.train_loss);
+    }
+    for (i, (x, y)) in p1.data.iter().zip(&p2.data).enumerate() {
+        let xb: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+        let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, yb, "tensor {i}");
     }
 }
 
@@ -177,6 +190,9 @@ fn config_cli_pipeline() {
     let s = cfg.train_spec();
     assert_eq!(s.precision, PrecisionSpec::Int8 { grad_mode: ZoGradMode::IntCE, r_max: 15, b_zo: 1 });
     assert_eq!(s.label(), "ZO-Feat-Cls2 INT8*");
+    // the kernel path is the default and dense perturbation its default shape
+    assert!(s.kernels, "kernels must default on through the CLI pipeline");
+    assert_eq!(s.sparse_block, 0);
 }
 
 #[test]

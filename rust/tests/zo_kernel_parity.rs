@@ -1,0 +1,235 @@
+//! Kernel parity & property suite: pins the chunked/parallel ZO
+//! kernels (`coordinator::kernels`) to the scalar reference path,
+//! bit for bit. Covers the micro level (Gaussian fill, perturb legs,
+//! int8 update) and the macro level (whole training runs with
+//! `spec.kernels` on vs off — fp32, int8, dp N=2). The structured
+//! perturbation flag is the one intentional divergence and is tested
+//! as exactly that: different trajectory, still deterministic.
+
+use elasticzo::coordinator::int8_trainer::{self, perturb_int8, zo_update_int8};
+use elasticzo::coordinator::metrics::History;
+use elasticzo::coordinator::native_engine::NativeEngine;
+use elasticzo::coordinator::{
+    kernels, session, trainer, zo, DpAggregate, DpLocalSession, DpSpec, DpWorld, Method, Model,
+    ParamSet, PrecisionSpec, TrainSpec, ZoGradMode,
+};
+use elasticzo::data::{self, DatasetKind};
+use elasticzo::int8::lenet8;
+use elasticzo::rng::ZoStream;
+use std::sync::Once;
+
+/// The container running `cargo test` may expose a single core, which
+/// would silently reduce every parallel branch to its sequential
+/// fallback. Force a 4-thread kernel pool (the override is read once,
+/// before any test touches the kernels) so the scoped-thread paths —
+/// chunked Gaussian fill, the ±ε pair, dp shard fan-out — actually
+/// run multi-threaded while the suite checks their bits.
+fn force_threads() {
+    static INIT: Once = Once::new();
+    INIT.call_once(|| std::env::set_var("REPRO_KERNEL_THREADS", "4"));
+}
+
+#[test]
+fn thread_override_is_respected() {
+    force_threads();
+    assert_eq!(kernels::hw_threads(), 4);
+}
+
+#[test]
+fn fill_z_matches_sequential_stream_bitwise() {
+    force_threads();
+    // sizes straddle the per-thread chunking threshold: 100k elements
+    // is 50k pairs, enough for 3 worker threads
+    for n in [0usize, 1, 2, 255, 4096, 100_000] {
+        let mut out = vec![0.0f32; n];
+        kernels::fill_z(21, 9, &mut out);
+        let mut s = ZoStream::for_step(21, 9);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v.to_bits(), s.normal().to_bits(), "n={n} elem {i}");
+        }
+    }
+}
+
+#[test]
+fn fp32_perturb_legs_match_scalar_bitwise() {
+    force_threads();
+    // the exact leg sequence of a ZO step (+ε, −2ε, +ε restore, then
+    // the −lr·g commit), kernel vs scalar, on both model sizes
+    for (model, k) in [(Model::LeNet, 1usize), (Model::PointNet { npoints: 32, ncls: 40 }, 2)] {
+        let mut scalar = ParamSet::init(model, 13);
+        let mut kernel = scalar.clone();
+        let boundary = scalar.zo_boundary(k);
+        let n: usize = kernel.data[..boundary].iter().map(|t| t.len()).sum();
+        let mut kz = kernels::StepZ::new();
+        for (step, scale) in [(4u64, 1e-2f32), (4, -2e-2), (4, 1e-2), (4, -3.7e-4), (5, 1e-2)] {
+            zo::perturb(&mut scalar, boundary, 17, step, scale);
+            kz.prepare(17, step, n, None);
+            kernels::apply_z(&mut kernel, boundary, scale, kz.z());
+        }
+        for (i, (a, b)) in scalar.data.iter().zip(&kernel.data).enumerate() {
+            let a: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "{model:?} tensor {i}");
+        }
+    }
+}
+
+#[test]
+fn int8_legs_and_update_match_scalar() {
+    force_threads();
+    let (n_zo, seed, r_max, p_zero) = (4usize, 23u64, 15i8, 0.5f32);
+    let mut scalar = lenet8::init_params(7, 32);
+    let mut kernel = scalar.clone();
+    let n: usize = kernel[..n_zo].iter().map(|w| w.numel()).sum();
+    let mut kz = kernels::StepZi8::new();
+    let (mut acc, mut upd) = (Vec::new(), Vec::new());
+    for step in 1u64..=3 {
+        kz.prepare(seed, step, n, r_max, p_zero);
+        for k in [1i32, -2, 1] {
+            perturb_int8(&mut scalar, n_zo, seed, step, k, r_max, p_zero);
+            kernels::apply_z_i8(&mut kernel, n_zo, k, kz.z());
+            assert_eq!(scalar, kernel, "step {step} leg k={k}");
+        }
+        // g spans the sign cases the integer CE can emit, including the
+        // g=0 no-op
+        let g = [(-1i32), 0, 1][(step % 3) as usize];
+        zo_update_int8(&mut scalar, n_zo, seed, step, g, 1, r_max, p_zero);
+        kernels::zo_update_z_i8(&mut kernel, n_zo, g, 1, kz.z(), &mut acc, &mut upd);
+        assert_eq!(scalar, kernel, "step {step} update g={g}");
+    }
+}
+
+fn fp32_spec(method: Method, kernels_on: bool) -> TrainSpec {
+    TrainSpec {
+        method,
+        epochs: 2,
+        batch: 16,
+        lr0: 2e-3,
+        eps: 1e-2,
+        g_clip: 5.0,
+        seed: 3,
+        eval_every: 1,
+        verbose: false,
+        kernels: kernels_on,
+        ..Default::default()
+    }
+}
+
+/// Epoch histories must agree bit for bit on every trained quantity;
+/// `seconds`/`phases` are wall-clock attribution and are the only
+/// fields allowed to differ between the kernel and scalar paths.
+fn assert_history_bits_eq(a: &History, b: &History) {
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.epoch, y.epoch);
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.train_acc.to_bits(), y.train_acc.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.lr.to_bits(), y.lr.to_bits(), "epoch {}", x.epoch);
+    }
+}
+
+fn assert_params_bits_eq(a: &ParamSet, b: &ParamSet) {
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        let x: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+        let y: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(x, y, "tensor {i}");
+    }
+}
+
+#[test]
+fn fp32_e2e_trajectory_identical_kernels_on_off() {
+    force_threads();
+    let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 96, 48, 5, 0);
+    for method in [Method::FullZo, Method::Cls1] {
+        let run = |kernels_on: bool| {
+            let mut eng = NativeEngine::new(Model::LeNet);
+            let mut params = ParamSet::init(Model::LeNet, 6);
+            let r = trainer::train(
+                &mut eng,
+                &mut params,
+                &train_d,
+                &test_d,
+                &fp32_spec(method, kernels_on),
+            )
+            .unwrap();
+            (r.history, params)
+        };
+        let (h_on, p_on) = run(true);
+        let (h_off, p_off) = run(false);
+        assert_history_bits_eq(&h_on, &h_off);
+        assert_params_bits_eq(&p_on, &p_off);
+    }
+}
+
+#[test]
+fn int8_e2e_trajectory_identical_kernels_on_off() {
+    force_threads();
+    let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 96, 48, 7, 0);
+    for grad_mode in [ZoGradMode::IntCE, ZoGradMode::FloatCE] {
+        let run = |kernels_on: bool| {
+            let spec = TrainSpec {
+                precision: PrecisionSpec::int8(grad_mode),
+                seed: 11,
+                ..fp32_spec(Method::Cls1, kernels_on)
+            };
+            let mut ws = lenet8::init_params(10, 32);
+            let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &spec).unwrap();
+            (r.history, ws)
+        };
+        let (h_on, w_on) = run(true);
+        let (h_off, w_off) = run(false);
+        assert_history_bits_eq(&h_on, &h_off);
+        assert_eq!(w_on, w_off, "{grad_mode:?} final int8 weights");
+    }
+}
+
+#[test]
+fn dp_n2_trajectory_identical_kernels_on_off() {
+    force_threads();
+    let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 96, 48, 9, 0);
+    let run = |kernels_on: bool| {
+        let spec = fp32_spec(Method::FullZo, kernels_on);
+        let dp = DpSpec { replicas: 2, aggregate: DpAggregate::Mean, min_replicas: 1 };
+        let world = DpWorld::new(Model::LeNet, spec.clone(), dp, train_d.len()).unwrap();
+        let mut sess = DpLocalSession::new(world);
+        let r = session::run(&mut sess, &spec, &train_d, &test_d).unwrap();
+        (r.history, sess.world.params)
+    };
+    let (h_on, p_on) = run(true);
+    let (h_off, p_off) = run(false);
+    assert_history_bits_eq(&h_on, &h_off);
+    assert_params_bits_eq(&p_on, &p_off);
+}
+
+#[test]
+fn sparse_perturbation_diverges_but_stays_deterministic() {
+    force_threads();
+    let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 96, 48, 13, 0);
+    let run = |block: usize| {
+        let spec = TrainSpec {
+            sparse_block: block,
+            sparse_keep: if block > 0 { 0.5 } else { 1.0 },
+            ..fp32_spec(Method::Cls1, true)
+        };
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 6);
+        let r = trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec).unwrap();
+        (r.history, params)
+    };
+    // deterministic: same sparse spec twice => identical trajectory
+    let (h1, p1) = run(64);
+    let (h2, p2) = run(64);
+    assert_history_bits_eq(&h1, &h2);
+    assert_params_bits_eq(&p1, &p2);
+    // intentionally divergent: masking blocks of z changes the
+    // trajectory relative to the dense path
+    let (_, dense) = run(0);
+    let differs = p1
+        .data
+        .iter()
+        .zip(&dense.data)
+        .any(|(a, b)| a.iter().zip(b).any(|(x, y)| x.to_bits() != y.to_bits()));
+    assert!(differs, "sparse_block=64 keep=0.5 must change the trajectory");
+}
