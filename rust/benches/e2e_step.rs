@@ -41,7 +41,7 @@ fn main() {
     };
 
     // FP32 steps on both engines
-    for method in [Method::FullZo, Method::Cls1, Method::Cls2] {
+    for method in [Method::FULL_ZO, Method::CLS1, Method::CLS2] {
         let spec = spec_for(method);
         let tag = spec.method.label().replace(' ', "_");
 

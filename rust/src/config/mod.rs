@@ -4,8 +4,8 @@
 //! Precedence: defaults < `--config file.json` < individual CLI flags.
 
 use crate::coordinator::{
-    CheckpointPolicy, DpAggregate, DpSpec, EngineKind, Method, PrecisionSpec, TrainSpec,
-    ZoGradMode,
+    CheckpointPolicy, DpAggregate, DpSpec, ElasticSpec, EngineKind, Method, PrecisionSpec,
+    TrainSpec, ZoGradMode,
 };
 use crate::data::DatasetKind;
 use crate::util::cli::Args;
@@ -113,6 +113,14 @@ pub struct Config {
     /// Smallest surviving quorum allowed to absorb a lost replica's
     /// shard and keep the step barrier moving (1..=dp_replicas).
     pub dp_min_replicas: usize,
+    /// ZO/BP boundary mode: `None` = fixed at `method`'s depth,
+    /// `Some` = elastic within `[min, max]`, moved at epoch granularity
+    /// by the plateau controller. Requires a `bp-tail=<k>` method.
+    pub boundary: Option<ElasticSpec>,
+    /// Override of the elastic controller's plateau patience (epochs).
+    pub elastic_patience: Option<usize>,
+    /// Override of the elastic controller's plateau epsilon.
+    pub elastic_eps: Option<f32>,
 }
 
 impl Default for Config {
@@ -121,7 +129,7 @@ impl Default for Config {
             model: "lenet".into(),
             dataset: DatasetKind::SynthMnist,
             engine: EngineKind::Xla,
-            method: Method::Cls1,
+            method: Method::CLS1,
             precision: Precision::Fp32,
             epochs: 10,
             batch: 32,
@@ -149,6 +157,9 @@ impl Default for Config {
             dp_replicas: 0,
             dp_aggregate: DpAggregate::Mean,
             dp_min_replicas: 1,
+            boundary: None,
+            elastic_patience: None,
+            elastic_eps: None,
         }
     }
 }
@@ -170,6 +181,16 @@ impl Config {
             "dataset" => self.dataset = DatasetKind::parse(val)?,
             "engine" => self.engine = EngineKind::parse(val)?,
             "method" => self.method = Method::parse(val)?,
+            "bp-tail" | "bp_tail" => {
+                self.method = Method::Tail(val.parse().context("bp_tail")?)
+            }
+            "boundary" => self.boundary = ElasticSpec::parse_boundary(val)?,
+            "elastic-patience" | "elastic_patience" => {
+                self.elastic_patience = Some(val.parse().context("elastic_patience")?)
+            }
+            "elastic-eps" | "elastic_eps" => {
+                self.elastic_eps = Some(val.parse().context("elastic_eps")?)
+            }
             "precision" => self.precision = Precision::parse(val)?,
             "epochs" => self.epochs = val.parse().context("epochs")?,
             "batch" => self.batch = val.parse().context("batch")?,
@@ -293,9 +314,63 @@ impl Config {
                 anyhow::bail!("sparse_keep must be in (0, 1]");
             }
         }
+        if let Some(k) = self.method.bp_tail() {
+            let max = self.model_enum().max_bp_tail();
+            if k > max {
+                anyhow::bail!(
+                    "bp-tail={k} exceeds model {}'s classifier stack (max bp-tail={max})",
+                    self.model
+                );
+            }
+            if self.engine == EngineKind::Xla && k > 2 {
+                anyhow::bail!("bp-tail>2 requires engine=native (the XLA graphs stop at cls2)");
+            }
+        }
+        if let Some(es) = self.effective_elastic()? {
+            if self.method.bp_tail().is_none() {
+                anyhow::bail!(
+                    "an elastic boundary requires a bp-tail method, not '{}'",
+                    self.method.token()
+                );
+            }
+            let max = self.model_enum().max_bp_tail();
+            if es.max > max {
+                anyhow::bail!(
+                    "elastic boundary max bp-tail={} exceeds model {}'s classifier stack (max {max})",
+                    es.max,
+                    self.model
+                );
+            }
+            if self.engine == EngineKind::Xla && es.max > 2 {
+                anyhow::bail!(
+                    "elastic max bp-tail>2 requires engine=native (the XLA graphs stop at cls2)"
+                );
+            }
+            let k0 = self.method.bp_tail().unwrap_or(0);
+            if !(es.min..=es.max).contains(&k0) {
+                anyhow::bail!(
+                    "method bp-tail={k0} starts outside the elastic range {}..={}",
+                    es.min,
+                    es.max
+                );
+            }
+            if self.dp_replicas > 0 {
+                anyhow::bail!(
+                    "dp runs cannot move the ZO/BP boundary (the wire carries loss deltas \
+                     only); use boundary=fixed"
+                );
+            }
+        } else if self.elastic_patience.is_some() || self.elastic_eps.is_some() {
+            anyhow::bail!("elastic_patience/elastic_eps require boundary=elastic:<min>-<max>");
+        }
         if self.dp_replicas > 0 {
-            if self.method != Method::FullZo {
-                anyhow::bail!("dp requires method=full-zo (the wire carries loss deltas only)");
+            if self.method != Method::FULL_ZO {
+                anyhow::bail!(
+                    "dp requires method=full-zo: replicas replay the shared RNG stream over \
+                     the whole net, so a nonzero bp tail (method '{}') would silently \
+                     diverge — the wire carries loss deltas only",
+                    self.method.token()
+                );
             }
             if self.precision != Precision::Fp32 {
                 anyhow::bail!("dp requires precision=fp32");
@@ -320,6 +395,21 @@ impl Config {
             }
         }
         Ok(())
+    }
+
+    /// The elastic boundary spec with patience/eps overrides applied
+    /// (`None` when the boundary is fixed).
+    pub fn effective_elastic(&self) -> Result<Option<ElasticSpec>> {
+        let Some(mut es) = self.boundary else { return Ok(None) };
+        if let Some(p) = self.elastic_patience {
+            anyhow::ensure!(p >= 1, "elastic_patience must be >= 1");
+            es.patience = p;
+        }
+        if let Some(e) = self.elastic_eps {
+            anyhow::ensure!(e >= 0.0, "elastic_eps must be >= 0");
+            es.eps = e;
+        }
+        Ok(Some(es))
     }
 
     /// The dp mode of this run, if enabled.
@@ -357,6 +447,7 @@ impl Config {
             kernels: self.kernels,
             sparse_block: self.sparse_block,
             sparse_keep: self.sparse_keep,
+            elastic: self.effective_elastic().expect("validated config"),
             checkpoint: self
                 .save_checkpoint
                 .as_ref()
@@ -416,7 +507,7 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(cfg.model, "pointnet");
-        assert_eq!(cfg.method, Method::FullZo);
+        assert_eq!(cfg.method, Method::FULL_ZO);
         assert_eq!(cfg.epochs, 3);
         assert!((cfg.lr - 0.005).abs() < 1e-9);
         assert_eq!(cfg.engine, EngineKind::Native);
@@ -600,6 +691,69 @@ mod tests {
             "--method", "full-zo", "--engine", "native", "--dp", "64", "--batch", "32",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn bp_tail_key_sets_method() {
+        let cfg = Config::from_args(&args(&["--engine", "native", "--bp-tail", "3"])).unwrap();
+        assert_eq!(cfg.method, Method::Tail(3));
+        assert_eq!(cfg.method.token(), "bp-tail=3");
+        // the preset spellings stay exact aliases
+        let cfg = Config::from_args(&args(&["--bp-tail", "2"])).unwrap();
+        assert_eq!(cfg.method, Method::CLS1);
+        assert_eq!(cfg.method.token(), "cls1");
+    }
+
+    #[test]
+    fn bp_tail_bounds_enforced() {
+        // deeper than the classifier stack
+        assert!(Config::from_args(&args(&["--engine", "native", "--bp-tail", "4"])).is_err());
+        // XLA graphs stop at cls2
+        assert!(Config::from_args(&args(&["--engine", "xla", "--bp-tail", "3"])).is_err());
+    }
+
+    #[test]
+    fn elastic_boundary_parses_and_flows_to_spec() {
+        let cfg = Config::from_args(&args(&[
+            "--engine", "native", "--bp-tail", "1", "--boundary", "elastic:0-3",
+            "--elastic-patience", "3", "--elastic-eps", "0.01",
+        ]))
+        .unwrap();
+        let es = cfg.train_spec().elastic.unwrap();
+        assert_eq!((es.min, es.max, es.patience), (0, 3, 3));
+        assert!((es.eps - 0.01).abs() < 1e-9);
+        // boundary=fixed is the explicit spelling of the default
+        let cfg = Config::from_args(&args(&["--boundary", "fixed"])).unwrap();
+        assert_eq!(cfg.train_spec().elastic, None);
+    }
+
+    #[test]
+    fn elastic_invalid_combos_rejected() {
+        // full-bp has no movable boundary
+        assert!(Config::from_args(&args(&[
+            "--method", "full-bp", "--boundary", "elastic:0-2",
+        ]))
+        .is_err());
+        // range exceeds the model's classifier stack
+        assert!(Config::from_args(&args(&[
+            "--engine", "native", "--boundary", "elastic:0-4",
+        ]))
+        .is_err());
+        // xla caps the range at cls2
+        assert!(Config::from_args(&args(&["--boundary", "elastic:0-3"])).is_err());
+        // method starts outside the range
+        assert!(Config::from_args(&args(&[
+            "--method", "full-zo", "--boundary", "elastic:1-2",
+        ]))
+        .is_err());
+        // dp replays the stream over the whole net
+        assert!(Config::from_args(&args(&[
+            "--method", "full-zo", "--engine", "native", "--dp", "2",
+            "--boundary", "elastic:0-2",
+        ]))
+        .is_err());
+        // orphan knobs without an elastic boundary
+        assert!(Config::from_args(&args(&["--elastic-patience", "3"])).is_err());
     }
 
     #[test]

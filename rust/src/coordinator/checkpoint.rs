@@ -120,11 +120,15 @@ pub struct TrainState {
     /// The serialized `TrainSpec` (`TrainSpec::to_json`) this state
     /// belongs to; checked on resume via [`ensure_spec_matches`].
     pub spec: Value,
+    /// Elastic-boundary controller state (`None` for fixed-boundary
+    /// runs — the trailer key is then omitted, so pre-elastic
+    /// checkpoints parse and re-serialize unchanged).
+    pub elastic: Option<super::elastic::ElasticState>,
 }
 
 impl TrainState {
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut pairs = vec![
             ("epochs_done", Value::num(self.epochs_done as f64)),
             ("step", Value::num(self.step as f64)),
             ("best_test_acc", Value::num(self.best_test_acc as f64)),
@@ -138,7 +142,11 @@ impl TrainState {
             ),
             ("last_test_acc", Value::num(self.last_test_acc as f64)),
             ("spec", self.spec.clone()),
-        ])
+        ];
+        if let Some(e) = &self.elastic {
+            pairs.push(("elastic", e.to_json()));
+        }
+        Value::obj(pairs)
     }
 
     pub fn from_json(v: &Value) -> Result<TrainState> {
@@ -153,6 +161,10 @@ impl TrainState {
             last_test_loss: v.get("last_test_loss").as_f64().map_or(f32::NAN, |n| n as f32),
             last_test_acc: v.get("last_test_acc").as_f64().unwrap_or(0.0) as f32,
             spec: v.get("spec").clone(),
+            elastic: match v.get("elastic") {
+                Value::Null => None,
+                e => Some(super::elastic::ElasticState::from_json(e)?),
+            },
         })
     }
 }
@@ -493,6 +505,7 @@ mod tests {
             last_test_loss: 1.25,
             last_test_acc: 0.5,
             spec: Value::obj(vec![("method", Value::str("cls1"))]),
+            elastic: None,
         }
     }
 

@@ -219,15 +219,29 @@ impl DpWorld {
     /// (`Config::validate` enforces the same), so the engine choice is
     /// fixed here.
     pub fn new(model: Model, spec: TrainSpec, dp: DpSpec, train_len: usize) -> Result<DpWorld> {
-        if spec.method != Method::FullZo || spec.precision != PrecisionSpec::Fp32 {
-            anyhow::bail!("dp requires method=full-zo, precision=fp32");
+        // replicas replay the shared RNG stream over the WHOLE net, so a
+        // nonzero BP tail would silently diverge across replicas; reject
+        // anything but bp-tail=0 (Config::validate mirrors this) and
+        // derive the boundary from the spec instead of hardcoding it
+        let bp_tail = spec.method.bp_tail();
+        if bp_tail != Some(0) || spec.precision != PrecisionSpec::Fp32 {
+            anyhow::bail!(
+                "dp requires method=full-zo (bp-tail=0) and precision=fp32; got method \
+                 '{}', precision '{}'",
+                spec.method.token(),
+                spec.precision.token()
+            );
         }
+        anyhow::ensure!(
+            spec.elastic.is_none(),
+            "dp runs cannot move the ZO/BP boundary (use boundary=fixed)"
+        );
         anyhow::ensure!(
             spec.sparse_block == 0,
             "sparse_block is not supported for dp (the commit log assumes dense z)"
         );
         let params = ParamSet::init(model, spec.seed ^ 0xC0FFEE);
-        let boundary = params.zo_boundary(0);
+        let boundary = params.zo_boundary(bp_tail.expect("checked above"));
         let zo_len: usize = params.data[..boundary].iter().map(|t| t.len()).sum();
         let lr_sched = LrSchedule::paper_fp32(spec.lr0, spec.epochs);
         let steps_per_epoch = train_len.div_ceil(spec.batch) as u64;
@@ -496,7 +510,7 @@ mod tests {
 
     fn spec(epochs: usize, batch: usize) -> TrainSpec {
         TrainSpec {
-            method: Method::FullZo,
+            method: Method::FULL_ZO,
             epochs,
             batch,
             seed: 11,

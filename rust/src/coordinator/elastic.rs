@@ -1,0 +1,345 @@
+//! The elastic ZO/BP boundary: negotiation at assignment time and the
+//! mid-run plateau controller.
+//!
+//! The boundary (`Method::Tail(k)`) is a first-class runtime quantity:
+//!
+//! * **Negotiation** — given an agent's memory budget, pick the deepest
+//!   BP tail whose analytic footprint (paper Eqs. 2–5 / 13–15) fits.
+//!   [`candidate_rows`] is the one table both `repro train
+//!   --mem-report` and the coordinator's assignment path evaluate, so
+//!   what operators see printed is exactly what the dispatcher decides
+//!   on.
+//! * **Mid-run control** — [`ElasticController`] watches *fresh* eval
+//!   losses for a plateau (patience/epsilon from the spec) and deepens
+//!   or shallows the boundary at epoch granularity. It is a pure,
+//!   deterministic function of the observed loss sequence, so resuming
+//!   from a checkpoint (or replaying the journal) reproduces the same
+//!   k-schedule — and therefore the same trajectory — bit-identically.
+
+use super::engine::Method;
+use super::params::Model;
+use crate::memory;
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+
+/// Default plateau patience (fresh evals without improvement).
+pub const DEFAULT_PATIENCE: usize = 2;
+/// Default improvement threshold on eval loss.
+pub const DEFAULT_EPS: f32 = 1e-3;
+
+/// Spec-level description of an elastic boundary: the k-range the
+/// controller (and the assignment negotiation) may move within, plus
+/// the plateau detector's knobs. Carried inside [`super::TrainSpec`]
+/// and serialized with it (`boundary: "elastic:<min>-<max>"`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElasticSpec {
+    /// Shallowest BP tail allowed (inclusive).
+    pub min: usize,
+    /// Deepest BP tail allowed (inclusive).
+    pub max: usize,
+    /// Fresh evals without improvement before the controller acts.
+    pub patience: usize,
+    /// Eval-loss improvement threshold (absolute).
+    pub eps: f32,
+}
+
+impl ElasticSpec {
+    pub fn new(min: usize, max: usize) -> ElasticSpec {
+        ElasticSpec { min, max, patience: DEFAULT_PATIENCE, eps: DEFAULT_EPS }
+    }
+
+    /// Parse the `boundary` token: `fixed` (no elastic range) or
+    /// `elastic:<min>-<max>`.
+    pub fn parse_boundary(s: &str) -> Result<Option<ElasticSpec>> {
+        if s == "fixed" {
+            return Ok(None);
+        }
+        let range = s
+            .strip_prefix("elastic:")
+            .with_context(|| format!("boundary must be fixed|elastic:<min>-<max>, got '{s}'"))?;
+        let (lo, hi) = range
+            .split_once('-')
+            .with_context(|| format!("elastic range must be <min>-<max>, got '{range}'"))?;
+        let min: usize = lo.parse().with_context(|| format!("elastic min '{lo}'"))?;
+        let max: usize = hi.parse().with_context(|| format!("elastic max '{hi}'"))?;
+        anyhow::ensure!(min <= max, "elastic range must have min <= max, got {min}-{max}");
+        Ok(Some(ElasticSpec::new(min, max)))
+    }
+
+    /// The `boundary` token [`parse_boundary`] accepts.
+    pub fn boundary_token(&self) -> String {
+        format!("elastic:{}-{}", self.min, self.max)
+    }
+}
+
+/// The controller's resumable state — stamped into the checkpoint
+/// trailer ([`super::checkpoint::TrainState::elastic`]) so `--resume`
+/// and journal replay reproduce the k-schedule exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ElasticState {
+    /// Boundary currently in effect.
+    pub k: usize,
+    /// Best eval loss seen since the last boundary change.
+    pub best: f32,
+    /// Fresh evals since the last improvement (or change).
+    pub stale: usize,
+    /// Applied changes as `(epoch, new_k)`, in order.
+    pub events: Vec<(usize, usize)>,
+}
+
+impl ElasticState {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("k", Value::num(self.k as f64)),
+            (
+                "best",
+                if self.best.is_finite() { Value::num(self.best as f64) } else { Value::Null },
+            ),
+            ("stale", Value::num(self.stale as f64)),
+            (
+                "events",
+                Value::Arr(
+                    self.events
+                        .iter()
+                        .map(|(e, k)| {
+                            Value::Arr(vec![Value::num(*e as f64), Value::num(*k as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ElasticState> {
+        let k = v.get("k").as_f64().context("elastic state needs 'k'")? as usize;
+        let best = v.get("best").as_f64().map_or(f32::INFINITY, |b| b as f32);
+        let stale = v.get("stale").as_f64().unwrap_or(0.0) as usize;
+        let mut events = Vec::new();
+        if let Value::Arr(items) = v.get("events") {
+            for it in items {
+                match it {
+                    Value::Arr(pair) if pair.len() == 2 => {
+                        let e = pair[0].as_f64().context("event epoch")? as usize;
+                        let nk = pair[1].as_f64().context("event k")? as usize;
+                        events.push((e, nk));
+                    }
+                    other => anyhow::bail!("elastic event must be [epoch, k], got {other:?}"),
+                }
+            }
+        }
+        Ok(ElasticState { k, best, stale, events })
+    }
+}
+
+/// Plateau-driven boundary controller. Observes only *fresh* eval
+/// losses (carry-forward epochs are invisible to it); on `patience`
+/// stale evals it deepens the tail — or shallows it when the loss has
+/// actually regressed past `best + eps` — then resets its counters.
+#[derive(Debug, Clone)]
+pub struct ElasticController {
+    spec: ElasticSpec,
+    state: ElasticState,
+}
+
+impl ElasticController {
+    /// Fresh controller starting at boundary `k0` (clamped into range).
+    pub fn new(spec: ElasticSpec, k0: usize) -> ElasticController {
+        let k = k0.clamp(spec.min, spec.max);
+        ElasticController {
+            spec,
+            state: ElasticState { k, best: f32::INFINITY, stale: 0, events: Vec::new() },
+        }
+    }
+
+    /// Resume from a checkpoint trailer's state.
+    pub fn from_state(spec: ElasticSpec, state: ElasticState) -> ElasticController {
+        ElasticController { spec, state }
+    }
+
+    /// Boundary currently in effect.
+    pub fn k(&self) -> usize {
+        self.state.k
+    }
+
+    /// The resumable state (for checkpoint trailers).
+    pub fn state(&self) -> ElasticState {
+        self.state.clone()
+    }
+
+    /// Feed one *fresh* eval loss at `epoch`. Returns `Some(new_k)`
+    /// when the boundary changes (the caller applies it to the session;
+    /// it takes effect from the next epoch's steps).
+    pub fn observe(&mut self, epoch: usize, eval_loss: f32) -> Option<usize> {
+        if eval_loss.is_finite() && eval_loss < self.state.best - self.spec.eps {
+            self.state.best = eval_loss;
+            self.state.stale = 0;
+            return None;
+        }
+        self.state.stale += 1;
+        if self.state.stale < self.spec.patience {
+            return None;
+        }
+        // plateaued: deepen to buy gradient signal; a genuine
+        // regression shallows instead (the deeper tail hurt)
+        let regressing =
+            eval_loss.is_finite() && eval_loss > self.state.best + self.spec.eps;
+        let new_k = if regressing && self.state.k > self.spec.min {
+            self.state.k - 1
+        } else if self.state.k < self.spec.max {
+            self.state.k + 1
+        } else {
+            // pinned at the range edge: reset the counter and keep going
+            self.state.stale = 0;
+            return None;
+        };
+        self.state.k = new_k;
+        self.state.best = if eval_loss.is_finite() { eval_loss } else { f32::INFINITY };
+        self.state.stale = 0;
+        self.state.events.push((epoch, new_k));
+        Some(new_k)
+    }
+}
+
+/// One row of the negotiation table: a candidate method and its
+/// analytic memory total (bytes) from the paper's model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemRow {
+    pub method: Method,
+    pub total: usize,
+}
+
+/// Analytic totals for every candidate boundary of `model` — one row
+/// per `k ∈ 0..=max_bp_tail` plus Full BP. This is the SAME table
+/// `repro train --mem-report` prints and the dispatcher negotiates
+/// over.
+pub fn candidate_rows(model: Model, batch: usize, int8: bool, adam: bool) -> Vec<MemRow> {
+    let mut rows: Vec<Method> =
+        (0..=model.max_bp_tail()).map(Method::Tail).collect();
+    rows.push(Method::FullBp);
+    rows.into_iter()
+        .map(|m| MemRow { method: m, total: modeled_total(model, batch, m, int8, adam) })
+        .collect()
+}
+
+/// Analytic total (bytes) for one method, fp32 or int8.
+pub fn modeled_total(model: Model, batch: usize, method: Method, int8: bool, adam: bool) -> usize {
+    if int8 {
+        // INT8 is lenet-only (as in the paper); its memory-model layer
+        // table differs from the fp32 one (no biases, int32 scratch)
+        let layers = memory::models::lenet_int8_layers();
+        memory::int8(&layers, batch, method.memory_method()).total()
+    } else {
+        memory::fp32(&model.memory_layers(), batch, method.memory_method(), adam).total()
+    }
+}
+
+/// The deepest BP tail in `[min, max]` whose modeled total fits
+/// `budget` bytes. Falls back to `min` when even the shallowest
+/// candidate is over budget (the job still runs; the agent is merely
+/// over its stated budget, which the caller can surface).
+pub fn negotiate_k(
+    model: Model,
+    batch: usize,
+    int8: bool,
+    budget: usize,
+    min: usize,
+    max: usize,
+) -> usize {
+    let max = max.min(model.max_bp_tail());
+    let mut best = min;
+    for k in min..=max {
+        if modeled_total(model, batch, Method::Tail(k), int8, false) <= budget {
+            best = k;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_token_roundtrip() {
+        let e = ElasticSpec::parse_boundary("elastic:1-3").unwrap().unwrap();
+        assert_eq!((e.min, e.max), (1, 3));
+        assert_eq!((e.patience, e.eps), (DEFAULT_PATIENCE, DEFAULT_EPS));
+        assert_eq!(ElasticSpec::parse_boundary(&e.boundary_token()).unwrap(), Some(e));
+        assert_eq!(ElasticSpec::parse_boundary("fixed").unwrap(), None);
+        assert!(ElasticSpec::parse_boundary("elastic:3-1").is_err());
+        assert!(ElasticSpec::parse_boundary("elastic").is_err());
+        assert!(ElasticSpec::parse_boundary("rubber").is_err());
+    }
+
+    #[test]
+    fn controller_deepens_on_plateau_and_shallows_on_regression() {
+        let mut c = ElasticController::new(ElasticSpec::new(0, 3), 1);
+        assert_eq!(c.k(), 1);
+        // improving: no change
+        assert_eq!(c.observe(0, 2.0), None);
+        assert_eq!(c.observe(1, 1.5), None);
+        // flat for `patience` evals: deepen
+        assert_eq!(c.observe(2, 1.5), None);
+        assert_eq!(c.observe(3, 1.5), Some(2));
+        assert_eq!(c.k(), 2);
+        // regression past eps: shallow back
+        assert_eq!(c.observe(4, 1.8), None);
+        assert_eq!(c.observe(5, 1.9), Some(1));
+        assert_eq!(c.k(), 1);
+        assert_eq!(c.state().events, vec![(3, 2), (5, 1)]);
+    }
+
+    #[test]
+    fn controller_is_pinned_at_range_edges() {
+        let mut c = ElasticController::new(ElasticSpec::new(2, 2), 0);
+        assert_eq!(c.k(), 2, "k0 clamps into range");
+        for e in 0..10 {
+            assert_eq!(c.observe(e, 1.0), None, "a 1-wide range never moves");
+        }
+    }
+
+    #[test]
+    fn controller_replay_is_deterministic() {
+        let losses = [2.0, 1.5, 1.5, 1.5, 1.8, 1.9, 1.2, 1.2, 1.2, 0.9];
+        let run = || {
+            let mut c = ElasticController::new(ElasticSpec::new(0, 3), 1);
+            for (e, l) in losses.iter().enumerate() {
+                c.observe(e, *l);
+            }
+            c.state()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn state_json_roundtrips() {
+        let st = ElasticState { k: 2, best: 1.25, stale: 1, events: vec![(3, 2), (7, 1)] };
+        let back = ElasticState::from_json(&st.to_json()).unwrap();
+        assert_eq!(back, st);
+        // a fresh (infinite-best) state survives the Null encoding
+        let st = ElasticState { k: 0, best: f32::INFINITY, stale: 0, events: vec![] };
+        let back = ElasticState::from_json(&st.to_json()).unwrap();
+        assert_eq!(back, st);
+    }
+
+    #[test]
+    fn negotiation_picks_deepest_fitting_tail() {
+        let model = Model::LeNet;
+        let rows = candidate_rows(model, 32, false, false);
+        // 0..=3 tails plus full-bp
+        assert_eq!(rows.len(), 5);
+        // totals are monotone in k (deeper BP stores more errors/grads)
+        for w in rows.windows(2) {
+            assert!(w[0].total <= w[1].total, "{:?}", rows);
+        }
+        // an unconstrained budget gets the deepest tail...
+        assert_eq!(negotiate_k(model, 32, false, usize::MAX, 0, 3), 3);
+        // ...a budget below the k=1 row pins to the floor...
+        assert_eq!(negotiate_k(model, 32, false, 0, 0, 3), 0);
+        // ...and a budget exactly at the k=2 row stops there
+        let k2 = modeled_total(model, 32, Method::Tail(2), false, false);
+        let k3 = modeled_total(model, 32, Method::Tail(3), false, false);
+        assert!(k2 < k3);
+        assert_eq!(negotiate_k(model, 32, false, k2, 0, 3), 2);
+    }
+}

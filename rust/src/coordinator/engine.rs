@@ -94,64 +94,104 @@ pub enum BpDepth {
     All,
 }
 
-/// Training method — the paper's four configurations.
+/// Number of classifier (head FC) layers the paper's `cls<n>` naming
+/// counts against: `cls<n>` trains the feature extractor plus `n` of
+/// the 3 head layers by ZO, i.e. BP on the remaining `3 − n`.
+pub const CLS_STACK: usize = 3;
+
+/// Training method — the ZO/BP split as a first-class runtime value.
 ///
-/// Naming follows the paper §5.1.1: the suffix counts the *classifier*
-/// FC layers trained by **ZO** (together with the feature extractor):
-/// ZO-Feat-Cls1 trains conv+fc1 by ZO → BP on the last TWO FC layers
-/// (96,772 ZO params for LeNet); ZO-Feat-Cls2 trains conv+fc1+fc2 by
-/// ZO → BP on the last ONE (106,936 ZO params).
+/// `Tail(k)` backpropagates through the last `k` classifier FC layers
+/// and trains everything before the partition by ZO; `k = 0` is pure
+/// ZO and `FullBp` is ordinary backprop over every layer. The paper's
+/// four presets are aliases ([`Method::FULL_ZO`], [`Method::CLS2`],
+/// [`Method::CLS1`], [`Method::FullBp`]).
+///
+/// Naming follows the paper §5.1.1: the `cls<n>` suffix counts the
+/// *classifier* FC layers trained by **ZO** (together with the feature
+/// extractor): ZO-Feat-Cls1 trains conv+fc1 by ZO → BP on the last TWO
+/// FC layers (96,772 ZO params for LeNet); ZO-Feat-Cls2 trains
+/// conv+fc1+fc2 by ZO → BP on the last ONE (106,936 ZO params).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
-    FullZo,
-    /// ZO-Feat-Cls1: BP on the last two FC layers.
-    Cls1,
-    /// ZO-Feat-Cls2: BP on the last FC layer only.
-    Cls2,
+    /// ZO everywhere except BP on the last `k` classifier FC layers.
+    Tail(usize),
     FullBp,
 }
 
 impl Method {
+    /// Pure ZO (`Tail(0)`): the paper's "Full ZO".
+    pub const FULL_ZO: Method = Method::Tail(0);
+    /// ZO-Feat-Cls2: BP on the last FC layer only.
+    pub const CLS2: Method = Method::Tail(1);
+    /// ZO-Feat-Cls1: BP on the last two FC layers.
+    pub const CLS1: Method = Method::Tail(2);
+
     pub fn parse(s: &str) -> Result<Method> {
         match s {
-            "full-zo" | "zo" => Ok(Method::FullZo),
-            "cls1" | "zo-feat-cls1" => Ok(Method::Cls1),
-            "cls2" | "zo-feat-cls2" => Ok(Method::Cls2),
-            "full-bp" | "bp" => Ok(Method::FullBp),
-            other => anyhow::bail!("unknown method '{other}' (full-zo|cls1|cls2|full-bp)"),
+            "full-zo" | "zo" => return Ok(Method::FULL_ZO),
+            "zo-feat-cls1" => return Ok(Method::CLS1),
+            "zo-feat-cls2" => return Ok(Method::CLS2),
+            "full-bp" | "bp" => return Ok(Method::FullBp),
+            _ => {}
         }
+        if let Some(n) = s.strip_prefix("cls").and_then(|n| n.parse::<usize>().ok()) {
+            // paper naming counts ZO-trained head layers: cls<n> ⇒ BP
+            // on the remaining CLS_STACK − n
+            anyhow::ensure!(
+                n < CLS_STACK,
+                "cls{n} exceeds the {CLS_STACK}-layer classifier stack (use full-zo for cls{CLS_STACK})"
+            );
+            return Ok(Method::Tail(CLS_STACK - n));
+        }
+        if let Some(k) = s.strip_prefix("bp-tail=").and_then(|k| k.parse::<usize>().ok()) {
+            return Ok(Method::Tail(k));
+        }
+        anyhow::bail!("unknown method '{other}' (full-zo|cls<n>|bp-tail=<k>|full-bp)", other = s)
     }
 
     /// The ZO/BP partition for this method.
     pub fn bp_depth(&self) -> BpDepth {
         match self {
-            Method::FullZo => BpDepth::Tail(0),
-            Method::Cls2 => BpDepth::Tail(1),
-            Method::Cls1 => BpDepth::Tail(2),
+            Method::Tail(k) => BpDepth::Tail(*k),
             Method::FullBp => BpDepth::All,
         }
     }
 
-    pub fn label(&self) -> &'static str {
+    /// The BP-tail depth `k`, or `None` for Full BP (no ZO partition).
+    pub fn bp_tail(&self) -> Option<usize> {
         match self {
-            Method::FullZo => "Full ZO",
-            Method::Cls1 => "ZO-Feat-Cls1",
-            Method::Cls2 => "ZO-Feat-Cls2",
-            Method::FullBp => "Full BP",
+            Method::Tail(k) => Some(*k),
+            Method::FullBp => None,
         }
     }
 
-    /// The canonical CLI/JSON token; `parse(token()) == self`.
-    pub fn token(&self) -> &'static str {
+    pub fn label(&self) -> String {
         match self {
-            Method::FullZo => "full-zo",
-            Method::Cls1 => "cls1",
-            Method::Cls2 => "cls2",
-            Method::FullBp => "full-bp",
+            Method::FULL_ZO => "Full ZO".to_string(),
+            Method::CLS1 => "ZO-Feat-Cls1".to_string(),
+            Method::CLS2 => "ZO-Feat-Cls2".to_string(),
+            Method::FullBp => "Full BP".to_string(),
+            Method::Tail(k) => format!("ZO-BP-Tail{k}"),
         }
     }
 
-    pub const ALL: [Method; 4] = [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp];
+    /// The canonical CLI/JSON token; `parse(token()) == self`. The four
+    /// paper presets keep their legacy tokens byte-for-byte (checkpoint
+    /// spec identity, wire compatibility); deeper tails serialize as
+    /// `bp-tail=<k>`.
+    pub fn token(&self) -> String {
+        match self {
+            Method::FULL_ZO => "full-zo".to_string(),
+            Method::CLS2 => "cls2".to_string(),
+            Method::CLS1 => "cls1".to_string(),
+            Method::FullBp => "full-bp".to_string(),
+            Method::Tail(k) => format!("bp-tail={k}"),
+        }
+    }
+
+    /// The paper's four presets, in memory order (shallow → deep BP).
+    pub const ALL: [Method; 4] = [Method::FULL_ZO, Method::CLS2, Method::CLS1, Method::FullBp];
 
     /// Memory-model mapping, derived from the ZO/BP partition.
     pub fn memory_method(&self) -> crate::memory::Method {
@@ -169,13 +209,40 @@ mod tests {
 
     #[test]
     fn method_parse_and_depth() {
-        assert_eq!(Method::parse("full-zo").unwrap(), Method::FullZo);
+        assert_eq!(Method::parse("full-zo").unwrap(), Method::FULL_ZO);
         // paper naming: Cls1 -> BP on TWO layers, Cls2 -> BP on ONE
         assert_eq!(Method::parse("cls1").unwrap().bp_depth(), BpDepth::Tail(2));
         assert_eq!(Method::parse("zo-feat-cls2").unwrap().bp_depth(), BpDepth::Tail(1));
         // Full BP is not a ZO boundary — it is its own variant
         assert_eq!(Method::FullBp.bp_depth(), BpDepth::All);
         assert!(Method::parse("magic").is_err());
+    }
+
+    #[test]
+    fn generalized_tail_tokens_parse_and_alias_legacy_spellings() {
+        // bp-tail=<k> is the canonical generalized spelling; the legacy
+        // preset tokens are bitwise-equivalent aliases of k ∈ {0,1,2}
+        assert_eq!(Method::parse("bp-tail=0").unwrap(), Method::FULL_ZO);
+        assert_eq!(Method::parse("bp-tail=1").unwrap(), Method::CLS2);
+        assert_eq!(Method::parse("bp-tail=2").unwrap(), Method::CLS1);
+        assert_eq!(Method::parse("bp-tail=3").unwrap(), Method::Tail(3));
+        // generalized cls<n>: n head layers trained by ZO ⇒ BP on 3−n;
+        // cls3 stays rejected (its canonical spelling is full-zo)
+        assert_eq!(Method::parse("cls0").unwrap(), Method::Tail(3));
+        assert!(Method::parse("cls3").is_err(), "use full-zo for cls3");
+        assert!(Method::parse("cls4").is_err(), "beyond the classifier stack");
+        assert!(Method::parse("bp-tail=").is_err());
+        // presets keep their legacy tokens byte-for-byte; deep tails
+        // serialize canonically
+        assert_eq!(Method::Tail(3).token(), "bp-tail=3");
+        assert_eq!(Method::parse(&Method::Tail(3).token()).unwrap(), Method::Tail(3));
+        assert_eq!(Method::Tail(3).label(), "ZO-BP-Tail3");
+        assert_eq!(Method::Tail(3).bp_tail(), Some(3));
+        assert_eq!(Method::FullBp.bp_tail(), None);
+        assert_eq!(
+            Method::Tail(3).memory_method(),
+            crate::memory::Method::Elastic { bp_layers: 3 }
+        );
     }
 
     #[test]
@@ -190,13 +257,13 @@ mod tests {
     #[test]
     fn memory_method_follows_partition() {
         use crate::memory;
-        assert_eq!(Method::FullZo.memory_method(), memory::Method::FullZo);
+        assert_eq!(Method::FULL_ZO.memory_method(), memory::Method::FullZo);
         assert_eq!(
-            Method::Cls2.memory_method(),
+            Method::CLS2.memory_method(),
             memory::Method::Elastic { bp_layers: 1 }
         );
         assert_eq!(
-            Method::Cls1.memory_method(),
+            Method::CLS1.memory_method(),
             memory::Method::Elastic { bp_layers: 2 }
         );
         assert_eq!(Method::FullBp.memory_method(), memory::Method::FullBp);
@@ -210,14 +277,14 @@ mod tests {
 
     #[test]
     fn labels_match_paper_tables() {
-        assert_eq!(Method::FullZo.label(), "Full ZO");
-        assert_eq!(Method::Cls1.label(), "ZO-Feat-Cls1");
+        assert_eq!(Method::FULL_ZO.label(), "Full ZO");
+        assert_eq!(Method::CLS1.label(), "ZO-Feat-Cls1");
     }
 
     #[test]
     fn tokens_roundtrip() {
         for m in Method::ALL {
-            assert_eq!(Method::parse(m.token()).unwrap(), m);
+            assert_eq!(Method::parse(&m.token()).unwrap(), m);
         }
         for e in [EngineKind::Xla, EngineKind::Native] {
             assert_eq!(EngineKind::parse(e.token()).unwrap(), e);

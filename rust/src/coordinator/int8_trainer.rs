@@ -374,6 +374,25 @@ impl TrainSession for Int8Session<'_> {
         Ok(evaluate_int8(self.ws, data, self.batch))
     }
 
+    fn set_bp_tail(&mut self, k: usize) -> Result<()> {
+        anyhow::ensure!(
+            !self.full_bp,
+            "cannot move the ZO/BP boundary of a full-bp run"
+        );
+        anyhow::ensure!(
+            k <= lenet8::MAX_BP_TAIL,
+            "bp-tail={k} exceeds the int8 LeNet tail depth {}",
+            lenet8::MAX_BP_TAIL
+        );
+        self.bp_tail = k;
+        self.n_zo = lenet8::zo_layer_count(k);
+        self.zo_elems = self.ws[..self.n_zo].iter().map(|w| w.numel()).sum();
+        // StepZi8 keys on (seed, step, len), so the cache regenerates
+        // itself at the next step; only the thread toggle needs care
+        self.parallel = self.kernels && self.n_zo > 0 && kernels::hw_threads() > 1;
+        Ok(())
+    }
+
     fn verbose_note(&self) -> String {
         // surface the staged-schedule values the epoch ran under (the
         // old int8 loop printed these; lr is meaningless here)
@@ -495,7 +514,7 @@ mod tests {
         let train_d = synth_mnist::generate(128, 24);
         let test_d = synth_mnist::generate(64, 25);
         let mut ws = lenet8::init_params(26, 32);
-        let spec = int8_spec(Method::Cls1, ZoGradMode::FloatCE, 2, 16);
+        let spec = int8_spec(Method::CLS1, ZoGradMode::FloatCE, 2, 16);
         let r = train_int8(&mut ws, &train_d, &test_d, &spec).unwrap();
         assert!(r.timer.total(Phase::Forward).as_nanos() > 0);
         assert!(r.timer.total(Phase::ZoUpdate).as_nanos() > 0);
@@ -519,7 +538,7 @@ mod tests {
                 }
             }),
             stop,
-            ..int8_spec(Method::Cls1, ZoGradMode::FloatCE, 50, 16)
+            ..int8_spec(Method::CLS1, ZoGradMode::FloatCE, 50, 16)
         };
         let r = train_int8(&mut ws, &train_d, &test_d, &spec).unwrap();
         assert!(r.stopped);
@@ -533,7 +552,7 @@ mod tests {
         let train_d = synth_mnist::generate(64, 27);
         let test_d = synth_mnist::generate(32, 28);
         let mut ws = lenet8::init_params(29, 32);
-        let spec = int8_spec(Method::FullZo, ZoGradMode::IntCE, 1, 16);
+        let spec = int8_spec(Method::FULL_ZO, ZoGradMode::IntCE, 1, 16);
         let r = train_int8(&mut ws, &train_d, &test_d, &spec).unwrap();
         assert_eq!(r.history.epochs.len(), 1);
         assert!(r.history.epochs[0].train_loss.is_finite());

@@ -18,6 +18,11 @@ pub struct EpochStats {
     /// the `phases` JSON key is omitted when empty so old consumers
     /// see an unchanged shape.
     pub phases: Vec<PhaseDelta>,
+    /// ZO/BP boundary in effect after this epoch (elastic runs move it
+    /// at epoch granularity; fixed `Tail(k)` runs report their constant
+    /// k). `None` — and an omitted JSON key — for Full BP and for
+    /// histories predating the elastic boundary.
+    pub bp_tail: Option<usize>,
 }
 
 impl EpochStats {
@@ -31,6 +36,9 @@ impl EpochStats {
             ("lr", Value::num(self.lr as f64)),
             ("seconds", Value::num(self.seconds)),
         ];
+        if let Some(k) = self.bp_tail {
+            pairs.push(("bp_tail", Value::num(k as f64)));
+        }
         if !self.phases.is_empty() {
             let obj = self
                 .phases
@@ -79,6 +87,7 @@ impl EpochStats {
             lr: v.get("lr").as_f64().unwrap_or(0.0) as f32,
             seconds: v.get("seconds").as_f64().unwrap_or(0.0),
             phases,
+            bp_tail: v.get("bp_tail").as_usize(),
         })
     }
 }
@@ -188,6 +197,16 @@ mod tests {
         let back = EpochStats::from_json(&e.to_json()).unwrap();
         assert_eq!(back.to_json(), e.to_json());
         assert!(EpochStats::from_json(&Value::Null).is_err());
+    }
+
+    #[test]
+    fn bp_tail_omitted_when_absent_and_roundtrips() {
+        let plain = EpochStats { epoch: 1, ..Default::default() };
+        assert!(plain.to_json().get("bp_tail").as_usize().is_none());
+        let tagged = EpochStats { epoch: 1, bp_tail: Some(2), ..Default::default() };
+        let v = tagged.to_json();
+        assert_eq!(v.get("bp_tail").as_usize(), Some(2));
+        assert_eq!(EpochStats::from_json(&v).unwrap().bp_tail, Some(2));
     }
 
     #[test]

@@ -14,6 +14,7 @@
 pub mod checkpoint;
 pub mod control;
 pub mod dp_session;
+pub mod elastic;
 pub mod engine;
 pub mod int8_trainer;
 pub mod kernels;
@@ -30,6 +31,7 @@ pub mod zo;
 pub use checkpoint::{CheckpointPolicy, CkptTensor, TrainState};
 pub use control::{ProgressSink, StopFlag};
 pub use dp_session::{DpAggregate, DpLocalSession, DpSpec, DpWorld, DP_MAX_REPLICAS};
+pub use elastic::{ElasticController, ElasticSpec, ElasticState};
 pub use engine::{BpDepth, Engine, EngineKind, Method, StepOut};
 pub use int8_trainer::{Int8Session, ZoGradMode};
 pub use params::{Model, ParamSet};

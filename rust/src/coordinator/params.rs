@@ -39,6 +39,17 @@ impl Model {
         }
     }
 
+    /// Deepest BP tail the model supports: the classifier (head FC)
+    /// stack depth. Both paper models end in a 3-layer FC head; BP
+    /// beyond it would cross the flatten/pooling stage, which the
+    /// partition-activation ABI does not expose — use `full-bp` there.
+    pub fn max_bp_tail(&self) -> usize {
+        match self {
+            Model::LeNet => crate::coordinator::engine::CLS_STACK,
+            Model::PointNet { .. } => crate::coordinator::engine::CLS_STACK,
+        }
+    }
+
     /// Memory-model layer table (for Figs. 4–6).
     pub fn memory_layers(&self) -> Vec<crate::memory::LayerInfo> {
         match self {
@@ -91,6 +102,12 @@ impl ParamSet {
     /// Index of the first tensor trained by BP when the last `bp_layers`
     /// FC layers (w+b pairs) are BP-trained. Tensors `0..boundary` are ZO.
     pub fn zo_boundary(&self, bp_layers: usize) -> usize {
+        assert!(
+            2 * bp_layers <= self.num_tensors(),
+            "bp tail {bp_layers} exceeds the {} tensors of {:?}",
+            self.num_tensors(),
+            self.model
+        );
         self.num_tensors() - 2 * bp_layers
     }
 

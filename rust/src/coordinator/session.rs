@@ -23,6 +23,7 @@
 
 use super::checkpoint::{self, CheckpointPolicy, TrainState};
 use super::control::{ProgressSink, StopFlag};
+use super::elastic::{ElasticController, ElasticSpec, ElasticState};
 use super::engine::Method;
 use super::int8_trainer::ZoGradMode;
 use super::metrics::{EpochStats, History};
@@ -104,6 +105,12 @@ pub struct TrainSpec {
     pub sparse_block: usize,
     /// Fraction of blocks kept when `sparse_block > 0`, in (0, 1].
     pub sparse_keep: f32,
+    /// Elastic ZO/BP boundary: when set, the plateau controller may
+    /// move `method`'s BP tail within `[min, max]` at epoch granularity
+    /// (and the serve dispatcher may negotiate the starting k against
+    /// an agent's memory budget). `None` (default) keeps the boundary
+    /// fixed. Requires a `Tail(k)` method.
+    pub elastic: Option<ElasticSpec>,
     /// Mid-run durability: cadence snapshots at completed-epoch
     /// boundaries (`None` disables them). See
     /// [`checkpoint::CheckpointPolicy`] and [`run_from`].
@@ -117,7 +124,7 @@ pub struct TrainSpec {
 impl Default for TrainSpec {
     fn default() -> Self {
         TrainSpec {
-            method: Method::Cls1,
+            method: Method::CLS1,
             precision: PrecisionSpec::Fp32,
             epochs: 10,
             batch: 32,
@@ -133,6 +140,7 @@ impl Default for TrainSpec {
             kernels: true,
             sparse_block: 0,
             sparse_keep: 1.0,
+            elastic: None,
             checkpoint: None,
             stop: StopFlag::default(),
             progress: ProgressSink::default(),
@@ -183,6 +191,18 @@ impl TrainSpec {
             pairs.push(("r_max", Value::num(r_max as f64)));
             pairs.push(("b_zo", Value::num(b_zo as f64)));
         }
+        // the fixed boundary is the default: elastic runs add the
+        // `boundary` token (and only non-default controller knobs), so
+        // pre-elastic specs keep their exact byte shape
+        if let Some(e) = &self.elastic {
+            pairs.push(("boundary", Value::str(e.boundary_token())));
+            if e.patience != super::elastic::DEFAULT_PATIENCE {
+                pairs.push(("elastic_patience", Value::num(e.patience as f64)));
+            }
+            if e.eps != super::elastic::DEFAULT_EPS {
+                pairs.push(("elastic_eps", Value::num(e.eps as f64)));
+            }
+        }
         if let Some(p) = &self.checkpoint {
             pairs.push(("save", Value::str(p.path.clone())));
             pairs.push(("ckpt_every", Value::num(p.every_n_epochs as f64)));
@@ -208,6 +228,9 @@ impl TrainSpec {
         let mut ckpt_path: Option<String> = None;
         let mut ckpt_every: usize = 1;
         let mut ckpt_keep: usize = 1;
+        let mut elastic: Option<ElasticSpec> = None;
+        let mut el_patience: Option<usize> = None;
+        let mut el_eps: Option<f32> = None;
         let str_of = |k: &str, val: &Value| -> Result<String> {
             Ok(val.as_str().with_context(|| format!("'{k}' must be a string"))?.to_string())
         };
@@ -265,6 +288,17 @@ impl TrainSpec {
                     anyhow::ensure!((1..=7).contains(&n), "b_zo must be in 1..=7");
                     b_zo = n as u32;
                 }
+                "boundary" => elastic = ElasticSpec::parse_boundary(&str_of(k, val)?)?,
+                "elastic_patience" | "elastic-patience" => {
+                    let n = num_of(k, val)? as i64;
+                    anyhow::ensure!(n >= 1, "elastic_patience must be >= 1");
+                    el_patience = Some(n as usize);
+                }
+                "elastic_eps" | "elastic-eps" => {
+                    let f = num_of(k, val)?;
+                    anyhow::ensure!(f >= 0.0, "elastic_eps must be >= 0");
+                    el_eps = Some(f as f32);
+                }
                 "save" | "save_checkpoint" | "ckpt_path" => {
                     ckpt_path = Some(str_of(k, val)?)
                 }
@@ -297,6 +331,30 @@ impl TrainSpec {
                 "sparse_block requires a ZO method (full-bp has no perturbation)"
             );
         }
+        if let Some(e) = &mut elastic {
+            if let Some(p) = el_patience {
+                e.patience = p;
+            }
+            if let Some(f) = el_eps {
+                e.eps = f;
+            }
+            let k0 = spec.method.bp_tail().with_context(|| {
+                format!("an elastic boundary requires a bp-tail method, not '{}'", spec.method.token())
+            })?;
+            anyhow::ensure!(
+                (e.min..=e.max).contains(&k0),
+                "method '{}' starts outside the elastic range {}-{}",
+                spec.method.token(),
+                e.min,
+                e.max
+            );
+        } else {
+            anyhow::ensure!(
+                el_patience.is_none() && el_eps.is_none(),
+                "elastic_patience/elastic_eps require boundary=elastic:<min>-<max>"
+            );
+        }
+        spec.elastic = elastic;
         let grad_mode = resolve_grad_mode(int8, star, grad_key)?;
         spec.precision = if int8 {
             PrecisionSpec::Int8 { grad_mode, r_max, b_zo }
@@ -387,6 +445,15 @@ pub trait TrainSession {
     fn snapshot(&self) -> Vec<checkpoint::CkptTensor> {
         Vec::new()
     }
+
+    /// Move the ZO/BP boundary to BP on the last `k` layers, effective
+    /// from the next step. Called by the epoch loop when an elastic
+    /// spec's controller decides to move (and on resume, to restore a
+    /// mid-run boundary). Backends that cannot re-partition reject —
+    /// the default — and the loop surfaces the error.
+    fn set_bp_tail(&mut self, k: usize) -> Result<()> {
+        anyhow::bail!("this session cannot move its ZO/BP boundary (to bp-tail={k}) mid-run")
+    }
 }
 
 /// Outcome of a training run.
@@ -399,6 +466,10 @@ pub struct TrainResult {
     /// — resumed runs start from the checkpoint's counter, so this is
     /// the all-time count, not just this process's.
     pub steps_done: u64,
+    /// Elastic-boundary controller state at the end of the run (`None`
+    /// for fixed-boundary specs) — stamped into the final checkpoint's
+    /// trailer by [`final_state`].
+    pub elastic: Option<ElasticState>,
 }
 
 /// Drive a session through `spec.epochs` epochs — the single epoch loop
@@ -436,6 +507,21 @@ pub fn run_from(
     let carry = resume.map_or((f32::NAN, 0.0), |s| (s.last_test_loss, s.last_test_acc));
     let mut stopped = false;
 
+    // elastic boundary: rebuild the controller (from the checkpoint
+    // trailer when resuming) and restore any mid-run boundary before
+    // the first step, so a resumed run replays the k-schedule exactly
+    let mut elastic: Option<ElasticController> = spec.elastic.map(|es| {
+        match resume.and_then(|s| s.elastic.clone()) {
+            Some(st) => ElasticController::from_state(es, st),
+            None => ElasticController::new(es, spec.method.bp_tail().unwrap_or(0)),
+        }
+    });
+    if let Some(c) = &elastic {
+        if c.k() != spec.method.bp_tail().unwrap_or(0) {
+            session.set_bp_tail(c.k())?;
+        }
+    }
+
     'epochs: for epoch in start_epoch..spec.epochs {
         if spec.stop.should_stop() {
             stopped = true;
@@ -464,7 +550,8 @@ pub fn run_from(
         }
 
         let is_last = epoch + 1 == spec.epochs;
-        let (test_loss, test_acc) = if epoch % spec.eval_every == 0 || is_last {
+        let fresh_eval = epoch % spec.eval_every == 0 || is_last;
+        let (test_loss, test_acc) = if fresh_eval {
             let t0 = std::time::Instant::now();
             let r = session.evaluate(test_data)?;
             timer.add(Phase::Eval, t0.elapsed());
@@ -479,6 +566,24 @@ pub fn run_from(
             )
         };
 
+        // the plateau controller sees only fresh evals (carry-forward
+        // epochs are invisible); a decision re-partitions the session
+        // now, so it takes effect from the next epoch's steps and is
+        // captured by this epoch's stats + cadence snapshot
+        if fresh_eval {
+            if let Some(c) = elastic.as_mut() {
+                if let Some(new_k) = c.observe(epoch, test_loss) {
+                    session.set_bp_tail(new_k)?;
+                    if spec.verbose {
+                        println!(
+                            "[{}] epoch {epoch}: elastic boundary -> bp-tail={new_k}",
+                            history.label
+                        );
+                    }
+                }
+            }
+        }
+
         let stats = EpochStats {
             epoch,
             train_loss: (epoch_loss / nbatches.max(1) as f64) as f32,
@@ -488,6 +593,7 @@ pub fn run_from(
             lr,
             seconds: epoch_t0.elapsed().as_secs_f64(),
             phases: timer.deltas_since(&phase_mark),
+            bp_tail: elastic.as_ref().map(|c| c.k()).or_else(|| spec.method.bp_tail()),
         };
         if spec.verbose {
             println!(
@@ -519,6 +625,7 @@ pub fn run_from(
                     last_test_loss: last.test_loss,
                     last_test_acc: last.test_acc,
                     spec: spec.to_json(),
+                    elastic: elastic.as_ref().map(|c| c.state()),
                 };
                 checkpoint::write_snapshot(p, &session.snapshot(), Some(&state))
                     .with_context(|| format!("writing cadence snapshot {}", p.path))?;
@@ -526,7 +633,13 @@ pub fn run_from(
         }
     }
 
-    Ok(TrainResult { history, timer, stopped, steps_done: step })
+    Ok(TrainResult {
+        history,
+        timer,
+        stopped,
+        steps_done: step,
+        elastic: elastic.map(|c| c.state()),
+    })
 }
 
 /// The [`TrainState`] describing a finished run — what `launch::run`
@@ -558,6 +671,10 @@ pub fn final_state(
             .or(resume.map(|s| s.last_test_acc))
             .unwrap_or(0.0),
         spec: spec.to_json(),
+        elastic: result
+            .elastic
+            .clone()
+            .or_else(|| resume.and_then(|s| s.elastic.clone())),
     }
 }
 
@@ -644,7 +761,7 @@ mod tests {
 
     #[test]
     fn labels_cover_the_paper_grid() {
-        let mut spec = TrainSpec { method: Method::Cls1, ..Default::default() };
+        let mut spec = TrainSpec { method: Method::CLS1, ..Default::default() };
         assert_eq!(spec.label(), "ZO-Feat-Cls1");
         spec.precision = PrecisionSpec::int8(ZoGradMode::FloatCE);
         assert_eq!(spec.label(), "ZO-Feat-Cls1 INT8");
@@ -667,7 +784,7 @@ mod tests {
         assert_eq!(back.to_json(), fp32.to_json());
 
         let int8 = TrainSpec {
-            method: Method::Cls2,
+            method: Method::CLS2,
             precision: PrecisionSpec::Int8 {
                 grad_mode: ZoGradMode::IntCE,
                 r_max: 31,
@@ -699,7 +816,7 @@ mod tests {
         assert!(!TrainSpec::from_json(&v).unwrap().kernels);
 
         let sparse = TrainSpec {
-            method: Method::FullZo,
+            method: Method::FULL_ZO,
             sparse_block: 64,
             sparse_keep: 0.25,
             ..Default::default()
@@ -816,6 +933,7 @@ mod tests {
             last_test_loss: 1.5,
             last_test_acc: 0.75,
             spec: spec.to_json(),
+            elastic: None,
         };
         let mut s = FakeSession::new();
         let r = run_from(&mut s, &spec, &d, &d, Some(&state)).unwrap();

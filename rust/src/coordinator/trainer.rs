@@ -334,6 +334,32 @@ impl TrainSession for Fp32Session<'_> {
         evaluate(self.engine, self.params, data, self.spec.batch)
     }
 
+    fn set_bp_tail(&mut self, k: usize) -> Result<()> {
+        use super::engine::Method;
+        anyhow::ensure!(
+            self.spec.method.bp_depth() != BpDepth::All,
+            "cannot move the ZO/BP boundary of a full-bp run"
+        );
+        anyhow::ensure!(
+            2 * k <= self.params.data.len(),
+            "bp-tail={k} exceeds the {} tensors of this model",
+            self.params.data.len()
+        );
+        self.spec.method = Method::Tail(k);
+        self.boundary = self.params.zo_boundary(k);
+        self.bp_tail = k;
+        self.zo_layout = self.params.data[..self.boundary].iter().map(|t| t.len()).collect();
+        self.zo_total = self.zo_layout.iter().sum();
+        // the StepZ cache keys on (seed, step, len) and regenerates
+        // itself when zo_total changes; only the fork needs a refresh
+        // if the boundary just became nonempty
+        if self.aux.is_none() && self.spec.kernels && self.boundary > 0 && kernels::hw_threads() > 1
+        {
+            self.aux = self.engine.fork();
+        }
+        Ok(())
+    }
+
     fn snapshot(&self) -> Vec<checkpoint::CkptTensor> {
         checkpoint::params_to_tensors(self.params)
     }
@@ -429,7 +455,7 @@ mod tests {
         let test_d = synth_mnist::generate(64, 5);
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 6);
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::FullZo, 4))
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::FULL_ZO, 4))
             .unwrap();
         let first = r.history.epochs.first().unwrap().train_loss;
         let last = r.history.epochs.last().unwrap().train_loss;
@@ -444,7 +470,7 @@ mod tests {
         let mut params = ParamSet::init(Model::LeNet, 10);
         let before_fc3 = params.data[8].clone();
         let before_conv1 = params.data[0].clone();
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::Cls1, 2))
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::CLS1, 2))
             .unwrap();
         assert_ne!(params.data[8], before_fc3, "BP tail must move");
         assert_ne!(params.data[0], before_conv1, "ZO layers must move");
@@ -472,7 +498,7 @@ mod tests {
         let test_d = synth_mnist::generate(64, 42);
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 43);
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::Cls1, 2))
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::CLS1, 2))
             .unwrap();
         let last = r.history.epochs.last().unwrap();
         assert!(
@@ -513,7 +539,7 @@ mod tests {
         let test_d = synth_mnist::generate(32, 12);
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 13);
-        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::Cls1, 1))
+        let r = train(&mut eng, &mut params, &train_d, &test_d, &tiny_spec(Method::CLS1, 1))
             .unwrap();
         let fwd = r.timer.total(Phase::Forward).as_secs_f64();
         let zo = r.timer.total(Phase::ZoPerturb).as_secs_f64()

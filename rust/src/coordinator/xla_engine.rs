@@ -80,14 +80,11 @@ impl XlaEngine {
         Ok(())
     }
 
-    /// Tail-grad tensor indices for this model (ABI positions).
+    /// Tail-grad tensor indices for this model (ABI positions): the
+    /// last `k` (weight, bias) pairs.
     fn tail_indices(&self, k: usize) -> Vec<usize> {
         let n = self.model.param_specs().len();
-        match k {
-            1 => vec![n - 2, n - 1],
-            2 => vec![n - 4, n - 3, n - 2, n - 1],
-            _ => unreachable!(),
-        }
+        (n.saturating_sub(2 * k)..n).collect()
     }
 }
 
@@ -103,6 +100,9 @@ impl Engine for XlaEngine {
         Ok(Forward {
             loss: out[0].scalar_f32()?,
             logits: out[1].as_f32()?.to_vec(),
+            // AOT artifacts only expose the two classic partition
+            // activations; tails deeper than 2 need engine=native
+            act_c3: Vec::new(),
             act_c2: out[2].as_f32()?.to_vec(),
             act_c1: out[3].as_f32()?.to_vec(),
         })
@@ -121,7 +121,10 @@ impl Engine for XlaEngine {
         let name = match k {
             1 => self.tail1_name.clone(),
             2 => self.tail2_name.clone(),
-            _ => bail!("tail_grads supports k in {{1,2}}"),
+            _ => bail!(
+                "the XLA artifact set has no bp-tail={k} program; \
+                 deeper tails require engine=native"
+            ),
         };
         let exe = self.registry.get(&name)?;
         // ABI: partition activation, then the BP'd params in order

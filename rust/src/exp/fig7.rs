@@ -49,17 +49,17 @@ pub fn run(scale: Scale) -> Result<()> {
     // ---- FP32 (native engine) --------------------------------------
     let mut t = Table::new("Fig 7 (left): FP32 native-engine time breakdown", &header);
     let mut fp32_epoch_secs = 0.0;
-    for method in [Method::FullZo, Method::Cls2, Method::Cls1] {
+    for method in [Method::FULL_ZO, Method::CLS2, Method::CLS1] {
         let mut engine = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 1);
         let spec = TrainSpec { method, epochs, batch: 32, ..Default::default() };
         let r = trainer::train(&mut engine, &mut params, &train_d, &test_d, &spec)?;
         let secs: f64 = r.history.epochs.iter().map(|e| e.seconds).sum::<f64>()
             / r.history.epochs.len() as f64;
-        if method == Method::FullZo {
+        if method == Method::FULL_ZO {
             fp32_epoch_secs = secs;
         }
-        t.row(&breakdown_cells(method.label(), &r.timer, secs));
+        t.row(&breakdown_cells(&method.label(), &r.timer, secs));
         json_out.push(Value::obj(vec![
             ("precision", Value::str("fp32")),
             ("method", Value::str(method.label())),
@@ -75,7 +75,7 @@ pub fn run(scale: Scale) -> Result<()> {
     // ---- INT8 (native NITI engine) ---------------------------------
     let mut t = Table::new("Fig 7 (right): INT8 native-engine time breakdown", &header);
     let mut int8_epoch_secs = 0.0;
-    for method in [Method::FullZo, Method::Cls2, Method::Cls1] {
+    for method in [Method::FULL_ZO, Method::CLS2, Method::CLS1] {
         let mut ws = lenet8::init_params(2, 32);
         let spec = TrainSpec {
             method,
@@ -87,10 +87,10 @@ pub fn run(scale: Scale) -> Result<()> {
         let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &spec)?;
         let secs: f64 = r.history.epochs.iter().map(|e| e.seconds).sum::<f64>()
             / r.history.epochs.len() as f64;
-        if method == Method::FullZo {
+        if method == Method::FULL_ZO {
             int8_epoch_secs = secs;
         }
-        t.row(&breakdown_cells(method.label(), &r.timer, secs));
+        t.row(&breakdown_cells(&method.label(), &r.timer, secs));
         json_out.push(Value::obj(vec![
             ("precision", Value::str("int8")),
             ("method", Value::str(method.label())),

@@ -49,10 +49,10 @@ pub fn run_fig4() -> Result<()> {
     let mut out = Vec::new();
     for batch in [32usize, 256] {
         let mut t = Table::new(&format!("Fig 4: LeNet-5 FP32 memory, B={batch}"), &HEADER);
-        let zo_total = memory::fp32(&layers, batch, Method::FullZo.memory_method(), false).total();
-        for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+        let zo_total = memory::fp32(&layers, batch, Method::FULL_ZO.memory_method(), false).total();
+        for m in [Method::FULL_ZO, Method::CLS2, Method::CLS1, Method::FullBp] {
             let b = memory::fp32(&layers, batch, m.memory_method(), false);
-            t.row(&row(m.label(), &b, Some(zo_total)));
+            t.row(&row(&m.label(), &b, Some(zo_total)));
             out.push(Value::obj(vec![
                 ("batch", Value::num(batch as f64)),
                 ("method", Value::str(m.label())),
@@ -70,10 +70,10 @@ pub fn run_fig5() -> Result<()> {
     let mut out = Vec::new();
     for batch in [32usize, 256] {
         let mut t = Table::new(&format!("Fig 5: LeNet-5 INT8 memory, B={batch}"), &HEADER);
-        let zo_total = memory::int8(&layers, batch, Method::FullZo.memory_method()).total();
-        for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+        let zo_total = memory::int8(&layers, batch, Method::FULL_ZO.memory_method()).total();
+        for m in [Method::FULL_ZO, Method::CLS2, Method::CLS1, Method::FullBp] {
             let b = memory::int8(&layers, batch, m.memory_method());
-            t.row(&row(m.label(), &b, Some(zo_total)));
+            t.row(&row(&m.label(), &b, Some(zo_total)));
             let fp = memory::fp32(&fp_layers, batch, m.memory_method(), false);
             out.push(Value::obj(vec![
                 ("batch", Value::num(batch as f64)),
@@ -84,7 +84,7 @@ pub fn run_fig5() -> Result<()> {
         }
         t.print();
         // the paper's headline: INT8 saves 1.46-1.60x vs FP32
-        for m in [Method::FullZo, Method::Cls2, Method::Cls1] {
+        for m in [Method::FULL_ZO, Method::CLS2, Method::CLS1] {
             let f = memory::fp32(&fp_layers, batch, m.memory_method(), false).total();
             let i = memory::int8(&layers, batch, m.memory_method()).total();
             println!(
@@ -102,17 +102,17 @@ pub fn run_fig6() -> Result<()> {
     let mut out = Vec::new();
     let batch = 32;
     let mut t = Table::new("Fig 6: PointNet FP32 memory, B=32, N=1024", &HEADER);
-    let zo_total = memory::fp32(&layers, batch, Method::FullZo.memory_method(), false).total();
-    for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+    let zo_total = memory::fp32(&layers, batch, Method::FULL_ZO.memory_method(), false).total();
+    for m in [Method::FULL_ZO, Method::CLS2, Method::CLS1, Method::FullBp] {
         let b = memory::fp32(&layers, batch, m.memory_method(), false);
-        t.row(&row(m.label(), &b, Some(zo_total)));
+        t.row(&row(&m.label(), &b, Some(zo_total)));
         out.push(Value::obj(vec![
             ("method", Value::str(m.label())),
             ("breakdown", breakdown_json(&b)),
         ]));
     }
     t.print();
-    let e2 = memory::fp32(&layers, batch, Method::Cls2.memory_method(), false);
+    let e2 = memory::fp32(&layers, batch, Method::CLS2.memory_method(), false);
     println!(
         "   activations+errors share (Cls2): {} (paper: 99.4%)",
         pct((e2.acts + e2.errors) as f64 / e2.total() as f64)

@@ -178,8 +178,7 @@ pub fn build_engine_at(
 pub fn fp32_train_spec(method: Method, epochs: usize, batch: usize, seed: u64) -> TrainSpec {
     let lr0 = match method {
         Method::FullBp => 0.05,
-        Method::Cls1 | Method::Cls2 => 2e-3,
-        Method::FullZo => 2e-3,
+        Method::Tail(_) => 2e-3,
     };
     TrainSpec {
         method,

@@ -61,16 +61,16 @@ pub fn run(scale: Scale, engine_kind: EngineKind) -> Result<()> {
     let mut json_rows: Vec<Value> = Vec::new();
     let methods: Vec<Option<Method>> = vec![
         None, // w/o fine-tuning
-        Some(Method::FullZo),
-        Some(Method::Cls2),
-        Some(Method::Cls1),
+        Some(Method::FULL_ZO),
+        Some(Method::CLS2),
+        Some(Method::CLS1),
         Some(Method::FullBp),
     ];
 
     for m in methods {
-        let label = m.map(|m| m.label()).unwrap_or("w/o Fine-tuning");
-        let mut cells = vec![label.to_string()];
-        let mut accs_json = vec![("method", Value::str(label))];
+        let label = m.map(|m| m.label()).unwrap_or_else(|| "w/o Fine-tuning".to_string());
+        let mut cells = vec![label.clone()];
+        let mut accs_json = vec![("method", Value::str(label.clone()))];
 
         // FP32 columns then INT8 columns
         for precision in ["fp32", "int8"] {

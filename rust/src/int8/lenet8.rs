@@ -19,9 +19,14 @@ pub const PARAM_SPECS: [(&str, &[usize]); 5] = [
     ("fc3_w", &[84, 10]),
 ];
 
+/// Deepest BP tail [`tail_update`] supports: the whole FC classifier
+/// stack (fc1..fc3). Matches `coordinator::engine::CLS_STACK`.
+pub const MAX_BP_TAIL: usize = 3;
+
 /// Number of weight tensors trained by ZO for a partition name.
-/// (Full ZO = 5, Cls1 = 4, Cls2 = 3, Full BP = 0.)
+/// (Full ZO = 5, Cls1 = 4, Cls2 = 3, bp-tail=3 = 2, Full BP = 0.)
 pub fn zo_layer_count(bp_layers: usize) -> usize {
+    assert!(bp_layers <= MAX_BP_TAIL, "bp tail {bp_layers} exceeds the FC stack");
     5 - bp_layers
 }
 
@@ -134,8 +139,8 @@ fn apply_update(w: &mut QTensor, u: &[i8]) {
     }
 }
 
-/// BP for the last `k` ∈ {1,2} FC layers with gradient bitwidth `b_bp`
-/// (paper Alg. 2 line 11). Updates weights in place.
+/// BP for the last `k` ∈ {1,2,3} FC layers with gradient bitwidth
+/// `b_bp` (paper Alg. 2 line 11). Updates weights in place.
 pub fn tail_update(ws: &mut [QTensor], fwd: &Fwd8, labels: &[u8], k: usize, bsz: usize, b_bp: u32) {
     let e = logits_error(&fwd.logits, labels, bsz);
     match k {
@@ -159,7 +164,32 @@ pub fn tail_update(ws: &mut [QTensor], fwd: &Fwd8, labels: &[u8], k: usize, bsz:
             apply_update(&mut ws[4], &u5);
             apply_update(&mut ws[3], &u4);
         }
-        _ => panic!("tail_update supports k in {{1,2}}"),
+        3 => {
+            let (gw5, e_in) = layers::fc_backward_acc(&fwd.a2, &ws[4], &e, bsz, 84, NCLASS);
+            let mut e2 = requantize(&e_in, &[bsz, 84], e.exp + ws[4].exp);
+            for (ev, &av) in e2.data.iter_mut().zip(&fwd.a2.data) {
+                if av <= 0 {
+                    *ev = 0;
+                }
+            }
+            let (gw4, e_in) = layers::fc_backward_acc(&fwd.a1, &ws[3], &e2, bsz, 120, 84);
+            let mut e1 = requantize(&e_in, &[bsz, 120], e2.exp + ws[3].exp);
+            for (ev, &av) in e1.data.iter_mut().zip(&fwd.a1.data) {
+                if av <= 0 {
+                    *ev = 0;
+                }
+            }
+            let (gw3, _) = layers::fc_backward_acc(&fwd.flat, &ws[2], &e1, bsz, 784, 120);
+            let u5 = layers::round_update(&gw5, b_bp);
+            let u4 = layers::round_update(&gw4, b_bp);
+            // fc1 sees the compounded effective LR of the whole tail;
+            // damp by one bit exactly as full_update does for this layer.
+            let u3 = layers::round_update(&gw3, b_bp.saturating_sub(2).max(1));
+            apply_update(&mut ws[4], &u5);
+            apply_update(&mut ws[3], &u4);
+            apply_update(&mut ws[2], &u3);
+        }
+        _ => panic!("tail_update supports k in {{1,2,3}}"),
     }
 }
 
@@ -377,6 +407,20 @@ mod tests {
         assert_eq!(ws[0].data, before[0]);
         assert_eq!(ws[3].data, before[3]);
         assert_ne!(ws[4].data, before[4], "fc3 must move");
+    }
+
+    #[test]
+    fn tail3_updates_fc_stack_only() {
+        let mut ws = init_params(13, 32);
+        let before: Vec<Vec<i8>> = ws.iter().map(|w| w.data.clone()).collect();
+        let (x, labels) = mnist_batch(8, 14);
+        let fwd = forward(&ws, &x, 8);
+        tail_update(&mut ws, &fwd, &labels, 3, 8, 5);
+        assert_eq!(ws[0].data, before[0], "conv1 must stay frozen");
+        assert_eq!(ws[1].data, before[1], "conv2 must stay frozen");
+        assert_ne!(ws[4].data, before[4], "fc3 must move");
+        let fc_moved = (2..5).filter(|&i| ws[i].data != before[i]).count();
+        assert!(fc_moved >= 2, "only {fc_moved}/3 fc layers moved");
     }
 
     #[test]

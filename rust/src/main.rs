@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! repro train  [--model lenet|pointnet] [--dataset mnist|fashion|modelnet]
-//!              [--method full-zo|cls1|cls2|full-bp] [--engine xla|native]
+//!              [--method full-zo|cls1|cls2|full-bp|bp-tail=<k>] [--engine xla|native]
+//!              [--bp-tail K] [--boundary fixed|elastic:<min>-<max>]
+//!              [--elastic-patience N] [--elastic-eps F]
 //!              [--precision fp32|int8|int8*] [--epochs N] [--batch N]
 //!              [--lr F] [--eps F] [--seed N] [--save ckpt] [--load ckpt]
 //!              [--resume ckpt] [--ckpt-every N] [--ckpt-keep K]
@@ -34,10 +36,13 @@
 //!              # coordinator); epoch/state events stream over SSE at
 //!              # GET /events and GET /jobs/<id>/events
 //! repro agent  --coordinator host:port [--capacity N] [--name S]
-//!              [--poll-ms P] [--max-poll-failures N]
+//!              [--poll-ms P] [--max-poll-failures N] [--mem-budget BYTES]
 //!              # remote worker agent: registers with a cluster
 //!              # coordinator, pulls jobs, runs them via the exact
-//!              # `repro train` path, streams progress back
+//!              # `repro train` path, streams progress back;
+//!              # --mem-budget makes the coordinator pin each
+//!              # elastic-boundary job to the deepest BP tail whose
+//!              # modeled footprint fits this device
 //! repro submit [--addr host:port] [--name S] [--priority N] [train flags...]
 //! repro jobs   [--addr host:port]
 //! repro job    <id> [--addr host:port] [--cancel]
@@ -103,6 +108,9 @@ fn print_help() {
     println!(
         "repro — ElasticZO on-device-learning coordinator\n\
          \n  repro train  [--model lenet|pointnet] [--method full-zo|cls1|cls2|full-bp]\n\
+         \x20              [--bp-tail K]   generalized ZO/BP split: BP trains the last K layers\n\
+         \x20              [--boundary fixed|elastic:<min>-<max>] [--elastic-patience N]\n\
+         \x20              [--elastic-eps F]   plateau-driven boundary moves at epoch edges\n\
          \x20              [--dataset mnist|fashion|modelnet] [--engine xla|native]\n\
          \x20              [--precision fp32|int8|int8*] [--epochs N] [--batch N] [--lr F]\n\
          \x20              [--eval-every N] [--save ckpt] [--load ckpt] [--resume ckpt]\n\
@@ -126,8 +134,9 @@ fn print_help() {
          \x20              SSE: GET /events (firehose) | GET /jobs/<id>/events\n\
          \x20              --cluster adds /cluster/* (agent registry + job fan-out)\n\
          \x20 repro agent  --coordinator host:port [--capacity N] [--name S]\n\
-         \x20              [--poll-ms P] [--max-poll-failures N]\n\
-         \x20              remote worker: pulls jobs from a --cluster coordinator\n\
+         \x20              [--poll-ms P] [--max-poll-failures N] [--mem-budget BYTES]\n\
+         \x20              remote worker: pulls jobs from a --cluster coordinator;\n\
+         \x20              --mem-budget pins elastic jobs to the deepest BP tail that fits\n\
          \x20 repro submit [--addr host:port] [--name S] [--priority N] [train flags]\n\
          \x20 repro jobs   [--addr host:port]\n\
          \x20 repro job    <id> [--addr host:port] [--cancel]\n\
@@ -261,7 +270,14 @@ fn cmd_memory(args: &Args) -> Result<()> {
         &format!("Memory model: {model} {precision} B={batch}{}", if adam { " (Adam)" } else { "" }),
         &["method", "params", "acts", "grads", "errors", "int32", "opt", "total"],
     );
-    for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+    // one row per candidate boundary (k ∈ 0..=CLS_STACK, then full
+    // BP) — the same candidate set the coordinator negotiates a
+    // `--mem-budget` over, with the legacy preset labels appearing on
+    // their k
+    let mut methods: Vec<Method> =
+        (0..=elasticzo::coordinator::engine::CLS_STACK).map(Method::Tail).collect();
+    methods.push(Method::FullBp);
+    for m in methods {
         let b = if precision == "int8" {
             memory::int8(&layers, batch, m.memory_method())
         } else {
@@ -305,9 +321,14 @@ fn analytic_total(cfg: &Config, m: Method) -> usize {
 }
 
 /// `repro train --mem-report`: the measured peak of the run we just
-/// finished, next to the paper's model for every method at the same
-/// model/precision/batch.
+/// finished, next to the paper's model for every candidate boundary
+/// (`k ∈ 0..=max_bp_tail` plus full BP) at the same
+/// model/precision/batch. This is [`elasticzo::coordinator::elastic::
+/// candidate_rows`] — the exact table the coordinator negotiates an
+/// agent's `--mem-budget` against, so what operators read here is what
+/// the dispatcher decides on.
 fn print_mem_report(cfg: &Config, measured_peak: usize) {
+    use elasticzo::coordinator::elastic;
     use elasticzo::util::table::{bytes, Table};
     let mut t = Table::new(
         &format!(
@@ -318,8 +339,10 @@ fn print_mem_report(cfg: &Config, measured_peak: usize) {
         ),
         &["method", "modeled", "measured peak", "measured/modeled"],
     );
-    for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
-        let modeled = analytic_total(cfg, m);
+    let int8 = cfg.precision != Precision::Fp32;
+    for row in elastic::candidate_rows(cfg.model_enum(), cfg.batch, int8, false) {
+        let m = row.method;
+        let modeled = row.total;
         let this_run = m == cfg.method;
         t.row(&[
             format!("{}{}", m.label(), if this_run { " *" } else { "" }),
@@ -423,7 +446,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // cached `z`, parallel ±ε pair when a second core is up); the
     // `*_scalar` siblings time [`zo_step`], the scalar reference the
     // parity suite pins the kernels to.
-    for method in [Method::FullZo, Method::Cls1, Method::Cls2] {
+    // `Tail(3)` extends the k-axis one past the paper's presets (the
+    // whole FC stack under BP), so BENCH snapshots chart the elastic
+    // boundary's cost beyond cls1/cls2
+    for method in [Method::FULL_ZO, Method::CLS1, Method::CLS2, Method::Tail(3)] {
         let spec = TrainSpec {
             method,
             epochs: 1,
@@ -598,6 +624,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     name: format!("bench-dp-{i}"),
                     poll_ms: 10,
                     max_poll_failures: 100,
+                    mem_budget: None,
                 })
             })
             .collect::<Result<_>>()?;
@@ -640,7 +667,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     // --- measured peak heap per method vs the paper's model ---
     let mut mem = BTreeMap::new();
-    for m in [Method::FullZo, Method::Cls2, Method::Cls1, Method::FullBp] {
+    for m in [Method::FULL_ZO, Method::CLS2, Method::CLS1, Method::FullBp] {
         let cfg = Config {
             engine: elasticzo::coordinator::EngineKind::Native,
             method: m,
@@ -915,16 +942,28 @@ fn cmd_agent(args: &Args) -> Result<()> {
         poll_ms: args.get_u64("poll-ms", d.poll_ms)?,
         max_poll_failures: args.get_u64("max-poll-failures", d.max_poll_failures as u64)?
             as u32,
+        mem_budget: match args.get_usize("mem-budget", 0)? {
+            0 => None,
+            b => Some(b),
+        },
     };
     anyhow::ensure!(opts.capacity >= 1, "--capacity must be >= 1");
     anyhow::ensure!(opts.poll_ms >= 1, "--poll-ms must be >= 1");
     let coordinator = opts.coordinator.clone();
     let capacity = opts.capacity;
+    let budget = opts.mem_budget;
     let handle = serve::Agent::spawn(opts)?;
-    println!(
-        "agent {} registered with {coordinator} (capacity {capacity}); polling for work",
-        handle.id()
-    );
+    match budget {
+        Some(b) => println!(
+            "agent {} registered with {coordinator} (capacity {capacity}, mem budget {b} B); \
+             elastic-boundary jobs will be pinned to the deepest BP tail that fits",
+            handle.id()
+        ),
+        None => println!(
+            "agent {} registered with {coordinator} (capacity {capacity}); polling for work",
+            handle.id()
+        ),
+    }
     handle.join()
 }
 

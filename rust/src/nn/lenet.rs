@@ -59,6 +59,7 @@ pub fn forward(params: &[Vec<f32>], x: &[f32], y: &[f32], bsz: usize) -> (Forwar
         Forward {
             loss: l,
             logits: logits.clone(),
+            act_c3: flat.clone(),
             act_c2: a1.clone(),
             act_c1: a2.clone(),
         },
@@ -80,8 +81,9 @@ pub fn forward(params: &[Vec<f32>], x: &[f32], y: &[f32], bsz: usize) -> (Forwar
     )
 }
 
-/// BP for the last `k` ∈ {1,2} FC layers (ZO-Feat-Cls1 / -Cls2).
-/// Inputs are the partition activations returned by `forward`.
+/// BP for the last `k` ∈ {1,2,3} FC layers (the full classifier
+/// stack at k = 3). Inputs are the partition activations returned by
+/// `forward`.
 pub fn tail_grads(params: &[Vec<f32>], fwd: &Forward, y: &[f32], k: usize, bsz: usize) -> TailGrads {
     match k {
         1 => {
@@ -103,7 +105,26 @@ pub fn tail_grads(params: &[Vec<f32>], fwd: &Forward, y: &[f32], k: usize, bsz: 
                 linear::backward(a1, &params[6], &a2, &e2, bsz, 120, 84, true);
             vec![(6, gw4), (7, gb4), (8, gw5), (9, gb5)]
         }
-        _ => panic!("tail_grads supports k in {{1,2}}, got {k}"),
+        3 => {
+            let flat = &fwd.act_c3; // (B,784)
+            assert_eq!(
+                flat.len(),
+                bsz * FLAT,
+                "tail_grads k=3 needs the act_c3 partition activation (this backend did not supply it)"
+            );
+            let a1 = linear::forward(flat, &params[4], &params[5], bsz, FLAT, 120, true);
+            let a2 = linear::forward(&a1, &params[6], &params[7], bsz, 120, 84, true);
+            let logits = linear::forward(&a2, &params[8], &params[9], bsz, 84, NCLASS, false);
+            let e = loss::cross_entropy_grad(&logits, y, bsz, NCLASS);
+            let (gw5, gb5, e2) =
+                linear::backward(&a2, &params[8], &logits, &e, bsz, 84, NCLASS, false);
+            let (gw4, gb4, e1) =
+                linear::backward(&a1, &params[6], &a2, &e2, bsz, 120, 84, true);
+            let (gw3, gb3, _) =
+                linear::backward(flat, &params[4], &a1, &e1, bsz, FLAT, 120, true);
+            vec![(4, gw3), (5, gb3), (6, gw4), (7, gb4), (8, gw5), (9, gb5)]
+        }
+        _ => panic!("tail_grads supports k in {{1,2,3}}, got {k}"),
     }
 }
 
@@ -211,6 +232,21 @@ mod tests {
         let tail = tail_grads(&params, &fwd, &y, 2, 3);
         let full = full_grads(&params, &cache, &y);
         assert_eq!(tail.len(), 4);
+        for (idx, g) in &tail {
+            for (a, b) in g.iter().zip(&full[*idx]) {
+                assert!((a - b).abs() < 1e-5, "param {idx}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn tail3_matches_full_grads() {
+        let params = init_params(11);
+        let (x, y) = batch(3, 12);
+        let (fwd, cache) = forward(&params, &x, &y, 3);
+        let tail = tail_grads(&params, &fwd, &y, 3, 3);
+        let full = full_grads(&params, &cache, &y);
+        assert_eq!(tail.len(), 6, "k=3 covers the whole classifier stack");
         for (idx, g) in &tail {
             for (a, b) in g.iter().zip(&full[*idx]) {
                 assert!((a - b).abs() < 1e-5, "param {idx}: {a} vs {b}");

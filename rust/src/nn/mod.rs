@@ -22,6 +22,11 @@ pub struct Forward {
     pub loss: f32,
     /// Logits, `bsz * nclass` row-major.
     pub logits: Vec<f32>,
+    /// Activation entering the third-from-last FC — the classifier
+    /// stack's input (`flat` for LeNet, `global` for PointNet). Needed
+    /// only for `bp-tail=3`; backends that cannot supply it (older XLA
+    /// artifact sets) leave it empty and reject k = 3 tails.
+    pub act_c3: Vec<f32>,
     /// Post-ReLU activation entering the second-to-last FC (`a_fc1`/`h1`).
     pub act_c2: Vec<f32>,
     /// Post-ReLU activation entering the last FC (`a_fc2`/`h2`).

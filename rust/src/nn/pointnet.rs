@@ -74,6 +74,7 @@ pub fn forward(
         Forward {
             loss: l,
             logits: logits.clone(),
+            act_c3: global.clone(),
             act_c2: h1.clone(),
             act_c1: h2.clone(),
         },
@@ -91,7 +92,8 @@ pub fn forward(
     )
 }
 
-/// BP for the last `k` ∈ {1,2} head FC layers.
+/// BP for the last `k` ∈ {1,2,3} head FC layers (the whole
+/// classification head at k = 3).
 pub fn tail_grads(
     params: &[Vec<f32>],
     fwd: &Forward,
@@ -120,7 +122,26 @@ pub fn tail_grads(
                 linear::backward(h1, &params[12], &h2, &e2, bsz, 512, 256, true);
             vec![(12, gw2), (13, gb2), (14, gw3), (15, gb3)]
         }
-        _ => panic!("tail_grads supports k in {{1,2}}, got {k}"),
+        3 => {
+            let global = &fwd.act_c3; // (B,1024)
+            assert_eq!(
+                global.len(),
+                bsz * 1024,
+                "tail_grads k=3 needs the act_c3 partition activation (this backend did not supply it)"
+            );
+            let h1 = linear::forward(global, &params[10], &params[11], bsz, 1024, 512, true);
+            let h2 = linear::forward(&h1, &params[12], &params[13], bsz, 512, 256, true);
+            let logits = linear::forward(&h2, &params[14], &params[15], bsz, 256, ncls, false);
+            let e = loss::cross_entropy_grad(&logits, y, bsz, ncls);
+            let (gw3, gb3, e2) =
+                linear::backward(&h2, &params[14], &logits, &e, bsz, 256, ncls, false);
+            let (gw2, gb2, e1) =
+                linear::backward(&h1, &params[12], &h2, &e2, bsz, 512, 256, true);
+            let (gw1, gb1, _) =
+                linear::backward(global, &params[10], &h1, &e1, bsz, 1024, 512, true);
+            vec![(10, gw1), (11, gb1), (12, gw2), (13, gb2), (14, gw3), (15, gb3)]
+        }
+        _ => panic!("tail_grads supports k in {{1,2,3}}, got {k}"),
     }
 }
 
@@ -243,7 +264,7 @@ mod tests {
         let (x, y) = batch(2, 8, 40, 6);
         let (fwd, cache) = forward(&params, &x, &y, 2, 8, 40);
         let full = full_grads(&params, &cache, &y);
-        for k in [1usize, 2] {
+        for k in [1usize, 2, 3] {
             for (idx, g) in tail_grads(&params, &fwd, &y, k, 2, 40) {
                 for (a, b) in g.iter().zip(&full[idx]) {
                     assert!((a - b).abs() < 1e-5, "k={k} param {idx}");

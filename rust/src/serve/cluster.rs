@@ -83,6 +83,11 @@ pub struct AgentOptions {
     pub poll_ms: u64,
     /// Exit after this many consecutive failed polls.
     pub max_poll_failures: u32,
+    /// Training-memory budget (bytes) reported at registration. The
+    /// coordinator uses the paper's memory model to pin the deepest BP
+    /// tail that fits when it assigns an elastic-boundary job here.
+    /// `None` = unconstrained.
+    pub mem_budget: Option<usize>,
 }
 
 impl Default for AgentOptions {
@@ -93,6 +98,7 @@ impl Default for AgentOptions {
             name: String::new(),
             poll_ms: 500,
             max_poll_failures: 20,
+            mem_budget: None,
         }
     }
 }
@@ -214,10 +220,14 @@ impl Agent {
 }
 
 fn register(sh: &Arc<AgentShared>, opts: &AgentOptions) -> Result<u64> {
-    let body = Value::obj(vec![
+    let mut pairs = vec![
         ("name", Value::str(opts.name.clone())),
         ("capacity", Value::num(opts.capacity as f64)),
-    ]);
+    ];
+    if let Some(b) = opts.mem_budget {
+        pairs.push(("mem_budget", Value::num(b as f64)));
+    }
+    let body = Value::obj(pairs);
     let (status, v) = sh.post("/cluster/register", Some(&body))?;
     anyhow::ensure!(
         status == 200,
@@ -750,6 +760,7 @@ fn run_dp_replica(
                         last_test_loss: last.map_or(f32::NAN, |m| m.0),
                         last_test_acc: last.map_or(0.0, |m| m.1),
                         spec: spec.to_json(),
+                        elastic: None,
                     };
                     checkpoint::save_with_state(path, &world.snapshot(), Some(&state))
                         .with_context(|| format!("writing dp final checkpoint {path}"))?;
@@ -866,7 +877,7 @@ mod tests {
 
         let data = synth_mnist::generate(32, 3);
         let spec = TrainSpec {
-            method: Method::FullZo,
+            method: Method::FULL_ZO,
             epochs: 1,
             batch: 16,
             seed: 5,

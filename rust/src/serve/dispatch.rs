@@ -64,6 +64,11 @@ struct AgentRec {
     id: u64,
     name: String,
     capacity: usize,
+    /// Device memory budget in bytes, as reported at registration.
+    /// Drives the elastic-boundary negotiation: an elastic job assigned
+    /// to this agent gets the deepest BP tail whose modeled footprint
+    /// (paper Eqs. 2–5 / 13–15) fits. `None` = unconstrained.
+    mem_budget: Option<usize>,
     /// Job ids currently assigned to (running on) this agent.
     assigned: Vec<u64>,
     last_seen: Instant,
@@ -142,7 +147,8 @@ impl Dispatcher {
     }
 
     /// `POST /cluster/register` — admit a new agent; body
-    /// `{"name": S?, "capacity": N?}` (capacity defaults to 1).
+    /// `{"name": S?, "capacity": N?, "mem_budget": BYTES?}` (capacity
+    /// defaults to 1; a missing/zero budget means unconstrained).
     pub fn register(&self, body: &[u8]) -> (u16, Value) {
         let v = match parse_body(body) {
             Ok(v) => v,
@@ -150,6 +156,7 @@ impl Dispatcher {
         };
         let name = v.get("name").as_str().unwrap_or("").to_string();
         let capacity = v.get("capacity").as_usize().unwrap_or(1).max(1);
+        let mem_budget = v.get("mem_budget").as_usize().filter(|&b| b > 0);
         let id = {
             let mut inner = self.lock();
             let id = inner.next_agent;
@@ -160,6 +167,7 @@ impl Dispatcher {
                     id,
                     name,
                     capacity,
+                    mem_budget,
                     assigned: Vec::new(),
                     last_seen: Instant::now(),
                     jobs_done: 0,
@@ -238,7 +246,14 @@ impl Dispatcher {
                 continue;
             }
             // a pop that fails to claim was cancelled while queued
-            let Some(spec) = self.registry.claim_for_agent(id, agent) else { continue };
+            let Some(mut spec) = self.registry.claim_for_agent(id, agent) else { continue };
+            // boundary negotiation: an elastic job lands at the deepest
+            // BP tail the agent's memory budget fits (unconstrained
+            // agents get the range's deepest); the chosen k is pinned
+            // into the registry's spec so failover and resume replay it
+            if let Some(pinned) = self.negotiate_boundary(id, agent, &spec) {
+                spec = pinned;
+            }
             {
                 let mut inner = self.lock();
                 match inner.agents.get_mut(&agent) {
@@ -292,6 +307,40 @@ impl Dispatcher {
                 ("stop", Value::Arr(stop)),
             ]),
         )
+    }
+
+    /// Evaluate the elastic-boundary negotiation for a just-claimed
+    /// job: pick the deepest BP tail in the job's elastic range whose
+    /// analytic memory total fits the agent's budget (the same
+    /// [`elastic::candidate_rows`] table `repro train --mem-report`
+    /// prints), pin it into the registry's stored spec, and return the
+    /// pinned spec for the wire. `None` = nothing to pin (fixed
+    /// boundary, dp job, k unchanged, or a racing requeue).
+    fn negotiate_boundary(
+        &self,
+        id: u64,
+        agent: u64,
+        spec: &super::protocol::JobSpec,
+    ) -> Option<super::protocol::JobSpec> {
+        use crate::coordinator::elastic;
+        let cfg = &spec.config;
+        let es = cfg.effective_elastic().ok().flatten()?;
+        if cfg.dp_replicas > 0 {
+            return None;
+        }
+        let budget = {
+            let inner = self.lock();
+            inner.agents.get(&agent)?.mem_budget
+        };
+        let int8 = cfg.precision != crate::config::Precision::Fp32;
+        let k = match budget {
+            Some(b) => elastic::negotiate_k(cfg.model_enum(), cfg.batch, int8, b, es.min, es.max),
+            None => es.max.min(cfg.model_enum().max_bp_tail()),
+        };
+        if cfg.method.bp_tail() == Some(k) {
+            return None;
+        }
+        self.registry.pin_boundary(id, agent, k)
     }
 
     /// `POST /cluster/agents/{id}/jobs/{job}/epoch` — per-epoch
@@ -405,11 +454,16 @@ impl Dispatcher {
                         } else {
                             AgentState::Busy
                         };
-                        Value::obj(vec![
+                        let mut pairs = vec![
                             ("agent", Value::num(a.id as f64)),
                             ("name", Value::str(a.name.clone())),
                             ("state", Value::str(state.as_str())),
                             ("capacity", Value::num(a.capacity as f64)),
+                        ];
+                        if let Some(b) = a.mem_budget {
+                            pairs.push(("mem_budget", Value::num(b as f64)));
+                        }
+                        pairs.extend([
                             (
                                 "running",
                                 Value::Arr(
@@ -421,7 +475,8 @@ impl Dispatcher {
                                 "seen_ms_ago",
                                 Value::num(a.last_seen.elapsed().as_millis() as f64),
                             ),
-                        ])
+                        ]);
+                        Value::obj(pairs)
                     })
                     .collect(),
             ),

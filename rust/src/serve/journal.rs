@@ -17,6 +17,10 @@
 //!                                                        dp membership change (join/leave/
 //!                                                        lost) — audit only, folds to no-op
 //! {"event":"epoch","id":N,"stats":{EpochStats}}          one epoch reported
+//! {"event":"boundary","id":N,"k":K,"reason":R,...}       ZO/BP boundary moved: a
+//!                                                        "negotiated" pin folds into the
+//!                                                        replayed spec; a mid-run
+//!                                                        "elastic" move is audit-only
 //! {"event":"requeue","id":N}                             agent lease expired / deregistered:
 //!                                                        the job went back to Queued
 //! {"event":"terminal","id":N,"state":S,...}              Done/Failed/Cancelled/Interrupted
@@ -235,6 +239,19 @@ pub fn replay(path: impl AsRef<Path>) -> Result<Vec<Replayed>> {
                         j.best_test_acc = acc as f32;
                     }
                     j.error = v.get("error").as_str().map(str::to_string);
+                }
+            }
+            // a boundary pin negotiated at assignment rewrote the job's
+            // effective method BEFORE its run started; fold it into the
+            // replayed spec so a requeue/resume sees the same spec
+            // identity the checkpoint trailer recorded. Mid-run
+            // "elastic" moves are audit-only here — the k-schedule
+            // rides in the checkpoint's training state, not the spec.
+            Some("boundary") => {
+                if v.get("reason").as_str() == Some("negotiated") {
+                    if let (Some(j), Some(k)) = (jobs.get_mut(&id), v.get("k").as_f64()) {
+                        j.spec.config.method = crate::coordinator::Method::Tail(k as usize);
+                    }
                 }
             }
             // a submission whose queue push was rejected (429): void it
@@ -533,6 +550,7 @@ mod tests {
             last_test_loss: 1.0,
             last_test_acc: 0.5,
             spec: cfg.train_spec().to_json(),
+            elastic: None,
         };
         checkpoint::save_with_state(&ckpt, &[], Some(&state)).unwrap();
         let mk = |cfg: Config| Replayed {

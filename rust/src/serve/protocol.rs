@@ -234,7 +234,7 @@ mod tests {
         let spec = JobSpec::from_json(&v).unwrap();
         assert_eq!(spec.name, "night-ft");
         assert_eq!(spec.priority, 3);
-        assert_eq!(spec.config.method, Method::Cls2);
+        assert_eq!(spec.config.method, Method::CLS2);
         assert_eq!(spec.config.precision, Precision::Int8Star);
         assert_eq!(spec.config.epochs, 4);
 

@@ -573,7 +573,7 @@ impl JobRegistry {
     }
 
     fn record_epoch_inner(&self, id: u64, from_agent: Option<u64>, stats: EpochStats) {
-        let (ev, steps_per_epoch) = {
+        let (ev, boundary_ev, steps_per_epoch) = {
             let mut st = self.lock();
             let Some(job) = st.jobs.get_mut(&id) else { return };
             if job.state != JobState::Running {
@@ -586,6 +586,34 @@ impl JobRegistry {
             }
             job.best_test_acc = job.best_test_acc.max(stats.test_acc);
             self.events.publish_epoch(id, &stats);
+            // the elastic controller moved the ZO/BP boundary this
+            // epoch: journal the change as a first-class event (the
+            // epoch stats carry the new k too, so replay is redundant
+            // by design — the event is the audit trail)
+            let moved = match (job.epochs.last().and_then(|e| e.bp_tail), stats.bp_tail) {
+                (Some(prev), Some(now)) if prev != now => Some(now),
+                _ => None,
+            };
+            let boundary_ev = moved.and_then(|k| {
+                self.journal.is_some().then(|| {
+                    Value::obj(vec![
+                        ("event", Value::str("boundary")),
+                        ("id", Value::num(id as f64)),
+                        ("epoch", Value::num(stats.epoch as f64)),
+                        ("k", Value::num(k as f64)),
+                        ("reason", Value::str("elastic")),
+                    ])
+                })
+            });
+            if moved.is_some() {
+                crate::metrics::global()
+                    .counter(
+                        "repro_boundary_changes_total",
+                        "Mid-run ZO/BP boundary moves applied by the elastic controller",
+                        &[],
+                    )
+                    .inc();
+            }
             job.epochs.push(stats.clone());
             let steps = job.spec.config.train_n.div_ceil(job.spec.config.batch.max(1));
             st.total_epochs += 1;
@@ -612,11 +640,54 @@ impl JobRegistry {
                         ("stats", stats.to_json()),
                     ])
                 }),
+                boundary_ev,
                 steps,
             )
         };
         observe_epoch_metrics(id, steps_per_epoch, &stats);
+        self.append_event(boundary_ev);
         self.append_event(ev);
+    }
+
+    /// Pin a negotiated ZO/BP boundary into a remotely-claimed job's
+    /// stored spec: the dispatcher evaluated the paper's memory model
+    /// against the agent's budget and chose `Method::Tail(k)`. The pin
+    /// lands in the registry's copy (so failover / journal replay / the
+    /// checkpoint trailer all see the chosen k) and is journaled as a
+    /// `boundary` event with reason "negotiated". Returns the updated
+    /// spec for the assignment wire; `None` if the job is no longer
+    /// running on `agent` (the caller sends the unpinned spec).
+    pub fn pin_boundary(&self, id: u64, agent: u64, k: usize) -> Option<JobSpec> {
+        let (spec, ev) = {
+            let mut st = self.lock();
+            let job = st.jobs.get_mut(&id)?;
+            if job.state != JobState::Running || job.agent != Some(agent) {
+                return None;
+            }
+            job.spec.config.method = crate::coordinator::Method::Tail(k);
+            (
+                job.spec.clone(),
+                self.journal.is_some().then(|| {
+                    Value::obj(vec![
+                        ("event", Value::str("boundary")),
+                        ("id", Value::num(id as f64)),
+                        ("k", Value::num(k as f64)),
+                        ("reason", Value::str("negotiated")),
+                        ("agent", Value::num(agent as f64)),
+                    ])
+                }),
+            )
+        };
+        self.append_event(ev);
+        let job = id.to_string();
+        crate::metrics::global()
+            .gauge(
+                "repro_boundary",
+                "BP-tail depth (k) currently in effect per job",
+                &[("job", job.as_str())],
+            )
+            .set(k as f64);
+        Some(spec)
     }
 
     /// Running → Done, or — when the outcome says it stopped —
@@ -846,6 +917,10 @@ fn observe_epoch_metrics(id: u64, steps_per_epoch: usize, stats: &EpochStats) {
         .set(stats.train_acc as f64);
     m.gauge("repro_job_test_acc", "Last reported test accuracy per job", &lbl)
         .set(stats.test_acc as f64);
+    if let Some(k) = stats.bp_tail {
+        m.gauge("repro_boundary", "BP-tail depth (k) currently in effect per job", &lbl)
+            .set(k as f64);
+    }
     if stats.seconds > 0.0 {
         m.gauge(
             "repro_job_steps_per_sec",

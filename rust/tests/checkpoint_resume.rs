@@ -60,6 +60,7 @@ fn v2_checkpoint_roundtrip_property() {
             last_test_loss: rng.normal().abs(),
             last_test_acc: rng.uniform(),
             spec: TrainSpec::default().to_json(),
+            elastic: None,
         });
 
         let path = tmp(&format!("prop_{case}"));
@@ -210,6 +211,127 @@ fn int8_resume_matches_uninterrupted_run_exactly() {
 fn int8_star_resume_matches_uninterrupted_run_exactly() {
     // the integer-only sign path shares the same durability machinery
     assert_resume_parity("int8*", 4, 1);
+}
+
+/// An elastic-boundary config whose huge `eps` makes every eval a
+/// plateau: with patience 1 the controller is guaranteed to deepen the
+/// boundary at epochs 1 and 2, giving a deterministic mid-run
+/// k-schedule to replay.
+fn elastic_cfg(save: &str, epochs: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.set("engine", "native").unwrap();
+    cfg.set("method", "full-zo").unwrap();
+    cfg.set("boundary", "elastic:0-2").unwrap();
+    cfg.set("elastic-patience", "1").unwrap();
+    cfg.set("elastic-eps", "100").unwrap();
+    cfg.set("epochs", &epochs.to_string()).unwrap();
+    cfg.set("batch", "16").unwrap();
+    cfg.set("train_n", "64").unwrap();
+    cfg.set("test_n", "32").unwrap();
+    cfg.set("seed", "7").unwrap();
+    cfg.set("save", save).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn elastic_boundary_resume_matches_from_checkpoint_and_journal() {
+    use elasticzo::serve::{journal, JobSpec};
+    use elasticzo::util::json::{self, Value};
+
+    let epochs = 5;
+    let path_a = tmp("elastic_straight");
+    let path_b = tmp("elastic_ckpt");
+    let path_c = tmp("elastic_journal");
+
+    // lineage A: uninterrupted. The controller MUST have moved the
+    // boundary mid-run, and the per-epoch audit trail records each k.
+    let la = launch::run(&elastic_cfg(&path_a, epochs), StopFlag::default(), ProgressSink::default())
+        .unwrap();
+    let (ta, sa) = checkpoint::load_full(&path_a).unwrap();
+    let sa = sa.unwrap();
+    let ea = sa.elastic.as_ref().expect("elastic trailer in the final checkpoint");
+    assert!(!ea.events.is_empty(), "the plateau controller must have moved the boundary");
+    let ks: Vec<_> = la.result.history.epochs.iter().map(|e| e.bp_tail).collect();
+    assert!(ks.iter().any(|k| *k != ks[0]), "bp_tail must change mid-run: {ks:?}");
+
+    // lineage B: interrupted right after the FIRST boundary change
+    // (epoch 1's cadence snapshot carries the controller state)...
+    let (stop, sink) = stop_after_epoch(1);
+    let lb = launch::run(&elastic_cfg(&path_b, epochs), stop, sink).unwrap();
+    assert!(lb.result.stopped);
+    let (_, sb) = checkpoint::load_full(&path_b).unwrap();
+    let eb = sb.unwrap().elastic.expect("interrupted trailer carries controller state");
+    assert!(!eb.events.is_empty(), "interrupt must land after the first move");
+
+    // ...and resumed from the checkpoint: the k-schedule continues
+    // (including the SECOND move, post-resume) and the final params +
+    // TrainState match the straight run bitwise
+    let mut cfg_r = elastic_cfg(&path_b, epochs);
+    cfg_r.set("resume", &path_b).unwrap();
+    cfg_r.validate().unwrap();
+    launch::run(&cfg_r, StopFlag::default(), ProgressSink::default()).unwrap();
+    let (tb, sb) = checkpoint::load_full(&path_b).unwrap();
+    assert_eq!(ta, tb, "checkpoint resume: final params must be bit-identical");
+    assert_eq!(Some(sa.clone()), sb, "checkpoint resume: TrainState (incl. elastic) must match");
+
+    // lineage C: same interruption, but the serve JOURNAL does the
+    // resuming — replay folds the event stream back into a job,
+    // prepare_requeue arms resume from the cadence snapshot, and the
+    // requeued config runs to the same final state
+    let (stop, sink) = stop_after_epoch(1);
+    launch::run(&elastic_cfg(&path_c, epochs), stop, sink).unwrap();
+    let spec = JobSpec::new(elastic_cfg(&path_c, epochs));
+    let jpath = tmp("elastic_journal_log");
+    let lines = [
+        json::to_string(&Value::obj(vec![
+            ("event", Value::str("submit")),
+            ("id", Value::num(1.0)),
+            ("ts", Value::num(0.0)),
+            ("spec", spec.to_json()),
+        ])),
+        json::to_string(&Value::obj(vec![
+            ("event", Value::str("start")),
+            ("id", Value::num(1.0)),
+            ("agent", Value::num(7.0)),
+        ])),
+        // the mid-run move's audit record: folds to a no-op (the
+        // k-schedule rides in the checkpoint trailer, not the spec)
+        json::to_string(&Value::obj(vec![
+            ("event", Value::str("boundary")),
+            ("id", Value::num(1.0)),
+            ("epoch", Value::num(1.0)),
+            ("k", Value::num(1.0)),
+            ("reason", Value::str("elastic")),
+        ])),
+        json::to_string(&Value::obj(vec![
+            ("event", Value::str("requeue")),
+            ("id", Value::num(1.0)),
+        ])),
+    ];
+    std::fs::write(&jpath, lines.join("\n") + "\n").unwrap();
+    let mut jobs = journal::replay(&jpath).unwrap();
+    assert_eq!(jobs.len(), 1);
+    let job = &mut jobs[0];
+    assert_eq!(
+        job.spec.config.method,
+        elasticzo::coordinator::Method::FULL_ZO,
+        "an audit-only 'elastic' event must NOT rewrite the spec"
+    );
+    assert!(journal::prepare_requeue(job), "queued job must be schedulable");
+    assert_eq!(
+        job.spec.config.resume.as_deref(),
+        Some(path_c.as_str()),
+        "replay must arm resume from the cadence snapshot"
+    );
+    launch::run(&job.spec.config, StopFlag::default(), ProgressSink::default()).unwrap();
+    let (tc, sc) = checkpoint::load_full(&path_c).unwrap();
+    assert_eq!(ta, tc, "journal replay: final params must be bit-identical");
+    assert_eq!(Some(sa), sc, "journal replay: TrainState (incl. elastic) must match");
+
+    for p in [path_a, path_b, path_c, jpath] {
+        std::fs::remove_file(p).ok();
+    }
 }
 
 #[test]

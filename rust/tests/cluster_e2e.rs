@@ -40,6 +40,7 @@ fn spawn_agent(addr: &str, name: &str) -> AgentHandle {
         name: name.to_string(),
         poll_ms: 50,
         max_poll_failures: 40,
+        mem_budget: None,
     })
     .unwrap()
 }
@@ -118,6 +119,64 @@ fn jobs_fan_out_across_two_agents() {
 
     a1.stop();
     a2.stop();
+    shutdown(&addr, h);
+}
+
+#[test]
+fn mem_budget_negotiates_a_shallower_boundary() {
+    let (addr, h) = start_coordinator(10_000);
+    // an elastic job: the method starts at the floor, and assignment
+    // pins the deepest BP tail the assigned agent's budget affords
+    let spec = r#"{"method": "full-zo", "boundary": "elastic:0-2", "precision": "fp32",
+                   "engine": "native", "epochs": 1, "batch": 16,
+                   "train_n": 64, "test_n": 32, "seed": 7}"#;
+
+    // phase 1: only a tight-budget agent is up — 1 byte fits no
+    // candidate, so negotiation falls back to the elastic floor k=0
+    let tight = Agent::spawn(AgentOptions {
+        coordinator: addr.to_string(),
+        capacity: 1,
+        name: "tight".to_string(),
+        poll_ms: 50,
+        max_poll_failures: 40,
+        mem_budget: Some(1),
+    })
+    .unwrap();
+    let j1 = submit(&addr, spec);
+    let v1 = poll_until(&addr, j1, |v| v.get("state").as_str() == Some("done"), "tight done");
+    assert_eq!(v1.get("agent").as_usize(), Some(tight.id() as usize));
+    tight.stop();
+
+    // phase 2: an unconstrained agent gets the SAME spec pinned to the
+    // elastic ceiling k=2 at assignment
+    let free = spawn_agent(&addr, "unconstrained");
+    let j2 = submit(&addr, spec);
+    let v2 =
+        poll_until(&addr, j2, |v| v.get("state").as_str() == Some("done"), "unconstrained done");
+    assert_eq!(v2.get("agent").as_usize(), Some(free.id() as usize));
+    free.stop();
+
+    // the boundary each run actually trained under, from the per-epoch
+    // audit trail
+    let k_of = |v: &Value| {
+        v.get("history")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("bp_tail").as_usize().expect("elastic epochs record bp_tail"))
+            .max()
+            .unwrap()
+    };
+    let (k1, k2) = (k_of(&v1), k_of(&v2));
+    assert_eq!(k1, 0, "tight budget must pin the elastic floor");
+    assert_eq!(k2, 2, "unconstrained agent must get the deepest tail");
+    assert!(k1 < k2, "budgeted agent must train at a shallower boundary");
+    // the negotiated pin lands in the job's effective spec (Tail(2)
+    // serializes as its legacy alias), so failover/resume and journal
+    // replay reproduce the same boundary
+    assert_eq!(v2.get("spec").get("method").as_str(), Some("cls1"));
+    assert_eq!(v1.get("spec").get("method").as_str(), Some("full-zo"));
+
     shutdown(&addr, h);
 }
 

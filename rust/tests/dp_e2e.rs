@@ -41,6 +41,7 @@ fn spawn_agent(addr: &str, name: &str) -> AgentHandle {
         name: name.to_string(),
         poll_ms: 50,
         max_poll_failures: 40,
+        mem_budget: None,
     })
     .unwrap()
 }

@@ -190,6 +190,7 @@ fn spawn_agent(addr: &str) -> AgentHandle {
         name: "events-e2e".to_string(),
         poll_ms: 50,
         max_poll_failures: 40,
+        mem_budget: None,
     })
     .unwrap()
 }

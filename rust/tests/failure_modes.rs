@@ -88,6 +88,14 @@ fn invalid_configs_rejected_with_context() {
         vec!["--model", "resnet"],
         vec!["--method", "cls3"],
         vec!["--precision", "fp16"],
+        // the generalized boundary validates against the model's
+        // classifier stack, and elastic knobs against their range
+        vec!["--method", "bp-tail=9"],
+        vec!["--bp-tail", "4", "--engine", "native"],
+        vec!["--boundary", "rubber"],
+        vec!["--boundary", "elastic:2-1"],
+        vec!["--elastic-patience", "2"], // orphan knob: needs boundary=elastic
+        vec!["--method", "full-bp", "--boundary", "elastic:0-2", "--engine", "native"],
         // kernel / structured-perturbation knobs: every unsupported
         // combination must die at config time, not deep in a session
         vec!["--kernels", "maybe"],
@@ -102,6 +110,29 @@ fn invalid_configs_rejected_with_context() {
         let args = Args::parse(case.iter().map(|s| s.to_string()));
         assert!(Config::from_args(&args).is_err(), "should reject {case:?}");
     }
+}
+
+#[test]
+fn dp_rejects_nonzero_and_elastic_boundaries() {
+    // dp replicas replay the shared RNG stream over the WHOLE net, so
+    // anything but bp-tail=0 (and any elastic range) must die at
+    // config time with an error that names dp
+    for case in [
+        vec!["--dp", "2", "--engine", "native", "--method", "cls1"],
+        vec!["--dp", "2", "--engine", "native", "--method", "bp-tail=1"],
+        vec!["--dp", "2", "--engine", "native", "--method", "full-zo", "--boundary", "elastic:0-2"],
+    ] {
+        let args = Args::parse(case.iter().map(|s| s.to_string()));
+        let err = Config::from_args(&args).unwrap_err().to_string();
+        assert!(err.contains("dp"), "error must name dp: {err} ({case:?})");
+    }
+    // bp-tail=0 IS full-zo — dp accepts the generalized spelling
+    let args = Args::parse(
+        ["--dp", "2", "--engine", "native", "--method", "bp-tail=0"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    assert!(Config::from_args(&args).is_ok(), "bp-tail=0 is the full-zo alias");
 }
 
 #[test]

@@ -40,6 +40,7 @@ fn spawn_agent(addr: &str) -> AgentHandle {
         name: "metrics-edge".to_string(),
         poll_ms: 50,
         max_poll_failures: 40,
+        mem_budget: None,
     })
     .unwrap()
 }
@@ -125,6 +126,77 @@ fn without_le(series: &str) -> String {
     } else {
         format!("{}{{{}}}", &series[..open], kept.join(","))
     }
+}
+
+#[test]
+fn boundary_gauge_and_change_counter_cover_an_elastic_job() {
+    let (addr, h) = start_coordinator();
+    // a 1-byte budget: negotiation pins the job to the elastic FLOOR
+    // (k=0, already the spec's method, so no pin event) and leaves the
+    // plateau controller all the headroom to deepen mid-run
+    let agent = Agent::spawn(AgentOptions {
+        coordinator: addr.to_string(),
+        capacity: 1,
+        name: "tight-budget".to_string(),
+        poll_ms: 50,
+        max_poll_failures: 40,
+        mem_budget: Some(1),
+    })
+    .unwrap();
+
+    // huge eps + patience 1 ⇒ every eval is a plateau: the controller
+    // deepens at epoch 1 and again at epoch 2 (elastic:0-2)
+    let id = submit(
+        &addr,
+        r#"{"method": "full-zo", "boundary": "elastic:0-2", "elastic_patience": 1,
+            "elastic_eps": 100, "precision": "fp32", "engine": "native",
+            "epochs": 3, "batch": 16, "train_n": 64, "test_n": 32, "seed": 5}"#,
+    );
+    poll_until(&addr, id, |v| v.get("state").as_str() == Some("done"), "elastic job done");
+
+    let (_, body) = scrape(&addr);
+    let (types, series) = parse_exposition(&body);
+    assert!(types.contains_key("repro_boundary"), "missing # TYPE repro_boundary\n{body}");
+    assert!(
+        types.contains_key("repro_boundary_changes_total"),
+        "missing # TYPE repro_boundary_changes_total\n{body}"
+    );
+    let gauge = format!("repro_boundary{{job=\"{id}\"}}");
+    assert_eq!(
+        series.get(&gauge),
+        Some(&2.0),
+        "the job must end at the elastic ceiling k=2: {series:?}"
+    );
+    assert!(
+        series.get("repro_boundary_changes_total").is_some_and(|&v| v >= 2.0),
+        "two mid-run boundary moves must be counted"
+    );
+
+    // the registry's per-epoch audit trail carries the same schedule
+    let (status, v) = request(&addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(status, 200);
+    let ks: Vec<Option<usize>> = v
+        .get("history")
+        .as_arr()
+        .expect("job detail lists its epoch history")
+        .iter()
+        .map(|e| e.get("bp_tail").as_usize())
+        .collect();
+    assert_eq!(ks, vec![Some(0), Some(1), Some(2)], "per-epoch bp_tail audit trail");
+
+    // the agent listing surfaces the registered budget
+    let (status, v) = request(&addr, "GET", "/cluster/agents", None).unwrap();
+    assert_eq!(status, 200);
+    let agents = v.get("agents").as_arr().expect("agents listing").to_vec();
+    assert!(
+        agents.iter().any(|a| a.get("mem_budget").as_usize() == Some(1)),
+        "registered mem_budget must be listed: {v:?}"
+    );
+
+    agent.stop();
+    let (status, _) = request(&addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    h.join().unwrap();
 }
 
 #[test]

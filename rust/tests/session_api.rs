@@ -50,8 +50,8 @@ fn carry_pattern(r: &TrainResult) -> Vec<bool> {
 #[test]
 fn fp32_and_int8_share_epoch_and_eval_semantics() {
     // same spec shape -> same loop behaviour on both stacks
-    let rf = run_fp32(&fp32_spec(Method::Cls1, 5, 2));
-    let ri = run_int8(&int8_spec(Method::Cls1, 5, 2));
+    let rf = run_fp32(&fp32_spec(Method::CLS1, 5, 2));
+    let ri = run_int8(&int8_spec(Method::CLS1, 5, 2));
     for (label, r) in [("fp32", &rf), ("int8", &ri)] {
         assert_eq!(r.history.epochs.len(), 5, "{label}: one stats row per epoch");
         assert!(!r.stopped, "{label}");
@@ -96,10 +96,10 @@ fn stop_semantics_identical_across_precisions() {
         });
         spec.stop = stop;
     };
-    let mut sf = fp32_spec(Method::Cls2, 50, 1);
+    let mut sf = fp32_spec(Method::CLS2, 50, 1);
     arm(&mut sf);
     let rf = run_fp32(&sf);
-    let mut si = int8_spec(Method::Cls2, 50, 1);
+    let mut si = int8_spec(Method::CLS2, 50, 1);
     arm(&mut si);
     let ri = run_int8(&si);
     for (label, r) in [("fp32", &rf), ("int8", &ri)] {

@@ -60,7 +60,7 @@ fn elastic_beats_full_zo_at_equal_budget() {
     // the paper's core claim, at smoke scale, native engine
     let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, scaled(512), scaled(256), 5, 0);
     let mut acc = std::collections::HashMap::new();
-    for method in [Method::FullZo, Method::Cls1] {
+    for method in [Method::FULL_ZO, Method::CLS1] {
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 6);
         let r = trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(method, scaled(6)))
@@ -97,7 +97,7 @@ fn int8_elastic_trains_with_integer_only_gradient() {
         &mut ws,
         &train_d,
         &test_d,
-        &int8_spec(Method::Cls1, ZoGradMode::IntCE, scaled(5)),
+        &int8_spec(Method::CLS1, ZoGradMode::IntCE, scaled(5)),
     )
     .unwrap();
     // well above chance (10%)
@@ -116,7 +116,7 @@ fn finetuning_recovers_rotation_shift() {
     let rot_test = data::rotate::rotate_dataset(&test_d, 45.0);
     let (_, acc_before) = trainer::evaluate(&mut eng, &params, &rot_test, 16).unwrap();
 
-    let r = trainer::train(&mut eng, &mut params, &rot_train, &rot_test, &spec(Method::Cls1, scaled(6)))
+    let r = trainer::train(&mut eng, &mut params, &rot_train, &rot_test, &spec(Method::CLS1, scaled(6)))
         .unwrap();
     let acc_after = r.history.best_test_acc();
     assert!(
@@ -135,7 +135,7 @@ fn deterministic_replay_same_seed() {
     let run = || {
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 16);
-        let h = trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(Method::Cls2, 2))
+        let h = trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(Method::CLS2, 2))
             .unwrap()
             .history;
         (h, params)
@@ -156,6 +156,50 @@ fn deterministic_replay_same_seed() {
         let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
         assert_eq!(xb, yb, "tensor {i}");
     }
+}
+
+#[test]
+fn boundary_sweep_legacy_tokens_match_bp_tail_spellings() {
+    // `Method::Tail(k)` generalizes the paper's presets; every legacy
+    // token must stay a bitwise-equivalent ALIAS of its `bp-tail=<k>`
+    // spelling — same per-epoch metrics bit patterns, same final
+    // parameters — through the full CLI → Config → trainer pipeline
+    let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 192, 96, 21, 0);
+    let run = |token: &str| {
+        let args = Args::parse(
+            ["--method", token, "--engine", "native"].iter().map(|s| s.to_string()),
+        );
+        let cfg = Config::from_args(&args).unwrap();
+        let mut eng = NativeEngine::new(Model::LeNet);
+        let mut params = ParamSet::init(Model::LeNet, 22);
+        let h = trainer::train(&mut eng, &mut params, &train_d, &test_d, &spec(cfg.method, 2))
+            .unwrap()
+            .history;
+        (h, params)
+    };
+    for (legacy, tail) in [("full-zo", "bp-tail=0"), ("cls2", "bp-tail=1"), ("cls1", "bp-tail=2")]
+    {
+        let (h1, p1) = run(legacy);
+        let (h2, p2) = run(tail);
+        assert_eq!(h1.epochs.len(), h2.epochs.len());
+        for (a, b) in h1.epochs.iter().zip(&h2.epochs) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{legacy} vs {tail}");
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{legacy} vs {tail}");
+            assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(), "{legacy} vs {tail}");
+        }
+        for (i, (x, y)) in p1.data.iter().zip(&p2.data).enumerate() {
+            let xb: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb, "{legacy} vs {tail} tensor {i}");
+        }
+        // the preset serializes back to its legacy token byte-for-byte
+        // (checkpoint spec identity + wire compatibility)
+        assert_eq!(Method::parse(tail).unwrap().token(), legacy);
+    }
+    // full-bp has no tail spelling, and bp-tail=3 is a genuinely new
+    // point on the k-axis, not an alias of any preset
+    assert_eq!(Method::parse("full-bp").unwrap(), Method::FullBp);
+    assert_eq!(Method::parse("bp-tail=3").unwrap().token(), "bp-tail=3");
 }
 
 #[test]
@@ -183,7 +227,7 @@ fn config_cli_pipeline() {
             .map(|s| s.to_string()),
     );
     let cfg = Config::from_args(&args).unwrap();
-    assert_eq!(cfg.method, Method::Cls2);
+    assert_eq!(cfg.method, Method::CLS2);
     assert_eq!(cfg.precision.grad_mode(), ZoGradMode::IntCE);
     assert_eq!(cfg.batch, 8);
     // the CLI pipeline lands on the same unified spec the sessions take

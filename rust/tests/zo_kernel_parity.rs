@@ -142,7 +142,7 @@ fn assert_params_bits_eq(a: &ParamSet, b: &ParamSet) {
 fn fp32_e2e_trajectory_identical_kernels_on_off() {
     force_threads();
     let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 96, 48, 5, 0);
-    for method in [Method::FullZo, Method::Cls1] {
+    for method in [Method::FULL_ZO, Method::CLS1] {
         let run = |kernels_on: bool| {
             let mut eng = NativeEngine::new(Model::LeNet);
             let mut params = ParamSet::init(Model::LeNet, 6);
@@ -172,7 +172,7 @@ fn int8_e2e_trajectory_identical_kernels_on_off() {
             let spec = TrainSpec {
                 precision: PrecisionSpec::int8(grad_mode),
                 seed: 11,
-                ..fp32_spec(Method::Cls1, kernels_on)
+                ..fp32_spec(Method::CLS1, kernels_on)
             };
             let mut ws = lenet8::init_params(10, 32);
             let r = int8_trainer::train_int8(&mut ws, &train_d, &test_d, &spec).unwrap();
@@ -190,7 +190,7 @@ fn dp_n2_trajectory_identical_kernels_on_off() {
     force_threads();
     let (train_d, test_d) = data::generate(DatasetKind::SynthMnist, 96, 48, 9, 0);
     let run = |kernels_on: bool| {
-        let spec = fp32_spec(Method::FullZo, kernels_on);
+        let spec = fp32_spec(Method::FULL_ZO, kernels_on);
         let dp = DpSpec { replicas: 2, aggregate: DpAggregate::Mean, min_replicas: 1 };
         let world = DpWorld::new(Model::LeNet, spec.clone(), dp, train_d.len()).unwrap();
         let mut sess = DpLocalSession::new(world);
@@ -211,7 +211,7 @@ fn sparse_perturbation_diverges_but_stays_deterministic() {
         let spec = TrainSpec {
             sparse_block: block,
             sparse_keep: if block > 0 { 0.5 } else { 1.0 },
-            ..fp32_spec(Method::Cls1, true)
+            ..fp32_spec(Method::CLS1, true)
         };
         let mut eng = NativeEngine::new(Model::LeNet);
         let mut params = ParamSet::init(Model::LeNet, 6);
