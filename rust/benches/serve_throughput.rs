@@ -1,11 +1,16 @@
 //! Job-server throughput: jobs/sec for a batch of tiny training jobs at
 //! worker-pool sizes 1 / 2 / 4, over the real HTTP + queue + registry
-//! stack. The headline metric is the 4-worker : 1-worker speedup —
-//! >1.5x demonstrates that `repro serve` genuinely overlaps jobs.
+//! stack — the 4-worker : 1-worker speedup shows `repro serve`
+//! genuinely overlaps jobs. Plus the connection plane itself:
+//! requests/sec over one keep-alive socket vs one connection per
+//! request, and SSE fan-out (hundreds of concurrent firehose streams,
+//! where the pre-reactor server hard-refused anything past 64).
 
 use elasticzo::serve::{request, ServeOptions, Server};
 use elasticzo::util::bench::Bencher;
 use elasticzo::util::json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 const JOBS: usize = 12;
@@ -57,6 +62,91 @@ fn run_fleet(workers: usize) -> f64 {
     JOBS as f64 / secs
 }
 
+/// Requests/sec for `GET /healthz`: `keep_alive` reuses one socket for
+/// every request; otherwise each request pays connect + teardown (the
+/// old thread-per-connection shape).
+fn run_rps(keep_alive: bool, reqs: usize) -> f64 {
+    let server = Server::bind(&ServeOptions { port: 0, workers: 1, queue_cap: 4, ..Default::default() })
+        .expect("bind server");
+    let addr = server.local_addr().expect("addr");
+    let handle = std::thread::spawn(move || server.run().expect("server run"));
+    let find = |h: &[u8], n: &[u8]| h.windows(n.len()).position(|w| w == n);
+    let t0 = Instant::now();
+    if keep_alive {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_nodelay(true).expect("nodelay");
+        let mut buf: Vec<u8> = Vec::new();
+        let mut tmp = [0u8; 4096];
+        for _ in 0..reqs {
+            s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").expect("write");
+            loop {
+                if let Some(he) = find(&buf, b"\r\n\r\n") {
+                    let head = std::str::from_utf8(&buf[..he]).expect("utf8 head");
+                    let clen: usize = head
+                        .lines()
+                        .find_map(|l| {
+                            let (k, v) = l.split_once(':')?;
+                            k.trim()
+                                .eq_ignore_ascii_case("content-length")
+                                .then(|| v.trim().parse().ok())?
+                        })
+                        .unwrap_or(0);
+                    if buf.len() >= he + 4 + clen {
+                        buf.drain(..he + 4 + clen);
+                        break;
+                    }
+                }
+                let n = s.read(&mut tmp).expect("read");
+                assert!(n > 0, "server closed keep-alive connection");
+                buf.extend_from_slice(&tmp[..n]);
+            }
+        }
+    } else {
+        for _ in 0..reqs {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            s.write_all(b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").expect("write");
+            let mut raw = Vec::new();
+            s.read_to_end(&mut raw).expect("read");
+            assert!(!raw.is_empty(), "empty response");
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    request(&addr.to_string(), "POST", "/shutdown", None).expect("shutdown");
+    handle.join().expect("server thread");
+    reqs as f64 / secs
+}
+
+/// Streams/sec to open `streams` concurrent firehose subscribers, each
+/// confirmed live by its SSE response header.
+fn run_fanout(streams: usize) -> f64 {
+    let server = Server::bind(&ServeOptions { port: 0, workers: 1, queue_cap: 4, ..Default::default() })
+        .expect("bind server");
+    let addr = server.local_addr().expect("addr");
+    let handle = std::thread::spawn(move || server.run().expect("server run"));
+    let t0 = Instant::now();
+    let mut conns = Vec::with_capacity(streams);
+    for _ in 0..streams {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+        s.write_all(b"GET /events HTTP/1.1\r\nConnection: close\r\n\r\n").expect("write");
+        conns.push(s);
+    }
+    for s in &mut conns {
+        let mut got: Vec<u8> = Vec::new();
+        let mut tmp = [0u8; 1024];
+        while !got.windows(4).any(|w| w == b"\r\n\r\n") {
+            let n = s.read(&mut tmp).expect("read header");
+            assert!(n > 0, "stream closed before the SSE header");
+            got.extend_from_slice(&tmp[..n]);
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    drop(conns);
+    request(&addr.to_string(), "POST", "/shutdown", None).expect("shutdown");
+    handle.join().expect("server thread");
+    streams as f64 / secs
+}
+
 fn main() {
     let b = Bencher::new();
     let mut rates = Vec::new();
@@ -69,4 +159,15 @@ fn main() {
     if let (Some(r1), Some(r4)) = (rate_of(1), rate_of(4)) {
         b.report_metric("serve_throughput 4-worker : 1-worker speedup", r4 / r1, "x");
     }
+
+    let reqs = 500;
+    let rps_ka = run_rps(true, reqs);
+    let rps_close = run_rps(false, reqs);
+    b.report_metric("serve_rps/keepalive", rps_ka, "req/sec");
+    b.report_metric("serve_rps/close", rps_close, "req/sec");
+    b.report_metric("serve_rps keep-alive : close speedup", rps_ka / rps_close, "x");
+
+    let streams = 256;
+    let fanout = run_fanout(streams);
+    b.report_metric(&format!("serve_rps/sse_fanout_{streams}"), fanout, "streams/sec");
 }

@@ -29,6 +29,8 @@
 //!
 //! repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]
 //!              [--cluster] [--lease-ms L] [--events-buffer N]
+//!              [--max-sse N] [--reactor-threads N] [--http-idle-ms T]
+//!              [--drain-grace-ms T]
 //!              # multi-job training server (HTTP/1.1 + JSON); --journal
 //!              # persists the job table across restarts (JSONL replay);
 //!              # --cluster opens the /cluster/* control plane so remote
@@ -128,6 +130,8 @@ fn print_help() {
          \x20 repro inspect\n\
          \n  repro serve  [--port P] [--workers N] [--queue-cap C] [--journal F]\n\
          \x20              [--cluster] [--lease-ms L] [--events-buffer N]\n\
+         \x20              [--max-sse N] [--reactor-threads N] [--http-idle-ms T]\n\
+         \x20              [--drain-grace-ms T]\n\
          \x20              multi-job training server; HTTP/1.1 + JSON on 127.0.0.1:\n\
          \x20              GET /healthz | GET /stats | GET /jobs | POST /jobs\n\
          \x20              GET /jobs/<id> | POST /jobs/<id>/cancel | POST /shutdown\n\
@@ -597,6 +601,123 @@ fn cmd_bench(args: &Args) -> Result<()> {
         serve_rates.push((workers, rate));
     }
 
+    // --- serve rps: raw request rate through the reactor, keep-alive
+    // (one socket, pipeline of sequential requests) vs one connection
+    // per request (the old thread-per-connection shape) ---
+    let run_rps = |keep_alive: bool| -> Result<f64> {
+        use std::io::{Read, Write};
+        use std::time::Instant;
+        let server = serve::Server::bind(&serve::ServeOptions {
+            port: 0,
+            workers: 1,
+            queue_cap: 4,
+            ..Default::default()
+        })?;
+        let addr = server.local_addr()?;
+        let handle = std::thread::spawn(move || server.run());
+        const REQS: usize = 500;
+        let find = |h: &[u8], n: &[u8]| h.windows(n.len()).position(|w| w == n);
+        let t0 = Instant::now();
+        if keep_alive {
+            let mut s = std::net::TcpStream::connect(addr)?;
+            s.set_nodelay(true)?;
+            let mut buf: Vec<u8> = Vec::new();
+            let mut tmp = [0u8; 4096];
+            for _ in 0..REQS {
+                s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n")?;
+                // read exactly one content-length-framed response
+                loop {
+                    if let Some(he) = find(&buf, b"\r\n\r\n") {
+                        let head = std::str::from_utf8(&buf[..he])?;
+                        let clen: usize = head
+                            .lines()
+                            .find_map(|l| {
+                                let (k, v) = l.split_once(':')?;
+                                k.trim()
+                                    .eq_ignore_ascii_case("content-length")
+                                    .then(|| v.trim().parse().ok())?
+                            })
+                            .unwrap_or(0);
+                        if buf.len() >= he + 4 + clen {
+                            buf.drain(..he + 4 + clen);
+                            break;
+                        }
+                    }
+                    let n = s.read(&mut tmp)?;
+                    anyhow::ensure!(n > 0, "server closed keep-alive connection");
+                    buf.extend_from_slice(&tmp[..n]);
+                }
+            }
+        } else {
+            for _ in 0..REQS {
+                let mut s = std::net::TcpStream::connect(addr)?;
+                s.write_all(b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n")?;
+                let mut raw = Vec::new();
+                s.read_to_end(&mut raw)?;
+                anyhow::ensure!(!raw.is_empty(), "empty response");
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        serve::request(&addr.to_string(), "POST", "/shutdown", None)?;
+        handle.join().expect("server thread panicked")?;
+        Ok(REQS as f64 / secs)
+    };
+    let rps_keepalive = run_rps(true)?;
+    let rps_close = run_rps(false)?;
+    b.report_metric("serve_rps/keepalive", rps_keepalive, "req/sec");
+    b.report_metric("serve_rps/close", rps_close, "req/sec");
+    b.report_metric(
+        "serve_rps/keepalive_speedup",
+        if rps_close > 0.0 { rps_keepalive / rps_close } else { 0.0 },
+        "x",
+    );
+
+    // --- SSE fan-out: hundreds of concurrent firehose streams (the
+    // pre-reactor server refused anything past 64) ---
+    let run_fanout = |streams: usize| -> Result<f64> {
+        use std::io::{Read, Write};
+        use std::time::{Duration, Instant};
+        let server = serve::Server::bind(&serve::ServeOptions {
+            port: 0,
+            workers: 1,
+            queue_cap: 4,
+            ..Default::default()
+        })?;
+        let addr = server.local_addr()?;
+        let handle = std::thread::spawn(move || server.run());
+        let t0 = Instant::now();
+        let mut conns = Vec::with_capacity(streams);
+        for _ in 0..streams {
+            let mut s = std::net::TcpStream::connect(addr)?;
+            s.set_read_timeout(Some(Duration::from_secs(10)))?;
+            s.write_all(b"GET /events HTTP/1.1\r\nConnection: close\r\n\r\n")?;
+            conns.push(s);
+        }
+        // every stream must answer with the SSE header: each is a live
+        // reactor-registered subscriber, not just an accepted socket
+        for s in &mut conns {
+            let mut got: Vec<u8> = Vec::new();
+            let mut tmp = [0u8; 1024];
+            while !got.windows(4).any(|w| w == b"\r\n\r\n") {
+                let n = s.read(&mut tmp)?;
+                anyhow::ensure!(n > 0, "stream closed before the SSE header");
+                got.extend_from_slice(&tmp[..n]);
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        drop(conns);
+        serve::request(&addr.to_string(), "POST", "/shutdown", None)?;
+        handle.join().expect("server thread panicked")?;
+        Ok(streams as f64 / secs)
+    };
+    let fanout_streams = 256usize;
+    let fanout_rate = run_fanout(fanout_streams)?;
+    b.report_metric(
+        &format!("serve_rps/sse_fanout_{fanout_streams}"),
+        fanout_rate,
+        "streams/sec",
+    );
+
     // --- dp scaling: ONE full-zo job split across N replica agents ---
     // A pure coordinator (workers 0) plus N in-process agents measures
     // committed steps/sec of the seed-compressed /cluster/dp wire as
@@ -732,6 +853,25 @@ fn cmd_bench(args: &Args) -> Result<()> {
             ),
         ),
         (
+            "serve_rps",
+            Value::obj(vec![
+                ("keepalive", Value::num(rps_keepalive)),
+                ("close", Value::num(rps_close)),
+                (
+                    "keepalive_speedup",
+                    Value::num(if rps_close > 0.0 { rps_keepalive / rps_close } else { 0.0 }),
+                ),
+            ]),
+        ),
+        (
+            "sse_fanout",
+            Value::Obj(
+                [(format!("streams_{fanout_streams}_per_sec"), Value::num(fanout_rate))]
+                    .into_iter()
+                    .collect(),
+            ),
+        ),
+        (
             "dp_scaling",
             Value::Obj(
                 dp_rates
@@ -854,10 +994,16 @@ fn compare_bench(
             Some(old_v) if *old_v != 0.0 => {
                 let pct = (new_v - old_v) / old_v * 100.0;
                 println!("{name:<56} {old_v:>12.6} -> {new_v:>12.6}  {pct:>+7.1}%");
-                let gated = (name.starts_with("e2e_step/") || name.starts_with("zo_ops/"))
+                // time metrics regress when they go up; rate metrics
+                // (jobs/requests/streams per second) when they go down
+                let gated_time = (name.starts_with("e2e_step/") || name.starts_with("zo_ops/"))
                     && name.ends_with("/mean_s");
-                if gated && !matches!(&worst, Some((_, w)) if pct <= *w) {
-                    worst = Some((name.clone(), pct));
+                let gated_rate = name.starts_with("serve_throughput_jobs_per_sec/")
+                    || name.starts_with("serve_rps/")
+                    || name.starts_with("sse_fanout/");
+                let regress = if gated_time { pct } else { -pct };
+                if (gated_time || gated_rate) && !matches!(&worst, Some((_, w)) if regress <= *w) {
+                    worst = Some((name.clone(), regress));
                 }
             }
             Some(_) => {}
@@ -872,7 +1018,7 @@ fn compare_bench(
         println!("worst gated delta: {name} {pct:+.1}%");
         anyhow::ensure!(
             pct <= max_regress_pct,
-            "{name} slowed down {pct:+.1}%, above the --max-regress {max_regress_pct}% gate"
+            "{name} regressed {pct:+.1}%, above the --max-regress {max_regress_pct}% gate"
         );
     }
     Ok(())
@@ -898,6 +1044,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         elasticzo::serve::events::DEFAULT_SUBSCRIBER_CAP,
     )?;
     anyhow::ensure!(events_buffer >= 1, "--events-buffer must be >= 1");
+    let max_sse = args.get_usize("max-sse", serve::http::DEFAULT_MAX_SSE)?;
+    anyhow::ensure!(max_sse >= 1, "--max-sse must be >= 1");
+    let reactor_threads = args.get_usize("reactor-threads", 0)?;
+    let http_idle_ms = args.get_u64("http-idle-ms", 10_000)?;
+    anyhow::ensure!(http_idle_ms >= 100, "--http-idle-ms must be >= 100");
+    let drain_grace_ms = args.get_u64("drain-grace-ms", 5_000)?;
     let opts = serve::ServeOptions {
         port: port as u16,
         workers: args.get_usize("workers", 2)?,
@@ -905,13 +1057,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         journal: args.get("journal").map(str::to_string),
         cluster,
         events_buffer,
+        max_sse,
+        reactor_threads,
+        http_idle: std::time::Duration::from_millis(http_idle_ms),
+        drain_grace: std::time::Duration::from_millis(drain_grace_ms),
+        ..Default::default()
     };
     let server = serve::Server::bind(&opts)?;
     println!(
-        "serve: listening on http://{} ({} workers, queue capacity {})",
+        "serve: listening on http://{} ({} workers, queue capacity {}, \
+         keep-alive reactor, {} SSE streams max)",
         server.local_addr()?,
         opts.workers,
-        opts.queue_cap
+        opts.queue_cap,
+        opts.max_sse
     );
     if let Some(j) = &opts.journal {
         println!("journal: {j} (job table replayed on restart; interrupted jobs requeue)");

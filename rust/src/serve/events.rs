@@ -67,6 +67,11 @@ pub struct Event {
     /// SSE event name: `"epoch"` or `"state"`.
     pub kind: &'static str,
     pub data: Value,
+    /// The complete live SSE frame (`id:` + `event:` + `data:` lines
+    /// and the blank-line terminator), rendered once at publish time:
+    /// fanning an event out to N stream subscribers is N buffer
+    /// copies, zero serializations and zero allocations.
+    pub frame: String,
 }
 
 impl Event {
@@ -92,12 +97,20 @@ pub enum Poll {
     Closed,
 }
 
+/// Callback a reactor registers to learn that a subscriber has
+/// something to poll (called OUTSIDE the bus lock; must not block).
+pub type Waker = Arc<dyn Fn() + Send + Sync>;
+
 struct SubState {
     /// `Some(id)` = only this job's events; `None` = firehose.
     job: Option<u64>,
     buf: VecDeque<Arc<Event>>,
     cap: usize,
     lagged: bool,
+    /// Poked (outside the lock) whenever this subscriber's buffer
+    /// gains an event or the bus closes — how the serve reactor learns
+    /// to `try_recv` without a blocking thread per stream.
+    waker: Option<Waker>,
 }
 
 struct BusInner {
@@ -162,6 +175,7 @@ impl EventBus {
     }
 
     fn publish(&self, job: u64, kind: &'static str, extra: Vec<(&str, Value)>) {
+        let mut wakers: Vec<Waker> = Vec::new();
         {
             let mut st = self.lock();
             if st.closed {
@@ -175,7 +189,15 @@ impl EventBus {
                 ("job", Value::num(job as f64)),
             ];
             pairs.extend(extra);
-            let ev = Arc::new(Event { seq, job, kind, data: Value::obj(pairs) });
+            let data = Value::obj(pairs);
+            // render the wire frame ONCE here; every stream subscriber
+            // copies these bytes instead of re-serializing the Value
+            use std::fmt::Write as _;
+            let mut frame = String::with_capacity(96);
+            let _ = write!(frame, "id: {seq}\nevent: {kind}\ndata: ");
+            crate::util::json::write_compact(&data, &mut frame);
+            frame.push_str("\n\n");
+            let ev = Arc::new(Event { seq, job, kind, data, frame });
             st.ring.push_back(ev.clone());
             while st.ring.len() > RING_CAP {
                 st.ring.pop_front();
@@ -193,8 +215,19 @@ impl EventBus {
                     shed += 1;
                 }
                 sub.buf.push_back(ev.clone());
+                if let Some(w) = &sub.waker {
+                    // one poke per reactor is enough: dedupe by pointer
+                    if !wakers.iter().any(|x| Arc::ptr_eq(x, w)) {
+                        wakers.push(w.clone());
+                    }
+                }
             }
             st.shed_total += shed;
+        }
+        // wakers and condvar both fire AFTER the lock drops: a reactor
+        // woken here can immediately try_recv without contention
+        for w in &wakers {
+            w();
         }
         self.cv.notify_all();
     }
@@ -225,7 +258,13 @@ impl EventBus {
             st.next_sub += 1;
             st.subs.insert(
                 id,
-                SubState { job, buf: VecDeque::new(), cap: cap.max(1), lagged: false },
+                SubState {
+                    job,
+                    buf: VecDeque::new(),
+                    cap: cap.max(1),
+                    lagged: false,
+                    waker: None,
+                },
             );
             id
         };
@@ -268,7 +307,13 @@ impl EventBus {
             st.next_sub += 1;
             st.subs.insert(
                 id,
-                SubState { job: None, buf: VecDeque::new(), cap: cap.max(1), lagged: false },
+                SubState {
+                    job: None,
+                    buf: VecDeque::new(),
+                    cap: cap.max(1),
+                    lagged: false,
+                    waker: None,
+                },
             );
             (id, backlog, gap, resume_seq)
         };
@@ -277,9 +322,23 @@ impl EventBus {
 
     /// Server shutdown: every subscriber's next poll (after its buffer
     /// drains) yields [`Poll::Closed`] and further publishes are
-    /// dropped.
+    /// dropped. Registered wakers fire so reactors notice immediately.
     pub fn close(&self) {
-        self.lock().closed = true;
+        let mut wakers: Vec<Waker> = Vec::new();
+        {
+            let mut st = self.lock();
+            st.closed = true;
+            for sub in st.subs.values() {
+                if let Some(w) = &sub.waker {
+                    if !wakers.iter().any(|x| Arc::ptr_eq(x, w)) {
+                        wakers.push(w.clone());
+                    }
+                }
+            }
+        }
+        for w in &wakers {
+            w();
+        }
         self.cv.notify_all();
     }
 }
@@ -331,6 +390,44 @@ impl Subscriber {
                 .wait_timeout(st, deadline - now)
                 .unwrap_or_else(PoisonError::into_inner);
             st = guard;
+        }
+    }
+
+    /// Non-blocking [`Subscriber::recv`]: the next buffered delivery,
+    /// or [`Poll::Timeout`] immediately when nothing is pending. The
+    /// serve reactor drives every SSE stream with this (one thread,
+    /// thousands of subscribers) after a [`Subscriber::set_waker`]
+    /// poke.
+    pub fn try_recv(&self) -> Poll {
+        let mut st = self.bus.lock();
+        let inner: &mut BusInner = &mut st;
+        let Some(sub) = inner.subs.get_mut(&self.id) else {
+            return Poll::Closed;
+        };
+        if sub.lagged {
+            sub.lagged = false;
+            let next_seq = match sub.buf.front() {
+                Some(e) => e.seq,
+                None => inner.next_seq,
+            };
+            return Poll::Lagged { next_seq };
+        }
+        if let Some(e) = sub.buf.pop_front() {
+            return Poll::Event(e);
+        }
+        if inner.closed {
+            return Poll::Closed;
+        }
+        Poll::Timeout
+    }
+
+    /// Register (or replace) the callback poked — outside the bus lock
+    /// — whenever this subscription gains a delivery or the bus
+    /// closes. Several subscribers may share one waker; the publisher
+    /// dedupes by pointer so a reactor is poked once per event.
+    pub fn set_waker(&self, waker: Waker) {
+        if let Some(sub) = self.bus.lock().subs.get_mut(&self.id) {
+            sub.waker = Some(waker);
         }
     }
 }
@@ -705,6 +802,33 @@ mod tests {
             Some(WatchFrame::Lagged { next_seq }) => assert_eq!(next_seq, 42),
             other => panic!("bad classification: {other:?}"),
         }
+    }
+
+    #[test]
+    fn try_recv_and_wakers_drive_a_pollless_consumer() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let bus = Arc::new(EventBus::new());
+        let sub = bus.subscribe(None, 4);
+        assert!(matches!(sub.try_recv(), Poll::Timeout), "empty bus: immediate Timeout");
+        let pokes = Arc::new(AtomicUsize::new(0));
+        let p = pokes.clone();
+        sub.set_waker(Arc::new(move || {
+            p.fetch_add(1, Ordering::SeqCst);
+        }));
+        bus.publish_epoch(1, &stats(0));
+        assert_eq!(pokes.load(Ordering::SeqCst), 1, "publish pokes the waker");
+        let e = expect_event(sub.try_recv());
+        // the pre-rendered frame is the full wire format, and its data
+        // line round-trips to exactly the event's Value
+        assert!(e.frame.starts_with("id: 1\nevent: epoch\ndata: {"), "{}", e.frame);
+        assert!(e.frame.ends_with("\n\n"));
+        let data_line =
+            e.frame.lines().nth(2).and_then(|l| l.strip_prefix("data: ")).unwrap();
+        assert_eq!(crate::util::json::parse(data_line).unwrap(), e.data);
+        assert!(matches!(sub.try_recv(), Poll::Timeout));
+        bus.close();
+        assert_eq!(pokes.load(Ordering::SeqCst), 2, "close pokes the waker too");
+        assert!(matches!(sub.try_recv(), Poll::Closed));
     }
 
     #[test]

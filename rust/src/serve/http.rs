@@ -1,10 +1,11 @@
-//! Minimal HTTP/1.1 front end on `std::net::TcpListener` — content-length
-//! framing only, one request per connection (`Connection: close`), JSON
-//! bodies everywhere. The acceptor hands each connection to a
-//! short-lived handler thread, so a slow or hung client can never
-//! block `/healthz`, `/stats` or submissions behind its socket
-//! timeout; training runs on the worker pool (and, with `--cluster`,
-//! on remote agents).
+//! Minimal HTTP/1.1 front end on `std::net::TcpListener` —
+//! content-length framing only (no chunked encoding), JSON bodies
+//! everywhere, keep-alive by default. The acceptor hands each
+//! connection to the nonblocking reactor pool ([`super::reactor`]):
+//! a few `poll(2)` event loops own all sockets, so a slow or hung
+//! client holds a buffer — never a thread — and can't block
+//! `/healthz`, `/stats` or submissions; training runs on the worker
+//! pool (and, with `--cluster`, on remote agents).
 //!
 //! Routes:
 //!
@@ -25,8 +26,11 @@
 //! streaming responses: `Content-Type: text/event-stream`, one SSE
 //! frame per bus event, a `: keep-alive` comment each second of
 //! idleness, subscriber teardown on client disconnect (write failure)
-//! and on `/shutdown` (bus close). Everything else stays one-shot
-//! JSON. Wire format details live in `rust/docs/SERVE_API.md`.
+//! and on `/shutdown` (bus close). Each stream is a reactor-
+//! registered writer multiplexed off the event bus, so open streams
+//! are bounded by [`ServeOptions::max_sse`] (default 4096), not by
+//! threads. Everything else stays one-shot JSON. Wire format details
+//! live in `rust/docs/SERVE_API.md`.
 //!
 //! With `ServeOptions::cluster` set, the `/cluster/*` control plane is
 //! live as well (see [`super::dispatch`]):
@@ -46,9 +50,9 @@
 //! | POST /cluster/dp/{j}/leave               | dp replica leaves the run   |
 
 use super::dispatch::{ClusterOptions, Dispatcher};
-use super::events::{Poll, Subscriber, DEFAULT_SUBSCRIBER_CAP};
+use super::events::DEFAULT_SUBSCRIBER_CAP;
 use super::journal::{self, Journal};
-use super::protocol::{error_json, JobSpec, JobState, DEFAULT_PORT};
+use super::protocol::{error_json, JobSpec, DEFAULT_PORT};
 use super::queue::{JobQueue, PushError};
 use super::registry::{CancelOutcome, JobRegistry};
 use super::worker::WorkerPool;
@@ -58,7 +62,7 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
@@ -87,6 +91,29 @@ pub struct ServeOptions {
     /// `lagged` resync marker — the trainers never wait on a slow
     /// watcher.
     pub events_buffer: usize,
+    /// Concurrent SSE streams the server will hold open; each pins a
+    /// bus subscriber and a write buffer (not a thread), so the cap
+    /// is generous but still bounds a runaway stream-opening client.
+    /// Requests past it get a 503 (`--max-sse`).
+    pub max_sse: usize,
+    /// Reactor event-loop threads; 0 (the default) sizes
+    /// automatically to about half the available cores, clamped to
+    /// [1, 4] (`--reactor-threads`).
+    pub reactor_threads: usize,
+    /// Reap a connection with no read/write progress for this long —
+    /// the keep-alive idle timeout, and the old per-socket timeout's
+    /// successor. Healthy SSE streams are exempt (their keep-alive
+    /// comments count as progress).
+    pub http_idle: Duration,
+    /// On shutdown the reactors flush what each client will take for
+    /// at most this long before cutting stalled connections loose —
+    /// a stalled SSE reader cannot delay the drain past it.
+    pub drain_grace: Duration,
+    /// Staged-but-unsent bytes past which an SSE connection stops
+    /// pulling bus events: the slow reader then sheds at the bus
+    /// (getting a `lagged` marker) instead of buffering without
+    /// bound.
+    pub sse_highwater: usize,
 }
 
 impl Default for ServeOptions {
@@ -98,25 +125,40 @@ impl Default for ServeOptions {
             journal: None,
             cluster: None,
             events_buffer: DEFAULT_SUBSCRIBER_CAP,
+            max_sse: DEFAULT_MAX_SSE,
+            reactor_threads: 0,
+            http_idle: Duration::from_secs(10),
+            drain_grace: Duration::from_secs(5),
+            sse_highwater: 256 * 1024,
         }
     }
 }
 
+/// Default [`ServeOptions::max_sse`]: thousands, not 64 — streams no
+/// longer pin a thread each.
+pub const DEFAULT_MAX_SSE: usize = 4096;
+
 /// Everything a connection handler needs, shared across the acceptor
-/// and the per-connection threads.
-struct Gateway {
+/// and the reactor threads (see [`super::reactor`]).
+pub(crate) struct Gateway {
     addr: SocketAddr,
     queue: Arc<JobQueue>,
-    registry: Arc<JobRegistry>,
+    pub(crate) registry: Arc<JobRegistry>,
     journal: Option<Arc<Journal>>,
     dispatcher: Option<Arc<Dispatcher>>,
     workers: usize,
-    events_buffer: usize,
-    shutdown: AtomicBool,
-    active: AtomicUsize,
-    /// Open SSE streams; each pins a connection thread for its whole
-    /// lifetime, so they are bounded (see [`MAX_SSE_STREAMS`]).
-    sse_active: AtomicUsize,
+    pub(crate) events_buffer: usize,
+    pub(crate) max_sse: usize,
+    pub(crate) reactor_threads: usize,
+    pub(crate) http_idle: Duration,
+    pub(crate) drain_grace: Duration,
+    pub(crate) sse_highwater: usize,
+    pub(crate) shutdown: AtomicBool,
+    /// Connections currently owned by the reactors (scrape-time
+    /// gauge `repro_http_open_connections`).
+    pub(crate) open_conns: AtomicUsize,
+    /// Open SSE streams; bounded by `max_sse`.
+    pub(crate) sse_active: AtomicUsize,
 }
 
 /// A bound job server: acceptor + queue + registry + worker pool,
@@ -187,8 +229,13 @@ impl Server {
             dispatcher,
             workers: opts.workers,
             events_buffer: opts.events_buffer.max(1),
+            max_sse: opts.max_sse.max(1),
+            reactor_threads: opts.reactor_threads,
+            http_idle: opts.http_idle,
+            drain_grace: opts.drain_grace,
+            sse_highwater: opts.sse_highwater.max(1),
             shutdown: AtomicBool::new(false),
-            active: AtomicUsize::new(0),
+            open_conns: AtomicUsize::new(0),
             sse_active: AtomicUsize::new(0),
         });
         Ok(Server { listener, shared, pool })
@@ -198,45 +245,33 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Accept loop; each connection is served on its own short-lived
-    /// thread. Returns after a `POST /shutdown`: the handler closes the
-    /// queue first (so racing submissions get a truthful 503), signals
-    /// the acceptor through a flag + self-connect wake-up, in-flight
-    /// handlers are drained, running jobs are stop-flagged (completing
-    /// as Interrupted, so the next journal replay requeues them),
-    /// remote agents' jobs are interrupted coordinator-side, every
-    /// worker joins, and the journal — when configured — is compacted
-    /// with the final job states.
+    /// Accept loop; every connection is handed to the nonblocking
+    /// reactor pool, which owns it from then on. Returns after a
+    /// `POST /shutdown`: the handler closes the queue first (so
+    /// racing submissions get a truthful 503), signals the acceptor
+    /// through a flag + self-connect wake-up, the reactors drain —
+    /// flushing what each client will take, bounded by
+    /// `ServeOptions::drain_grace` — running jobs are stop-flagged
+    /// (completing as Interrupted, so the next journal replay
+    /// requeues them), remote agents' jobs are interrupted
+    /// coordinator-side, every worker joins, and the journal — when
+    /// configured — is compacted with the final job states.
     pub fn run(self) -> Result<()> {
         let Server { listener, shared, pool } = self;
+        let mut reactors = super::reactor::ReactorPool::spawn(shared.clone())?;
         for conn in listener.incoming() {
             if shared.shutdown.load(Ordering::SeqCst) {
                 break;
             }
-            let mut stream = match conn {
-                Ok(s) => s,
+            match conn {
+                Ok(s) => reactors.assign(s),
                 Err(_) => continue,
-            };
-            shared.active.fetch_add(1, Ordering::SeqCst);
-            let sh = shared.clone();
-            let spawned = std::thread::Builder::new()
-                .name("serve-conn".into())
-                .spawn(move || {
-                    sh.handle(&mut stream);
-                    sh.active.fetch_sub(1, Ordering::SeqCst);
-                });
-            if spawned.is_err() {
-                shared.active.fetch_sub(1, Ordering::SeqCst);
             }
         }
-        // drain in-flight handlers briefly so their final journal
-        // events land before compaction
-        let t0 = Instant::now();
-        while shared.active.load(Ordering::SeqCst) > 0
-            && t0.elapsed() < Duration::from_secs(5)
-        {
-            std::thread::sleep(Duration::from_millis(10));
-        }
+        // the reactors flush + close their connections (bounded by
+        // drain_grace) so in-flight journal events land before the
+        // compaction below
+        reactors.join();
         shared.queue.close();
         // without this, pool.join() would block for the remainder of
         // any in-flight training run
@@ -264,7 +299,7 @@ impl Server {
         let text = body.map(json::to_string).unwrap_or_default();
         let (path, query) = split_query(path);
         let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
-        if method == "GET" && segs == ["metrics"] {
+        if let ("GET", ["metrics"]) = (method, segs.as_slice()) {
             // text/plain on the wire; over this seam the exposition
             // rides as a JSON string
             return (200, Value::str(self.shared.render_metrics()));
@@ -284,86 +319,18 @@ impl Server {
 }
 
 impl Gateway {
-    /// Serve one connection (already on its own thread).
-    fn handle(&self, stream: &mut TcpStream) {
-        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
-        let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
-        let req = match read_request(stream) {
-            Ok(r) => r,
-            Err(e) => {
-                let _ = write_json(stream, 400, &error_json(&format!("bad request: {e:#}")));
-                return;
-            }
-        };
-        let (path, query) = split_query(&req.path);
-        let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
-        // Prometheus exposition is the one non-JSON one-shot response;
-        // it gets its own seam so the JSON router stays JSON-only
-        if let ("GET", ["metrics"]) = (req.method.as_str(), segs.as_slice()) {
-            let t0 = Instant::now();
-            let text = self.render_metrics();
-            observe_http("GET /metrics", 200, t0.elapsed());
-            let _ = write_text(stream, 200, &text);
-            return;
-        }
-        if is_stream_route(&req.method, &segs) {
-            // long-lived SSE response: hand the socket to the stream
-            // writer; it owns the connection until the client leaves,
-            // the job finishes, or the server drains. Each open stream
-            // pins a thread + a bus subscriber, so a runaway client
-            // opening streams in a loop is refused past the cap
-            // instead of exhausting the very devices this stack runs on
-            if self.sse_active.fetch_add(1, Ordering::SeqCst) >= MAX_SSE_STREAMS {
-                self.sse_active.fetch_sub(1, Ordering::SeqCst);
-                let _ = write_json(
-                    stream,
-                    503,
-                    &error_json(&format!(
-                        "too many open event streams (max {MAX_SSE_STREAMS}); \
-                         close one or poll GET /jobs/<id>?history_since="
-                    )),
-                );
-                return;
-            }
-            // streams are counted but not latency-timed: their
-            // "duration" is the watch lifetime, not a response time
-            let label = if segs.len() == 1 { "GET /events" } else { "GET /jobs/{}/events" };
-            crate::metrics::global()
-                .counter(HTTP_REQS_NAME, HTTP_REQS_HELP, &[("route", label), ("code", "200")])
-                .inc();
-            match segs.as_slice() {
-                ["events"] => self.stream_firehose(stream, &query),
-                ["jobs", id, "events"] => self.stream_job_events(stream, id),
-                _ => unreachable!("is_stream_route and this match must agree"),
-            }
-            self.sse_active.fetch_sub(1, Ordering::SeqCst);
-            return;
-        }
-        let t0 = Instant::now();
-        let (status, body, shutdown) = self.route(&req.method, &segs, &query, &req.body);
-        observe_http(&http_route_label(&req.method, &segs, status), status, t0.elapsed());
-        if shutdown {
-            // close the queue BEFORE acknowledging: any submission
-            // that observes the shutdown gets a truthful 503 instead
-            // of racing the acceptor teardown
-            self.begin_shutdown();
-        }
-        let _ = write_json(stream, status, &body);
-        if shutdown {
-            self.wake();
-        }
-    }
-
     /// Sample the scrape-time gauges (queue depth, jobs by state, SSE
     /// streams, event bus, agents, heap) into the process registry and
     /// render the Prometheus text exposition (`GET /metrics`). The
     /// counters and histograms fed at record time (requests, epochs,
     /// phases, journal appends, requeues) come along with the render.
-    fn render_metrics(&self) -> String {
+    pub(crate) fn render_metrics(&self) -> String {
         use crate::metrics::{alloc, global};
         let m = global();
         m.gauge("repro_queue_depth", "Jobs waiting in the queue", &[])
             .set(self.queue.len() as f64);
+        m.gauge("repro_http_open_connections", "Connections owned by the reactor pool", &[])
+            .set(self.open_conns.load(Ordering::SeqCst) as f64);
         for (state, n) in self.registry.jobs_by_state() {
             m.gauge("repro_jobs", "Jobs in the registry by state", &[("state", state.as_str())])
                 .set(n as f64);
@@ -401,7 +368,7 @@ impl Gateway {
     /// stop-flagged as interrupted, event bus closed so SSE streams
     /// end instead of holding the drain open) and raise the acceptor's
     /// flag.
-    fn begin_shutdown(&self) {
+    pub(crate) fn begin_shutdown(&self) {
         self.queue.close();
         self.registry.stop_all_running();
         self.registry.events().close();
@@ -409,15 +376,15 @@ impl Gateway {
     }
 
     /// Unblock the acceptor so it notices the shutdown flag.
-    fn wake(&self) {
+    pub(crate) fn wake(&self) {
         let _ = TcpStream::connect(self.addr);
     }
 
-    fn route(
+    pub(crate) fn route(
         &self,
         method: &str,
         segs: &[&str],
-        query: &[(String, String)],
+        query: &[(&str, &str)],
         body: &[u8],
     ) -> (u16, Value, bool) {
         match (method, segs) {
@@ -535,7 +502,9 @@ impl Gateway {
             Ok(t) => t,
             Err(_) => return (400, error_json("body must be utf-8 JSON")),
         };
-        let v = match json::parse(text) {
+        // the pull parser is the submission hot path: differentially
+        // tested against the recursive parser, allocation-bounded
+        let v = match json::parse_pull(text) {
             Ok(v) => v,
             Err(e) => return (400, error_json(&format!("invalid JSON: {e}"))),
         };
@@ -586,147 +555,6 @@ impl Gateway {
         }
     }
 
-    /// `GET /jobs/{id}/events` — one job's SSE stream: replay the
-    /// history recorded so far, then go live; closes once the job is
-    /// terminal (or immediately after the replay when it already is).
-    fn stream_job_events(&self, stream: &mut TcpStream, id_seg: &str) {
-        let Some(id) = parse_id(id_seg) else {
-            let _ = write_json(stream, 400, &error_json("job id must be an integer"));
-            return;
-        };
-        // subscribe BEFORE the snapshot: anything published in between
-        // lands in the buffer AND below the snapshot's watermark, and
-        // the live loop skips it — exactly-once across the seam
-        let sub = self.registry.events().subscribe(Some(id), self.events_buffer);
-        let Some(snap) = self.registry.stream_snapshot(id) else {
-            let _ = write_json(stream, 404, &error_json(&format!("no job {id}")));
-            return;
-        };
-        if write_sse_header(stream).is_err() {
-            return;
-        }
-        for e in &snap.epochs {
-            let data = Value::obj(vec![
-                ("type", Value::str("epoch")),
-                ("job", Value::num(id as f64)),
-                ("replay", Value::Bool(true)),
-                ("stats", e.to_json()),
-            ]);
-            if write_sse_frame(stream, "epoch", None, &data).is_err() {
-                return;
-            }
-        }
-        let mut pairs = vec![
-            ("type", Value::str("state")),
-            ("job", Value::num(id as f64)),
-            ("replay", Value::Bool(true)),
-            ("state", Value::str(snap.state.as_str())),
-        ];
-        if let Some(err) = &snap.error {
-            pairs.push(("error", Value::str(err.clone())));
-        }
-        if write_sse_frame(stream, "state", None, &Value::obj(pairs)).is_err() {
-            return;
-        }
-        if snap.state.is_terminal() {
-            return; // the job already finished: replay-only stream
-        }
-        self.pump(stream, &sub, snap.watermark, true);
-    }
-
-    /// `GET /events` — the all-jobs SSE firehose. Without `since_seq`
-    /// it streams from now; `?since_seq=N` atomically replays the
-    /// retained ring tail past N (a leading `lagged` frame marks an
-    /// evicted resume point) before going live.
-    fn stream_firehose(&self, stream: &mut TcpStream, query: &[(String, String)]) {
-        let since = match qget(query, "since_seq") {
-            None => None,
-            Some(s) => match s.parse::<u64>() {
-                Ok(n) => Some(n),
-                Err(_) => {
-                    let _ = write_json(
-                        stream,
-                        400,
-                        &error_json("since_seq must be an integer sequence number"),
-                    );
-                    return;
-                }
-            },
-        };
-        let bus = self.registry.events();
-        let (sub, backlog, gap, resume_seq) =
-            bus.subscribe_since(self.events_buffer, since.unwrap_or_else(|| bus.current_seq()));
-        if write_sse_header(stream).is_err() {
-            return;
-        }
-        if gap {
-            // resume_seq was captured under the same lock that created
-            // the subscription, so it can never trail a delivered event
-            let data = Value::obj(vec![
-                ("type", Value::str("lagged")),
-                ("next_seq", Value::num(resume_seq as f64)),
-            ]);
-            if write_sse_frame(stream, "lagged", None, &data).is_err() {
-                return;
-            }
-        }
-        for e in &backlog {
-            if write_sse_frame(stream, e.kind, Some(e.seq), &e.data).is_err() {
-                return;
-            }
-        }
-        self.pump(stream, &sub, 0, false);
-    }
-
-    /// Shared live loop of both SSE streams: deliver bus events with
-    /// `seq > watermark`, translate buffer overflow into explicit
-    /// `lagged` frames, emit `: keep-alive` comments through idle
-    /// stretches, and tear down on client disconnect (write failure),
-    /// bus close (server drain), or — for per-job streams — the
-    /// watched job's terminal state.
-    fn pump(
-        &self,
-        stream: &mut TcpStream,
-        sub: &Subscriber,
-        watermark: u64,
-        close_on_terminal: bool,
-    ) {
-        loop {
-            match sub.recv(SSE_KEEPALIVE) {
-                Poll::Event(e) => {
-                    if e.seq <= watermark {
-                        continue; // the replay snapshot already covered it
-                    }
-                    if write_sse_frame(stream, e.kind, Some(e.seq), &e.data).is_err() {
-                        return;
-                    }
-                    let terminal = e
-                        .state()
-                        .and_then(|s| JobState::parse(s).ok())
-                        .is_some_and(|s| s.is_terminal());
-                    if close_on_terminal && terminal {
-                        return;
-                    }
-                }
-                Poll::Lagged { next_seq } => {
-                    let data = Value::obj(vec![
-                        ("type", Value::str("lagged")),
-                        ("next_seq", Value::num(next_seq as f64)),
-                    ]);
-                    if write_sse_frame(stream, "lagged", None, &data).is_err() {
-                        return;
-                    }
-                }
-                Poll::Timeout => {
-                    if stream.write_all(b": keep-alive\n\n").is_err() {
-                        return;
-                    }
-                }
-                Poll::Closed => return,
-            }
-        }
-    }
-
     fn cancel(&self, id: u64) -> (u16, Value, bool) {
         match self.registry.cancel(id) {
             None => (404, error_json(&format!("no job {id}")), false),
@@ -765,120 +593,41 @@ fn parse_id(s: &str) -> Option<u64> {
 /// Idle interval after which the SSE streams emit a `: keep-alive`
 /// comment, so clients (and anything buffering between) can tell a
 /// quiet stream from a dead connection.
-const SSE_KEEPALIVE: Duration = Duration::from_millis(1000);
-
-/// Concurrent SSE streams the server will hold open; each pins a
-/// connection thread and a bus subscriber for its whole lifetime, so
-/// the count must be bounded on memory-constrained hosts. Requests
-/// past the cap get a 503.
-const MAX_SSE_STREAMS: usize = 64;
+pub(crate) const SSE_KEEPALIVE: Duration = Duration::from_millis(1000);
 
 /// The long-lived SSE routes, dispatched before the one-shot router
-/// (they own the socket instead of returning a `(status, body)`).
-fn is_stream_route(method: &str, segs: &[&str]) -> bool {
+/// (they own the connection instead of returning a `(status, body)`).
+pub(crate) fn is_stream_route(method: &str, segs: &[&str]) -> bool {
     matches!((method, segs), ("GET", ["events"]) | ("GET", ["jobs", _, "events"]))
 }
 
-/// Split `path?query` and parse the `k=v&k2=v2` pairs. No %-decoding:
+/// Split `path?query` and parse the `k=v&k2=v2` pairs, borrowing the
+/// path (the request hot path allocates nothing here). No %-decoding:
 /// every query value this server accepts is a plain integer.
-fn split_query(path: &str) -> (&str, Vec<(String, String)>) {
+pub(crate) fn split_query(path: &str) -> (&str, Vec<(&str, &str)>) {
     match path.split_once('?') {
         None => (path, Vec::new()),
         Some((p, q)) => (
             p,
             q.split('&')
                 .filter(|s| !s.is_empty())
-                .map(|kv| match kv.split_once('=') {
-                    Some((k, v)) => (k.to_string(), v.to_string()),
-                    None => (kv.to_string(), String::new()),
-                })
+                .map(|kv| kv.split_once('=').unwrap_or((kv, "")))
                 .collect(),
         ),
     }
 }
 
-fn qget<'a>(query: &'a [(String, String)], key: &str) -> Option<&'a str> {
-    query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+pub(crate) fn qget<'a>(query: &[(&'a str, &'a str)], key: &str) -> Option<&'a str> {
+    query.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
 }
 
-fn write_sse_header(stream: &mut TcpStream) -> std::io::Result<()> {
-    stream.write_all(
-        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
-    )
-}
-
-/// One SSE frame: optional `id:` line (the bus sequence number), the
-/// `event:` name, one `data:` line of compact JSON.
-fn write_sse_frame(
-    stream: &mut TcpStream,
-    event: &str,
-    id: Option<u64>,
-    data: &Value,
-) -> std::io::Result<()> {
-    let mut frame = String::new();
-    if let Some(i) = id {
-        frame.push_str(&format!("id: {i}\n"));
-    }
-    frame.push_str(&format!("event: {event}\ndata: {}\n\n", json::to_string(data)));
-    stream.write_all(frame.as_bytes())
-}
-
-struct Request {
-    method: String,
-    path: String,
-    body: Vec<u8>,
-}
-
-fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+/// Locate `needle` in `haystack` (the `\r\n\r\n` header-terminator
+/// scan shares this with the reactor's resumable parser).
+pub(crate) fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
     haystack.windows(needle.len()).position(|w| w == needle)
 }
 
-/// Read one content-length-framed request (no chunked encoding). The
-/// `\r\n\r\n` scan resumes from the previous read's tail instead of
-/// re-scanning the whole buffer after every 4 KiB chunk — linear in
-/// the header size, where the naive rescan is quadratic.
-fn read_request(stream: &mut TcpStream) -> Result<Request> {
-    let mut buf: Vec<u8> = Vec::new();
-    let mut tmp = [0u8; 4096];
-    let mut scan_from = 0usize;
-    let header_end = loop {
-        if let Some(pos) = find_subslice(&buf[scan_from..], b"\r\n\r\n") {
-            break scan_from + pos;
-        }
-        // the terminator may straddle the chunk boundary: keep the
-        // last 3 bytes of the scanned prefix in play
-        scan_from = buf.len().saturating_sub(3);
-        anyhow::ensure!(buf.len() < 64 * 1024, "headers too large");
-        let n = stream.read(&mut tmp)?;
-        anyhow::ensure!(n > 0, "connection closed mid-headers");
-        buf.extend_from_slice(&tmp[..n]);
-    };
-    let head = std::str::from_utf8(&buf[..header_end]).context("non-utf8 headers")?;
-    let mut lines = head.split("\r\n");
-    let reqline = lines.next().context("empty request")?;
-    let mut parts = reqline.split_whitespace();
-    let method = parts.next().context("missing method")?.to_ascii_uppercase();
-    let path = parts.next().context("missing path")?.to_string();
-    let mut content_len = 0usize;
-    for line in lines {
-        if let Some((k, v)) = line.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_len = v.trim().parse().context("bad content-length")?;
-            }
-        }
-    }
-    anyhow::ensure!(content_len <= 1 << 20, "body too large (max 1 MiB)");
-    let mut body: Vec<u8> = buf[header_end + 4..].to_vec();
-    while body.len() < content_len {
-        let n = stream.read(&mut tmp)?;
-        anyhow::ensure!(n > 0, "connection closed mid-body");
-        body.extend_from_slice(&tmp[..n]);
-    }
-    body.truncate(content_len);
-    Ok(Request { method, path, body })
-}
-
-fn status_text(code: u16) -> &'static str {
+pub(crate) fn status_text(code: u16) -> &'static str {
     match code {
         200 => "OK",
         400 => "Bad Request",
@@ -893,35 +642,14 @@ fn status_text(code: u16) -> &'static str {
     }
 }
 
-fn write_json(stream: &mut TcpStream, status: u16, v: &Value) -> std::io::Result<()> {
-    let body = json::to_string(v);
-    let resp = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        status_text(status),
-        body.len()
-    );
-    stream.write_all(resp.as_bytes())
-}
-
-/// Plain-text response writer for the Prometheus exposition — the one
-/// route that is not JSON. `version=0.0.4` is the text-format marker
-/// scrapers key on.
-fn write_text(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
-    let resp = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        status_text(status),
-        body.len()
-    );
-    stream.write_all(resp.as_bytes())
-}
-
-const HTTP_REQS_NAME: &str = "repro_http_requests_total";
-const HTTP_REQS_HELP: &str = "HTTP requests served, by route template and status code";
+pub(crate) const HTTP_REQS_NAME: &str = "repro_http_requests_total";
+pub(crate) const HTTP_REQS_HELP: &str =
+    "HTTP requests served, by route template and status code";
 
 /// Record one served request into the process metrics: a latency
 /// histogram per route template and a request counter per
 /// (route, code).
-fn observe_http(route: &str, status: u16, elapsed: Duration) {
+pub(crate) fn observe_http(route: &str, status: u16, elapsed: Duration) {
     let m = crate::metrics::global();
     m.histogram(
         "repro_http_request_duration_seconds",
@@ -938,7 +666,7 @@ fn observe_http(route: &str, status: u16, elapsed: Duration) {
 /// cardinality can't grow with job/agent ids: dynamic segments (the
 /// ones routes match with a binding) become `{}`, and anything that
 /// 404'd is folded into a single "other" label.
-fn http_route_label(method: &str, segs: &[&str], status: u16) -> String {
+pub(crate) fn http_route_label(method: &str, segs: &[&str], status: u16) -> String {
     if status == 404 {
         return "other".to_string();
     }

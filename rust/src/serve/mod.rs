@@ -51,9 +51,14 @@
 //! * [`http`]     — `TcpListener` front end (GET /jobs, GET /jobs/{id},
 //!   POST /jobs, POST /jobs/{id}/cancel, GET /stats, GET /healthz,
 //!   POST /shutdown, POST/GET /cluster/*, plus the long-lived SSE
-//!   streams GET /events and GET /jobs/{id}/events) serving each
-//!   connection on a short-lived thread, plus the tiny client used by
+//!   streams GET /events and GET /jobs/{id}/events): routing, options
+//!   and shutdown/drain orchestration, plus the tiny client used by
 //!   `repro submit|jobs|job|watch` and the agent.
+//! * [`reactor`]  — the nonblocking connection plane behind [`http`]:
+//!   a small pool of `poll(2)` event-loop threads owns every accepted
+//!   socket, serves HTTP/1.1 keep-alive (pipelining bounded, idle
+//!   connections reaped) and multiplexes thousands of SSE streams off
+//!   the event bus without a thread per connection.
 //!
 //! Entry points: `repro serve --port P --workers N --queue-cap C
 //! [--journal F] [--cluster [--lease-ms L]]` boots [`http::Server`];
@@ -72,6 +77,7 @@ pub mod http;
 pub mod journal;
 pub mod protocol;
 pub mod queue;
+pub mod reactor;
 pub mod registry;
 pub mod worker;
 

@@ -1,0 +1,963 @@
+//! Nonblocking connection plane for the job server: a small pool of
+//! reactor threads, each running a `poll(2)` readiness loop over
+//! nonblocking sockets, replaces the old thread-per-connection model.
+//!
+//! The acceptor ([`super::http::Server::run`]) stays a plain blocking
+//! accept loop; every accepted socket is handed to one reactor via
+//! [`ReactorPool::assign`] (round-robin, woken through a pipe). From
+//! then on the reactor owns the connection end to end:
+//!
+//! - **Reads** accumulate into a per-connection buffer; the
+//!   `\r\n\r\n` scan resumes from the previous read's tail (same
+//!   linear-scan guarantee as the old blocking `read_request`).
+//! - **HTTP/1.1 keep-alive**: `Connection` and `Content-Length` are
+//!   honored in both directions, pipelined requests are answered in
+//!   order, and connections idle past `ServeOptions::http_idle` are
+//!   reaped. `Connection: close` (and any HTTP/1.0 request without
+//!   `keep-alive`) still gets the old one-shot behavior byte for
+//!   byte.
+//! - **Writes** stage into a reusable per-connection buffer and drain
+//!   on `POLLOUT` — a stalled client holds only its own buffer, never
+//!   a thread. `WouldBlock` is handled explicitly everywhere; there
+//!   are no socket timeouts left in the server path.
+//! - **SSE streams** are reactor-registered writers multiplexed off
+//!   the event bus: each stream is a [`Subscriber`] polled with
+//!   `try_recv` (publish wakes the reactor through the same pipe), so
+//!   open streams cost a buffer instead of a thread and the old
+//!   64-stream cap lifts to `ServeOptions::max_sse`. Live events ship
+//!   the bus's pre-rendered frame bytes without re-serializing.
+//! - **Drain**: when the shutdown flag rises, reactors stop parsing
+//!   new requests, flush what they can, and force-close whatever is
+//!   still stuck once `ServeOptions::drain_grace` elapses — a stalled
+//!   SSE client can no longer hold `/shutdown` open.
+//!
+//! Everything protocol-visible (routes, status codes, error strings,
+//! SSE frame bytes, metrics) is shared with — and identical to — the
+//! old path in [`super::http`].
+
+use super::events::{Poll as BusPoll, Subscriber, Waker};
+use super::http::{
+    find_subslice, http_route_label, is_stream_route, observe_http, qget, split_query,
+    status_text, Gateway, HTTP_REQS_HELP, HTTP_REQS_NAME, SSE_KEEPALIVE,
+};
+use super::protocol::{error_json, JobState};
+use crate::util::json::{self, Value};
+use anyhow::Result;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::os::fd::{AsRawFd, RawFd};
+use std::os::raw::{c_int, c_short};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// poll(2) FFI — std-only readiness notification (no new dependencies).
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: RawFd,
+    events: c_short,
+    revents: c_short,
+}
+
+const POLLIN: c_short = 0x001;
+const POLLOUT: c_short = 0x004;
+const POLLERR: c_short = 0x008;
+const POLLHUP: c_short = 0x010;
+const POLLNVAL: c_short = 0x020;
+
+#[cfg(target_os = "linux")]
+type NfdsT = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = std::os::raw::c_uint;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+}
+
+/// Block until a descriptor is ready or `timeout_ms` elapses. EINTR
+/// and transient failures report as "nothing ready"; the caller's
+/// loop re-polls.
+fn poll_ready(fds: &mut [PollFd], timeout_ms: i32) {
+    // SAFETY: `fds` is an exclusively borrowed slice of `#[repr(C)]`
+    // records matching the kernel's `struct pollfd` layout, valid for
+    // the whole call, and `nfds` is exactly its length.
+    let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+    if rc < 0 && std::io::Error::last_os_error().kind() != ErrorKind::Interrupted {
+        // EINVAL/ENOMEM have no per-connection remedy; back off so a
+        // persistent failure cannot spin the reactor at 100% CPU.
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reactor pool
+
+/// The reactor threads plus the acceptor-side handles for feeding
+/// them connections. Owned by [`super::http::Server::run`].
+pub(crate) struct ReactorPool {
+    workers: Vec<ReactorHandle>,
+    next: usize,
+}
+
+struct ReactorHandle {
+    inbox: Arc<Mutex<Vec<TcpStream>>>,
+    wake_tx: UnixStream,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl ReactorPool {
+    /// Spawn the reactor threads (`ServeOptions::reactor_threads`, or
+    /// about half the available cores clamped to [1, 4] when 0).
+    pub(crate) fn spawn(gw: Arc<Gateway>) -> Result<ReactorPool> {
+        let n = if gw.reactor_threads > 0 {
+            gw.reactor_threads
+        } else {
+            let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+            cores.div_ceil(2).clamp(1, 4)
+        };
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let (wake_tx, wake_rx) = UnixStream::pair()?;
+            wake_tx.set_nonblocking(true)?;
+            wake_rx.set_nonblocking(true)?;
+            // the reactor hands clones of this end to bus subscribers
+            // as their waker, so publishes interrupt the poll sleep
+            let waker_tx = wake_tx.try_clone()?;
+            let inbox: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+            let gw2 = gw.clone();
+            let inbox2 = inbox.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-reactor-{i}"))
+                .spawn(move || reactor_loop(gw2, inbox2, wake_rx, waker_tx))?;
+            workers.push(ReactorHandle { inbox, wake_tx, handle });
+        }
+        Ok(ReactorPool { workers, next: 0 })
+    }
+
+    /// Hand a freshly accepted connection to the next reactor
+    /// (round-robin) and wake it.
+    pub(crate) fn assign(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return; // socket already dead — nothing to serve
+        }
+        let _ = stream.set_nodelay(true);
+        let w = &self.workers[self.next % self.workers.len()];
+        self.next = self.next.wrapping_add(1);
+        w.inbox.lock().unwrap_or_else(|e| e.into_inner()).push(stream);
+        let _ = (&w.wake_tx).write(&[1u8]);
+    }
+
+    /// Wake every reactor so it notices the shutdown flag, then wait
+    /// for them to drain (bounded by `ServeOptions::drain_grace`).
+    pub(crate) fn join(self) {
+        for w in &self.workers {
+            let _ = (&w.wake_tx).write(&[1u8]);
+        }
+        for w in self.workers {
+            let _ = w.handle.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection state
+
+/// One read(2) worth of bytes.
+const READ_CHUNK: usize = 4096;
+
+/// Pending-request bytes past which a connection stops being polled
+/// readable until its backlog drains — the bound on pipelining depth
+/// (a client cannot buffer unbounded requests server-side).
+const RBUF_HIGHWATER: usize = 256 * 1024;
+
+/// Reactor tick: the longest a timer-driven action (SSE keep-alive,
+/// idle reaping, drain deadline) can lag behind its due time.
+const POLL_TICK_MS: i32 = 100;
+
+struct SseState {
+    sub: Subscriber,
+    /// Events at or below this bus sequence were covered by the
+    /// replay snapshot; the live loop skips them (exactly-once).
+    watermark: u64,
+    /// Per-job streams end when the watched job goes terminal.
+    close_on_terminal: bool,
+    last_write: Instant,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Unparsed request bytes; `scan_from` resumes the header-
+    /// terminator scan so parsing stays linear in the header size.
+    rbuf: Vec<u8>,
+    scan_from: usize,
+    /// Staged response bytes not yet accepted by the socket; reused
+    /// across requests so the steady-state request cycle does not
+    /// allocate.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Reusable JSON serialization buffer (bodies render here first
+    /// so `Content-Length` is known before the header is written).
+    scratch: String,
+    sse: Option<SseState>,
+    /// Requests already served on this connection (> 0 ⇒ keep-alive
+    /// reuse).
+    served: u64,
+    /// Peer half-closed its write side (read returned 0).
+    eof: bool,
+    /// Close once `wbuf` is flushed (Connection: close, fatal 400,
+    /// terminal SSE, shutdown response).
+    close_after_flush: bool,
+    /// Close now, flushed or not (socket error, drain deadline).
+    force_close: bool,
+    last_progress: Instant,
+    ready: c_short,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, now: Instant) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            scan_from: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            scratch: String::new(),
+            sse: None,
+            served: 0,
+            eof: false,
+            close_after_flush: false,
+            force_close: false,
+            last_progress: now,
+            ready: 0,
+        }
+    }
+
+    fn flushed(&self) -> bool {
+        self.wpos >= self.wbuf.len()
+    }
+
+    fn poll_events(&self) -> c_short {
+        let mut ev = 0;
+        if !self.eof && self.rbuf.len() <= RBUF_HIGHWATER {
+            ev |= POLLIN;
+        }
+        if !self.flushed() {
+            ev |= POLLOUT;
+        }
+        ev
+    }
+
+    /// Should this connection be torn down after the current pass?
+    fn should_close(
+        &self,
+        now: Instant,
+        gw: &Gateway,
+        draining: bool,
+        drain_deadline: Option<Instant>,
+    ) -> bool {
+        if self.force_close {
+            return true;
+        }
+        if self.close_after_flush && self.flushed() {
+            return true;
+        }
+        // peer is gone (or half-closed with nothing left to say)
+        if self.eof && self.flushed() {
+            return true;
+        }
+        if draining {
+            // flush what we can; past the grace deadline a stalled
+            // client is cut loose rather than holding the drain open
+            return self.flushed() || drain_deadline.is_some_and(|dl| now >= dl);
+        }
+        // Idle reaping: HTTP connections (including half-read
+        // requests and stalled response readers) are reaped after
+        // `http_idle` without progress — the old 10 s socket-timeout
+        // behavior. A healthy SSE stream is exempt (its keep-alives
+        // count as progress); one with stuck bytes is not.
+        if now.duration_since(self.last_progress) < gw.http_idle {
+            return false;
+        }
+        !(self.sse.is_some() && self.flushed())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The event loop
+
+fn reactor_loop(
+    gw: Arc<Gateway>,
+    inbox: Arc<Mutex<Vec<TcpStream>>>,
+    wake_rx: UnixStream,
+    waker_tx: UnixStream,
+) {
+    let m = crate::metrics::global();
+    // cache the label-less handles once — the loop body must not take
+    // the registry lock per pass
+    let loop_hist = m.histogram(
+        "repro_reactor_loop_seconds",
+        "Reactor pass service time (excluding the poll sleep)",
+        &[],
+        &crate::metrics::LATENCY_BUCKETS_S,
+    );
+    let reuse_ctr = m.counter(
+        "repro_http_keepalive_reuse_total",
+        "Requests served on an already-used keep-alive connection",
+        &[],
+    );
+    let waker: Waker = Arc::new(move || {
+        let _ = (&waker_tx).write(&[1u8]);
+    });
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut pfds: Vec<PollFd> = Vec::new();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        let draining = gw.shutdown.load(Ordering::SeqCst);
+        // adopt freshly assigned connections (dropped during drain:
+        // the acceptor has already stopped feeding us by then)
+        for stream in inbox.lock().unwrap_or_else(|e| e.into_inner()).drain(..) {
+            if draining {
+                continue;
+            }
+            gw.open_conns.fetch_add(1, Ordering::SeqCst);
+            conns.push(Conn::new(stream, Instant::now()));
+        }
+        if draining {
+            if drain_deadline.is_none() {
+                drain_deadline = Some(Instant::now() + gw.drain_grace);
+            }
+            if conns.is_empty() {
+                return;
+            }
+        }
+        pfds.clear();
+        pfds.push(PollFd { fd: wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+        for c in &conns {
+            pfds.push(PollFd { fd: c.stream.as_raw_fd(), events: c.poll_events(), revents: 0 });
+        }
+        poll_ready(&mut pfds, POLL_TICK_MS);
+        let t0 = Instant::now();
+        if pfds[0].revents != 0 {
+            let mut sink = [0u8; 64];
+            while matches!((&wake_rx).read(&mut sink), Ok(n) if n > 0) {}
+        }
+        for (c, p) in conns.iter_mut().zip(pfds[1..].iter()) {
+            c.ready = p.revents;
+        }
+        let now = Instant::now();
+        let draining = gw.shutdown.load(Ordering::SeqCst);
+        let mut i = 0;
+        while i < conns.len() {
+            service_conn(&gw, &mut conns[i], &waker, &reuse_ctr, now, draining);
+            if conns[i].should_close(now, &gw, draining, drain_deadline) {
+                teardown(&gw, conns.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        loop_hist.observe(t0.elapsed().as_secs_f64());
+    }
+}
+
+fn teardown(gw: &Gateway, c: Conn) {
+    if c.sse.is_some() {
+        // dropping the Subscriber (inside SseState) unregisters it
+        // from the bus — no reactor-side registration can leak
+        gw.sse_active.fetch_sub(1, Ordering::SeqCst);
+    }
+    gw.open_conns.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// One pass over one connection: read what the socket has, serve any
+/// complete requests, pump SSE events, flush what the socket takes.
+fn service_conn(
+    gw: &Arc<Gateway>,
+    c: &mut Conn,
+    waker: &Waker,
+    reuse_ctr: &crate::metrics::Counter,
+    now: Instant,
+    draining: bool,
+) {
+    if c.ready & POLLNVAL != 0 {
+        c.force_close = true;
+        return;
+    }
+    if c.ready & (POLLIN | POLLHUP | POLLERR) != 0 {
+        read_some(c, now);
+    }
+    if c.force_close {
+        return;
+    }
+    if !draining {
+        serve_buffered_requests(gw, c, waker, reuse_ctr, now);
+    }
+    pump_sse(gw, c, now);
+    flush_some(c, now);
+}
+
+/// Drain the socket's receive buffer into `rbuf` (explicit
+/// `WouldBlock` handling — the reactor never blocks in read).
+fn read_some(c: &mut Conn, now: Instant) {
+    let mut tmp = [0u8; READ_CHUNK];
+    loop {
+        match c.stream.read(&mut tmp) {
+            Ok(0) => {
+                c.eof = true;
+                return;
+            }
+            Ok(n) => {
+                c.rbuf.extend_from_slice(&tmp[..n]);
+                c.last_progress = now;
+                if c.rbuf.len() > RBUF_HIGHWATER {
+                    return; // pipelining bound: parse before reading more
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.force_close = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Write as much of `wbuf` as the socket will take right now.
+fn flush_some(c: &mut Conn, now: Instant) {
+    while !c.flushed() {
+        match c.stream.write(&c.wbuf[c.wpos..]) {
+            Ok(0) => {
+                c.force_close = true;
+                return;
+            }
+            Ok(n) => {
+                c.wpos += n;
+                c.last_progress = now;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.force_close = true;
+                return;
+            }
+        }
+    }
+    // fully drained: recycle the buffer allocation for the next
+    // response instead of growing forever
+    c.wbuf.clear();
+    c.wpos = 0;
+}
+
+// ---------------------------------------------------------------------------
+// HTTP request cycle
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+enum Parse {
+    /// Not enough bytes yet — wait for more reads.
+    Incomplete,
+    Ok(Request),
+    /// Protocol error; the message matches the old blocking scanner's
+    /// wording byte for byte.
+    Err(&'static str),
+}
+
+/// Try to cut one complete content-length-framed request off the
+/// front of `rbuf`. Same limits and error strings as the old blocking
+/// `read_request`.
+fn parse_request(rbuf: &mut Vec<u8>, scan_from: &mut usize) -> Parse {
+    let header_end = match find_subslice(&rbuf[*scan_from..], b"\r\n\r\n") {
+        Some(pos) => *scan_from + pos,
+        None => {
+            // the terminator may straddle a read boundary: keep the
+            // last 3 scanned bytes in play for the next attempt
+            *scan_from = rbuf.len().saturating_sub(3);
+            if rbuf.len() >= 64 * 1024 {
+                return Parse::Err("headers too large");
+            }
+            return Parse::Incomplete;
+        }
+    };
+    let Ok(head) = std::str::from_utf8(&rbuf[..header_end]) else {
+        return Parse::Err("non-utf8 headers");
+    };
+    let mut lines = head.split("\r\n");
+    let Some(reqline) = lines.next() else {
+        return Parse::Err("empty request");
+    };
+    let mut parts = reqline.split_whitespace();
+    let Some(method) = parts.next() else {
+        return Parse::Err("missing method");
+    };
+    let method = method.to_ascii_uppercase();
+    let Some(path) = parts.next() else {
+        return Parse::Err("missing path");
+    };
+    let path = path.to_string();
+    // HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close; an explicit
+    // Connection token overrides either way
+    let mut keep_alive = !reqline.trim_end().ends_with("HTTP/1.0");
+    let mut content_len = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            let k = k.trim();
+            if k.eq_ignore_ascii_case("content-length") {
+                match v.trim().parse() {
+                    Ok(n) => content_len = n,
+                    Err(_) => return Parse::Err("bad content-length"),
+                }
+            } else if k.eq_ignore_ascii_case("connection") {
+                for tok in v.split(',') {
+                    let tok = tok.trim();
+                    if tok.eq_ignore_ascii_case("close") {
+                        keep_alive = false;
+                    } else if tok.eq_ignore_ascii_case("keep-alive") {
+                        keep_alive = true;
+                    }
+                }
+            }
+        }
+    }
+    if content_len > 1 << 20 {
+        return Parse::Err("body too large (max 1 MiB)");
+    }
+    let total = header_end + 4 + content_len;
+    if rbuf.len() < total {
+        return Parse::Incomplete; // scan_from ≤ header_end, refinds it
+    }
+    let body = rbuf[header_end + 4..total].to_vec();
+    rbuf.drain(..total);
+    *scan_from = 0;
+    Parse::Ok(Request { method, path, body, keep_alive })
+}
+
+/// Parse and serve requests off `rbuf` until it runs dry, the
+/// connection turns into an SSE stream, or a close is pending.
+fn serve_buffered_requests(
+    gw: &Arc<Gateway>,
+    c: &mut Conn,
+    waker: &Waker,
+    reuse_ctr: &crate::metrics::Counter,
+    now: Instant,
+) {
+    while c.sse.is_none() && !c.close_after_flush && !c.force_close {
+        match parse_request(&mut c.rbuf, &mut c.scan_from) {
+            Parse::Incomplete => {
+                if c.eof && !c.rbuf.is_empty() {
+                    // peer hung up mid-request: the old scanner's error
+                    write_error_close(c, "bad request: connection closed mid-headers");
+                }
+                return;
+            }
+            Parse::Err(msg) => {
+                c.scratch.clear();
+                c.scratch.push_str("bad request: ");
+                c.scratch.push_str(msg);
+                let body = error_json(&c.scratch);
+                write_json_response(c, 400, &body, false);
+                c.close_after_flush = true;
+                return;
+            }
+            Parse::Ok(req) => {
+                if c.served > 0 {
+                    reuse_ctr.inc();
+                }
+                c.served += 1;
+                serve_request(gw, c, req, waker, now);
+            }
+        }
+    }
+}
+
+fn write_error_close(c: &mut Conn, msg: &str) {
+    let body = error_json(msg);
+    write_json_response(c, 400, &body, false);
+    c.close_after_flush = true;
+}
+
+/// Route one parsed request and stage its response.
+fn serve_request(gw: &Arc<Gateway>, c: &mut Conn, req: Request, waker: &Waker, now: Instant) {
+    let t0 = Instant::now();
+    let (path, query) = split_query(&req.path);
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    // Prometheus exposition: the one non-JSON one-shot response
+    if let ("GET", ["metrics"]) = (req.method.as_str(), segs.as_slice()) {
+        let text = gw.render_metrics();
+        observe_http("GET /metrics", 200, t0.elapsed());
+        write_text_response(c, 200, &text, req.keep_alive);
+        if !req.keep_alive {
+            c.close_after_flush = true;
+        }
+        return;
+    }
+    if is_stream_route(&req.method, &segs) {
+        start_sse(gw, c, &segs, &query, waker, now);
+        return;
+    }
+    let (status, body, shutdown) = gw.route(&req.method, &segs, &query, &req.body);
+    observe_http(&http_route_label(&req.method, &segs, status), status, t0.elapsed());
+    if shutdown {
+        // close the queue BEFORE acknowledging: any submission that
+        // observes the shutdown gets a truthful 503 instead of racing
+        // the teardown
+        gw.begin_shutdown();
+    }
+    let keep = req.keep_alive && !shutdown;
+    write_json_response(c, status, &body, keep);
+    if !keep {
+        c.close_after_flush = true;
+    }
+    if shutdown {
+        gw.wake();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SSE streams
+
+/// Upgrade the connection into a reactor-registered SSE writer (or
+/// stage a one-shot error / replay-only response).
+fn start_sse(
+    gw: &Arc<Gateway>,
+    c: &mut Conn,
+    segs: &[&str],
+    query: &[(&str, &str)],
+    waker: &Waker,
+    now: Instant,
+) {
+    // Streams are cheap now (a buffer, not a thread) but each still
+    // pins a bus subscriber; a runaway client opening streams in a
+    // loop is refused past the cap instead of exhausting the very
+    // devices this stack runs on.
+    if gw.sse_active.fetch_add(1, Ordering::SeqCst) >= gw.max_sse {
+        gw.sse_active.fetch_sub(1, Ordering::SeqCst);
+        let body = error_json(&format!(
+            "too many open event streams (max {}); \
+             close one or poll GET /jobs/<id>?history_since=",
+            gw.max_sse
+        ));
+        write_json_response(c, 503, &body, false);
+        c.close_after_flush = true;
+        return;
+    }
+    // streams are counted but not latency-timed: their "duration" is
+    // the watch lifetime, not a response time
+    let label = if segs.len() == 1 { "GET /events" } else { "GET /jobs/{}/events" };
+    crate::metrics::global()
+        .counter(HTTP_REQS_NAME, HTTP_REQS_HELP, &[("route", label), ("code", "200")])
+        .inc();
+    let installed = match segs {
+        ["events"] => sse_firehose(gw, c, query, now),
+        ["jobs", id, "events"] => sse_job_events(gw, c, id, now),
+        _ => unreachable!("is_stream_route and this match must agree"),
+    };
+    match installed {
+        Some(sse) => {
+            sse.sub.set_waker(waker.clone());
+            c.sse = Some(sse);
+        }
+        None => {
+            // refused (bad id / no such job) or replay-only: the
+            // response is already staged, the stream never installs
+            gw.sse_active.fetch_sub(1, Ordering::SeqCst);
+            c.close_after_flush = true;
+        }
+    }
+}
+
+/// `GET /jobs/{id}/events` — replay the recorded history, then hand
+/// back a live subscription (None when the job is already terminal).
+fn sse_job_events(gw: &Arc<Gateway>, c: &mut Conn, id_seg: &str, now: Instant) -> Option<SseState> {
+    let Ok(id) = id_seg.parse::<u64>() else {
+        let body = error_json("job id must be an integer");
+        write_json_response(c, 400, &body, false);
+        return None;
+    };
+    // subscribe BEFORE the snapshot: anything published in between
+    // lands in the buffer AND below the snapshot's watermark, and the
+    // live loop skips it — exactly-once across the seam
+    let sub = gw.registry.events().subscribe(Some(id), gw.events_buffer);
+    let Some(snap) = gw.registry.stream_snapshot(id) else {
+        let body = error_json(&format!("no job {id}"));
+        write_json_response(c, 404, &body, false);
+        return None;
+    };
+    write_sse_header(c);
+    for e in &snap.epochs {
+        let data = Value::obj(vec![
+            ("type", Value::str("epoch")),
+            ("job", Value::num(id as f64)),
+            ("replay", Value::Bool(true)),
+            ("stats", e.to_json()),
+        ]);
+        push_sse_frame(&mut c.wbuf, &mut c.scratch, "epoch", None, &data);
+    }
+    let mut pairs = vec![
+        ("type", Value::str("state")),
+        ("job", Value::num(id as f64)),
+        ("replay", Value::Bool(true)),
+        ("state", Value::str(snap.state.as_str())),
+    ];
+    if let Some(err) = &snap.error {
+        pairs.push(("error", Value::str(err.clone())));
+    }
+    push_sse_frame(&mut c.wbuf, &mut c.scratch, "state", None, &Value::obj(pairs));
+    if snap.state.is_terminal() {
+        return None; // the job already finished: replay-only stream
+    }
+    Some(SseState { sub, watermark: snap.watermark, close_on_terminal: true, last_write: now })
+}
+
+/// `GET /events` — the all-jobs firehose, with `?since_seq=` resume
+/// off the retained ring (a leading `lagged` frame marks an evicted
+/// resume point).
+fn sse_firehose(
+    gw: &Arc<Gateway>,
+    c: &mut Conn,
+    query: &[(&str, &str)],
+    now: Instant,
+) -> Option<SseState> {
+    let since = match qget(query, "since_seq") {
+        None => None,
+        Some(s) => match s.parse::<u64>() {
+            Ok(n) => Some(n),
+            Err(_) => {
+                let body = error_json("since_seq must be an integer sequence number");
+                write_json_response(c, 400, &body, false);
+                return None;
+            }
+        },
+    };
+    let bus = gw.registry.events().clone();
+    let (sub, backlog, gap, resume_seq) =
+        bus.subscribe_since(gw.events_buffer, since.unwrap_or_else(|| bus.current_seq()));
+    write_sse_header(c);
+    if gap {
+        let data = Value::obj(vec![
+            ("type", Value::str("lagged")),
+            ("next_seq", Value::num(resume_seq as f64)),
+        ]);
+        push_sse_frame(&mut c.wbuf, &mut c.scratch, "lagged", None, &data);
+    }
+    for e in &backlog {
+        c.wbuf.extend_from_slice(e.frame.as_bytes());
+    }
+    Some(SseState { sub, watermark: 0, close_on_terminal: false, last_write: now })
+}
+
+/// Deliver pending bus events into the connection's write buffer —
+/// the nonblocking counterpart of the old `pump` loop. Stops pulling
+/// at the write high-water mark so a slow reader sheds at the bus
+/// (yielding a `lagged` frame) instead of buffering without bound;
+/// the trainers never wait either way.
+fn pump_sse(gw: &Arc<Gateway>, c: &mut Conn, now: Instant) {
+    let Some(sse) = c.sse.as_mut() else { return };
+    let mut closed = false;
+    while c.wbuf.len() - c.wpos < gw.sse_highwater {
+        match sse.sub.try_recv() {
+            BusPoll::Event(e) => {
+                if e.seq <= sse.watermark {
+                    continue; // the replay snapshot already covered it
+                }
+                // live frames were rendered once at publish; every
+                // subscriber ships the same bytes, allocation-free
+                c.wbuf.extend_from_slice(e.frame.as_bytes());
+                sse.last_write = now;
+                let terminal = e
+                    .state()
+                    .and_then(|s| JobState::parse(s).ok())
+                    .is_some_and(|s| s.is_terminal());
+                if sse.close_on_terminal && terminal {
+                    closed = true;
+                    break;
+                }
+            }
+            BusPoll::Lagged { next_seq } => {
+                let data = Value::obj(vec![
+                    ("type", Value::str("lagged")),
+                    ("next_seq", Value::num(next_seq as f64)),
+                ]);
+                push_sse_frame(&mut c.wbuf, &mut c.scratch, "lagged", None, &data);
+                sse.last_write = now;
+            }
+            BusPoll::Timeout => break,
+            BusPoll::Closed => {
+                closed = true;
+                break;
+            }
+        }
+    }
+    if !closed && now.duration_since(sse.last_write) >= SSE_KEEPALIVE {
+        c.wbuf.extend_from_slice(b": keep-alive\n\n");
+        sse.last_write = now;
+    }
+    if closed {
+        c.close_after_flush = true;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response staging (into the connection's reusable buffers)
+
+fn write_json_response(c: &mut Conn, status: u16, v: &Value, keep_alive: bool) {
+    c.scratch.clear();
+    json::write_compact(v, &mut c.scratch);
+    let blen = c.scratch.len();
+    let conn_hdr = if keep_alive { "keep-alive" } else { "close" };
+    let _ = write!(
+        c.wbuf,
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {blen}\r\nConnection: {conn_hdr}\r\n\r\n",
+        status_text(status)
+    );
+    let Conn { wbuf, scratch, .. } = c;
+    wbuf.extend_from_slice(scratch.as_bytes());
+}
+
+/// Plain-text staging for the Prometheus exposition. `version=0.0.4`
+/// is the text-format marker scrapers key on.
+fn write_text_response(c: &mut Conn, status: u16, body: &str, keep_alive: bool) {
+    let conn_hdr = if keep_alive { "keep-alive" } else { "close" };
+    let _ = write!(
+        c.wbuf,
+        "HTTP/1.1 {status} {}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: {conn_hdr}\r\n\r\n",
+        status_text(status),
+        body.len()
+    );
+    c.wbuf.extend_from_slice(body.as_bytes());
+}
+
+fn write_sse_header(c: &mut Conn) {
+    c.wbuf.extend_from_slice(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    );
+}
+
+/// Stage one cold-path SSE frame (replay / lagged / error frames that
+/// have no pre-rendered bytes): optional `id:` line, `event:` name,
+/// one `data:` line of compact JSON.
+fn push_sse_frame(
+    wbuf: &mut Vec<u8>,
+    scratch: &mut String,
+    event: &str,
+    id: Option<u64>,
+    data: &Value,
+) {
+    if let Some(i) = id {
+        let _ = writeln!(wbuf, "id: {i}");
+    }
+    let _ = write!(wbuf, "event: {event}\ndata: ");
+    scratch.clear();
+    json::write_compact(data, scratch);
+    wbuf.extend_from_slice(scratch.as_bytes());
+    wbuf.extend_from_slice(b"\n\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_all(input: &[u8]) -> (Vec<Request>, Option<&'static str>) {
+        let mut rbuf = input.to_vec();
+        let mut scan_from = 0;
+        let mut out = Vec::new();
+        loop {
+            match parse_request(&mut rbuf, &mut scan_from) {
+                Parse::Incomplete => return (out, None),
+                Parse::Err(e) => return (out, Some(e)),
+                Parse::Ok(r) => out.push(r),
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_split_in_order() {
+        let wire = b"GET /healthz HTTP/1.1\r\n\r\nPOST /jobs HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let (reqs, err) = parse_all(wire);
+        assert!(err.is_none());
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[0].path, "/healthz");
+        assert!(reqs[0].keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(reqs[1].body, b"{}");
+        assert!(reqs[1].keep_alive);
+        assert_eq!(reqs[2].path, "/stats");
+        assert!(!reqs[2].keep_alive, "explicit Connection: close honored");
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let (reqs, _) = parse_all(b"GET / HTTP/1.0\r\n\r\n");
+        assert!(!reqs[0].keep_alive);
+        let (reqs, _) = parse_all(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(reqs[0].keep_alive);
+    }
+
+    #[test]
+    fn torn_input_resumes_across_feeds() {
+        // feed a request one byte at a time through the resumable scanner
+        let wire = b"POST /jobs HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        let mut rbuf: Vec<u8> = Vec::new();
+        let mut scan_from = 0;
+        let mut got = None;
+        for (i, b) in wire.iter().enumerate() {
+            rbuf.push(*b);
+            match parse_request(&mut rbuf, &mut scan_from) {
+                Parse::Incomplete => assert!(i + 1 < wire.len(), "must complete on last byte"),
+                Parse::Ok(r) => got = Some(r),
+                Parse::Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        let r = got.expect("request completes");
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"hello");
+        assert!(rbuf.is_empty(), "consumed exactly one request");
+    }
+
+    #[test]
+    fn malformed_content_length_is_an_error() {
+        let (_, err) = parse_all(b"POST /jobs HTTP/1.1\r\nContent-Length: banana\r\n\r\n");
+        assert_eq!(err, Some("bad content-length"));
+        let (_, err) = parse_all(b"POST /jobs HTTP/1.1\r\nContent-Length: 9999999999\r\n\r\n");
+        assert_eq!(err, Some("body too large (max 1 MiB)"));
+    }
+
+    #[test]
+    fn oversized_headers_rejected() {
+        let mut wire = b"GET / HTTP/1.1\r\nX-Pad: ".to_vec();
+        wire.resize(wire.len() + 70 * 1024, b'x');
+        let (_, err) = parse_all(&wire);
+        assert_eq!(err, Some("headers too large"));
+    }
+
+    #[test]
+    fn response_staging_headers() {
+        let mut c = Conn::new_for_test();
+        write_json_response(&mut c, 200, &Value::obj(vec![("ok", Value::Bool(true))]), true);
+        let text = String::from_utf8(c.wbuf.clone()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.ends_with("{\"ok\":true}"));
+        c.wbuf.clear();
+        write_json_response(&mut c, 503, &error_json("x"), false);
+        let text = String::from_utf8(c.wbuf.clone()).unwrap();
+        assert!(text.contains("Connection: close\r\n"));
+    }
+
+    impl Conn {
+        fn new_for_test() -> Conn {
+            // a connected-but-unused socket pair stands in for a client
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            Conn::new(stream, Instant::now())
+        }
+    }
+}

@@ -2,9 +2,21 @@
 //!
 //! Covers the full JSON grammar; used for the artifact manifest, config
 //! files, checkpoints and experiment result dumps.
+//!
+//! Two parsers share the grammar:
+//!
+//! * [`parse`] builds a [`Value`] tree — convenient, allocates per
+//!   node; every config/manifest/response path uses it.
+//! * [`Reader`] is a pull parser for the serve hot path: it walks the
+//!   same grammar token by token ([`Tok`]) without building a tree,
+//!   borrowing unescaped strings straight out of the input. After a
+//!   warm-up parse (which sizes its scratch buffer) it allocates
+//!   nothing, which is what keeps `repro serve`'s per-request
+//!   `repro_allocs_total` delta flat (see `tests/json_pull.rs`).
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::fmt::Write as _;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -327,15 +339,24 @@ pub fn to_string_pretty(v: &Value) -> String {
     out
 }
 
+/// Serialize compactly into an existing buffer — no intermediate
+/// `String` per call, so a long-lived connection can reuse one
+/// response buffer for every body it writes (the serve hot path).
+pub fn write_compact(v: &Value, out: &mut String) {
+    write_value(v, out, None, 0);
+}
+
 fn write_value(v: &Value, out: &mut String, indent: Option<usize>, depth: usize) {
     match v {
         Value::Null => out.push_str("null"),
         Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Value::Num(n) => {
+            // write! into the existing String: no intermediate
+            // allocation on the per-event serialization path
             if n.fract() == 0.0 && n.abs() < 1e15 {
-                out.push_str(&format!("{}", *n as i64));
+                let _ = write!(out, "{}", *n as i64);
             } else {
-                out.push_str(&format!("{n}"));
+                let _ = write!(out, "{n}");
             }
         }
         Value::Str(s) => write_string(s, out),
@@ -393,11 +414,466 @@ fn write_string(s: &str, out: &mut String) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
             c => out.push(c),
         }
     }
     out.push('"');
+}
+
+// ---------------------------------------------------------------------
+// Pull parser: the serve hot path.
+
+/// One token from [`Reader`]: the JSON grammar, flattened. String and
+/// key tokens borrow from the input when the string has no escapes,
+/// and from the reader's reusable scratch buffer when it does — either
+/// way, no per-token allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Tok<'a> {
+    /// `{` — the next tokens are [`Tok::Key`]/value pairs.
+    ObjStart,
+    /// `}` closing the innermost object.
+    ObjEnd,
+    /// `[` — the next tokens are the elements.
+    ArrStart,
+    /// `]` closing the innermost array.
+    ArrEnd,
+    /// An object key; its value is the next value token.
+    Key(&'a str),
+    /// A string value.
+    Str(&'a str),
+    /// A number value (same f64 representation as [`Value::Num`]).
+    Num(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// `null`.
+    Null,
+}
+
+/// Where the grammar allows the next token to sit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Expect {
+    /// A value must follow (root, array element, or object value).
+    Value,
+    /// A container just opened: first element/key, or an immediate close.
+    FirstOrEnd,
+    /// After `,` inside an object: a key string must follow.
+    Key,
+    /// A value inside a container just finished: `,` or the closer.
+    CommaOrEnd,
+    /// The root value is complete; only trailing whitespace may remain.
+    Eof,
+}
+
+/// Where [`Reader::read_string`] left the decoded text.
+enum StrPart {
+    /// Byte range of the input (no escapes: borrow it verbatim).
+    Borrowed(usize, usize),
+    /// The string had escapes and was decoded into the scratch buffer.
+    Scratch,
+}
+
+/// Streaming pull parser over the same grammar as [`parse`], for code
+/// that visits a document without building a [`Value`] tree. Call
+/// [`Reader::next_token`] until it yields `Ok(None)` (document
+/// complete) or an error. Strict: the token stream is validated
+/// against the grammar as it is pulled, so an invalid document errors
+/// at the first offending byte, exactly where [`parse`] would.
+///
+/// Unescaped strings are borrowed straight from the input; escaped
+/// ones are decoded into one reusable scratch `String`, which
+/// [`Reader::with_scratch`] lets a long-lived connection recycle
+/// across documents — after warm-up the parse allocates nothing.
+pub struct Reader<'a> {
+    s: &'a str,
+    b: &'a [u8],
+    pos: usize,
+    /// Container nesting as a bitstack: 1 = object, 0 = array, the
+    /// innermost container in the lowest bit. Depth is capped at 64.
+    stack: u64,
+    depth: u32,
+    state: Expect,
+    scratch: String,
+}
+
+/// Deepest container nesting [`Reader`] accepts (bits in its stack).
+pub const MAX_PULL_DEPTH: u32 = 64;
+
+impl<'a> Reader<'a> {
+    /// Parser over `text` with an empty scratch buffer.
+    pub fn new(text: &'a str) -> Reader<'a> {
+        Reader::with_scratch(text, String::new())
+    }
+
+    /// Parser over `text` reusing a scratch buffer from a previous
+    /// document ([`Reader::into_scratch`]): the zero-alloc steady
+    /// state for per-connection parsing.
+    pub fn with_scratch(text: &'a str, mut scratch: String) -> Reader<'a> {
+        scratch.clear();
+        Reader {
+            s: text,
+            b: text.as_bytes(),
+            pos: 0,
+            stack: 0,
+            depth: 0,
+            state: Expect::Value,
+            scratch,
+        }
+    }
+
+    /// Recover the scratch buffer for the next document's reader.
+    pub fn into_scratch(self) -> String {
+        self.scratch
+    }
+
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.b.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn top_is_obj(&self) -> bool {
+        self.depth > 0 && (self.stack & 1) == 1
+    }
+
+    /// A value just completed (scalar read or container closed).
+    fn after_value(&mut self) {
+        self.state = if self.depth == 0 { Expect::Eof } else { Expect::CommaOrEnd };
+    }
+
+    fn push(&mut self, is_obj: bool) -> Result<(), ParseError> {
+        if self.depth >= MAX_PULL_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.pos += 1;
+        self.stack = (self.stack << 1) | u64::from(is_obj);
+        self.depth += 1;
+        self.state = Expect::FirstOrEnd;
+        Ok(())
+    }
+
+    fn pop(&mut self) {
+        self.stack >>= 1;
+        self.depth -= 1;
+        self.after_value();
+    }
+
+    fn lit(&mut self, word: &str) -> Result<(), ParseError> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn resolve(&self, part: StrPart) -> &str {
+        match part {
+            StrPart::Borrowed(a, b) => &self.s[a..b],
+            StrPart::Scratch => &self.scratch,
+        }
+    }
+
+    /// Pull the next token; `Ok(None)` exactly once, at the end of a
+    /// complete document. Any grammar violation — including truncated
+    /// input — is an error positioned at the offending byte.
+    pub fn next_token(&mut self) -> Result<Option<Tok<'_>>, ParseError> {
+        loop {
+            self.skip_ws();
+            if self.state == Expect::Eof {
+                return if self.pos == self.b.len() {
+                    Ok(None)
+                } else {
+                    Err(self.err("trailing characters"))
+                };
+            }
+            let Some(c) = self.b.get(self.pos).copied() else {
+                return Err(self.err("unexpected end of input"));
+            };
+            match self.state {
+                Expect::Eof => unreachable!("handled before the dispatch"),
+                Expect::FirstOrEnd => {
+                    if self.top_is_obj() {
+                        return match c {
+                            b'}' => {
+                                self.pos += 1;
+                                self.pop();
+                                Ok(Some(Tok::ObjEnd))
+                            }
+                            b'"' => self.key_token(),
+                            _ => Err(self.err("expected a key or '}'")),
+                        };
+                    }
+                    if c == b']' {
+                        self.pos += 1;
+                        self.pop();
+                        return Ok(Some(Tok::ArrEnd));
+                    }
+                    // an array's first element: fall through as a value
+                    self.state = Expect::Value;
+                }
+                Expect::Key => {
+                    return match c {
+                        b'"' => self.key_token(),
+                        _ => Err(self.err("expected a key")),
+                    };
+                }
+                Expect::CommaOrEnd => {
+                    let is_obj = self.top_is_obj();
+                    match (c, is_obj) {
+                        (b',', true) => {
+                            self.pos += 1;
+                            self.state = Expect::Key;
+                        }
+                        (b',', false) => {
+                            self.pos += 1;
+                            self.state = Expect::Value;
+                        }
+                        (b'}', true) => {
+                            self.pos += 1;
+                            self.pop();
+                            return Ok(Some(Tok::ObjEnd));
+                        }
+                        (b']', false) => {
+                            self.pos += 1;
+                            self.pop();
+                            return Ok(Some(Tok::ArrEnd));
+                        }
+                        (_, true) => return Err(self.err("expected ',' or '}'")),
+                        (_, false) => return Err(self.err("expected ',' or ']'")),
+                    }
+                }
+                Expect::Value => {
+                    return match c {
+                        b'{' => {
+                            self.push(true)?;
+                            Ok(Some(Tok::ObjStart))
+                        }
+                        b'[' => {
+                            self.push(false)?;
+                            Ok(Some(Tok::ArrStart))
+                        }
+                        b'"' => {
+                            let part = self.read_string()?;
+                            self.after_value();
+                            Ok(Some(Tok::Str(self.resolve(part))))
+                        }
+                        b't' => {
+                            self.lit("true")?;
+                            self.after_value();
+                            Ok(Some(Tok::Bool(true)))
+                        }
+                        b'f' => {
+                            self.lit("false")?;
+                            self.after_value();
+                            Ok(Some(Tok::Bool(false)))
+                        }
+                        b'n' => {
+                            self.lit("null")?;
+                            self.after_value();
+                            Ok(Some(Tok::Null))
+                        }
+                        c2 if c2 == b'-' || c2.is_ascii_digit() => {
+                            let n = self.read_number()?;
+                            self.after_value();
+                            Ok(Some(Tok::Num(n)))
+                        }
+                        _ => Err(self.err("expected a JSON value")),
+                    };
+                }
+            }
+        }
+    }
+
+    /// An object key plus its `:` separator, leaving the reader
+    /// positioned at the value.
+    fn key_token(&mut self) -> Result<Option<Tok<'_>>, ParseError> {
+        let part = self.read_string()?;
+        self.skip_ws();
+        if self.b.get(self.pos) != Some(&b':') {
+            return Err(self.err("expected ':'"));
+        }
+        self.pos += 1;
+        self.state = Expect::Value;
+        Ok(Some(Tok::Key(self.resolve(part))))
+    }
+
+    /// Scan one string (opening quote at the cursor). The escape-free
+    /// fast path borrows the input; escapes divert into the scratch
+    /// buffer with the same decoding rules as [`parse`] (incl.
+    /// surrogate pairs).
+    fn read_string(&mut self) -> Result<StrPart, ParseError> {
+        self.pos += 1; // opening quote
+        let start = self.pos;
+        loop {
+            match self.b.get(self.pos) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let end = self.pos;
+                    self.pos += 1;
+                    return Ok(StrPart::Borrowed(start, end));
+                }
+                Some(b'\\') => break, // escapes: decode into scratch
+                Some(c) if *c < 0x20 => return Err(self.err("control char in string")),
+                Some(_) => self.pos += 1,
+            }
+        }
+        self.scratch.clear();
+        self.scratch.push_str(&self.s[start..self.pos]);
+        loop {
+            match self.b.get(self.pos).copied() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(StrPart::Scratch);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    self.decode_escape()?;
+                }
+                Some(c) if c < 0x20 => return Err(self.err("control char in string")),
+                Some(_) => {
+                    // copy one UTF-8 scalar (input is &str: boundaries hold)
+                    let s0 = self.pos;
+                    self.pos += 1;
+                    while self.pos < self.b.len() && (self.b[self.pos] & 0xC0) == 0x80 {
+                        self.pos += 1;
+                    }
+                    self.scratch.push_str(&self.s[s0..self.pos]);
+                }
+            }
+        }
+    }
+
+    /// Decode one escape (cursor just past the backslash) into scratch.
+    fn decode_escape(&mut self) -> Result<(), ParseError> {
+        let c = self.b.get(self.pos).copied().ok_or_else(|| self.err("bad escape"))?;
+        self.pos += 1;
+        match c {
+            b'"' => self.scratch.push('"'),
+            b'\\' => self.scratch.push('\\'),
+            b'/' => self.scratch.push('/'),
+            b'b' => self.scratch.push('\u{8}'),
+            b'f' => self.scratch.push('\u{c}'),
+            b'n' => self.scratch.push('\n'),
+            b'r' => self.scratch.push('\r'),
+            b't' => self.scratch.push('\t'),
+            b'u' => {
+                let code = self.hex4()?;
+                // surrogate pairs for non-BMP chars, as in `parse`
+                let ch = if (0xD800..0xDC00).contains(&code) {
+                    if self.b.get(self.pos) == Some(&b'\\')
+                        && self.b.get(self.pos + 1) == Some(&b'u')
+                    {
+                        self.pos += 2;
+                        let low = self.hex4()?;
+                        char::from_u32(0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00))
+                    } else {
+                        None
+                    }
+                } else {
+                    char::from_u32(code)
+                };
+                self.scratch.push(ch.ok_or_else(|| self.err("bad codepoint"))?);
+            }
+            _ => return Err(self.err("bad escape char")),
+        }
+        Ok(())
+    }
+
+    fn hex4(&mut self) -> Result<u32, ParseError> {
+        let hex = self
+            .b
+            .get(self.pos..self.pos + 4)
+            .ok_or_else(|| self.err("bad \\u escape"))?;
+        let code = u32::from_str_radix(
+            std::str::from_utf8(hex).map_err(|_| self.err("bad \\u escape"))?,
+            16,
+        )
+        .map_err(|_| self.err("bad \\u escape"))?;
+        self.pos += 4;
+        Ok(code)
+    }
+
+    /// Same character classes as [`parse`]'s number scanner, then one
+    /// alloc-free `f64` conversion.
+    fn read_number(&mut self) -> Result<f64, ParseError> {
+        let start = self.pos;
+        if self.b.get(self.pos) == Some(&b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.b.get(self.pos), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.b.get(self.pos) == Some(&b'.') {
+            self.pos += 1;
+            while matches!(self.b.get(self.pos), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.b.get(self.pos), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.b.get(self.pos), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.b.get(self.pos), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        self.s[start..self.pos].parse::<f64>().map_err(|_| self.err("bad number"))
+    }
+}
+
+/// Build a [`Value`] tree by driving [`Reader`] — the differential
+/// seam `tests/json_pull.rs` pins against [`parse`], and a worked
+/// example of consuming the token stream with an explicit stack.
+pub fn parse_pull(text: &str) -> Result<Value, ParseError> {
+    enum Frame {
+        Arr(Vec<Value>),
+        Obj(BTreeMap<String, Value>, Option<String>),
+    }
+    fn attach(stack: &mut [Frame], root: &mut Option<Value>, v: Value) {
+        match stack.last_mut() {
+            None => *root = Some(v),
+            Some(Frame::Arr(items)) => items.push(v),
+            Some(Frame::Obj(map, key)) => {
+                let k = key.take().expect("a key precedes every object value");
+                map.insert(k, v);
+            }
+        }
+    }
+    let mut r = Reader::new(text);
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut root: Option<Value> = None;
+    while let Some(tok) = r.next_token()? {
+        match tok {
+            Tok::ObjStart => stack.push(Frame::Obj(BTreeMap::new(), None)),
+            Tok::ArrStart => stack.push(Frame::Arr(Vec::new())),
+            Tok::Key(k) => match stack.last_mut() {
+                Some(Frame::Obj(_, key)) => *key = Some(k.to_string()),
+                _ => unreachable!("the reader only yields keys inside objects"),
+            },
+            Tok::ObjEnd => match stack.pop() {
+                Some(Frame::Obj(map, _)) => attach(&mut stack, &mut root, Value::Obj(map)),
+                _ => unreachable!("ObjEnd closes an object frame"),
+            },
+            Tok::ArrEnd => match stack.pop() {
+                Some(Frame::Arr(items)) => attach(&mut stack, &mut root, Value::Arr(items)),
+                _ => unreachable!("ArrEnd closes an array frame"),
+            },
+            Tok::Str(s) => attach(&mut stack, &mut root, Value::Str(s.to_string())),
+            Tok::Num(n) => attach(&mut stack, &mut root, Value::Num(n)),
+            Tok::Bool(b) => attach(&mut stack, &mut root, Value::Bool(b)),
+            Tok::Null => attach(&mut stack, &mut root, Value::Null),
+        }
+    }
+    root.ok_or_else(|| ParseError { pos: 0, msg: "expected a JSON value".to_string() })
 }
 
 #[cfg(test)]
@@ -451,5 +927,75 @@ mod tests {
     fn string_escapes_roundtrip() {
         let v = Value::Str("a\"b\\c\nd\te\u{1}".into());
         assert_eq!(parse(&to_string(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn pull_tokens_in_document_order() {
+        let mut r = Reader::new(r#"{"a": [1, true], "b": null}"#);
+        let mut toks = Vec::new();
+        loop {
+            match r.next_token().unwrap() {
+                // keys/strings borrow from the reader, so own them here
+                Some(Tok::Key(k)) => toks.push(format!("key:{k}")),
+                Some(Tok::Str(s)) => toks.push(format!("str:{s}")),
+                Some(t) => toks.push(format!("{t:?}")),
+                None => break,
+            }
+        }
+        assert_eq!(
+            toks,
+            ["ObjStart", "key:a", "ArrStart", "Num(1.0)", "Bool(true)", "ArrEnd",
+             "key:b", "Null", "ObjEnd"]
+        );
+    }
+
+    #[test]
+    fn pull_matches_tree_parser_on_edge_cases() {
+        for text in [
+            "null",
+            "-3.5e2",
+            r#""""#,
+            r#"{"nested": {"deep": [[], {}, [0.5, -0]]}}"#,
+            r#""esc \"q\" \\ \n \u00e9 \ud83d\ude00 tail""#,
+            r#"[9007199254740993, -9007199254740993, 1e308]"#,
+        ] {
+            assert_eq!(parse_pull(text).unwrap(), parse(text).unwrap(), "{text}");
+        }
+    }
+
+    #[test]
+    fn pull_rejects_what_the_tree_parser_rejects() {
+        for text in [
+            "", "{", "[1,]", "{\"a\"}", "{\"a\":}", "{\"a\":1,}", "[1 2]",
+            "\"unterminated", "12 34", "{\"a\": \"\\x\"}", "tru", "nulll",
+        ] {
+            assert!(parse_pull(text).is_err(), "pull accepted {text:?}");
+            assert!(parse(text).is_err(), "tree accepted {text:?}");
+        }
+    }
+
+    #[test]
+    fn pull_caps_nesting_depth() {
+        let deep = "[".repeat(MAX_PULL_DEPTH as usize + 1);
+        let err = parse_pull(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        // one under the cap still parses (with its closers)
+        let ok = format!(
+            "{}{}",
+            "[".repeat(MAX_PULL_DEPTH as usize),
+            "]".repeat(MAX_PULL_DEPTH as usize)
+        );
+        assert!(parse_pull(&ok).is_ok());
+    }
+
+    #[test]
+    fn pull_scratch_recycles_across_documents() {
+        let mut scratch = String::new();
+        for _ in 0..3 {
+            let mut r = Reader::with_scratch(r#"{"k": "a\nb"}"#, scratch);
+            while r.next_token().unwrap().is_some() {}
+            scratch = r.into_scratch();
+        }
+        assert!(scratch.capacity() >= 3, "the escape decode buffer survives");
     }
 }

@@ -1,0 +1,258 @@
+//! Keep-alive protocol conformance for the reactor connection plane
+//! (`serve::reactor`): connection reuse, `Connection: close` honored
+//! in both directions, pipelining answered in order, torn/oversized
+//! headers behaving exactly like the old blocking scanner, malformed
+//! `Content-Length` rejected, idle connections reaped without
+//! touching live ones — and the shutdown-drain regression: a stalled
+//! SSE client must not hold `/shutdown` open past the configured
+//! grace.
+
+use elasticzo::serve::{request, ServeOptions, Server};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn boot(opts: ServeOptions) -> (String, std::thread::JoinHandle<()>) {
+    let server = Server::bind(&opts).expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let h = std::thread::spawn(move || server.run().expect("server run"));
+    (addr, h)
+}
+
+fn opts() -> ServeOptions {
+    ServeOptions { port: 0, workers: 1, queue_cap: 8, ..Default::default() }
+}
+
+fn find(h: &[u8], n: &[u8]) -> Option<usize> {
+    h.windows(n.len()).position(|w| w == n)
+}
+
+/// Read exactly one content-length-framed response off the socket,
+/// leaving any pipelined successor bytes in `buf`.
+fn read_response(s: &mut TcpStream, buf: &mut Vec<u8>) -> (u16, String, String) {
+    let mut tmp = [0u8; 4096];
+    loop {
+        if let Some(he) = find(buf, b"\r\n\r\n") {
+            let head = String::from_utf8(buf[..he].to_vec()).expect("utf8 head");
+            let clen: usize = head
+                .lines()
+                .find_map(|l| {
+                    let (k, v) = l.split_once(':')?;
+                    k.trim().eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+                })
+                .unwrap_or(0);
+            if buf.len() >= he + 4 + clen {
+                let body = String::from_utf8(buf[he + 4..he + 4 + clen].to_vec()).expect("body");
+                buf.drain(..he + 4 + clen);
+                let status: u16 =
+                    head.split_whitespace().nth(1).expect("status").parse().expect("numeric");
+                return (status, head, body);
+            }
+        }
+        let n = s.read(&mut tmp).expect("read response");
+        assert!(n > 0, "connection closed mid-response");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+fn connect(addr: &str) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+    s
+}
+
+#[test]
+fn keepalive_reuses_one_socket_and_close_is_honored_both_ways() {
+    let (addr, h) = boot(opts());
+    let mut s = connect(&addr);
+    let mut buf = Vec::new();
+
+    // two requests, one socket: HTTP/1.1 defaults to keep-alive
+    for _ in 0..2 {
+        s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        let (status, head, body) = read_response(&mut s, &mut buf);
+        assert_eq!(status, 200);
+        assert!(head.contains("Connection: keep-alive"), "server advertises reuse: {head}");
+        assert!(body.contains("\"ok\":true"));
+    }
+
+    // the reuse is observable in the metrics (raw socket: /metrics is
+    // the one non-JSON route, so the JSON client can't scrape it)
+    let mut m = connect(&addr);
+    m.write_all(b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+    let mut raw = Vec::new();
+    m.read_to_end(&mut raw).expect("scrape");
+    let text = String::from_utf8_lossy(&raw).to_string();
+    let reuse_line = text
+        .lines()
+        .find(|l| l.starts_with("repro_http_keepalive_reuse_total"))
+        .expect("keep-alive reuse counter exported");
+    let reused: f64 = reuse_line.split_whitespace().last().unwrap().parse().unwrap();
+    assert!(reused >= 1.0, "at least our second request reused: {reuse_line}");
+
+    // client sends close -> server answers close and hangs up
+    s.write_all(b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+    let (status, head, _) = read_response(&mut s, &mut buf);
+    assert_eq!(status, 200);
+    assert!(head.contains("Connection: close"), "close echoed: {head}");
+    let mut tail = Vec::new();
+    s.read_to_end(&mut tail).expect("clean EOF after close");
+    assert!(tail.is_empty(), "no bytes after a closed exchange");
+
+    // server sends close on its terminal response too: /shutdown
+    let mut s = connect(&addr);
+    let mut buf = Vec::new();
+    s.write_all(b"POST /shutdown HTTP/1.1\r\n\r\n").unwrap();
+    let (status, head, _) = read_response(&mut s, &mut buf);
+    assert_eq!(status, 200);
+    assert!(head.contains("Connection: close"), "shutdown never keeps alive: {head}");
+    h.join().unwrap();
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order() {
+    let (addr, h) = boot(opts());
+    let mut s = connect(&addr);
+    let mut buf = Vec::new();
+
+    // three requests in one write; responses must come back in order
+    s.write_all(
+        b"GET /healthz HTTP/1.1\r\n\r\nGET /stats HTTP/1.1\r\n\r\nGET /no-such-route HTTP/1.1\r\n\r\n",
+    )
+    .unwrap();
+    let (status, _, body) = read_response(&mut s, &mut buf);
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\":true"), "first answer is healthz: {body}");
+    let (status, _, body) = read_response(&mut s, &mut buf);
+    assert_eq!(status, 200);
+    assert!(body.contains("jobs_total"), "second answer is stats: {body}");
+    let (status, _, body) = read_response(&mut s, &mut buf);
+    assert_eq!(status, 404);
+    assert!(body.contains("no route"), "third answer is the 404: {body}");
+
+    request(&addr, "POST", "/shutdown", None).unwrap();
+    h.join().unwrap();
+}
+
+#[test]
+fn torn_and_split_headers_parse_like_the_blocking_scanner() {
+    let (addr, h) = boot(opts());
+
+    // tear a request (with body) into single bytes across many TCP
+    // segments; the resumable scanner must reassemble it
+    let mut s = connect(&addr);
+    let mut buf = Vec::new();
+    let wire = b"POST /jobs HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 2\r\n\r\n{}";
+    for chunk in wire.chunks(1) {
+        s.write_all(chunk).unwrap();
+        s.flush().unwrap();
+    }
+    let (status, _, body) = read_response(&mut s, &mut buf);
+    assert_eq!(status, 400, "{{}} is valid JSON but not a job spec: {body}");
+    assert!(body.contains("invalid job spec"), "reached the router, not the parser: {body}");
+
+    // split exactly across the \r\n\r\n terminator
+    let mut s = connect(&addr);
+    let mut buf = Vec::new();
+    s.write_all(b"GET /healthz HTTP/1.1\r\n").unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    s.write_all(b"\r").unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    s.write_all(b"\n").unwrap();
+    let (status, _, _) = read_response(&mut s, &mut buf);
+    assert_eq!(status, 200);
+
+    request(&addr, "POST", "/shutdown", None).unwrap();
+    h.join().unwrap();
+}
+
+#[test]
+fn oversized_headers_and_bad_content_length_get_400() {
+    let (addr, h) = boot(opts());
+
+    // malformed Content-Length
+    let mut s = connect(&addr);
+    let mut buf = Vec::new();
+    s.write_all(b"POST /jobs HTTP/1.1\r\nContent-Length: banana\r\n\r\n").unwrap();
+    let (status, _, body) = read_response(&mut s, &mut buf);
+    assert_eq!(status, 400);
+    assert!(body.contains("bad content-length"), "{body}");
+
+    // oversized headers: the server 400s mid-upload, so later writes
+    // may fail with a reset — only the response matters
+    let mut s = connect(&addr);
+    let mut buf = Vec::new();
+    s.write_all(b"GET /healthz HTTP/1.1\r\nX-Pad: ").unwrap();
+    let pad = vec![b'x'; 8 * 1024];
+    for _ in 0..10 {
+        if s.write_all(&pad).is_err() {
+            break;
+        }
+    }
+    let (status, _, body) = read_response(&mut s, &mut buf);
+    assert_eq!(status, 400);
+    assert!(body.contains("headers too large"), "{body}");
+
+    request(&addr, "POST", "/shutdown", None).unwrap();
+    h.join().unwrap();
+}
+
+#[test]
+fn idle_keepalive_connections_are_reaped_without_affecting_healthz() {
+    let (addr, h) = boot(ServeOptions { http_idle: Duration::from_millis(300), ..opts() });
+
+    let mut idle = connect(&addr);
+    let mut buf = Vec::new();
+    idle.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+    let (status, _, _) = read_response(&mut idle, &mut buf);
+    assert_eq!(status, 200);
+
+    // park the connection past the idle timeout; the reactor reaps it
+    std::thread::sleep(Duration::from_millis(1200));
+    let mut tmp = [0u8; 64];
+    match idle.read(&mut tmp) {
+        Ok(0) => {} // clean server-side close
+        Ok(n) => panic!("unexpected {n} bytes on a reaped connection"),
+        // a reset is also an acceptable spelling of "reaped"
+        Err(e) => assert!(
+            matches!(e.kind(), ErrorKind::ConnectionReset | ErrorKind::ConnectionAborted),
+            "unexpected error: {e}"
+        ),
+    }
+
+    // reaping idle sockets never touches fresh traffic
+    let (status, v) = request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+
+    request(&addr, "POST", "/shutdown", None).unwrap();
+    h.join().unwrap();
+}
+
+#[test]
+fn stalled_sse_client_cannot_delay_shutdown_drain_past_grace() {
+    let (addr, h) = boot(ServeOptions {
+        drain_grace: Duration::from_millis(500),
+        events_buffer: 4,
+        ..opts()
+    });
+
+    // an SSE subscriber that never reads a single byte — under the old
+    // blocking writer this could hold the drain open for the write
+    // timeout; the reactor must cut it loose at drain_grace
+    let mut stalled = connect(&addr);
+    stalled.write_all(b"GET /events HTTP/1.1\r\n\r\n").unwrap();
+    // give the reactor a moment to install the stream
+    std::thread::sleep(Duration::from_millis(200));
+
+    let t0 = Instant::now();
+    let (status, _) = request(&addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    h.join().unwrap();
+    let drain = t0.elapsed();
+    assert!(
+        drain < Duration::from_secs(3),
+        "drain took {drain:?} with a stalled SSE client (grace was 500ms)"
+    );
+    drop(stalled);
+}

@@ -1,0 +1,253 @@
+//! Property tests for the zero-alloc JSON pull parser
+//! (`util::json::Reader`): differential round-trips against the
+//! recursive reference parser over generated documents (nesting,
+//! escapes, unicode, i64/f64 edge numbers), torn-input strictness
+//! (no prefix of a document ever parses), and an allocation-counter
+//! proof that visiting every `SERVE_API.md` example allocates nothing
+//! once the scratch buffer is warm.
+
+use elasticzo::metrics::alloc::{alloc_count, measure_scope, TrackedAlloc};
+use elasticzo::rng::Rng64;
+use elasticzo::util::json::{self, Reader, Value};
+use elasticzo::util::prop;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+// The allocation counters are process-global, so this binary installs
+// the tracked allocator and serializes its tests.
+#[global_allocator]
+static ALLOC: TrackedAlloc = TrackedAlloc;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// f64 values whose textual round-trip exercises the number grammar's
+/// edges: integer collapsing, denormals, huge exponents, i64 bounds.
+const EDGE_NUMS: &[f64] = &[
+    0.0,
+    -1.0,
+    1.5,
+    -2.25,
+    0.1,
+    1e-9,
+    1e9 + 7.0,
+    1e308,
+    5e-324,
+    9.007199254740992e15, // 2^53: first integer the i64 fast path skips
+    9.223372036854776e18, // i64::MAX neighborhood
+    -9.223372036854776e18,
+];
+
+fn gen_string(rng: &mut Rng64) -> String {
+    // escapes, control bytes, multi-byte unicode, and plain ASCII
+    const PALETTE: &[char] = &[
+        'a', 'B', '7', ' ', '"', '\\', '/', '\n', '\t', '\r', '\u{8}', '\u{c}', '\u{1}',
+        '\u{1f}', 'é', 'λ', '中', '🦀',
+    ];
+    let len = rng.uniform_i32(0, 12) as usize;
+    (0..len).map(|_| PALETTE[rng.uniform_i32(0, PALETTE.len() as i32 - 1) as usize]).collect()
+}
+
+fn gen_num(rng: &mut Rng64) -> f64 {
+    match rng.uniform_i32(0, 3) {
+        0 => EDGE_NUMS[rng.uniform_i32(0, EDGE_NUMS.len() as i32 - 1) as usize],
+        1 => rng.uniform_i32(i32::MIN, i32::MAX) as f64,
+        2 => rng.uniform_f64() * 2e3 - 1e3,
+        _ => rng.uniform_f64(),
+    }
+}
+
+fn gen_value(rng: &mut Rng64, depth: usize) -> Value {
+    // containers get rarer with depth so documents stay small
+    let hi = if depth >= 4 { 3 } else { 5 };
+    match rng.uniform_i32(0, hi) {
+        0 => Value::Null,
+        1 => Value::Bool(rng.bernoulli(0.5)),
+        2 => Value::Num(gen_num(rng)),
+        3 => Value::Str(gen_string(rng)),
+        4 => {
+            let n = rng.uniform_i32(0, 4) as usize;
+            Value::Arr((0..n).map(|_| gen_value(rng, depth + 1)).collect())
+        }
+        _ => {
+            let n = rng.uniform_i32(0, 4) as usize;
+            let mut m = BTreeMap::new();
+            for i in 0..n {
+                // suffix keeps generated keys distinct even when the
+                // palette collides
+                m.insert(format!("{}#{i}", gen_string(rng)), gen_value(rng, depth + 1));
+            }
+            Value::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn pull_parser_round_trips_generated_documents() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    prop::cases(300, |rng, case| {
+        let doc = gen_value(rng, 0);
+        let compact = json::to_string(&doc);
+        let pretty = json::to_string_pretty(&doc);
+
+        let reference = json::parse(&compact)
+            .unwrap_or_else(|e| panic!("case {case}: reference parse failed: {e} on {compact}"));
+        let pulled = json::parse_pull(&compact)
+            .unwrap_or_else(|e| panic!("case {case}: pull parse failed: {e} on {compact}"));
+        assert_eq!(pulled, reference, "case {case}: trees diverged on {compact}");
+        assert_eq!(pulled, doc, "case {case}: round-trip lost information on {compact}");
+
+        // whitespace-heavy spelling of the same document
+        let pulled_pretty = json::parse_pull(&pretty)
+            .unwrap_or_else(|e| panic!("case {case}: pretty pull failed: {e} on {pretty}"));
+        assert_eq!(pulled_pretty, reference, "case {case}: pretty diverged");
+
+        // and re-serialization agrees byte-for-byte
+        assert_eq!(json::to_string(&pulled), compact, "case {case}");
+    });
+}
+
+#[test]
+fn torn_prefixes_never_parse() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    prop::cases_seeded(0x70D4, 120, |rng, case| {
+        // container root: no strict prefix can be a complete document,
+        // so a torn read buffer must error, never half-succeed
+        let doc = match rng.uniform_i32(0, 1) {
+            0 => Value::Arr(vec![gen_value(rng, 1), gen_value(rng, 1)]),
+            _ => {
+                let mut m = BTreeMap::new();
+                m.insert("k".to_string(), gen_value(rng, 1));
+                Value::Obj(m)
+            }
+        };
+        let text = json::to_string(&doc);
+        for (cut, _) in text.char_indices().skip(1) {
+            let torn = &text[..cut];
+            assert!(
+                json::parse_pull(torn).is_err(),
+                "case {case}: torn prefix parsed: {torn}"
+            );
+            assert!(
+                json::parse(torn).is_err(),
+                "case {case}: reference accepted torn prefix: {torn}"
+            );
+        }
+        assert!(json::parse_pull(&text).is_ok(), "case {case}: full doc rejected: {text}");
+    });
+}
+
+#[test]
+fn i64_f64_edge_numbers_agree_with_reference() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    for text in [
+        "9223372036854775807",  // i64::MAX literal
+        "-9223372036854775808", // i64::MIN literal
+        "18446744073709551615", // u64::MAX: overflows into f64 like the reference
+        "1e308",
+        "-1e308",
+        "5e-324",
+        "2.2250738585072014e-308",
+        "0.30000000000000004",
+        "-0",
+        "1E+2",
+        "120e-1",
+        // shared lenient spellings: both scanners defer to Rust's f64
+        // grammar for the digits they consume
+        "01",
+        "1.",
+    ] {
+        let a = json::parse(text).unwrap_or_else(|e| panic!("reference on {text}: {e}"));
+        let b = json::parse_pull(text).unwrap_or_else(|e| panic!("pull on {text}: {e}"));
+        assert_eq!(a, b, "parsers diverged on {text}");
+        assert_eq!(json::to_string(&a), json::to_string(&b), "rendering diverged on {text}");
+    }
+    // malformed numbers fail (trailing garbage, bare signs, hex)
+    for text in [".5", "1e", "+1", "--1", "0x10", "1e5x"] {
+        assert!(json::parse_pull(text).is_err(), "pull accepted {text}");
+        assert!(json::parse(text).is_err(), "reference accepted {text}");
+    }
+}
+
+fn serve_api_examples() -> Vec<String> {
+    let md = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/SERVE_API.md"))
+        .expect("read SERVE_API.md");
+    let mut out = Vec::new();
+    let mut cur: Option<String> = None;
+    for line in md.lines() {
+        match cur.as_mut() {
+            Some(buf) => {
+                if line.trim_start().starts_with("```") {
+                    out.push(cur.take().unwrap());
+                } else {
+                    buf.push_str(line);
+                    buf.push('\n');
+                }
+            }
+            None => {
+                if line.trim_start() == "```json" {
+                    cur = Some(String::new());
+                }
+            }
+        }
+    }
+    assert!(out.len() >= 10, "SERVE_API.md lost its JSON examples ({} found)", out.len());
+    out
+}
+
+/// Visit every token of `text`, reusing `scratch`; returns the token
+/// count and the scratch buffer for the next document.
+fn visit_all(text: &str, scratch: String) -> (usize, String) {
+    let mut r = Reader::with_scratch(text, scratch);
+    let mut toks = 0usize;
+    while let Some(_t) = r.next_token().expect("valid example") {
+        toks += 1;
+    }
+    (toks, r.into_scratch())
+}
+
+#[test]
+fn visiting_every_serve_api_example_allocates_nothing_once_warm() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let examples = serve_api_examples();
+
+    // warm-up pass sizes the shared scratch buffer (and proves every
+    // example is valid under the pull grammar)
+    let mut scratch = String::new();
+    let mut warm_toks = 0usize;
+    for ex in &examples {
+        let (n, s) = visit_all(ex, scratch);
+        warm_toks += n;
+        scratch = s;
+    }
+    assert!(warm_toks > 100, "examples should be non-trivial: {warm_toks} tokens");
+
+    // measured pass: same documents, recycled scratch — zero heap
+    // traffic. Retry a few times in case an unrelated runtime thread
+    // allocates mid-window; a genuinely allocating parser fails every
+    // attempt.
+    let mut last = (0u64, 0usize);
+    for _ in 0..3 {
+        let before = alloc_count();
+        let (cold_toks, stats) = measure_scope(|| {
+            let mut s = std::mem::take(&mut scratch);
+            let mut toks = 0usize;
+            for ex in &examples {
+                let (n, back) = visit_all(ex, s);
+                toks += n;
+                s = back;
+            }
+            scratch = s;
+            toks
+        });
+        let delta = alloc_count() - before;
+        assert_eq!(cold_toks, warm_toks, "warm pass saw different tokens");
+        if delta == 0 && stats.peak_net_bytes == 0 {
+            return;
+        }
+        last = (delta, stats.peak_net_bytes);
+    }
+    panic!(
+        "visiting parse allocated: {} allocations, {} peak net bytes",
+        last.0, last.1
+    );
+}

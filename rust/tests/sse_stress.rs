@@ -1,0 +1,253 @@
+//! SSE stress for the reactor connection plane: 512 concurrent
+//! firehose subscribers all see the identical event sequence during a
+//! live job (the pre-reactor server refused anything past 64 streams);
+//! a slow reader is shed with an explicit `lagged` frame instead of
+//! ever blocking the trainer; and a mass disconnect tears every
+//! registration down (`repro_sse_streams_active` returns to 0).
+
+use elasticzo::serve::{request, ServeOptions, Server};
+use elasticzo::util::json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The metrics registry is process-global, so tests that assert on
+/// gauge values (and tests that open hundreds of sockets) run one at
+/// a time.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn boot(opts: ServeOptions) -> (String, std::thread::JoinHandle<()>) {
+    let server = Server::bind(&opts).expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let h = std::thread::spawn(move || server.run().expect("server run"));
+    (addr, h)
+}
+
+fn tiny_spec(seed: usize, epochs: usize) -> json::Value {
+    json::parse(&format!(
+        r#"{{"method": "cls1", "precision": "fp32", "engine": "native",
+            "epochs": {epochs}, "batch": 16, "train_n": 64, "test_n": 32, "seed": {seed}}}"#
+    ))
+    .expect("spec")
+}
+
+/// Open a firehose stream and read through the SSE response header;
+/// returns the socket plus any frame bytes that arrived with it.
+fn open_stream(addr: &str) -> (TcpStream, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(15))).expect("timeout");
+    s.write_all(b"GET /events HTTP/1.1\r\n\r\n").expect("write");
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 1024];
+    loop {
+        if let Some(he) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            let head = String::from_utf8_lossy(&buf[..he]).to_string();
+            assert!(head.contains("text/event-stream"), "SSE header: {head}");
+            let rest = buf.split_off(he + 4);
+            return (s, rest);
+        }
+        let n = s.read(&mut tmp).expect("read SSE header");
+        assert!(n > 0, "stream closed before the SSE header");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// Read until `marker` is present and the buffer ends on a frame
+/// boundary, then return the comment-stripped frames up to and
+/// including the one carrying the marker.
+fn read_frames_until(s: &mut TcpStream, buf: &mut Vec<u8>, marker: &str) -> Vec<String> {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut tmp = [0u8; 4096];
+    loop {
+        let text = String::from_utf8_lossy(buf).to_string();
+        if text.contains(marker) && buf.ends_with(b"\n\n") {
+            let mut frames = Vec::new();
+            for block in text.split("\n\n") {
+                if block.is_empty() || block.starts_with(':') {
+                    continue; // keep-alive comments are timing noise
+                }
+                frames.push(block.to_string());
+                if block.contains(marker) {
+                    return frames;
+                }
+            }
+        }
+        assert!(Instant::now() < deadline, "no '{marker}' frame within 30s; got: {text}");
+        let n = s.read(&mut tmp).expect("read frames");
+        assert!(n > 0, "stream closed before '{marker}' arrived");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+fn poll_stats_until(addr: &str, key: &str, want: usize, secs: u64) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        let (_, s) = request(addr, "GET", "/stats", None).expect("stats");
+        if s.get(key).as_usize() == Some(want) {
+            return;
+        }
+        assert!(Instant::now() < deadline, "{key} never reached {want}: {}", json::to_string(&s));
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn firehose_512_subscribers_see_identical_event_sequence() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    const STREAMS: usize = 512;
+    let (addr, h) =
+        boot(ServeOptions { port: 0, workers: 1, queue_cap: 8, ..Default::default() });
+
+    // all subscribers registered before the job exists, so every one
+    // is entitled to the full sequence
+    let mut streams = Vec::with_capacity(STREAMS);
+    for _ in 0..STREAMS {
+        streams.push(open_stream(&addr));
+    }
+
+    let (status, v) = request(&addr, "POST", "/jobs", Some(&tiny_spec(1, 1))).expect("submit");
+    assert_eq!(status, 200, "submit: {}", json::to_string(&v));
+    poll_stats_until(&addr, "jobs_done", 1, 60);
+
+    let mut reference: Option<Vec<String>> = None;
+    for (i, (s, buf)) in streams.iter_mut().enumerate() {
+        let frames = read_frames_until(s, buf, "\"state\":\"done\"");
+        assert!(
+            frames.len() >= 3,
+            "stream {i} saw only {} frames: {frames:?}",
+            frames.len()
+        );
+        match &reference {
+            None => reference = Some(frames),
+            Some(r) => assert_eq!(&frames, r, "stream {i} diverged from stream 0"),
+        }
+    }
+
+    drop(streams);
+    request(&addr, "POST", "/shutdown", None).expect("shutdown");
+    h.join().unwrap();
+}
+
+#[test]
+fn slow_reader_is_shed_with_lagged_and_never_blocks_the_trainer() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // subscriber buffers of exactly one event: any publish burst the
+    // reactor cannot drain between two events sheds the stream
+    let (addr, h) = boot(ServeOptions {
+        port: 0,
+        workers: 1,
+        queue_cap: 8,
+        events_buffer: 1,
+        ..Default::default()
+    });
+
+    let (mut slow, mut slow_buf) = open_stream(&addr);
+
+    // occupy the single worker so follow-up jobs stay queued
+    let (status, v) =
+        request(&addr, "POST", "/jobs", Some(&tiny_spec(1, 10))).expect("submit long job");
+    assert_eq!(status, 200, "submit: {}", json::to_string(&v));
+    let id_a = v.get("id").as_usize().expect("job id") as u64;
+
+    // pipeline submit+cancel pairs in a single TCP segment: the
+    // reactor thread serving them publishes queued/cancelled bursts
+    // back-to-back, far faster than any subscriber pump can drain a
+    // one-event buffer — deterministic shedding, while the slow
+    // client reads nothing
+    let spec_b = json::to_string(&tiny_spec(2, 1));
+    let spec_c = json::to_string(&tiny_spec(3, 1));
+    let mut wire = Vec::new();
+    for (spec, id) in [(&spec_b, id_a + 1), (&spec_c, id_a + 2)] {
+        wire.extend_from_slice(
+            format!("POST /jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n{spec}", spec.len())
+                .as_bytes(),
+        );
+        wire.extend_from_slice(format!("POST /jobs/{id}/cancel HTTP/1.1\r\n\r\n").as_bytes());
+    }
+    let mut burst = TcpStream::connect(&addr).expect("connect");
+    burst.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+    burst.write_all(&wire).expect("pipelined burst");
+    // four 200s, in order
+    let mut raw = Vec::new();
+    let mut tmp = [0u8; 4096];
+    while raw.windows(4).filter(|w| w == b"\r\n\r\n").count() < 4 {
+        let n = burst.read(&mut tmp).expect("burst responses");
+        if n == 0 {
+            break;
+        }
+        raw.extend_from_slice(&tmp[..n]);
+    }
+    let text = String::from_utf8_lossy(&raw);
+    assert_eq!(
+        text.matches("HTTP/1.1 200").count(),
+        4,
+        "submit+cancel pipeline answered in order: {text}"
+    );
+
+    // the stalled subscriber now catches up onto an explicit lagged
+    // marker instead of a silently incomplete sequence
+    let frames = read_frames_until(&mut slow, &mut slow_buf, "event: lagged");
+    let lagged = frames.last().expect("frames nonempty");
+    assert!(lagged.contains("\"type\":\"lagged\""), "resync payload: {lagged}");
+    assert!(lagged.contains("next_seq"), "resync payload names a seq: {lagged}");
+
+    // the trainer side never blocked on the slow stream: the long job
+    // is still cancellable and the server still drains promptly
+    let (status, _) = request(&addr, "POST", &format!("/jobs/{id_a}/cancel"), None).unwrap();
+    assert_eq!(status, 200);
+    let t0 = Instant::now();
+    request(&addr, "POST", "/shutdown", None).expect("shutdown");
+    drop(slow);
+    drop(burst);
+    h.join().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "drain stalled behind a shed subscriber: {:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn mass_disconnect_leaves_no_sse_registrations_behind() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    const STREAMS: usize = 64;
+    let (addr, h) =
+        boot(ServeOptions { port: 0, workers: 1, queue_cap: 8, ..Default::default() });
+
+    // raw-socket scrape: /metrics is the one non-JSON route
+    let gauge = |addr: &str| -> f64 {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+        s.write_all(b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n").expect("write");
+        let mut raw = Vec::new();
+        s.read_to_end(&mut raw).expect("scrape");
+        String::from_utf8_lossy(&raw)
+            .lines()
+            .find(|l| l.starts_with("repro_sse_streams_active"))
+            .and_then(|l| l.split_whitespace().last())
+            .and_then(|v| v.parse().ok())
+            .expect("repro_sse_streams_active exported")
+    };
+
+    let mut streams = Vec::with_capacity(STREAMS);
+    for _ in 0..STREAMS {
+        streams.push(open_stream(&addr));
+    }
+    assert_eq!(gauge(&addr), STREAMS as f64, "every stream registered");
+
+    // hang up all at once; the reactors notice EOF and unregister
+    drop(streams);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let open = gauge(&addr);
+        if open == 0.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "{open} SSE registrations leaked after disconnect");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    request(&addr, "POST", "/shutdown", None).expect("shutdown");
+    h.join().unwrap();
+}
